@@ -1,0 +1,111 @@
+//! End-to-end validation driver (DESIGN.md deliverable (b)/EXPERIMENTS.md
+//! §E2E): exercises every layer of the stack on a real small workload and
+//! proves they compose:
+//!
+//!   synthetic corpus (sLDA generative process, paper Exp-I protocol)
+//!     -> disk round-trip (BoW format)
+//!     -> 4-shard communication-free training (L3 Gibbs hot path)
+//!     -> stochastic-EM eta solves through the AOT XLA artifacts
+//!        (L2 JAX graphs wrapping the L1 Pallas gram/predict kernels, via
+//!        PJRT; falls back to native with a warning if artifacts are absent)
+//!     -> local predictions -> Simple/Weighted combination (combine artifact)
+//!     -> metrics + convergence log + quasi-ergodicity diagnostic
+//!
+//!     cargo run --release --example e2e_pipeline -- [--docs 2000] [--iters 40]
+
+use cfslda::cli::args::Args;
+use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::data::loader;
+use cfslda::data::partition::train_test_split;
+use cfslda::data::stats::label_report;
+use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::eval::mode_diag::mode_divergence;
+use cfslda::parallel::leader::{run_with_engine, Algorithm};
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_train;
+use cfslda::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let docs = args.get_usize("docs", 2000)?;
+    let iters = args.get_usize("iters", 40)?;
+
+    // --- stage 1: data ---------------------------------------------------
+    let mut spec = SyntheticSpec::mdna();
+    spec.docs = docs;
+    spec.vocab = (docs.max(400)).min(4238);
+    let mut rng = Pcg64::seed_from_u64(20170710);
+    let corpus = generate_corpus(&spec, &mut rng);
+    println!("[1/5] corpus: {} docs, vocab {}, {} tokens",
+             corpus.num_docs(), corpus.vocab_size, corpus.num_tokens());
+    let report = label_report(&corpus, 20);
+    println!("      labels: mean={:.3} std={:.3} KS-vs-normal={:.4}",
+             report.summary.mean(), report.summary.std(), report.ks_normal);
+
+    // --- stage 2: disk round-trip -----------------------------------------
+    let bow = std::env::temp_dir().join(format!("cfslda_e2e_{}.bow", std::process::id()));
+    loader::save_bow(&corpus, &bow)?;
+    let corpus = loader::load_bow(&bow)?;
+    std::fs::remove_file(&bow).ok();
+    println!("[2/5] disk round-trip OK ({} docs)", corpus.num_docs());
+
+    // --- stage 3: engine (AOT artifacts preferred) ------------------------
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = EngineHandle::from_kind(EngineKind::Auto, Path::new(&dir))?;
+    println!("[3/5] engine: {} (artifacts dir: {dir})", engine.name());
+
+    // --- stage 4: training with convergence log ---------------------------
+    let n_train = docs * 3 / 4;
+    let ds = train_test_split(&corpus, n_train, &mut rng);
+    let mut cfg = ExperimentConfig::fig6();
+    cfg.train.sweeps = iters;
+    cfg.train.burnin = (iters / 10).max(2);
+    cfg.train.eta_every = 5;
+    cfg.model.topics = 16;
+
+    let mut train_rng = Pcg64::seed_from_u64(cfg.seed);
+    let single = gibbs_train::train(&ds.train, &cfg, &engine, &mut train_rng)?;
+    println!("[4/5] non-parallel training convergence (train MSE per eta step):");
+    for h in &single.history {
+        println!("      sweep {:>4}  mse {:.4}  rho {:.4}  |eta| {:.3}",
+                 h.sweep, h.train_mse, h.rho, h.eta_l2);
+    }
+    let first = single.history.first().map(|h| h.train_mse).unwrap_or(0.0);
+    let last = single.history.last().map(|h| h.train_mse).unwrap_or(0.0);
+    anyhow::ensure!(last < first, "training MSE did not improve: {first} -> {last}");
+
+    // --- stage 5: the four algorithms + diagnostics ------------------------
+    println!("[5/5] four-algorithm comparison:");
+    let mut naive_mse = f64::NAN;
+    let mut simple_mse = f64::NAN;
+    for algo in Algorithm::ALL {
+        let keep = algo == Algorithm::SimpleAverage;
+        let (out, models) = run_with_engine(algo, &ds, &cfg, &engine, keep)?;
+        println!(
+            "      {:<18} wall={:>7.2}s  mse={:.4}  r2={:+.3}  comm[{}]",
+            algo.name(), out.wall_secs, out.test_metrics.mse, out.test_metrics.r2,
+            out.comm.render()
+        );
+        match algo {
+            Algorithm::NaiveCombination => naive_mse = out.test_metrics.mse,
+            Algorithm::SimpleAverage => {
+                simple_mse = out.test_metrics.mse;
+                let phis: Vec<_> = models.iter().map(|m| m.phi_topic_rows()).collect();
+                let div = mode_divergence(&phis);
+                println!(
+                    "      quasi-ergodicity probe: identity TV {:.3}, aligned TV {:.3}, gap {:.3}",
+                    div.mean_identity, div.mean_aligned, div.permutation_gap()
+                );
+            }
+            _ => {}
+        }
+    }
+    anyhow::ensure!(
+        naive_mse > simple_mse,
+        "expected naive ({naive_mse}) worse than simple ({simple_mse})"
+    );
+    println!("\nE2E PIPELINE OK — all layers compose; naive({naive_mse:.4}) > simple({simple_mse:.4}) as the paper predicts");
+    Ok(())
+}

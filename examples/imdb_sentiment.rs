@@ -1,0 +1,55 @@
+//! Paper Experiment II (Fig 7): movie reviews -> binary sentiment.
+//!
+//! Four-algorithm comparison on the Experiment-II-scale synthetic corpus
+//! (25k docs at full scale, binary labels via the paper's logit-normal
+//! note). Prints the Fig-7 table: computation time and test accuracy.
+//!
+//!     cargo run --release --example imdb_sentiment -- [--docs 25000]
+//!         [--runs 3] [--iters 60] [--engine auto|xla|native] [--check]
+
+use cfslda::cli::args::Args;
+use cfslda::config::schema::EngineKind;
+use cfslda::experiments::runner::{check_fig_shape, render_table, run_comparison, Comparison};
+use cfslda::runtime::EngineHandle;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let docs = args.get_usize("docs", 6000)?;
+    let runs = args.get_usize("runs", 3)?;
+    let iters = args.get_usize("iters", 50)?;
+
+    let scale = docs as f64 / 25_000.0;
+    let mut c = Comparison::fig7(scale, runs);
+    c.cfg.engine = EngineKind::parse(args.get_or("engine", "auto"))?;
+    c.cfg.train.sweeps = iters;
+    c.cfg.train.burnin = (iters / 10).max(2);
+
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = EngineHandle::from_kind(c.cfg.engine, Path::new(&dir))?;
+    println!(
+        "Experiment II: docs={} vocab={} topics={} sweeps={} shards={} engine={} runs={}",
+        c.spec.docs,
+        c.spec.vocab,
+        c.cfg.model.topics,
+        c.cfg.train.sweeps,
+        c.cfg.parallel.shards,
+        engine.name(),
+        runs
+    );
+    let (series, _) = run_comparison(&c, &engine)?;
+    println!(
+        "{}",
+        render_table(
+            &format!("Fig 7: reviews -> sentiment (synthetic, {} docs)", c.spec.docs),
+            &series,
+            true
+        )
+    );
+    if args.has("check") {
+        check_fig_shape(&series, true)?;
+        println!("Fig-7 shape check PASSED");
+    }
+    Ok(())
+}

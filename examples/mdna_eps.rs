@@ -1,0 +1,56 @@
+//! Paper Experiment I (Fig 6): MD&A text -> earnings per share.
+//!
+//! Runs the four-algorithm comparison on the Experiment-I-scale synthetic
+//! corpus (4216 docs, 4238-term vocabulary, continuous near-normal labels;
+//! DESIGN.md §3 documents the data substitution) and prints the Fig-6 table:
+//! computation time and test MSE per algorithm.
+//!
+//!     cargo run --release --example mdna_eps -- [--scale 1.0] [--runs 3]
+//!         [--iters 100] [--engine auto|xla|native] [--check]
+
+use cfslda::cli::args::Args;
+use cfslda::config::schema::EngineKind;
+use cfslda::experiments::runner::{check_fig_shape, render_table, run_comparison, Comparison};
+use cfslda::runtime::EngineHandle;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let scale = args.get_f64("scale", 0.25)?;
+    let runs = args.get_usize("runs", 3)?;
+    let iters = args.get_usize("iters", 60)?;
+
+    let mut c = Comparison::fig6(scale, runs);
+    c.cfg.engine = EngineKind::parse(args.get_or("engine", "auto"))?;
+    c.cfg.train.sweeps = iters;
+    c.cfg.train.burnin = (iters / 10).max(2);
+    c.cfg.train.eta_every = 5;
+
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = EngineHandle::from_kind(c.cfg.engine, Path::new(&dir))?;
+    println!(
+        "Experiment I: docs={} vocab={} topics={} sweeps={} shards={} engine={} runs={}",
+        c.spec.docs,
+        c.spec.vocab,
+        c.cfg.model.topics,
+        c.cfg.train.sweeps,
+        c.cfg.parallel.shards,
+        engine.name(),
+        runs
+    );
+    let (series, _) = run_comparison(&c, &engine)?;
+    println!(
+        "{}",
+        render_table(
+            &format!("Fig 6: MD&A -> EPS (synthetic, scale {scale})"),
+            &series,
+            false
+        )
+    );
+    if args.has("check") {
+        check_fig_shape(&series, false)?;
+        println!("Fig-6 shape check PASSED");
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: generate a small synthetic sLDA corpus, train with the
+//! communication-free Simple Average algorithm, and report test MSE.
+//!
+//!     cargo run --release --example quickstart
+
+use cfslda::config::schema::ExperimentConfig;
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::parallel::leader::{run_algorithm, Algorithm};
+use cfslda::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+
+    // 1. A small corpus drawn from the sLDA generative process: 800 docs,
+    //    600-term vocabulary, continuous (EPS-like) responses. Big enough
+    //    that each of the 4 shards still sees a useful sample.
+    let mut spec = SyntheticSpec::continuous_small();
+    spec.docs = 800;
+    spec.vocab = 600;
+    let mut rng = Pcg64::seed_from_u64(7);
+    let ds = generate_split(&spec, 600, &mut rng);
+    println!(
+        "corpus: {} train docs, {} test docs, vocab {}",
+        ds.train.num_docs(),
+        ds.test.num_docs(),
+        ds.train.vocab_size
+    );
+
+    // 2. Train + predict with the paper's Simple Average algorithm
+    //    (M = 4 communication-free Gibbs chains, predictions averaged).
+    let cfg = ExperimentConfig::quick();
+    let out = run_algorithm(Algorithm::SimpleAverage, &ds, &cfg)?;
+
+    // 3. Compare against the non-parallel baseline.
+    let base = run_algorithm(Algorithm::NonParallel, &ds, &cfg)?;
+
+    // machine time = simulated M-core wall (this container has 1 core;
+    // see DESIGN.md §3) — the clock the paper's comparisons use.
+    println!(
+        "\nsimple-average : machine time {:.2}s {}",
+        out.sim_wall_secs,
+        out.test_metrics.render(false)
+    );
+    println!(
+        "non-parallel   : machine time {:.2}s {}",
+        base.sim_wall_secs,
+        base.test_metrics.render(false)
+    );
+    println!(
+        "\nspeedup {:.2}x, MSE ratio {:.3}, sampling-phase communication: {} sync events",
+        base.sim_wall_secs / out.sim_wall_secs,
+        out.test_metrics.mse / base.test_metrics.mse,
+        out.comm.sampling_syncs
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+"""AOT compiler: lower every L2 graph to HLO *text* + write the manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m python.compile.aot --out artifacts
+Run from the repo root (the Makefile's `make artifacts` target does).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name, fn, specs, out_dir):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    params = [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "params": params,
+        "sha256_16": digest,
+        "hlo_bytes": len(text),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="AOT-lower cfslda L2 graphs to HLO text")
+    ap.add_argument("--out", default="artifacts", help="output directory")
+    ap.add_argument("--topics", type=int, nargs="*", default=list(model.TOPIC_BUCKETS),
+                    help="topic buckets to compile (default: all)")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for t in args.topics:
+        for name, (fn, specs) in model.make_specs(t).items():
+            print(f"lowering {name} ...", flush=True)
+            entries.append(lower_entry(name, fn, specs, args.out))
+    for name, (fn, specs) in model.combine_spec().items():
+        print(f"lowering {name} ...", flush=True)
+        entries.append(lower_entry(name, fn, specs, args.out))
+
+    manifest = {
+        "version": 1,
+        "row_bucket": model.ROW_BUCKET,
+        "shard_bucket": model.SHARD_BUCKET,
+        "topic_buckets": sorted(args.topics),
+        "dtype": "f32",
+        "functions": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,45 @@
+"""Pallas kernel: weighted combination of shard predictions (paper eqs. 7-9).
+
+The combination stage of the communication-free algorithm: given the [M, B]
+matrix of local predictions (one row per shard) and per-shard weights, emit
+the global prediction sum_m w_m P[m, :]. Weights are normalized by the L2
+wrapper (model.combine_fn); the kernel consumes them as-is so Simple Average
+is just the uniform-weights special case.
+
+Grid is over B column blocks; the whole shard axis (M <= 16) rides along in
+VMEM. interpret=True for CPU-PJRT execution (see gram.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _combine_kernel(p_ref, w_ref, o_ref):
+    # p [M, BLK], w [M, 1] -> o [1, BLK]
+    o_ref[...] = jnp.sum(p_ref[...] * w_ref[...], axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def combine(preds: jnp.ndarray, weights: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """sum_m weights[m] * preds[m, :].  preds: [M, B] (B % block == 0) -> [B]."""
+    m, b = preds.shape
+    assert b % block == 0, f"cols {b} not a multiple of block {block}"
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((m, block), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, b), preds.dtype),
+        interpret=True,
+    )(preds, weights[:, None])
+    return out[0]

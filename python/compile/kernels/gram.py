@@ -1,0 +1,70 @@
+"""Pallas kernel: masked Gram matrix accumulation for the ridge eta-solve.
+
+Computes G = Z^T diag(w) Z (T x T) and b = Z^T diag(w) y (T) by streaming
+row-blocks of Z through VMEM and accumulating into a single resident [T, T]
+output tile. This is the MXU-shaped hot spot of the stochastic-EM eta step
+(paper eq. 2): on TPU each row block is a [BLK, T] x [T, BLK] systolic
+contraction; on this image we lower with interpret=True (CPU PJRT cannot run
+Mosaic custom-calls) and validate numerics against ``ref.gram_ref``.
+
+TPU sizing (recorded in DESIGN.md / EXPERIMENTS.md §Perf): with BLK=128 and
+T<=64 the working set is z-block 128*64*4 = 32 KiB, accumulators <= 16.25 KiB
+— far under the ~16 MiB VMEM budget, so the schedule is bandwidth-bound and
+double-buffering the z stream hides the HBM latency.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _gram_kernel(z_ref, w_ref, y_ref, g_ref, b_ref):
+    """One grid step: fold a [BLK, T] row-block into the G/b accumulators."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    z = z_ref[...]               # [BLK, T]
+    wz = z * w_ref[...]          # mask/weight rows; padding rows contribute 0
+    g_ref[...] += wz.T @ z
+    b_ref[...] += wz.T @ y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gram(zbar: jnp.ndarray, w: jnp.ndarray, y: jnp.ndarray, block: int = DEFAULT_BLOCK):
+    """G = Z^T diag(w) Z, b = Z^T diag(w) y via a row-streaming Pallas kernel.
+
+    zbar: [D, T] with D % block == 0 (callers pad; mask padding via w=0)
+    w, y: [D]
+    returns (G [T, T], b [T])
+    """
+    d, t = zbar.shape
+    assert d % block == 0, f"rows {d} not a multiple of block {block}"
+    grid = (d // block,)
+    g, b = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, t), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t, t), lambda i: (0, 0)),
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, t), zbar.dtype),
+            jax.ShapeDtypeStruct((t, 1), zbar.dtype),
+        ],
+        interpret=True,
+    )(zbar, w[:, None], y[:, None])
+    return g, b[:, 0]

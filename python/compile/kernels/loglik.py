@@ -1,0 +1,45 @@
+"""Pallas kernel: fused Gaussian response log-density grid.
+
+The response-margin term N(y_d ; mu_{d,t}, rho) of the collapsed Gibbs
+conditional (paper eq. 1), evaluated in log space for a batch of documents
+against all T candidate topic means at once. Used by the diagnostics path
+(blocked-update scoring, quasi-ergodicity probes). Fusing the subtract /
+square / scale chain keeps the [BLK, T] tile in VMEM for a single pass.
+interpret=True for CPU-PJRT execution (see gram.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _loglik_kernel(y_ref, mu_ref, rho_ref, o_ref):
+    rho = rho_ref[0, 0]
+    d = y_ref[...] - mu_ref[...]      # [BLK, 1] - [BLK, T] broadcasts
+    o_ref[...] = -0.5 * jnp.log(2.0 * jnp.pi * rho) - d * d / (2.0 * rho)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def loglik(y: jnp.ndarray, mu: jnp.ndarray, rho: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """log N(y_b ; mu_{b,t}, rho).  y: [B], mu: [B, T] (B % block == 0), rho: scalar."""
+    b, t = mu.shape
+    assert b % block == 0, f"rows {b} not a multiple of block {block}"
+    rho2d = jnp.asarray(rho, dtype=mu.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _loglik_kernel,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t), mu.dtype),
+        interpret=True,
+    )(y[:, None], mu, rho2d)

@@ -1,0 +1,39 @@
+"""Pallas kernel: batched sLDA prediction yhat = Z eta (paper eq. 5).
+
+Streams [BLK, T] blocks of the empirical topic-proportion matrix through
+VMEM and emits [BLK] prediction blocks; eta stays VMEM-resident across the
+whole grid. interpret=True for CPU-PJRT execution (see gram.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _predict_kernel(z_ref, eta_ref, o_ref):
+    o_ref[...] = z_ref[...] @ eta_ref[...]   # [BLK, T] @ [T, 1] -> [BLK, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def predict(zbar: jnp.ndarray, eta: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """yhat = zbar @ eta.  zbar: [B, T] (B % block == 0), eta: [T] -> [B]."""
+    b, t = zbar.shape
+    assert b % block == 0, f"rows {b} not a multiple of block {block}"
+    out = pl.pallas_call(
+        _predict_kernel,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block, t), lambda i: (i, 0)),
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), zbar.dtype),
+        interpret=True,
+    )(zbar, eta[:, None])
+    return out[:, 0]

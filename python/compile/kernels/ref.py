@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+plain ``jax.numpy`` with no Pallas, no tiling and no tricks. The pytest suite
+(``python/tests``) sweeps shapes/seeds with hypothesis and asserts the Pallas
+outputs match these oracles to float32 tolerance. The L2 model graphs
+(``python/compile/model.py``) are additionally checked against numpy algebra.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(zbar: jnp.ndarray, w: jnp.ndarray, y: jnp.ndarray):
+    """Masked Gram matrix and moment vector.
+
+    G = Z^T diag(w) Z          [T, T]
+    b = Z^T diag(w) y          [T]
+
+    zbar: [D, T] empirical topic proportions (rows may be zero padding)
+    w:    [D]    row mask / weight (0.0 for padding)
+    y:    [D]    responses
+    """
+    wz = zbar * w[:, None]
+    return wz.T @ zbar, wz.T @ y
+
+
+def predict_ref(zbar: jnp.ndarray, eta: jnp.ndarray) -> jnp.ndarray:
+    """yhat = Z eta  (paper eq. 5).  zbar: [B, T], eta: [T] -> [B]."""
+    return zbar @ eta
+
+
+def combine_ref(preds: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted combination of shard predictions (paper eqs. 7-9).
+
+    preds:   [M, B] local predictions, one row per shard
+    weights: [M]    non-negative, NOT necessarily normalized
+    returns  [B]    sum_m (w_m / sum w) preds[m]
+    """
+    wn = weights / (jnp.sum(weights) + 1e-30)
+    return wn @ preds
+
+
+def loglik_ref(y: jnp.ndarray, mu: jnp.ndarray, rho: jnp.ndarray) -> jnp.ndarray:
+    """Gaussian response log-density grid (the margin term of paper eq. 1).
+
+    y:   [B]     observed responses
+    mu:  [B, T]  candidate means (per doc, per candidate topic)
+    rho: scalar  response variance
+    returns [B, T] log N(y_b ; mu_{b,t}, rho)
+    """
+    d = y[:, None] - mu
+    return -0.5 * jnp.log(2.0 * jnp.pi * rho) - d * d / (2.0 * rho)

@@ -1,0 +1,144 @@
+"""L2: the sLDA estimation/prediction algebra as JAX graphs.
+
+These are the dense, batched pieces of the paper's algorithm — everything
+that is NOT the token-sequential collapsed Gibbs sweep (which lives in the
+rust coordinator, rust/src/sampler/). Each function here calls the L1 Pallas
+kernels, is AOT-lowered once by ``aot.py`` to HLO text, and is executed from
+rust via PJRT. Python never runs on the request path.
+
+Numerical notes:
+- The T x T ridge system is solved with conjugate gradients (fixed 2T
+  iterations) rather than ``jnp.linalg.solve``: jax lowers LAPACK solves to
+  jaxlib custom-calls that the rust PJRT client (xla_extension 0.5.1) cannot
+  resolve; CG lowers to plain HLO while/dot ops and is exact for SPD systems
+  within float32 tolerance at these sizes (T <= 64).
+- All row dimensions are padded to fixed buckets; masks (w = 0 rows) make
+  padding inert. The rust runtime owns the padding (runtime/pad.rs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.combine import combine as combine_kernel
+from .kernels.gram import gram as gram_kernel
+from .kernels.loglik import loglik as loglik_kernel
+from .kernels.predict import predict as predict_kernel
+
+
+def cg_solve(a: jnp.ndarray, b: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Conjugate-gradient solve of the SPD system a @ x = b (plain-HLO safe)."""
+
+    def body(_, st):
+        x, r, p, rs = st
+        ap = a @ p
+        alpha = rs / (p @ ap + 1e-30)
+        x = x + alpha * p
+        r2 = r - alpha * ap
+        rs2 = r2 @ r2
+        beta = rs2 / (rs + 1e-30)
+        return (x, r2, r2 + beta * p, rs2)
+
+    x0 = jnp.zeros_like(b)
+    x, *_ = lax.fori_loop(0, iters, body, (x0, b, b, b @ b))
+    return x
+
+
+def eta_solve(zbar: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray,
+              lam: jnp.ndarray, mu: jnp.ndarray):
+    """MAP eta step of the stochastic EM (paper eq. 2).
+
+    Maximizing  -(1/2 rho) sum_d w_d (y_d - eta^T zbar_d)^2
+                -(1/2 sigma) sum_t (eta_t - mu)^2
+    gives the ridge system  (Z^T W Z + lam I) eta = Z^T W y + lam mu,
+    with lam = rho / sigma.
+
+    zbar: [D, T] padded; y, w: [D]; lam, mu: scalars.
+    Returns (eta [T], train_mse scalar, wsum scalar).
+    """
+    t = zbar.shape[1]
+    g, b = gram_kernel(zbar, w, y)
+    a = g + lam * jnp.eye(t, dtype=zbar.dtype)
+    rhs = b + lam * mu
+    eta = cg_solve(a, rhs, iters=2 * t)
+    yhat = predict_kernel(zbar, eta)
+    wsum = jnp.sum(w)
+    mse = jnp.sum(w * (y - yhat) ** 2) / (wsum + 1e-12)
+    return eta, mse, wsum
+
+
+def gram_fn(zbar: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray):
+    """Chunkable Gram accumulation: G = Z^T W Z, b = Z^T W y, n = sum w.
+
+    For training sets larger than ROW_BUCKET the rust runtime streams row
+    chunks through this artifact and sums the (G, b, n) outputs — the T x T
+    ridge solve then happens coordinator-side (regress/ridge.rs), keeping
+    the data-parallel heavy lifting in XLA without shape explosion.
+    """
+    g, b = gram_kernel(zbar, w, y)
+    return g, b, jnp.sum(w)
+
+
+def predict_fn(zbar: jnp.ndarray, eta: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray):
+    """Batched prediction + masked metrics (paper eq. 5).
+
+    zbar: [B, T] padded; eta: [T]; y, w: [B] (y may be all-zero when labels
+    are unknown — rust then ignores mse/acc).
+    Returns (yhat [B], mse scalar, acc scalar).
+    """
+    yhat = predict_kernel(zbar, eta)
+    wsum = jnp.sum(w) + 1e-12
+    mse = jnp.sum(w * (y - yhat) ** 2) / wsum
+    hits = (yhat > 0.5) == (y > 0.5)
+    acc = jnp.sum(w * hits.astype(zbar.dtype)) / wsum
+    return yhat, mse, acc
+
+
+def combine_fn(preds: jnp.ndarray, weights: jnp.ndarray):
+    """Normalized weighted combination of shard predictions (eqs. 7-9).
+
+    preds: [M, B] padded on both axes; weights: [M] (zero for padding
+    shards). Returns (yhat [B], wnorm [M]).
+    """
+    wn = weights / (jnp.sum(weights) + 1e-30)
+    return combine_kernel(preds, wn), wn
+
+
+def loglik_fn(y: jnp.ndarray, mu: jnp.ndarray, rho: jnp.ndarray):
+    """Gaussian response log-density grid (margin term of eq. 1).
+
+    y: [B]; mu: [B, T]; rho: scalar. Returns ll [B, T].
+    """
+    return loglik_kernel(y, mu, rho)
+
+
+# ---------------------------------------------------------------------------
+# AOT shape buckets. The rust runtime reads these from the manifest; keep in
+# sync with rust/src/runtime/manifest.rs expectations.
+# ---------------------------------------------------------------------------
+
+ROW_BUCKET = 4096      # padded document rows for eta_solve / predict / loglik
+SHARD_BUCKET = 16      # padded shard axis for combine
+TOPIC_BUCKETS = (8, 16, 32, 64)
+
+F32 = jnp.float32
+
+
+def make_specs(t: int):
+    """jax.ShapeDtypeStruct argument specs per function, for bucket T = t."""
+    d = ROW_BUCKET
+    m = SHARD_BUCKET
+    s = lambda *shape: jax.ShapeDtypeStruct(shape, F32)  # noqa: E731
+    return {
+        f"eta_solve_T{t}": (eta_solve, (s(d, t), s(d), s(d), s(), s())),
+        f"gram_T{t}": (gram_fn, (s(d, t), s(d), s(d))),
+        f"predict_T{t}": (predict_fn, (s(d, t), s(t), s(d), s(d))),
+        f"loglik_T{t}": (loglik_fn, (s(d), s(d, t), s())),
+    }
+
+
+def combine_spec():
+    s = lambda *shape: jax.ShapeDtypeStruct(shape, F32)  # noqa: E731
+    return {f"combine_M{SHARD_BUCKET}": (combine_fn, (s(SHARD_BUCKET, ROW_BUCKET), s(SHARD_BUCKET)))}

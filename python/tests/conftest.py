@@ -1,0 +1,19 @@
+"""Shared pytest fixtures + hypothesis profile for the kernel test suite."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# interpret-mode Pallas is slow; keep sweeps small but meaningful.
+settings.register_profile(
+    "cfslda",
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("cfslda")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(20170710)

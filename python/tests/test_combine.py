@@ -1,0 +1,54 @@
+"""L1 combine kernel vs oracle + combiner invariants (paper eqs. 7-9)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from python.compile.kernels import ref
+from python.compile.kernels.combine import combine
+
+BLOCK = 32
+
+
+@given(
+    m=st.integers(1, 16),
+    blocks=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_matches_ref(m, blocks, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(size=(m, blocks * BLOCK)).astype(np.float32))
+    w = rng.random(m).astype(np.float32) + 0.01
+    wn = jnp.asarray(w / w.sum())
+    got = combine(p, wn, block=BLOCK)
+    np.testing.assert_allclose(got, ref.combine_ref(p, jnp.asarray(w)), rtol=1e-4, atol=1e-4)
+
+
+@given(m=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_simple_average_is_uniform_weights(m, seed):
+    """Simple Average (eq. 7) == Weighted Average with equal weights."""
+    rng = np.random.default_rng(seed)
+    p = rng.normal(size=(m, 64)).astype(np.float32)
+    uniform = np.full(m, 1.0 / m, np.float32)
+    got = combine(jnp.asarray(p), jnp.asarray(uniform), block=32)
+    np.testing.assert_allclose(got, p.mean(axis=0), rtol=1e-4, atol=1e-4)
+
+
+def test_combine_one_hot_weight_selects_shard(rng):
+    p = rng.normal(size=(5, 64)).astype(np.float32)
+    w = np.zeros(5, np.float32)
+    w[3] = 1.0
+    got = combine(jnp.asarray(p), jnp.asarray(w), block=32)
+    np.testing.assert_allclose(got, p[3], rtol=1e-5, atol=1e-6)
+
+
+def test_combine_padding_shards_inert(rng):
+    """Zero-weight padding shards (rust pads M up to the bucket) are no-ops."""
+    p = rng.normal(size=(4, 64)).astype(np.float32)
+    w = rng.random(4).astype(np.float32)
+    w /= w.sum()
+    pp = np.concatenate([p, rng.normal(size=(12, 64)).astype(np.float32)])
+    wp = np.concatenate([w, np.zeros(12, np.float32)])
+    a = combine(jnp.asarray(p), jnp.asarray(w), block=32)
+    b = combine(jnp.asarray(pp), jnp.asarray(wp), block=32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

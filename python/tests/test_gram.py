@@ -1,0 +1,65 @@
+"""L1 gram kernel vs the pure-jnp oracle (hypothesis shape/seed sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from python.compile.kernels import ref
+from python.compile.kernels.gram import gram
+
+BLOCK = 32
+
+
+def _mk(rng, d, t, mask_frac):
+    z = rng.normal(size=(d, t)).astype(np.float32)
+    w = (rng.random(d) > mask_frac).astype(np.float32)
+    y = rng.normal(size=d).astype(np.float32)
+    return jnp.asarray(z), jnp.asarray(w), jnp.asarray(y)
+
+
+@given(
+    blocks=st.integers(1, 6),
+    t=st.sampled_from([2, 5, 8, 16]),
+    mask_frac=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(blocks, t, mask_frac, seed):
+    rng = np.random.default_rng(seed)
+    z, w, y = _mk(rng, blocks * BLOCK, t, mask_frac)
+    g, b = gram(z, w, y, block=BLOCK)
+    g_ref, b_ref = ref.gram_ref(z, w, y)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(b, b_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_gram_all_masked_is_zero(rng):
+    z = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    w = jnp.zeros(64, jnp.float32)
+    y = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    g, b = gram(z, w, y, block=32)
+    assert float(jnp.abs(g).max()) == 0.0
+    assert float(jnp.abs(b).max()) == 0.0
+
+
+def test_gram_is_symmetric_psd(rng):
+    z = jnp.asarray(rng.normal(size=(128, 12)).astype(np.float32))
+    w = jnp.ones(128, jnp.float32)
+    y = jnp.zeros(128, jnp.float32)
+    g, _ = gram(z, w, y, block=32)
+    np.testing.assert_allclose(g, g.T, atol=1e-4)
+    eig = np.linalg.eigvalsh(np.asarray(g, dtype=np.float64))
+    assert eig.min() > -1e-3
+
+
+def test_gram_padding_rows_inert(rng):
+    """Appending w=0 rows must not change the result."""
+    z = rng.normal(size=(64, 6)).astype(np.float32)
+    w = np.ones(64, np.float32)
+    y = rng.normal(size=64).astype(np.float32)
+    zp = np.concatenate([z, rng.normal(size=(32, 6)).astype(np.float32)])
+    wp = np.concatenate([w, np.zeros(32, np.float32)])
+    yp = np.concatenate([y, rng.normal(size=32).astype(np.float32)])
+    g1, b1 = gram(jnp.asarray(z), jnp.asarray(w), jnp.asarray(y), block=32)
+    g2, b2 = gram(jnp.asarray(zp), jnp.asarray(wp), jnp.asarray(yp), block=32)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(b1, b2, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,42 @@
+"""L1 loglik kernel vs oracle + density sanity checks."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from python.compile.kernels import ref
+from python.compile.kernels.loglik import loglik
+
+BLOCK = 32
+
+
+@given(
+    blocks=st.integers(1, 6),
+    t=st.sampled_from([1, 4, 8, 32]),
+    rho=st.floats(0.05, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loglik_matches_ref(blocks, t, rho, seed):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.normal(size=blocks * BLOCK).astype(np.float32))
+    mu = jnp.asarray(rng.normal(size=(blocks * BLOCK, t)).astype(np.float32))
+    got = loglik(y, mu, jnp.float32(rho), block=BLOCK)
+    np.testing.assert_allclose(got, ref.loglik_ref(y, mu, rho), rtol=1e-3, atol=1e-3)
+
+
+def test_loglik_peak_at_mean(rng):
+    """Density must be maximal where mu == y."""
+    y = jnp.zeros(32, jnp.float32)
+    mu = jnp.asarray(np.linspace(-3, 3, 32 * 4).reshape(32, 4).astype(np.float32))
+    ll = np.asarray(loglik(y, mu, jnp.float32(1.0), block=32))
+    best = np.abs(np.asarray(mu)).argmin(axis=1)
+    np.testing.assert_array_equal(ll.argmax(axis=1), best)
+
+
+def test_loglik_matches_scipy_formula(rng):
+    y = rng.normal(size=32).astype(np.float32)
+    mu = rng.normal(size=(32, 3)).astype(np.float32)
+    rho = 0.7
+    got = np.asarray(loglik(jnp.asarray(y), jnp.asarray(mu), jnp.float32(rho), block=32))
+    want = -0.5 * np.log(2 * np.pi * rho) - (y[:, None] - mu) ** 2 / (2 * rho)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,106 @@
+"""L2 model graphs vs numpy closed forms (the algebra rust will execute)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from python.compile import model
+
+BLOCK = model and 32  # kernels inside model use their default 128-blocks;
+# here we always build inputs at multiples of 128 to satisfy them.
+
+
+def _pad128(n):
+    return ((n + 127) // 128) * 128
+
+
+def _ridge_closed_form(z, y, w, lam, mu):
+    t = z.shape[1]
+    a = z.T @ (w[:, None] * z) + lam * np.eye(t)
+    b = z.T @ (w * y) + lam * mu
+    return np.linalg.solve(a, b)
+
+
+@given(
+    d=st.integers(10, 200),
+    t=st.sampled_from([2, 4, 8, 16]),
+    lam=st.floats(0.1, 10.0),
+    mu=st.floats(-1.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_eta_solve_matches_closed_form(d, t, lam, mu, seed):
+    rng = np.random.default_rng(seed)
+    dp = _pad128(d)
+    z = np.zeros((dp, t), np.float32)
+    w = np.zeros(dp, np.float32)
+    y = np.zeros(dp, np.float32)
+    # simplex-ish rows like real zbar
+    raw = rng.dirichlet(np.ones(t), size=d).astype(np.float32)
+    z[:d] = raw
+    w[:d] = 1.0
+    y[:d] = rng.normal(size=d).astype(np.float32)
+    eta, mse, wsum = model.eta_solve(
+        jnp.asarray(z), jnp.asarray(y), jnp.asarray(w),
+        jnp.float32(lam), jnp.float32(mu),
+    )
+    want = _ridge_closed_form(z[:d].astype(np.float64), y[:d].astype(np.float64),
+                              np.ones(d), lam, mu)
+    np.testing.assert_allclose(np.asarray(eta), want, rtol=2e-2, atol=2e-2)
+    yhat = z[:d] @ np.asarray(eta)
+    np.testing.assert_allclose(float(mse), np.mean((y[:d] - yhat) ** 2), rtol=1e-3, atol=1e-4)
+    assert float(wsum) == d
+
+
+def test_eta_solve_recovers_true_eta():
+    """Noise-free responses: eta_solve must recover the generating eta."""
+    rng = np.random.default_rng(7)
+    d, t = 512, 8
+    z = rng.dirichlet(np.ones(t), size=d).astype(np.float32)
+    eta_true = rng.normal(size=t).astype(np.float32)
+    y = (z @ eta_true).astype(np.float32)
+    w = np.ones(d, np.float32)
+    eta, mse, _ = model.eta_solve(
+        jnp.asarray(z), jnp.asarray(y), jnp.asarray(w),
+        jnp.float32(1e-4), jnp.float32(0.0),
+    )
+    np.testing.assert_allclose(np.asarray(eta), eta_true, rtol=5e-2, atol=5e-2)
+    assert float(mse) < 1e-4
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_predict_fn_metrics(seed):
+    rng = np.random.default_rng(seed)
+    b, t = 128, 4
+    z = rng.dirichlet(np.ones(t), size=b).astype(np.float32)
+    eta = rng.normal(size=t).astype(np.float32)
+    y = rng.normal(size=b).astype(np.float32)
+    w = (rng.random(b) > 0.4).astype(np.float32)
+    yhat, mse, acc = model.predict_fn(
+        jnp.asarray(z), jnp.asarray(eta), jnp.asarray(y), jnp.asarray(w))
+    want_yhat = z @ eta
+    np.testing.assert_allclose(np.asarray(yhat), want_yhat, rtol=1e-4, atol=1e-4)
+    m = w > 0
+    np.testing.assert_allclose(
+        float(mse), np.mean((y[m] - want_yhat[m]) ** 2), rtol=1e-3, atol=1e-4)
+    want_acc = np.mean((want_yhat[m] > 0.5) == (y[m] > 0.5))
+    np.testing.assert_allclose(float(acc), want_acc, rtol=1e-4, atol=1e-4)
+
+
+def test_combine_fn_normalizes():
+    rng = np.random.default_rng(3)
+    p = rng.normal(size=(4, 128)).astype(np.float32)
+    w = np.array([2.0, 2.0, 2.0, 2.0], np.float32)  # unnormalized uniform
+    yhat, wn = model.combine_fn(jnp.asarray(p), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(wn), np.full(4, 0.25), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(yhat), p.mean(axis=0), rtol=1e-4, atol=1e-5)
+
+
+def test_cg_solve_vs_numpy():
+    rng = np.random.default_rng(11)
+    for t in (2, 8, 32, 64):
+        m = rng.normal(size=(t, t)).astype(np.float32)
+        a = m @ m.T + np.eye(t, dtype=np.float32) * t  # SPD, well-conditioned
+        b = rng.normal(size=t).astype(np.float32)
+        x = model.cg_solve(jnp.asarray(a), jnp.asarray(b), iters=2 * t)
+        want = np.linalg.solve(a.astype(np.float64), b.astype(np.float64))
+        np.testing.assert_allclose(np.asarray(x), want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,38 @@
+"""L1 predict kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from python.compile.kernels import ref
+from python.compile.kernels.predict import predict
+
+BLOCK = 32
+
+
+@given(
+    blocks=st.integers(1, 8),
+    t=st.sampled_from([1, 3, 8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_predict_matches_ref(blocks, t, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(blocks * BLOCK, t)).astype(np.float32))
+    eta = jnp.asarray(rng.normal(size=t).astype(np.float32))
+    got = predict(z, eta, block=BLOCK)
+    np.testing.assert_allclose(got, ref.predict_ref(z, eta), rtol=1e-4, atol=1e-4)
+
+
+def test_predict_zero_eta(rng):
+    z = jnp.asarray(rng.normal(size=(64, 5)).astype(np.float32))
+    out = predict(z, jnp.zeros(5, jnp.float32), block=32)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_predict_one_hot_rows(rng):
+    """A doc fully in topic t must predict exactly eta_t."""
+    t = 8
+    eta = jnp.asarray(rng.normal(size=t).astype(np.float32))
+    z = jnp.asarray(np.eye(t, dtype=np.float32).repeat(4, axis=0))  # 32 rows
+    out = predict(z, eta, block=32)
+    np.testing.assert_allclose(out, np.asarray(eta).repeat(4), rtol=1e-5, atol=1e-6)

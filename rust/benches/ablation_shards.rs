@@ -1,0 +1,57 @@
+//! Ablation bench (beyond the paper): shard count sweep M ∈ {2,4,8,16}.
+//!
+//! The paper fixes M = 4 (dual-core, 4 threads). This sweep shows the
+//! speed/quality trade-off as shards shrink: training time falls ~1/M while
+//! Simple Average quality degrades gracefully as each local posterior sees
+//! fewer documents.
+
+use cfslda::bench_harness::quick_mode;
+use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::parallel::leader::{run_with_engine, Algorithm};
+use cfslda::runtime::EngineHandle;
+use cfslda::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let mut spec = SyntheticSpec::mdna();
+    if quick {
+        spec.docs = 600;
+        spec.vocab = 600;
+    }
+    let mut rng = Pcg64::seed_from_u64(20170710);
+    let n_train = spec.docs * 3 / 4;
+    let ds = generate_split(&spec, n_train, &mut rng);
+
+    let mut cfg = ExperimentConfig::fig6();
+    cfg.engine = EngineKind::Native; // isolate the sharding effect
+    cfg.model.topics = 16;
+    cfg.train.sweeps = if quick { 20 } else { 60 };
+    cfg.train.burnin = 4;
+    cfg.train.eta_every = 4;
+    let engine = EngineHandle::native();
+
+    println!("== ablation: shard count (SimpleAverage vs NonParallel), docs={} ==", spec.docs);
+    println!("{:<14} {:>9} {:>10} {:>8} {:>12}", "arm", "wall(s)", "test-MSE", "r2", "comm(MB)");
+    let (base, _) = run_with_engine(Algorithm::NonParallel, &ds, &cfg, &engine, false)?;
+    println!(
+        "{:<14} {:>9.3} {:>10.4} {:>8.3} {:>12.2}",
+        "non-parallel", base.wall_secs, base.test_metrics.mse, base.test_metrics.r2, 0.0
+    );
+    for m in [2usize, 4, 8, 16] {
+        let mut c = cfg.clone();
+        c.parallel.shards = m;
+        c.parallel.threads = m.min(8);
+        let (out, _) = run_with_engine(Algorithm::SimpleAverage, &ds, &c, &engine, false)?;
+        println!(
+            "{:<14} {:>9.3} {:>10.4} {:>8.3} {:>12.2}",
+            format!("simple M={m}"),
+            out.wall_secs,
+            out.test_metrics.mse,
+            out.test_metrics.r2,
+            out.comm.total() as f64 / 1e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Ablation bench: topic count sweep T ∈ {8,16,32,64}.
+//!
+//! T controls both model capacity and hot-path cost (the Gibbs conditional
+//! is O(T) per token with T exponentials when the response term is active).
+//! Also exercises every AOT topic bucket.
+
+use cfslda::bench_harness::quick_mode;
+use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::parallel::leader::{run_with_engine, Algorithm};
+use cfslda::runtime::EngineHandle;
+use cfslda::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let mut spec = SyntheticSpec::mdna();
+    if quick {
+        spec.docs = 500;
+        spec.vocab = 500;
+    } else {
+        spec.docs = 2000;
+        spec.vocab = 2000;
+    }
+    let mut rng = Pcg64::seed_from_u64(20170710);
+    let ds = generate_split(&spec, spec.docs * 3 / 4, &mut rng);
+
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = EngineHandle::from_kind(EngineKind::Auto, Path::new(&dir))?;
+    println!(
+        "== ablation: topic count (SimpleAverage, engine={}) docs={} ==",
+        engine.name(),
+        spec.docs
+    );
+    println!("{:<8} {:>9} {:>10} {:>8} {:>16}", "T", "wall(s)", "test-MSE", "r2", "tokens/s/shard");
+    for t in [8usize, 16, 32, 64] {
+        let mut cfg = ExperimentConfig::fig6();
+        cfg.model.topics = t;
+        cfg.train.sweeps = if quick { 15 } else { 40 };
+        cfg.train.burnin = 3;
+        cfg.train.eta_every = 4;
+        let (out, _) = run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false)?;
+        let tokens: u64 = out.shards.iter().map(|s| s.tokens_sampled).sum();
+        let gibbs = out.timings.get("gibbs").max(1e-9);
+        println!(
+            "{:<8} {:>9.3} {:>10.4} {:>8.3} {:>16.2e}",
+            t,
+            out.wall_secs,
+            out.test_metrics.mse,
+            out.test_metrics.r2,
+            tokens as f64 / gibbs
+        );
+    }
+    Ok(())
+}

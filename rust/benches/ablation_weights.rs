@@ -1,0 +1,87 @@
+//! Ablation bench: Weighted Average weight schemes (paper §III-C-d).
+//!
+//! Compares uniform (== Simple), inverse-train-MSE, and train-accuracy
+//! weights under *heterogeneous shards*: we deliberately unbalance the
+//! partition quality by giving one shard label noise, so weighting has
+//! signal to exploit — the regime the paper designed Weighted Average for.
+
+use cfslda::bench_harness::quick_mode;
+use cfslda::combine::rules::combine_median;
+use cfslda::combine::{combine_predictions, weights, CombineRule, WeightScheme};
+use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::data::corpus::Dataset;
+use cfslda::data::partition::{random_shards, shard_corpora};
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::eval::metrics::compute;
+use cfslda::parallel::worker::{run_worker, WorkerPlan};
+use cfslda::runtime::EngineHandle;
+use cfslda::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let mut spec = SyntheticSpec::continuous_small();
+    spec.docs = if quick { 400 } else { 1200 };
+    spec.vocab = if quick { 400 } else { 1000 };
+    let mut rng = Pcg64::seed_from_u64(20170710);
+    let mut ds: Dataset = generate_split(&spec, spec.docs * 3 / 4, &mut rng);
+
+    let mut cfg = ExperimentConfig::quick();
+    cfg.engine = EngineKind::Native;
+    cfg.train.sweeps = if quick { 15 } else { 40 };
+    cfg.train.burnin = 3;
+    cfg.train.eta_every = 3;
+    let m = 4usize;
+    cfg.parallel.shards = m;
+    let engine = EngineHandle::native();
+
+    // Partition, then corrupt shard 0's labels to create heterogeneity.
+    let shards = random_shards(ds.train.num_docs(), m, &mut rng);
+    for &di in &shards[0] {
+        ds.train.docs[di].response += 3.0 * rng.next_gaussian();
+    }
+    let subs = shard_corpora(&ds.train, &shards);
+
+    // Train each shard once; reuse local predictions across schemes.
+    let mut preds = Vec::new();
+    let mut mses = Vec::new();
+    let mut accs = Vec::new();
+    for (i, sub) in subs.iter().enumerate() {
+        let out = run_worker(
+            i,
+            sub,
+            &ds.test,
+            &ds.train,
+            WorkerPlan { predict_test: true, predict_full_train: true },
+            &cfg,
+            &engine,
+            Pcg64::seed_from_u64(cfg.seed).split(i as u64),
+        )?;
+        preds.push(out.test_pred.unwrap().yhat);
+        let (mse, acc) = out.full_train_quality.unwrap();
+        mses.push(mse);
+        accs.push(acc);
+    }
+    println!("== ablation: weight schemes (shard 0 label-corrupted) ==");
+    println!("per-shard full-train MSE: {mses:?}");
+    let ys = ds.test.responses();
+    println!("{:<16} {:>10} {:>8} {:>24}", "scheme", "test-MSE", "r2", "weights");
+    for (name, rule) in [
+        ("uniform", CombineRule::Weighted(WeightScheme::Uniform)),
+        ("inverse-mse", CombineRule::Weighted(WeightScheme::InverseMse)),
+        ("accuracy", CombineRule::Weighted(WeightScheme::Accuracy)),
+    ] {
+        let w = weights(rule, &mses, &accs)?;
+        let yhat = combine_predictions(&engine, &preds, &w)?;
+        let metr = compute(&yhat, &ys);
+        let wsum: f64 = w.iter().sum();
+        let wn: Vec<f64> = w.iter().map(|x| (x / wsum * 1000.0).round() / 1000.0).collect();
+        println!("{:<16} {:>10.4} {:>8.3} {:>24}", name, metr.mse, metr.r2, format!("{wn:?}"));
+    }
+    // Median combination (extension; robust to the corrupted shard).
+    let yhat = combine_median(&preds)?;
+    let metr = compute(&yhat, &ys);
+    println!("{:<16} {:>10.4} {:>8.3} {:>24}", "median", metr.mse, metr.r2, "-");
+    println!("(expect inverse-mse and median to resist shard 0's corruption and beat uniform)");
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerates paper Fig 5 — the label histogram of the Experiment-I
+//! corpus with normality statistics — and measures corpus-generation
+//! throughput (tokens/s) of the synthetic sLDA sampler.
+
+use cfslda::bench_harness::{bench_throughput, quick_mode, render_table};
+use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::experiments::fig5;
+use cfslda::util::rng::Pcg64;
+
+fn main() {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let mut spec = SyntheticSpec::mdna();
+    if quick {
+        spec.docs = 800;
+        spec.vocab = 800;
+    }
+
+    let report = fig5::fig5_labels(&spec, 40, 20170710);
+    println!("{}", fig5::render(&report, &spec));
+
+    // generation throughput (supports the "synthetic corpus is cheap" claim)
+    let tokens = spec.docs as f64 * spec.doc_len_mean;
+    let mut seed = 0u64;
+    let r = bench_throughput("corpus_generation", 1, if quick { 2 } else { 4 }, tokens, || {
+        seed += 1;
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let c = generate_corpus(&spec, &mut rng);
+        std::hint::black_box(c.num_tokens());
+    });
+    println!("{}", render_table("Fig 5 workload generation", &[r]));
+}

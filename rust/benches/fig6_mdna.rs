@@ -1,0 +1,34 @@
+//! Bench: regenerates paper Fig 6 — computation time + test MSE for the
+//! four algorithms on the Experiment-I (MD&A -> EPS) workload.
+//!
+//! Full scale: `cargo bench --bench fig6_mdna` (4216 docs, 100 sweeps,
+//! 3 repeats). CI scale: append `-- --quick`.
+
+use cfslda::bench_harness::quick_mode;
+use cfslda::config::schema::EngineKind;
+use cfslda::experiments::runner::{check_fig_shape, render_table, run_comparison, Comparison};
+use cfslda::runtime::EngineHandle;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let (scale, runs, sweeps) = if quick { (0.1, 1, 20) } else { (1.0, 3, 100) };
+    let mut c = Comparison::fig6(scale, runs);
+    c.cfg.train.sweeps = sweeps;
+    c.cfg.train.burnin = (sweeps / 10).max(2);
+    c.cfg.train.eta_every = 5;
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = EngineHandle::from_kind(EngineKind::Auto, Path::new(&dir))?;
+    eprintln!(
+        "fig6 bench: docs={} vocab={} sweeps={} runs={} engine={} (quick={quick})",
+        c.spec.docs, c.spec.vocab, sweeps, runs, engine.name()
+    );
+    let (series, _) = run_comparison(&c, &engine)?;
+    println!("{}", render_table("Fig 6: MD&A -> EPS, four algorithms", &series, false));
+    match check_fig_shape(&series, false) {
+        Ok(()) => println!("fig6 shape: PASS (naive worst quality; simple fast+accurate; weighted slowest parallel arm)"),
+        Err(e) => println!("fig6 shape: MARGINAL at this scale — {e}"),
+    }
+    Ok(())
+}

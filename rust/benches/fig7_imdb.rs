@@ -1,0 +1,32 @@
+//! Bench: regenerates paper Fig 7 — computation time + test accuracy for
+//! the four algorithms on the Experiment-II (reviews -> sentiment) workload.
+//!
+//! Full scale: 25k docs (paper), 2 repeats. CI scale: `-- --quick`.
+
+use cfslda::bench_harness::quick_mode;
+use cfslda::config::schema::EngineKind;
+use cfslda::experiments::runner::{check_fig_shape, render_table, run_comparison, Comparison};
+use cfslda::runtime::EngineHandle;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let (scale, runs, sweeps) = if quick { (0.06, 1, 15) } else { (1.0, 2, 60) };
+    let mut c = Comparison::fig7(scale, runs);
+    c.cfg.train.sweeps = sweeps;
+    c.cfg.train.burnin = (sweeps / 10).max(2);
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = EngineHandle::from_kind(EngineKind::Auto, Path::new(&dir))?;
+    eprintln!(
+        "fig7 bench: docs={} vocab={} sweeps={} runs={} engine={} (quick={quick})",
+        c.spec.docs, c.spec.vocab, sweeps, runs, engine.name()
+    );
+    let (series, _) = run_comparison(&c, &engine)?;
+    println!("{}", render_table("Fig 7: reviews -> sentiment, four algorithms", &series, true));
+    match check_fig_shape(&series, true) {
+        Ok(()) => println!("fig7 shape: PASS"),
+        Err(e) => println!("fig7 shape: MARGINAL at this scale — {e}"),
+    }
+    Ok(())
+}

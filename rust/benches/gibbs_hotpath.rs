@@ -1,0 +1,74 @@
+//! Bench: the L3 hot path — collapsed-Gibbs token updates per second.
+//!
+//! This is the §Perf tracking bench (EXPERIMENTS.md): the paper's wall-time
+//! claims all reduce to this number times token count. Reported for the
+//! response-inactive regime (plain-LDA conditional, burn-in sweeps) and the
+//! response-active regime (Gaussian margin with T exponentials per token).
+
+use cfslda::bench_harness::{bench_throughput, quick_mode, render_table};
+use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_train::train;
+use cfslda::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let mut spec = SyntheticSpec::mdna();
+    spec.docs = if quick { 400 } else { 1500 };
+    spec.vocab = if quick { 500 } else { 2000 };
+    let mut rng = Pcg64::seed_from_u64(20170710);
+    let corpus = generate_corpus(&spec, &mut rng);
+    let tokens = corpus.num_tokens() as f64;
+    let engine = EngineHandle::native();
+    let iters = if quick { 2 } else { 4 };
+
+    let mut results = Vec::new();
+    for t in [8usize, 16, 32, 64] {
+        // response-inactive: burn-in only (eta stays zero => LDA conditional)
+        let mut cfg = ExperimentConfig::quick();
+        cfg.engine = EngineKind::Native;
+        cfg.model.topics = t;
+        cfg.train.sweeps = 3;
+        cfg.train.burnin = 2;
+        cfg.train.eta_every = 100; // never fires before the final solve
+        let mut seed = 0u64;
+        results.push(bench_throughput(
+            &format!("gibbs/lda-conditional T={t}"),
+            0,
+            iters,
+            tokens * cfg.train.sweeps as f64,
+            || {
+                seed += 1;
+                let mut r = Pcg64::seed_from_u64(seed);
+                train(&corpus, &cfg, &engine, &mut r).unwrap();
+            },
+        ));
+
+        // response-active: eta solved after sweep 1, margin active after
+        let mut cfg2 = cfg.clone();
+        cfg2.train.sweeps = 4;
+        cfg2.train.burnin = 1;
+        cfg2.train.eta_every = 1;
+        results.push(bench_throughput(
+            &format!("gibbs/slda-conditional T={t}"),
+            0,
+            iters,
+            tokens * cfg2.train.sweeps as f64,
+            || {
+                seed += 1;
+                let mut r = Pcg64::seed_from_u64(seed);
+                train(&corpus, &cfg2, &engine, &mut r).unwrap();
+            },
+        ));
+    }
+    println!(
+        "{}",
+        render_table(
+            &format!("Gibbs hot path (docs={} tokens={})", spec.docs, tokens as u64),
+            &results
+        )
+    );
+    Ok(())
+}

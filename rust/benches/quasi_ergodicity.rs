@@ -1,0 +1,46 @@
+//! Bench: regenerates paper Figs 1-3 as measured experiments (KS distances
+//! for pooling demos; Hungarian permutation gap + prediction agreement for
+//! the sLDA projection argument), with timings.
+
+use cfslda::bench_harness::{bench, quick_mode, render_table};
+use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::data::partition::train_test_split;
+use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::experiments::fig123;
+use cfslda::runtime::EngineHandle;
+use cfslda::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let n = if quick { 4_000 } else { 20_000 };
+    let seed = 20170710u64;
+
+    let mut results = Vec::new();
+    let mut f1 = None;
+    results.push(bench("fig1_unimodal_pooling", 0, if quick { 2 } else { 5 }, || {
+        f1 = Some(fig123::fig1_unimodal(3, n, seed));
+    }));
+    let mut f2 = None;
+    results.push(bench("fig2_multimodal_pooling", 0, if quick { 2 } else { 5 }, || {
+        f2 = Some(fig123::fig2_multimodal(n, seed));
+    }));
+
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let corpus = generate_corpus(&spec, &mut rng);
+    let ds = train_test_split(&corpus, spec.docs * 3 / 4, &mut rng);
+    let mut cfg = ExperimentConfig::quick();
+    cfg.seed = seed;
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = EngineHandle::from_kind(EngineKind::Auto, Path::new(&dir))?;
+    let mut f3 = None;
+    results.push(bench("fig3_slda_projection", 0, 1, || {
+        f3 = Some(fig123::fig3_projection(&ds, &cfg, &engine).unwrap());
+    }));
+
+    println!("{}", render_table("quasi-ergodicity demos (Figs 1-3)", &results));
+    println!("{}", fig123::render(&f1.unwrap(), &f2.unwrap(), &f3.unwrap()));
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Bench: engine-dispatch overhead — the AOT XLA artifacts (PJRT, via the
+//! service thread) vs the pure-rust native engine, per operation.
+//!
+//! Validates the architecture claim that engine calls are coarse enough
+//! for the service-thread serialization to be immaterial on the request
+//! path (calls happen once per eta step / prediction batch).
+
+use cfslda::bench_harness::{bench, quick_mode, render_table};
+use cfslda::runtime::native::NativeEngine;
+use cfslda::runtime::{EngineHandle, EngineImpl};
+use cfslda::util::rng::Pcg64;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    cfslda::util::logging::init();
+    let quick = quick_mode();
+    let iters = if quick { 5 } else { 20 };
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let dir = Path::new(&dir);
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_engines: SKIP (no artifacts; run `make artifacts`)");
+        return Ok(());
+    }
+    let xla = EngineHandle::xla(dir)?;
+    let native = NativeEngine::new();
+
+    let mut rng = Pcg64::seed_from_u64(1);
+    let (d, t, m) = (3000usize, 16usize, 4usize);
+    let zbar: Vec<f32> = (0..d * t).map(|_| rng.next_f32()).collect();
+    let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let eta: Vec<f64> = (0..t).map(|_| rng.next_gaussian()).collect();
+    let preds: Vec<Vec<f64>> =
+        (0..m).map(|_| (0..d).map(|_| rng.next_gaussian()).collect()).collect();
+    let w = vec![1.0f64; m];
+
+    let mut results = Vec::new();
+    results.push(bench("eta_solve/xla D=3000 T=16", 2, iters, || {
+        xla.eta_solve(&zbar, &y, t, 0.5, 0.0).unwrap();
+    }));
+    results.push(bench("eta_solve/native D=3000 T=16", 2, iters, || {
+        native.eta_solve(&zbar, &y, t, 0.5, 0.0).unwrap();
+    }));
+    results.push(bench("predict/xla B=3000", 2, iters, || {
+        xla.predict(&zbar, &eta, Some(&y), t).unwrap();
+    }));
+    results.push(bench("predict/native B=3000", 2, iters, || {
+        native.predict(&zbar, &eta, Some(&y), t).unwrap();
+    }));
+    results.push(bench("combine/xla M=4 B=3000", 2, iters, || {
+        xla.combine(&preds, &w).unwrap();
+    }));
+    results.push(bench("combine/native M=4 B=3000", 2, iters, || {
+        native.combine(&preds, &w).unwrap();
+    }));
+    // chunked path: two row buckets
+    let dbig = 6000usize;
+    let zbig: Vec<f32> = (0..dbig * t).map(|_| rng.next_f32()).collect();
+    let ybig: Vec<f64> = (0..dbig).map(|_| rng.next_gaussian()).collect();
+    results.push(bench("eta_solve/xla chunked D=6000", 1, iters.min(8), || {
+        xla.eta_solve(&zbig, &ybig, t, 0.5, 0.0).unwrap();
+    }));
+
+    println!("{}", render_table("engine ops: XLA artifacts vs native", &results));
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Benchmark harness (criterion substitute — criterion is not in the
+//! offline vendor set).
+//!
+//! Provides warmup + repeated timing with median/IQR reporting, and the
+//! table renderer shared by all `rust/benches/*.rs` targets (which are
+//! `harness = false` binaries). Benches accept `--quick` (fewer reps,
+//! smaller workloads) so `cargo bench` stays tractable on laptop-class
+//! hardware; full-scale parameters are documented per bench.
+
+use crate::util::stats::{median, quantile};
+use crate::util::timer::Stopwatch;
+
+/// One benchmark's timing samples.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+    /// Optional throughput denominator (e.g. tokens per iteration).
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        median(&self.samples_secs)
+    }
+
+    pub fn iqr(&self) -> (f64, f64) {
+        (quantile(&self.samples_secs, 0.25), quantile(&self.samples_secs, 0.75))
+    }
+
+    /// Work units per second at the median (when `work_per_iter` is set).
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / self.median())
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::new();
+        f();
+        samples.push(sw.elapsed_secs());
+    }
+    BenchResult { name: name.to_string(), samples_secs: samples, work_per_iter: None }
+}
+
+/// Like [`bench`] but records a throughput denominator.
+pub fn bench_throughput(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    work_per_iter: f64,
+    f: impl FnMut(),
+) -> BenchResult {
+    let mut r = bench(name, warmup, iters, f);
+    r.work_per_iter = Some(work_per_iter);
+    r
+}
+
+/// Render a results table.
+pub fn render_table(title: &str, results: &[BenchResult]) -> String {
+    let mut s = format!("== bench: {title} ==\n");
+    s.push_str(&format!(
+        "{:<36} {:>10} {:>10} {:>10} {:>6} {:>14}\n",
+        "case", "median(s)", "q25(s)", "q75(s)", "n", "throughput"
+    ));
+    for r in results {
+        let (q25, q75) = r.iqr();
+        let tp = match r.throughput() {
+            Some(t) if t >= 1e6 => format!("{:.2}M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("{:.2}k/s", t / 1e3),
+            Some(t) => format!("{t:.2}/s"),
+            None => "-".to_string(),
+        };
+        s.push_str(&format!(
+            "{:<36} {:>10.4} {:>10.4} {:>10.4} {:>6} {:>14}\n",
+            r.name,
+            r.median(),
+            q25,
+            q75,
+            r.samples_secs.len(),
+            tp
+        ));
+    }
+    s
+}
+
+/// Shared CLI convention for bench binaries: returns true when `--quick`
+/// was passed (reduced reps/workloads for CI-class machines).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var("CFSLDA_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut count = 0usize;
+        let r = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7); // warmup + iters
+        assert_eq!(r.samples_secs.len(), 5);
+        assert!(r.median() >= 0.0);
+        let (q25, q75) = r.iqr();
+        assert!(q25 <= r.median() && r.median() <= q75);
+    }
+
+    #[test]
+    fn throughput_reporting() {
+        let r = bench_throughput("sleepy", 0, 3, 1000.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        let t = r.throughput().unwrap();
+        assert!(t > 100_000.0 && t < 1_000_000.0, "t={t}");
+        let table = render_table("t", &[r]);
+        assert!(table.contains("sleepy"));
+        assert!(table.contains("k/s"));
+    }
+}

@@ -1,0 +1,405 @@
+//! CLI subcommands. Each returns the process exit code.
+
+use super::args::Args;
+use crate::config::json::{self, Value};
+use crate::config::schema::{EngineKind, ExperimentConfig, ResponseKind};
+use crate::data::loader;
+use crate::data::partition::train_test_split;
+use crate::data::stats::{corpus_stats, label_report};
+use crate::data::synthetic::{generate_corpus, SyntheticSpec};
+use crate::experiments::{fig123, fig5, runner};
+use crate::model::persist::{load_model, save_model};
+use crate::sampler::{gibbs_predict, gibbs_train};
+use crate::parallel::leader::{run_with_engine, Algorithm};
+use crate::runtime::EngineHandle;
+use crate::util::rng::Pcg64;
+use std::path::Path;
+
+pub const HELP: &str = "\
+cfslda — communication-free parallel supervised topic models
+
+USAGE: cfslda <command> [flags]
+
+COMMANDS:
+  gen-data    Generate a synthetic sLDA corpus
+              --out FILE.bow  --preset small|binary|mdna|imdb  [--docs N]
+              [--vocab N] [--topics N] [--seed S]
+  inspect     Corpus statistics + label histogram (Fig-5 style)
+              --data FILE.bow [--bins N]
+  run         Run one algorithm on a corpus
+              --data FILE.bow --algorithm non-parallel|naive|simple|weighted|median
+              [--train N] [--config CFG.json] [--engine auto|xla|native]
+              [--seed S] [--json OUT.json]
+  train       Train a single sLDA model and save it
+              --data FILE.bow --out MODEL.bin [--config CFG.json] [--seed S]
+  predict     Predict with a saved model
+              --model MODEL.bin --data FILE.bow [--json OUT.json]
+  top-words   Show each topic's highest-probability token ids
+              --model MODEL.bin [--k N]
+  experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
+              --fig 6|7 [--scale F] [--runs N] [--engine E] [--check]
+  figs        Reproduce illustration figures: --fig 1|2|3|5
+  help        This text
+
+ENVIRONMENT:
+  CFSLDA_ARTIFACTS  artifacts directory (default ./artifacts)
+  CFSLDA_LOG        error|warn|info|debug|trace
+";
+
+fn spec_from_args(a: &Args) -> anyhow::Result<SyntheticSpec> {
+    let mut spec = match a.get_or("preset", "small") {
+        "small" => SyntheticSpec::continuous_small(),
+        "binary" => SyntheticSpec::binary_small(),
+        "mdna" => SyntheticSpec::mdna(),
+        "imdb" => SyntheticSpec::imdb(),
+        other => anyhow::bail!("unknown preset '{other}'"),
+    };
+    if let Some(d) = a.get("docs") {
+        spec.docs = d.parse()?;
+    }
+    if let Some(v) = a.get("vocab") {
+        spec.vocab = v.parse()?;
+    }
+    if let Some(t) = a.get("topics") {
+        spec.topics = t.parse()?;
+    }
+    Ok(spec)
+}
+
+fn engine_from_args(a: &Args) -> anyhow::Result<EngineHandle> {
+    let kind = EngineKind::parse(a.get_or("engine", "auto"))?;
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    EngineHandle::from_kind(kind, Path::new(&dir))
+}
+
+pub fn cmd_gen_data(a: &Args) -> anyhow::Result<i32> {
+    let out = a.get("out").ok_or_else(|| anyhow::anyhow!("--out is required"))?;
+    let spec = spec_from_args(a)?;
+    let seed = a.get_u64("seed", 20170710)?;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let corpus = generate_corpus(&spec, &mut rng);
+    loader::save_bow(&corpus, Path::new(out))?;
+    let s = corpus_stats(&corpus);
+    println!(
+        "wrote {}: docs={} tokens={} vocab={} mean_len={:.1}",
+        out, s.docs, s.tokens, s.vocab, s.mean_doc_len
+    );
+    Ok(0)
+}
+
+pub fn cmd_inspect(a: &Args) -> anyhow::Result<i32> {
+    let data = a.get("data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let corpus = loader::load_bow(Path::new(data))?;
+    let s = corpus_stats(&corpus);
+    println!(
+        "docs={} tokens={} vocab={} doc_len[min/mean/max]={}/{:.1}/{}",
+        s.docs, s.tokens, s.vocab, s.min_doc_len, s.mean_doc_len, s.max_doc_len
+    );
+    let bins = a.get_usize("bins", 30)?;
+    println!("{}", label_report(&corpus, bins).render("label distribution"));
+    Ok(0)
+}
+
+pub fn cmd_run(a: &Args) -> anyhow::Result<i32> {
+    let data = a.get("data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let algo = Algorithm::parse(a.get_or("algorithm", "simple-average"))?;
+    let corpus = loader::load_bow(Path::new(data))?;
+    let mut cfg = match a.get("config") {
+        Some(p) => ExperimentConfig::load(p)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(e) = a.get("engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    cfg.seed = a.get_u64("seed", cfg.seed)?;
+    let n_train = a.get_usize("train", corpus.num_docs() * 3 / 4)?;
+    let mut rng = Pcg64::seed_from_u64(cfg.seed ^ 0x5911_7001);
+    let ds = train_test_split(&corpus, n_train, &mut rng);
+    let engine = engine_from_args(a)?;
+    let (out, _) = run_with_engine(algo, &ds, &cfg, &engine, false)?;
+    let binary = cfg.response == ResponseKind::Binary;
+    println!(
+        "{}: wall={:.2}s {} comm[{}]",
+        algo.name(),
+        out.wall_secs,
+        out.test_metrics.render(binary),
+        out.comm.render()
+    );
+    println!("phases: {}", out.timings.render());
+    if let Some(path) = a.get("json") {
+        let v = Value::object(vec![
+            ("algorithm", Value::String(algo.name().into())),
+            ("wall_secs", Value::Number(out.wall_secs)),
+            ("mse", Value::Number(out.test_metrics.mse)),
+            ("acc", Value::Number(out.test_metrics.acc)),
+            ("r2", Value::Number(out.test_metrics.r2)),
+            ("n_test", Value::Number(out.test_metrics.n as f64)),
+        ]);
+        std::fs::write(path, json::to_string_pretty(&v))?;
+        println!("metrics written to {path}");
+    }
+    Ok(0)
+}
+
+pub fn cmd_experiment(a: &Args) -> anyhow::Result<i32> {
+    let fig = a.get_usize("fig", 6)?;
+    let scale = a.get_f64("scale", 0.25)?;
+    let runs = a.get_usize("runs", 3)?;
+    let mut c = match fig {
+        6 => runner::Comparison::fig6(scale, runs),
+        7 => runner::Comparison::fig7(scale, runs),
+        other => anyhow::bail!("--fig must be 6 or 7, got {other}"),
+    };
+    if let Some(e) = a.get("engine") {
+        c.cfg.engine = EngineKind::parse(e)?;
+    }
+    if let Some(t) = a.get("topics") {
+        c.cfg.model.topics = t.parse()?;
+    }
+    if let Some(s) = a.get("sweeps") {
+        c.cfg.train.sweeps = s.parse()?;
+    }
+    let engine = engine_from_args(a)?;
+    let binary = fig == 7;
+    let (series, _) = runner::run_comparison(&c, &engine)?;
+    let title = if binary {
+        format!("Fig 7: reviews -> sentiment (docs={} runs={})", c.spec.docs, runs)
+    } else {
+        format!("Fig 6: MD&A -> EPS (docs={} runs={})", c.spec.docs, runs)
+    };
+    println!("{}", runner::render_table(&title, &series, binary));
+    if a.has("check") {
+        runner::check_fig_shape(&series, binary)?;
+        println!("shape check PASSED (naive worst; simple fast + accurate; weighted slowest parallel arm)");
+    }
+    Ok(0)
+}
+
+pub fn cmd_figs(a: &Args) -> anyhow::Result<i32> {
+    let fig = a.get_usize("fig", 0)?;
+    let seed = a.get_u64("seed", 20170710)?;
+    match fig {
+        1 => {
+            let d = fig123::fig1_unimodal(3, 20_000, seed);
+            println!(
+                "Fig 1 (unimodal pooling): KS(pooled,true)={:.4} mean-single={:.4}",
+                d.ks_pooled, d.ks_single_mean
+            );
+        }
+        2 => {
+            let d = fig123::fig2_multimodal(20_000, seed);
+            println!(
+                "Fig 2 (multimodal pooling): KS(pooled,true)={:.4} basins={:?}",
+                d.ks_pooled, d.basin_mass
+            );
+        }
+        3 => {
+            let spec = SyntheticSpec::continuous_small();
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let corpus = generate_corpus(&spec, &mut rng);
+            let ds = train_test_split(&corpus, spec.docs * 3 / 4, &mut rng);
+            let mut cfg = ExperimentConfig::quick();
+            cfg.seed = seed;
+            let engine = engine_from_args(a)?;
+            let r = fig123::fig3_projection(&ds, &cfg, &engine)?;
+            let f1 = fig123::fig1_unimodal(3, 5_000, seed);
+            let f2 = fig123::fig2_multimodal(5_000, seed);
+            println!("{}", fig123::render(&f1, &f2, &r));
+        }
+        5 => {
+            // Fig 5 is about the Experiment-I (MD&A/EPS) label distribution.
+            let spec = if a.get("preset").is_some() || a.get("docs").is_some() {
+                spec_from_args(a)?
+            } else {
+                SyntheticSpec::mdna()
+            };
+            let r = fig5::fig5_labels(&spec, a.get_usize("bins", 40)?, seed);
+            println!("{}", fig5::render(&r, &spec));
+        }
+        other => anyhow::bail!("--fig must be one of 1|2|3|5, got {other}"),
+    }
+    Ok(0)
+}
+
+pub fn cmd_train(a: &Args) -> anyhow::Result<i32> {
+    let data = a.get("data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let out = a.get("out").ok_or_else(|| anyhow::anyhow!("--out is required"))?;
+    let corpus = loader::load_bow(Path::new(data))?;
+    let mut cfg = match a.get("config") {
+        Some(p) => ExperimentConfig::load(p)?,
+        None => ExperimentConfig::default(),
+    };
+    cfg.seed = a.get_u64("seed", cfg.seed)?;
+    if let Some(e) = a.get("engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    crate::config::validate::validate(&cfg)?;
+    let engine = engine_from_args(a)?;
+    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let trained = gibbs_train::train(&corpus, &cfg, &engine, &mut rng)?;
+    save_model(&trained.model, Path::new(out))?;
+    println!(
+        "trained T={} on {} docs ({} tokens, {} sweeps): in-sample mse={:.4} acc={:.4}",
+        trained.model.t,
+        corpus.num_docs(),
+        corpus.num_tokens(),
+        cfg.train.sweeps,
+        trained.model.train_mse,
+        trained.model.train_acc,
+    );
+    println!("model saved to {out}");
+    Ok(0)
+}
+
+pub fn cmd_predict(a: &Args) -> anyhow::Result<i32> {
+    let model_path = a.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let data = a.get("data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
+    let model = load_model(Path::new(model_path))?;
+    let corpus = loader::load_bow(Path::new(data))?;
+    anyhow::ensure!(
+        corpus.vocab_size <= model.w,
+        "corpus vocab {} exceeds model vocab {}",
+        corpus.vocab_size,
+        model.w
+    );
+    let cfg = ExperimentConfig::default();
+    let engine = engine_from_args(a)?;
+    let mut rng = Pcg64::seed_from_u64(a.get_u64("seed", 20170710)?);
+    let ys = corpus.responses();
+    let (pred, _) = gibbs_predict::predict_corpus(
+        &model, &corpus, &cfg.train, &engine, Some(&ys), &mut rng,
+    )?;
+    println!("predicted {} documents: mse={:.4} acc={:.4}", pred.yhat.len(), pred.mse, pred.acc);
+    if let Some(path) = a.get("json") {
+        let v = Value::object(vec![
+            ("yhat", Value::from_f64_slice(&pred.yhat)),
+            ("mse", Value::Number(pred.mse)),
+            ("acc", Value::Number(pred.acc)),
+        ]);
+        std::fs::write(path, json::to_string_pretty(&v))?;
+        println!("predictions written to {path}");
+    } else {
+        for (i, y) in pred.yhat.iter().take(10).enumerate() {
+            println!("  doc {i}: {y:.4}");
+        }
+        if pred.yhat.len() > 10 {
+            println!("  ... ({} more; use --json for all)", pred.yhat.len() - 10);
+        }
+    }
+    Ok(0)
+}
+
+pub fn cmd_top_words(a: &Args) -> anyhow::Result<i32> {
+    let model_path = a.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let k = a.get_usize("k", 10)?;
+    let model = load_model(Path::new(model_path))?;
+    println!("model: T={} W={} rho={:.4} |eta|={:.3}", model.t, model.w, model.rho,
+             model.eta.iter().map(|e| e * e).sum::<f64>().sqrt());
+    for t in 0..model.t {
+        let tops = model.top_words(t, k);
+        let rendered: Vec<String> = tops
+            .iter()
+            .map(|&w| format!("{w}:{:.4}", model.phi[w as usize * model.t + t]))
+            .collect();
+        println!("topic {t:>3} (eta {:+.3}): {}", model.eta[t], rendered.join(" "));
+    }
+    Ok(0)
+}
+
+/// Dispatch. Returns the exit code.
+pub fn dispatch(args: Args) -> anyhow::Result<i32> {
+    match args.command.as_deref() {
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("run") => cmd_run(&args),
+        Some("train") => cmd_train(&args),
+        Some("predict") => cmd_predict(&args),
+        Some("top-words") => cmd_top_words(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("figs") => cmd_figs(&args),
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(0)
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    fn tmp(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_cli_{}_{name}", std::process::id()));
+        p.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn gen_inspect_run_roundtrip() {
+        let bow = tmp("cli.bow");
+        let metrics = tmp("cli.json");
+        let rc = cmd_gen_data(&parse(&format!(
+            "gen-data --out {bow} --preset small --docs 160 --seed 5"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        assert_eq!(cmd_inspect(&parse(&format!("inspect --data {bow} --bins 10"))).unwrap(), 0);
+        let rc = cmd_run(&parse(&format!(
+            "run --data {bow} --algorithm simple --train 120 --engine native --json {metrics}"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        let v = json::parse(&std::fs::read_to_string(&metrics).unwrap()).unwrap();
+        assert_eq!(v.get("algorithm").unwrap().as_str(), Some("simple-average"));
+        assert!(v.get("mse").unwrap().as_f64().unwrap().is_finite());
+        std::fs::remove_file(bow).ok();
+        std::fs::remove_file(metrics).ok();
+    }
+
+    #[test]
+    fn train_predict_topwords_workflow() {
+        let bow = tmp("wf.bow");
+        let model = tmp("wf.model");
+        let preds = tmp("wf_preds.json");
+        cmd_gen_data(&parse(&format!(
+            "gen-data --out {bow} --preset small --docs 150 --seed 9"
+        )))
+        .unwrap();
+        let rc = cmd_train(&parse(&format!(
+            "train --data {bow} --out {model} --engine native --seed 9"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        let rc = cmd_predict(&parse(&format!(
+            "predict --model {model} --data {bow} --engine native --json {preds}"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        let v = json::parse(&std::fs::read_to_string(&preds).unwrap()).unwrap();
+        assert_eq!(v.get("yhat").unwrap().as_array().unwrap().len(), 150);
+        assert_eq!(cmd_top_words(&parse(&format!("top-words --model {model} --k 3"))).unwrap(), 0);
+        for f in [bow, model, preds] {
+            std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn dispatch_help_and_unknown() {
+        assert_eq!(dispatch(parse("help")).unwrap(), 0);
+        assert_eq!(dispatch(Args::default()).unwrap(), 0);
+        assert_eq!(dispatch(parse("bogus")).unwrap(), 2);
+    }
+
+    #[test]
+    fn figs_validation() {
+        assert!(cmd_figs(&parse("figs --fig 9")).is_err());
+    }
+}

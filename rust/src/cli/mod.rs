@@ -1,0 +1,5 @@
+//! Command-line interface (hand-rolled: clap is not in the offline vendor
+//! set). `cfslda <command> [--flag value ...]`; see `cfslda help`.
+
+pub mod args;
+pub mod commands;

@@ -1,0 +1,15 @@
+//! The paper's combination stage (§III-C): turn M per-shard local results
+//! into one global prediction.
+//!
+//! * [`CombineRule::Simple`] — arithmetic average of local predictions (eq. 7).
+//! * [`CombineRule::Weighted`] — weighted average (eqs. 8-9); weights are the
+//!   inverse training-set MSE (continuous) or training-set accuracy (binary),
+//!   computed by predicting the **whole training set** with each local model
+//!   (this is exactly why the paper measures Weighted Average slower than
+//!   Non-parallel).
+//! * Naive Combination is not a prediction combiner — it pools topic samples
+//!   before any prediction — and lives in `parallel::leader`.
+
+pub mod rules;
+
+pub use rules::{combine_predictions, weights, CombineRule, WeightScheme};

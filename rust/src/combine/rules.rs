@@ -1,0 +1,178 @@
+//! Combination rules (paper eqs. 6-9).
+
+use crate::config::schema::ResponseKind;
+use crate::runtime::EngineHandle;
+
+/// How Weighted Average derives its weights (paper §III-C-d).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightScheme {
+    /// w_m ∝ 1 / MSE_train^(m) — continuous responses (eq. 8).
+    InverseMse,
+    /// w_m ∝ accuracy_train^(m) — binary responses.
+    Accuracy,
+    /// Equal weights (makes Weighted degenerate to Simple; ablation arm).
+    Uniform,
+}
+
+impl WeightScheme {
+    /// The paper's default scheme for a response kind.
+    pub fn for_response(r: ResponseKind) -> WeightScheme {
+        match r {
+            ResponseKind::Continuous => WeightScheme::InverseMse,
+            ResponseKind::Binary => WeightScheme::Accuracy,
+        }
+    }
+}
+
+/// Prediction-space combination rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombineRule {
+    /// Simple Average (eq. 7).
+    Simple,
+    /// Weighted Average (eqs. 8-9).
+    Weighted(WeightScheme),
+    /// Per-document median of the local predictions — the robust
+    /// combination suggested by the median-posterior line of work the
+    /// paper builds on (Minsker et al. 2014, paper ref. [5]). Extension
+    /// beyond the paper: immune to a minority of corrupted shards.
+    Median,
+}
+
+/// Compute unnormalized weights from per-shard training prediction quality.
+/// `train_mse[m]` / `train_acc[m]` come from predicting the *whole* training
+/// set with shard m's local model.
+pub fn weights(
+    rule: CombineRule,
+    train_mse: &[f64],
+    train_acc: &[f64],
+) -> anyhow::Result<Vec<f64>> {
+    let m = train_mse.len().max(train_acc.len());
+    anyhow::ensure!(m > 0, "no shards to weight");
+    let w = match rule {
+        CombineRule::Simple
+        | CombineRule::Median
+        | CombineRule::Weighted(WeightScheme::Uniform) => vec![1.0; m],
+        CombineRule::Weighted(WeightScheme::InverseMse) => {
+            anyhow::ensure!(train_mse.len() == m, "missing train MSEs");
+            train_mse
+                .iter()
+                .map(|&mse| {
+                    anyhow::ensure!(mse.is_finite() && mse >= 0.0, "bad train MSE {mse}");
+                    Ok(1.0 / mse.max(1e-12))
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?
+        }
+        CombineRule::Weighted(WeightScheme::Accuracy) => {
+            anyhow::ensure!(train_acc.len() == m, "missing train accuracies");
+            train_acc
+                .iter()
+                .map(|&acc| {
+                    anyhow::ensure!((0.0..=1.0).contains(&acc), "bad train accuracy {acc}");
+                    Ok(acc.max(1e-12))
+                })
+                .collect::<anyhow::Result<Vec<f64>>>()?
+        }
+    };
+    Ok(w)
+}
+
+/// Combine local predictions into the global prediction (eq. 6) via the
+/// engine (AOT `combine_M*` artifact on the XLA path).
+pub fn combine_predictions(
+    engine: &EngineHandle,
+    local_preds: &[Vec<f64>],
+    w: &[f64],
+) -> anyhow::Result<Vec<f64>> {
+    engine.combine(local_preds, w)
+}
+
+/// Per-document median combination (the [`CombineRule::Median`] rule).
+/// Runs coordinator-side: an order statistic over M <= 16 values per
+/// document is not worth an XLA round trip.
+pub fn combine_median(local_preds: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+    anyhow::ensure!(!local_preds.is_empty(), "no predictions to combine");
+    let b = local_preds[0].len();
+    anyhow::ensure!(local_preds.iter().all(|p| p.len() == b), "ragged prediction rows");
+    let m = local_preds.len();
+    let mut buf = vec![0.0f64; m];
+    let mut out = Vec::with_capacity(b);
+    for j in 0..b {
+        for (i, p) in local_preds.iter().enumerate() {
+            buf[i] = p[j];
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.push(if m % 2 == 1 {
+            buf[m / 2]
+        } else {
+            0.5 * (buf[m / 2 - 1] + buf[m / 2])
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_is_uniform() {
+        let w = weights(CombineRule::Simple, &[0.1, 0.2], &[]).unwrap();
+        assert_eq!(w, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn inverse_mse_prefers_better_shards() {
+        let w = weights(CombineRule::Weighted(WeightScheme::InverseMse), &[0.1, 0.4], &[]).unwrap();
+        assert!((w[0] / w[1] - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_weights() {
+        let w = weights(CombineRule::Weighted(WeightScheme::Accuracy), &[], &[0.9, 0.6]).unwrap();
+        assert!((w[0] / w[1] - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_stats() {
+        assert!(weights(CombineRule::Weighted(WeightScheme::InverseMse), &[f64::NAN], &[]).is_err());
+        assert!(weights(CombineRule::Weighted(WeightScheme::Accuracy), &[], &[1.5]).is_err());
+        assert!(weights(CombineRule::Simple, &[], &[]).is_err());
+    }
+
+    #[test]
+    fn combine_through_native_engine() {
+        let engine = EngineHandle::native();
+        let preds = vec![vec![1.0, 3.0], vec![3.0, 5.0]];
+        // simple average
+        let w = weights(CombineRule::Simple, &[0.0, 0.0], &[]).unwrap();
+        let out = combine_predictions(&engine, &preds, &w).unwrap();
+        assert_eq!(out, vec![2.0, 4.0]);
+        // weighted: shard 0 has mse 0.1, shard 1 mse 0.3 -> w = (10, 10/3)
+        let w = weights(CombineRule::Weighted(WeightScheme::InverseMse), &[0.1, 0.3], &[]).unwrap();
+        let out = combine_predictions(&engine, &preds, &w).unwrap();
+        let w0 = 0.75;
+        assert!((out[0] - (w0 * 1.0 + 0.25 * 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_combination() {
+        // odd M: exact middle; robust to one wild shard
+        let preds = vec![vec![1.0, 10.0], vec![2.0, 11.0], vec![999.0, -999.0]];
+        let out = combine_median(&preds).unwrap();
+        assert_eq!(out, vec![2.0, 10.0]);
+        // even M: midpoint of the two central values
+        let preds = vec![vec![1.0], vec![2.0], vec![3.0], vec![100.0]];
+        assert_eq!(combine_median(&preds).unwrap(), vec![2.5]);
+        // median weights are uniform (only used for accounting)
+        let w = weights(CombineRule::Median, &[0.1], &[]).unwrap();
+        assert_eq!(w, vec![1.0]);
+        assert!(combine_median(&[]).is_err());
+    }
+
+    #[test]
+    fn scheme_for_response() {
+        use crate::config::schema::ResponseKind::*;
+        assert_eq!(WeightScheme::for_response(Continuous), WeightScheme::InverseMse);
+        assert_eq!(WeightScheme::for_response(Binary), WeightScheme::Accuracy);
+    }
+}

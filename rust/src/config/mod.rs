@@ -1,0 +1,12 @@
+//! Configuration system: a hand-rolled JSON parser/serializer (`json`), the
+//! typed config schema (`schema`), and validation (`validate`).
+//!
+//! JSON is the single interchange format of the project: artifact manifests
+//! written by `python/compile/aot.py`, experiment configs, and the metrics
+//! dumps emitted by the experiment runners. serde is not available in the
+//! offline vendor set, so `json::Value` + explicit `from_value`/`to_value`
+//! mappings play its role.
+
+pub mod json;
+pub mod schema;
+pub mod validate;

@@ -1,0 +1,337 @@
+//! Typed configuration schema + JSON (de)serialization.
+//!
+//! One [`ExperimentConfig`] drives everything: model hyperparameters (the
+//! paper's alpha, beta, rho, sigma, mu), sampler schedule, parallel topology
+//! (M shards — the paper uses 4), engine selection (AOT XLA artifacts vs the
+//! native fallback), and the RNG seed. `ExperimentConfig::quick()` is tuned
+//! for tests/examples; `fig6()`/`fig7()` match the paper's two experiments.
+
+use super::json::{self, Value};
+use anyhow::{bail, Context};
+
+/// Which numerical engine executes the dense sLDA algebra.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT-compiled HLO artifacts through PJRT (the production path).
+    Xla,
+    /// Pure-rust reference implementation (fallback + test oracle).
+    Native,
+    /// Xla when `artifacts/manifest.json` exists, else Native.
+    Auto,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "xla" => EngineKind::Xla,
+            "native" => EngineKind::Native,
+            "auto" => EngineKind::Auto,
+            other => bail!("unknown engine '{other}' (expected xla|native|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Xla => "xla",
+            EngineKind::Native => "native",
+            EngineKind::Auto => "auto",
+        }
+    }
+}
+
+/// Response type of the supervised signal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseKind {
+    /// Gaussian response (paper Experiment I: earnings per share). Metric: MSE.
+    Continuous,
+    /// Binary response via the Gaussian linear-probability reading of the
+    /// paper's logit-normal note (Experiment II: sentiment). Metric: accuracy
+    /// at the 0.5 threshold; Weighted Average weights use train accuracy.
+    Binary,
+}
+
+impl ResponseKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "continuous" => ResponseKind::Continuous,
+            "binary" => ResponseKind::Binary,
+            other => bail!("unknown response kind '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResponseKind::Continuous => "continuous",
+            ResponseKind::Binary => "binary",
+        }
+    }
+}
+
+/// sLDA hyperparameters (paper §III-B notation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Number of topics T.
+    pub topics: usize,
+    /// Symmetric Dirichlet prior on per-document topic proportions.
+    pub alpha: f64,
+    /// Symmetric Dirichlet prior on per-topic word distributions.
+    pub beta: f64,
+    /// Response variance rho (fixed unless `learn_rho`).
+    pub rho: f64,
+    /// Re-estimate rho from residuals at each eta step.
+    pub learn_rho: bool,
+    /// Gaussian prior variance sigma on eta coefficients.
+    pub sigma: f64,
+    /// Gaussian prior mean mu on eta coefficients.
+    pub mu: f64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            topics: 16,
+            alpha: 0.5,
+            beta: 0.1,
+            rho: 0.5,
+            learn_rho: true,
+            sigma: 10.0,
+            mu: 0.0,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Ridge strength implied by the priors: lambda = rho / sigma (eq. 2).
+    pub fn lambda(&self, rho: f64) -> f64 {
+        rho / self.sigma
+    }
+}
+
+/// Gibbs/stochastic-EM schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// Total training Gibbs sweeps over the shard's tokens.
+    pub sweeps: usize,
+    /// Sweeps before the first eta update.
+    pub burnin: usize,
+    /// Re-optimize eta every this many sweeps after burn-in.
+    pub eta_every: usize,
+    /// Gibbs sweeps per test document at prediction time.
+    pub predict_sweeps: usize,
+    /// Prediction burn-in sweeps (samples before this are discarded when
+    /// averaging the empirical topic distribution — Nguyen et al. 2014).
+    pub predict_burnin: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { sweeps: 100, burnin: 10, eta_every: 5, predict_sweeps: 20, predict_burnin: 5 }
+    }
+}
+
+/// Parallel topology.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParallelConfig {
+    /// Number of training shards M (the paper uses 4).
+    pub shards: usize,
+    /// Worker threads (defaults to `shards`).
+    pub threads: usize,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig { shards: 4, threads: 4 }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub parallel: ParallelConfig,
+    pub engine: EngineKind,
+    pub response: ResponseKind,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: ModelConfig::default(),
+            train: TrainConfig::default(),
+            parallel: ParallelConfig::default(),
+            engine: EngineKind::Auto,
+            response: ResponseKind::Continuous,
+            seed: 20170710,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Small, fast configuration for tests and the quickstart example.
+    pub fn quick() -> Self {
+        let mut c = Self::default();
+        c.model.topics = 8;
+        c.train = TrainConfig { sweeps: 30, burnin: 5, eta_every: 5, predict_sweeps: 10, predict_burnin: 3 };
+        c
+    }
+
+    /// Paper Experiment I (MD&A -> EPS) shape: continuous response, M=4.
+    pub fn fig6() -> Self {
+        let mut c = Self::default();
+        c.model.topics = 16;
+        c.response = ResponseKind::Continuous;
+        c.train = TrainConfig { sweeps: 100, burnin: 10, eta_every: 5, predict_sweeps: 20, predict_burnin: 5 };
+        c
+    }
+
+    /// Paper Experiment II (reviews -> sentiment) shape: binary response, M=4.
+    pub fn fig7() -> Self {
+        let mut c = Self::fig6();
+        c.response = ResponseKind::Binary;
+        c
+    }
+
+    // ---- JSON mapping (manual: no serde in the vendor set) ----
+
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("model", Value::object(vec![
+                ("topics", Value::Number(self.model.topics as f64)),
+                ("alpha", Value::Number(self.model.alpha)),
+                ("beta", Value::Number(self.model.beta)),
+                ("rho", Value::Number(self.model.rho)),
+                ("learn_rho", Value::Bool(self.model.learn_rho)),
+                ("sigma", Value::Number(self.model.sigma)),
+                ("mu", Value::Number(self.model.mu)),
+            ])),
+            ("train", Value::object(vec![
+                ("sweeps", Value::Number(self.train.sweeps as f64)),
+                ("burnin", Value::Number(self.train.burnin as f64)),
+                ("eta_every", Value::Number(self.train.eta_every as f64)),
+                ("predict_sweeps", Value::Number(self.train.predict_sweeps as f64)),
+                ("predict_burnin", Value::Number(self.train.predict_burnin as f64)),
+            ])),
+            ("parallel", Value::object(vec![
+                ("shards", Value::Number(self.parallel.shards as f64)),
+                ("threads", Value::Number(self.parallel.threads as f64)),
+            ])),
+            ("engine", Value::String(self.engine.name().to_string())),
+            ("response", Value::String(self.response.name().to_string())),
+            ("seed", Value::Number(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> anyhow::Result<Self> {
+        let mut c = ExperimentConfig::default();
+        if let Some(m) = v.get("model") {
+            read_usize(m, "topics", &mut c.model.topics)?;
+            read_f64(m, "alpha", &mut c.model.alpha)?;
+            read_f64(m, "beta", &mut c.model.beta)?;
+            read_f64(m, "rho", &mut c.model.rho)?;
+            read_bool(m, "learn_rho", &mut c.model.learn_rho)?;
+            read_f64(m, "sigma", &mut c.model.sigma)?;
+            read_f64(m, "mu", &mut c.model.mu)?;
+        }
+        if let Some(t) = v.get("train") {
+            read_usize(t, "sweeps", &mut c.train.sweeps)?;
+            read_usize(t, "burnin", &mut c.train.burnin)?;
+            read_usize(t, "eta_every", &mut c.train.eta_every)?;
+            read_usize(t, "predict_sweeps", &mut c.train.predict_sweeps)?;
+            read_usize(t, "predict_burnin", &mut c.train.predict_burnin)?;
+        }
+        if let Some(p) = v.get("parallel") {
+            read_usize(p, "shards", &mut c.parallel.shards)?;
+            read_usize(p, "threads", &mut c.parallel.threads)?;
+        }
+        if let Some(e) = v.get("engine") {
+            c.engine = EngineKind::parse(e.as_str().context("engine must be a string")?)?;
+        }
+        if let Some(r) = v.get("response") {
+            c.response = ResponseKind::parse(r.as_str().context("response must be a string")?)?;
+        }
+        if let Some(s) = v.get("seed") {
+            c.seed = s.as_i64().context("seed must be an integer")? as u64;
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> String {
+        json::to_string_pretty(&self.to_value())
+    }
+
+    pub fn from_json(s: &str) -> anyhow::Result<Self> {
+        let v = json::parse(s).context("parsing experiment config")?;
+        Self::from_value(&v)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_json(&text)
+    }
+}
+
+fn read_usize(v: &Value, key: &str, dst: &mut usize) -> anyhow::Result<()> {
+    if let Some(x) = v.get(key) {
+        *dst = x.as_usize().with_context(|| format!("'{key}' must be a non-negative integer"))?;
+    }
+    Ok(())
+}
+
+fn read_f64(v: &Value, key: &str, dst: &mut f64) -> anyhow::Result<()> {
+    if let Some(x) = v.get(key) {
+        *dst = x.as_f64().with_context(|| format!("'{key}' must be a number"))?;
+    }
+    Ok(())
+}
+
+fn read_bool(v: &Value, key: &str, dst: &mut bool) -> anyhow::Result<()> {
+    if let Some(x) = v.get(key) {
+        *dst = x.as_bool().with_context(|| format!("'{key}' must be a bool"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExperimentConfig::fig7();
+        c.model.topics = 24;
+        c.seed = 99;
+        c.engine = EngineKind::Native;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let c = ExperimentConfig::from_json(r#"{"model": {"topics": 5}}"#).unwrap();
+        assert_eq!(c.model.topics, 5);
+        assert_eq!(c.model.alpha, ModelConfig::default().alpha);
+        assert_eq!(c.parallel.shards, 4);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"model": {"topics": -2}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"engine": "gpu"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"response": 7}"#).is_err());
+    }
+
+    #[test]
+    fn lambda_is_rho_over_sigma() {
+        let m = ModelConfig { rho: 2.0, sigma: 4.0, ..Default::default() };
+        assert!((m.lambda(2.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presets_are_sane() {
+        assert_eq!(ExperimentConfig::fig6().response, ResponseKind::Continuous);
+        assert_eq!(ExperimentConfig::fig7().response, ResponseKind::Binary);
+        assert!(ExperimentConfig::quick().train.sweeps < 50);
+    }
+}

@@ -1,0 +1,116 @@
+//! Config validation: fail fast with actionable messages before a run.
+
+use super::schema::ExperimentConfig;
+use anyhow::bail;
+
+/// Validate an experiment config against the model/sampler invariants and
+/// the AOT artifact shape buckets.
+pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
+    let m = &c.model;
+    if m.topics < 2 {
+        bail!("model.topics must be >= 2 (got {})", m.topics);
+    }
+    if m.topics > 64 {
+        bail!(
+            "model.topics = {} exceeds the largest AOT topic bucket (64); \
+             re-run `make artifacts` with --topics including a larger bucket \
+             or use engine=native",
+            m.topics
+        );
+    }
+    for (name, v) in [("alpha", m.alpha), ("beta", m.beta), ("rho", m.rho), ("sigma", m.sigma)] {
+        if !(v.is_finite() && v > 0.0) {
+            bail!("model.{name} must be finite and > 0 (got {v})");
+        }
+    }
+    if !m.mu.is_finite() {
+        bail!("model.mu must be finite");
+    }
+    let t = &c.train;
+    if t.sweeps == 0 {
+        bail!("train.sweeps must be >= 1");
+    }
+    if t.burnin >= t.sweeps {
+        bail!("train.burnin ({}) must be < train.sweeps ({})", t.burnin, t.sweeps);
+    }
+    if t.eta_every == 0 {
+        bail!("train.eta_every must be >= 1");
+    }
+    if t.predict_sweeps == 0 {
+        bail!("train.predict_sweeps must be >= 1");
+    }
+    if t.predict_burnin >= t.predict_sweeps {
+        bail!(
+            "train.predict_burnin ({}) must be < train.predict_sweeps ({})",
+            t.predict_burnin, t.predict_sweeps
+        );
+    }
+    let p = &c.parallel;
+    if p.shards == 0 || p.shards > 16 {
+        bail!("parallel.shards must be in 1..=16 (AOT shard bucket), got {}", p.shards);
+    }
+    if p.threads == 0 {
+        bail!("parallel.threads must be >= 1");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ExperimentConfig;
+
+    #[test]
+    fn default_configs_valid() {
+        validate(&ExperimentConfig::default()).unwrap();
+        validate(&ExperimentConfig::quick()).unwrap();
+        validate(&ExperimentConfig::fig6()).unwrap();
+        validate(&ExperimentConfig::fig7()).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_topics() {
+        let mut c = ExperimentConfig::quick();
+        c.model.topics = 1;
+        assert!(validate(&c).is_err());
+        c.model.topics = 100;
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("bucket"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_hypers() {
+        for f in [
+            |c: &mut ExperimentConfig| c.model.alpha = 0.0,
+            |c: &mut ExperimentConfig| c.model.beta = -1.0,
+            |c: &mut ExperimentConfig| c.model.rho = f64::NAN,
+            |c: &mut ExperimentConfig| c.model.sigma = f64::INFINITY,
+        ] {
+            let mut c = ExperimentConfig::quick();
+            f(&mut c);
+            assert!(validate(&c).is_err());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_schedule() {
+        let mut c = ExperimentConfig::quick();
+        c.train.burnin = c.train.sweeps;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.train.eta_every = 0;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.train.predict_burnin = c.train.predict_sweeps;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_topology() {
+        let mut c = ExperimentConfig::quick();
+        c.parallel.shards = 0;
+        assert!(validate(&c).is_err());
+        c.parallel.shards = 17;
+        assert!(validate(&c).is_err());
+    }
+}

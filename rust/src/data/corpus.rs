@@ -1,0 +1,132 @@
+//! Bag-of-words corpus with per-document responses.
+
+/// One document: token ids (with repetition, order irrelevant to the model)
+/// plus the supervised response y_d (EPS, sentiment, ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Document {
+    pub tokens: Vec<u32>,
+    pub response: f64,
+}
+
+impl Document {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// A corpus: documents + the vocabulary size they are indexed against.
+#[derive(Clone, Debug, Default)]
+pub struct Corpus {
+    pub docs: Vec<Document>,
+    pub vocab_size: usize,
+}
+
+impl Corpus {
+    pub fn new(docs: Vec<Document>, vocab_size: usize) -> Self {
+        debug_assert!(docs.iter().flat_map(|d| &d.tokens).all(|&w| (w as usize) < vocab_size));
+        Corpus { docs, vocab_size }
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.docs.iter().map(|d| d.len()).sum()
+    }
+
+    pub fn responses(&self) -> Vec<f64> {
+        self.docs.iter().map(|d| d.response).collect()
+    }
+
+    /// Sub-corpus view by document indices (clones the selected docs).
+    pub fn select(&self, idx: &[usize]) -> Corpus {
+        Corpus {
+            docs: idx.iter().map(|&i| self.docs[i].clone()).collect(),
+            vocab_size: self.vocab_size,
+        }
+    }
+
+    /// Structural sanity check (token ids within vocab, no empty docs).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, d) in self.docs.iter().enumerate() {
+            if d.is_empty() {
+                anyhow::bail!("document {i} is empty");
+            }
+            if let Some(&w) = d.tokens.iter().find(|&&w| w as usize >= self.vocab_size) {
+                anyhow::bail!("document {i} has token id {w} >= vocab size {}", self.vocab_size);
+            }
+            if !d.response.is_finite() {
+                anyhow::bail!("document {i} has non-finite response {}", d.response);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Train/test split of a corpus.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub train: Corpus,
+    pub test: Corpus,
+}
+
+impl Dataset {
+    pub fn vocab_size(&self) -> usize {
+        self.train.vocab_size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini() -> Corpus {
+        Corpus::new(
+            vec![
+                Document { tokens: vec![0, 1, 1, 2], response: 0.5 },
+                Document { tokens: vec![2, 2], response: -1.0 },
+                Document { tokens: vec![0], response: 2.0 },
+            ],
+            3,
+        )
+    }
+
+    #[test]
+    fn counts() {
+        let c = mini();
+        assert_eq!(c.num_docs(), 3);
+        assert_eq!(c.num_tokens(), 7);
+        assert_eq!(c.responses(), vec![0.5, -1.0, 2.0]);
+    }
+
+    #[test]
+    fn select_preserves_order() {
+        let c = mini();
+        let s = c.select(&[2, 0]);
+        assert_eq!(s.num_docs(), 2);
+        assert_eq!(s.docs[0].response, 2.0);
+        assert_eq!(s.docs[1].response, 0.5);
+        assert_eq!(s.vocab_size, 3);
+    }
+
+    #[test]
+    fn validate_catches_problems() {
+        let mut c = mini();
+        c.validate().unwrap();
+        c.docs[1].tokens.clear();
+        assert!(c.validate().is_err());
+
+        let mut c = mini();
+        c.docs[0].tokens.push(99);
+        assert!(c.validate().is_err());
+
+        let mut c = mini();
+        c.docs[2].response = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+}

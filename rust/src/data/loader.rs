@@ -1,0 +1,230 @@
+//! Corpus I/O.
+//!
+//! Two on-disk formats:
+//!
+//! * **JSONL** — one `{"text": "...", "response": 1.23}` object per line
+//!   (raw-text path: tokenized + vocabulary-pruned on load), or
+//!   `{"tokens": [0, 4, 4], "response": 1.23}` (pre-encoded path).
+//! * **BoW** — a compact whitespace format for generated corpora:
+//!   header `#cfslda-bow vocab=<V>`, then per line `y w1 w2 w3 ...`.
+
+use super::corpus::{Corpus, Document};
+use super::tokenizer::{tokenize, TokenizerConfig};
+use super::vocab::Vocab;
+use crate::config::json;
+use anyhow::{bail, Context};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Load a raw-text JSONL corpus: builds a pruned vocabulary (df floor as in
+/// the paper: fraction of documents), encodes, drops docs that end up empty.
+pub fn load_text_jsonl(
+    path: &Path,
+    tok_cfg: &TokenizerConfig,
+    min_df_frac: f64,
+    max_df_frac: f64,
+) -> anyhow::Result<(Corpus, Vocab)> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut texts: Vec<Vec<String>> = Vec::new();
+    let mut responses: Vec<f64> = Vec::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(&line)
+            .with_context(|| format!("{path:?}:{} invalid json", lineno + 1))?;
+        let text = v
+            .get("text")
+            .and_then(|t| t.as_str())
+            .with_context(|| format!("{path:?}:{} missing 'text'", lineno + 1))?;
+        let y = v
+            .get("response")
+            .and_then(|r| r.as_f64())
+            .with_context(|| format!("{path:?}:{} missing 'response'", lineno + 1))?;
+        texts.push(tokenize(text, tok_cfg));
+        responses.push(y);
+    }
+    let vocab = Vocab::build_pruned(&texts, min_df_frac, max_df_frac);
+    if vocab.is_empty() {
+        bail!("vocabulary is empty after pruning (min_df_frac={min_df_frac})");
+    }
+    let mut docs = Vec::new();
+    for (toks, y) in texts.iter().zip(&responses) {
+        let enc = vocab.encode(toks);
+        if !enc.is_empty() {
+            docs.push(Document { tokens: enc, response: *y });
+        }
+    }
+    Ok((Corpus::new(docs, vocab.len()), vocab))
+}
+
+/// Load a pre-encoded JSONL corpus (`tokens` arrays). `vocab_size` is taken
+/// as 1 + max token id unless given in a leading `{"vocab_size": V}` line.
+pub fn load_encoded_jsonl(path: &Path) -> anyhow::Result<Corpus> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut docs = Vec::new();
+    let mut vocab_size: usize = 0;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(&line)
+            .with_context(|| format!("{path:?}:{} invalid json", lineno + 1))?;
+        if let Some(vs) = v.get("vocab_size").and_then(|x| x.as_usize()) {
+            vocab_size = vocab_size.max(vs);
+            continue;
+        }
+        let toks = v
+            .get("tokens")
+            .and_then(|t| t.as_array())
+            .with_context(|| format!("{path:?}:{} missing 'tokens'", lineno + 1))?;
+        let tokens: Option<Vec<u32>> =
+            toks.iter().map(|t| t.as_usize().map(|u| u as u32)).collect();
+        let tokens = tokens.with_context(|| format!("{path:?}:{} bad token ids", lineno + 1))?;
+        let y = v
+            .get("response")
+            .and_then(|r| r.as_f64())
+            .with_context(|| format!("{path:?}:{} missing 'response'", lineno + 1))?;
+        for &t in &tokens {
+            vocab_size = vocab_size.max(t as usize + 1);
+        }
+        if !tokens.is_empty() {
+            docs.push(Document { tokens, response: y });
+        }
+    }
+    let c = Corpus::new(docs, vocab_size);
+    c.validate()?;
+    Ok(c)
+}
+
+/// Write the compact BoW format.
+pub fn save_bow(corpus: &Corpus, path: &Path) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    writeln!(f, "#cfslda-bow vocab={}", corpus.vocab_size)?;
+    for d in &corpus.docs {
+        write!(f, "{}", d.response)?;
+        for &t in &d.tokens {
+            write!(f, " {t}")?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+/// Read the compact BoW format.
+pub fn load_bow(path: &Path) -> anyhow::Result<Corpus> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let header = lines.next().context("empty bow file")??;
+    let vocab_size: usize = header
+        .strip_prefix("#cfslda-bow vocab=")
+        .context("bad bow header")?
+        .trim()
+        .parse()
+        .context("bad vocab size in bow header")?;
+    let mut docs = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let y: f64 = parts
+            .next()
+            .context("empty bow line")?
+            .parse()
+            .with_context(|| format!("bad response at data line {}", lineno + 1))?;
+        let tokens: Result<Vec<u32>, _> = parts.map(|p| p.parse::<u32>()).collect();
+        let tokens = tokens.with_context(|| format!("bad token at data line {}", lineno + 1))?;
+        if !tokens.is_empty() {
+            docs.push(Document { tokens, response: y });
+        }
+    }
+    let c = Corpus::new(docs, vocab_size);
+    c.validate()?;
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn bow_roundtrip() {
+        let c = Corpus::new(
+            vec![
+                Document { tokens: vec![0, 2, 2], response: 1.5 },
+                Document { tokens: vec![1], response: -0.25 },
+            ],
+            3,
+        );
+        let p = tmpfile("roundtrip.bow");
+        save_bow(&c, &p).unwrap();
+        let c2 = load_bow(&p).unwrap();
+        assert_eq!(c2.vocab_size, 3);
+        assert_eq!(c2.docs.len(), 2);
+        assert_eq!(c2.docs[0].tokens, vec![0, 2, 2]);
+        assert_eq!(c2.docs[1].response, -0.25);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn encoded_jsonl_load() {
+        let p = tmpfile("enc.jsonl");
+        std::fs::write(
+            &p,
+            "{\"vocab_size\": 10}\n{\"tokens\": [0, 3, 3], \"response\": 2.0}\n\n{\"tokens\": [9], \"response\": -1}\n",
+        )
+        .unwrap();
+        let c = load_encoded_jsonl(&p).unwrap();
+        assert_eq!(c.vocab_size, 10);
+        assert_eq!(c.docs.len(), 2);
+        assert_eq!(c.docs[0].tokens, vec![0, 3, 3]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_jsonl_load_builds_vocab() {
+        let p = tmpfile("text.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                "{\"text\": \"strong revenue growth in operational performance\", \"response\": 1.0}\n",
+                "{\"text\": \"revenue decline and operational risk\", \"response\": -1.0}\n",
+                "{\"text\": \"revenue growth outlook\", \"response\": 0.5}\n",
+            ),
+        )
+        .unwrap();
+        let (c, v) = load_text_jsonl(&p, &TokenizerConfig::default(), 0.3, 1.0).unwrap();
+        assert!(v.id("revenue").is_some());
+        assert_eq!(c.docs.len(), 3);
+        assert!(c.vocab_size > 0);
+        c.validate().unwrap();
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        let p = tmpfile("bad.jsonl");
+        std::fs::write(&p, "{\"tokens\": [0], \"response\": \"x\"}\n").unwrap();
+        assert!(load_encoded_jsonl(&p).is_err());
+        std::fs::write(&p, "not json\n").unwrap();
+        assert!(load_encoded_jsonl(&p).is_err());
+        std::fs::remove_file(p).ok();
+
+        let p2 = tmpfile("bad.bow");
+        std::fs::write(&p2, "wrong header\n1 0 0\n").unwrap();
+        assert!(load_bow(&p2).is_err());
+        std::fs::remove_file(p2).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! Data pipeline: raw text → tokens → pruned vocabulary → bag-of-words
+//! corpus with responses → train/test split → M-way shards.
+//!
+//! The paper's two corpora (SEC 10-K MD&A with EPS labels; IMDB reviews with
+//! binary sentiment) are not redistributable, so `synthetic` generates
+//! corpora from the sLDA generative process itself at the same scale — see
+//! DESIGN.md §3 for the substitution argument. The text path (`tokenizer` +
+//! `vocab` + `loader`) is fully functional for users with real corpora.
+
+pub mod corpus;
+pub mod loader;
+pub mod partition;
+pub mod stats;
+pub mod synthetic;
+pub mod tokenizer;
+pub mod vocab;

@@ -1,0 +1,117 @@
+//! Train/test splitting and M-way shard partitioning.
+//!
+//! The shard partitioner implements step 1 of the paper's parallel
+//! procedure: "Partition the training documents into M subsets" — uniformly
+//! at random, covering every document exactly once, with near-equal sizes
+//! (|size_i − size_j| ≤ 1). Property tests in `rust/tests/properties.rs`
+//! enforce the exactly-once invariant.
+
+use super::corpus::{Corpus, Dataset};
+use crate::util::rng::Pcg64;
+
+/// Random train/test split with exactly `n_train` training documents.
+pub fn train_test_split(corpus: &Corpus, n_train: usize, rng: &mut Pcg64) -> Dataset {
+    assert!(n_train <= corpus.num_docs(), "n_train {} > docs {}", n_train, corpus.num_docs());
+    let mut idx: Vec<usize> = (0..corpus.num_docs()).collect();
+    rng.shuffle(&mut idx);
+    let train = corpus.select(&idx[..n_train]);
+    let test = corpus.select(&idx[n_train..]);
+    Dataset { train, test }
+}
+
+/// Randomly partition `n_docs` indices into `m` near-equal shards.
+/// Every index appears in exactly one shard; sizes differ by at most 1.
+pub fn random_shards(n_docs: usize, m: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    assert!(m > 0);
+    let mut idx: Vec<usize> = (0..n_docs).collect();
+    rng.shuffle(&mut idx);
+    let base = n_docs / m;
+    let extra = n_docs % m;
+    let mut shards = Vec::with_capacity(m);
+    let mut cursor = 0usize;
+    for s in 0..m {
+        let take = base + usize::from(s < extra);
+        shards.push(idx[cursor..cursor + take].to_vec());
+        cursor += take;
+    }
+    debug_assert_eq!(cursor, n_docs);
+    shards
+}
+
+/// Materialize shard sub-corpora from a partition.
+pub fn shard_corpora(corpus: &Corpus, shards: &[Vec<usize>]) -> Vec<Corpus> {
+    shards.iter().map(|s| corpus.select(s)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Document;
+
+    fn corpus(n: usize) -> Corpus {
+        Corpus::new(
+            (0..n).map(|i| Document { tokens: vec![(i % 5) as u32], response: i as f64 }).collect(),
+            5,
+        )
+    }
+
+    #[test]
+    fn split_is_a_partition() {
+        let c = corpus(100);
+        let ds = train_test_split(&c, 73, &mut Pcg64::seed_from_u64(1));
+        assert_eq!(ds.train.num_docs(), 73);
+        assert_eq!(ds.test.num_docs(), 27);
+        let mut all: Vec<i64> = ds
+            .train
+            .docs
+            .iter()
+            .chain(&ds.test.docs)
+            .map(|d| d.response as i64)
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn shards_cover_exactly_once() {
+        for &(n, m) in &[(100, 4), (101, 4), (7, 3), (5, 5), (3, 7)] {
+            let shards = random_shards(n, m, &mut Pcg64::seed_from_u64(2));
+            assert_eq!(shards.len(), m);
+            let mut seen: Vec<usize> = shards.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<usize>>(), "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn shard_sizes_near_equal() {
+        let shards = random_shards(103, 4, &mut Pcg64::seed_from_u64(3));
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(max - min <= 1, "sizes={sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+    }
+
+    #[test]
+    fn paper_protocol_750_each() {
+        // Paper Exp I: 3000 training docs into 4 shards of 750.
+        let shards = random_shards(3000, 4, &mut Pcg64::seed_from_u64(4));
+        assert!(shards.iter().all(|s| s.len() == 750));
+    }
+
+    #[test]
+    fn shard_corpora_select_right_docs() {
+        let c = corpus(10);
+        let shards = vec![vec![0, 1], vec![2, 3, 4], vec![5, 6, 7, 8, 9]];
+        let subs = shard_corpora(&c, &shards);
+        assert_eq!(subs[1].docs[0].response, 2.0);
+        assert_eq!(subs[2].num_docs(), 5);
+    }
+
+    #[test]
+    fn deterministic_partitions() {
+        let a = random_shards(50, 3, &mut Pcg64::seed_from_u64(5));
+        let b = random_shards(50, 3, &mut Pcg64::seed_from_u64(5));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,131 @@
+//! Corpus descriptive statistics + the Fig-5 label-distribution probe.
+//!
+//! Paper Fig. 5 plots the histogram of earnings per share and argues it is
+//! "close to normal distribution, implying it satisfies the normal
+//! assumption of the document label variable". [`label_report`] reproduces
+//! that figure as an ASCII histogram plus quantitative normality evidence
+//! (skewness, excess kurtosis, KS distance against the moment-fitted
+//! normal).
+
+use super::corpus::Corpus;
+use crate::util::stats::{ks_vs_normal, Histogram, Summary};
+
+/// Corpus-level statistics.
+#[derive(Clone, Debug)]
+pub struct CorpusStats {
+    pub docs: usize,
+    pub tokens: usize,
+    pub vocab: usize,
+    pub mean_doc_len: f64,
+    pub min_doc_len: usize,
+    pub max_doc_len: usize,
+}
+
+pub fn corpus_stats(c: &Corpus) -> CorpusStats {
+    let lens: Vec<usize> = c.docs.iter().map(|d| d.len()).collect();
+    CorpusStats {
+        docs: c.num_docs(),
+        tokens: c.num_tokens(),
+        vocab: c.vocab_size,
+        mean_doc_len: if lens.is_empty() { 0.0 } else { c.num_tokens() as f64 / lens.len() as f64 },
+        min_doc_len: lens.iter().copied().min().unwrap_or(0),
+        max_doc_len: lens.iter().copied().max().unwrap_or(0),
+    }
+}
+
+/// Label-distribution report (the Fig-5 reproduction).
+#[derive(Clone, Debug)]
+pub struct LabelReport {
+    pub summary: Summary,
+    pub skewness: f64,
+    pub kurtosis: f64,
+    /// KS distance between the labels and N(mean, var).
+    pub ks_normal: f64,
+    pub histogram: Histogram,
+}
+
+pub fn label_report(c: &Corpus, bins: usize) -> LabelReport {
+    let ys = c.responses();
+    let summary = Summary::from_slice(&ys);
+    let pad = 0.05 * (summary.max - summary.min).max(1e-9);
+    let histogram = Histogram::build(&ys, summary.min - pad, summary.max + pad, bins);
+    LabelReport {
+        skewness: Summary::skewness_of(&ys),
+        kurtosis: Summary::kurtosis_of(&ys),
+        ks_normal: ks_vs_normal(&ys, summary.mean(), summary.var().max(1e-12)),
+        summary,
+        histogram,
+    }
+}
+
+impl LabelReport {
+    /// Render the Fig-5 style report.
+    pub fn render(&self, title: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("=== {title} (n = {}) ===\n", self.summary.n));
+        out.push_str(&format!(
+            "mean={:.4} std={:.4} min={:.4} max={:.4}\n",
+            self.summary.mean(),
+            self.summary.std(),
+            self.summary.min,
+            self.summary.max
+        ));
+        out.push_str(&format!(
+            "skewness={:.4} excess_kurtosis={:.4} KS_vs_normal={:.4}\n",
+            self.skewness, self.kurtosis, self.ks_normal
+        ));
+        out.push_str(&self.histogram.render(50));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ResponseKind;
+    use crate::data::synthetic::{generate_corpus, SyntheticSpec};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn stats_on_synthetic() {
+        let spec = SyntheticSpec::continuous_small();
+        let c = generate_corpus(&spec, &mut Pcg64::seed_from_u64(1));
+        let s = corpus_stats(&c);
+        assert_eq!(s.docs, spec.docs);
+        assert_eq!(s.vocab, spec.vocab);
+        assert!(s.min_doc_len >= 4);
+        assert!(s.mean_doc_len > 20.0);
+    }
+
+    #[test]
+    fn eps_like_labels_look_normal() {
+        // The Fig-5 claim: the synthetic EPS labels must be near-normal.
+        let mut spec = SyntheticSpec::mdna();
+        spec.docs = 2000; // keep the test fast
+        let c = generate_corpus(&spec, &mut Pcg64::seed_from_u64(2));
+        let r = label_report(&c, 30);
+        assert!(r.skewness.abs() < 0.6, "skew={}", r.skewness);
+        assert!(r.ks_normal < 0.08, "ks={}", r.ks_normal);
+        assert!(r.histogram.n == 2000);
+    }
+
+    #[test]
+    fn binary_labels_not_normal() {
+        let mut spec = SyntheticSpec::imdb();
+        spec.docs = 1000;
+        spec.response = ResponseKind::Binary;
+        let c = generate_corpus(&spec, &mut Pcg64::seed_from_u64(3));
+        let r = label_report(&c, 10);
+        assert!(r.ks_normal > 0.2, "binary labels should fail normality: {}", r.ks_normal);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let spec = SyntheticSpec::continuous_small();
+        let c = generate_corpus(&spec, &mut Pcg64::seed_from_u64(4));
+        let text = label_report(&c, 12).render("labels");
+        assert!(text.contains("mean="));
+        assert!(text.contains("KS_vs_normal"));
+        assert!(text.contains('#'));
+    }
+}

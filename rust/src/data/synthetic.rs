@@ -1,0 +1,314 @@
+//! Synthetic corpora drawn from the sLDA generative process (paper §III-B).
+//!
+//! Substitute for the paper's two proprietary datasets (DESIGN.md §3):
+//!
+//! * [`SyntheticSpec::mdna`] — Experiment I scale: 4216 documents over a
+//!   4238-phrase vocabulary, continuous near-normal response (EPS-like,
+//!   reproducing the Fig-5 histogram).
+//! * [`SyntheticSpec::imdb`] — Experiment II scale: 25 000 documents,
+//!   binary response through the logit-normal reading in the paper.
+//!
+//! Because the data is drawn from the model family itself, ground truth
+//! (phi, eta) is available for diagnostics — e.g. the Hungarian
+//! topic-alignment probe that quantifies quasi-ergodicity.
+
+use super::corpus::{Corpus, Dataset, Document};
+use crate::config::schema::ResponseKind;
+use crate::util::rng::Pcg64;
+
+/// Specification of a synthetic sLDA corpus.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub docs: usize,
+    pub vocab: usize,
+    pub topics: usize,
+    /// Mean document length (Poisson distributed, min 4 tokens).
+    pub doc_len_mean: f64,
+    /// Dirichlet prior for document-topic proportions used in generation.
+    pub alpha: f64,
+    /// Dirichlet prior for topic-word distributions used in generation.
+    pub beta: f64,
+    /// Scale of the generating eta coefficients.
+    pub eta_scale: f64,
+    /// Response noise variance (the generative rho).
+    pub noise_var: f64,
+    /// Continuous (EPS-like) or binary (sentiment-like) response.
+    pub response: ResponseKind,
+    /// Offset added to continuous responses (EPS distributions are not
+    /// centered at zero; the paper's Fig-5 histogram peaks near ~1-2).
+    pub response_shift: f64,
+}
+
+impl SyntheticSpec {
+    /// Tiny corpus for unit tests and the quickstart example.
+    pub fn continuous_small() -> Self {
+        SyntheticSpec {
+            docs: 240,
+            vocab: 400,
+            topics: 8,
+            doc_len_mean: 40.0,
+            alpha: 0.3,
+            beta: 0.05,
+            eta_scale: 2.0,
+            noise_var: 0.05,
+            response: ResponseKind::Continuous,
+            response_shift: 0.0,
+        }
+    }
+
+    /// Tiny binary-response corpus for tests.
+    pub fn binary_small() -> Self {
+        let mut s = Self::continuous_small();
+        s.response = ResponseKind::Binary;
+        s
+    }
+
+    /// Experiment I scale (paper: 4216 firms, 4238 phrases, EPS response).
+    pub fn mdna() -> Self {
+        SyntheticSpec {
+            docs: 4216,
+            vocab: 4238,
+            topics: 16,
+            doc_len_mean: 150.0,
+            alpha: 0.3,
+            beta: 0.02,
+            eta_scale: 2.5,
+            noise_var: 0.25,
+            response: ResponseKind::Continuous,
+            response_shift: 1.5,
+        }
+    }
+
+    /// Experiment II scale (paper: 25k labeled IMDB reviews, binary).
+    pub fn imdb() -> Self {
+        SyntheticSpec {
+            docs: 25_000,
+            vocab: 5_000,
+            topics: 16,
+            doc_len_mean: 80.0,
+            alpha: 0.3,
+            beta: 0.02,
+            eta_scale: 3.0,
+            noise_var: 0.25,
+            response: ResponseKind::Binary,
+            response_shift: 0.0,
+        }
+    }
+}
+
+/// The latent variables that generated a synthetic corpus.
+#[derive(Clone, Debug)]
+pub struct GroundTruth {
+    /// Topic-word distributions, row t = phi_t over the vocabulary.
+    pub phi: Vec<Vec<f64>>,
+    /// Regression coefficients eta (centered for binary responses).
+    pub eta: Vec<f64>,
+}
+
+/// Poisson sample (Knuth for small mean, normal approximation above 30).
+pub fn sample_poisson(rng: &mut Pcg64, mean: f64) -> usize {
+    if mean <= 0.0 {
+        return 0;
+    }
+    if mean < 30.0 {
+        let l = (-mean).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    } else {
+        let x = mean + mean.sqrt() * rng.next_gaussian();
+        x.max(0.0).round() as usize
+    }
+}
+
+#[inline]
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Draw a full corpus + ground truth from the sLDA generative process.
+pub fn generate_with_truth(spec: &SyntheticSpec, rng: &mut Pcg64) -> (Corpus, GroundTruth) {
+    let t = spec.topics;
+    let v = spec.vocab;
+
+    // 1a) phi_t ~ Dir(beta)
+    let phi: Vec<Vec<f64>> = (0..t).map(|_| rng.next_dirichlet_sym(spec.beta, v)).collect();
+    // Cumulative tables for O(log V) word draws.
+    let phi_cum: Vec<Vec<f64>> = phi
+        .iter()
+        .map(|row| {
+            let mut c = Vec::with_capacity(v);
+            let mut s = 0.0;
+            for &p in row {
+                s += p;
+                c.push(s);
+            }
+            c
+        })
+        .collect();
+
+    // 1b) eta_t ~ N(0, eta_scale^2), centered so zbar @ eta has mean ~ 0.
+    let mut eta: Vec<f64> = (0..t).map(|_| spec.eta_scale * rng.next_gaussian()).collect();
+    let mean_eta: f64 = eta.iter().sum::<f64>() / t as f64;
+    for e in &mut eta {
+        *e -= mean_eta;
+    }
+
+    let mut docs = Vec::with_capacity(spec.docs);
+    for _ in 0..spec.docs {
+        // 2a) theta_d ~ Dir(alpha)
+        let theta = rng.next_dirichlet_sym(spec.alpha, t);
+        let n = sample_poisson(rng, spec.doc_len_mean).max(4);
+        let mut tokens = Vec::with_capacity(n);
+        let mut zbar = vec![0.0f64; t];
+        for _ in 0..n {
+            // 2b-i) z ~ Multi(theta)
+            let z = rng.sample_discrete(&theta);
+            zbar[z] += 1.0;
+            // 2b-ii) w ~ Multi(phi_z) via binary search on the cumulative.
+            let u = rng.next_f64();
+            let cum = &phi_cum[z];
+            let w = match cum.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(i) => i,
+                Err(i) => i.min(v - 1),
+            };
+            tokens.push(w as u32);
+        }
+        for zb in &mut zbar {
+            *zb /= n as f64;
+        }
+        // 2c) response
+        let signal: f64 = zbar.iter().zip(&eta).map(|(a, b)| a * b).sum();
+        let response = match spec.response {
+            ResponseKind::Continuous => {
+                spec.response_shift + signal + spec.noise_var.sqrt() * rng.next_gaussian()
+            }
+            ResponseKind::Binary => {
+                // Logit-normal (paper §III-B note): latent = signal + noise,
+                // y ~ Bernoulli(sigmoid(latent / temperature)).
+                let latent = signal + spec.noise_var.sqrt() * rng.next_gaussian();
+                let p = sigmoid(4.0 * latent);
+                if rng.next_f64() < p { 1.0 } else { 0.0 }
+            }
+        };
+        docs.push(Document { tokens, response });
+    }
+
+    (Corpus::new(docs, v), GroundTruth { phi, eta })
+}
+
+/// Draw a corpus, discarding the ground truth.
+pub fn generate_corpus(spec: &SyntheticSpec, rng: &mut Pcg64) -> Corpus {
+    generate_with_truth(spec, rng).0
+}
+
+/// Draw a corpus and split it `n_train` / rest as in the paper's protocol
+/// (Exp I: 3000/1216, Exp II: 20000/5000).
+pub fn generate_split(spec: &SyntheticSpec, n_train: usize, rng: &mut Pcg64) -> Dataset {
+    let corpus = generate_corpus(spec, rng);
+    super::partition::train_test_split(&corpus, n_train, rng)
+}
+
+/// Convenience used by doctests/examples: 75/25 split of the spec'd corpus.
+pub fn generate(spec: &SyntheticSpec, rng: &mut Pcg64) -> Dataset {
+    let n_train = spec.docs * 3 / 4;
+    generate_split(spec, n_train, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn corpus_matches_spec() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(1);
+        let (c, gt) = generate_with_truth(&spec, &mut rng);
+        assert_eq!(c.num_docs(), spec.docs);
+        assert_eq!(c.vocab_size, spec.vocab);
+        assert_eq!(gt.phi.len(), spec.topics);
+        assert_eq!(gt.eta.len(), spec.topics);
+        c.validate().unwrap();
+        let mean_len = c.num_tokens() as f64 / c.num_docs() as f64;
+        assert!((mean_len - spec.doc_len_mean).abs() < 8.0, "mean_len={mean_len}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = SyntheticSpec::continuous_small();
+        let a = generate_corpus(&spec, &mut Pcg64::seed_from_u64(9));
+        let b = generate_corpus(&spec, &mut Pcg64::seed_from_u64(9));
+        assert_eq!(a.docs, b.docs);
+    }
+
+    #[test]
+    fn phi_rows_are_distributions() {
+        let spec = SyntheticSpec::continuous_small();
+        let (_, gt) = generate_with_truth(&spec, &mut Pcg64::seed_from_u64(2));
+        for row in &gt.phi {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(row.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn binary_labels_are_zero_one_and_balanced_ish() {
+        let spec = SyntheticSpec::binary_small();
+        let c = generate_corpus(&spec, &mut Pcg64::seed_from_u64(3));
+        let ys = c.responses();
+        assert!(ys.iter().all(|&y| y == 0.0 || y == 1.0));
+        let frac = ys.iter().sum::<f64>() / ys.len() as f64;
+        assert!(frac > 0.15 && frac < 0.85, "frac={frac}");
+    }
+
+    #[test]
+    fn continuous_labels_roughly_centered_at_shift() {
+        let mut spec = SyntheticSpec::continuous_small();
+        spec.response_shift = 1.5;
+        spec.docs = 2000;
+        let c = generate_corpus(&spec, &mut Pcg64::seed_from_u64(4));
+        let s = Summary::from_slice(&c.responses());
+        assert!((s.mean() - 1.5).abs() < 0.3, "mean={}", s.mean());
+    }
+
+    #[test]
+    fn responses_correlate_with_topics() {
+        // Signal check: noise-free responses must be exactly zbar . eta, so
+        // with tiny noise the label variance must exceed the noise variance.
+        let mut spec = SyntheticSpec::continuous_small();
+        spec.noise_var = 1e-6;
+        spec.docs = 500;
+        let c = generate_corpus(&spec, &mut Pcg64::seed_from_u64(5));
+        let s = Summary::from_slice(&c.responses());
+        assert!(s.var() > 0.01, "var={}", s.var());
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        for &mean in &[3.0, 12.0, 80.0] {
+            let n = 20_000;
+            let s: f64 = (0..n).map(|_| sample_poisson(&mut rng, mean) as f64).sum();
+            let got = s / n as f64;
+            assert!((got - mean).abs() < 0.1 * mean, "mean={mean} got={got}");
+        }
+        assert_eq!(sample_poisson(&mut rng, 0.0), 0);
+    }
+
+    #[test]
+    fn split_sizes_follow_protocol() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(7);
+        let ds = generate_split(&spec, 180, &mut rng);
+        assert_eq!(ds.train.num_docs(), 180);
+        assert_eq!(ds.test.num_docs(), spec.docs - 180);
+    }
+}

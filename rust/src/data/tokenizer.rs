@@ -1,0 +1,119 @@
+//! Text -> phrase tokenizer.
+//!
+//! Stands in for the paper's preprocessing chain (Stanford log-linear POS
+//! tagger -> adjective-noun phrase mining). We implement the same *shape* of
+//! pipeline without the JVM dependency: lowercasing word tokenizer, stopword
+//! filter, and an adjacent-pair phrase miner driven by a suffix heuristic
+//! (`-ive`, `-ous`, `-al`, ... adjectives preceding nouns become
+//! `adj_noun` phrases). DESIGN.md §3 records the substitution.
+
+/// English stopwords (compact list adequate for BoW topic modelling).
+pub const STOPWORDS: &[&str] = &[
+    "a", "an", "and", "are", "as", "at", "be", "been", "but", "by", "for",
+    "from", "had", "has", "have", "he", "her", "his", "i", "in", "is", "it",
+    "its", "may", "more", "not", "of", "on", "or", "our", "she", "such",
+    "that", "the", "their", "there", "these", "they", "this", "to", "was",
+    "we", "were", "which", "will", "with", "would", "you",
+];
+
+fn is_stopword(w: &str) -> bool {
+    STOPWORDS.binary_search(&w).is_ok()
+}
+
+/// Crude adjective detector: common English adjectival suffixes. Plays the
+/// role of the POS tag in the paper's adjective-noun phrase generation.
+fn looks_adjectival(w: &str) -> bool {
+    const SUF: &[&str] = &["ive", "ous", "al", "ic", "able", "ible", "ful", "less", "ent", "ant"];
+    w.len() >= 4 && SUF.iter().any(|s| w.ends_with(s))
+}
+
+/// Tokenizer configuration.
+#[derive(Clone, Debug)]
+pub struct TokenizerConfig {
+    /// Minimum single-word length kept.
+    pub min_word_len: usize,
+    /// Emit `adj_noun` phrases for adjectival words preceding a word.
+    pub mine_phrases: bool,
+    /// Drop stopwords.
+    pub filter_stopwords: bool,
+}
+
+impl Default for TokenizerConfig {
+    fn default() -> Self {
+        TokenizerConfig { min_word_len: 2, mine_phrases: true, filter_stopwords: true }
+    }
+}
+
+/// Tokenize raw text into unigrams + mined phrases.
+pub fn tokenize(text: &str, cfg: &TokenizerConfig) -> Vec<String> {
+    let words: Vec<String> = text
+        .split(|c: char| !c.is_alphanumeric() && c != '\'')
+        .map(|w| w.trim_matches('\'').to_lowercase())
+        .filter(|w| w.len() >= cfg.min_word_len)
+        .filter(|w| !w.chars().all(|c| c.is_ascii_digit()))
+        .filter(|w| !cfg.filter_stopwords || !is_stopword(w))
+        .collect();
+
+    let mut out = Vec::with_capacity(words.len() * 2);
+    for i in 0..words.len() {
+        if cfg.mine_phrases && i + 1 < words.len() && looks_adjectival(&words[i]) {
+            out.push(format!("{}_{}", words[i], words[i + 1]));
+        }
+        out.push(words[i].clone());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopword_list_is_sorted_for_binary_search() {
+        let mut s = STOPWORDS.to_vec();
+        s.sort_unstable();
+        assert_eq!(s, STOPWORDS);
+    }
+
+    #[test]
+    fn basic_tokenization() {
+        let t = tokenize("The quick, brown fox!", &TokenizerConfig::default());
+        assert!(t.contains(&"quick".to_string()));
+        assert!(t.contains(&"fox".to_string()));
+        assert!(!t.contains(&"the".to_string())); // stopword
+    }
+
+    #[test]
+    fn numbers_and_short_tokens_dropped() {
+        let t = tokenize("x 42 2012 profit", &TokenizerConfig::default());
+        assert_eq!(t, vec!["profit".to_string()]);
+    }
+
+    #[test]
+    fn phrase_mining() {
+        let t = tokenize("operational performance improved", &TokenizerConfig::default());
+        assert!(t.contains(&"operational_performance".to_string()), "{t:?}");
+        assert!(t.contains(&"operational".to_string()));
+        assert!(t.contains(&"performance".to_string()));
+    }
+
+    #[test]
+    fn phrase_mining_can_be_disabled() {
+        let cfg = TokenizerConfig { mine_phrases: false, ..Default::default() };
+        let t = tokenize("operational performance", &cfg);
+        assert_eq!(t, vec!["operational".to_string(), "performance".to_string()]);
+    }
+
+    #[test]
+    fn case_folding_and_apostrophes() {
+        let t = tokenize("Firm's REVENUE", &TokenizerConfig::default());
+        assert!(t.contains(&"firm's".to_string()) || t.contains(&"firm".to_string()), "{t:?}");
+        assert!(t.contains(&"revenue".to_string()));
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(tokenize("", &TokenizerConfig::default()).is_empty());
+        assert!(tokenize("   \n\t  ", &TokenizerConfig::default()).is_empty());
+    }
+}

@@ -1,0 +1,151 @@
+//! Vocabulary: phrase <-> id maps with document-frequency pruning.
+//!
+//! Reproduces the paper's preprocessing decision: "we only included phrases
+//! that appear in at least 2% of the total number of firms" — see
+//! [`Vocab::build_pruned`] with `min_df_frac = 0.02`.
+
+use std::collections::HashMap;
+
+/// Bidirectional phrase <-> id mapping.
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    terms: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Vocab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Intern a term, returning its id.
+    pub fn intern(&mut self, term: &str) -> u32 {
+        if let Some(&id) = self.index.get(term) {
+            return id;
+        }
+        let id = self.terms.len() as u32;
+        self.terms.push(term.to_string());
+        self.index.insert(term.to_string(), id);
+        id
+    }
+
+    pub fn id(&self, term: &str) -> Option<u32> {
+        self.index.get(term).copied()
+    }
+
+    pub fn term(&self, id: u32) -> Option<&str> {
+        self.terms.get(id as usize).map(|s| s.as_str())
+    }
+
+    pub fn terms(&self) -> &[String] {
+        &self.terms
+    }
+
+    /// Build a pruned vocabulary from tokenized documents, keeping terms
+    /// whose document frequency is at least `min_df_frac` of the corpus
+    /// (the paper's 2% floor) and at most `max_df_frac` (drop boilerplate).
+    pub fn build_pruned(
+        docs: &[Vec<String>],
+        min_df_frac: f64,
+        max_df_frac: f64,
+    ) -> Vocab {
+        let n = docs.len().max(1) as f64;
+        let mut df: HashMap<&str, usize> = HashMap::new();
+        for doc in docs {
+            let mut seen: Vec<&str> = doc.iter().map(|s| s.as_str()).collect();
+            seen.sort_unstable();
+            seen.dedup();
+            for t in seen {
+                *df.entry(t).or_insert(0) += 1;
+            }
+        }
+        let mut kept: Vec<&str> = df
+            .iter()
+            .filter(|(_, &c)| {
+                let f = c as f64 / n;
+                f >= min_df_frac && f <= max_df_frac
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        kept.sort_unstable(); // deterministic ids
+        let mut v = Vocab::new();
+        for t in kept {
+            v.intern(t);
+        }
+        v
+    }
+
+    /// Map a tokenized document onto ids, dropping out-of-vocabulary terms.
+    pub fn encode(&self, doc: &[String]) -> Vec<u32> {
+        doc.iter().filter_map(|t| self.id(t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn intern_roundtrip() {
+        let mut v = Vocab::new();
+        let a = v.intern("alpha");
+        let b = v.intern("beta");
+        assert_eq!(v.intern("alpha"), a);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.term(a), Some("alpha"));
+        assert_eq!(v.id("beta"), Some(b));
+        assert_eq!(v.id("gamma"), None);
+    }
+
+    #[test]
+    fn prune_by_document_frequency() {
+        // "common" in 3/4 docs, "rare" in 1/4, "always" in 4/4.
+        let docs = vec![
+            toks("common always rare"),
+            toks("common always"),
+            toks("common always"),
+            toks("always"),
+        ];
+        let v = Vocab::build_pruned(&docs, 0.5, 0.9);
+        assert!(v.id("common").is_some());
+        assert!(v.id("rare").is_none()); // below 50% floor
+        assert!(v.id("always").is_none()); // above 90% ceiling
+    }
+
+    #[test]
+    fn duplicate_tokens_count_once_for_df() {
+        let docs = vec![toks("x x x"), toks("y")];
+        let v = Vocab::build_pruned(&docs, 0.6, 1.0);
+        // df(x) = 1/2 < 0.6 even though it appears 3 times
+        assert!(v.id("x").is_none());
+    }
+
+    #[test]
+    fn ids_are_deterministic_sorted() {
+        let docs = vec![toks("b a c"), toks("a b c")];
+        let v = Vocab::build_pruned(&docs, 0.0, 1.0);
+        assert_eq!(v.term(0), Some("a"));
+        assert_eq!(v.term(1), Some("b"));
+        assert_eq!(v.term(2), Some("c"));
+    }
+
+    #[test]
+    fn encode_drops_oov() {
+        let docs = vec![toks("a b"), toks("a b")];
+        let v = Vocab::build_pruned(&docs, 0.9, 1.0);
+        let enc = v.encode(&toks("a zzz b a"));
+        assert_eq!(enc.len(), 3);
+    }
+}

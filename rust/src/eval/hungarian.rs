@@ -1,0 +1,184 @@
+//! Hungarian algorithm (Kuhn-Munkres, O(n^3)) for minimum-cost assignment.
+//!
+//! Substrate for the quasi-ergodicity diagnostics: the topic posterior of
+//! (s)LDA has one mode per topic-label *permutation*, so comparing two
+//! chains' topic-word matrices requires solving an assignment problem —
+//! "which topic of chain A is which topic of chain B". The optimal matching
+//! cost is the permutation-invariant distance between the chains' modes.
+
+/// Solve the min-cost assignment for a square `n x n` cost matrix
+/// (row-major). Returns (assignment, total_cost) where `assignment[row] =
+/// col`.
+///
+/// Implementation: the classic potentials + augmenting-path formulation
+/// (Jonker-style), O(n^3), exact.
+pub fn solve(cost: &[f64], n: usize) -> (Vec<usize>, f64) {
+    assert_eq!(cost.len(), n * n, "cost matrix must be n x n");
+    if n == 0 {
+        return (Vec::new(), 0.0);
+    }
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed potentials; way[j] = previous column on the augmenting path.
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row assigned to column j (1-indexed)
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![INF; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[(i0 - 1) * n + (j - 1)] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            assignment[p[j] - 1] = j - 1;
+        }
+    }
+    let total: f64 = (0..n).map(|r| cost[r * n + assignment[r]]).sum();
+    (assignment, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identity_when_diagonal_cheap() {
+        let cost = vec![
+            0.0, 9.0, 9.0, //
+            9.0, 0.0, 9.0, //
+            9.0, 9.0, 0.0,
+        ];
+        let (a, c) = solve(&cost, 3);
+        assert_eq!(a, vec![0, 1, 2]);
+        assert_eq!(c, 0.0);
+    }
+
+    #[test]
+    fn known_3x3() {
+        // classic example: optimal cost 5 with assignment (0->1, 1->0, 2->2)
+        let cost = vec![
+            4.0, 1.0, 3.0, //
+            2.0, 0.0, 5.0, //
+            3.0, 2.0, 2.0,
+        ];
+        let (a, c) = solve(&cost, 3);
+        assert_eq!(c, 5.0);
+        // verify it's a permutation
+        let mut seen = a.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn permutation_recovery() {
+        // cost[i][j] = 0 iff j == perm[i], else 1 — must recover perm.
+        let perm = [3usize, 0, 4, 1, 2];
+        let n = 5;
+        let mut cost = vec![1.0; n * n];
+        for (i, &j) in perm.iter().enumerate() {
+            cost[i * n + j] = 0.0;
+        }
+        let (a, c) = solve(&cost, n);
+        assert_eq!(a, perm.to_vec());
+        assert_eq!(c, 0.0);
+    }
+
+    #[test]
+    fn beats_identity_and_random_on_random_instances() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for n in [2usize, 4, 8, 13] {
+            let cost: Vec<f64> = (0..n * n).map(|_| rng.next_f64()).collect();
+            let (a, c) = solve(&cost, n);
+            // assignment is a permutation
+            let mut seen = a.clone();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+            // not worse than identity
+            let id_cost: f64 = (0..n).map(|i| cost[i * n + i]).sum();
+            assert!(c <= id_cost + 1e-12);
+            // exact on small n: compare against brute force
+            if n <= 4 {
+                let mut best = f64::INFINITY;
+                let mut perm: Vec<usize> = (0..n).collect();
+                permutohedron_heap(&mut perm, &mut |p: &[usize]| {
+                    let v: f64 = (0..n).map(|i| cost[i * n + p[i]]).sum();
+                    if v < best {
+                        best = v;
+                    }
+                });
+                assert!((c - best).abs() < 1e-9, "n={n} got {c} best {best}");
+            }
+        }
+    }
+
+    /// Minimal Heap's algorithm for the brute-force check.
+    fn permutohedron_heap(arr: &mut Vec<usize>, f: &mut impl FnMut(&[usize])) {
+        fn heap(k: usize, arr: &mut Vec<usize>, f: &mut impl FnMut(&[usize])) {
+            if k == 1 {
+                f(arr);
+                return;
+            }
+            for i in 0..k {
+                heap(k - 1, arr, f);
+                if k % 2 == 0 {
+                    arr.swap(i, k - 1);
+                } else {
+                    arr.swap(0, k - 1);
+                }
+            }
+        }
+        let k = arr.len();
+        heap(k, arr, f);
+    }
+
+    #[test]
+    fn empty_input() {
+        let (a, c) = solve(&[], 0);
+        assert!(a.is_empty());
+        assert_eq!(c, 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Prediction quality metrics: the paper evaluates test-set MSE
+//! (Experiment I, continuous EPS) and test-set accuracy (Experiment II,
+//! binary sentiment); we add RMSE / MAE / R² / confusion counts for the
+//! extended reports.
+
+/// Full metric set for one prediction vector against ground truth.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Metrics {
+    pub n: usize,
+    pub mse: f64,
+    pub rmse: f64,
+    pub mae: f64,
+    /// 1 - SSE/SST (0 when SST is 0).
+    pub r2: f64,
+    /// Accuracy at the 0.5 threshold.
+    pub acc: f64,
+    pub tp: usize,
+    pub tn: usize,
+    pub fp: usize,
+    pub fn_: usize,
+}
+
+/// Compute all metrics. `yhat` are raw (continuous) predictions; binary
+/// classification thresholds both sides at 0.5 as in the paper.
+pub fn compute(yhat: &[f64], y: &[f64]) -> Metrics {
+    assert_eq!(yhat.len(), y.len(), "prediction/label length mismatch");
+    let n = y.len();
+    if n == 0 {
+        return Metrics::default();
+    }
+    let mean_y: f64 = y.iter().sum::<f64>() / n as f64;
+    let (mut sse, mut sae, mut sst) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut tp, mut tn, mut fp, mut fn_) = (0usize, 0usize, 0usize, 0usize);
+    for (&p, &obs) in yhat.iter().zip(y) {
+        let e = p - obs;
+        sse += e * e;
+        sae += e.abs();
+        sst += (obs - mean_y) * (obs - mean_y);
+        match (p > 0.5, obs > 0.5) {
+            (true, true) => tp += 1,
+            (false, false) => tn += 1,
+            (true, false) => fp += 1,
+            (false, true) => fn_ += 1,
+        }
+    }
+    let mse = sse / n as f64;
+    Metrics {
+        n,
+        mse,
+        rmse: mse.sqrt(),
+        mae: sae / n as f64,
+        r2: if sst > 0.0 { 1.0 - sse / sst } else { 0.0 },
+        acc: (tp + tn) as f64 / n as f64,
+        tp,
+        tn,
+        fp,
+        fn_,
+    }
+}
+
+impl Metrics {
+    /// One-line rendering used by the experiment tables.
+    pub fn render(&self, binary: bool) -> String {
+        if binary {
+            format!("acc={:.4} (tp={} tn={} fp={} fn={})", self.acc, self.tp, self.tn, self.fp, self.fn_)
+        } else {
+            format!("mse={:.4} rmse={:.4} mae={:.4} r2={:.4}", self.mse, self.rmse, self.mae, self.r2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let y = [1.0, 2.0, 3.0];
+        let m = compute(&y, &y);
+        assert_eq!(m.mse, 0.0);
+        assert_eq!(m.mae, 0.0);
+        assert_eq!(m.r2, 1.0);
+        assert_eq!(m.acc, 1.0);
+    }
+
+    #[test]
+    fn known_values() {
+        let m = compute(&[1.0, 0.0], &[0.0, 0.0]);
+        assert!((m.mse - 0.5).abs() < 1e-12);
+        assert!((m.rmse - 0.5f64.sqrt()).abs() < 1e-12);
+        assert!((m.mae - 0.5).abs() < 1e-12);
+        // y constant -> sst = 0 -> r2 defined as 0
+        assert_eq!(m.r2, 0.0);
+    }
+
+    #[test]
+    fn r2_of_mean_prediction_is_zero() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        let m = compute(&[2.5; 4], &y);
+        assert!(m.r2.abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_confusion() {
+        // yhat: 0.9, 0.1, 0.6, 0.2 vs y: 1, 0, 0, 1
+        let m = compute(&[0.9, 0.1, 0.6, 0.2], &[1.0, 0.0, 0.0, 1.0]);
+        assert_eq!((m.tp, m.tn, m.fp, m.fn_), (1, 1, 1, 1));
+        assert_eq!(m.acc, 0.5);
+    }
+
+    #[test]
+    fn empty_input_is_default() {
+        assert_eq!(compute(&[], &[]), Metrics::default());
+    }
+
+    #[test]
+    fn render_modes() {
+        let m = compute(&[0.9], &[1.0]);
+        assert!(m.render(false).contains("mse="));
+        assert!(m.render(true).contains("acc="));
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation: prediction metrics, topic-mode diagnostics (the
+//! quasi-ergodicity probe), and held-out perplexity.
+
+pub mod hungarian;
+pub mod metrics;
+pub mod mode_diag;
+pub mod perplexity;

@@ -1,0 +1,177 @@
+//! Quasi-ergodicity diagnostics (the measured version of paper Figs. 2-3).
+//!
+//! Independent Gibbs chains on different shards converge to different
+//! topic-label permutations (different modes of the multimodal posterior).
+//! We quantify this with two numbers per chain pair:
+//!
+//! * **aligned distance** — mean total-variation distance between topic-word
+//!   rows *after* optimally matching topics (Hungarian on the TV-cost
+//!   matrix). Small when the chains found the same mode structure.
+//! * **identity distance** — the same mean TV distance *without* matching
+//!   (topic i vs topic i). Large when the labels are permuted.
+//!
+//! A large `identity - aligned` **permutation gap** is the fingerprint of
+//! quasi-ergodicity: the chains agree about the topics but not about their
+//! labels — precisely the situation in which Naive Combination's pooled
+//! counts blur distinct topics together while prediction-space combination
+//! is unaffected (predictions are permutation-invariant).
+
+use super::hungarian;
+
+/// Total-variation distance between two distributions.
+pub fn tv_distance(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    0.5 * p.iter().zip(q).map(|(&a, &b)| (a - b).abs()).sum::<f64>()
+}
+
+/// Pairwise alignment report between two chains' topic sets.
+#[derive(Clone, Debug)]
+pub struct AlignmentReport {
+    /// Optimal topic matching (chain A topic i -> chain B topic perm[i]).
+    pub permutation: Vec<usize>,
+    /// Mean TV distance under the optimal matching.
+    pub aligned_distance: f64,
+    /// Mean TV distance under the identity matching.
+    pub identity_distance: f64,
+    /// Fraction of topics whose optimal match is NOT the identity.
+    pub permuted_fraction: f64,
+}
+
+impl AlignmentReport {
+    /// identity - aligned: the quasi-ergodicity fingerprint.
+    pub fn permutation_gap(&self) -> f64 {
+        self.identity_distance - self.aligned_distance
+    }
+}
+
+/// Align two chains' topic-word matrices (topic-major rows over the vocab).
+pub fn align_topics(phi_a: &[Vec<f64>], phi_b: &[Vec<f64>]) -> AlignmentReport {
+    let t = phi_a.len();
+    assert_eq!(t, phi_b.len(), "chains must share the topic count");
+    let mut cost = vec![0.0f64; t * t];
+    for i in 0..t {
+        for j in 0..t {
+            cost[i * t + j] = tv_distance(&phi_a[i], &phi_b[j]);
+        }
+    }
+    let (permutation, total) = hungarian::solve(&cost, t);
+    let aligned = total / t as f64;
+    let identity: f64 = (0..t).map(|i| cost[i * t + i]).sum::<f64>() / t as f64;
+    let permuted =
+        permutation.iter().enumerate().filter(|&(i, &j)| i != j).count() as f64 / t as f64;
+    AlignmentReport {
+        permutation,
+        aligned_distance: aligned,
+        identity_distance: identity,
+        permuted_fraction: permuted,
+    }
+}
+
+/// Mean pairwise alignment report over all chain pairs (the Fig-3 summary).
+#[derive(Clone, Debug, Default)]
+pub struct ModeDivergence {
+    pub pairs: usize,
+    pub mean_aligned: f64,
+    pub mean_identity: f64,
+    pub mean_permuted_fraction: f64,
+}
+
+impl ModeDivergence {
+    pub fn permutation_gap(&self) -> f64 {
+        self.mean_identity - self.mean_aligned
+    }
+}
+
+/// Compute pairwise divergence across M chains' topic rows.
+pub fn mode_divergence(phis: &[Vec<Vec<f64>>]) -> ModeDivergence {
+    let m = phis.len();
+    let mut out = ModeDivergence::default();
+    if m < 2 {
+        return out;
+    }
+    for a in 0..m {
+        for b in a + 1..m {
+            let r = align_topics(&phis[a], &phis[b]);
+            out.pairs += 1;
+            out.mean_aligned += r.aligned_distance;
+            out.mean_identity += r.identity_distance;
+            out.mean_permuted_fraction += r.permuted_fraction;
+        }
+    }
+    let n = out.pairs as f64;
+    out.mean_aligned /= n;
+    out.mean_identity /= n;
+    out.mean_permuted_fraction /= n;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_topics(t: usize, w: usize, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+        (0..t).map(|_| rng.next_dirichlet_sym(0.05, w)).collect()
+    }
+
+    #[test]
+    fn tv_basics() {
+        assert_eq!(tv_distance(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert_eq!(tv_distance(&[1.0, 0.0], &[0.0, 1.0]), 1.0);
+        assert!((tv_distance(&[0.5, 0.5], &[1.0, 0.0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn permuted_chains_have_large_gap() {
+        // Chain B = chain A with topics rotated by 1: identity distance is
+        // large, aligned distance zero, and the permutation is recovered.
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = random_topics(6, 200, &mut rng);
+        let mut b = a.clone();
+        b.rotate_left(1);
+        let r = align_topics(&a, &b);
+        assert!(r.aligned_distance < 1e-12);
+        assert!(r.identity_distance > 0.5, "identity={}", r.identity_distance);
+        assert!(r.permutation_gap() > 0.5);
+        assert_eq!(r.permuted_fraction, 1.0);
+        // permutation maps a-topic i to b-row holding the same topic
+        for (i, &j) in r.permutation.iter().enumerate() {
+            assert_eq!(tv_distance(&a[i], &b[j]), 0.0);
+        }
+    }
+
+    #[test]
+    fn identical_chains_have_no_gap() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = random_topics(5, 100, &mut rng);
+        let r = align_topics(&a, &a);
+        assert_eq!(r.permutation, vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.permutation_gap(), 0.0);
+        assert_eq!(r.permuted_fraction, 0.0);
+    }
+
+    #[test]
+    fn unrelated_chains_have_no_gap_but_large_distance() {
+        // Independent random topic sets: aligned ~ identity (both large).
+        let mut rng = Pcg64::seed_from_u64(3);
+        let a = random_topics(6, 500, &mut rng);
+        let b = random_topics(6, 500, &mut rng);
+        let r = align_topics(&a, &b);
+        assert!(r.aligned_distance > 0.5);
+        assert!(r.permutation_gap() < 0.2, "gap={}", r.permutation_gap());
+    }
+
+    #[test]
+    fn divergence_aggregates_pairs() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let a = random_topics(4, 50, &mut rng);
+        let mut b = a.clone();
+        b.rotate_left(2);
+        let mut c = a.clone();
+        c.rotate_left(1);
+        let d = mode_divergence(&[a, b, c]);
+        assert_eq!(d.pairs, 3);
+        assert!(d.permutation_gap() > 0.3);
+        assert!(mode_divergence(&[]).pairs == 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Held-out per-word perplexity for (s)LDA models.
+//!
+//! Extended diagnostic (not a paper figure): measures topic quality
+//! independently of the supervised head. Uses the standard
+//! fold-in evaluation: infer each held-out document's empirical topic
+//! distribution with the frozen phi-hat, then score
+//!   perplexity = exp( - sum_dn log p(w_dn) / sum_d N_d ),
+//!   p(w) = sum_t theta_hat_dt phi_hat_{t, w}.
+
+use crate::config::schema::TrainConfig;
+use crate::data::corpus::Corpus;
+use crate::model::slda::SldaModel;
+use crate::sampler::gibbs_predict::infer_zbar;
+use crate::util::rng::Pcg64;
+
+/// Fold-in perplexity of `model` on a held-out corpus.
+pub fn perplexity(
+    model: &SldaModel,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    rng: &mut Pcg64,
+) -> f64 {
+    let t = model.t;
+    let zbar = infer_zbar(model, corpus, cfg, rng);
+    let alpha = model.alpha;
+    let mut loglik = 0.0f64;
+    let mut tokens = 0usize;
+    for (di, doc) in corpus.docs.iter().enumerate() {
+        // smooth theta-hat with the Dirichlet prior
+        let nd = doc.len() as f64;
+        let denom = nd + t as f64 * alpha;
+        let theta: Vec<f64> = (0..t)
+            .map(|ti| (zbar[di * t + ti] as f64 * nd + alpha) / denom)
+            .collect();
+        for &wi in &doc.tokens {
+            let phi = model.phi_row(wi);
+            let p: f64 = theta.iter().zip(phi).map(|(&th, &ph)| th * ph as f64).sum();
+            loglik += p.max(1e-300).ln();
+            tokens += 1;
+        }
+    }
+    (-loglik / tokens.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ExperimentConfig;
+    use crate::data::synthetic::{generate_split, SyntheticSpec};
+    use crate::runtime::EngineHandle;
+    use crate::sampler::gibbs_train::train;
+
+    #[test]
+    fn trained_model_beats_uniform() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let mut cfg = ExperimentConfig::quick();
+        cfg.train.sweeps = 15;
+        cfg.train.burnin = 3;
+        let engine = EngineHandle::native();
+        let out = train(&ds.train, &cfg, &engine, &mut rng).unwrap();
+        let ppl = perplexity(&out.model, &ds.test, &cfg.train, &mut rng);
+        // Uniform model perplexity == vocab size.
+        assert!(
+            ppl < 0.8 * spec.vocab as f64,
+            "perplexity {ppl} should beat uniform {}",
+            spec.vocab
+        );
+        assert!(ppl > 1.0);
+    }
+
+    #[test]
+    fn degenerate_uniform_model_scores_vocab_size() {
+        // A model whose phi is exactly uniform must have ppl == W.
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let (t, w) = (4usize, spec.vocab);
+        let model = SldaModel {
+            t,
+            w,
+            eta: vec![0.0; t],
+            phi: vec![1.0 / w as f32; w * t],
+            rho: 1.0,
+            alpha: 0.5,
+            train_mse: 0.0,
+            train_acc: 0.0,
+        };
+        let cfg = ExperimentConfig::quick();
+        let ppl = perplexity(&model, &ds.test, &cfg.train, &mut rng);
+        let rel = (ppl - w as f64).abs() / w as f64;
+        assert!(rel < 1e-3, "ppl={ppl} vs W={w}");
+    }
+}

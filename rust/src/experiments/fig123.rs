@@ -1,0 +1,312 @@
+//! Measured reproductions of the paper's illustrative Figures 1-3.
+//!
+//! The paper's figures are schematics; we reproduce their *content* as
+//! measurable experiments:
+//!
+//! * **Fig 1** (unimodal works): a 1-D Gaussian posterior sampled by three
+//!   independent Metropolis chains; pooling the sub-samples matches the
+//!   true posterior (small KS distance).
+//! * **Fig 2** (multimodal fails): a 3-mode Gaussian-mixture posterior;
+//!   short-stepping chains started in different basins never hop modes
+//!   (quasi-ergodicity), and pooling chains stuck in the *wrong mix* of
+//!   modes misrepresents the posterior (large KS distance).
+//! * **Fig 3** (prediction projection fixes sLDA): train M sLDA shards;
+//!   their topic-word posteriors disagree under the identity labeling but
+//!   agree after Hungarian alignment (large permutation gap = different
+//!   modes of the permutation-symmetric posterior), while their test
+//!   *predictions* — the 1-D projection — agree closely.
+
+use crate::config::schema::ExperimentConfig;
+use crate::data::corpus::Dataset;
+use crate::eval::mode_diag::{mode_divergence, ModeDivergence};
+use crate::parallel::leader::{run_with_engine, Algorithm};
+use crate::runtime::EngineHandle;
+use crate::util::math::normal_logpdf;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{ks_two_sample, Summary};
+
+/// Random-walk Metropolis chain over a 1-D log-density.
+pub fn mh_chain(
+    logpdf: impl Fn(f64) -> f64,
+    x0: f64,
+    step: f64,
+    n: usize,
+    burnin: usize,
+    rng: &mut Pcg64,
+) -> Vec<f64> {
+    let mut x = x0;
+    let mut lp = logpdf(x);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n + burnin {
+        let prop = x + step * rng.next_gaussian();
+        let lp_prop = logpdf(prop);
+        if lp_prop - lp >= 0.0 || rng.next_f64() < (lp_prop - lp).exp() {
+            x = prop;
+            lp = lp_prop;
+        }
+        if i >= burnin {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// Log-density of an equal-weight Gaussian mixture.
+pub fn mixture_logpdf(x: f64, means: &[f64], var: f64) -> f64 {
+    let terms: Vec<f64> =
+        means.iter().map(|&m| normal_logpdf(x, m, var) - (means.len() as f64).ln()).collect();
+    crate::util::math::logsumexp(&terms)
+}
+
+/// Result of the Fig-1 / Fig-2 pooling demos.
+#[derive(Clone, Debug)]
+pub struct PoolingDemo {
+    /// KS distance between pooled sub-chain samples and an iid reference.
+    pub ks_pooled: f64,
+    /// Mean KS distance of each individual chain vs the reference.
+    pub ks_single_mean: f64,
+    /// Fraction of pooled samples in each mode basin (diagnostic).
+    pub basin_mass: Vec<f64>,
+}
+
+/// Fig 1: unimodal posterior, M chains, pooling is valid.
+pub fn fig1_unimodal(chains: usize, n_per_chain: usize, seed: u64) -> PoolingDemo {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let logpdf = |x: f64| normal_logpdf(x, 0.0, 1.0);
+    let mut pooled = Vec::new();
+    let mut ks_single = Summary::new();
+    let reference: Vec<f64> = (0..chains * n_per_chain).map(|_| rng.next_gaussian()).collect();
+    for c in 0..chains {
+        let mut crng = rng.split(c as u64);
+        let xs = mh_chain(logpdf, 0.0, 1.0, n_per_chain, 500, &mut crng);
+        ks_single.push(ks_two_sample(&xs, &reference));
+        pooled.extend(xs);
+    }
+    PoolingDemo {
+        ks_pooled: ks_two_sample(&pooled, &reference),
+        ks_single_mean: ks_single.mean(),
+        basin_mass: vec![1.0],
+    }
+}
+
+/// Fig 2: 3-mode posterior; chains get stuck in their starting basin and a
+/// lopsided start assignment (2 left, 1 right, middle mode unvisited) makes
+/// the pooled sample badly misrepresent the posterior.
+pub fn fig2_multimodal(n_per_chain: usize, seed: u64) -> PoolingDemo {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let means = [-4.0, 0.0, 4.0];
+    let var = 0.09; // well-separated basins; RW step too small to hop
+    let logpdf = |x: f64| mixture_logpdf(x, &means, var);
+    // iid reference by exact mixture sampling
+    let reference: Vec<f64> = (0..3 * n_per_chain)
+        .map(|_| {
+            let k = rng.gen_range(3);
+            means[k] + var.sqrt() * rng.next_gaussian()
+        })
+        .collect();
+    // the paper's Fig-2 situation: two machines in the leftmost mode, one in
+    // the rightmost, middle mode unexplored.
+    let starts = [-4.0, -4.0, 4.0];
+    let mut pooled = Vec::new();
+    let mut ks_single = Summary::new();
+    for (c, &x0) in starts.iter().enumerate() {
+        let mut crng = rng.split(c as u64);
+        let xs = mh_chain(logpdf, x0, 0.3, n_per_chain, 500, &mut crng);
+        ks_single.push(ks_two_sample(&xs, &reference));
+        pooled.extend(xs);
+    }
+    let n = pooled.len() as f64;
+    let basin_mass = vec![
+        pooled.iter().filter(|&&x| x < -2.0).count() as f64 / n,
+        pooled.iter().filter(|&&x| (-2.0..2.0).contains(&x)).count() as f64 / n,
+        pooled.iter().filter(|&&x| x >= 2.0).count() as f64 / n,
+    ];
+    PoolingDemo {
+        ks_pooled: ks_two_sample(&pooled, &reference),
+        ks_single_mean: ks_single.mean(),
+        basin_mass,
+    }
+}
+
+/// Fig 3 result: topic-space multimodality vs prediction-space agreement.
+#[derive(Clone, Debug)]
+pub struct Fig3Report {
+    /// Topic-space divergence across shard models (Hungarian probe).
+    pub modes: ModeDivergence,
+    /// Mean pairwise KS distance between shards' local test predictions.
+    pub prediction_ks_mean: f64,
+    /// Mean pairwise correlation between shards' local test predictions.
+    pub prediction_corr_mean: f64,
+}
+
+/// Fig 3: run SimpleAverage with kept models, measure the permutation gap
+/// in topic space vs the agreement of local predictions.
+pub fn fig3_projection(
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+) -> anyhow::Result<Fig3Report> {
+    let (out, models) = run_with_engine(Algorithm::SimpleAverage, ds, cfg, engine, true)?;
+    let phis: Vec<Vec<Vec<f64>>> = models.iter().map(|m| m.phi_topic_rows()).collect();
+    let modes = mode_divergence(&phis);
+
+    // Local predictions: reconstruct per-shard yhat from the run output is
+    // not possible (combined), so recompute via worker-equivalent calls is
+    // wasteful; instead we use the kept models to predict a slice of the
+    // test set cheaply.
+    let m = models.len();
+    let mut preds: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut rng = Pcg64::seed_from_u64(cfg.seed ^ 0xF16_3);
+    let take = ds.test.num_docs().min(400);
+    let idx: Vec<usize> = (0..take).collect();
+    let sub = ds.test.select(&idx);
+    for model in &models {
+        let (p, _) = crate::sampler::gibbs_predict::predict_corpus(
+            model, &sub, &cfg.train, engine, None, &mut rng,
+        )?;
+        preds.push(p.yhat);
+    }
+    let mut ks = Summary::new();
+    let mut corr = Summary::new();
+    for a in 0..m {
+        for b in a + 1..m {
+            ks.push(ks_two_sample(&preds[a], &preds[b]));
+            corr.push(pearson(&preds[a], &preds[b]));
+        }
+    }
+    let _ = out;
+    Ok(Fig3Report {
+        modes,
+        prediction_ks_mean: ks.mean(),
+        prediction_corr_mean: corr.mean(),
+    })
+}
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut cov, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va == 0.0 || vb == 0.0 {
+        0.0
+    } else {
+        cov / (va.sqrt() * vb.sqrt())
+    }
+}
+
+/// Render the three demos as the experiment report.
+pub fn render(fig1: &PoolingDemo, fig2: &PoolingDemo, fig3: &Fig3Report) -> String {
+    let mut s = String::new();
+    s.push_str("=== Fig 1: embarrassingly parallel MCMC, unimodal posterior ===\n");
+    s.push_str(&format!(
+        "KS(pooled, true) = {:.4}   mean KS(single chain, true) = {:.4}\n",
+        fig1.ks_pooled, fig1.ks_single_mean
+    ));
+    s.push_str("-> pooling sub-chains is a valid posterior sample (small KS)\n\n");
+
+    s.push_str("=== Fig 2: quasi-ergodicity, 3-modal posterior ===\n");
+    s.push_str(&format!(
+        "KS(pooled, true) = {:.4}   mean KS(single chain, true) = {:.4}\n",
+        fig2.ks_pooled, fig2.ks_single_mean
+    ));
+    s.push_str(&format!(
+        "pooled basin mass (true = 1/3 each): left={:.3} mid={:.3} right={:.3}\n",
+        fig2.basin_mass[0], fig2.basin_mass[1], fig2.basin_mass[2]
+    ));
+    s.push_str("-> chains never hop modes; pooled sample misrepresents the posterior\n\n");
+
+    s.push_str("=== Fig 3: prediction projection restores unimodality (sLDA) ===\n");
+    s.push_str(&format!(
+        "topic space : identity TV = {:.4}  aligned TV = {:.4}  permutation gap = {:.4}\n",
+        fig3.modes.mean_identity,
+        fig3.modes.mean_aligned,
+        fig3.modes.permutation_gap()
+    ));
+    s.push_str(&format!(
+        "              permuted topic fraction = {:.2}\n",
+        fig3.modes.mean_permuted_fraction
+    ));
+    s.push_str(&format!(
+        "prediction  : mean pairwise KS = {:.4}  mean pairwise corr = {:.4}\n",
+        fig3.prediction_ks_mean, fig3.prediction_corr_mean
+    ));
+    s.push_str(
+        "-> shards disagree on topic labels (multimodal) but agree on predictions (unimodal)\n",
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_split, SyntheticSpec};
+
+    #[test]
+    fn fig1_pooling_is_valid() {
+        let d = fig1_unimodal(3, 4000, 1);
+        assert!(d.ks_pooled < 0.05, "ks={}", d.ks_pooled);
+    }
+
+    #[test]
+    fn fig2_pooling_fails() {
+        let d = fig2_multimodal(4000, 2);
+        // chains stuck: middle mode unvisited, left over-weighted
+        assert!(d.basin_mass[1] < 0.01, "mid mass {}", d.basin_mass[1]);
+        assert!(d.basin_mass[0] > 0.55, "left mass {}", d.basin_mass[0]);
+        // pooled KS far worse than the unimodal case
+        assert!(d.ks_pooled > 0.2, "ks={}", d.ks_pooled);
+    }
+
+    #[test]
+    fn fig3_gap_large_predictions_agree() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ds = generate_split(&spec, 200, &mut rng);
+        let mut cfg = ExperimentConfig::quick();
+        cfg.engine = crate::config::schema::EngineKind::Native;
+        cfg.train.sweeps = 15;
+        cfg.train.burnin = 3;
+        cfg.train.eta_every = 3;
+        let engine = EngineHandle::native();
+        let r = fig3_projection(&ds, &cfg, &engine).unwrap();
+        // Topic labels across shards must be (at least partly) permuted.
+        assert!(
+            r.modes.permutation_gap() > 0.05,
+            "expected a permutation gap, got {:?}",
+            r.modes
+        );
+        // Predictions must correlate strongly despite the topic permutation.
+        assert!(
+            r.prediction_corr_mean > 0.5,
+            "local predictions should agree: corr={}",
+            r.prediction_corr_mean
+        );
+        let text = render(&fig1_unimodal(3, 500, 1), &fig2_multimodal(500, 2), &r);
+        assert!(text.contains("permutation gap"));
+    }
+
+    #[test]
+    fn mh_chain_targets_distribution() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let xs = mh_chain(|x| normal_logpdf(x, 2.0, 0.25), 2.0, 0.8, 20_000, 1000, &mut rng);
+        let s = Summary::from_slice(&xs);
+        assert!((s.mean() - 2.0).abs() < 0.05, "mean={}", s.mean());
+        assert!((s.var() - 0.25).abs() < 0.05, "var={}", s.var());
+    }
+
+    #[test]
+    fn mixture_logpdf_normalizes_mass() {
+        // numeric integral of exp(logpdf) ~ 1
+        let means = [-1.0, 1.0];
+        let h = 0.001;
+        let total: f64 = (-8000..8000)
+            .map(|i| (mixture_logpdf(i as f64 * h, &means, 0.2)).exp() * h)
+            .sum();
+        assert!((total - 1.0).abs() < 1e-3, "total={total}");
+    }
+}

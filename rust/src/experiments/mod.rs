@@ -1,0 +1,14 @@
+//! Experiment runners: one module per paper figure (see DESIGN.md §5 for
+//! the figure -> module -> bench index).
+//!
+//! * [`fig123`] — the quasi-ergodicity demonstrations: unimodal pooling
+//!   works (Fig 1), multimodal pooling fails (Fig 2), prediction projection
+//!   restores unimodality for sLDA (Fig 3).
+//! * [`fig5`] — label-distribution histogram + normality probe.
+//! * [`runner`] — the shared four-algorithm comparison harness behind
+//!   Fig 6 (continuous MD&A/EPS) and Fig 7 (binary sentiment), plus the
+//!   ablation sweeps (shards, topics, weight schemes).
+
+pub mod fig123;
+pub mod fig5;
+pub mod runner;

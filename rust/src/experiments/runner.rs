@@ -1,0 +1,269 @@
+//! The shared four-algorithm comparison harness (paper Figs. 6 and 7).
+//!
+//! One [`Comparison`] = one corpus + one config + R repeated runs of each
+//! algorithm (the paper averages 100 runs; each run re-seeds the partition
+//! and the samplers, corpus held fixed — matching the paper's protocol of
+//! re-dividing the training set per run). Output is the figure's content as
+//! a table: computation time and test MSE (Fig 6) / accuracy (Fig 7) per
+//! algorithm, plus the extras the paper discusses in prose: phase
+//! breakdowns, speedups vs Non-parallel, and communication volume.
+
+use crate::config::schema::ExperimentConfig;
+#[cfg(test)]
+use crate::config::schema::ResponseKind;
+use crate::data::corpus::Dataset;
+use crate::data::partition::train_test_split;
+use crate::data::synthetic::{generate_corpus, SyntheticSpec};
+use crate::parallel::comm::CommStats;
+use crate::parallel::leader::{run_with_engine, Algorithm};
+use crate::runtime::EngineHandle;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Summary;
+use crate::util::timer::PhaseTimings;
+
+/// Configuration of one comparison experiment.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Corpus spec (generated once per comparison).
+    pub spec: SyntheticSpec,
+    /// Training documents (rest become the test set) — paper: 3000/1216
+    /// (Exp I), 20000/5000 (Exp II).
+    pub n_train: usize,
+    pub cfg: ExperimentConfig,
+    /// Repeated runs per algorithm (paper: 100).
+    pub runs: usize,
+    pub algorithms: Vec<Algorithm>,
+}
+
+impl Comparison {
+    /// Paper Experiment I shape, scaled by `scale` in (0, 1] for quick runs.
+    pub fn fig6(scale: f64, runs: usize) -> Self {
+        let mut spec = SyntheticSpec::mdna();
+        spec.docs = ((spec.docs as f64 * scale) as usize).max(40);
+        spec.vocab = ((spec.vocab as f64 * scale) as usize).max(60);
+        let n_train = spec.docs * 3000 / 4216;
+        let mut cfg = ExperimentConfig::fig6();
+        cfg.model.topics = 16;
+        Comparison { spec, n_train, cfg, runs, algorithms: Algorithm::ALL.to_vec() }
+    }
+
+    /// Paper Experiment II shape, scaled.
+    pub fn fig7(scale: f64, runs: usize) -> Self {
+        let mut spec = SyntheticSpec::imdb();
+        spec.docs = ((spec.docs as f64 * scale) as usize).max(40);
+        spec.vocab = ((spec.vocab as f64 * scale) as usize).max(60);
+        let n_train = spec.docs * 20_000 / 25_000;
+        let mut cfg = ExperimentConfig::fig7();
+        cfg.model.topics = 16;
+        Comparison { spec, n_train, cfg, runs, algorithms: Algorithm::ALL.to_vec() }
+    }
+}
+
+/// Aggregated series for one algorithm across runs.
+#[derive(Clone, Debug)]
+pub struct AlgoSeries {
+    pub algorithm: Algorithm,
+    /// Real wall clock on this machine (1 core in the benchmark container).
+    pub wall: Summary,
+    /// Simulated M-core wall time (the paper's machine model; DESIGN.md §3).
+    pub sim_wall: Summary,
+    pub mse: Summary,
+    pub acc: Summary,
+    pub r2: Summary,
+    /// Last run's phase breakdown (representative).
+    pub timings: PhaseTimings,
+    /// Last run's communication stats.
+    pub comm: CommStats,
+}
+
+/// Run the full comparison. Returns one series per algorithm, in input
+/// order, plus the dataset actually used (for downstream diagnostics).
+pub fn run_comparison(
+    c: &Comparison,
+    engine: &EngineHandle,
+) -> anyhow::Result<(Vec<AlgoSeries>, Dataset)> {
+    let mut corpus_rng = Pcg64::seed_from_u64(c.cfg.seed ^ 0xC0FFEE);
+    let corpus = generate_corpus(&c.spec, &mut corpus_rng);
+    let ds = train_test_split(&corpus, c.n_train, &mut corpus_rng);
+
+    let mut series = Vec::new();
+    for &algo in &c.algorithms {
+        let mut wall = Summary::new();
+        let mut sim_wall = Summary::new();
+        let mut mse = Summary::new();
+        let mut acc = Summary::new();
+        let mut r2 = Summary::new();
+        let mut timings = PhaseTimings::new();
+        let mut comm = CommStats::default();
+        for run in 0..c.runs {
+            let mut cfg = c.cfg.clone();
+            cfg.seed = c.cfg.seed.wrapping_add(run as u64 * 7919);
+            let (out, _) = run_with_engine(algo, &ds, &cfg, engine, false)?;
+            wall.push(out.wall_secs);
+            sim_wall.push(out.sim_wall_secs);
+            mse.push(out.test_metrics.mse);
+            acc.push(out.test_metrics.acc);
+            r2.push(out.test_metrics.r2);
+            timings = out.timings;
+            comm = out.comm;
+            log::debug!(
+                "{} run {run}: wall={:.2}s mse={:.4} acc={:.4}",
+                algo.name(),
+                out.wall_secs,
+                out.test_metrics.mse,
+                out.test_metrics.acc
+            );
+        }
+        series.push(AlgoSeries { algorithm: algo, wall, sim_wall, mse, acc, r2, timings, comm });
+    }
+    Ok((series, ds))
+}
+
+/// Render the figure table. `binary` selects accuracy (Fig 7) vs MSE (Fig 6).
+pub fn render_table(title: &str, series: &[AlgoSeries], binary: bool) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("=== {title} ===\n"));
+    let base_wall = series
+        .iter()
+        .find(|s| s.algorithm == Algorithm::NonParallel)
+        .map(|s| s.sim_wall.mean())
+        .unwrap_or(f64::NAN);
+    let quality_hdr = if binary { "accuracy" } else { "test-MSE" };
+    out.push_str(&format!(
+        "{:<20} {:>9} {:>8} {:>9} {:>10} {:>8} {:>8} {:>10}\n",
+        "algorithm", "time(s)", "±sd", "wall1c(s)", quality_hdr, "±sd", "speedup", "comm(MB)"
+    ));
+    for s in series {
+        let quality = if binary { &s.acc } else { &s.mse };
+        out.push_str(&format!(
+            "{:<20} {:>9.3} {:>8.3} {:>9.3} {:>10.4} {:>8.4} {:>7.2}x {:>10.2}\n",
+            s.algorithm.name(),
+            s.sim_wall.mean(),
+            s.sim_wall.std(),
+            s.wall.mean(),
+            quality.mean(),
+            quality.std(),
+            base_wall / s.sim_wall.mean(),
+            s.comm.total() as f64 / 1e6,
+        ));
+    }
+    out.push_str(
+        "time(s) = simulated M-core machine time (max worker CPU + serial phases, \
+         DESIGN.md §3); wall1c(s) = real wall on this 1-core container\n",
+    );
+    out.push_str("phase breakdown (last run, worker-CPU seconds):\n");
+    for s in series {
+        out.push_str(&format!("  {:<20} {}\n", s.algorithm.name(), s.timings.render()));
+    }
+    out
+}
+
+/// Sanity assertions on the *shape* of the paper's result (who wins, in
+/// which direction) — used by the integration tests and the benches'
+/// self-check mode. Tolerant: shape, not absolute numbers.
+pub fn check_fig_shape(series: &[AlgoSeries], binary: bool) -> anyhow::Result<()> {
+    let get = |a: Algorithm| {
+        series
+            .iter()
+            .find(|s| s.algorithm == a)
+            .ok_or_else(|| anyhow::anyhow!("missing series for {}", a.name()))
+    };
+    let nonp = get(Algorithm::NonParallel)?;
+    let naive = get(Algorithm::NaiveCombination)?;
+    let simple = get(Algorithm::SimpleAverage)?;
+    let weighted = get(Algorithm::WeightedAverage)?;
+
+    // Quality: Naive must be clearly worse; Simple/Weighted comparable to
+    // NonParallel (paper allows them to be even slightly better).
+    if binary {
+        anyhow::ensure!(
+            naive.acc.mean() < simple.acc.mean(),
+            "naive accuracy {} should trail simple {}",
+            naive.acc.mean(),
+            simple.acc.mean()
+        );
+        anyhow::ensure!(
+            simple.acc.mean() > 0.9 * nonp.acc.mean(),
+            "simple accuracy {} too far below non-parallel {}",
+            simple.acc.mean(),
+            nonp.acc.mean()
+        );
+    } else {
+        anyhow::ensure!(
+            naive.mse.mean() > simple.mse.mean(),
+            "naive mse {} should exceed simple {}",
+            naive.mse.mean(),
+            simple.mse.mean()
+        );
+        anyhow::ensure!(
+            simple.mse.mean() < 1.5 * nonp.mse.mean(),
+            "simple mse {} too far above non-parallel {}",
+            simple.mse.mean(),
+            nonp.mse.mean()
+        );
+    }
+    // Speed: parallel training algorithms beat NonParallel; Weighted pays
+    // the full-train prediction penalty and is the slowest of the three
+    // parallel arms (paper: even slower than NonParallel on large corpora).
+    anyhow::ensure!(
+        naive.sim_wall.mean() < nonp.sim_wall.mean(),
+        "naive ({:.3}s) should be faster than non-parallel ({:.3}s)",
+        naive.sim_wall.mean(),
+        nonp.sim_wall.mean()
+    );
+    anyhow::ensure!(
+        simple.sim_wall.mean() < nonp.sim_wall.mean(),
+        "simple ({:.3}s) should be faster than non-parallel ({:.3}s)",
+        simple.sim_wall.mean(),
+        nonp.sim_wall.mean()
+    );
+    anyhow::ensure!(
+        weighted.sim_wall.mean() > simple.sim_wall.mean(),
+        "weighted ({:.3}s) should be slower than simple ({:.3}s)",
+        weighted.sim_wall.mean(),
+        simple.sim_wall.mean()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_comparison() -> Comparison {
+        let mut c = Comparison::fig6(0.06, 1); // ~250 docs
+        c.cfg.engine = crate::config::schema::EngineKind::Native;
+        c.cfg.model.topics = 8;
+        c.cfg.train.sweeps = 12;
+        c.cfg.train.burnin = 3;
+        c.cfg.train.eta_every = 3;
+        c.cfg.train.predict_sweeps = 6;
+        c.cfg.train.predict_burnin = 2;
+        c
+    }
+
+    #[test]
+    fn comparison_produces_series_and_table() {
+        let c = tiny_comparison();
+        let engine = EngineHandle::native();
+        let (series, ds) = run_comparison(&c, &engine).unwrap();
+        assert_eq!(series.len(), 4);
+        assert_eq!(ds.train.num_docs(), c.n_train);
+        let table = render_table("Fig 6 (tiny)", &series, false);
+        assert!(table.contains("non-parallel"));
+        assert!(table.contains("test-MSE"));
+        assert!(table.contains("speedup"));
+        for s in &series {
+            assert_eq!(s.wall.n, 1);
+            assert!(s.wall.mean() > 0.0);
+            assert!(s.mse.mean().is_finite());
+        }
+    }
+
+    #[test]
+    fn fig7_preset_is_binary() {
+        let c = Comparison::fig7(0.01, 1);
+        assert_eq!(c.cfg.response, ResponseKind::Binary);
+        assert!(c.n_train < c.spec.docs);
+    }
+}

@@ -1,0 +1,58 @@
+//! # cfslda — Communication-Free Parallel Supervised Topic Models
+//!
+//! A production reproduction of *"Communication-Free Parallel Supervised
+//! Topic Models"* (Gao & Zheng, 2017): embarrassingly parallel MCMC for
+//! supervised LDA that sidesteps the quasi-ergodicity problem of multimodal
+//! topic posteriors by combining **predictions** (one-dimensional, unimodal)
+//! instead of **topic samples** (high-dimensional, one posterior mode per
+//! topic-label permutation).
+//!
+//! ## Architecture (three layers, python never on the request path)
+//!
+//! * **L3 (this crate)** — the coordinator: corpus pipeline, collapsed Gibbs
+//!   sampler, communication-free shard workers, the paper's three combination
+//!   rules (Naive / Simple Average / Weighted Average) plus the non-parallel
+//!   baseline, evaluation, experiment runners, CLI.
+//! * **L2 (python/compile/model.py)** — the dense sLDA algebra (ridge eta
+//!   solve, batched prediction, weighted combination, Gaussian response
+//!   log-densities) as JAX graphs, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels inside those graphs.
+//!
+//! [`runtime`] loads the AOT artifacts through the PJRT C API (`xla` crate)
+//! and exposes them behind the [`runtime::Engine`] trait; a bit-compatible
+//! pure-rust [`runtime::native`] engine serves as fallback and as the
+//! cross-validation oracle in integration tests.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use cfslda::config::schema::ExperimentConfig;
+//! use cfslda::data::synthetic::{SyntheticSpec, generate};
+//! use cfslda::parallel::leader::{run_algorithm, Algorithm};
+//! use cfslda::util::rng::Pcg64;
+//!
+//! let mut rng = Pcg64::seed_from_u64(7);
+//! let spec = SyntheticSpec::continuous_small();
+//! let dataset = generate(&spec, &mut rng);
+//! let cfg = ExperimentConfig::quick();
+//! let out = run_algorithm(Algorithm::SimpleAverage, &dataset, &cfg).unwrap();
+//! println!("test MSE = {:.4}", out.test_metrics.mse);
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod combine;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod model;
+pub mod parallel;
+pub mod regress;
+pub mod runtime;
+pub mod sampler;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,19 @@
+//! `cfslda` — leader binary for the communication-free parallel sLDA stack.
+//!
+//! See `cfslda help` for commands. The heavy lifting lives in the library
+//! (rust/src/); AOT XLA artifacts are produced once by `make artifacts`.
+
+use cfslda::cli::args::Args;
+use cfslda::cli::commands;
+
+fn main() {
+    cfslda::util::logging::init();
+    let code = match Args::from_env().and_then(commands::dispatch) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

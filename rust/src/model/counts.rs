@@ -1,0 +1,223 @@
+//! Collapsed-Gibbs sufficient statistics: the N_{d,t}, N_{t,w}, N_t count
+//! matrices of paper eq. (1).
+//!
+//! Memory layout is chosen for the sampler's access pattern (DESIGN.md
+//! §Perf): the inner loop iterates over all T topics for a fixed word w and
+//! a fixed document d, so both `ndt` (doc-major, `[d * T + t]`) and `ntw`
+//! (**word-major**, `[w * T + t]`) keep the T-strided slices contiguous —
+//! one cache line covers 16 u32 topic counts.
+
+/// Count matrices for one Gibbs chain over one (sub-)corpus.
+#[derive(Clone, Debug)]
+pub struct CountMatrices {
+    /// Number of topics T.
+    pub t: usize,
+    /// Vocabulary size W.
+    pub w: usize,
+    /// Number of documents D.
+    pub d: usize,
+    /// N_{d,t}: topic counts per document, layout `[d * T + t]`.
+    pub ndt: Vec<u32>,
+    /// N_d: tokens per document.
+    pub nd: Vec<u32>,
+    /// N_{t,w}: word-topic counts, **word-major** layout `[w * T + t]`.
+    pub ntw: Vec<u32>,
+    /// N_t: total tokens per topic.
+    pub nt: Vec<u32>,
+}
+
+impl CountMatrices {
+    pub fn new(d: usize, t: usize, w: usize) -> Self {
+        CountMatrices {
+            t,
+            w,
+            d,
+            ndt: vec![0; d * t],
+            nd: vec![0; d],
+            ntw: vec![0; w * t],
+            nt: vec![0; t],
+        }
+    }
+
+    /// Register token `w` of document `d` as assigned to `topic`.
+    #[inline]
+    pub fn inc(&mut self, d: usize, w: u32, topic: usize) {
+        self.ndt[d * self.t + topic] += 1;
+        self.nd[d] += 1;
+        self.ntw[w as usize * self.t + topic] += 1;
+        self.nt[topic] += 1;
+    }
+
+    /// Remove the assignment of token `w` of document `d` to `topic`.
+    #[inline]
+    pub fn dec(&mut self, d: usize, w: u32, topic: usize) {
+        debug_assert!(self.ndt[d * self.t + topic] > 0);
+        self.ndt[d * self.t + topic] -= 1;
+        self.nd[d] -= 1;
+        self.ntw[w as usize * self.t + topic] -= 1;
+        self.nt[topic] -= 1;
+    }
+
+    /// Per-document topic count row.
+    #[inline]
+    pub fn ndt_row(&self, d: usize) -> &[u32] {
+        &self.ndt[d * self.t..(d + 1) * self.t]
+    }
+
+    /// Per-word topic count column (contiguous thanks to word-major layout).
+    #[inline]
+    pub fn ntw_row(&self, w: u32) -> &[u32] {
+        let w = w as usize;
+        &self.ntw[w * self.t..(w + 1) * self.t]
+    }
+
+    /// Empirical topic distribution zbar_d (paper: mean of topic indicators).
+    pub fn zbar_row(&self, d: usize) -> Vec<f32> {
+        let n = self.nd[d].max(1) as f32;
+        self.ndt_row(d).iter().map(|&c| c as f32 / n).collect()
+    }
+
+    /// Dense row-major [D, T] zbar matrix (input to the eta solve / predict
+    /// artifacts).
+    pub fn zbar_matrix(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.d * self.t);
+        for d in 0..self.d {
+            out.extend_from_slice(&self.zbar_row(d));
+        }
+        out
+    }
+
+    /// Pool another chain's word-topic statistics into this one — the Naive
+    /// Combination step 3 ("treat the combination of sub-sample topics as if
+    /// they were directly sampled for the whole training sample"). Document
+    /// rows are per-shard and are concatenated by the caller; only the
+    /// word-topic mass is summed here.
+    pub fn absorb_word_topic(&mut self, other: &CountMatrices) {
+        assert_eq!(self.t, other.t, "topic count mismatch");
+        assert_eq!(self.w, other.w, "vocab mismatch");
+        for (a, b) in self.ntw.iter_mut().zip(&other.ntw) {
+            *a += b;
+        }
+        for (a, b) in self.nt.iter_mut().zip(&other.nt) {
+            *a += b;
+        }
+    }
+
+    /// Verify internal consistency: sum_t N_dt == N_d, sum_w N_tw == N_t,
+    /// sum_d N_d == sum_t N_t. Used by property tests after random sweeps.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        for d in 0..self.d {
+            let s: u32 = self.ndt_row(d).iter().sum();
+            if s != self.nd[d] {
+                anyhow::bail!("doc {d}: sum_t N_dt = {s} != N_d = {}", self.nd[d]);
+            }
+        }
+        let mut per_topic = vec![0u64; self.t];
+        for w in 0..self.w {
+            for t in 0..self.t {
+                per_topic[t] += self.ntw[w * self.t + t] as u64;
+            }
+        }
+        for t in 0..self.t {
+            if per_topic[t] != self.nt[t] as u64 {
+                anyhow::bail!("topic {t}: sum_w N_tw = {} != N_t = {}", per_topic[t], self.nt[t]);
+            }
+        }
+        let total_d: u64 = self.nd.iter().map(|&x| x as u64).sum();
+        let total_t: u64 = self.nt.iter().map(|&x| x as u64).sum();
+        if total_d != total_t {
+            anyhow::bail!("token totals disagree: docs {total_d} vs topics {total_t}");
+        }
+        Ok(())
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.nt.iter().map(|&x| x as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn inc_dec_roundtrip() {
+        let mut c = CountMatrices::new(2, 3, 5);
+        c.inc(0, 4, 2);
+        c.inc(0, 4, 2);
+        c.inc(1, 0, 1);
+        c.check_invariants().unwrap();
+        assert_eq!(c.ndt_row(0), &[0, 0, 2]);
+        assert_eq!(c.ntw_row(4), &[0, 0, 2]);
+        assert_eq!(c.nd, vec![2, 1]);
+        assert_eq!(c.nt, vec![0, 1, 2]);
+        c.dec(0, 4, 2);
+        c.check_invariants().unwrap();
+        assert_eq!(c.total_tokens(), 2);
+    }
+
+    #[test]
+    fn zbar_normalizes() {
+        let mut c = CountMatrices::new(1, 4, 3);
+        c.inc(0, 0, 1);
+        c.inc(0, 1, 1);
+        c.inc(0, 2, 3);
+        let z = c.zbar_row(0);
+        assert_eq!(z, vec![0.0, 2.0 / 3.0, 0.0, 1.0 / 3.0]);
+        let m = c.zbar_matrix();
+        assert_eq!(m.len(), 4);
+        assert!((m.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_sweep_preserves_invariants() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let (d, t, w) = (6, 4, 10);
+        let mut c = CountMatrices::new(d, t, w);
+        // assign random tokens
+        let mut assignments = Vec::new();
+        for doc in 0..d {
+            for _ in 0..20 {
+                let word = rng.gen_range(w) as u32;
+                let topic = rng.gen_range(t);
+                c.inc(doc, word, topic);
+                assignments.push((doc, word, topic));
+            }
+        }
+        c.check_invariants().unwrap();
+        // random reassignments (the Gibbs inner operation)
+        for _ in 0..500 {
+            let i = rng.gen_range(assignments.len());
+            let (doc, word, old) = assignments[i];
+            c.dec(doc, word, old);
+            let new = rng.gen_range(t);
+            c.inc(doc, word, new);
+            assignments[i] = (doc, word, new);
+        }
+        c.check_invariants().unwrap();
+        assert_eq!(c.total_tokens(), (d * 20) as u64);
+    }
+
+    #[test]
+    fn absorb_pools_word_topic_mass() {
+        let mut a = CountMatrices::new(1, 2, 3);
+        a.inc(0, 0, 0);
+        let mut b = CountMatrices::new(2, 2, 3);
+        b.inc(0, 0, 1);
+        b.inc(1, 2, 1);
+        a.absorb_word_topic(&b);
+        assert_eq!(a.ntw_row(0), &[1, 1]);
+        assert_eq!(a.nt, vec![1, 2]);
+        // doc-side counts of `a` untouched
+        assert_eq!(a.nd, vec![1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn absorb_rejects_mismatched_shapes() {
+        let mut a = CountMatrices::new(1, 2, 3);
+        let b = CountMatrices::new(1, 3, 3);
+        a.absorb_word_topic(&b);
+    }
+}

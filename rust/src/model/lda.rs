@@ -1,0 +1,109 @@
+//! Plain (unsupervised) LDA via collapsed Gibbs (Griffiths & Steyvers 2004).
+//!
+//! Used by the quasi-ergodicity diagnostics (Fig 2/3 reproduction): LDA's
+//! topic posterior has one mode per topic-label permutation, so independent
+//! chains on different shards converge to different permutations — exactly
+//! the failure the paper's prediction-space combination sidesteps. The
+//! Hungarian probe in `eval::mode_diag` quantifies the misalignment on
+//! models trained here.
+
+use super::counts::CountMatrices;
+use super::slda::SldaModel;
+use crate::data::corpus::Corpus;
+use crate::util::rng::Pcg64;
+
+/// Train plain LDA; returns phi-hat (word-major, like [`SldaModel::phi`])
+/// and the final counts.
+pub fn train_lda(
+    corpus: &Corpus,
+    topics: usize,
+    alpha: f64,
+    beta: f64,
+    sweeps: usize,
+    rng: &mut Pcg64,
+) -> (Vec<f32>, CountMatrices) {
+    let t = topics;
+    let w = corpus.vocab_size;
+    let d = corpus.num_docs();
+    let wbeta = w as f64 * beta;
+
+    let mut counts = CountMatrices::new(d, t, w);
+    let mut z: Vec<Vec<u16>> = Vec::with_capacity(d);
+    for (di, doc) in corpus.docs.iter().enumerate() {
+        let mut zd = Vec::with_capacity(doc.len());
+        for &wi in &doc.tokens {
+            let topic = rng.gen_range(t);
+            counts.inc(di, wi, topic);
+            zd.push(topic as u16);
+        }
+        z.push(zd);
+    }
+
+    let mut probs = vec![0.0f64; t];
+    for _ in 0..sweeps {
+        for (di, doc) in corpus.docs.iter().enumerate() {
+            let zd = &mut z[di];
+            for (n, &wi) in doc.tokens.iter().enumerate() {
+                let old = zd[n] as usize;
+                counts.dec(di, wi, old);
+                {
+                    let ndt = &counts.ndt[di * t..(di + 1) * t];
+                    let ntw = &counts.ntw[wi as usize * t..(wi as usize + 1) * t];
+                    for ti in 0..t {
+                        probs[ti] = (ndt[ti] as f64 + alpha)
+                            * (ntw[ti] as f64 + beta)
+                            / (counts.nt[ti] as f64 + wbeta);
+                    }
+                }
+                let new = rng.sample_discrete(&probs);
+                counts.inc(di, wi, new);
+                zd[n] = new as u16;
+            }
+        }
+    }
+    (SldaModel::phi_from_counts(&counts, beta), counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_corpus, SyntheticSpec};
+
+    #[test]
+    fn lda_recovers_topic_structure() {
+        // Corpus with sharply separated topics: after training, each
+        // learned topic should concentrate on a subset of the vocabulary.
+        let mut spec = SyntheticSpec::continuous_small();
+        spec.topics = 4;
+        spec.beta = 0.01; // peaky generating topics
+        spec.docs = 150;
+        spec.vocab = 200;
+        let mut rng = Pcg64::seed_from_u64(1);
+        let corpus = generate_corpus(&spec, &mut rng);
+        let (phi, counts) = train_lda(&corpus, 4, 0.3, 0.05, 30, &mut rng);
+        counts.check_invariants().unwrap();
+        // entropy of each learned topic must be far below uniform
+        let uniform_entropy = (spec.vocab as f64).ln();
+        for ti in 0..4 {
+            let mut h = 0.0;
+            for wi in 0..spec.vocab {
+                let p = phi[wi * 4 + ti] as f64;
+                if p > 0.0 {
+                    h -= p * p.ln();
+                }
+            }
+            assert!(h < 0.85 * uniform_entropy, "topic {ti} entropy {h} vs uniform {uniform_entropy}");
+        }
+    }
+
+    #[test]
+    fn counts_preserved_and_deterministic() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(2);
+        let corpus = generate_corpus(&spec, &mut rng);
+        let (phi_a, counts) = train_lda(&corpus, 6, 0.5, 0.1, 5, &mut Pcg64::seed_from_u64(3));
+        assert_eq!(counts.total_tokens(), corpus.num_tokens() as u64);
+        let (phi_b, _) = train_lda(&corpus, 6, 0.5, 0.1, 5, &mut Pcg64::seed_from_u64(3));
+        assert_eq!(phi_a, phi_b);
+    }
+}

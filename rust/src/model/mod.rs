@@ -1,0 +1,8 @@
+//! Model layer: sufficient-statistic count matrices for collapsed Gibbs,
+//! the trained sLDA model (eta, phi-hat, rho), and plain unsupervised LDA
+//! (used by the quasi-ergodicity diagnostics).
+
+pub mod counts;
+pub mod lda;
+pub mod persist;
+pub mod slda;

@@ -1,0 +1,169 @@
+//! Model persistence: a compact binary format for trained [`SldaModel`]s,
+//! enabling the production `cfslda run --save-model` → `cfslda predict`
+//! workflow (train once, serve predictions later without retraining).
+//!
+//! Format (little-endian):
+//!   magic "CFSLDA1\0" | u32 t | u32 w | f64 rho | f64 alpha |
+//!   f64 train_mse | f64 train_acc | f64 eta[t] | f32 phi[w*t] | u64 fnv
+//! The trailing FNV-1a checksum covers everything after the magic.
+
+use super::slda::SldaModel;
+use anyhow::{bail, Context};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CFSLDA1\0";
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Serialize a model to `path`.
+pub fn save_model(model: &SldaModel, path: &Path) -> anyhow::Result<()> {
+    let mut body: Vec<u8> = Vec::with_capacity(32 + model.eta.len() * 8 + model.phi.len() * 4);
+    body.extend_from_slice(&(model.t as u32).to_le_bytes());
+    body.extend_from_slice(&(model.w as u32).to_le_bytes());
+    body.extend_from_slice(&model.rho.to_le_bytes());
+    body.extend_from_slice(&model.alpha.to_le_bytes());
+    body.extend_from_slice(&model.train_mse.to_le_bytes());
+    body.extend_from_slice(&model.train_acc.to_le_bytes());
+    for &e in &model.eta {
+        body.extend_from_slice(&e.to_le_bytes());
+    }
+    for &p in &model.phi {
+        body.extend_from_slice(&p.to_le_bytes());
+    }
+    let mut f = BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&body)?;
+    f.write_all(&fnv1a(&body).to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a model from `path`, verifying structure and checksum.
+pub fn load_model(path: &Path) -> anyhow::Result<SldaModel> {
+    let mut f = BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not a cfslda model (bad magic)");
+    }
+    let mut rest = Vec::new();
+    f.read_to_end(&mut rest)?;
+    if rest.len() < 8 {
+        bail!("truncated model file");
+    }
+    let (body, ck) = rest.split_at(rest.len() - 8);
+    let want = u64::from_le_bytes(ck.try_into().unwrap());
+    if fnv1a(body) != want {
+        bail!("model checksum mismatch — corrupted file");
+    }
+
+    let mut off = 0usize;
+    let mut take = |n: usize| -> anyhow::Result<&[u8]> {
+        if off + n > body.len() {
+            bail!("truncated model body");
+        }
+        let s = &body[off..off + n];
+        off += n;
+        Ok(s)
+    };
+    let t = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+    let w = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+    if t == 0 || w == 0 || t > 1 << 16 || w > 1 << 28 {
+        bail!("implausible model dims t={t} w={w}");
+    }
+    let rho = f64::from_le_bytes(take(8)?.try_into().unwrap());
+    let alpha = f64::from_le_bytes(take(8)?.try_into().unwrap());
+    let train_mse = f64::from_le_bytes(take(8)?.try_into().unwrap());
+    let train_acc = f64::from_le_bytes(take(8)?.try_into().unwrap());
+    let mut eta = Vec::with_capacity(t);
+    for _ in 0..t {
+        eta.push(f64::from_le_bytes(take(8)?.try_into().unwrap()));
+    }
+    let mut phi = Vec::with_capacity(w * t);
+    for _ in 0..w * t {
+        phi.push(f32::from_le_bytes(take(4)?.try_into().unwrap()));
+    }
+    if off != body.len() {
+        bail!("trailing bytes in model file");
+    }
+    Ok(SldaModel { t, w, eta, phi, rho, alpha, train_mse, train_acc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_model_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn random_model(t: usize, w: usize, seed: u64) -> SldaModel {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        SldaModel {
+            t,
+            w,
+            eta: (0..t).map(|_| rng.next_gaussian()).collect(),
+            phi: (0..w * t).map(|_| rng.next_f32()).collect(),
+            rho: 0.42,
+            alpha: 0.3,
+            train_mse: 0.1,
+            train_acc: 0.9,
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let m = random_model(8, 100, 1);
+        let p = tmp("rt.bin");
+        save_model(&m, &p).unwrap();
+        let m2 = load_model(&p).unwrap();
+        assert_eq!(m.t, m2.t);
+        assert_eq!(m.w, m2.w);
+        assert_eq!(m.eta, m2.eta);
+        assert_eq!(m.phi, m2.phi);
+        assert_eq!(m.rho, m2.rho);
+        assert_eq!(m.train_acc, m2.train_acc);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let m = random_model(4, 30, 2);
+        let p = tmp("corrupt.bin");
+        save_model(&m, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_model(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncation_and_bad_magic_detected() {
+        let m = random_model(4, 30, 3);
+        let p = tmp("trunc.bin");
+        save_model(&m, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 20]).unwrap();
+        assert!(load_model(&p).is_err());
+        std::fs::write(&p, b"NOTAMODL").unwrap();
+        assert!(load_model(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,161 @@
+//! The trained sLDA model: everything needed to predict unseen documents.
+//!
+//! Produced by `sampler::gibbs_train`, consumed by `sampler::gibbs_predict`.
+//! phi-hat follows paper eq. (3):
+//!   phi_{t,w} = (N_{t,w} + beta) / (N_{t,.} + W beta).
+
+use super::counts::CountMatrices;
+
+/// A fitted sLDA model (one shard's local model, or the full-data model).
+#[derive(Clone, Debug)]
+pub struct SldaModel {
+    /// Number of topics T.
+    pub t: usize,
+    /// Vocabulary size W.
+    pub w: usize,
+    /// Regression coefficients eta-hat, length T.
+    pub eta: Vec<f64>,
+    /// Smoothed topic-word distributions, **word-major** `[w * T + t]`
+    /// (same access pattern as the sampler: all topics for one word).
+    pub phi: Vec<f32>,
+    /// Response variance rho (fixed or learned).
+    pub rho: f64,
+    /// Dirichlet hyperparameter alpha (needed by the prediction sampler).
+    pub alpha: f64,
+    /// Training-set MSE of the final eta fit (Weighted Average weights).
+    pub train_mse: f64,
+    /// Training-set accuracy at the 0.5 threshold (binary responses).
+    pub train_acc: f64,
+}
+
+impl SldaModel {
+    /// Estimate phi-hat from final counts (paper eq. 3).
+    pub fn phi_from_counts(counts: &CountMatrices, beta: f64) -> Vec<f32> {
+        let (t, w) = (counts.t, counts.w);
+        let mut phi = vec![0.0f32; w * t];
+        let denom: Vec<f64> =
+            counts.nt.iter().map(|&n| n as f64 + w as f64 * beta).collect();
+        for wi in 0..w {
+            let row = counts.ntw_row(wi as u32);
+            for ti in 0..t {
+                phi[wi * t + ti] = ((row[ti] as f64 + beta) / denom[ti]) as f32;
+            }
+        }
+        phi
+    }
+
+    /// All topics' probability of word `w` (contiguous slice).
+    #[inline]
+    pub fn phi_row(&self, w: u32) -> &[f32] {
+        let w = w as usize;
+        &self.phi[w * self.t..(w + 1) * self.t]
+    }
+
+    /// phi as topic-major rows (for diagnostics: Hungarian alignment,
+    /// top-words rendering). Row `t` has length W and sums to ~1.
+    pub fn phi_topic_rows(&self) -> Vec<Vec<f64>> {
+        (0..self.t)
+            .map(|ti| (0..self.w).map(|wi| self.phi[wi * self.t + ti] as f64).collect())
+            .collect()
+    }
+
+    /// Top-k most probable words of a topic (ids).
+    pub fn top_words(&self, topic: usize, k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..self.w as u32).collect();
+        idx.sort_by(|&a, &b| {
+            self.phi[b as usize * self.t + topic]
+                .partial_cmp(&self.phi[a as usize * self.t + topic])
+                .unwrap()
+        });
+        idx.truncate(k);
+        idx
+    }
+
+    /// Point prediction yhat = eta . zbar (paper eq. 5).
+    pub fn predict_zbar(&self, zbar: &[f32]) -> f64 {
+        debug_assert_eq!(zbar.len(), self.t);
+        zbar.iter().zip(&self.eta).map(|(&z, &e)| z as f64 * e).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts_fixture() -> CountMatrices {
+        let mut c = CountMatrices::new(2, 2, 3);
+        // topic 0 heavy on word 0; topic 1 heavy on word 2
+        for _ in 0..8 {
+            c.inc(0, 0, 0);
+        }
+        for _ in 0..2 {
+            c.inc(0, 1, 0);
+        }
+        for _ in 0..9 {
+            c.inc(1, 2, 1);
+        }
+        c.inc(1, 1, 1);
+        c
+    }
+
+    #[test]
+    fn phi_rows_sum_to_one() {
+        let c = counts_fixture();
+        let phi = SldaModel::phi_from_counts(&c, 0.1);
+        let t = c.t;
+        for ti in 0..t {
+            let s: f64 = (0..c.w).map(|wi| phi[wi * t + ti] as f64).sum();
+            assert!((s - 1.0).abs() < 1e-5, "topic {ti} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn phi_matches_eq3() {
+        let c = counts_fixture();
+        let beta = 0.5;
+        let phi = SldaModel::phi_from_counts(&c, beta);
+        // N_{0,0} = 8, N_0 = 10, W = 3 -> (8 + .5) / (10 + 1.5)
+        assert!((phi[0] as f64 - 8.5 / 11.5).abs() < 1e-6);
+        // N_{1,2} = 9, N_1 = 10 -> (9 + .5)/11.5
+        assert!((phi[2 * 2 + 1] as f64 - 9.5 / 11.5).abs() < 1e-6);
+    }
+
+    fn model_fixture() -> SldaModel {
+        let c = counts_fixture();
+        SldaModel {
+            t: 2,
+            w: 3,
+            eta: vec![1.0, -2.0],
+            phi: SldaModel::phi_from_counts(&c, 0.1),
+            rho: 0.5,
+            alpha: 0.3,
+            train_mse: 0.1,
+            train_acc: 0.9,
+        }
+    }
+
+    #[test]
+    fn predict_is_dot_product() {
+        let m = model_fixture();
+        let y = m.predict_zbar(&[0.25, 0.75]);
+        assert!((y - (0.25 - 1.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn top_words_ranked_by_phi() {
+        let m = model_fixture();
+        assert_eq!(m.top_words(0, 1), vec![0]); // topic 0 loves word 0
+        assert_eq!(m.top_words(1, 1), vec![2]); // topic 1 loves word 2
+    }
+
+    #[test]
+    fn topic_rows_transpose_consistent() {
+        let m = model_fixture();
+        let rows = m.phi_topic_rows();
+        for ti in 0..m.t {
+            for wi in 0..m.w {
+                assert!((rows[ti][wi] - m.phi[wi * m.t + ti] as f64).abs() < 1e-9);
+            }
+        }
+    }
+}

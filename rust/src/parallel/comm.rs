@@ -1,0 +1,137 @@
+//! Communication ledger: proves "communication-free".
+//!
+//! The paper's algorithms exchange data only at two points: shard **setup**
+//! (the leader hands each worker its sub-corpus, plus the test set / full
+//! training set when local predictions are required) and final **gather**
+//! (each worker returns its model summary and local predictions). During
+//! sampling there is exactly zero traffic. The ledger measures both in
+//! bytes — so the experiment reports can show what an MPI/posterior-sharing
+//! parallel sampler would have paid per sweep vs what this one pays total.
+
+use crate::data::corpus::Corpus;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe byte counters for one parallel run.
+#[derive(Debug, Default)]
+pub struct CommLedger {
+    setup_bytes: AtomicU64,
+    gather_bytes: AtomicU64,
+    /// Synchronization events during sampling (always 0 for this system;
+    /// present so alternative baselines could be instrumented).
+    sampling_syncs: AtomicU64,
+}
+
+/// Immutable snapshot for reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    pub setup_bytes: u64,
+    pub gather_bytes: u64,
+    pub sampling_syncs: u64,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_setup(&self, bytes: u64) {
+        self.setup_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_gather(&self, bytes: u64) {
+        self.gather_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_sampling_sync(&self) {
+        self.sampling_syncs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CommStats {
+        CommStats {
+            setup_bytes: self.setup_bytes.load(Ordering::Relaxed),
+            gather_bytes: self.gather_bytes.load(Ordering::Relaxed),
+            sampling_syncs: self.sampling_syncs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Wire size of a corpus: token ids (u32) + one response (f64) + one length
+/// (u32) per document.
+pub fn corpus_bytes(c: &Corpus) -> u64 {
+    (c.num_tokens() * 4 + c.num_docs() * 12) as u64
+}
+
+/// Wire size of a trained local model summary: eta (f64 x T) + phi
+/// (f32 x W x T) + scalars.
+pub fn model_bytes(t: usize, w: usize) -> u64 {
+    (t * 8 + w * t * 4 + 32) as u64
+}
+
+/// Wire size of a prediction vector.
+pub fn predictions_bytes(n: usize) -> u64 {
+    (n * 8) as u64
+}
+
+impl CommStats {
+    pub fn total(&self) -> u64 {
+        self.setup_bytes + self.gather_bytes
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "setup={:.2}MB gather={:.2}MB sampling_syncs={}",
+            self.setup_bytes as f64 / 1e6,
+            self.gather_bytes as f64 / 1e6,
+            self.sampling_syncs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Document;
+
+    #[test]
+    fn ledger_accumulates_across_threads() {
+        let ledger = CommLedger::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    ledger.add_setup(100);
+                    ledger.add_gather(10);
+                });
+            }
+        });
+        let st = ledger.snapshot();
+        assert_eq!(st.setup_bytes, 800);
+        assert_eq!(st.gather_bytes, 80);
+        assert_eq!(st.sampling_syncs, 0);
+        assert_eq!(st.total(), 880);
+    }
+
+    #[test]
+    fn corpus_bytes_formula() {
+        let c = Corpus::new(
+            vec![
+                Document { tokens: vec![0, 1, 2], response: 0.0 },
+                Document { tokens: vec![3], response: 1.0 },
+            ],
+            4,
+        );
+        assert_eq!(corpus_bytes(&c), (4 * 4 + 2 * 12) as u64);
+    }
+
+    #[test]
+    fn model_and_pred_bytes() {
+        assert_eq!(model_bytes(8, 100), (8 * 8 + 100 * 8 * 4 + 32) as u64);
+        assert_eq!(predictions_bytes(10), 80);
+    }
+
+    #[test]
+    fn render_contains_sync_count() {
+        let ledger = CommLedger::new();
+        ledger.add_sampling_sync();
+        assert!(ledger.snapshot().render().contains("sampling_syncs=1"));
+    }
+}

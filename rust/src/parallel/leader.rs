@@ -1,0 +1,599 @@
+//! The leader: runs one of the paper's four algorithms end to end.
+//!
+//! * **NonParallel** — single-chain sLDA on the full training set (the
+//!   paper's quality/time reference).
+//! * **NaiveCombination** — the failing baseline: M independent chains,
+//!   then pool the *sampled topics* as if one chain had produced them
+//!   (word-topic counts summed, zbar rows concatenated), fit one eta by
+//!   regression, estimate one pooled phi-hat, predict once. Quasi-ergodicity
+//!   (topic-permutation misalignment across chains) blurs the pooled model.
+//! * **SimpleAverage** — M chains, each predicts the test set locally; the
+//!   leader averages the predictions (eq. 7).
+//! * **WeightedAverage** — like SimpleAverage plus each worker predicts the
+//!   *whole training set* to derive inverse-MSE / accuracy weights
+//!   (eqs. 8-9), the step that makes it slower than NonParallel.
+
+use crate::combine::rules::combine_median;
+use crate::combine::{combine_predictions, weights, CombineRule, WeightScheme};
+use crate::config::schema::{ExperimentConfig, ResponseKind};
+use crate::config::validate::validate;
+use crate::data::corpus::{Corpus, Dataset};
+use crate::data::partition::{random_shards, shard_corpora};
+use crate::eval::metrics::{compute, Metrics};
+use crate::model::counts::CountMatrices;
+use crate::model::slda::SldaModel;
+use crate::parallel::comm::{
+    corpus_bytes, model_bytes, predictions_bytes, CommLedger, CommStats,
+};
+use crate::parallel::worker::{run_worker, WorkerPlan, WorkerOutput};
+use crate::runtime::EngineHandle;
+use crate::sampler::{gibbs_predict, gibbs_train};
+use crate::util::pool::scoped_map;
+use crate::util::rng::Pcg64;
+use crate::util::timer::{CpuStopwatch, PhaseTimings, Stopwatch};
+use std::path::Path;
+
+/// The four algorithms compared in the paper's Figures 6 and 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    NonParallel,
+    NaiveCombination,
+    SimpleAverage,
+    WeightedAverage,
+    /// Extension beyond the paper: per-document *median* of the local
+    /// predictions (robust combination in the spirit of the
+    /// median-posterior work the paper cites as [5]).
+    MedianAverage,
+}
+
+impl Algorithm {
+    /// The paper's four algorithms (Figs. 6/7).
+    pub const ALL: [Algorithm; 4] = [
+        Algorithm::NonParallel,
+        Algorithm::NaiveCombination,
+        Algorithm::SimpleAverage,
+        Algorithm::WeightedAverage,
+    ];
+
+    /// The paper's four plus the median-combination extension.
+    pub const ALL_EXTENDED: [Algorithm; 5] = [
+        Algorithm::NonParallel,
+        Algorithm::NaiveCombination,
+        Algorithm::SimpleAverage,
+        Algorithm::WeightedAverage,
+        Algorithm::MedianAverage,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::NonParallel => "non-parallel",
+            Algorithm::NaiveCombination => "naive-combination",
+            Algorithm::SimpleAverage => "simple-average",
+            Algorithm::WeightedAverage => "weighted-average",
+            Algorithm::MedianAverage => "median-average",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Algorithm> {
+        Ok(match s {
+            "non-parallel" | "nonparallel" => Algorithm::NonParallel,
+            "naive-combination" | "naive" => Algorithm::NaiveCombination,
+            "simple-average" | "simple" => Algorithm::SimpleAverage,
+            "weighted-average" | "weighted" => Algorithm::WeightedAverage,
+            "median-average" | "median" => Algorithm::MedianAverage,
+            other => anyhow::bail!("unknown algorithm '{other}'"),
+        })
+    }
+}
+
+/// Per-shard summary carried into reports and diagnostics.
+#[derive(Clone, Debug)]
+pub struct ShardSummary {
+    pub shard_id: usize,
+    pub docs: usize,
+    /// In-sample (fit) MSE of the shard's final eta.
+    pub fit_mse: f64,
+    pub fit_acc: f64,
+    pub tokens_sampled: u64,
+    pub eta: Vec<f64>,
+}
+
+/// Result of running one algorithm on one dataset.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    pub algorithm: Algorithm,
+    /// Global test predictions yhat.
+    pub yhat: Vec<f64>,
+    /// Metrics against the test labels.
+    pub test_metrics: Metrics,
+    /// End-to-end wall-clock seconds on *this* machine. NOTE: the
+    /// benchmark container exposes a single CPU core, so this clock cannot
+    /// show parallel speedups — compare `sim_wall_secs`.
+    pub wall_secs: f64,
+    /// Simulated M-core wall time (DESIGN.md §3): max over workers of
+    /// per-thread CPU time, plus the leader's sequential phases. On a
+    /// machine with >= threads cores this converges to `wall_secs`; the
+    /// paper's "computation time" comparisons use this clock.
+    pub sim_wall_secs: f64,
+    /// Aggregated phase breakdown (train / predict_test / predict_train /
+    /// combine). For parallel algorithms, per-phase times are summed over
+    /// workers (CPU time), while `wall_secs` reflects concurrency.
+    pub timings: PhaseTimings,
+    pub comm: CommStats,
+    pub shards: Vec<ShardSummary>,
+    /// Combination weights used (None for NonParallel / Naive).
+    pub weights: Option<Vec<f64>>,
+}
+
+/// Trained models kept for diagnostics (`keep_models = true`).
+pub type ShardModels = Vec<SldaModel>;
+
+/// Convenience wrapper: build the engine from the config and run.
+/// The artifacts directory defaults to `./artifacts` (override with the
+/// `CFSLDA_ARTIFACTS` environment variable).
+pub fn run_algorithm(
+    algo: Algorithm,
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<RunOutput> {
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let engine = EngineHandle::from_kind(cfg.engine, Path::new(&dir))?;
+    run_with_engine(algo, ds, cfg, &engine, false).map(|(out, _)| out)
+}
+
+/// Run one algorithm with an explicit engine. When `keep_models` is set the
+/// per-shard local models (or the single full model for NonParallel) are
+/// returned for diagnostics (Hungarian topic alignment, fig-3).
+pub fn run_with_engine(
+    algo: Algorithm,
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    keep_models: bool,
+) -> anyhow::Result<(RunOutput, ShardModels)> {
+    validate(cfg)?;
+    ds.train.validate()?;
+    ds.test.validate()?;
+    anyhow::ensure!(
+        ds.train.vocab_size == ds.test.vocab_size,
+        "train/test vocab mismatch"
+    );
+    let total = Stopwatch::new();
+    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let test_labels = ds.test.responses();
+
+    let (out, models) = match algo {
+        Algorithm::NonParallel => {
+            let mut timings = PhaseTimings::new();
+            let sw = CpuStopwatch::new();
+            let train = gibbs_train::train(&ds.train, cfg, engine, &mut rng)?;
+            timings.add("train", sw.elapsed_secs());
+            let sw = CpuStopwatch::new();
+            let (pred, _zbar) = gibbs_predict::predict_corpus(
+                &train.model, &ds.test, &cfg.train, engine, None, &mut rng,
+            )?;
+            timings.add("predict_test", sw.elapsed_secs());
+            let sim_wall = timings.get("train") + timings.get("predict_test");
+            timings.merge(&train.timings);
+            let m = compute(&pred.yhat, &test_labels);
+            let shards = vec![ShardSummary {
+                shard_id: 0,
+                docs: ds.train.num_docs(),
+                fit_mse: train.model.train_mse,
+                fit_acc: train.model.train_acc,
+                tokens_sampled: train.tokens_sampled,
+                eta: train.model.eta.clone(),
+            }];
+            let models = if keep_models { vec![train.model] } else { vec![] };
+            (
+                RunOutput {
+                    algorithm: algo,
+                    yhat: pred.yhat,
+                    test_metrics: m,
+                    wall_secs: 0.0,
+                    sim_wall_secs: sim_wall,
+                    timings,
+                    comm: CommStats::default(),
+                    shards,
+                    weights: None,
+                },
+                models,
+            )
+        }
+        Algorithm::NaiveCombination => run_naive(ds, cfg, engine, &mut rng, keep_models)?,
+        Algorithm::SimpleAverage => run_prediction_combining(
+            ds, cfg, engine, &mut rng, CombineRule::Simple, keep_models,
+        )?,
+        Algorithm::WeightedAverage => run_prediction_combining(
+            ds,
+            cfg,
+            engine,
+            &mut rng,
+            CombineRule::Weighted(WeightScheme::for_response(cfg.response)),
+            keep_models,
+        )?,
+        Algorithm::MedianAverage => run_prediction_combining(
+            ds, cfg, engine, &mut rng, CombineRule::Median, keep_models,
+        )?,
+    };
+
+    let mut out = out;
+    out.wall_secs = total.elapsed_secs();
+    log::info!(
+        "{}: wall={:.2}s sim_wall={:.2}s {} comm[{}]",
+        algo.name(),
+        out.wall_secs,
+        out.sim_wall_secs,
+        out.test_metrics.render(cfg.response == ResponseKind::Binary),
+        out.comm.render()
+    );
+    Ok((out, models))
+}
+
+/// Shared parallel training stage: partition, spawn workers, gather.
+fn parallel_train(
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    rng: &mut Pcg64,
+    plan: WorkerPlan,
+    ledger: &CommLedger,
+) -> anyhow::Result<Vec<WorkerOutput>> {
+    let m = cfg.parallel.shards;
+    let shards = random_shards(ds.train.num_docs(), m, rng);
+    let subs = shard_corpora(&ds.train, &shards);
+    // Per-shard deterministic RNG streams, derived before the fan-out.
+    let jobs: Vec<(usize, Corpus, Pcg64)> = subs
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| (i, c, rng.split(i as u64)))
+        .collect();
+
+    for (_, c, _) in &jobs {
+        let mut setup = corpus_bytes(c);
+        if plan.predict_test {
+            setup += corpus_bytes(&ds.test);
+        }
+        if plan.predict_full_train {
+            setup += corpus_bytes(&ds.train);
+        }
+        ledger.add_setup(setup);
+    }
+
+    let results = scoped_map(&jobs, cfg.parallel.threads.max(1), |_, (i, c, worker_rng)| {
+        run_worker(*i, c, &ds.test, &ds.train, plan, cfg, engine, worker_rng.clone())
+    });
+    let outputs: anyhow::Result<Vec<WorkerOutput>> = results.into_iter().collect();
+    let outputs = outputs?;
+
+    for o in &outputs {
+        let mut gather = model_bytes(o.train.model.t, o.train.model.w);
+        if o.test_pred.is_some() {
+            gather += predictions_bytes(ds.test.num_docs());
+        }
+        if o.full_train_quality.is_some() {
+            gather += 16; // (mse, acc) pair
+        }
+        ledger.add_gather(gather);
+    }
+    Ok(outputs)
+}
+
+fn summaries(outputs: &[WorkerOutput]) -> Vec<ShardSummary> {
+    outputs
+        .iter()
+        .map(|o| ShardSummary {
+            shard_id: o.shard_id,
+            docs: o.train.counts.d,
+            fit_mse: o.train.model.train_mse,
+            fit_acc: o.train.model.train_acc,
+            tokens_sampled: o.train.tokens_sampled,
+            eta: o.train.model.eta.clone(),
+        })
+        .collect()
+}
+
+/// Max over workers of per-thread CPU time: the parallel stage's wall
+/// time on a machine with one core per worker (DESIGN.md §3).
+fn max_worker_cpu(outputs: &[WorkerOutput]) -> f64 {
+    outputs.iter().map(|o| o.timings.total()).fold(0.0, f64::max)
+}
+
+fn merged_timings(outputs: &[WorkerOutput]) -> PhaseTimings {
+    let mut t = PhaseTimings::new();
+    for o in outputs {
+        t.merge(&o.timings);
+        t.merge(&o.train.timings);
+    }
+    t
+}
+
+/// Simple/Weighted Average: combine local *predictions* (the paper's fix).
+fn run_prediction_combining(
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    rng: &mut Pcg64,
+    rule: CombineRule,
+    keep_models: bool,
+) -> anyhow::Result<(RunOutput, ShardModels)> {
+    let ledger = CommLedger::new();
+    let plan = WorkerPlan {
+        predict_test: true,
+        predict_full_train: matches!(
+            rule,
+            CombineRule::Weighted(WeightScheme::InverseMse)
+                | CombineRule::Weighted(WeightScheme::Accuracy)
+        ),
+    };
+    let outputs = parallel_train(ds, cfg, engine, rng, plan, &ledger)?;
+
+    let mut timings = merged_timings(&outputs);
+    let sw = CpuStopwatch::new();
+    let local_preds: Vec<Vec<f64>> = outputs
+        .iter()
+        .map(|o| o.test_pred.as_ref().expect("planned test prediction").yhat.clone())
+        .collect();
+    let (train_mses, train_accs): (Vec<f64>, Vec<f64>) = outputs
+        .iter()
+        .map(|o| o.full_train_quality.unwrap_or((0.0, 0.0)))
+        .unzip();
+    let w = weights(rule, &train_mses, &train_accs)?;
+    let yhat = if rule == CombineRule::Median {
+        combine_median(&local_preds)?
+    } else {
+        combine_predictions(engine, &local_preds, &w)?
+    };
+    let combine_cpu = sw.elapsed_secs();
+    timings.add("combine", combine_cpu);
+    let sim_wall = max_worker_cpu(&outputs) + combine_cpu;
+
+    let test_labels = ds.test.responses();
+    let m = compute(&yhat, &test_labels);
+    let algo = match rule {
+        CombineRule::Simple => Algorithm::SimpleAverage,
+        CombineRule::Weighted(_) => Algorithm::WeightedAverage,
+        CombineRule::Median => Algorithm::MedianAverage,
+    };
+    let models = if keep_models {
+        outputs.iter().map(|o| o.train.model.clone()).collect()
+    } else {
+        vec![]
+    };
+    Ok((
+        RunOutput {
+            algorithm: algo,
+            yhat,
+            test_metrics: m,
+            wall_secs: 0.0,
+            sim_wall_secs: sim_wall,
+            timings,
+            comm: ledger.snapshot(),
+            shards: summaries(&outputs),
+            weights: Some(w),
+        },
+        models,
+    ))
+}
+
+/// Naive Combination: pool sampled topics, fit one model, predict once.
+fn run_naive(
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    rng: &mut Pcg64,
+    keep_models: bool,
+) -> anyhow::Result<(RunOutput, ShardModels)> {
+    let ledger = CommLedger::new();
+    let plan = WorkerPlan { predict_test: false, predict_full_train: false };
+    let outputs = parallel_train(ds, cfg, engine, rng, plan, &ledger)?;
+    let mut timings = merged_timings(&outputs);
+
+    let sw = CpuStopwatch::new();
+    let t = cfg.model.topics;
+    let w = ds.train.vocab_size;
+
+    // Step 3: pool the sub-sampled topics "as if they were directly sampled
+    // using all documents": word-topic mass summed, zbar rows concatenated.
+    let mut pooled = CountMatrices::new(0, t, w);
+    let mut zbar: Vec<f32> = Vec::with_capacity(ds.train.num_docs() * t);
+    let mut ys: Vec<f64> = Vec::with_capacity(ds.train.num_docs());
+    for o in &outputs {
+        pooled.absorb_word_topic(&o.train.counts);
+        zbar.extend(o.train.counts.zbar_matrix());
+        ys.extend(o.train.responses.iter()); // same row order as zbar
+    }
+
+    // Step 3a: "ordinary linear regression" on the pooled topics — a ridge
+    // solve with negligible shrinkage for numerical stability.
+    let (eta, fit_mse) = engine.eta_solve(&zbar, &ys, t, 1e-6, 0.0)?;
+    // Step 3b: pooled phi-hat (eq. 3).
+    let phi = SldaModel::phi_from_counts(&pooled, cfg.model.beta);
+    let fit = engine.predict(&zbar, &eta, Some(&ys), t)?;
+    let pooled_model = SldaModel {
+        t,
+        w,
+        eta,
+        phi,
+        rho: cfg.model.rho,
+        alpha: cfg.model.alpha,
+        train_mse: fit_mse,
+        train_acc: fit.acc,
+    };
+    let combine_cpu = sw.elapsed_secs();
+    timings.add("combine", combine_cpu);
+
+    // Step 4: ONE prediction pass with the pooled model (why Naive is the
+    // fastest — and the least accurate — algorithm in Figs. 6/7).
+    let sw = CpuStopwatch::new();
+    let (pred, _zbar) = gibbs_predict::predict_corpus(
+        &pooled_model, &ds.test, &cfg.train, engine, None, rng,
+    )?;
+    let predict_cpu = sw.elapsed_secs();
+    timings.add("predict_test", predict_cpu);
+    let sim_wall = max_worker_cpu(&outputs) + combine_cpu + predict_cpu;
+
+    let test_labels = ds.test.responses();
+    let m = compute(&pred.yhat, &test_labels);
+    let models = if keep_models {
+        let mut v: ShardModels = outputs.iter().map(|o| o.train.model.clone()).collect();
+        v.push(pooled_model);
+        v
+    } else {
+        vec![]
+    };
+    Ok((
+        RunOutput {
+            algorithm: Algorithm::NaiveCombination,
+            yhat: pred.yhat,
+            test_metrics: m,
+            wall_secs: 0.0,
+            sim_wall_secs: sim_wall,
+            timings,
+            comm: ledger.snapshot(),
+            shards: summaries(&outputs),
+            weights: None,
+        },
+        models,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_split, SyntheticSpec};
+
+    fn fixture() -> (Dataset, ExperimentConfig) {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(100);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let mut cfg = ExperimentConfig::quick();
+        cfg.engine = crate::config::schema::EngineKind::Native;
+        cfg.train.sweeps = 15;
+        cfg.train.burnin = 3;
+        cfg.train.eta_every = 3;
+        cfg.train.predict_sweeps = 8;
+        cfg.train.predict_burnin = 2;
+        cfg.parallel.shards = 4;
+        cfg.parallel.threads = 4;
+        (ds, cfg)
+    }
+
+    #[test]
+    fn all_algorithms_run_and_report() {
+        let (ds, cfg) = fixture();
+        let engine = EngineHandle::native();
+        for algo in Algorithm::ALL {
+            let (out, _) = run_with_engine(algo, &ds, &cfg, &engine, false).unwrap();
+            assert_eq!(out.algorithm, algo);
+            assert_eq!(out.yhat.len(), ds.test.num_docs());
+            assert!(out.wall_secs > 0.0);
+            assert!(out.test_metrics.mse.is_finite());
+            match algo {
+                Algorithm::NonParallel => {
+                    assert_eq!(out.shards.len(), 1);
+                    assert_eq!(out.comm.total(), 0);
+                    assert!(out.weights.is_none());
+                }
+                Algorithm::NaiveCombination => {
+                    assert_eq!(out.shards.len(), 4);
+                    assert!(out.comm.setup_bytes > 0);
+                    assert!(out.weights.is_none());
+                    // Naive never ships the test set to workers.
+                    let per_shard = out.comm.setup_bytes / 4;
+                    assert!(per_shard < crate::parallel::comm::corpus_bytes(&ds.train));
+                }
+                Algorithm::SimpleAverage => {
+                    let w = out.weights.as_ref().unwrap();
+                    assert!(w.iter().all(|&x| x == 1.0));
+                    assert!(out.timings.get("predict_test") > 0.0);
+                    assert_eq!(out.timings.get("predict_train"), 0.0);
+                }
+                Algorithm::WeightedAverage => {
+                    let w = out.weights.as_ref().unwrap();
+                    assert_eq!(w.len(), 4);
+                    assert!(w.iter().all(|&x| x > 0.0));
+                    // the expensive full-train prediction must have happened
+                    assert!(out.timings.get("predict_train") > 0.0);
+                }
+                Algorithm::MedianAverage => unreachable!("not in ALL"),
+            }
+            assert_eq!(out.comm.sampling_syncs, 0, "sampling must be communication-free");
+        }
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let (ds, cfg) = fixture();
+        let engine = EngineHandle::native();
+        let a = run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap().0;
+        let b = run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap().0;
+        assert_eq!(a.yhat, b.yhat);
+        assert_eq!(a.test_metrics, b.test_metrics);
+    }
+
+    #[test]
+    fn prediction_combining_beats_naive() {
+        // The paper's headline quality claim (Figs. 6/7): Simple Average is
+        // close to NonParallel while Naive Combination is clearly worse.
+        let (ds, cfg) = fixture();
+        let engine = EngineHandle::native();
+        let simple =
+            run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap().0;
+        let naive =
+            run_with_engine(Algorithm::NaiveCombination, &ds, &cfg, &engine, false).unwrap().0;
+        assert!(
+            naive.test_metrics.mse > simple.test_metrics.mse,
+            "naive mse {} should exceed simple mse {}",
+            naive.test_metrics.mse,
+            simple.test_metrics.mse
+        );
+    }
+
+    #[test]
+    fn keep_models_returns_shard_models() {
+        let (ds, cfg) = fixture();
+        let engine = EngineHandle::native();
+        let (_, models) =
+            run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, true).unwrap();
+        assert_eq!(models.len(), 4);
+        // Naive additionally returns the pooled model last.
+        let (_, models) =
+            run_with_engine(Algorithm::NaiveCombination, &ds, &cfg, &engine, true).unwrap();
+        assert_eq!(models.len(), 5);
+    }
+
+    #[test]
+    fn median_average_runs_and_is_robust_in_form() {
+        let (ds, cfg) = fixture();
+        let engine = EngineHandle::native();
+        let (out, _) =
+            run_with_engine(Algorithm::MedianAverage, &ds, &cfg, &engine, false).unwrap();
+        assert_eq!(out.algorithm, Algorithm::MedianAverage);
+        assert_eq!(out.yhat.len(), ds.test.num_docs());
+        assert!(out.test_metrics.mse.is_finite());
+        // median needs no train-set prediction pass
+        assert_eq!(out.timings.get("predict_train"), 0.0);
+        // quality in the same league as simple average
+        let (simple, _) =
+            run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap();
+        assert!(out.test_metrics.mse < 3.0 * simple.test_metrics.mse);
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in Algorithm::ALL_EXTENDED {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algorithm::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn mismatched_vocab_rejected() {
+        let (ds, cfg) = fixture();
+        let engine = EngineHandle::native();
+        let mut bad = ds.clone();
+        bad.test.vocab_size += 1;
+        assert!(run_with_engine(Algorithm::NonParallel, &bad, &cfg, &engine, false).is_err());
+    }
+}

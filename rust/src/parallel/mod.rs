@@ -1,0 +1,17 @@
+//! The communication-free parallel runtime (paper §III-C).
+//!
+//! * [`comm`] — a byte-level communication ledger. Embarrassingly parallel
+//!   MCMC's selling point is *zero* inter-worker traffic during sampling;
+//!   the ledger records exactly what moves (shard setup, final gather) and
+//!   asserts nothing moves in between.
+//! * [`worker`] — one shard's workload: local training, plus local
+//!   prediction of the test set (Simple/Weighted) and of the full training
+//!   set (Weighted only, for the eq. 8 weights).
+//! * [`leader`] — the coordinator: partitions, spawns workers on the thread
+//!   pool, runs the combination stage, and reports metrics + timings per
+//!   algorithm (NonParallel / NaiveCombination / SimpleAverage /
+//!   WeightedAverage).
+
+pub mod comm;
+pub mod leader;
+pub mod worker;

@@ -1,0 +1,153 @@
+//! One shard's workload, executed on its own thread with its own RNG
+//! stream and **no shared mutable state** (communication-free by
+//! construction — the ledger in `comm` audits the only two transfers).
+
+use crate::config::schema::ExperimentConfig;
+use crate::data::corpus::Corpus;
+use crate::runtime::{EngineHandle, Prediction};
+use crate::sampler::{gibbs_predict, gibbs_train};
+use crate::util::rng::Pcg64;
+use crate::util::timer::{CpuStopwatch, PhaseTimings};
+
+/// What each worker must produce beyond its trained local model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerPlan {
+    /// Predict the test set locally (Simple/Weighted Average).
+    pub predict_test: bool,
+    /// Predict the **whole training set** locally (Weighted Average: the
+    /// eq. 8 weights). This is the step the paper identifies as making
+    /// Weighted Average slower than Non-parallel.
+    pub predict_full_train: bool,
+}
+
+/// Result of one shard's work.
+pub struct WorkerOutput {
+    pub shard_id: usize,
+    pub train: gibbs_train::TrainOutput,
+    /// Local test predictions yhat^(m) (if planned).
+    pub test_pred: Option<Prediction>,
+    /// Full-training-set prediction quality (if planned): (mse, acc).
+    pub full_train_quality: Option<(f64, f64)>,
+    pub timings: PhaseTimings,
+}
+
+/// Run one shard: train on `shard_corpus`, then the planned predictions.
+/// `full_train` is the complete training corpus (all shards' documents).
+pub fn run_worker(
+    shard_id: usize,
+    shard_corpus: &Corpus,
+    test: &Corpus,
+    full_train: &Corpus,
+    plan: WorkerPlan,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    mut rng: Pcg64,
+) -> anyhow::Result<WorkerOutput> {
+    let mut timings = PhaseTimings::new();
+
+    let sw = CpuStopwatch::new();
+    let train = gibbs_train::train(shard_corpus, cfg, engine, &mut rng)?;
+    timings.add("train", sw.elapsed_secs());
+
+    let test_pred = if plan.predict_test {
+        let sw = CpuStopwatch::new();
+        let (pred, _zbar) = gibbs_predict::predict_corpus(
+            &train.model,
+            test,
+            &cfg.train,
+            engine,
+            None, // workers never see test labels
+            &mut rng,
+        )?;
+        timings.add("predict_test", sw.elapsed_secs());
+        Some(pred)
+    } else {
+        None
+    };
+
+    let full_train_quality = if plan.predict_full_train {
+        let sw = CpuStopwatch::new();
+        let ys = full_train.responses();
+        let (pred, _zbar) = gibbs_predict::predict_corpus(
+            &train.model,
+            full_train,
+            &cfg.train,
+            engine,
+            Some(&ys),
+            &mut rng,
+        )?;
+        timings.add("predict_train", sw.elapsed_secs());
+        Some((pred.mse, pred.acc))
+    } else {
+        None
+    };
+
+    Ok(WorkerOutput { shard_id, train, test_pred, full_train_quality, timings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{random_shards, shard_corpora};
+    use crate::data::synthetic::{generate_split, SyntheticSpec};
+
+    fn setup() -> (Corpus, Corpus, ExperimentConfig) {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let mut cfg = ExperimentConfig::quick();
+        cfg.train.sweeps = 12;
+        cfg.train.burnin = 3;
+        cfg.train.eta_every = 3;
+        (ds.train, ds.test, cfg)
+    }
+
+    #[test]
+    fn training_only_plan() {
+        let (train, test, cfg) = setup();
+        let engine = EngineHandle::native();
+        let out = run_worker(
+            0,
+            &train,
+            &test,
+            &train,
+            WorkerPlan { predict_test: false, predict_full_train: false },
+            &cfg,
+            &engine,
+            Pcg64::seed_from_u64(2),
+        )
+        .unwrap();
+        assert!(out.test_pred.is_none());
+        assert!(out.full_train_quality.is_none());
+        assert!(out.timings.get("train") > 0.0);
+        assert_eq!(out.timings.get("predict_test"), 0.0);
+    }
+
+    #[test]
+    fn full_plan_on_a_shard() {
+        let (train, test, cfg) = setup();
+        let mut rng = Pcg64::seed_from_u64(3);
+        let shards = random_shards(train.num_docs(), 4, &mut rng);
+        let subs = shard_corpora(&train, &shards);
+        let engine = EngineHandle::native();
+        let out = run_worker(
+            2,
+            &subs[2],
+            &test,
+            &train,
+            WorkerPlan { predict_test: true, predict_full_train: true },
+            &cfg,
+            &engine,
+            Pcg64::seed_from_u64(4),
+        )
+        .unwrap();
+        assert_eq!(out.shard_id, 2);
+        let tp = out.test_pred.unwrap();
+        assert_eq!(tp.yhat.len(), test.num_docs());
+        let (mse, acc) = out.full_train_quality.unwrap();
+        assert!(mse.is_finite() && mse > 0.0);
+        assert!((0.0..=1.0).contains(&acc));
+        // Weighted's extra work must show up in the timing breakdown.
+        assert!(out.timings.get("predict_train") > 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Regression substrate: the ridge solve behind the stochastic-EM eta step
+//! (paper eq. 2). The native path (`ridge`) is used directly by the native
+//! engine and as the T x T back-end of the chunked-gram XLA path.
+
+pub mod ridge;

@@ -1,0 +1,268 @@
+//! Dense ridge regression via Cholesky (pure rust).
+//!
+//! Solves the MAP eta system of paper eq. (2):
+//!   (Z^T W Z + lambda I) eta = Z^T W y + lambda mu,   lambda = rho / sigma.
+//!
+//! T <= 64 here, so an O(T^3) Cholesky is microseconds; the expensive
+//! D x T Gram accumulation is the part that the XLA engine offloads to the
+//! AOT Pallas `gram` kernel, with this module consuming the (G, b) moments.
+
+/// Symmetric positive-definite solve via Cholesky: a x = b, `a` row-major
+/// n x n. Returns `None` if the factorization fails (not SPD).
+pub fn cholesky_solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    // L lower-triangular, row-major.
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    // forward: L z = b
+    let mut z = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * z[k];
+        }
+        z[i] = s / l[i * n + i];
+    }
+    // backward: L^T x = z
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    Some(x)
+}
+
+/// Accumulate the weighted Gram moments G = Z^T W Z (row-major T x T),
+/// b = Z^T W y, n = sum w, from a row-major [D, T] f32 matrix.
+/// This is the native twin of the `gram` Pallas kernel.
+pub fn gram_moments(zbar: &[f32], y: &[f64], w: &[f64], t: usize) -> (Vec<f64>, Vec<f64>, f64) {
+    let d = y.len();
+    debug_assert_eq!(zbar.len(), d * t);
+    debug_assert_eq!(w.len(), d);
+    let mut g = vec![0.0f64; t * t];
+    let mut b = vec![0.0f64; t];
+    let mut n = 0.0f64;
+    for di in 0..d {
+        let wd = w[di];
+        if wd == 0.0 {
+            continue;
+        }
+        n += wd;
+        let row = &zbar[di * t..(di + 1) * t];
+        for i in 0..t {
+            let zi = wd * row[i] as f64;
+            b[i] += zi * y[di];
+            let gi = &mut g[i * t..(i + 1) * t];
+            for j in 0..t {
+                gi[j] += zi * row[j] as f64;
+            }
+        }
+    }
+    (g, b, n)
+}
+
+/// Full ridge solve from raw rows: returns (eta, weighted train MSE).
+pub fn ridge_fit(
+    zbar: &[f32],
+    y: &[f64],
+    w: &[f64],
+    t: usize,
+    lambda: f64,
+    mu: f64,
+) -> anyhow::Result<(Vec<f64>, f64)> {
+    let (g, b, _) = gram_moments(zbar, y, w, t);
+    ridge_solve_moments(&g, &b, t, lambda, mu).map(|eta| {
+        let mse = weighted_mse(zbar, &eta, y, w, t);
+        (eta, mse)
+    })
+}
+
+/// Ridge solve given precomputed Gram moments (the chunked-XLA path).
+pub fn ridge_solve_moments(
+    g: &[f64],
+    b: &[f64],
+    t: usize,
+    lambda: f64,
+    mu: f64,
+) -> anyhow::Result<Vec<f64>> {
+    let mut a = g.to_vec();
+    for i in 0..t {
+        a[i * t + i] += lambda;
+    }
+    let rhs: Vec<f64> = b.iter().map(|&x| x + lambda * mu).collect();
+    cholesky_solve(&a, &rhs, t)
+        .ok_or_else(|| anyhow::anyhow!("ridge system not SPD (lambda = {lambda})"))
+}
+
+/// Weighted mean squared error of eta over rows.
+pub fn weighted_mse(zbar: &[f32], eta: &[f64], y: &[f64], w: &[f64], t: usize) -> f64 {
+    let d = y.len();
+    let mut se = 0.0;
+    let mut n = 0.0;
+    for di in 0..d {
+        if w[di] == 0.0 {
+            continue;
+        }
+        let row = &zbar[di * t..(di + 1) * t];
+        let yhat: f64 = row.iter().zip(eta).map(|(&z, &e)| z as f64 * e).sum();
+        se += w[di] * (y[di] - yhat) * (y[di] - yhat);
+        n += w[di];
+    }
+    if n == 0.0 { 0.0 } else { se / n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn cholesky_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let x = cholesky_solve(&a, &[3.0, -2.0], 2).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_known_system() {
+        // A = [[4,2],[2,3]], b = [2, -1] -> x = [1, -1] since Ax = [2,-1]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let x = cholesky_solve(&a, &[2.0, -1.0], 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // indefinite
+        assert!(cholesky_solve(&a, &[1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn random_spd_solve_accuracy() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for n in [1usize, 3, 8, 32] {
+            // A = M M^T + n I
+            let m: Vec<f64> = (0..n * n).map(|_| rng.next_gaussian()).collect();
+            let mut a = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = if i == j { n as f64 } else { 0.0 };
+                    for k in 0..n {
+                        s += m[i * n + k] * m[j * n + k];
+                    }
+                    a[i * n + j] = s;
+                }
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| a[i * n + j] * x_true[j]).sum())
+                .collect();
+            let x = cholesky_solve(&a, &b, n).unwrap();
+            for (xi, ti) in x.iter().zip(&x_true) {
+                assert!((xi - ti).abs() < 1e-8, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_moments_match_naive() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let (d, t) = (17, 4);
+        let zbar: Vec<f32> = (0..d * t).map(|_| rng.next_f32()).collect();
+        let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let w: Vec<f64> = (0..d).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let (g, b, n) = gram_moments(&zbar, &y, &w, t);
+        // naive
+        for i in 0..t {
+            let mut bi = 0.0;
+            for di in 0..d {
+                bi += w[di] * zbar[di * t + i] as f64 * y[di];
+            }
+            assert!((b[i] - bi).abs() < 1e-9);
+            for j in 0..t {
+                let mut gij = 0.0;
+                for di in 0..d {
+                    gij += w[di] * zbar[di * t + i] as f64 * zbar[di * t + j] as f64;
+                }
+                assert!((g[i * t + j] - gij).abs() < 1e-9);
+            }
+        }
+        assert_eq!(n, w.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn ridge_recovers_generating_eta() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let (d, t) = (400, 6);
+        let eta_true: Vec<f64> = (0..t).map(|_| rng.next_gaussian()).collect();
+        let mut zbar = vec![0.0f32; d * t];
+        let mut y = vec![0.0f64; d];
+        for di in 0..d {
+            let theta = rng.next_dirichlet_sym(0.5, t);
+            for ti in 0..t {
+                zbar[di * t + ti] = theta[ti] as f32;
+            }
+            y[di] = theta.iter().zip(&eta_true).map(|(a, b)| a * b).sum();
+        }
+        let w = vec![1.0f64; d];
+        let (eta, mse) = ridge_fit(&zbar, &y, &w, t, 1e-6, 0.0).unwrap();
+        for (e, et) in eta.iter().zip(&eta_true) {
+            assert!((e - et).abs() < 1e-2, "eta={eta:?} true={eta_true:?}");
+        }
+        assert!(mse < 1e-6, "mse={mse}");
+    }
+
+    #[test]
+    fn ridge_shrinks_towards_mu() {
+        // With an enormous lambda, eta -> mu regardless of data.
+        let zbar = vec![0.5f32; 10 * 2];
+        let y = vec![3.0f64; 10];
+        let w = vec![1.0f64; 10];
+        let (eta, _) = ridge_fit(&zbar, &y, &w, 2, 1e9, 0.7).unwrap();
+        assert!((eta[0] - 0.7).abs() < 1e-3 && (eta[1] - 0.7).abs() < 1e-3);
+    }
+
+    #[test]
+    fn zero_weights_are_ignored() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let t = 3;
+        let mut zbar: Vec<f32> = (0..20 * t).map(|_| rng.next_f32()).collect();
+        let y: Vec<f64> = (0..20).map(|_| rng.next_gaussian()).collect();
+        let mut w = vec![1.0f64; 20];
+        let (eta1, _) = ridge_fit(&zbar, &y, &w, t, 0.1, 0.0).unwrap();
+        // corrupt rows 15.. but zero their weights
+        for v in &mut zbar[15 * t..] {
+            *v = 999.0;
+        }
+        for wi in &mut w[15..] {
+            *wi = 0.0;
+        }
+        let y2: Vec<f64> = y.iter().enumerate().map(|(i, &v)| if i >= 15 { 1e6 } else { v }).collect();
+        let zbar1: Vec<f32> = zbar[..15 * t].to_vec();
+        let (eta_ref, _) = ridge_fit(&zbar1, &y[..15], &w[..15], t, 0.1, 0.0).unwrap();
+        let (eta2, _) = ridge_fit(&zbar, &y2, &w, t, 0.1, 0.0).unwrap();
+        for (a, b) in eta2.iter().zip(&eta_ref) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        let _ = eta1;
+    }
+}

@@ -1,0 +1,176 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+use crate::config::json::{self, Value};
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata of one AOT-lowered function.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Path of the HLO text file (absolute, resolved against the manifest dir).
+    pub path: PathBuf,
+    /// Parameter shapes in call order.
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Padded row bucket for eta_solve / gram / predict / loglik.
+    pub row_bucket: usize,
+    /// Padded shard axis for combine.
+    pub shard_bucket: usize,
+    /// Available topic buckets, ascending.
+    pub topic_buckets: Vec<usize>,
+    pub functions: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_value(&v, dir)
+    }
+
+    pub fn from_value(v: &Value, dir: &Path) -> anyhow::Result<Manifest> {
+        let version = v.get("version").and_then(|x| x.as_usize()).context("missing version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let row_bucket =
+            v.get("row_bucket").and_then(|x| x.as_usize()).context("missing row_bucket")?;
+        let shard_bucket =
+            v.get("shard_bucket").and_then(|x| x.as_usize()).context("missing shard_bucket")?;
+        let mut topic_buckets: Vec<usize> = v
+            .get("topic_buckets")
+            .and_then(|x| x.as_array())
+            .context("missing topic_buckets")?
+            .iter()
+            .map(|x| x.as_usize().context("bad topic bucket"))
+            .collect::<anyhow::Result<_>>()?;
+        topic_buckets.sort_unstable();
+        let mut functions = BTreeMap::new();
+        for f in v.get("functions").and_then(|x| x.as_array()).context("missing functions")? {
+            let name = f.get("name").and_then(|x| x.as_str()).context("fn missing name")?;
+            let file = f.get("file").and_then(|x| x.as_str()).context("fn missing file")?;
+            let mut param_shapes = Vec::new();
+            for p in f.get("params").and_then(|x| x.as_array()).context("fn missing params")? {
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .and_then(|x| x.as_array())
+                    .context("param missing shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("bad dim"))
+                    .collect::<anyhow::Result<_>>()?;
+                param_shapes.push(shape);
+            }
+            functions.insert(
+                name.to_string(),
+                ArtifactMeta { name: name.to_string(), path: dir.join(file), param_shapes },
+            );
+        }
+        if functions.is_empty() {
+            bail!("manifest lists no functions");
+        }
+        Ok(Manifest { row_bucket, shard_bucket, topic_buckets, functions })
+    }
+
+    /// Smallest topic bucket >= t.
+    pub fn topic_bucket_for(&self, t: usize) -> anyhow::Result<usize> {
+        self.topic_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= t)
+            .with_context(|| {
+                format!(
+                    "no topic bucket >= {t} (available: {:?}); re-run `make artifacts` \
+                     with a larger --topics or use the native engine",
+                    self.topic_buckets
+                )
+            })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.functions.get(name).with_context(|| {
+            format!("artifact '{name}' not in manifest (have: {:?})",
+                    self.functions.keys().collect::<Vec<_>>())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(dir: &Path) -> Manifest {
+        let v = json::parse(
+            r#"{
+              "version": 1, "row_bucket": 4096, "shard_bucket": 16,
+              "topic_buckets": [64, 8, 16, 32], "dtype": "f32",
+              "functions": [
+                {"name": "gram_T8", "file": "gram_T8.hlo.txt",
+                 "params": [{"shape": [4096, 8], "dtype": "float32"},
+                            {"shape": [4096], "dtype": "float32"},
+                            {"shape": [4096], "dtype": "float32"}]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        Manifest::from_value(&v, dir).unwrap()
+    }
+
+    #[test]
+    fn parses_and_sorts_buckets() {
+        let m = sample(Path::new("/tmp/a"));
+        assert_eq!(m.topic_buckets, vec![8, 16, 32, 64]);
+        assert_eq!(m.row_bucket, 4096);
+        let a = m.artifact("gram_T8").unwrap();
+        assert_eq!(a.path, Path::new("/tmp/a/gram_T8.hlo.txt"));
+        assert_eq!(a.param_shapes[0], vec![4096, 8]);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = sample(Path::new("/tmp"));
+        assert_eq!(m.topic_bucket_for(3).unwrap(), 8);
+        assert_eq!(m.topic_bucket_for(8).unwrap(), 8);
+        assert_eq!(m.topic_bucket_for(9).unwrap(), 16);
+        assert_eq!(m.topic_bucket_for(64).unwrap(), 64);
+        assert!(m.topic_bucket_for(65).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = sample(Path::new("/tmp"));
+        let e = m.artifact("nope").unwrap_err().to_string();
+        assert!(e.contains("nope"));
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        let dir = Path::new("/tmp");
+        let bad = json::parse(r#"{"version": 2, "row_bucket": 1, "shard_bucket": 1, "topic_buckets": [], "functions": []}"#).unwrap();
+        assert!(Manifest::from_value(&bad, dir).is_err());
+        let empty = json::parse(r#"{"version": 1, "row_bucket": 1, "shard_bucket": 1, "topic_buckets": [8], "functions": []}"#).unwrap();
+        assert!(Manifest::from_value(&empty, dir).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Exercised against the actual artifacts when they have been built.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.functions.contains_key("eta_solve_T8"));
+            assert!(m.functions.contains_key("gram_T16"));
+            assert!(m.functions.contains_key("combine_M16"));
+            assert_eq!(m.row_bucket, 4096);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Numerical engine: executes the dense sLDA algebra (eta solve, batched
+//! prediction, combination, response log-densities).
+//!
+//! Two implementations behind one interface:
+//!
+//! * [`xla::XlaEngine`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//!   produced once by `make artifacts`) and runs them on the PJRT CPU
+//!   client. The `xla` crate's client is `Rc`-based (not `Send`), so the
+//!   engine lives on a dedicated **service thread** and worker threads talk
+//!   to it through the clonable [`EngineHandle`]; calls are coarse (once per
+//!   eta step / prediction batch), so serialization is immaterial.
+//! * [`native::NativeEngine`] — bit-compatible pure-rust fallback and the
+//!   cross-validation oracle for integration tests.
+
+pub mod manifest;
+pub mod native;
+pub mod pad;
+pub mod service;
+pub mod xla;
+
+use crate::config::schema::EngineKind;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Result of a batched prediction.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// Point predictions, one per input row.
+    pub yhat: Vec<f64>,
+    /// Weighted MSE against the supplied labels (0.0 if labels absent).
+    pub mse: f64,
+    /// Accuracy at the 0.5 threshold (binary responses).
+    pub acc: f64,
+}
+
+/// The engine operations (all row-major f32 matrices).
+pub trait EngineImpl {
+    fn name(&self) -> &'static str;
+
+    /// MAP eta (paper eq. 2): zbar is [D, T]; returns (eta, train MSE).
+    fn eta_solve(
+        &self,
+        zbar: &[f32],
+        y: &[f64],
+        t: usize,
+        lambda: f64,
+        mu: f64,
+    ) -> anyhow::Result<(Vec<f64>, f64)>;
+
+    /// Batched yhat = zbar @ eta (paper eq. 5) + metrics vs optional labels.
+    fn predict(
+        &self,
+        zbar: &[f32],
+        eta: &[f64],
+        y: Option<&[f64]>,
+        t: usize,
+    ) -> anyhow::Result<Prediction>;
+
+    /// Weighted combination over shards (paper eqs. 7-9); weights need not
+    /// be normalized.
+    fn combine(&self, preds: &[Vec<f64>], weights: &[f64]) -> anyhow::Result<Vec<f64>>;
+
+    /// Gaussian response log-density grid: y[B] x mu[B, T] -> [B, T].
+    fn loglik(&self, y: &[f64], mu: &[f32], t: usize, rho: f64) -> anyhow::Result<Vec<f32>>;
+}
+
+/// Thread-safe, clonable handle to an engine.
+#[derive(Clone)]
+pub enum EngineHandle {
+    Native(Arc<native::NativeEngine>),
+    Xla(service::XlaService),
+}
+
+impl EngineHandle {
+    /// Pure-rust engine.
+    pub fn native() -> Self {
+        EngineHandle::Native(Arc::new(native::NativeEngine::new()))
+    }
+
+    /// XLA engine backed by the artifacts directory (spawns the service
+    /// thread and compiles lazily per artifact).
+    pub fn xla(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        Ok(EngineHandle::Xla(service::XlaService::spawn(artifacts_dir)?))
+    }
+
+    /// Select by [`EngineKind`]; `Auto` takes XLA when the manifest exists.
+    pub fn from_kind(kind: EngineKind, artifacts_dir: &Path) -> anyhow::Result<Self> {
+        match kind {
+            EngineKind::Native => Ok(Self::native()),
+            EngineKind::Xla => Self::xla(artifacts_dir),
+            EngineKind::Auto => {
+                if artifacts_dir.join("manifest.json").exists() {
+                    Self::xla(artifacts_dir)
+                } else {
+                    log::warn!(
+                        "no artifacts manifest under {artifacts_dir:?}; falling back to native \
+                         engine (run `make artifacts` for the XLA path)"
+                    );
+                    Ok(Self::native())
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineHandle::Native(e) => e.name(),
+            EngineHandle::Xla(_) => "xla",
+        }
+    }
+
+    pub fn eta_solve(
+        &self,
+        zbar: &[f32],
+        y: &[f64],
+        t: usize,
+        lambda: f64,
+        mu: f64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        match self {
+            EngineHandle::Native(e) => e.eta_solve(zbar, y, t, lambda, mu),
+            EngineHandle::Xla(s) => s.eta_solve(zbar, y, t, lambda, mu),
+        }
+    }
+
+    pub fn predict(
+        &self,
+        zbar: &[f32],
+        eta: &[f64],
+        y: Option<&[f64]>,
+        t: usize,
+    ) -> anyhow::Result<Prediction> {
+        match self {
+            EngineHandle::Native(e) => e.predict(zbar, eta, y, t),
+            EngineHandle::Xla(s) => s.predict(zbar, eta, y, t),
+        }
+    }
+
+    pub fn combine(&self, preds: &[Vec<f64>], weights: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self {
+            EngineHandle::Native(e) => e.combine(preds, weights),
+            EngineHandle::Xla(s) => s.combine(preds, weights),
+        }
+    }
+
+    pub fn loglik(&self, y: &[f64], mu: &[f32], t: usize, rho: f64) -> anyhow::Result<Vec<f32>> {
+        match self {
+            EngineHandle::Native(e) => e.loglik(y, mu, t, rho),
+            EngineHandle::Xla(s) => s.loglik(y, mu, t, rho),
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Pure-rust engine: bit-compatible twin of the AOT XLA artifacts.
+//!
+//! Exists for three reasons: (1) fallback when artifacts are absent,
+//! (2) cross-validation oracle — `rust/tests/integration_runtime.rs`
+//! asserts XLA-vs-native agreement on random inputs, (3) an ablation arm
+//! for the engine-overhead bench (`benches/runtime_engines.rs`).
+
+use super::{EngineImpl, Prediction};
+use crate::regress::ridge;
+
+/// Pure-rust reference engine.
+#[derive(Debug, Default)]
+pub struct NativeEngine {}
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine {}
+    }
+}
+
+impl EngineImpl for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn eta_solve(
+        &self,
+        zbar: &[f32],
+        y: &[f64],
+        t: usize,
+        lambda: f64,
+        mu: f64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        let w = vec![1.0f64; y.len()];
+        ridge::ridge_fit(zbar, y, &w, t, lambda, mu)
+    }
+
+    fn predict(
+        &self,
+        zbar: &[f32],
+        eta: &[f64],
+        y: Option<&[f64]>,
+        t: usize,
+    ) -> anyhow::Result<Prediction> {
+        anyhow::ensure!(eta.len() == t, "eta len {} != t {}", eta.len(), t);
+        anyhow::ensure!(zbar.len() % t == 0, "zbar not a multiple of t");
+        let rows = zbar.len() / t;
+        let mut yhat = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &zbar[r * t..(r + 1) * t];
+            yhat.push(row.iter().zip(eta).map(|(&z, &e)| z as f64 * e).sum());
+        }
+        let (mut mse, mut acc) = (0.0, 0.0);
+        if let Some(ys) = y {
+            anyhow::ensure!(ys.len() == rows, "labels len {} != rows {}", ys.len(), rows);
+            if rows > 0 {
+                let mut se = 0.0;
+                let mut hits = 0usize;
+                for (p, &obs) in yhat.iter().zip(ys) {
+                    se += (p - obs) * (p - obs);
+                    if (*p > 0.5) == (obs > 0.5) {
+                        hits += 1;
+                    }
+                }
+                mse = se / rows as f64;
+                acc = hits as f64 / rows as f64;
+            }
+        }
+        Ok(Prediction { yhat, mse, acc })
+    }
+
+    fn combine(&self, preds: &[Vec<f64>], weights: &[f64]) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(!preds.is_empty(), "no predictions to combine");
+        anyhow::ensure!(preds.len() == weights.len(), "preds/weights length mismatch");
+        let b = preds[0].len();
+        anyhow::ensure!(preds.iter().all(|p| p.len() == b), "ragged prediction rows");
+        let wsum: f64 = weights.iter().sum();
+        anyhow::ensure!(wsum > 0.0, "combination weights sum to {wsum}");
+        let mut out = vec![0.0f64; b];
+        for (p, &w) in preds.iter().zip(weights) {
+            let wn = w / wsum;
+            for (o, &v) in out.iter_mut().zip(p) {
+                *o += wn * v;
+            }
+        }
+        Ok(out)
+    }
+
+    fn loglik(&self, y: &[f64], mu: &[f32], t: usize, rho: f64) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(rho > 0.0, "rho must be positive");
+        anyhow::ensure!(mu.len() == y.len() * t, "mu shape mismatch");
+        let c = -0.5 * (2.0 * std::f64::consts::PI * rho).ln();
+        let inv2rho = 1.0 / (2.0 * rho);
+        let mut out = Vec::with_capacity(mu.len());
+        for (r, &yr) in y.iter().enumerate() {
+            for ti in 0..t {
+                let d = yr - mu[r * t + ti] as f64;
+                out.push((c - d * d * inv2rho) as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::normal_logpdf;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn predict_and_metrics() {
+        let e = NativeEngine::new();
+        let zbar = [1.0f32, 0.0, 0.0, 1.0, 0.5, 0.5];
+        let eta = [2.0f64, -1.0];
+        let y = [2.0f64, -1.0, 1.0];
+        let p = e.predict(&zbar, &eta, Some(&y), 2).unwrap();
+        assert_eq!(p.yhat, vec![2.0, -1.0, 0.5]);
+        // errors: 0, 0, 0.5 -> mse = 0.25/3
+        assert!((p.mse - 0.25 / 3.0).abs() < 1e-12);
+        // thresholds: (2>0.5)==(2>0.5), (-1)==(-1), (0.5>0.5)=false == (1>0.5)=true -> miss
+        assert!((p.acc - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn combine_matches_manual() {
+        let e = NativeEngine::new();
+        let out = e
+            .combine(&[vec![1.0, 2.0], vec![3.0, 6.0]], &[1.0, 3.0])
+            .unwrap();
+        assert!((out[0] - (0.25 + 2.25)).abs() < 1e-12);
+        assert!((out[1] - (0.5 + 4.5)).abs() < 1e-12);
+        assert!(e.combine(&[], &[]).is_err());
+        assert!(e.combine(&[vec![1.0]], &[0.0]).is_err());
+    }
+
+    #[test]
+    fn loglik_matches_normal_logpdf() {
+        let e = NativeEngine::new();
+        let y = [0.3f64, -1.0];
+        let mu = [0.0f32, 1.0, -1.0, 0.5];
+        let ll = e.loglik(&y, &mu, 2, 0.7).unwrap();
+        for r in 0..2 {
+            for t in 0..2 {
+                let want = normal_logpdf(y[r], mu[r * 2 + t] as f64, 0.7);
+                assert!((ll[r * 2 + t] as f64 - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn eta_solve_delegates_to_ridge() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let (d, t) = (300, 4);
+        let eta_true: Vec<f64> = (0..t).map(|_| rng.next_gaussian()).collect();
+        let mut zbar = vec![0.0f32; d * t];
+        let mut y = vec![0.0f64; d];
+        for di in 0..d {
+            let theta = rng.next_dirichlet_sym(0.4, t);
+            for ti in 0..t {
+                zbar[di * t + ti] = theta[ti] as f32;
+            }
+            y[di] = theta.iter().zip(&eta_true).map(|(a, b)| a * b).sum();
+        }
+        let e = NativeEngine::new();
+        let (eta, mse) = e.eta_solve(&zbar, &y, t, 1e-6, 0.0).unwrap();
+        assert!(mse < 1e-8, "mse={mse}");
+        for (a, b) in eta.iter().zip(&eta_true) {
+            assert!((a - b).abs() < 1e-2);
+        }
+    }
+}

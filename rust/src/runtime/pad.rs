@@ -1,0 +1,96 @@
+//! Padding helpers: the AOT artifacts have fixed shapes (row bucket x topic
+//! bucket); the runtime zero-pads inputs and masks padding rows with w = 0.
+//! Property tests assert padding round-trips and never changes results.
+
+/// Pad a row-major [rows, cols] f32 matrix to [rows_pad, cols_pad] with zeros.
+pub fn pad_matrix(data: &[f32], rows: usize, cols: usize, rows_pad: usize, cols_pad: usize) -> Vec<f32> {
+    debug_assert_eq!(data.len(), rows * cols);
+    debug_assert!(rows_pad >= rows && cols_pad >= cols);
+    let mut out = vec![0.0f32; rows_pad * cols_pad];
+    for r in 0..rows {
+        out[r * cols_pad..r * cols_pad + cols].copy_from_slice(&data[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Pad a vector to `len_pad` with `fill`.
+pub fn pad_vec(data: &[f32], len_pad: usize, fill: f32) -> Vec<f32> {
+    debug_assert!(len_pad >= data.len());
+    let mut out = Vec::with_capacity(len_pad);
+    out.extend_from_slice(data);
+    out.resize(len_pad, fill);
+    out
+}
+
+/// f64 slice -> padded f32 vector.
+pub fn pad_vec_f64(data: &[f64], len_pad: usize, fill: f32) -> Vec<f32> {
+    debug_assert!(len_pad >= data.len());
+    let mut out: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+    out.resize(len_pad, fill);
+    out
+}
+
+/// Mask vector: 1.0 for the first `valid` entries, 0.0 after.
+pub fn mask(valid: usize, len_pad: usize) -> Vec<f32> {
+    let mut m = vec![1.0f32; valid];
+    m.resize(len_pad, 0.0);
+    m
+}
+
+/// Row-chunk iterator bounds: yields (start_row, rows_in_chunk) covering
+/// `rows` in chunks of at most `bucket`.
+pub fn chunks(rows: usize, bucket: usize) -> Vec<(usize, usize)> {
+    assert!(bucket > 0);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < rows {
+        let take = bucket.min(rows - start);
+        out.push((start, take));
+        start += take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_padding_layout() {
+        let m = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let p = pad_matrix(&m, 2, 2, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&p[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&p[8..12], &[0.0; 4]);
+    }
+
+    #[test]
+    fn identity_padding_is_copy() {
+        let m = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(pad_matrix(&m, 2, 3, 2, 3), m.to_vec());
+    }
+
+    #[test]
+    fn vec_padding() {
+        assert_eq!(pad_vec(&[1.0, 2.0], 4, 9.0), vec![1.0, 2.0, 9.0, 9.0]);
+        assert_eq!(pad_vec_f64(&[0.5f64], 3, 0.0), vec![0.5f32, 0.0, 0.0]);
+        assert_eq!(mask(2, 4), vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn chunk_bounds_cover_exactly() {
+        for &(rows, bucket) in &[(10usize, 4usize), (8, 4), (3, 100), (4096, 4096), (9000, 4096)] {
+            let cs = chunks(rows, bucket);
+            let total: usize = cs.iter().map(|&(_, n)| n).sum();
+            assert_eq!(total, rows, "rows={rows} bucket={bucket}");
+            let mut expect = 0;
+            for &(start, n) in &cs {
+                assert_eq!(start, expect);
+                assert!(n <= bucket && n > 0);
+                expect += n;
+            }
+        }
+        assert!(chunks(0, 8).is_empty());
+    }
+}

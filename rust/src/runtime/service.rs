@@ -1,0 +1,155 @@
+//! Engine service thread: makes the (non-`Send`) [`XlaEngine`] usable from
+//! the parallel shard workers.
+//!
+//! One dedicated OS thread owns the PJRT client and compiled executables;
+//! [`XlaService`] is a cheap clonable handle that ships requests over an
+//! mpsc channel and blocks on a per-request response channel. Engine calls
+//! are coarse-grained (one per stochastic-EM eta step, one per prediction
+//! batch), so the serialization point is never the bottleneck — the
+//! `runtime_engines` bench quantifies the overhead.
+//!
+//! The service thread exits when the last handle is dropped.
+
+use super::xla::XlaEngine;
+use super::{EngineImpl, Prediction};
+use anyhow::Context;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Request {
+    EtaSolve {
+        zbar: Vec<f32>,
+        y: Vec<f64>,
+        t: usize,
+        lambda: f64,
+        mu: f64,
+        reply: mpsc::Sender<anyhow::Result<(Vec<f64>, f64)>>,
+    },
+    Predict {
+        zbar: Vec<f32>,
+        eta: Vec<f64>,
+        y: Option<Vec<f64>>,
+        t: usize,
+        reply: mpsc::Sender<anyhow::Result<Prediction>>,
+    },
+    Combine {
+        preds: Vec<Vec<f64>>,
+        weights: Vec<f64>,
+        reply: mpsc::Sender<anyhow::Result<Vec<f64>>>,
+    },
+    Loglik {
+        y: Vec<f64>,
+        mu: Vec<f32>,
+        t: usize,
+        rho: f64,
+        reply: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    },
+}
+
+/// Clonable, `Send + Sync` handle to the XLA service thread.
+#[derive(Clone)]
+pub struct XlaService {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+}
+
+impl XlaService {
+    /// Spawn the service thread; fails fast if the manifest/client cannot
+    /// be initialized.
+    pub fn spawn(artifacts_dir: &Path) -> anyhow::Result<XlaService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let dir = artifacts_dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || {
+                let engine = match XlaEngine::load(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::EtaSolve { zbar, y, t, lambda, mu, reply } => {
+                            let _ = reply.send(engine.eta_solve(&zbar, &y, t, lambda, mu));
+                        }
+                        Request::Predict { zbar, eta, y, t, reply } => {
+                            let _ = reply.send(engine.predict(&zbar, &eta, y.as_deref(), t));
+                        }
+                        Request::Combine { preds, weights, reply } => {
+                            let _ = reply.send(engine.combine(&preds, &weights));
+                        }
+                        Request::Loglik { y, mu, t, rho, reply } => {
+                            let _ = reply.send(engine.loglik(&y, &mu, t, rho));
+                        }
+                    }
+                }
+            })
+            .context("spawning xla service thread")?;
+        init_rx.recv().context("xla service thread died during init")??;
+        Ok(XlaService { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    fn send(&self, req: Request) -> anyhow::Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| anyhow::anyhow!("xla service mutex poisoned"))?
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("xla service thread has exited"))
+    }
+
+    pub fn eta_solve(
+        &self,
+        zbar: &[f32],
+        y: &[f64],
+        t: usize,
+        lambda: f64,
+        mu: f64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::EtaSolve {
+            zbar: zbar.to_vec(),
+            y: y.to_vec(),
+            t,
+            lambda,
+            mu,
+            reply,
+        })?;
+        rx.recv().context("xla service dropped the request")?
+    }
+
+    pub fn predict(
+        &self,
+        zbar: &[f32],
+        eta: &[f64],
+        y: Option<&[f64]>,
+        t: usize,
+    ) -> anyhow::Result<Prediction> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Predict {
+            zbar: zbar.to_vec(),
+            eta: eta.to_vec(),
+            y: y.map(|v| v.to_vec()),
+            t,
+            reply,
+        })?;
+        rx.recv().context("xla service dropped the request")?
+    }
+
+    pub fn combine(&self, preds: &[Vec<f64>], weights: &[f64]) -> anyhow::Result<Vec<f64>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Combine { preds: preds.to_vec(), weights: weights.to_vec(), reply })?;
+        rx.recv().context("xla service dropped the request")?
+    }
+
+    pub fn loglik(&self, y: &[f64], mu: &[f32], t: usize, rho: f64) -> anyhow::Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Loglik { y: y.to_vec(), mu: mu.to_vec(), t, rho, reply })?;
+        rx.recv().context("xla service dropped the request")?
+    }
+}

@@ -1,0 +1,276 @@
+//! XLA engine: loads the AOT HLO-text artifacts and executes them on the
+//! PJRT CPU client (pattern from /opt/xla-example/load_hlo.rs).
+//!
+//! Shape discipline: every artifact was compiled at fixed padded shapes
+//! (manifest row/topic/shard buckets). This engine owns all padding:
+//!
+//! * `eta_solve` — single artifact call when D fits the row bucket;
+//!   otherwise row chunks stream through the `gram_T*` artifact (the
+//!   L1 Pallas Gram kernel) and the tiny T x T ridge system is solved
+//!   coordinator-side (`regress::ridge`).
+//! * `predict` / `loglik` — row-chunked artifact calls, metrics combined
+//!   across chunks weighted by valid-row counts.
+//! * `combine` — column-chunked `combine_M*` calls with zero-weight padding
+//!   shards.
+//!
+//! NOT `Send` (PJRT client is `Rc`-based): lives on the service thread, see
+//! `runtime::service`.
+
+use super::manifest::Manifest;
+use super::pad::{chunks, mask, pad_matrix, pad_vec, pad_vec_f64};
+use super::{EngineImpl, Prediction};
+use crate::regress::ridge;
+use anyhow::Context;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// The XLA-backed engine (single-threaded; see module docs).
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaEngine {
+    /// Create a CPU PJRT client and parse the artifact manifest.
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "xla engine: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.functions.len()
+        );
+        Ok(XlaEngine { client, manifest, executables: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (once) and execute artifact `name` with the given inputs,
+    /// returning the decomposed output tuple.
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        if !self.executables.borrow().contains_key(name) {
+            let meta = self.manifest.artifact(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", meta.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            log::debug!("compiled artifact '{name}'");
+            self.executables.borrow_mut().insert(name.to_string(), exe);
+        }
+        let cache = self.executables.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{name}'"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(result.to_tuple()?)
+    }
+
+    fn matrix_literal(data: &[f32], rows: usize, cols: usize) -> anyhow::Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    fn scalar_literal(x: f64) -> xla::Literal {
+        xla::Literal::scalar(x as f32)
+    }
+}
+
+impl EngineImpl for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn eta_solve(
+        &self,
+        zbar: &[f32],
+        y: &[f64],
+        t: usize,
+        lambda: f64,
+        mu: f64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        let rows = y.len();
+        anyhow::ensure!(zbar.len() == rows * t, "zbar shape mismatch");
+        anyhow::ensure!(rows > 0, "eta_solve on empty input");
+        let tb = self.manifest.topic_bucket_for(t)?;
+        let rb = self.manifest.row_bucket;
+
+        if rows <= rb {
+            // Single-shot artifact: (zbar, y, w, lam, mu) -> (eta, mse, wsum)
+            let zp = pad_matrix(zbar, rows, t, rb, tb);
+            let yp = pad_vec_f64(y, rb, 0.0);
+            let wp = mask(rows, rb);
+            let out = self.run(
+                &format!("eta_solve_T{tb}"),
+                &[
+                    Self::matrix_literal(&zp, rb, tb)?,
+                    xla::Literal::vec1(&yp),
+                    xla::Literal::vec1(&wp),
+                    Self::scalar_literal(lambda),
+                    Self::scalar_literal(mu),
+                ],
+            )?;
+            let eta_p = out[0].to_vec::<f32>()?;
+            let mse = out[1].to_vec::<f32>()?[0] as f64;
+            let eta: Vec<f64> = eta_p[..t].iter().map(|&x| x as f64).collect();
+            return Ok((eta, mse));
+        }
+
+        // Chunked path: stream row chunks through the gram artifact, sum the
+        // moments, solve the T x T system natively, compute MSE natively.
+        let mut g_sum = vec![0.0f64; tb * tb];
+        let mut b_sum = vec![0.0f64; tb];
+        for (start, n) in chunks(rows, rb) {
+            let zc = pad_matrix(&zbar[start * t..(start + n) * t], n, t, rb, tb);
+            let yc = pad_vec_f64(&y[start..start + n], rb, 0.0);
+            let wc = mask(n, rb);
+            let out = self.run(
+                &format!("gram_T{tb}"),
+                &[
+                    Self::matrix_literal(&zc, rb, tb)?,
+                    xla::Literal::vec1(&yc),
+                    xla::Literal::vec1(&wc),
+                ],
+            )?;
+            let g = out[0].to_vec::<f32>()?;
+            let b = out[1].to_vec::<f32>()?;
+            for (acc, &v) in g_sum.iter_mut().zip(&g) {
+                *acc += v as f64;
+            }
+            for (acc, &v) in b_sum.iter_mut().zip(&b) {
+                *acc += v as f64;
+            }
+        }
+        // Trim padded topics out of the moments (their rows/cols are zero).
+        let mut g_t = vec![0.0f64; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                g_t[i * t + j] = g_sum[i * tb + j];
+            }
+        }
+        let eta = ridge::ridge_solve_moments(&g_t, &b_sum[..t], t, lambda, mu)?;
+        let w = vec![1.0f64; rows];
+        let mse = ridge::weighted_mse(zbar, &eta, y, &w, t);
+        Ok((eta, mse))
+    }
+
+    fn predict(
+        &self,
+        zbar: &[f32],
+        eta: &[f64],
+        y: Option<&[f64]>,
+        t: usize,
+    ) -> anyhow::Result<Prediction> {
+        anyhow::ensure!(eta.len() == t, "eta len mismatch");
+        anyhow::ensure!(zbar.len() % t == 0, "zbar not a multiple of t");
+        let rows = zbar.len() / t;
+        let tb = self.manifest.topic_bucket_for(t)?;
+        let rb = self.manifest.row_bucket;
+        let eta_p = pad_vec(&eta.iter().map(|&e| e as f32).collect::<Vec<f32>>(), tb, 0.0);
+
+        let mut yhat = Vec::with_capacity(rows);
+        let (mut se_n, mut hit_n, mut n_tot) = (0.0f64, 0.0f64, 0.0f64);
+        for (start, n) in chunks(rows, rb) {
+            let zc = pad_matrix(&zbar[start * t..(start + n) * t], n, t, rb, tb);
+            let yc = match y {
+                Some(ys) => pad_vec_f64(&ys[start..start + n], rb, 0.0),
+                None => vec![0.0f32; rb],
+            };
+            let wc = mask(n, rb);
+            let out = self.run(
+                &format!("predict_T{tb}"),
+                &[
+                    Self::matrix_literal(&zc, rb, tb)?,
+                    xla::Literal::vec1(&eta_p),
+                    xla::Literal::vec1(&yc),
+                    xla::Literal::vec1(&wc),
+                ],
+            )?;
+            let yh = out[0].to_vec::<f32>()?;
+            yhat.extend(yh[..n].iter().map(|&x| x as f64));
+            let mse_c = out[1].to_vec::<f32>()?[0] as f64;
+            let acc_c = out[2].to_vec::<f32>()?[0] as f64;
+            se_n += mse_c * n as f64;
+            hit_n += acc_c * n as f64;
+            n_tot += n as f64;
+        }
+        let (mse, acc) = if y.is_some() && n_tot > 0.0 {
+            (se_n / n_tot, hit_n / n_tot)
+        } else {
+            (0.0, 0.0)
+        };
+        Ok(Prediction { yhat, mse, acc })
+    }
+
+    fn combine(&self, preds: &[Vec<f64>], weights: &[f64]) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(!preds.is_empty(), "no predictions to combine");
+        anyhow::ensure!(preds.len() == weights.len(), "preds/weights length mismatch");
+        let m = preds.len();
+        let mb = self.manifest.shard_bucket;
+        anyhow::ensure!(m <= mb, "{m} shards exceed the shard bucket {mb}");
+        let b = preds[0].len();
+        anyhow::ensure!(preds.iter().all(|p| p.len() == b), "ragged prediction rows");
+        let wsum: f64 = weights.iter().sum();
+        anyhow::ensure!(wsum > 0.0, "combination weights sum to {wsum}");
+        let rb = self.manifest.row_bucket;
+        let w_p = pad_vec_f64(weights, mb, 0.0);
+
+        let mut out = Vec::with_capacity(b);
+        for (start, n) in chunks(b, rb) {
+            // [M, n] column chunk, padded to [mb, rb].
+            let mut block = vec![0.0f32; mb * rb];
+            for (mi, p) in preds.iter().enumerate() {
+                for j in 0..n {
+                    block[mi * rb + j] = p[start + j] as f32;
+                }
+            }
+            let res = self.run(
+                &format!("combine_M{mb}"),
+                &[Self::matrix_literal(&block, mb, rb)?, xla::Literal::vec1(&w_p)],
+            )?;
+            let yh = res[0].to_vec::<f32>()?;
+            out.extend(yh[..n].iter().map(|&x| x as f64));
+        }
+        Ok(out)
+    }
+
+    fn loglik(&self, y: &[f64], mu: &[f32], t: usize, rho: f64) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(rho > 0.0, "rho must be positive");
+        anyhow::ensure!(mu.len() == y.len() * t, "mu shape mismatch");
+        let rows = y.len();
+        let tb = self.manifest.topic_bucket_for(t)?;
+        let rb = self.manifest.row_bucket;
+        let mut out = Vec::with_capacity(rows * t);
+        for (start, n) in chunks(rows, rb) {
+            let yc = pad_vec_f64(&y[start..start + n], rb, 0.0);
+            let mc = pad_matrix(&mu[start * t..(start + n) * t], n, t, rb, tb);
+            let res = self.run(
+                &format!("loglik_T{tb}"),
+                &[
+                    xla::Literal::vec1(&yc),
+                    Self::matrix_literal(&mc, rb, tb)?,
+                    Self::scalar_literal(rho),
+                ],
+            )?;
+            let grid = res[0].to_vec::<f32>()?;
+            for r in 0..n {
+                out.extend_from_slice(&grid[r * tb..r * tb + t]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+// No #[cfg(test)] unit tests here: XLA-vs-native agreement is covered by
+// rust/tests/integration_runtime.rs (needs built artifacts), which keeps
+// `cargo test --lib` artifact-free.

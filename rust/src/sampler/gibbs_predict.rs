@@ -1,0 +1,177 @@
+//! Prediction: Gibbs inference on unseen documents with frozen phi-hat.
+//!
+//! Paper eq. (4): p(z = t) ∝ (N_dt + alpha) · phi_hat_{t, w}. The response
+//! is *not* part of the conditional (test labels are unknown at inference
+//! time). After `predict_burnin` sweeps the empirical topic distribution is
+//! averaged over the remaining sweeps (Nguyen et al. 2014), and the final
+//! responses are computed in one batched engine call: yhat = Zbar eta
+//! (eq. 5) — the `predict_T*` AOT artifact on the XLA path.
+
+use crate::config::schema::TrainConfig;
+use crate::data::corpus::Corpus;
+use crate::model::slda::SldaModel;
+use crate::runtime::{EngineHandle, Prediction};
+use crate::util::rng::Pcg64;
+
+/// Infer averaged empirical topic distributions for every document.
+/// Returns a row-major [D, T] matrix.
+pub fn infer_zbar(
+    model: &SldaModel,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    let t = model.t;
+    let alpha = model.alpha;
+    let d = corpus.num_docs();
+    let mut zbar = vec![0.0f32; d * t];
+    let mut ndt = vec![0u32; t];
+    let mut acc = vec![0.0f64; t];
+    let mut probs = vec![0.0f64; t];
+
+    for (di, doc) in corpus.docs.iter().enumerate() {
+        let nd = doc.len();
+        ndt.iter_mut().for_each(|c| *c = 0);
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        // init: sample from phi alone (ndt empty -> prior-proportional)
+        let mut zd: Vec<u16> = Vec::with_capacity(nd);
+        for &wi in &doc.tokens {
+            let phi = model.phi_row(wi);
+            for ti in 0..t {
+                probs[ti] = phi[ti] as f64;
+            }
+            let z = rng.sample_discrete(&probs);
+            ndt[z] += 1;
+            zd.push(z as u16);
+        }
+        let mut samples = 0usize;
+        for sweep in 0..cfg.predict_sweeps {
+            for (n, &wi) in doc.tokens.iter().enumerate() {
+                let old = zd[n] as usize;
+                ndt[old] -= 1;
+                let phi = model.phi_row(wi);
+                for ti in 0..t {
+                    probs[ti] = (ndt[ti] as f64 + alpha) * phi[ti] as f64;
+                }
+                let new = rng.sample_discrete(&probs);
+                ndt[new] += 1;
+                zd[n] = new as u16;
+            }
+            if sweep >= cfg.predict_burnin {
+                for ti in 0..t {
+                    acc[ti] += ndt[ti] as f64;
+                }
+                samples += 1;
+            }
+        }
+        let denom = (samples.max(1) * nd) as f64;
+        for ti in 0..t {
+            zbar[di * t + ti] = (acc[ti] / denom) as f32;
+        }
+    }
+    zbar
+}
+
+/// Full prediction pipeline: infer zbar, then batched yhat + metrics.
+/// `labels`: pass the ground truth to obtain MSE/accuracy (paper's test
+/// evaluation), or `None` for pure inference.
+pub fn predict_corpus(
+    model: &SldaModel,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    engine: &EngineHandle,
+    labels: Option<&[f64]>,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(Prediction, Vec<f32>)> {
+    let zbar = infer_zbar(model, corpus, cfg, rng);
+    let pred = engine.predict(&zbar, &model.eta, labels, model.t)?;
+    Ok((pred, zbar))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ExperimentConfig;
+    use crate::data::synthetic::{generate_split, SyntheticSpec};
+    use crate::sampler::gibbs_train::train;
+    use crate::util::stats::Summary;
+
+    fn cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::quick();
+        c.train.sweeps = 25;
+        c.train.burnin = 5;
+        c.train.eta_every = 5;
+        c.train.predict_sweeps = 12;
+        c.train.predict_burnin = 4;
+        c
+    }
+
+    #[test]
+    fn zbar_rows_are_distributions() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let engine = EngineHandle::native();
+        let out = train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+        let zbar = infer_zbar(&out.model, &ds.test, &cfg().train, &mut rng);
+        let t = out.model.t;
+        for d in 0..ds.test.num_docs() {
+            let s: f32 = zbar[d * t..(d + 1) * t].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "doc {d} zbar sums to {s}");
+        }
+    }
+
+    #[test]
+    fn end_to_end_beats_mean_baseline() {
+        // The paper's core premise: sLDA predictions must beat predicting
+        // the train-mean for every test document.
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let engine = EngineHandle::native();
+        let out = train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+        let ys = ds.test.responses();
+        let (pred, _) =
+            predict_corpus(&out.model, &ds.test, &cfg().train, &engine, Some(&ys), &mut rng)
+                .unwrap();
+        let var = Summary::from_slice(&ys).var(); // mean-baseline MSE
+        assert!(
+            pred.mse < 0.6 * var,
+            "test mse {} should beat mean baseline {var}",
+            pred.mse
+        );
+        assert_eq!(pred.yhat.len(), ds.test.num_docs());
+    }
+
+    #[test]
+    fn prediction_without_labels_reports_zero_metrics() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let engine = EngineHandle::native();
+        let out = train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+        let (pred, zbar) =
+            predict_corpus(&out.model, &ds.test, &cfg().train, &engine, None, &mut rng).unwrap();
+        assert_eq!(pred.mse, 0.0);
+        assert_eq!(pred.acc, 0.0);
+        assert_eq!(zbar.len(), ds.test.num_docs() * out.model.t);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = SyntheticSpec::continuous_small();
+        let engine = EngineHandle::native();
+        let mk = || {
+            let mut rng = Pcg64::seed_from_u64(9);
+            let ds = generate_split(&spec, 180, &mut rng);
+            let out = train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+            let ys = ds.test.responses();
+            predict_corpus(&out.model, &ds.test, &cfg().train, &engine, Some(&ys), &mut rng)
+                .unwrap()
+                .0
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.yhat, b.yhat);
+        assert_eq!(a.mse, b.mse);
+    }
+}

@@ -1,0 +1,321 @@
+//! Training: collapsed Gibbs + stochastic EM for sLDA.
+//!
+//! Implements the paper's posterior-inference loop exactly:
+//!
+//! * **Gibbs step** (eq. 1): for every token, resample its topic from
+//!     p(z = t) ∝ N(y_d; mu_{d,n}, rho) · (N_dt + alpha) · (N_tw + beta)/(N_t + W beta)
+//!   with mu_{d,n} = (sum_t' eta_t' N^{-dn}_dt' + eta_t) / N_d. The document
+//!   ratio's denominator (N_d - 1 + T alpha) is constant in t and dropped.
+//! * **eta step** (eq. 2): ridge MAP solve, dispatched to the engine (AOT
+//!   XLA artifact or native), every `eta_every` sweeps after burn-in; rho is
+//!   re-estimated from residuals when `learn_rho` is set.
+//!
+//! Hot-path notes (see EXPERIMENTS.md §Perf): the Gaussian margin is
+//! computed as exp(-(c - eta_t/N_d)^2 / 2rho) with c maintained incrementally
+//! via the running dot product s_d = eta . N_dt (O(1) per token update, not
+//! O(T)); `fast_exp` replaces `f64::exp`; the constant exp(-c^2/2rho) factor
+//! is dropped because it cancels in the unnormalized categorical draw.
+
+use crate::config::schema::ExperimentConfig;
+use crate::data::corpus::Corpus;
+use crate::model::counts::CountMatrices;
+use crate::model::slda::SldaModel;
+use crate::runtime::EngineHandle;
+use crate::util::math::fast_exp;
+use crate::util::rng::Pcg64;
+use crate::util::timer::{CpuStopwatch, PhaseTimings};
+
+/// Per-eta-step trace used for convergence reporting (EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct SweepStats {
+    pub sweep: usize,
+    pub train_mse: f64,
+    pub rho: f64,
+    pub eta_l2: f64,
+}
+
+/// Result of training one chain on one (sub-)corpus.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    pub model: SldaModel,
+    /// Final count state (needed by the Naive Combination pooling).
+    pub counts: CountMatrices,
+    /// Final token-topic assignments (z), per document.
+    pub z: Vec<Vec<u16>>,
+    /// Responses of the training documents, in `counts` row order (needed
+    /// by the Naive Combination pooling stage to align the pooled zbar rows
+    /// with their labels).
+    pub responses: Vec<f64>,
+    /// eta-step history.
+    pub history: Vec<SweepStats>,
+    /// Total token updates performed (throughput accounting).
+    pub tokens_sampled: u64,
+    /// Phase timing breakdown (gibbs vs eta-solve).
+    pub timings: PhaseTimings,
+}
+
+/// Train an sLDA model with collapsed Gibbs + stochastic EM.
+pub fn train(
+    corpus: &Corpus,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    rng: &mut Pcg64,
+) -> anyhow::Result<TrainOutput> {
+    let t = cfg.model.topics;
+    let w = corpus.vocab_size;
+    let d = corpus.num_docs();
+    anyhow::ensure!(d > 0, "cannot train on an empty corpus");
+    anyhow::ensure!(t >= 2, "need at least 2 topics");
+
+    let alpha = cfg.model.alpha;
+    let beta = cfg.model.beta;
+    let wbeta = w as f64 * beta;
+    let mut rho = cfg.model.rho;
+    let mut eta = vec![0.0f64; t];
+    let mut eta_active = false; // all-zero eta => response term is constant
+
+    // Random initialization of topic assignments.
+    let mut counts = CountMatrices::new(d, t, w);
+    let mut z: Vec<Vec<u16>> = Vec::with_capacity(d);
+    for (di, doc) in corpus.docs.iter().enumerate() {
+        let mut zd = Vec::with_capacity(doc.len());
+        for &wi in &doc.tokens {
+            let topic = rng.gen_range(t);
+            counts.inc(di, wi, topic);
+            zd.push(topic as u16);
+        }
+        z.push(zd);
+    }
+
+    let mut probs = vec![0.0f64; t];
+    // Incrementally maintained 1/(N_t + W beta): replaces T divisions per
+    // token with 2 reciprocal updates (§Perf opt A).
+    let mut inv_nt: Vec<f64> =
+        counts.nt.iter().map(|&n| 1.0 / (n as f64 + wbeta)).collect();
+    // Per-document response-margin tables (§Perf opt B): with e_t =
+    // eta_t / N_d fixed within a document-sweep,
+    //   N(y; mu_t, rho) ∝ exp(2c e_t - e_t^2) / 2rho            (c = y - s/N_d)
+    //                   = exp((c/rho) e_t) * exp(-e_t^2 / 2rho)
+    // so u_t = exp(-e_t^2/2rho) costs T exps per *document* and each token
+    // pays one fused multiply inside the remaining exp.
+    let mut e_buf = vec![0.0f64; t];
+    let mut u_buf = vec![0.0f64; t];
+    let mut history = Vec::new();
+    let mut tokens_sampled: u64 = 0;
+    let mut timings = PhaseTimings::new();
+
+    for sweep in 0..cfg.train.sweeps {
+        let sw = CpuStopwatch::new();
+        for (di, doc) in corpus.docs.iter().enumerate() {
+            let nd = doc.len();
+            let inv_nd = 1.0 / nd as f64;
+            let y = doc.response;
+            let inv2rho = 1.0 / (2.0 * rho);
+            let inv_rho = 1.0 / rho;
+            // Running response dot product s_d = eta . N_dt.
+            let mut s: f64 = 0.0;
+            if eta_active {
+                s = counts.ndt_row(di).iter().zip(&eta).map(|(&c, &e)| c as f64 * e).sum();
+                for ti in 0..t {
+                    let e = eta[ti] * inv_nd;
+                    e_buf[ti] = e;
+                    u_buf[ti] = fast_exp(-(e * e) * inv2rho);
+                }
+            }
+            let zd = &mut z[di];
+            for (n, &wi) in doc.tokens.iter().enumerate() {
+                let old = zd[n] as usize;
+                counts.dec(di, wi, old);
+                inv_nt[old] = 1.0 / (counts.nt[old] as f64 + wbeta);
+                if eta_active {
+                    s -= eta[old];
+                }
+                // NOTE §Perf C (cumulative build + binary-search draw) was
+                // tried and REVERTED: the loop-carried acc dependency broke
+                // instruction-level parallelism and halved throughput.
+                {
+                    let ndt = &counts.ndt[di * t..(di + 1) * t];
+                    let ntw = &counts.ntw[wi as usize * t..(wi as usize + 1) * t];
+                    if eta_active {
+                        // a = c/rho with c = y - s^{-dn}/N_d (constant exp
+                        // factor exp(-c^2/2rho) dropped: cancels in the draw)
+                        let a = (y - s * inv_nd) * inv_rho;
+                        for ti in 0..t {
+                            let gauss = fast_exp(a * e_buf[ti]) * u_buf[ti];
+                            probs[ti] = gauss
+                                * (ndt[ti] as f64 + alpha)
+                                * (ntw[ti] as f64 + beta)
+                                * inv_nt[ti];
+                        }
+                    } else {
+                        for ti in 0..t {
+                            probs[ti] = (ndt[ti] as f64 + alpha)
+                                * (ntw[ti] as f64 + beta)
+                                * inv_nt[ti];
+                        }
+                    }
+                }
+                let new = rng.sample_discrete(&probs);
+                counts.inc(di, wi, new);
+                inv_nt[new] = 1.0 / (counts.nt[new] as f64 + wbeta);
+                if eta_active {
+                    s += eta[new];
+                }
+                zd[n] = new as u16;
+                tokens_sampled += 1;
+            }
+        }
+        timings.add("gibbs", sw.elapsed_secs());
+
+        // eta step (eq. 2) after burn-in, every eta_every sweeps, and on the
+        // final sweep so the returned model always reflects the last state.
+        let due = sweep + 1 > cfg.train.burnin
+            && (sweep + 1 - cfg.train.burnin) % cfg.train.eta_every == 0;
+        let last = sweep + 1 == cfg.train.sweeps;
+        if due || last {
+            let sw = CpuStopwatch::new();
+            let zbar = counts.zbar_matrix();
+            let y: Vec<f64> = corpus.responses();
+            let lambda = cfg.model.lambda(rho);
+            let (eta_new, mse) = engine.eta_solve(&zbar, &y, t, lambda, cfg.model.mu)?;
+            eta = eta_new;
+            eta_active = eta.iter().any(|&e| e != 0.0);
+            if cfg.model.learn_rho {
+                rho = mse.max(1e-4);
+            }
+            timings.add("eta_solve", sw.elapsed_secs());
+            history.push(SweepStats {
+                sweep: sweep + 1,
+                train_mse: mse,
+                rho,
+                eta_l2: eta.iter().map(|e| e * e).sum::<f64>().sqrt(),
+            });
+        }
+    }
+
+    // Final in-sample metrics on the fitted zbar (model card data; the
+    // Weighted Average combiner computes its weights separately by
+    // *predicting* the whole training set, as the paper specifies).
+    let zbar = counts.zbar_matrix();
+    let y = corpus.responses();
+    let fit = engine.predict(&zbar, &eta, Some(&y), t)?;
+
+    let phi = SldaModel::phi_from_counts(&counts, beta);
+    let model = SldaModel {
+        t,
+        w,
+        eta,
+        phi,
+        rho,
+        alpha,
+        train_mse: fit.mse,
+        train_acc: fit.acc,
+    };
+    Ok(TrainOutput { model, counts, z, responses: y, history, tokens_sampled, timings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ExperimentConfig;
+    use crate::data::synthetic::{generate_with_truth, SyntheticSpec};
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.train.sweeps = 20;
+        cfg.train.burnin = 4;
+        cfg.train.eta_every = 4;
+        cfg
+    }
+
+    #[test]
+    fn training_reduces_mse_and_keeps_invariants() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(42);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let cfg = quick_cfg();
+        let engine = EngineHandle::native();
+        let out = train(&corpus, &cfg, &engine, &mut rng).unwrap();
+
+        out.counts.check_invariants().unwrap();
+        assert_eq!(out.counts.total_tokens(), corpus.num_tokens() as u64);
+        assert_eq!(out.tokens_sampled, (corpus.num_tokens() * cfg.train.sweeps) as u64);
+
+        // MSE at the last eta step must improve over the first.
+        let first = out.history.first().unwrap().train_mse;
+        let last = out.history.last().unwrap().train_mse;
+        assert!(
+            last < first * 0.9,
+            "no learning signal: first={first} last={last} (history {:?})",
+            out.history
+        );
+        // In-sample fit should explain a large share of label variance.
+        let ys = corpus.responses();
+        let var = crate::util::stats::Summary::from_slice(&ys).var();
+        assert!(out.model.train_mse < 0.5 * var, "mse={} var={var}", out.model.train_mse);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = SyntheticSpec::continuous_small();
+        let cfg = quick_cfg();
+        let engine = EngineHandle::native();
+        let mk = || {
+            let mut rng = Pcg64::seed_from_u64(7);
+            let (corpus, _) = generate_with_truth(&spec, &mut rng);
+            train(&corpus, &cfg, &engine, &mut rng).unwrap()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.model.eta, b.model.eta);
+        assert_eq!(a.counts.ndt, b.counts.ndt);
+        assert_eq!(a.model.train_mse, b.model.train_mse);
+    }
+
+    #[test]
+    fn binary_training_learns_accuracy() {
+        let spec = SyntheticSpec::binary_small();
+        let mut rng = Pcg64::seed_from_u64(11);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let mut cfg = quick_cfg();
+        cfg.response = crate::config::schema::ResponseKind::Binary;
+        let engine = EngineHandle::native();
+        let out = train(&corpus, &cfg, &engine, &mut rng).unwrap();
+        assert!(out.model.train_acc > 0.7, "train_acc={}", out.model.train_acc);
+    }
+
+    #[test]
+    fn phi_rows_are_distributions() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(3);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let engine = EngineHandle::native();
+        let out = train(&corpus, &quick_cfg(), &engine, &mut rng).unwrap();
+        let m = &out.model;
+        for ti in 0..m.t {
+            let s: f64 = (0..m.w).map(|wi| m.phi[wi * m.t + ti] as f64).sum();
+            assert!((s - 1.0).abs() < 1e-4, "topic {ti} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn rejects_empty_corpus() {
+        let corpus = Corpus::new(vec![], 10);
+        let engine = EngineHandle::native();
+        let mut rng = Pcg64::seed_from_u64(1);
+        assert!(train(&corpus, &quick_cfg(), &engine, &mut rng).is_err());
+    }
+
+    #[test]
+    fn history_records_eta_steps() {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(5);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let engine = EngineHandle::native();
+        let cfg = quick_cfg(); // sweeps=20 burnin=4 every=4 -> steps at 8,12,16,20
+        let out = train(&corpus, &cfg, &engine, &mut rng).unwrap();
+        let sweeps: Vec<usize> = out.history.iter().map(|h| h.sweep).collect();
+        assert_eq!(sweeps, vec![8, 12, 16, 20]);
+        assert!(out.timings.get("gibbs") > 0.0);
+        assert!(out.timings.get("eta_solve") > 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Collapsed Gibbs sampling for sLDA (paper §III-B).
+//!
+//! * [`gibbs_train`] — posterior inference by stochastic EM: the eq. (1)
+//!   token-topic sweep alternating with the eq. (2) eta optimization
+//!   (dispatched to the [`crate::runtime`] engine).
+//! * [`gibbs_predict`] — test-time inference with frozen phi-hat (eq. 4)
+//!   and response prediction (eq. 5), averaging post-burn-in samples of the
+//!   empirical topic distribution (Nguyen et al. 2014: "averaging is best").
+//!
+//! The token sweep is the system's hot path; see DESIGN.md §Perf for the
+//! layout/fast-exp decisions and `benches/gibbs_hotpath.rs` for the
+//! tokens/second tracking bench.
+
+pub mod gibbs_predict;
+pub mod gibbs_train;

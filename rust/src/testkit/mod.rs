@@ -1,0 +1,85 @@
+//! Property-testing micro-framework (proptest is not in the offline vendor
+//! set). Deterministic seeded case generation with failure-seed reporting:
+//! every failure message names the case seed so it can be replayed exactly.
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` for `cases` generated inputs. On panic, re-raises with the
+/// case seed in the message.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) + std::panic::RefUnwindSafe,
+) where
+    T: std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000_u64 + case as u64;
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        let result = std::panic::catch_unwind(|| prop(&input));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x})\n\
+                 input: {input:?}\ncause: {msg}"
+            );
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.gen_range(hi - lo + 1)
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_in(rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+    lo + (hi - lo) * rng.next_f64()
+}
+
+/// Random f32 vector with entries in [lo, hi).
+pub fn vec_f32(rng: &mut Pcg64, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| lo + (hi - lo) * rng.next_f32()).collect()
+}
+
+/// Random f64 vector with entries in [lo, hi).
+pub fn vec_f64(rng: &mut Pcg64, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| f64_in(rng, lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("sum-commutes", 25, |rng| (rng.next_f64(), rng.next_f64()), |&(a, b)| {
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        forall("always-fails", 3, |rng| rng.next_u64(), |_| panic!("nope"));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for _ in 0..1000 {
+            let u = usize_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&u));
+            let f = f64_in(&mut rng, -1.0, 2.0);
+            assert!((-1.0..2.0).contains(&f));
+        }
+        assert_eq!(vec_f32(&mut rng, 5, 0.0, 1.0).len(), 5);
+        assert_eq!(vec_f64(&mut rng, 4, 0.0, 1.0).len(), 4);
+    }
+}

@@ -1,0 +1,216 @@
+//! Scalar math helpers used across the sampler, evaluation and demos.
+
+use std::f64::consts::PI;
+
+/// log(sum(exp(xs))) with max-subtraction for stability.
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f64 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Gaussian pdf N(x; mu, var). `var` is the *variance* (paper's rho).
+#[inline]
+pub fn normal_pdf(x: f64, mu: f64, var: f64) -> f64 {
+    let d = x - mu;
+    (-d * d / (2.0 * var)).exp() / (2.0 * PI * var).sqrt()
+}
+
+/// Gaussian log-pdf.
+#[inline]
+pub fn normal_logpdf(x: f64, mu: f64, var: f64) -> f64 {
+    let d = x - mu;
+    -0.5 * (2.0 * PI * var).ln() - d * d / (2.0 * var)
+}
+
+/// Standard normal CDF via the Abramowitz-Stegun erf approximation
+/// (|error| < 7.5e-8 — sufficient for KS p-values and histogram overlays).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// erf via A&S 7.1.26.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = t
+        * (0.254_829_592
+            + t * (-0.284_496_736
+                + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+    sign * (1.0 - y * (-x * x).exp())
+}
+
+/// Fast exp approximation (Schraudolph-style, refined): exploits the IEEE-754
+/// double layout to compute e^x with ~2e-4 relative error over |x| < 700.
+/// Used in the Gibbs hot path where the Gaussian response margin needs T
+/// exponentials per token; exactness there is irrelevant because the values
+/// feed an unnormalized categorical draw. Falls back to the exact exp for
+/// |x| outside the safe window.
+#[inline]
+pub fn fast_exp(x: f64) -> f64 {
+    if !(-700.0..=700.0).contains(&x) {
+        return x.exp();
+    }
+    // e^x = 2^(x/ln2); split into integer + fractional parts and use a
+    // degree-5 polynomial (minimax over [0,1)) for the fractional power.
+    const LOG2E: f64 = std::f64::consts::LOG2_E;
+    let y = x * LOG2E;
+    let yi = y.floor();
+    let yf = y - yi;
+    // 2^yf via polynomial (Horner), coefficients for 2^t on [0,1)
+    let p = 1.0
+        + yf * (0.693_147_180_559_945
+            + yf * (0.240_226_506_959_101
+                + yf * (0.055_504_108_664_822
+                    + yf * (0.009_618_129_107_629
+                        + yf * (0.001_333_355_814_642_84 + yf * 0.000_154_035_303_933_816)))));
+    // scale by 2^yi through exponent bits
+    let bits = ((yi as i64 + 1023) as u64) << 52;
+    p * f64::from_bits(bits)
+}
+
+/// Digamma function (Bernardo's algorithm) — used by hyperparameter
+/// optimization (fixed-point alpha/beta updates).
+pub fn digamma(mut x: f64) -> f64 {
+    let mut result = 0.0;
+    while x < 6.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result + x.ln() - 0.5 * inv
+        - inv2 * (1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 * (1.0 / 252.0 - inv2 / 240.0)))
+}
+
+/// ln Gamma via Lanczos (g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        return (PI / (PI * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Dot product (f64 accumulate over f32 slices).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logsumexp_matches_naive() {
+        let xs: [f64; 4] = [0.1, -2.0, 3.5, 1.0];
+        let naive: f64 = xs.iter().map(|x: &f64| x.exp()).sum::<f64>().ln();
+        assert!((logsumexp(&xs) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logsumexp_stable_for_large_inputs() {
+        let xs = [1000.0, 1000.0];
+        assert!((logsumexp(&xs) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(logsumexp(&[f64::NEG_INFINITY, f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn normal_pdf_integrates_to_one() {
+        let (mu, var) = (0.3, 2.0);
+        let h = 0.001;
+        let sum: f64 = (-10_000..10_000)
+            .map(|i| normal_pdf(i as f64 * h, mu, var) * h)
+            .sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logpdf_consistent_with_pdf() {
+        for &x in &[-2.0, 0.0, 1.5] {
+            let (p, lp) = (normal_pdf(x, 0.5, 0.7), normal_logpdf(x, 0.5, 0.7));
+            assert!((p.ln() - lp).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // A&S table values
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.842_700_79).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.842_700_79).abs() < 1e-6);
+        assert!((erf(2.0) - 0.995_322_27).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_cdf_symmetry() {
+        for &x in &[0.1, 0.7, 1.9] {
+            assert!((normal_cdf(x) + normal_cdf(-x) - 1.0).abs() < 1e-7);
+        }
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fast_exp_relative_error() {
+        let mut worst = 0.0f64;
+        let mut x = -30.0;
+        while x < 30.0 {
+            let rel = (fast_exp(x) - x.exp()).abs() / x.exp();
+            worst = worst.max(rel);
+            x += 0.0137;
+        }
+        assert!(worst < 2e-5, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn fast_exp_extremes_fall_back() {
+        assert_eq!(fast_exp(-800.0), (-800.0f64).exp());
+        assert!(fast_exp(-745.0).is_finite());
+    }
+
+    #[test]
+    fn digamma_recurrence() {
+        // psi(x+1) = psi(x) + 1/x
+        for &x in &[0.3, 1.0, 2.7, 11.0] {
+            assert!((digamma(x + 1.0) - digamma(x) - 1.0 / x).abs() < 1e-9, "x={x}");
+        }
+        // psi(1) = -gamma
+        assert!((digamma(1.0) + 0.577_215_664_901_532_9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_gamma_factorials() {
+        // ln Gamma(n+1) = ln n!
+        let mut f = 1.0f64;
+        for n in 1..15 {
+            f *= n as f64;
+            assert!((ln_gamma(n as f64 + 1.0) - f.ln()).abs() < 1e-8, "n={n}");
+        }
+        // Gamma(1/2) = sqrt(pi)
+        assert!((ln_gamma(0.5) - 0.5 * PI.ln()).abs() < 1e-9);
+    }
+}

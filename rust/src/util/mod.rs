@@ -1,0 +1,11 @@
+//! Foundational substrates: RNG, math, statistics, timing, threading,
+//! logging. Everything here is dependency-free (no network at build time, so
+//! the usual crates — rand, rayon, criterion — are reimplemented in-repo at
+//! the scale this project needs).
+
+pub mod logging;
+pub mod math;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;

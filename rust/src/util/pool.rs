@@ -1,0 +1,118 @@
+//! Scoped thread-pool substrate (no rayon/tokio offline).
+//!
+//! The communication-free algorithm needs exactly one primitive: "run M
+//! independent closures on M OS threads, give each its own seeded RNG, and
+//! join". [`scoped_map`] provides that with panic propagation; workers share
+//! **nothing** mutable during execution — matching the paper's zero
+//! inter-machine communication during sampling (the comm ledger in
+//! `parallel::comm` audits this).
+
+use std::sync::mpsc;
+use std::thread;
+
+/// Run `f(i, &items[i])` for every item on its own thread (up to
+/// `max_threads` live at once) and collect the results in order.
+/// Panics in workers are propagated to the caller.
+pub fn scoped_map<T, R, F>(items: &[T], max_threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    assert!(max_threads > 0);
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return Vec::new();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        let fref = &f;
+        let nextref = &next;
+        let workers = max_threads.min(n);
+        for _ in 0..workers {
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let i = nextref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = fref(i, &items[i]);
+                // Receiver only drops after scope join; send cannot fail
+                // while any result is still expected.
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker produced no result")).collect()
+}
+
+/// Convenience: number of available CPUs (>= 1).
+pub fn num_cpus() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let out = scoped_map(&items, 4, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..37).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_all_items_once() {
+        let counter = AtomicUsize::new(0);
+        let items = vec![(); 100];
+        scoped_map(&items, 8, |_, _| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let items = vec![1, 2, 3];
+        assert_eq!(scoped_map(&items, 1, |_, &x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<u8> = vec![];
+        let out: Vec<u8> = scoped_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        let items = vec![0, 1, 2];
+        scoped_map(&items, 2, |_, &x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn actually_parallel() {
+        // With 4 threads, 4 sleeps of 30ms should take well under 120ms.
+        let items = vec![(); 4];
+        let sw = crate::util::timer::Stopwatch::new();
+        scoped_map(&items, 4, |_, _| std::thread::sleep(std::time::Duration::from_millis(30)));
+        assert!(sw.elapsed_secs() < 0.1, "took {}", sw.elapsed_secs());
+    }
+}

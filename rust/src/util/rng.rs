@@ -1,0 +1,301 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! PCG-XSL-RR 128/64 ("pcg64") — O'Neill's PCG family — plus SplitMix64 for
+//! seeding. Every stochastic component in the system (corpus generation,
+//! Gibbs initialization/sampling, partitioning, MH demos) draws from a
+//! [`Pcg64`] seeded through an explicit, logged seed path so that every
+//! experiment is exactly reproducible; parallel shards derive independent
+//! streams via [`Pcg64::split`].
+
+/// SplitMix64: used to expand a u64 seed into PCG state/increment.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSL-RR 128/64 generator. 128-bit LCG state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Construct from a full 128-bit state/stream pair.
+    pub fn new(init_state: u128, init_seq: u128) -> Self {
+        let mut rng = Pcg64 { state: 0, inc: (init_seq << 1) | 1 };
+        rng.step();
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.step();
+        rng
+    }
+
+    /// Seed from a single u64 (SplitMix64-expanded), the common entry point.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let a = splitmix64(&mut sm) as u128;
+        let b = splitmix64(&mut sm) as u128;
+        let c = splitmix64(&mut sm) as u128;
+        let d = splitmix64(&mut sm) as u128;
+        Self::new((a << 64) | b, (c << 64) | d)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next u64 (XSL-RR output function).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Next u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, bound) (Lemire rejection).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (polar form avoided: we want a fixed
+    /// consumption pattern of exactly two u64 per draw for reproducibility).
+    #[inline]
+    pub fn next_gaussian(&mut self) -> f64 {
+        // u1 in (0,1] to avoid ln(0)
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang; shape > 0.
+    pub fn next_gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^{1/a}
+            let u: f64 = self.next_f64().max(1e-300);
+            return self.next_gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_gaussian();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.max(1e-300).ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_k) sample of dimension k.
+    pub fn next_dirichlet_sym(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.next_gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        let s = if s <= 0.0 { 1.0 } else { s };
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn sample_discrete(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.gen_range(weights.len());
+        }
+        let mut u = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child stream (distinct LCG increment), used to
+    /// give every parallel shard its own reproducible randomness.
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let a = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let b = self.next_u64();
+        let mut sm = a ^ b.rotate_left(17);
+        let s0 = splitmix64(&mut sm) as u128;
+        let s1 = splitmix64(&mut sm) as u128;
+        let s2 = splitmix64(&mut sm) as u128;
+        let s3 = splitmix64(&mut sm) as u128;
+        Pcg64::new((s0 << 64) | s1, (s2 << 64) | s3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_unbiased_coverage() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[r.gen_range(7)] += 1;
+        }
+        let expect = n as f64 / 7.0;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seed_from_u64(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Pcg64::seed_from_u64(13);
+        for &shape in &[0.3, 1.0, 2.5, 10.0] {
+            let n = 50_000;
+            let mean: f64 = (0..n).map(|_| r.next_gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(0.5),
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Pcg64::seed_from_u64(17);
+        for _ in 0..100 {
+            let v = r.next_dirichlet_sym(0.5, 8);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn sample_discrete_respects_weights() {
+        let mut r = Pcg64::seed_from_u64(19);
+        let w = [1.0, 0.0, 3.0];
+        let mut c = [0usize; 3];
+        for _ in 0..40_000 {
+            c[r.sample_discrete(&w)] += 1;
+        }
+        assert_eq!(c[1], 0);
+        let ratio = c[2] as f64 / c[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from_u64(23);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg64::seed_from_u64(5);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+}

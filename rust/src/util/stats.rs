@@ -1,0 +1,269 @@
+//! Descriptive statistics, histograms and two-sample tests.
+//!
+//! Used by (a) the evaluation layer (summaries over repeated runs — the
+//! paper's figures average 100 runs), (b) the Fig-5 label-distribution
+//! reproduction (histogram + normality probe), and (c) the Fig-1/2
+//! quasi-ergodicity demos (Kolmogorov-Smirnov distance between pooled
+//! sub-chain samples and the true posterior).
+
+use crate::util::math::normal_cdf;
+
+/// Streaming summary (Welford) of a scalar series.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.std() / (self.n as f64).sqrt() }
+    }
+
+    /// Skewness (biased, moment estimator) — used by the Fig-5 normality probe.
+    pub fn skewness_of(xs: &[f64]) -> f64 {
+        let s = Summary::from_slice(xs);
+        if s.n < 3 || s.std() == 0.0 {
+            return 0.0;
+        }
+        let m = s.mean();
+        let sd = (s.m2 / s.n as f64).sqrt();
+        xs.iter().map(|&x| ((x - m) / sd).powi(3)).sum::<f64>() / s.n as f64
+    }
+
+    /// Excess kurtosis (biased).
+    pub fn kurtosis_of(xs: &[f64]) -> f64 {
+        let s = Summary::from_slice(xs);
+        if s.n < 4 || s.std() == 0.0 {
+            return 0.0;
+        }
+        let m = s.mean();
+        let sd = (s.m2 / s.n as f64).sqrt();
+        xs.iter().map(|&x| ((x - m) / sd).powi(4)).sum::<f64>() / s.n as f64 - 3.0
+    }
+}
+
+/// Quantile by linear interpolation on a sorted copy (q in [0,1]).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Fixed-width histogram over [lo, hi] with `bins` buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<usize>,
+    pub n: usize,
+    pub underflow: usize,
+    pub overflow: usize,
+}
+
+impl Histogram {
+    pub fn build(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        let mut h = Histogram { lo, hi, counts: vec![0; bins], n: 0, underflow: 0, overflow: 0 };
+        let w = (hi - lo) / bins as f64;
+        for &x in xs {
+            h.n += 1;
+            if x < lo {
+                h.underflow += 1;
+            } else if x >= hi {
+                h.overflow += 1;
+            } else {
+                let b = ((x - lo) / w) as usize;
+                h.counts[b.min(bins - 1)] += 1;
+            }
+        }
+        h
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len()).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// ASCII rendering for experiment reports (one row per bin).
+    pub fn render(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let centers = self.centers();
+        let mut out = String::new();
+        for (c, &n) in centers.iter().zip(&self.counts) {
+            let bar = "#".repeat(n * width / max);
+            out.push_str(&format!("{c:>9.3} | {bar} {n}\n"));
+        }
+        out
+    }
+}
+
+/// Two-sample Kolmogorov-Smirnov statistic.
+pub fn ks_two_sample(a: &[f64], b: &[f64]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty());
+    let mut sa = a.to_vec();
+    let mut sb = b.to_vec();
+    sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (mut i, mut j) = (0usize, 0usize);
+    let (na, nb) = (sa.len() as f64, sb.len() as f64);
+    let mut d: f64 = 0.0;
+    while i < sa.len() && j < sb.len() {
+        if sa[i] <= sb[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+        d = d.max((i as f64 / na - j as f64 / nb).abs());
+    }
+    d
+}
+
+/// One-sample KS statistic against the N(mu, var) CDF.
+pub fn ks_vs_normal(xs: &[f64], mu: f64, var: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let n = v.len() as f64;
+    let sd = var.sqrt();
+    let mut d: f64 = 0.0;
+    for (i, &x) in v.iter().enumerate() {
+        let f = normal_cdf((x - mu) / sd);
+        d = d.max((f - i as f64 / n).abs());
+        d = d.max(((i + 1) as f64 / n - f).abs());
+    }
+    d
+}
+
+/// Asymptotic KS p-value (Kolmogorov distribution tail, 100-term series).
+pub fn ks_pvalue(d: f64, n_eff: f64) -> f64 {
+    let t = (n_eff.sqrt() + 0.12 + 0.11 / n_eff.sqrt()) * d;
+    let mut p = 0.0;
+    for k in 1..=100 {
+        let k = k as f64;
+        p += 2.0 * (-1.0f64).powi(k as i32 + 1) * (-2.0 * k * k * t * t).exp();
+    }
+    p.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0, 5.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert!((quantile(&xs, 0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = [-1.0, 0.1, 0.5, 0.9, 2.0];
+        let h = Histogram::build(&xs, 0.0, 1.0, 4);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts.iter().sum::<usize>(), 3);
+        assert_eq!(h.n, 5);
+    }
+
+    #[test]
+    fn ks_same_distribution_small() {
+        let mut r = Pcg64::seed_from_u64(1);
+        let a: Vec<f64> = (0..2000).map(|_| r.next_gaussian()).collect();
+        let b: Vec<f64> = (0..2000).map(|_| r.next_gaussian()).collect();
+        let d = ks_two_sample(&a, &b);
+        assert!(d < 0.06, "d={d}");
+        let p = ks_pvalue(d, 1000.0);
+        assert!(p > 0.01, "p={p}");
+    }
+
+    #[test]
+    fn ks_different_distributions_large() {
+        let mut r = Pcg64::seed_from_u64(2);
+        let a: Vec<f64> = (0..2000).map(|_| r.next_gaussian()).collect();
+        let b: Vec<f64> = (0..2000).map(|_| r.next_gaussian() + 1.5).collect();
+        let d = ks_two_sample(&a, &b);
+        assert!(d > 0.4, "d={d}");
+        assert!(ks_pvalue(d, 1000.0) < 1e-6);
+    }
+
+    #[test]
+    fn ks_vs_normal_detects_fit() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let a: Vec<f64> = (0..3000).map(|_| 2.0 + 0.5 * r.next_gaussian()).collect();
+        assert!(ks_vs_normal(&a, 2.0, 0.25) < 0.03);
+        assert!(ks_vs_normal(&a, 0.0, 0.25) > 0.5);
+    }
+
+    #[test]
+    fn skewness_and_kurtosis_of_normal_near_zero() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let a: Vec<f64> = (0..50_000).map(|_| r.next_gaussian()).collect();
+        assert!(Summary::skewness_of(&a).abs() < 0.05);
+        assert!(Summary::kurtosis_of(&a).abs() < 0.1);
+    }
+}

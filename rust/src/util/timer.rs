@@ -1,0 +1,189 @@
+//! Wall-clock timing with named phases.
+//!
+//! The paper's headline comparison is *computation time* across the four
+//! algorithms; every run in the experiment layer reports a [`PhaseTimings`]
+//! breakdown (train / predict-test / predict-train / combine) so the
+//! fig-6/fig-7 shape — Naive fastest, SimpleAvg fast, WeightedAvg slower
+//! than NonParallel — is attributable to the right phase.
+
+use std::time::{Duration, Instant};
+
+/// Seconds of CPU time consumed by the *calling thread*
+/// (`CLOCK_THREAD_CPUTIME_ID`). Used to simulate per-worker wall time on
+/// machines with fewer cores than workers (DESIGN.md §3): a worker's thread
+/// CPU time is exactly its wall time on a dedicated core.
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Stopwatch over the calling thread's CPU clock.
+#[derive(Debug)]
+pub struct CpuStopwatch {
+    start: f64,
+}
+
+impl Default for CpuStopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CpuStopwatch {
+    pub fn new() -> Self {
+        CpuStopwatch { start: thread_cpu_secs() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        (thread_cpu_secs() - self.start).max(0.0)
+    }
+}
+
+/// A simple start/stop stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulated named phase timings.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimings {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `secs` to phase `name` (creates the phase on first use).
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    /// Time a closure under phase `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::new();
+        let out = f();
+        self.add(name, sw.elapsed_secs());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, s)| *s).unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    /// Merge another breakdown into this one (summing shared phases).
+    pub fn merge(&mut self, other: &PhaseTimings) {
+        for (n, s) in &other.entries {
+            self.add(n, *s);
+        }
+    }
+
+    /// `phase=1.234s` space-separated rendering.
+    pub fn render(&self) -> String {
+        self.entries
+            .iter()
+            .map(|(n, s)| format!("{n}={s:.3}s"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn phases_accumulate_and_merge() {
+        let mut a = PhaseTimings::new();
+        a.add("train", 1.0);
+        a.add("train", 0.5);
+        a.add("predict", 0.25);
+        assert!((a.get("train") - 1.5).abs() < 1e-12);
+        assert!((a.total() - 1.75).abs() < 1e-12);
+
+        let mut b = PhaseTimings::new();
+        b.add("predict", 0.75);
+        b.add("combine", 0.1);
+        a.merge(&b);
+        assert!((a.get("predict") - 1.0).abs() < 1e-12);
+        assert!((a.get("combine") - 0.1).abs() < 1e-12);
+        assert_eq!(a.entries().len(), 3);
+    }
+
+    #[test]
+    fn cpu_stopwatch_tracks_busy_work() {
+        let sw = CpuStopwatch::new();
+        // burn some CPU
+        let mut acc = 0u64;
+        for i in 0..3_000_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let busy = sw.elapsed_secs();
+        assert!(busy > 0.0, "cpu time should advance under load");
+
+        // sleeping must NOT advance the thread CPU clock (much)
+        let sw = CpuStopwatch::new();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(sw.elapsed_secs() < 0.02, "sleep consumed {}s cpu", sw.elapsed_secs());
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimings::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") >= 0.0);
+    }
+}

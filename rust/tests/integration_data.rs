@@ -1,0 +1,109 @@
+//! Data-pipeline integration: text -> tokens -> vocab -> corpus -> disk ->
+//! training, end to end, plus failure-injection on malformed inputs.
+
+use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::data::loader;
+use cfslda::data::partition::train_test_split;
+use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::data::tokenizer::TokenizerConfig;
+use cfslda::parallel::leader::{run_with_engine, Algorithm};
+use cfslda::runtime::EngineHandle;
+use cfslda::util::rng::Pcg64;
+use std::io::Write;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("cfslda_it_{}_{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn synthetic_to_disk_to_training() {
+    // generate -> save bow -> load -> train/predict: the full data path.
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(1);
+    let corpus = generate_corpus(&spec, &mut rng);
+    let path = tmp("roundtrip.bow");
+    loader::save_bow(&corpus, &path).unwrap();
+    let loaded = loader::load_bow(&path).unwrap();
+    assert_eq!(loaded.num_docs(), corpus.num_docs());
+    assert_eq!(loaded.num_tokens(), corpus.num_tokens());
+
+    let ds = train_test_split(&loaded, 180, &mut rng);
+    let mut cfg = ExperimentConfig::quick();
+    cfg.engine = EngineKind::Native;
+    cfg.train.sweeps = 10;
+    cfg.train.burnin = 2;
+    let engine = EngineHandle::native();
+    let (out, _) = run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap();
+    assert!(out.test_metrics.mse.is_finite());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn raw_text_pipeline_trains() {
+    // A tiny raw-text corpus exercising tokenizer + vocab pruning + JSONL.
+    let path = tmp("text.jsonl");
+    let mut f = std::fs::File::create(&path).unwrap();
+    let topics = [
+        ("strong revenue growth operational performance excellent quarter", 2.0),
+        ("revenue growth strong excellent operational margin", 1.8),
+        ("weak decline loss operational risk impairment negative", -1.5),
+        ("loss decline weak negative impairment writedown", -1.7),
+    ];
+    let mut rng = Pcg64::seed_from_u64(2);
+    for i in 0..120 {
+        let (text, y) = topics[i % topics.len()];
+        let noise = 0.1 * rng.next_gaussian();
+        writeln!(f, "{{\"text\": \"{text}\", \"response\": {}}}", y + noise).unwrap();
+    }
+    drop(f);
+    let (corpus, vocab) =
+        loader::load_text_jsonl(&path, &TokenizerConfig::default(), 0.05, 1.0).unwrap();
+    assert!(vocab.len() > 5, "vocab too small: {}", vocab.len());
+    assert_eq!(corpus.num_docs(), 120);
+
+    let mut rng = Pcg64::seed_from_u64(3);
+    let ds = train_test_split(&corpus, 90, &mut rng);
+    let mut cfg = ExperimentConfig::quick();
+    cfg.engine = EngineKind::Native;
+    cfg.model.topics = 4;
+    cfg.train.sweeps = 15;
+    cfg.train.burnin = 3;
+    let engine = EngineHandle::native();
+    let (out, _) = run_with_engine(Algorithm::NonParallel, &ds, &cfg, &engine, false).unwrap();
+    // Two sharply separated label groups: R^2 must be high.
+    assert!(out.test_metrics.r2 > 0.5, "r2 = {}", out.test_metrics.r2);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn malformed_inputs_fail_cleanly() {
+    let path = tmp("garbage.bow");
+    std::fs::write(&path, "#cfslda-bow vocab=5\n1.0 0 1 9999\n").unwrap();
+    // token 9999 >= vocab 5 must be rejected by validation
+    assert!(loader::load_bow(&path).is_err());
+
+    std::fs::write(&path, "#cfslda-bow vocab=notanumber\n").unwrap();
+    assert!(loader::load_bow(&path).is_err());
+
+    std::fs::write(&path, "").unwrap();
+    assert!(loader::load_bow(&path).is_err());
+    std::fs::remove_file(path).ok();
+
+    assert!(loader::load_bow(std::path::Path::new("/nonexistent/x.bow")).is_err());
+}
+
+#[test]
+fn empty_documents_are_dropped_not_fatal() {
+    let path = tmp("empties.jsonl");
+    std::fs::write(
+        &path,
+        "{\"vocab_size\": 3}\n{\"tokens\": [], \"response\": 1.0}\n{\"tokens\": [0, 1], \"response\": 2.0}\n",
+    )
+    .unwrap();
+    let c = loader::load_encoded_jsonl(&path).unwrap();
+    assert_eq!(c.num_docs(), 1);
+    std::fs::remove_file(path).ok();
+}

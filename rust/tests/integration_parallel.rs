@@ -1,0 +1,174 @@
+//! Parallel-algorithm integration: the paper's qualitative results must
+//! hold on synthetic corpora — Naive Combination degraded by
+//! quasi-ergodicity, prediction-space combination preserving quality, and
+//! the timing order (Fig 6/7 shape).
+
+use cfslda::config::schema::{EngineKind, ExperimentConfig, ResponseKind};
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::eval::mode_diag::mode_divergence;
+use cfslda::experiments::runner::{check_fig_shape, run_comparison, Comparison};
+use cfslda::parallel::leader::{run_with_engine, Algorithm};
+use cfslda::runtime::EngineHandle;
+use cfslda::util::rng::Pcg64;
+
+/// Wall-clock assertions need exclusive use of the CPU: the test harness
+/// runs tests concurrently, so every test in this binary takes this lock
+/// (timing-sensitive ones would otherwise measure each other's contention).
+static TIMING_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    TIMING_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick();
+    c.engine = EngineKind::Native;
+    c.train.sweeps = 20;
+    c.train.burnin = 4;
+    c.train.eta_every = 4;
+    c.train.predict_sweeps = 10;
+    c.train.predict_burnin = 3;
+    c.parallel.shards = 4;
+    c.parallel.threads = 4;
+    c
+}
+
+#[test]
+fn fig6_shape_holds_continuous() {
+    let _guard = serial();
+    // Large enough that training dominates thread-spawn overhead and the
+    // paper's timing order is measurable (full scale lives in the benches).
+    let mut c = Comparison::fig6(0.5, 2); // ~2100 docs, 2 runs
+    c.cfg = cfg();
+    c.cfg.model.topics = 8;
+    c.cfg.train.sweeps = 40;
+    c.cfg.train.burnin = 5;
+    c.cfg.train.eta_every = 5;
+    let engine = EngineHandle::native();
+    let (series, _) = run_comparison(&c, &engine).unwrap();
+    check_fig_shape(&series, false).unwrap();
+}
+
+#[test]
+fn fig7_shape_holds_binary() {
+    let _guard = serial();
+    let mut c = Comparison::fig7(0.08, 2); // ~2000 docs
+    c.cfg = cfg();
+    c.cfg.response = ResponseKind::Binary;
+    c.cfg.model.topics = 8;
+    c.cfg.train.sweeps = 40;
+    c.cfg.train.burnin = 5;
+    c.cfg.train.eta_every = 5;
+    let engine = EngineHandle::native();
+    let (series, _) = run_comparison(&c, &engine).unwrap();
+    check_fig_shape(&series, true).unwrap();
+}
+
+#[test]
+fn quasi_ergodicity_is_why_naive_fails() {
+    let _guard = serial();
+    // Causal chain check: shards actually sit in different permutation
+    // modes (positive Hungarian gap) AND naive does worse than simple.
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(11);
+    let ds = generate_split(&spec, 200, &mut rng);
+    let engine = EngineHandle::native();
+    let c = cfg();
+
+    let (simple, models) =
+        run_with_engine(Algorithm::SimpleAverage, &ds, &c, &engine, true).unwrap();
+    let phis: Vec<_> = models.iter().map(|m| m.phi_topic_rows()).collect();
+    let div = mode_divergence(&phis);
+    assert!(div.permutation_gap() > 0.03, "no mode divergence measured: {div:?}");
+
+    let (naive, _) =
+        run_with_engine(Algorithm::NaiveCombination, &ds, &c, &engine, false).unwrap();
+    assert!(
+        naive.test_metrics.mse > simple.test_metrics.mse,
+        "naive {} <= simple {}",
+        naive.test_metrics.mse,
+        simple.test_metrics.mse
+    );
+}
+
+#[test]
+fn more_shards_keep_simple_average_quality() {
+    let _guard = serial();
+    // Robustness beyond the paper: quality should degrade gracefully (not
+    // collapse) as M grows and shards shrink.
+    let mut spec = SyntheticSpec::continuous_small();
+    spec.docs = 480;
+    let mut rng = Pcg64::seed_from_u64(13);
+    let ds = generate_split(&spec, 400, &mut rng);
+    let engine = EngineHandle::native();
+    let ys = ds.test.responses();
+    let var = cfslda::util::stats::Summary::from_slice(&ys).var();
+    for m in [2usize, 4, 8] {
+        let mut c = cfg();
+        c.parallel.shards = m;
+        let (out, _) = run_with_engine(Algorithm::SimpleAverage, &ds, &c, &engine, false).unwrap();
+        assert!(
+            out.test_metrics.mse < var,
+            "M={m}: mse {} worse than mean baseline {var}",
+            out.test_metrics.mse
+        );
+    }
+}
+
+#[test]
+fn single_shard_parallel_equals_shape_of_nonparallel() {
+    let _guard = serial();
+    // M=1 SimpleAverage is NonParallel plus combination overhead; quality
+    // must be statistically indistinguishable (same corpus, same budget).
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(17);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let mut c = cfg();
+    c.parallel.shards = 1;
+    let (simple, _) = run_with_engine(Algorithm::SimpleAverage, &ds, &c, &engine, false).unwrap();
+    let (nonp, _) = run_with_engine(Algorithm::NonParallel, &ds, &c, &engine, false).unwrap();
+    // Different RNG consumption (partition + split streams) makes the runs
+    // stochastically different; both must beat the mean-predictor baseline.
+    let var = cfslda::util::stats::Summary::from_slice(&ds.test.responses()).var();
+    assert!(simple.test_metrics.mse < 0.6 * var, "M=1 simple {} vs var {var}", simple.test_metrics.mse);
+    assert!(nonp.test_metrics.mse < 0.6 * var, "nonparallel {} vs var {var}", nonp.test_metrics.mse);
+}
+
+#[test]
+fn threads_do_not_change_results() {
+    let _guard = serial();
+    // Thread count is a resource knob, never a semantics knob.
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(19);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let mut c1 = cfg();
+    c1.parallel.threads = 1;
+    let mut c4 = cfg();
+    c4.parallel.threads = 4;
+    let (a, _) = run_with_engine(Algorithm::WeightedAverage, &ds, &c1, &engine, false).unwrap();
+    let (b, _) = run_with_engine(Algorithm::WeightedAverage, &ds, &c4, &engine, false).unwrap();
+    assert_eq!(a.yhat, b.yhat);
+    assert_eq!(a.weights, b.weights);
+}
+
+#[test]
+fn full_stack_with_xla_engine_when_available() {
+    let _guard = serial();
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(23);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::xla(dir).unwrap();
+    let c = cfg();
+    for algo in Algorithm::ALL {
+        let (out, _) = run_with_engine(algo, &ds, &c, &engine, false).unwrap();
+        assert!(out.test_metrics.mse.is_finite());
+        assert_eq!(out.yhat.len(), ds.test.num_docs());
+    }
+}

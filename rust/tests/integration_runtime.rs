@@ -1,0 +1,164 @@
+//! Cross-engine integration: the AOT XLA artifacts must agree with the
+//! pure-rust native engine on random inputs — including padding edges and
+//! the chunked (> row bucket) gram path.
+//!
+//! Requires `make artifacts` (skips with a loud message otherwise, so
+//! `cargo test` works on a fresh checkout).
+
+use cfslda::runtime::native::NativeEngine;
+use cfslda::runtime::{EngineHandle, EngineImpl};
+use cfslda::util::rng::Pcg64;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let p = Path::new(&dir).to_path_buf();
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts at {p:?} — run `make artifacts` first");
+        None
+    }
+}
+
+fn engines() -> Option<(EngineHandle, NativeEngine)> {
+    let dir = artifacts_dir()?;
+    Some((EngineHandle::xla(&dir).expect("xla engine"), NativeEngine::new()))
+}
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn eta_solve_agrees_across_engines() {
+    let Some((xla, native)) = engines() else { return };
+    let mut rng = Pcg64::seed_from_u64(101);
+    for &(d, t) in &[(1usize, 2usize), (17, 5), (300, 8), (1000, 16), (4096, 8)] {
+        let zbar: Vec<f32> = (0..d * t).map(|_| rng.next_f32()).collect();
+        let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let (e1, m1) = xla.eta_solve(&zbar, &y, t, 0.7, 0.2).unwrap();
+        let (e2, m2) = native.eta_solve(&zbar, &y, t, 0.7, 0.2).unwrap();
+        assert_eq!(e1.len(), t);
+        for (a, b) in e1.iter().zip(&e2) {
+            assert!(close(*a, *b, 1e-3), "d={d} t={t}: {e1:?} vs {e2:?}");
+        }
+        assert!(close(m1, m2, 1e-3), "mse {m1} vs {m2}");
+    }
+}
+
+#[test]
+fn eta_solve_chunked_path_agrees() {
+    let Some((xla, native)) = engines() else { return };
+    let mut rng = Pcg64::seed_from_u64(202);
+    // 9000 rows crosses two chunk boundaries (bucket 4096).
+    let (d, t) = (9000usize, 16usize);
+    let zbar: Vec<f32> = (0..d * t).map(|_| rng.next_f32()).collect();
+    let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let (e1, m1) = xla.eta_solve(&zbar, &y, t, 0.3, 0.0).unwrap();
+    let (e2, m2) = native.eta_solve(&zbar, &y, t, 0.3, 0.0).unwrap();
+    for (a, b) in e1.iter().zip(&e2) {
+        assert!(close(*a, *b, 1e-3), "{e1:?} vs {e2:?}");
+    }
+    assert!(close(m1, m2, 1e-3));
+}
+
+#[test]
+fn predict_agrees_and_handles_no_labels() {
+    let Some((xla, native)) = engines() else { return };
+    let mut rng = Pcg64::seed_from_u64(303);
+    for &(b, t) in &[(1usize, 2usize), (100, 8), (5000, 32)] {
+        let zbar: Vec<f32> = (0..b * t).map(|_| rng.next_f32()).collect();
+        let eta: Vec<f64> = (0..t).map(|_| rng.next_gaussian()).collect();
+        let y: Vec<f64> = (0..b).map(|_| rng.next_gaussian()).collect();
+        let p1 = xla.predict(&zbar, &eta, Some(&y), t).unwrap();
+        let p2 = native.predict(&zbar, &eta, Some(&y), t).unwrap();
+        assert_eq!(p1.yhat.len(), b);
+        for (a, c) in p1.yhat.iter().zip(&p2.yhat) {
+            assert!(close(*a, *c, 1e-4), "b={b} t={t}");
+        }
+        assert!(close(p1.mse, p2.mse, 1e-3));
+        assert!(close(p1.acc, p2.acc, 1e-6), "acc {} vs {}", p1.acc, p2.acc);
+        // no labels -> metrics zero, yhat same
+        let p3 = xla.predict(&zbar, &eta, None, t).unwrap();
+        assert_eq!(p3.mse, 0.0);
+        for (a, c) in p3.yhat.iter().zip(&p1.yhat) {
+            assert!(close(*a, *c, 1e-6));
+        }
+    }
+}
+
+#[test]
+fn combine_agrees_including_padded_shards() {
+    let Some((xla, native)) = engines() else { return };
+    let mut rng = Pcg64::seed_from_u64(404);
+    for &(m, b) in &[(1usize, 10usize), (4, 1216), (16, 5000)] {
+        let preds: Vec<Vec<f64>> =
+            (0..m).map(|_| (0..b).map(|_| rng.next_gaussian()).collect()).collect();
+        let weights: Vec<f64> = (0..m).map(|_| rng.next_f64() + 0.05).collect();
+        let c1 = xla.combine(&preds, &weights).unwrap();
+        let c2 = native.combine(&preds, &weights).unwrap();
+        assert_eq!(c1.len(), b);
+        for (a, d) in c1.iter().zip(&c2) {
+            assert!(close(*a, *d, 1e-4), "m={m} b={b}");
+        }
+    }
+    // more shards than the bucket must error cleanly
+    let preds: Vec<Vec<f64>> = (0..17).map(|_| vec![0.0; 4]).collect();
+    assert!(xla.combine(&preds, &vec![1.0; 17]).is_err());
+}
+
+#[test]
+fn loglik_agrees() {
+    let Some((xla, native)) = engines() else { return };
+    let mut rng = Pcg64::seed_from_u64(505);
+    let (b, t) = (700usize, 8usize);
+    let y: Vec<f64> = (0..b).map(|_| rng.next_gaussian()).collect();
+    let mu: Vec<f32> = (0..b * t).map(|_| rng.next_f32()).collect();
+    let l1 = xla.loglik(&y, &mu, t, 0.6).unwrap();
+    let l2 = native.loglik(&y, &mu, t, 0.6).unwrap();
+    assert_eq!(l1.len(), b * t);
+    for (a, c) in l1.iter().zip(&l2) {
+        assert!((a - c).abs() < 1e-3, "{a} vs {c}");
+    }
+}
+
+#[test]
+fn topic_bucket_rounding_is_transparent() {
+    // t = 5 pads into the T = 8 bucket; results must match native exactly
+    // (padding topics carry zero mass).
+    let Some((xla, native)) = engines() else { return };
+    let mut rng = Pcg64::seed_from_u64(606);
+    let (d, t) = (64usize, 5usize);
+    let zbar: Vec<f32> = (0..d * t).map(|_| rng.next_f32()).collect();
+    let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let (e1, _) = xla.eta_solve(&zbar, &y, t, 1.0, 0.0).unwrap();
+    let (e2, _) = native.eta_solve(&zbar, &y, t, 1.0, 0.0).unwrap();
+    assert_eq!(e1.len(), t);
+    for (a, b) in e1.iter().zip(&e2) {
+        assert!(close(*a, *b, 1e-3));
+    }
+}
+
+#[test]
+fn service_handle_is_shareable_across_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::xla(&dir).unwrap();
+    let mut rng = Pcg64::seed_from_u64(707);
+    let t = 8usize;
+    let zbar: Vec<f32> = (0..50 * t).map(|_| rng.next_f32()).collect();
+    let y: Vec<f64> = (0..50).map(|_| rng.next_gaussian()).collect();
+    let (eta_ref, _) = engine.eta_solve(&zbar, &y, t, 0.5, 0.0).unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let engine = engine.clone();
+            let (zbar, y, eta_ref) = (&zbar, &y, &eta_ref);
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let (eta, _) = engine.eta_solve(zbar, y, t, 0.5, 0.0).unwrap();
+                    assert_eq!(&eta, eta_ref); // same inputs -> same outputs
+                }
+            });
+        }
+    });
+}

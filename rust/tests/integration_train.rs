@@ -1,0 +1,134 @@
+//! End-to-end training integration: the full pipeline learns, converges
+//! and beats baselines on synthetic corpora whose ground truth is known.
+
+use cfslda::config::schema::{EngineKind, ExperimentConfig, ResponseKind};
+use cfslda::data::synthetic::{generate_split, generate_with_truth, SyntheticSpec};
+use cfslda::eval::mode_diag::align_topics;
+use cfslda::model::slda::SldaModel;
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::{gibbs_predict, gibbs_train};
+use cfslda::util::rng::Pcg64;
+use cfslda::util::stats::Summary;
+
+fn cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick();
+    c.engine = EngineKind::Native;
+    c.train.sweeps = 30;
+    c.train.burnin = 5;
+    c.train.eta_every = 5;
+    c.train.predict_sweeps = 12;
+    c.train.predict_burnin = 4;
+    c
+}
+
+#[test]
+fn learns_topics_close_to_ground_truth() {
+    // Train on a corpus drawn from the model family; the learned phi must
+    // align (post-Hungarian) with the generating phi much better than a
+    // random topic set does.
+    let mut spec = SyntheticSpec::continuous_small();
+    spec.docs = 400;
+    spec.beta = 0.02;
+    let mut rng = Pcg64::seed_from_u64(1);
+    let (corpus, truth) = generate_with_truth(&spec, &mut rng);
+    let engine = EngineHandle::native();
+    let out = gibbs_train::train(&corpus, &cfg(), &engine, &mut rng).unwrap();
+
+    let learned = out.model.phi_topic_rows();
+    let report = align_topics(&learned, &truth.phi);
+    let random: Vec<Vec<f64>> =
+        (0..spec.topics).map(|_| rng.next_dirichlet_sym(0.05, spec.vocab)).collect();
+    let random_report = align_topics(&random, &truth.phi);
+    assert!(
+        report.aligned_distance < 0.6 * random_report.aligned_distance,
+        "learned TV {} should beat random TV {}",
+        report.aligned_distance,
+        random_report.aligned_distance
+    );
+}
+
+#[test]
+fn training_mse_trajectory_decreases() {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(2);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let out = gibbs_train::train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+    let mses: Vec<f64> = out.history.iter().map(|h| h.train_mse).collect();
+    assert!(mses.len() >= 3);
+    assert!(
+        mses.last().unwrap() < &(0.8 * mses[0]),
+        "training MSE did not decrease: {mses:?}"
+    );
+}
+
+#[test]
+fn continuous_end_to_end_quality() {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(3);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let out = gibbs_train::train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+    let ys = ds.test.responses();
+    let (pred, _) = gibbs_predict::predict_corpus(
+        &out.model, &ds.test, &cfg().train, &engine, Some(&ys), &mut rng,
+    )
+    .unwrap();
+    let var = Summary::from_slice(&ys).var();
+    assert!(pred.mse < 0.6 * var, "test mse {} vs label variance {var}", pred.mse);
+}
+
+#[test]
+fn binary_end_to_end_quality() {
+    let mut spec = SyntheticSpec::binary_small();
+    spec.docs = 400;
+    let mut rng = Pcg64::seed_from_u64(4);
+    let ds = generate_split(&spec, 300, &mut rng);
+    let mut c = cfg();
+    c.response = ResponseKind::Binary;
+    let engine = EngineHandle::native();
+    let out = gibbs_train::train(&ds.train, &c, &engine, &mut rng).unwrap();
+    let ys = ds.test.responses();
+    let (pred, _) = gibbs_predict::predict_corpus(
+        &out.model, &ds.test, &c.train, &engine, Some(&ys), &mut rng,
+    )
+    .unwrap();
+    // majority-class baseline
+    let pos = ys.iter().filter(|&&y| y > 0.5).count() as f64 / ys.len() as f64;
+    let majority = pos.max(1.0 - pos);
+    assert!(
+        pred.acc > majority.min(0.95) - 0.02,
+        "accuracy {} should at least approach majority baseline {majority}",
+        pred.acc
+    );
+}
+
+#[test]
+fn xla_engine_trains_equivalently_when_available() {
+    // The whole training loop with the XLA engine: same seed => eta within
+    // float32 tolerance of the native run (sampling uses the same RNG
+    // stream; only the eta solve differs numerically).
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let spec = SyntheticSpec::continuous_small();
+    let engine_n = EngineHandle::native();
+    let engine_x = EngineHandle::xla(dir).unwrap();
+    let run = |engine: &EngineHandle| {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let mut c = cfg();
+        c.train.sweeps = 10;
+        c.train.burnin = 9; // single eta solve at the end -> identical z path
+        c.train.eta_every = 1;
+        gibbs_train::train(&ds.train, &c, engine, &mut rng).unwrap().model
+    };
+    let mn: SldaModel = run(&engine_n);
+    let mx: SldaModel = run(&engine_x);
+    for (a, b) in mn.eta.iter().zip(&mx.eta) {
+        assert!((a - b).abs() < 1e-3, "native {:?} vs xla {:?}", mn.eta, mx.eta);
+    }
+    assert_eq!(mn.phi, mx.phi, "phi depends only on counts and must be identical");
+}

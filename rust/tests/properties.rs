@@ -1,0 +1,263 @@
+//! Property-based tests over the system's core invariants (testkit-driven;
+//! every failure message carries a replay seed).
+
+use cfslda::data::corpus::{Corpus, Document};
+use cfslda::data::partition::{random_shards, train_test_split};
+use cfslda::model::counts::CountMatrices;
+use cfslda::regress::ridge;
+use cfslda::runtime::native::NativeEngine;
+use cfslda::runtime::pad;
+use cfslda::runtime::EngineImpl;
+use cfslda::testkit::{f64_in, forall, usize_in, vec_f32, vec_f64};
+use cfslda::util::rng::Pcg64;
+
+#[test]
+fn partition_covers_each_doc_exactly_once() {
+    forall(
+        "partition-exactly-once",
+        40,
+        |rng| (usize_in(rng, 1, 500), usize_in(rng, 1, 16), rng.next_u64()),
+        |&(n, m, seed)| {
+            let shards = random_shards(n, m, &mut Pcg64::seed_from_u64(seed));
+            assert_eq!(shards.len(), m);
+            let mut seen: Vec<usize> = shards.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n).collect::<Vec<_>>());
+            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced shards {sizes:?}");
+        },
+    );
+}
+
+#[test]
+fn split_preserves_multiset_of_docs() {
+    forall(
+        "split-multiset",
+        25,
+        |rng| (usize_in(rng, 1, 200), rng.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let corpus = Corpus::new(
+                (0..n)
+                    .map(|i| Document { tokens: vec![(i % 7) as u32], response: i as f64 })
+                    .collect(),
+                7,
+            );
+            let k = rng.gen_range(n + 1);
+            let ds = train_test_split(&corpus, k, &mut rng);
+            let mut all: Vec<i64> = ds
+                .train
+                .docs
+                .iter()
+                .chain(&ds.test.docs)
+                .map(|d| d.response as i64)
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n as i64).collect::<Vec<_>>());
+        },
+    );
+}
+
+#[test]
+fn gibbs_style_count_updates_preserve_invariants() {
+    forall(
+        "count-invariants",
+        25,
+        |rng| {
+            let d = usize_in(rng, 1, 8);
+            let t = usize_in(rng, 2, 16);
+            let w = usize_in(rng, 2, 30);
+            (d, t, w, rng.next_u64())
+        },
+        |&(d, t, w, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let mut counts = CountMatrices::new(d, t, w);
+            let mut tokens = Vec::new();
+            for di in 0..d {
+                for _ in 0..usize_in(&mut rng, 1, 40) {
+                    let wi = rng.gen_range(w) as u32;
+                    let ti = rng.gen_range(t);
+                    counts.inc(di, wi, ti);
+                    tokens.push((di, wi, ti));
+                }
+            }
+            let total = tokens.len() as u64;
+            for _ in 0..200 {
+                let i = rng.gen_range(tokens.len());
+                let (di, wi, old) = tokens[i];
+                counts.dec(di, wi, old);
+                let new = rng.gen_range(t);
+                counts.inc(di, wi, new);
+                tokens[i] = (di, wi, new);
+            }
+            counts.check_invariants().unwrap();
+            assert_eq!(counts.total_tokens(), total);
+        },
+    );
+}
+
+#[test]
+fn combiner_weights_normalize_and_uniform_equals_mean() {
+    forall(
+        "combine-normalization",
+        30,
+        |rng| {
+            let m = usize_in(rng, 1, 16);
+            let b = usize_in(rng, 1, 64);
+            let preds: Vec<Vec<f64>> = (0..m).map(|_| vec_f64(rng, b, -3.0, 3.0)).collect();
+            let weights = vec_f64(rng, m, 0.01, 5.0);
+            (preds, weights)
+        },
+        |(preds, weights)| {
+            let e = NativeEngine::new();
+            let out = e.combine(preds, weights).unwrap();
+            // scaling all weights must not change the output
+            let scaled: Vec<f64> = weights.iter().map(|w| w * 42.0).collect();
+            let out2 = e.combine(preds, &scaled).unwrap();
+            for (a, b) in out.iter().zip(&out2) {
+                assert!((a - b).abs() < 1e-9);
+            }
+            // uniform weights == arithmetic mean
+            let uni = vec![1.0; preds.len()];
+            let mean = e.combine(preds, &uni).unwrap();
+            for (j, v) in mean.iter().enumerate() {
+                let want: f64 =
+                    preds.iter().map(|p| p[j]).sum::<f64>() / preds.len() as f64;
+                assert!((v - want).abs() < 1e-9);
+            }
+        },
+    );
+}
+
+#[test]
+fn ridge_solution_satisfies_normal_equations() {
+    forall(
+        "ridge-normal-equations",
+        25,
+        |rng| {
+            let d = usize_in(rng, 3, 60);
+            let t = usize_in(rng, 1, 12);
+            let zbar = vec_f32(rng, d * t, 0.0, 1.0);
+            let y = vec_f64(rng, d, -2.0, 2.0);
+            let lambda = f64_in(rng, 0.01, 5.0);
+            let mu = f64_in(rng, -1.0, 1.0);
+            (zbar, y, lambda, mu, t)
+        },
+        |(zbar, y, lambda, mu, t)| {
+            let t = *t;
+            let w = vec![1.0f64; y.len()];
+            let (eta, _) = ridge::ridge_fit(zbar, y, &w, t, *lambda, *mu).unwrap();
+            // residual of (G + lambda I) eta - (b + lambda mu) must be ~0
+            let (g, b, _) = ridge::gram_moments(zbar, y, &w, t);
+            for i in 0..t {
+                let mut lhs = lambda * eta[i];
+                for j in 0..t {
+                    lhs += g[i * t + j] * eta[j];
+                }
+                let rhs = b[i] + lambda * mu;
+                assert!(
+                    (lhs - rhs).abs() < 1e-6 * (1.0 + rhs.abs()),
+                    "normal equation row {i}: {lhs} vs {rhs}"
+                );
+            }
+        },
+    );
+}
+
+#[test]
+fn padding_roundtrips_and_is_inert() {
+    forall(
+        "padding-roundtrip",
+        30,
+        |rng| {
+            let rows = usize_in(rng, 1, 20);
+            let cols = usize_in(rng, 1, 10);
+            let rp = rows + usize_in(rng, 0, 8);
+            let cp = cols + usize_in(rng, 0, 8);
+            (vec_f32(rng, rows * cols, -1.0, 1.0), rows, cols, rp, cp)
+        },
+        |(data, rows, cols, rp, cp)| {
+            let padded = pad::pad_matrix(data, *rows, *cols, *rp, *cp);
+            assert_eq!(padded.len(), rp * cp);
+            // original block recovers exactly
+            for r in 0..*rows {
+                for c in 0..*cols {
+                    assert_eq!(padded[r * cp + c], data[r * cols + c]);
+                }
+            }
+            // padding area is zero
+            for r in 0..*rp {
+                for c in 0..*cp {
+                    if r >= *rows || c >= *cols {
+                        assert_eq!(padded[r * cp + c], 0.0);
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn native_predict_is_linear_in_eta() {
+    forall(
+        "predict-linearity",
+        25,
+        |rng| {
+            let b = usize_in(rng, 1, 40);
+            let t = usize_in(rng, 1, 10);
+            (vec_f32(rng, b * t, 0.0, 1.0), vec_f64(rng, t, -2.0, 2.0), vec_f64(rng, t, -2.0, 2.0), t)
+        },
+        |(zbar, e1, e2, t)| {
+            let eng = NativeEngine::new();
+            let p1 = eng.predict(zbar, e1, None, *t).unwrap().yhat;
+            let p2 = eng.predict(zbar, e2, None, *t).unwrap().yhat;
+            let sum: Vec<f64> = e1.iter().zip(e2).map(|(a, b)| a + b).collect();
+            let ps = eng.predict(zbar, &sum, None, *t).unwrap().yhat;
+            for i in 0..p1.len() {
+                assert!((ps[i] - (p1[i] + p2[i])).abs() < 1e-9);
+            }
+        },
+    );
+}
+
+#[test]
+fn json_roundtrip_of_random_values() {
+    use cfslda::config::json::{parse, to_string, to_string_pretty, Value};
+    forall(
+        "json-roundtrip",
+        40,
+        |rng| random_json(rng, 3),
+        |v| {
+            let compact = to_string(v);
+            let pretty = to_string_pretty(v);
+            assert_eq!(&parse(&compact).unwrap(), v);
+            assert_eq!(&parse(&pretty).unwrap(), v);
+        },
+    );
+
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Value {
+        let pick = if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) };
+        match pick {
+            0 => Value::Null,
+            1 => Value::Bool(rng.next_f64() < 0.5),
+            2 => Value::Number((rng.next_f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => {
+                let n = rng.gen_range(8);
+                Value::String((0..n).map(|_| "ab\"\\\nπ😀 ".chars().nth(rng.gen_range(8)).unwrap()).collect())
+            }
+            4 => {
+                let n = rng.gen_range(4);
+                Value::Array((0..n).map(|_| random_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.gen_range(4);
+                Value::Object(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+}
