@@ -1,58 +1,129 @@
-//! Bench: the L3 hot path — collapsed-Gibbs token updates per second.
+//! Bench: the L3 hot path — collapsed-Gibbs token updates per second,
+//! reported **per kernel** (dense vs sparse; DESIGN.md §Perf).
 //!
-//! This is the §Perf tracking bench (EXPERIMENTS.md): the paper's wall-time
-//! claims all reduce to this number times token count. Reported for the
-//! response-inactive regime (plain-LDA conditional, burn-in sweeps) and the
-//! response-active regime (Gaussian margin with T exponentials per token).
+//! The paper's wall-time claims all reduce to this number times token
+//! count. Three regimes:
+//!
+//! * `train-lda`  — eta-inactive training sweeps (plain-LDA conditional):
+//!   kernel-specific; the sparse kernel's bucket decomposition applies.
+//! * `predict`    — frozen-phi inference (paper eq. 4): fully kernel-
+//!   specific; the sparse path is O(nnz(N_d)) per token.
+//! * `train-slda` — eta-active sweeps (Gaussian margin): both kernels
+//!   share the dense path, benched once as a reference.
+//!
+//! Emits `BENCH_gibbs_hotpath.json` at the repo root (tokens/sec per kernel
+//! per T ∈ {16, 64, 256}) so the perf trajectory is tracked across PRs.
 
-use cfslda::bench_harness::{bench_throughput, quick_mode, render_table};
-use cfslda::config::schema::{EngineKind, ExperimentConfig};
+use cfslda::bench_harness::{bench_throughput, quick_mode, render_table, BenchResult};
+use cfslda::config::json::{self, Value};
+use cfslda::config::schema::{EngineKind, ExperimentConfig, KernelKind};
 use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
 use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_predict::infer_zbar_with_kernel;
 use cfslda::sampler::gibbs_train::train;
 use cfslda::util::rng::Pcg64;
+use std::path::Path;
+
+struct Record {
+    t: usize,
+    kernel: &'static str,
+    path: &'static str,
+    tokens_per_sec: f64,
+    median_secs: f64,
+}
+
+fn push(records: &mut Vec<Record>, t: usize, kernel: &'static str, path: &'static str, r: &BenchResult) {
+    records.push(Record {
+        t,
+        kernel,
+        path,
+        tokens_per_sec: r.throughput().unwrap_or(0.0),
+        median_secs: r.median(),
+    });
+}
 
 fn main() -> anyhow::Result<()> {
     cfslda::util::logging::init();
     let quick = quick_mode();
     let mut spec = SyntheticSpec::mdna();
-    spec.docs = if quick { 400 } else { 1500 };
+    spec.docs = if quick { 200 } else { 800 };
     spec.vocab = if quick { 500 } else { 2000 };
     let mut rng = Pcg64::seed_from_u64(20170710);
     let corpus = generate_corpus(&spec, &mut rng);
     let tokens = corpus.num_tokens() as f64;
     let engine = EngineHandle::native();
-    let iters = if quick { 2 } else { 4 };
+    let iters = if quick { 2 } else { 3 };
 
     let mut results = Vec::new();
-    for t in [8usize, 16, 32, 64] {
-        // response-inactive: burn-in only (eta stays zero => LDA conditional)
-        let mut cfg = ExperimentConfig::quick();
-        cfg.engine = EngineKind::Native;
-        cfg.model.topics = t;
-        cfg.train.sweeps = 3;
-        cfg.train.burnin = 2;
-        cfg.train.eta_every = 100; // never fires before the final solve
-        let mut seed = 0u64;
-        results.push(bench_throughput(
-            &format!("gibbs/lda-conditional T={t}"),
-            0,
-            iters,
-            tokens * cfg.train.sweeps as f64,
-            || {
-                seed += 1;
-                let mut r = Pcg64::seed_from_u64(seed);
-                train(&corpus, &cfg, &engine, &mut r).unwrap();
-            },
-        ));
+    let mut records: Vec<Record> = Vec::new();
 
-        // response-active: eta solved after sweep 1, margin active after
-        let mut cfg2 = cfg.clone();
+    for &t in &[16usize, 64, 256] {
+        // Base config: burn-in-only training => eta stays zero => the
+        // plain-LDA conditional runs for every sweep.
+        let mut base = ExperimentConfig::quick();
+        base.engine = EngineKind::Native;
+        base.model.topics = t;
+        base.train.sweeps = 3;
+        base.train.burnin = 2;
+        base.train.eta_every = 100; // never fires before the final solve
+        base.train.predict_sweeps = 8;
+        base.train.predict_burnin = 2;
+
+        // One frozen model per T for the prediction benches (cheap 2-sweep
+        // train; phi depends only on counts).
+        let model = {
+            let mut cfg = base.clone();
+            cfg.train.sweeps = 2;
+            cfg.train.burnin = 1;
+            let mut r = Pcg64::seed_from_u64(7);
+            train(&corpus, &cfg, &engine, &mut r)?.model
+        };
+
+        for &kernel in &[KernelKind::Dense, KernelKind::Sparse] {
+            let kname = kernel.resolve(t).name();
+
+            let mut cfg = base.clone();
+            cfg.sampler.kernel = kernel;
+            let mut seed = t as u64 * 1000;
+            let r = bench_throughput(
+                &format!("gibbs/train-lda {kname} T={t}"),
+                0,
+                iters,
+                tokens * cfg.train.sweeps as f64,
+                || {
+                    seed += 1;
+                    let mut r = Pcg64::seed_from_u64(seed);
+                    train(&corpus, &cfg, &engine, &mut r).unwrap();
+                },
+            );
+            push(&mut records, t, kname, "train_lda", &r);
+            results.push(r);
+
+            let mut seed = t as u64 * 2000;
+            let r = bench_throughput(
+                &format!("gibbs/predict {kname} T={t}"),
+                0,
+                iters,
+                tokens * base.train.predict_sweeps as f64,
+                || {
+                    seed += 1;
+                    let mut r = Pcg64::seed_from_u64(seed);
+                    infer_zbar_with_kernel(&model, &corpus, &base.train, kernel, &mut r);
+                },
+            );
+            push(&mut records, t, kname, "predict", &r);
+            results.push(r);
+        }
+
+        // Reference: eta-active sweeps (identical for both kernels — the
+        // Gaussian margin is dense in every topic).
+        let mut cfg2 = base.clone();
         cfg2.train.sweeps = 4;
         cfg2.train.burnin = 1;
         cfg2.train.eta_every = 1;
-        results.push(bench_throughput(
-            &format!("gibbs/slda-conditional T={t}"),
+        let mut seed = t as u64 * 3000;
+        let r = bench_throughput(
+            &format!("gibbs/train-slda shared T={t}"),
             0,
             iters,
             tokens * cfg2.train.sweeps as f64,
@@ -61,8 +132,11 @@ fn main() -> anyhow::Result<()> {
                 let mut r = Pcg64::seed_from_u64(seed);
                 train(&corpus, &cfg2, &engine, &mut r).unwrap();
             },
-        ));
+        );
+        push(&mut records, t, "shared", "train_slda", &r);
+        results.push(r);
     }
+
     println!(
         "{}",
         render_table(
@@ -70,5 +144,58 @@ fn main() -> anyhow::Result<()> {
             &results
         )
     );
+
+    // Sparse-over-dense speedups per (T, path).
+    let mut speedups: Vec<Value> = Vec::new();
+    for &t in &[16usize, 64, 256] {
+        for path in ["train_lda", "predict"] {
+            let find = |kernel: &str| {
+                records
+                    .iter()
+                    .find(|r| r.t == t && r.path == path && r.kernel == kernel)
+                    .map(|r| r.tokens_per_sec)
+            };
+            if let (Some(d), Some(s)) = (find("dense"), find("sparse")) {
+                if d > 0.0 {
+                    println!("speedup {path} T={t}: sparse/dense = {:.2}x", s / d);
+                    speedups.push(Value::object(vec![
+                        ("t", Value::Number(t as f64)),
+                        ("path", Value::String(path.to_string())),
+                        ("sparse_over_dense", Value::Number(s / d)),
+                    ]));
+                }
+            }
+        }
+    }
+
+    let entries: Vec<Value> = records
+        .iter()
+        .map(|r| {
+            Value::object(vec![
+                ("t", Value::Number(r.t as f64)),
+                ("kernel", Value::String(r.kernel.to_string())),
+                ("path", Value::String(r.path.to_string())),
+                ("tokens_per_sec", Value::Number(r.tokens_per_sec)),
+                ("median_secs", Value::Number(r.median_secs)),
+            ])
+        })
+        .collect();
+    let doc = Value::object(vec![
+        ("bench", Value::String("gibbs_hotpath".to_string())),
+        ("quick", Value::Bool(quick)),
+        ("docs", Value::Number(spec.docs as f64)),
+        ("tokens", Value::Number(tokens)),
+        ("results", Value::Array(entries)),
+        ("speedups", Value::Array(speedups)),
+    ]);
+    // Repo root sits one level above the cargo package (rust/); fall back
+    // to the working directory when run from the root itself.
+    let out = if Path::new("../ROADMAP.md").exists() {
+        "../BENCH_gibbs_hotpath.json"
+    } else {
+        "BENCH_gibbs_hotpath.json"
+    };
+    std::fs::write(out, json::to_string_pretty(&doc))?;
+    println!("wrote {out}");
     Ok(())
 }

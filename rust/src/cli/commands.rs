@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::config::json::{self, Value};
-use crate::config::schema::{EngineKind, ExperimentConfig, ResponseKind};
+use crate::config::schema::{EngineKind, ExperimentConfig, KernelKind, ResponseKind};
 use crate::data::loader;
 use crate::data::partition::train_test_split;
 use crate::data::stats::{corpus_stats, label_report};
@@ -29,15 +29,18 @@ COMMANDS:
   run         Run one algorithm on a corpus
               --data FILE.bow --algorithm non-parallel|naive|simple|weighted|median
               [--train N] [--config CFG.json] [--engine auto|xla|native]
-              [--seed S] [--json OUT.json]
+              [--kernel dense|sparse|auto] [--seed S] [--json OUT.json]
   train       Train a single sLDA model and save it
               --data FILE.bow --out MODEL.bin [--config CFG.json] [--seed S]
+              [--kernel dense|sparse|auto]
   predict     Predict with a saved model
-              --model MODEL.bin --data FILE.bow [--json OUT.json]
+              --model MODEL.bin --data FILE.bow [--kernel dense|sparse|auto]
+              [--json OUT.json]
   top-words   Show each topic's highest-probability token ids
               --model MODEL.bin [--k N]
   experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
-              --fig 6|7 [--scale F] [--runs N] [--engine E] [--check]
+              --fig 6|7 [--scale F] [--runs N] [--engine E]
+              [--kernel dense|sparse|auto] [--check]
   figs        Reproduce illustration figures: --fig 1|2|3|5
   help        This text
 
@@ -64,6 +67,14 @@ fn spec_from_args(a: &Args) -> anyhow::Result<SyntheticSpec> {
         spec.topics = t.parse()?;
     }
     Ok(spec)
+}
+
+/// Apply the shared `--kernel dense|sparse|auto` flag to a config.
+fn apply_kernel_flag(a: &Args, cfg: &mut ExperimentConfig) -> anyhow::Result<()> {
+    if let Some(k) = a.get("kernel") {
+        cfg.sampler.kernel = KernelKind::parse(k)?;
+    }
+    Ok(())
 }
 
 fn engine_from_args(a: &Args) -> anyhow::Result<EngineHandle> {
@@ -111,6 +122,7 @@ pub fn cmd_run(a: &Args) -> anyhow::Result<i32> {
     if let Some(e) = a.get("engine") {
         cfg.engine = EngineKind::parse(e)?;
     }
+    apply_kernel_flag(a, &mut cfg)?;
     cfg.seed = a.get_u64("seed", cfg.seed)?;
     let n_train = a.get_usize("train", corpus.num_docs() * 3 / 4)?;
     let mut rng = Pcg64::seed_from_u64(cfg.seed ^ 0x5911_7001);
@@ -159,6 +171,7 @@ pub fn cmd_experiment(a: &Args) -> anyhow::Result<i32> {
     if let Some(s) = a.get("sweeps") {
         c.cfg.train.sweeps = s.parse()?;
     }
+    apply_kernel_flag(a, &mut c.cfg)?;
     let engine = engine_from_args(a)?;
     let binary = fig == 7;
     let (series, _) = runner::run_comparison(&c, &engine)?;
@@ -233,6 +246,7 @@ pub fn cmd_train(a: &Args) -> anyhow::Result<i32> {
     if let Some(e) = a.get("engine") {
         cfg.engine = EngineKind::parse(e)?;
     }
+    apply_kernel_flag(a, &mut cfg)?;
     crate::config::validate::validate(&cfg)?;
     let engine = engine_from_args(a)?;
     let mut rng = Pcg64::seed_from_u64(cfg.seed);
@@ -262,12 +276,13 @@ pub fn cmd_predict(a: &Args) -> anyhow::Result<i32> {
         corpus.vocab_size,
         model.w
     );
-    let cfg = ExperimentConfig::default();
+    let mut cfg = ExperimentConfig::default();
+    apply_kernel_flag(a, &mut cfg)?;
     let engine = engine_from_args(a)?;
     let mut rng = Pcg64::seed_from_u64(a.get_u64("seed", 20170710)?);
     let ys = corpus.responses();
-    let (pred, _) = gibbs_predict::predict_corpus(
-        &model, &corpus, &cfg.train, &engine, Some(&ys), &mut rng,
+    let (pred, _) = gibbs_predict::predict_corpus_with_kernel(
+        &model, &corpus, &cfg.train, cfg.sampler.kernel, &engine, Some(&ys), &mut rng,
     )?;
     println!("predicted {} documents: mse={:.4} acc={:.4}", pred.yhat.len(), pred.mse, pred.acc);
     if let Some(path) = a.get("json") {

@@ -72,13 +72,20 @@ impl Value {
 }
 
 /// Parse error with position info.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at {line}:{col}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub col: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at {}:{}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

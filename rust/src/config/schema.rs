@@ -39,6 +39,69 @@ impl EngineKind {
     }
 }
 
+/// Which Gibbs token-update kernel the sampler uses (DESIGN.md §Perf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Classic O(T)-per-token conditional.
+    Dense,
+    /// SparseLDA-style bucket decomposition iterating only non-zero counts.
+    Sparse,
+    /// Sparse when T >= [`SPARSE_AUTO_TOPICS`], else dense.
+    Auto,
+}
+
+/// `auto` kernel threshold: below this topic count the dense kernel's
+/// branch-free loops win; at and above it sparsity pays (DESIGN.md §Perf).
+pub const SPARSE_AUTO_TOPICS: usize = 64;
+
+impl KernelKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "dense" => KernelKind::Dense,
+            "sparse" => KernelKind::Sparse,
+            "auto" => KernelKind::Auto,
+            other => bail!("unknown sampler kernel '{other}' (expected dense|sparse|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Dense => "dense",
+            KernelKind::Sparse => "sparse",
+            KernelKind::Auto => "auto",
+        }
+    }
+
+    /// Resolve `Auto` by topic count; `Dense`/`Sparse` pass through. The
+    /// result is never `Auto`.
+    pub fn resolve(self, topics: usize) -> KernelKind {
+        match self {
+            KernelKind::Auto => {
+                if topics >= SPARSE_AUTO_TOPICS {
+                    KernelKind::Sparse
+                } else {
+                    KernelKind::Dense
+                }
+            }
+            k => k,
+        }
+    }
+}
+
+/// Sampler implementation knobs (orthogonal to the model/schedule).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplerConfig {
+    /// Token-update kernel; both kernels are draw-for-draw identical under
+    /// a fixed seed, so this only changes throughput.
+    pub kernel: KernelKind,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig { kernel: KernelKind::Auto }
+    }
+}
+
 /// Response type of the supervised signal.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ResponseKind {
@@ -149,6 +212,7 @@ impl Default for ParallelConfig {
 pub struct ExperimentConfig {
     pub model: ModelConfig,
     pub train: TrainConfig,
+    pub sampler: SamplerConfig,
     pub parallel: ParallelConfig,
     pub engine: EngineKind,
     pub response: ResponseKind,
@@ -160,6 +224,7 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             model: ModelConfig::default(),
             train: TrainConfig::default(),
+            sampler: SamplerConfig::default(),
             parallel: ParallelConfig::default(),
             engine: EngineKind::Auto,
             response: ResponseKind::Continuous,
@@ -213,6 +278,9 @@ impl ExperimentConfig {
                 ("predict_sweeps", Value::Number(self.train.predict_sweeps as f64)),
                 ("predict_burnin", Value::Number(self.train.predict_burnin as f64)),
             ])),
+            ("sampler", Value::object(vec![
+                ("kernel", Value::String(self.sampler.kernel.name().to_string())),
+            ])),
             ("parallel", Value::object(vec![
                 ("shards", Value::Number(self.parallel.shards as f64)),
                 ("threads", Value::Number(self.parallel.threads as f64)),
@@ -240,6 +308,12 @@ impl ExperimentConfig {
             read_usize(t, "eta_every", &mut c.train.eta_every)?;
             read_usize(t, "predict_sweeps", &mut c.train.predict_sweeps)?;
             read_usize(t, "predict_burnin", &mut c.train.predict_burnin)?;
+        }
+        if let Some(s) = v.get("sampler") {
+            if let Some(k) = s.get("kernel") {
+                c.sampler.kernel =
+                    KernelKind::parse(k.as_str().context("sampler.kernel must be a string")?)?;
+            }
         }
         if let Some(p) = v.get("parallel") {
             read_usize(p, "shards", &mut c.parallel.shards)?;
@@ -320,6 +394,26 @@ mod tests {
         assert!(ExperimentConfig::from_json(r#"{"model": {"topics": -2}}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"engine": "gpu"}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"response": 7}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"sampler": {"kernel": "turbo"}}"#).is_err());
+    }
+
+    #[test]
+    fn kernel_knob_roundtrips_and_resolves() {
+        let mut c = ExperimentConfig::quick();
+        c.sampler.kernel = KernelKind::Sparse;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sampler.kernel, KernelKind::Sparse);
+        let c3 = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(c3.sampler.kernel, KernelKind::Auto);
+
+        assert_eq!(KernelKind::Auto.resolve(SPARSE_AUTO_TOPICS - 1), KernelKind::Dense);
+        assert_eq!(KernelKind::Auto.resolve(SPARSE_AUTO_TOPICS), KernelKind::Sparse);
+        assert_eq!(KernelKind::Dense.resolve(1024), KernelKind::Dense);
+        assert_eq!(KernelKind::Sparse.resolve(2), KernelKind::Sparse);
+        for k in [KernelKind::Dense, KernelKind::Sparse, KernelKind::Auto] {
+            assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(KernelKind::parse("bogus").is_err());
     }
 
     #[test]

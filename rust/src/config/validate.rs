@@ -1,7 +1,12 @@
 //! Config validation: fail fast with actionable messages before a run.
 
-use super::schema::ExperimentConfig;
+use super::schema::{EngineKind, ExperimentConfig};
 use anyhow::bail;
+
+/// Hard topic ceiling: token assignments are stored as `u16` and the
+/// sparse-kernel index keeps `u16` topic ids; 4096 is far above any
+/// configuration that samples in reasonable time.
+const MAX_TOPICS_NATIVE: usize = 4096;
 
 /// Validate an experiment config against the model/sampler invariants and
 /// the AOT artifact shape buckets.
@@ -10,11 +15,21 @@ pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
     if m.topics < 2 {
         bail!("model.topics must be >= 2 (got {})", m.topics);
     }
-    if m.topics > 64 {
+    // The AOT artifacts are compiled at fixed topic buckets (largest: 64).
+    // The native engine has no such limit — large-T runs are exactly where
+    // the sparse kernel shines — so the bucket cap only applies when the
+    // XLA path can be taken.
+    if m.topics > 64 && c.engine != EngineKind::Native {
         bail!(
             "model.topics = {} exceeds the largest AOT topic bucket (64); \
              re-run `make artifacts` with --topics including a larger bucket \
              or use engine=native",
+            m.topics
+        );
+    }
+    if m.topics > MAX_TOPICS_NATIVE {
+        bail!(
+            "model.topics = {} exceeds the supported maximum {MAX_TOPICS_NATIVE}",
             m.topics
         );
     }
@@ -76,6 +91,16 @@ mod tests {
         c.model.topics = 100;
         let err = validate(&c).unwrap_err().to_string();
         assert!(err.contains("bucket"), "{err}");
+    }
+
+    #[test]
+    fn native_engine_allows_large_topic_counts() {
+        let mut c = ExperimentConfig::quick();
+        c.engine = crate::config::schema::EngineKind::Native;
+        c.model.topics = 256; // sparse-kernel regime
+        validate(&c).unwrap();
+        c.model.topics = 5000; // beyond the u16-backed ceiling
+        assert!(validate(&c).is_err());
     }
 
     #[test]

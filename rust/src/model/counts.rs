@@ -6,6 +6,40 @@
 //! a fixed document d, so both `ndt` (doc-major, `[d * T + t]`) and `ntw`
 //! (**word-major**, `[w * T + t]`) keep the T-strided slices contiguous —
 //! one cache line covers 16 u32 topic counts.
+//!
+//! The optional [`SparseIndex`] mirrors the non-zero structure of `ndt` and
+//! `ntw` as sorted topic-id lists, maintained incrementally by `inc`/`dec`.
+//! The sparse Gibbs kernel (DESIGN.md §Perf) iterates these lists instead
+//! of full T-length rows; the dense kernel leaves the index disabled and
+//! pays nothing beyond one predictable branch per update.
+
+/// Sorted insert of a topic id absent from the list (0 -> 1 transition).
+/// Shared with the sparse kernel's per-document prediction scratch list.
+#[inline]
+pub(crate) fn insert_sorted(v: &mut Vec<u16>, x: u16) {
+    if let Err(i) = v.binary_search(&x) {
+        v.insert(i, x);
+    }
+}
+
+/// Sorted removal of a topic id present in the list (1 -> 0 transition).
+#[inline]
+pub(crate) fn remove_sorted(v: &mut Vec<u16>, x: u16) {
+    if let Ok(i) = v.binary_search(&x) {
+        v.remove(i);
+    }
+}
+
+/// Non-zero structure of the count matrices: per-document and per-word
+/// topic-id lists, each sorted ascending (the sparse kernel relies on the
+/// ordering to reproduce the dense kernel's accumulation order bit-exactly).
+#[derive(Clone, Debug, Default)]
+pub struct SparseIndex {
+    /// Per-document sorted list of topics with N_dt > 0.
+    pub doc_nz: Vec<Vec<u16>>,
+    /// Per-word sorted list of topics with N_tw > 0.
+    pub word_nz: Vec<Vec<u16>>,
+}
 
 /// Count matrices for one Gibbs chain over one (sub-)corpus.
 #[derive(Clone, Debug)]
@@ -24,6 +58,9 @@ pub struct CountMatrices {
     pub ntw: Vec<u32>,
     /// N_t: total tokens per topic.
     pub nt: Vec<u32>,
+    /// Optional non-zero index for the sparse kernel (see
+    /// [`CountMatrices::enable_sparse_index`]).
+    pub nz: Option<SparseIndex>,
 }
 
 impl CountMatrices {
@@ -36,26 +73,72 @@ impl CountMatrices {
             nd: vec![0; d],
             ntw: vec![0; w * t],
             nt: vec![0; t],
+            nz: None,
         }
+    }
+
+    /// Build (or rebuild) the sparse non-zero index from the current
+    /// counts. From here on `inc`/`dec` keep it consistent incrementally.
+    pub fn enable_sparse_index(&mut self) {
+        assert!(self.t <= u16::MAX as usize + 1, "topic ids must fit u16");
+        let mut idx = SparseIndex {
+            doc_nz: Vec::with_capacity(self.d),
+            word_nz: Vec::with_capacity(self.w),
+        };
+        for d in 0..self.d {
+            let row = &self.ndt[d * self.t..(d + 1) * self.t];
+            idx.doc_nz
+                .push((0..self.t).filter(|&ti| row[ti] > 0).map(|ti| ti as u16).collect());
+        }
+        for w in 0..self.w {
+            let row = &self.ntw[w * self.t..(w + 1) * self.t];
+            idx.word_nz
+                .push((0..self.t).filter(|&ti| row[ti] > 0).map(|ti| ti as u16).collect());
+        }
+        self.nz = Some(idx);
     }
 
     /// Register token `w` of document `d` as assigned to `topic`.
     #[inline]
     pub fn inc(&mut self, d: usize, w: u32, topic: usize) {
-        self.ndt[d * self.t + topic] += 1;
+        let c = &mut self.ndt[d * self.t + topic];
+        *c += 1;
+        let doc_first = *c == 1;
         self.nd[d] += 1;
-        self.ntw[w as usize * self.t + topic] += 1;
+        let cw = &mut self.ntw[w as usize * self.t + topic];
+        *cw += 1;
+        let word_first = *cw == 1;
         self.nt[topic] += 1;
+        if let Some(nz) = &mut self.nz {
+            if doc_first {
+                insert_sorted(&mut nz.doc_nz[d], topic as u16);
+            }
+            if word_first {
+                insert_sorted(&mut nz.word_nz[w as usize], topic as u16);
+            }
+        }
     }
 
     /// Remove the assignment of token `w` of document `d` to `topic`.
     #[inline]
     pub fn dec(&mut self, d: usize, w: u32, topic: usize) {
         debug_assert!(self.ndt[d * self.t + topic] > 0);
-        self.ndt[d * self.t + topic] -= 1;
+        let c = &mut self.ndt[d * self.t + topic];
+        *c -= 1;
+        let doc_empty = *c == 0;
         self.nd[d] -= 1;
-        self.ntw[w as usize * self.t + topic] -= 1;
+        let cw = &mut self.ntw[w as usize * self.t + topic];
+        *cw -= 1;
+        let word_empty = *cw == 0;
         self.nt[topic] -= 1;
+        if let Some(nz) = &mut self.nz {
+            if doc_empty {
+                remove_sorted(&mut nz.doc_nz[d], topic as u16);
+            }
+            if word_empty {
+                remove_sorted(&mut nz.word_nz[w as usize], topic as u16);
+            }
+        }
     }
 
     /// Per-document topic count row.
@@ -78,11 +161,17 @@ impl CountMatrices {
     }
 
     /// Dense row-major [D, T] zbar matrix (input to the eta solve / predict
-    /// artifacts).
+    /// artifacts). Values are written straight into the preallocated output
+    /// buffer — no per-document temporary.
     pub fn zbar_matrix(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.d * self.t);
+        let mut out = vec![0.0f32; self.d * self.t];
         for d in 0..self.d {
-            out.extend_from_slice(&self.zbar_row(d));
+            let n = self.nd[d].max(1) as f32;
+            let row = &self.ndt[d * self.t..(d + 1) * self.t];
+            let dst = &mut out[d * self.t..(d + 1) * self.t];
+            for (o, &c) in dst.iter_mut().zip(row) {
+                *o = c as f32 / n;
+            }
         }
         out
     }
@@ -101,6 +190,9 @@ impl CountMatrices {
         for (a, b) in self.nt.iter_mut().zip(&other.nt) {
             *a += b;
         }
+        // Bulk pooling bypasses inc/dec; drop the index rather than let it
+        // go stale (re-enable after pooling if sparse sampling is needed).
+        self.nz = None;
     }
 
     /// Verify internal consistency: sum_t N_dt == N_d, sum_w N_tw == N_t,
@@ -127,6 +219,34 @@ impl CountMatrices {
         let total_t: u64 = self.nt.iter().map(|&x| x as u64).sum();
         if total_d != total_t {
             anyhow::bail!("token totals disagree: docs {total_d} vs topics {total_t}");
+        }
+        if let Some(nz) = &self.nz {
+            anyhow::ensure!(nz.doc_nz.len() == self.d, "doc_nz row count mismatch");
+            anyhow::ensure!(nz.word_nz.len() == self.w, "word_nz row count mismatch");
+            for d in 0..self.d {
+                let want: Vec<u16> = (0..self.t)
+                    .filter(|&ti| self.ndt[d * self.t + ti] > 0)
+                    .map(|ti| ti as u16)
+                    .collect();
+                if nz.doc_nz[d] != want {
+                    anyhow::bail!(
+                        "doc {d}: sparse list {:?} != non-zeros of ndt {want:?}",
+                        nz.doc_nz[d]
+                    );
+                }
+            }
+            for w in 0..self.w {
+                let want: Vec<u16> = (0..self.t)
+                    .filter(|&ti| self.ntw[w * self.t + ti] > 0)
+                    .map(|ti| ti as u16)
+                    .collect();
+                if nz.word_nz[w] != want {
+                    anyhow::bail!(
+                        "word {w}: sparse list {:?} != non-zeros of ntw {want:?}",
+                        nz.word_nz[w]
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -219,5 +339,86 @@ mod tests {
         let mut a = CountMatrices::new(1, 2, 3);
         let b = CountMatrices::new(1, 3, 3);
         a.absorb_word_topic(&b);
+    }
+
+    #[test]
+    fn sparse_index_tracks_transitions() {
+        let mut c = CountMatrices::new(2, 4, 5);
+        c.inc(0, 1, 3); // pre-index counts
+        c.enable_sparse_index();
+        let nz = c.nz.as_ref().unwrap();
+        assert_eq!(nz.doc_nz[0], vec![3]);
+        assert_eq!(nz.word_nz[1], vec![3]);
+
+        c.inc(0, 1, 3); // 1 -> 2: no membership change
+        c.inc(0, 2, 0); // new topic for doc 0, new word 2
+        c.inc(1, 1, 3); // doc 1 gains topic 3; word 1 already has it
+        let nz = c.nz.as_ref().unwrap();
+        assert_eq!(nz.doc_nz[0], vec![0, 3]);
+        assert_eq!(nz.doc_nz[1], vec![3]);
+        assert_eq!(nz.word_nz[1], vec![3]);
+        assert_eq!(nz.word_nz[2], vec![0]);
+        c.check_invariants().unwrap();
+
+        c.dec(0, 1, 3); // 2 -> 1: still present
+        assert_eq!(c.nz.as_ref().unwrap().doc_nz[0], vec![0, 3]);
+        c.dec(0, 1, 3); // 1 -> 0: doc 0 loses topic 3; word 1 keeps it (doc 1)
+        let nz = c.nz.as_ref().unwrap();
+        assert_eq!(nz.doc_nz[0], vec![0]);
+        assert_eq!(nz.word_nz[1], vec![3]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sparse_index_survives_random_churn() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let (d, t, w) = (5, 6, 12);
+        let mut c = CountMatrices::new(d, t, w);
+        let mut assignments = Vec::new();
+        for doc in 0..d {
+            for _ in 0..15 {
+                let word = rng.gen_range(w) as u32;
+                let topic = rng.gen_range(t);
+                c.inc(doc, word, topic);
+                assignments.push((doc, word, topic));
+            }
+        }
+        c.enable_sparse_index();
+        for _ in 0..1000 {
+            let i = rng.gen_range(assignments.len());
+            let (doc, word, old) = assignments[i];
+            c.dec(doc, word, old);
+            let new = rng.gen_range(t);
+            c.inc(doc, word, new);
+            assignments[i] = (doc, word, new);
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn absorb_drops_stale_sparse_index() {
+        let mut a = CountMatrices::new(1, 2, 3);
+        a.inc(0, 0, 0);
+        a.enable_sparse_index();
+        let mut b = CountMatrices::new(1, 2, 3);
+        b.inc(0, 1, 1);
+        a.absorb_word_topic(&b);
+        assert!(a.nz.is_none());
+        a.check_invariants().unwrap_err(); // doc-side counts untouched by design
+    }
+
+    #[test]
+    fn zbar_matrix_matches_rows() {
+        let mut c = CountMatrices::new(3, 4, 5);
+        let mut rng = Pcg64::seed_from_u64(4);
+        for doc in 0..3 {
+            for _ in 0..10 {
+                c.inc(doc, rng.gen_range(5) as u32, rng.gen_range(4));
+            }
+        }
+        let m = c.zbar_matrix();
+        for doc in 0..3 {
+            assert_eq!(&m[doc * 4..(doc + 1) * 4], c.zbar_row(doc).as_slice());
+        }
     }
 }

@@ -169,8 +169,8 @@ pub fn run_with_engine(
             let train = gibbs_train::train(&ds.train, cfg, engine, &mut rng)?;
             timings.add("train", sw.elapsed_secs());
             let sw = CpuStopwatch::new();
-            let (pred, _zbar) = gibbs_predict::predict_corpus(
-                &train.model, &ds.test, &cfg.train, engine, None, &mut rng,
+            let (pred, _zbar) = gibbs_predict::predict_corpus_with_kernel(
+                &train.model, &ds.test, &cfg.train, cfg.sampler.kernel, engine, None, &mut rng,
             )?;
             timings.add("predict_test", sw.elapsed_secs());
             let sim_wall = timings.get("train") + timings.get("predict_test");
@@ -426,8 +426,8 @@ fn run_naive(
     // Step 4: ONE prediction pass with the pooled model (why Naive is the
     // fastest — and the least accurate — algorithm in Figs. 6/7).
     let sw = CpuStopwatch::new();
-    let (pred, _zbar) = gibbs_predict::predict_corpus(
-        &pooled_model, &ds.test, &cfg.train, engine, None, rng,
+    let (pred, _zbar) = gibbs_predict::predict_corpus_with_kernel(
+        &pooled_model, &ds.test, &cfg.train, cfg.sampler.kernel, engine, None, rng,
     )?;
     let predict_cpu = sw.elapsed_secs();
     timings.add("predict_test", predict_cpu);
@@ -520,6 +520,20 @@ mod tests {
             }
             assert_eq!(out.comm.sampling_syncs, 0, "sampling must be communication-free");
         }
+    }
+
+    #[test]
+    fn kernel_choice_does_not_change_results() {
+        // dense and sparse kernels are draw-for-draw identical, so a whole
+        // parallel run must produce byte-identical predictions either way.
+        let (ds, mut cfg) = fixture();
+        let engine = EngineHandle::native();
+        cfg.sampler.kernel = crate::config::schema::KernelKind::Dense;
+        let a = run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap().0;
+        cfg.sampler.kernel = crate::config::schema::KernelKind::Sparse;
+        let b = run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap().0;
+        assert_eq!(a.yhat, b.yhat);
+        assert_eq!(a.test_metrics, b.test_metrics);
     }
 
     #[test]

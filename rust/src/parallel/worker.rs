@@ -51,10 +51,11 @@ pub fn run_worker(
 
     let test_pred = if plan.predict_test {
         let sw = CpuStopwatch::new();
-        let (pred, _zbar) = gibbs_predict::predict_corpus(
+        let (pred, _zbar) = gibbs_predict::predict_corpus_with_kernel(
             &train.model,
             test,
             &cfg.train,
+            cfg.sampler.kernel,
             engine,
             None, // workers never see test labels
             &mut rng,
@@ -68,10 +69,11 @@ pub fn run_worker(
     let full_train_quality = if plan.predict_full_train {
         let sw = CpuStopwatch::new();
         let ys = full_train.responses();
-        let (pred, _zbar) = gibbs_predict::predict_corpus(
+        let (pred, _zbar) = gibbs_predict::predict_corpus_with_kernel(
             &train.model,
             full_train,
             &cfg.train,
+            cfg.sampler.kernel,
             engine,
             Some(&ys),
             &mut rng,

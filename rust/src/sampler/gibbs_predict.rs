@@ -2,32 +2,41 @@
 //!
 //! Paper eq. (4): p(z = t) ∝ (N_dt + alpha) · phi_hat_{t, w}. The response
 //! is *not* part of the conditional (test labels are unknown at inference
-//! time). After `predict_burnin` sweeps the empirical topic distribution is
-//! averaged over the remaining sweeps (Nguyen et al. 2014), and the final
-//! responses are computed in one batched engine call: yhat = Zbar eta
-//! (eq. 5) — the `predict_T*` AOT artifact on the XLA path.
+//! time), so the whole path is kernel-eligible: the sparse kernel's bucket
+//! decomposition `α·phi_t + N_dt·phi_t` makes each token update O(nnz(N_d))
+//! instead of O(T) (DESIGN.md §Perf). After `predict_burnin` sweeps the
+//! empirical topic distribution is averaged over the remaining sweeps
+//! (Nguyen et al. 2014), and the final responses are computed in one
+//! batched engine call: yhat = Zbar eta (eq. 5) — the `predict_T*` AOT
+//! artifact on the XLA path.
 
-use crate::config::schema::TrainConfig;
+use crate::config::schema::{KernelKind, TrainConfig};
 use crate::data::corpus::Corpus;
 use crate::model::slda::SldaModel;
 use crate::runtime::{EngineHandle, Prediction};
+use crate::sampler::kernel::{self, PredictState};
 use crate::util::rng::Pcg64;
 
-/// Infer averaged empirical topic distributions for every document.
-/// Returns a row-major [D, T] matrix.
-pub fn infer_zbar(
+/// Infer averaged empirical topic distributions for every document with an
+/// explicit kernel choice. Returns a row-major [D, T] matrix. The kernels
+/// are draw-for-draw identical, so the choice affects throughput only.
+pub fn infer_zbar_with_kernel(
     model: &SldaModel,
     corpus: &Corpus,
     cfg: &TrainConfig,
+    kernel_kind: KernelKind,
     rng: &mut Pcg64,
 ) -> Vec<f32> {
     let t = model.t;
-    let alpha = model.alpha;
     let d = corpus.num_docs();
     let mut zbar = vec![0.0f32; d * t];
     let mut ndt = vec![0u32; t];
     let mut acc = vec![0.0f64; t];
     let mut probs = vec![0.0f64; t];
+    let mut kern = kernel::make_kernel(kernel_kind, t);
+    // Per-word cumulative smoothing masses alpha * phi (shared by both
+    // kernels; phi is frozen for the whole call).
+    let phi_cum = kernel::build_phi_cum(&model.phi, t, model.alpha);
 
     for (di, doc) in corpus.docs.iter().enumerate() {
         let nd = doc.len();
@@ -46,17 +55,14 @@ pub fn infer_zbar(
         }
         let mut samples = 0usize;
         for sweep in 0..cfg.predict_sweeps {
-            for (n, &wi) in doc.tokens.iter().enumerate() {
-                let old = zd[n] as usize;
-                ndt[old] -= 1;
-                let phi = model.phi_row(wi);
-                for ti in 0..t {
-                    probs[ti] = (ndt[ti] as f64 + alpha) * phi[ti] as f64;
-                }
-                let new = rng.sample_discrete(&probs);
-                ndt[new] += 1;
-                zd[n] = new as u16;
-            }
+            let mut ps = PredictState {
+                t,
+                phi: &model.phi,
+                phi_cum: &phi_cum,
+                ndt: &mut ndt,
+                rng: &mut *rng,
+            };
+            kern.sweep_doc_predict(&mut ps, &doc.tokens, &mut zd);
             if sweep >= cfg.predict_burnin {
                 for ti in 0..t {
                     acc[ti] += ndt[ti] as f64;
@@ -72,9 +78,34 @@ pub fn infer_zbar(
     zbar
 }
 
-/// Full prediction pipeline: infer zbar, then batched yhat + metrics.
-/// `labels`: pass the ground truth to obtain MSE/accuracy (paper's test
-/// evaluation), or `None` for pure inference.
+/// [`infer_zbar_with_kernel`] with the `auto` kernel heuristic.
+pub fn infer_zbar(
+    model: &SldaModel,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    infer_zbar_with_kernel(model, corpus, cfg, KernelKind::Auto, rng)
+}
+
+/// Full prediction pipeline with an explicit kernel: infer zbar, then
+/// batched yhat + metrics. `labels`: pass the ground truth to obtain
+/// MSE/accuracy (paper's test evaluation), or `None` for pure inference.
+pub fn predict_corpus_with_kernel(
+    model: &SldaModel,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    kernel_kind: KernelKind,
+    engine: &EngineHandle,
+    labels: Option<&[f64]>,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(Prediction, Vec<f32>)> {
+    let zbar = infer_zbar_with_kernel(model, corpus, cfg, kernel_kind, rng);
+    let pred = engine.predict(&zbar, &model.eta, labels, model.t)?;
+    Ok((pred, zbar))
+}
+
+/// [`predict_corpus_with_kernel`] with the `auto` kernel heuristic.
 pub fn predict_corpus(
     model: &SldaModel,
     corpus: &Corpus,
@@ -83,9 +114,7 @@ pub fn predict_corpus(
     labels: Option<&[f64]>,
     rng: &mut Pcg64,
 ) -> anyhow::Result<(Prediction, Vec<f32>)> {
-    let zbar = infer_zbar(model, corpus, cfg, rng);
-    let pred = engine.predict(&zbar, &model.eta, labels, model.t)?;
-    Ok((pred, zbar))
+    predict_corpus_with_kernel(model, corpus, cfg, KernelKind::Auto, engine, labels, rng)
 }
 
 #[cfg(test)]

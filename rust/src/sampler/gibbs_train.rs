@@ -10,22 +10,22 @@
 //!   XLA artifact or native), every `eta_every` sweeps after burn-in; rho is
 //!   re-estimated from residuals when `learn_rho` is set.
 //!
-//! Hot-path notes (see EXPERIMENTS.md §Perf): the Gaussian margin is
-//! computed as exp(-(c - eta_t/N_d)^2 / 2rho) with c maintained incrementally
-//! via the running dot product s_d = eta . N_dt (O(1) per token update, not
-//! O(T)); `fast_exp` replaces `f64::exp`; the constant exp(-c^2/2rho) factor
-//! is dropped because it cancels in the unnormalized categorical draw.
+//! The token updates are delegated to the configured [`kernel`]: while eta
+//! is all-zero (every burn-in sweep) the response factor is constant and the
+//! kernel's plain-LDA path runs — the sparse kernel exploits the bucket
+//! decomposition there; once eta activates, both kernels share the dense
+//! Gaussian-margin path [`kernel::sweep_doc_gauss`] (DESIGN.md §Perf).
 
-use crate::config::schema::ExperimentConfig;
+use crate::config::schema::{ExperimentConfig, KernelKind};
 use crate::data::corpus::Corpus;
 use crate::model::counts::CountMatrices;
 use crate::model::slda::SldaModel;
 use crate::runtime::EngineHandle;
-use crate::util::math::fast_exp;
+use crate::sampler::kernel::{self, GaussScratch, TrainState};
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CpuStopwatch, PhaseTimings};
 
-/// Per-eta-step trace used for convergence reporting (EXPERIMENTS.md).
+/// Per-eta-step trace used for convergence reporting (DESIGN.md §5).
 #[derive(Clone, Debug)]
 pub struct SweepStats {
     pub sweep: usize,
@@ -87,19 +87,28 @@ pub fn train(
         z.push(zd);
     }
 
-    let mut probs = vec![0.0f64; t];
+    // Kernel selection (DESIGN.md §Perf): `auto` resolves by topic count.
+    // The sparse kernel needs the counts' non-zero index; built once here,
+    // maintained incrementally by inc/dec from now on.
+    let resolved = cfg.sampler.kernel.resolve(t);
+    if resolved == KernelKind::Sparse {
+        counts.enable_sparse_index();
+    }
+    let mut kern = kernel::make_kernel(resolved, t);
+
     // Incrementally maintained 1/(N_t + W beta): replaces T divisions per
-    // token with 2 reciprocal updates (§Perf opt A).
+    // token with 2 reciprocal updates (§Perf opt A). `ssum` caches its sum
+    // (the sparse kernel's smoothing-bucket mass).
     let mut inv_nt: Vec<f64> =
         counts.nt.iter().map(|&n| 1.0 / (n as f64 + wbeta)).collect();
+    let mut ssum: f64 = inv_nt.iter().sum();
     // Per-document response-margin tables (§Perf opt B): with e_t =
     // eta_t / N_d fixed within a document-sweep,
     //   N(y; mu_t, rho) ∝ exp(2c e_t - e_t^2) / 2rho            (c = y - s/N_d)
     //                   = exp((c/rho) e_t) * exp(-e_t^2 / 2rho)
     // so u_t = exp(-e_t^2/2rho) costs T exps per *document* and each token
     // pays one fused multiply inside the remaining exp.
-    let mut e_buf = vec![0.0f64; t];
-    let mut u_buf = vec![0.0f64; t];
+    let mut scratch = GaussScratch::new(t);
     let mut history = Vec::new();
     let mut tokens_sampled: u64 = 0;
     let mut timings = PhaseTimings::new();
@@ -107,63 +116,24 @@ pub fn train(
     for sweep in 0..cfg.train.sweeps {
         let sw = CpuStopwatch::new();
         for (di, doc) in corpus.docs.iter().enumerate() {
-            let nd = doc.len();
-            let inv_nd = 1.0 / nd as f64;
-            let y = doc.response;
-            let inv2rho = 1.0 / (2.0 * rho);
-            let inv_rho = 1.0 / rho;
-            // Running response dot product s_d = eta . N_dt.
-            let mut s: f64 = 0.0;
-            if eta_active {
-                s = counts.ndt_row(di).iter().zip(&eta).map(|(&c, &e)| c as f64 * e).sum();
-                for ti in 0..t {
-                    let e = eta[ti] * inv_nd;
-                    e_buf[ti] = e;
-                    u_buf[ti] = fast_exp(-(e * e) * inv2rho);
-                }
-            }
             let zd = &mut z[di];
-            for (n, &wi) in doc.tokens.iter().enumerate() {
-                let old = zd[n] as usize;
-                counts.dec(di, wi, old);
-                inv_nt[old] = 1.0 / (counts.nt[old] as f64 + wbeta);
-                if eta_active {
-                    s -= eta[old];
-                }
-                // NOTE §Perf C (cumulative build + binary-search draw) was
-                // tried and REVERTED: the loop-carried acc dependency broke
-                // instruction-level parallelism and halved throughput.
-                {
-                    let ndt = &counts.ndt[di * t..(di + 1) * t];
-                    let ntw = &counts.ntw[wi as usize * t..(wi as usize + 1) * t];
-                    if eta_active {
-                        // a = c/rho with c = y - s^{-dn}/N_d (constant exp
-                        // factor exp(-c^2/2rho) dropped: cancels in the draw)
-                        let a = (y - s * inv_nd) * inv_rho;
-                        for ti in 0..t {
-                            let gauss = fast_exp(a * e_buf[ti]) * u_buf[ti];
-                            probs[ti] = gauss
-                                * (ndt[ti] as f64 + alpha)
-                                * (ntw[ti] as f64 + beta)
-                                * inv_nt[ti];
-                        }
-                    } else {
-                        for ti in 0..t {
-                            probs[ti] = (ndt[ti] as f64 + alpha)
-                                * (ntw[ti] as f64 + beta)
-                                * inv_nt[ti];
-                        }
-                    }
-                }
-                let new = rng.sample_discrete(&probs);
-                counts.inc(di, wi, new);
-                inv_nt[new] = 1.0 / (counts.nt[new] as f64 + wbeta);
-                if eta_active {
-                    s += eta[new];
-                }
-                zd[n] = new as u16;
-                tokens_sampled += 1;
+            let mut st = TrainState {
+                counts: &mut counts,
+                inv_nt: &mut inv_nt,
+                ssum: &mut ssum,
+                alpha,
+                beta,
+                wbeta,
+                rng: &mut *rng,
+            };
+            if eta_active {
+                kernel::sweep_doc_gauss(
+                    &mut st, &mut scratch, &eta, doc.response, rho, di, &doc.tokens, zd,
+                );
+            } else {
+                kern.sweep_doc_lda(&mut st, di, &doc.tokens, zd);
             }
+            tokens_sampled += doc.len() as u64;
         }
         timings.add("gibbs", sw.elapsed_secs());
 

@@ -1,0 +1,677 @@
+//! Pluggable Gibbs token-update kernels (DESIGN.md §Perf).
+//!
+//! One token-update contract, two implementations:
+//!
+//! * [`DenseKernel`] — the classic O(T) conditional, extracted from the
+//!   formerly duplicated inner loops of `gibbs_train` / `gibbs_predict`.
+//! * [`SparseKernel`] — SparseLDA-style bucket decomposition (Yao, Mimno &
+//!   McCallum 2009; Magnusson et al. 2017). The unsupervised conditional
+//!
+//!   ```text
+//!   p(z = t) ∝ (N_dt + α)(N_tw + β) / (N_t + Wβ)
+//!            =  αβ·inv_t                    (smoothing bucket, cached)
+//!            +  β·N_dt·inv_t               (document bucket, non-zero N_dt)
+//!            +  (N_dt + α)·N_tw·inv_t      (word bucket, non-zero N_tw)
+//!   ```
+//!
+//!   with `inv_t = 1/(N_t + Wβ)` is split into three bucket masses; the
+//!   smoothing mass `αβ·Σ_t inv_t` is maintained incrementally (O(1) per
+//!   token), and the document/word masses iterate only the non-zero entries
+//!   of [`crate::model::counts::SparseIndex`]. A uniform draw first picks a
+//!   bucket, then walks only that bucket's support.
+//!
+//! **Draw-for-draw equivalence.** Both kernels execute the *same* floating-
+//! point operation sequence: the dense kernel's extra terms are exact IEEE
+//! zeros (a zero count multiplies to `+0.0`, and `x + 0.0 == x` bit-exactly
+//! for the non-negative accumulators used here), and the sparse index lists
+//! are sorted ascending so accumulation order matches the dense loop. Both
+//! consume exactly one `next_f64` per token. The `properties.rs` equivalence
+//! test asserts byte-identical `z`, `ndt` and `eta` across kernels.
+//!
+//! The Gaussian response factor of the *supervised* training conditional is
+//! dense in every topic (the margin `exp(a·e_t)·u_t` never vanishes), so
+//! eta-active sweeps fall back to the shared [`sweep_doc_gauss`] path for
+//! both kernels; burn-in sweeps and the entire prediction path (which has no
+//! response term) run the kernel-specific code.
+
+use crate::config::schema::KernelKind;
+use crate::model::counts::{insert_sorted, remove_sorted, CountMatrices};
+use crate::util::math::fast_exp;
+use crate::util::rng::Pcg64;
+
+/// Mutable sampler state threaded through every training token update.
+pub struct TrainState<'a> {
+    pub counts: &'a mut CountMatrices,
+    /// `1/(N_t + Wβ)` per topic, maintained incrementally.
+    pub inv_nt: &'a mut [f64],
+    /// Running `Σ_t inv_nt[t]` (smoothing-bucket cache), maintained
+    /// incrementally alongside `inv_nt`.
+    pub ssum: &'a mut f64,
+    pub alpha: f64,
+    pub beta: f64,
+    pub wbeta: f64,
+    pub rng: &'a mut Pcg64,
+}
+
+/// Mutable sampler state for one document at prediction time (frozen phi).
+pub struct PredictState<'a> {
+    pub t: usize,
+    /// Frozen topic-word distributions, word-major `[w * T + t]`.
+    pub phi: &'a [f32],
+    /// Per-word cumulative smoothing masses (see [`build_phi_cum`]):
+    /// `cum[w*T + t] = Σ_{t' <= t} α·phi[w*T + t']`.
+    pub phi_cum: &'a [f64],
+    /// The document's topic counts (local, not part of `CountMatrices`).
+    pub ndt: &'a mut [u32],
+    pub rng: &'a mut Pcg64,
+}
+
+/// One token-update contract; implementations must be draw-for-draw
+/// interchangeable under a fixed RNG stream (see module docs).
+pub trait SamplerKernel {
+    fn name(&self) -> &'static str;
+
+    /// Resample every token of document `d` under the plain-LDA conditional
+    /// (training, response term inactive).
+    fn sweep_doc_lda(&mut self, st: &mut TrainState, d: usize, tokens: &[u32], zd: &mut [u16]);
+
+    /// Resample every token of one held-out document against frozen phi
+    /// (prediction conditional, paper eq. 4).
+    fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]);
+}
+
+/// Instantiate the kernel for a resolved [`KernelKind`] (`Auto` resolves by
+/// topic count first — see [`KernelKind::resolve`]).
+pub fn make_kernel(kind: KernelKind, topics: usize) -> Box<dyn SamplerKernel> {
+    match kind.resolve(topics) {
+        KernelKind::Sparse => Box::new(SparseKernel::new()),
+        _ => Box::new(DenseKernel),
+    }
+}
+
+/// Remove a token assignment and restore the `inv_nt`/`ssum` caches.
+#[inline]
+pub fn remove_token(st: &mut TrainState, d: usize, w: u32, topic: usize) {
+    st.counts.dec(d, w, topic);
+    let old = st.inv_nt[topic];
+    let new = 1.0 / (st.counts.nt[topic] as f64 + st.wbeta);
+    st.inv_nt[topic] = new;
+    *st.ssum += new - old;
+}
+
+/// Add a token assignment and restore the `inv_nt`/`ssum` caches.
+#[inline]
+pub fn add_token(st: &mut TrainState, d: usize, w: u32, topic: usize) {
+    st.counts.inc(d, w, topic);
+    let old = st.inv_nt[topic];
+    let new = 1.0 / (st.counts.nt[topic] as f64 + st.wbeta);
+    st.inv_nt[topic] = new;
+    *st.ssum += new - old;
+}
+
+/// Smoothing-bucket walk: all T topics carry mass `αβ·inv_nt[t]`. Rare
+/// (the smoothing mass is a small fraction of the total), shared verbatim
+/// by both kernels.
+#[inline]
+fn smoothing_walk(u: f64, ab: f64, inv_nt: &[f64]) -> usize {
+    let mut acc = 0.0;
+    let mut last = 0usize;
+    for (ti, &inv) in inv_nt.iter().enumerate() {
+        acc += ab * inv;
+        last = ti;
+        if u < acc {
+            return ti;
+        }
+    }
+    last
+}
+
+/// Dense bucket draw: identical bucket arithmetic to the sparse draw, but
+/// iterating all T topics (zero terms are exact no-ops).
+fn dense_lda_draw(st: &mut TrainState, d: usize, w: u32) -> usize {
+    let t = st.counts.t;
+    let ab = st.alpha * st.beta;
+    let s_mass = ab * *st.ssum;
+    let ndt = &st.counts.ndt[d * t..(d + 1) * t];
+    let ntw = &st.counts.ntw[w as usize * t..(w as usize + 1) * t];
+    let inv_nt: &[f64] = &*st.inv_nt;
+
+    let mut r = 0.0;
+    for ti in 0..t {
+        r += st.beta * ndt[ti] as f64 * inv_nt[ti];
+    }
+    let mut q = 0.0;
+    for ti in 0..t {
+        q += (ndt[ti] as f64 + st.alpha) * ntw[ti] as f64 * inv_nt[ti];
+    }
+
+    let total = s_mass + r + q;
+    let mut u = st.rng.next_f64() * total;
+    if u < s_mass {
+        return smoothing_walk(u, ab, inv_nt);
+    }
+    u -= s_mass;
+    if u < r {
+        let mut acc = 0.0;
+        let mut last = 0usize;
+        for ti in 0..t {
+            let c = ndt[ti];
+            if c == 0 {
+                continue;
+            }
+            acc += st.beta * c as f64 * inv_nt[ti];
+            last = ti;
+            if u < acc {
+                return ti;
+            }
+        }
+        return last;
+    }
+    u -= r;
+    let mut acc = 0.0;
+    let mut last = 0usize;
+    for ti in 0..t {
+        let c = ntw[ti];
+        if c == 0 {
+            continue;
+        }
+        acc += (ndt[ti] as f64 + st.alpha) * c as f64 * inv_nt[ti];
+        last = ti;
+        if u < acc {
+            return ti;
+        }
+    }
+    last
+}
+
+/// Sparse bucket draw: document and word buckets iterate only the sorted
+/// non-zero lists of the [`crate::model::counts::SparseIndex`].
+fn sparse_lda_draw(st: &mut TrainState, d: usize, w: u32) -> usize {
+    let t = st.counts.t;
+    let ab = st.alpha * st.beta;
+    let s_mass = ab * *st.ssum;
+    let nz = st.counts.nz.as_ref().expect("sparse kernel requires enable_sparse_index()");
+    let doc_list: &[u16] = &nz.doc_nz[d];
+    let word_list: &[u16] = &nz.word_nz[w as usize];
+    let ndt = &st.counts.ndt[d * t..(d + 1) * t];
+    let ntw = &st.counts.ntw[w as usize * t..(w as usize + 1) * t];
+    let inv_nt: &[f64] = &*st.inv_nt;
+
+    let mut r = 0.0;
+    for &tu in doc_list {
+        let ti = tu as usize;
+        r += st.beta * ndt[ti] as f64 * inv_nt[ti];
+    }
+    let mut q = 0.0;
+    for &tu in word_list {
+        let ti = tu as usize;
+        q += (ndt[ti] as f64 + st.alpha) * ntw[ti] as f64 * inv_nt[ti];
+    }
+
+    let total = s_mass + r + q;
+    let mut u = st.rng.next_f64() * total;
+    if u < s_mass {
+        return smoothing_walk(u, ab, inv_nt);
+    }
+    u -= s_mass;
+    if u < r {
+        let mut acc = 0.0;
+        let mut last = 0usize;
+        for &tu in doc_list {
+            let ti = tu as usize;
+            acc += st.beta * ndt[ti] as f64 * inv_nt[ti];
+            last = ti;
+            if u < acc {
+                return ti;
+            }
+        }
+        return last;
+    }
+    u -= r;
+    let mut acc = 0.0;
+    let mut last = 0usize;
+    for &tu in word_list {
+        let ti = tu as usize;
+        acc += (ndt[ti] as f64 + st.alpha) * ntw[ti] as f64 * inv_nt[ti];
+        last = ti;
+        if u < acc {
+            return ti;
+        }
+    }
+    last
+}
+
+/// Per-word cumulative smoothing table for prediction:
+/// `cum[w*T + t] = Σ_{t' <= t} α·phi[w*T + t']`. Built once per corpus
+/// inference call and shared by both kernels (the smoothing-bucket topic is
+/// then a binary search instead of an O(T) walk).
+pub fn build_phi_cum(phi: &[f32], t: usize, alpha: f64) -> Vec<f64> {
+    debug_assert_eq!(phi.len() % t, 0);
+    let mut cum = vec![0.0f64; phi.len()];
+    for w in 0..phi.len() / t {
+        let mut acc = 0.0;
+        for ti in 0..t {
+            acc += alpha * phi[w * t + ti] as f64;
+            cum[w * t + ti] = acc;
+        }
+    }
+    cum
+}
+
+/// Smoothing-bucket topic at prediction time: smallest t with `u < cum[t]`
+/// (same selection as the linear walk over `α·phi`, since `cum` is that
+/// walk's accumulator sequence).
+#[inline]
+fn predict_smoothing_topic(u: f64, cum: &[f64]) -> usize {
+    cum.partition_point(|&c| c <= u).min(cum.len() - 1)
+}
+
+/// Dense prediction draw: `p(z=t) ∝ (N_dt + α)·phi_t = α·phi_t + N_dt·phi_t`.
+fn dense_predict_draw(ps: &mut PredictState, w: u32) -> usize {
+    let t = ps.t;
+    let phi = &ps.phi[w as usize * t..(w as usize + 1) * t];
+    let cum = &ps.phi_cum[w as usize * t..(w as usize + 1) * t];
+    let s_mass = cum[t - 1];
+
+    let mut r = 0.0;
+    for ti in 0..t {
+        r += ps.ndt[ti] as f64 * phi[ti] as f64;
+    }
+    let total = s_mass + r;
+    let mut u = ps.rng.next_f64() * total;
+    if u < s_mass {
+        return predict_smoothing_topic(u, cum);
+    }
+    u -= s_mass;
+    let mut acc = 0.0;
+    let mut last = 0usize;
+    for ti in 0..t {
+        let c = ps.ndt[ti];
+        if c == 0 {
+            continue;
+        }
+        acc += c as f64 * phi[ti] as f64;
+        last = ti;
+        if u < acc {
+            return ti;
+        }
+    }
+    last
+}
+
+/// Sparse prediction draw over the caller-maintained sorted non-zero list.
+fn sparse_predict_draw(ps: &mut PredictState, doc_list: &[u16], w: u32) -> usize {
+    let t = ps.t;
+    let phi = &ps.phi[w as usize * t..(w as usize + 1) * t];
+    let cum = &ps.phi_cum[w as usize * t..(w as usize + 1) * t];
+    let s_mass = cum[t - 1];
+
+    let mut r = 0.0;
+    for &tu in doc_list {
+        let ti = tu as usize;
+        r += ps.ndt[ti] as f64 * phi[ti] as f64;
+    }
+    let total = s_mass + r;
+    let mut u = ps.rng.next_f64() * total;
+    if u < s_mass {
+        return predict_smoothing_topic(u, cum);
+    }
+    u -= s_mass;
+    let mut acc = 0.0;
+    let mut last = 0usize;
+    for &tu in doc_list {
+        let ti = tu as usize;
+        acc += ps.ndt[ti] as f64 * phi[ti] as f64;
+        last = ti;
+        if u < acc {
+            return ti;
+        }
+    }
+    last
+}
+
+/// The classic dense O(T)-per-token kernel.
+pub struct DenseKernel;
+
+impl SamplerKernel for DenseKernel {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn sweep_doc_lda(&mut self, st: &mut TrainState, d: usize, tokens: &[u32], zd: &mut [u16]) {
+        for (n, &wi) in tokens.iter().enumerate() {
+            let old = zd[n] as usize;
+            remove_token(st, d, wi, old);
+            let new = dense_lda_draw(st, d, wi);
+            add_token(st, d, wi, new);
+            zd[n] = new as u16;
+        }
+    }
+
+    fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]) {
+        for (n, &wi) in tokens.iter().enumerate() {
+            let old = zd[n] as usize;
+            ps.ndt[old] -= 1;
+            let new = dense_predict_draw(ps, wi);
+            ps.ndt[new] += 1;
+            zd[n] = new as u16;
+        }
+    }
+}
+
+/// SparseLDA-style bucket kernel. Training iterates the counts' sparse
+/// index; prediction maintains its own per-document non-zero scratch list.
+pub struct SparseKernel {
+    doc_nz: Vec<u16>,
+}
+
+impl SparseKernel {
+    pub fn new() -> Self {
+        SparseKernel { doc_nz: Vec::new() }
+    }
+}
+
+impl Default for SparseKernel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SamplerKernel for SparseKernel {
+    fn name(&self) -> &'static str {
+        "sparse"
+    }
+
+    fn sweep_doc_lda(&mut self, st: &mut TrainState, d: usize, tokens: &[u32], zd: &mut [u16]) {
+        for (n, &wi) in tokens.iter().enumerate() {
+            let old = zd[n] as usize;
+            remove_token(st, d, wi, old);
+            let new = sparse_lda_draw(st, d, wi);
+            add_token(st, d, wi, new);
+            zd[n] = new as u16;
+        }
+    }
+
+    fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]) {
+        // Rebuild the sorted non-zero list from the document's current
+        // counts (O(T) once per sweep, amortized over the token loop).
+        self.doc_nz.clear();
+        for ti in 0..ps.t {
+            if ps.ndt[ti] > 0 {
+                self.doc_nz.push(ti as u16);
+            }
+        }
+        for (n, &wi) in tokens.iter().enumerate() {
+            let old = zd[n] as usize;
+            ps.ndt[old] -= 1;
+            if ps.ndt[old] == 0 {
+                remove_sorted(&mut self.doc_nz, old as u16);
+            }
+            let new = sparse_predict_draw(ps, &self.doc_nz, wi);
+            ps.ndt[new] += 1;
+            if ps.ndt[new] == 1 {
+                insert_sorted(&mut self.doc_nz, new as u16);
+            }
+            zd[n] = new as u16;
+        }
+    }
+}
+
+/// Shared supervised-conditional sweep (paper eq. 1 with the Gaussian
+/// response margin). The margin is dense in every topic, so both kernels
+/// use this identical path whenever `eta` is active; see the module docs.
+/// The hot-path tricks are unchanged from the original inner loop
+/// (DESIGN.md §Perf): running dot product `s_d = η·N_dt`, per-document
+/// `e`/`u` tables, `fast_exp`, dropped constant margin factor.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_doc_gauss(
+    st: &mut TrainState,
+    scratch: &mut GaussScratch,
+    eta: &[f64],
+    y: f64,
+    rho: f64,
+    d: usize,
+    tokens: &[u32],
+    zd: &mut [u16],
+) {
+    let t = st.counts.t;
+    let nd = tokens.len();
+    let inv_nd = 1.0 / nd as f64;
+    let inv2rho = 1.0 / (2.0 * rho);
+    let inv_rho = 1.0 / rho;
+    // Running response dot product s_d = eta . N_dt.
+    let mut s: f64 =
+        st.counts.ndt_row(d).iter().zip(eta).map(|(&c, &e)| c as f64 * e).sum();
+    for ti in 0..t {
+        let e = eta[ti] * inv_nd;
+        scratch.e_buf[ti] = e;
+        scratch.u_buf[ti] = fast_exp(-(e * e) * inv2rho);
+    }
+    for (n, &wi) in tokens.iter().enumerate() {
+        let old = zd[n] as usize;
+        remove_token(st, d, wi, old);
+        s -= eta[old];
+        {
+            let ndt = &st.counts.ndt[d * t..(d + 1) * t];
+            let ntw = &st.counts.ntw[wi as usize * t..(wi as usize + 1) * t];
+            // a = c/rho with c = y - s^{-dn}/N_d (constant exp factor
+            // exp(-c^2/2rho) dropped: cancels in the draw)
+            let a = (y - s * inv_nd) * inv_rho;
+            for ti in 0..t {
+                let gauss = fast_exp(a * scratch.e_buf[ti]) * scratch.u_buf[ti];
+                scratch.probs[ti] = gauss
+                    * (ndt[ti] as f64 + st.alpha)
+                    * (ntw[ti] as f64 + st.beta)
+                    * st.inv_nt[ti];
+            }
+        }
+        let new = st.rng.sample_discrete(&scratch.probs);
+        add_token(st, d, wi, new);
+        s += eta[new];
+        zd[n] = new as u16;
+    }
+}
+
+/// Reusable per-chain buffers for [`sweep_doc_gauss`].
+pub struct GaussScratch {
+    pub probs: Vec<f64>,
+    pub e_buf: Vec<f64>,
+    pub u_buf: Vec<f64>,
+}
+
+impl GaussScratch {
+    pub fn new(t: usize) -> Self {
+        GaussScratch { probs: vec![0.0; t], e_buf: vec![0.0; t], u_buf: vec![0.0; t] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Random count state with every cache consistent; sparse index enabled
+    /// (the dense kernel ignores it).
+    fn random_state(
+        rng: &mut Pcg64,
+        d: usize,
+        t: usize,
+        w: usize,
+        tokens_per_doc: usize,
+    ) -> (CountMatrices, Vec<f64>, f64) {
+        let mut c = CountMatrices::new(d, t, w);
+        for di in 0..d {
+            for _ in 0..tokens_per_doc {
+                c.inc(di, rng.gen_range(w) as u32, rng.gen_range(t));
+            }
+        }
+        c.enable_sparse_index();
+        let wbeta = w as f64 * 0.1;
+        let inv_nt: Vec<f64> = c.nt.iter().map(|&n| 1.0 / (n as f64 + wbeta)).collect();
+        let ssum: f64 = inv_nt.iter().sum();
+        (c, inv_nt, ssum)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn draw_once(
+        sparse: bool,
+        seed: u64,
+        counts: &mut CountMatrices,
+        inv_nt: &mut [f64],
+        ssum: &mut f64,
+        alpha: f64,
+        beta: f64,
+        wbeta: f64,
+        di: usize,
+        wi: u32,
+    ) -> usize {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut st = TrainState { counts, inv_nt, ssum, alpha, beta, wbeta, rng: &mut rng };
+        if sparse {
+            sparse_lda_draw(&mut st, di, wi)
+        } else {
+            dense_lda_draw(&mut st, di, wi)
+        }
+    }
+
+    #[test]
+    fn dense_and_sparse_draws_agree_token_for_token() {
+        let (alpha, beta) = (0.5, 0.1);
+        let mut meta = Pcg64::seed_from_u64(11);
+        for trial in 0..200usize {
+            let (d, t, w) = (4usize, 2 + (trial % 13), 20usize);
+            let wbeta = w as f64 * beta;
+            let (mut counts, mut inv_nt, mut ssum) =
+                random_state(&mut meta, d, t, w, 1 + trial % 30);
+            let di = meta.gen_range(d);
+            let wi = meta.gen_range(w) as u32;
+            let seed = meta.next_u64();
+
+            let a = draw_once(
+                false, seed, &mut counts, &mut inv_nt, &mut ssum, alpha, beta, wbeta, di, wi,
+            );
+            let b = draw_once(
+                true, seed, &mut counts, &mut inv_nt, &mut ssum, alpha, beta, wbeta, di, wi,
+            );
+            assert_eq!(a, b, "trial {trial}: dense chose {a}, sparse chose {b}");
+        }
+    }
+
+    #[test]
+    fn bucket_draw_matches_full_conditional_distribution() {
+        // Empirical draw frequencies of the decomposed draw must match the
+        // directly computed conditional p(t) ∝ (N_dt+α)(N_tw+β)/(N_t+Wβ).
+        let (alpha, beta) = (0.5, 0.1);
+        let (d, t, w) = (2usize, 5usize, 8usize);
+        let wbeta = w as f64 * beta;
+        let mut meta = Pcg64::seed_from_u64(3);
+        let (mut counts, mut inv_nt, mut ssum) = random_state(&mut meta, d, t, w, 25);
+        let (di, wi) = (0usize, 3u32);
+
+        let probs: Vec<f64> = (0..t)
+            .map(|ti| {
+                (counts.ndt[di * t + ti] as f64 + alpha)
+                    * (counts.ntw[wi as usize * t + ti] as f64 + beta)
+                    / (counts.nt[ti] as f64 + wbeta)
+            })
+            .collect();
+        let total: f64 = probs.iter().sum();
+
+        let n = 200_000usize;
+        let mut hits = vec![0usize; t];
+        let mut rng = Pcg64::seed_from_u64(99);
+        for _ in 0..n {
+            let mut st = TrainState {
+                counts: &mut counts,
+                inv_nt: &mut inv_nt,
+                ssum: &mut ssum,
+                alpha,
+                beta,
+                wbeta,
+                rng: &mut rng,
+            };
+            hits[dense_lda_draw(&mut st, di, wi)] += 1;
+        }
+        for ti in 0..t {
+            let want = probs[ti] / total * n as f64;
+            let got = hits[ti] as f64;
+            let sd = (want.max(1.0)).sqrt();
+            assert!(
+                (got - want).abs() < 6.0 * sd + 3.0,
+                "topic {ti}: got {got} want {want} (hits {hits:?})"
+            );
+        }
+    }
+
+    fn predict_draw_once(
+        sparse: bool,
+        seed: u64,
+        t: usize,
+        phi: &[f32],
+        phi_cum: &[f64],
+        ndt: &mut [u32],
+    ) -> usize {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let list: Vec<u16> =
+            (0..t).filter(|&ti| ndt[ti] > 0).map(|ti| ti as u16).collect();
+        let mut ps = PredictState { t, phi, phi_cum, ndt, rng: &mut rng };
+        if sparse {
+            sparse_predict_draw(&mut ps, &list, 0)
+        } else {
+            dense_predict_draw(&mut ps, 0)
+        }
+    }
+
+    #[test]
+    fn predict_draws_agree_and_match_distribution() {
+        let t = 6usize;
+        let alpha = 0.4;
+        let mut meta = Pcg64::seed_from_u64(21);
+        // One word's phi row (positive, unnormalized is fine for the draw).
+        let phi: Vec<f32> = (0..t).map(|_| 0.01 + meta.next_f32() * 0.2).collect();
+        let phi_cum = build_phi_cum(&phi, t, alpha);
+        let mut ndt: Vec<u32> = vec![0, 3, 0, 1, 0, 7];
+
+        // cross-kernel agreement over many RNG streams
+        for trial in 0..200u64 {
+            let seed = 1000 + trial;
+            let a = predict_draw_once(false, seed, t, &phi, &phi_cum, &mut ndt);
+            let b = predict_draw_once(true, seed, t, &phi, &phi_cum, &mut ndt);
+            assert_eq!(a, b, "seed {seed}");
+        }
+
+        // distribution check: p(t) ∝ (ndt + alpha) * phi
+        let probs: Vec<f64> =
+            (0..t).map(|ti| (ndt[ti] as f64 + alpha) * phi[ti] as f64).collect();
+        let total: f64 = probs.iter().sum();
+        let n = 100_000usize;
+        let mut hits = vec![0usize; t];
+        let mut rng = Pcg64::seed_from_u64(7);
+        for _ in 0..n {
+            let mut ps = PredictState {
+                t,
+                phi: &phi,
+                phi_cum: &phi_cum,
+                ndt: &mut ndt,
+                rng: &mut rng,
+            };
+            hits[dense_predict_draw(&mut ps, 0)] += 1;
+        }
+        for ti in 0..t {
+            let want = probs[ti] / total * n as f64;
+            let got = hits[ti] as f64;
+            let sd = want.max(1.0).sqrt();
+            assert!(
+                (got - want).abs() < 6.0 * sd + 3.0,
+                "topic {ti}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_factory_resolves_auto_by_topic_count() {
+        assert_eq!(make_kernel(KernelKind::Auto, 8).name(), "dense");
+        assert_eq!(make_kernel(KernelKind::Auto, 64).name(), "sparse");
+        assert_eq!(make_kernel(KernelKind::Dense, 256).name(), "dense");
+        assert_eq!(make_kernel(KernelKind::Sparse, 8).name(), "sparse");
+    }
+}

@@ -1,5 +1,9 @@
 //! Collapsed Gibbs sampling for sLDA (paper §III-B).
 //!
+//! * [`kernel`] — the pluggable token-update kernels: the classic dense
+//!   O(T) conditional and the SparseLDA-style bucket-decomposed sparse
+//!   kernel, draw-for-draw interchangeable under a fixed seed (selected by
+//!   `sampler.kernel` in the experiment config).
 //! * [`gibbs_train`] — posterior inference by stochastic EM: the eq. (1)
 //!   token-topic sweep alternating with the eq. (2) eta optimization
 //!   (dispatched to the [`crate::runtime`] engine).
@@ -8,8 +12,9 @@
 //!   empirical topic distribution (Nguyen et al. 2014: "averaging is best").
 //!
 //! The token sweep is the system's hot path; see DESIGN.md §Perf for the
-//! layout/fast-exp decisions and `benches/gibbs_hotpath.rs` for the
-//! tokens/second tracking bench.
+//! layout/bucket/fast-exp decisions and `benches/gibbs_hotpath.rs` for the
+//! per-kernel tokens/second tracking bench.
 
 pub mod gibbs_predict;
 pub mod gibbs_train;
+pub mod kernel;

@@ -1,13 +1,17 @@
 //! Property-based tests over the system's core invariants (testkit-driven;
 //! every failure message carries a replay seed).
 
+use cfslda::config::schema::{ExperimentConfig, KernelKind};
 use cfslda::data::corpus::{Corpus, Document};
 use cfslda::data::partition::{random_shards, train_test_split};
+use cfslda::data::synthetic::{generate_with_truth, SyntheticSpec};
 use cfslda::model::counts::CountMatrices;
 use cfslda::regress::ridge;
 use cfslda::runtime::native::NativeEngine;
 use cfslda::runtime::pad;
-use cfslda::runtime::EngineImpl;
+use cfslda::runtime::{EngineHandle, EngineImpl};
+use cfslda::sampler::gibbs_predict::infer_zbar_with_kernel;
+use cfslda::sampler::gibbs_train::train;
 use cfslda::testkit::{f64_in, forall, usize_in, vec_f32, vec_f64};
 use cfslda::util::rng::Pcg64;
 
@@ -93,6 +97,96 @@ fn gibbs_style_count_updates_preserve_invariants() {
             }
             counts.check_invariants().unwrap();
             assert_eq!(counts.total_tokens(), total);
+        },
+    );
+}
+
+/// Seed-exact equivalence of the two Gibbs kernels (DESIGN.md §Perf): for
+/// the same `Pcg64` stream, training must produce byte-identical topic
+/// assignments, counts and regression coefficients, and prediction must
+/// produce a byte-identical zbar — the sparse bucket decomposition only
+/// skips exact-zero terms, it never changes the arithmetic.
+#[test]
+fn sparse_and_dense_kernels_are_seed_exact_identical() {
+    let spec = SyntheticSpec::continuous_small();
+    for &topics in &[8usize, 17] {
+        let run = |kernel: KernelKind| {
+            let mut rng = Pcg64::seed_from_u64(4242);
+            let (corpus, _) = generate_with_truth(&spec, &mut rng);
+            let mut cfg = ExperimentConfig::quick();
+            cfg.model.topics = topics;
+            cfg.train.sweeps = 12; // 4 burn-in (LDA path) + 8 eta-active
+            cfg.train.burnin = 4;
+            cfg.train.eta_every = 4;
+            cfg.sampler.kernel = kernel;
+            let engine = EngineHandle::native();
+            let out = train(&corpus, &cfg, &engine, &mut rng).unwrap();
+            out.counts.check_invariants().unwrap();
+            let zbar =
+                infer_zbar_with_kernel(&out.model, &corpus, &cfg.train, kernel, &mut rng);
+            (out, zbar)
+        };
+        let (a, za) = run(KernelKind::Dense);
+        let (b, zb) = run(KernelKind::Sparse);
+        assert_eq!(a.z, b.z, "z assignments diverged at T={topics}");
+        assert_eq!(a.counts.ndt, b.counts.ndt, "ndt diverged at T={topics}");
+        assert_eq!(a.model.eta, b.model.eta, "eta diverged at T={topics}");
+        assert_eq!(za, zb, "prediction zbar diverged at T={topics}");
+    }
+}
+
+/// The sparse non-zero lists must track `ndt`/`ntw` exactly through
+/// arbitrary inc/dec churn (the Gibbs inner operation).
+#[test]
+fn sparse_index_consistent_after_random_sweeps() {
+    forall(
+        "sparse-index-consistency",
+        25,
+        |rng| {
+            let d = usize_in(rng, 1, 8);
+            let t = usize_in(rng, 2, 16);
+            let w = usize_in(rng, 2, 30);
+            (d, t, w, rng.next_u64())
+        },
+        |&(d, t, w, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let mut counts = CountMatrices::new(d, t, w);
+            let mut tokens = Vec::new();
+            for di in 0..d {
+                for _ in 0..usize_in(&mut rng, 1, 40) {
+                    let wi = rng.gen_range(w) as u32;
+                    let ti = rng.gen_range(t);
+                    counts.inc(di, wi, ti);
+                    tokens.push((di, wi, ti));
+                }
+            }
+            counts.enable_sparse_index();
+            for _ in 0..300 {
+                let i = rng.gen_range(tokens.len());
+                let (di, wi, old) = tokens[i];
+                counts.dec(di, wi, old);
+                let new = rng.gen_range(t);
+                counts.inc(di, wi, new);
+                tokens[i] = (di, wi, new);
+            }
+            // check_invariants validates the lists against the counts...
+            counts.check_invariants().unwrap();
+            // ...and an explicit recomputation double-checks the checker.
+            let nz = counts.nz.as_ref().unwrap();
+            for di in 0..d {
+                let want: Vec<u16> = (0..t)
+                    .filter(|&ti| counts.ndt[di * t + ti] > 0)
+                    .map(|ti| ti as u16)
+                    .collect();
+                assert_eq!(nz.doc_nz[di], want, "doc {di} list mismatch");
+            }
+            for wi in 0..w {
+                let want: Vec<u16> = (0..t)
+                    .filter(|&ti| counts.ntw[wi * t + ti] > 0)
+                    .map(|ti| ti as u16)
+                    .collect();
+                assert_eq!(nz.word_nz[wi], want, "word {wi} list mismatch");
+            }
         },
     );
 }

@@ -1,0 +1,36 @@
+//! Minimal offline subset of `libc`: just the thread-CPU-clock surface
+//! `cfslda::util::timer` needs (`clock_gettime` + `CLOCK_THREAD_CPUTIME_ID`).
+//! Linux x86_64/aarch64 ABI.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_long = i64;
+pub type time_t = i64;
+
+/// POSIX per-thread CPU-time clock id (Linux).
+pub const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
+
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct timespec {
+    pub tv_sec: time_t,
+    pub tv_nsec: c_long,
+}
+
+extern "C" {
+    pub fn clock_gettime(clk_id: c_int, tp: *mut timespec) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_clock_ticks() {
+        let mut ts = timespec { tv_sec: 0, tv_nsec: 0 };
+        let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+        assert_eq!(rc, 0);
+        assert!(ts.tv_sec >= 0 && ts.tv_nsec >= 0);
+    }
+}
