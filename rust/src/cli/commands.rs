@@ -7,13 +7,17 @@ use crate::data::loader;
 use crate::data::partition::train_test_split;
 use crate::data::stats::{corpus_stats, label_report};
 use crate::data::synthetic::{generate_corpus, SyntheticSpec};
+use crate::data::tokenizer::TokenizerConfig;
+use crate::data::vocab::Vocab;
 use crate::experiments::{fig123, fig5, runner};
-use crate::model::persist::{load_model, save_model};
+use crate::model::persist::{load_model, load_model_full, save_model_with_vocab};
 use crate::sampler::{gibbs_predict, gibbs_train};
 use crate::parallel::leader::{run_with_engine, Algorithm};
 use crate::runtime::EngineHandle;
+use crate::serve::bench::{run_bench, BenchOptions};
+use crate::serve::server::{run_blocking, RunOptions};
 use crate::util::rng::Pcg64;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 pub const HELP: &str = "\
 cfslda — communication-free parallel supervised topic models
@@ -31,13 +35,37 @@ COMMANDS:
               [--train N] [--config CFG.json] [--engine auto|xla|native]
               [--kernel dense|sparse|auto] [--seed S] [--json OUT.json]
   train       Train a single sLDA model and save it
-              --data FILE.bow --out MODEL.bin [--config CFG.json] [--seed S]
-              [--kernel dense|sparse|auto]
+              --data FILE.bow|FILE.jsonl --out MODEL.bin [--config CFG.json]
+              [--seed S] [--kernel dense|sparse|auto] [--vocab TERMS.txt]
+              [--min-df F] [--max-df F]
+              A .jsonl corpus ({\"text\", \"response\"} lines) is tokenized
+              here and the learned vocabulary is persisted into the model,
+              enabling serve's /predict/text and named top-words. For .bow
+              corpora pass --vocab (one term per line, id order) to attach
+              terms.
   predict     Predict with a saved model
               --model MODEL.bin --data FILE.bow [--kernel dense|sparse|auto]
-              [--json OUT.json]
-  top-words   Show each topic's highest-probability token ids
+              [--jobs N] [--seed S] [--json OUT.json]
+              Documents are seeded individually (content-addressed), so the
+              output is identical for any --jobs and matches `cfslda serve`
+              for the same (model, seed, doc).
+  top-words   Show each topic's highest-probability terms (word ids when
+              the model has no vocabulary)
               --model MODEL.bin [--k N]
+  serve       Long-lived prediction server (DESIGN.md §Serving)
+              --model MODEL.bin [--addr HOST:PORT] [--port N]
+              [--workers N] [--max-batch N] [--max-wait-us N] [--cache N]
+              [--seed S] [--kernel K] [--config CFG.json] [--port-file F]
+              Endpoints: POST /predict {\"docs\": [[id, ...], ...]},
+              POST /predict/text {\"texts\": [\"...\"]}, POST /reload
+              [{\"path\": \"new.bin\"}], GET /healthz, GET /stats.
+              Quickstart:
+                cfslda train --data corpus.bow --out m.bin
+                cfslda serve --model m.bin --port 7878 &
+                curl -d '{\"docs\": [[0, 4, 4]]}' localhost:7878/predict
+  serve-bench Loopback load harness; writes BENCH_serve.json
+              --model MODEL.bin [--quick] [--workers-list 1,2,4]
+              [--batch-list 1,8] [--clients N] [--requests N] [--json F]
   experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
               --fig 6|7 [--scale F] [--runs N] [--engine E]
               [--kernel dense|sparse|auto] [--check]
@@ -234,10 +262,41 @@ pub fn cmd_figs(a: &Args) -> anyhow::Result<i32> {
     Ok(0)
 }
 
+/// Load a training corpus, producing a vocabulary when one is available:
+/// raw-text `.jsonl` corpora build it during tokenization; `.bow` corpora
+/// can attach one via `--vocab TERMS.txt` (one term per line, id order).
+fn load_train_corpus(a: &Args, data: &str) -> anyhow::Result<(crate::data::corpus::Corpus, Option<Vocab>)> {
+    if data.ends_with(".jsonl") {
+        let min_df = a.get_f64("min-df", 0.02)?; // the paper's 2% floor
+        let max_df = a.get_f64("max-df", 1.0)?;
+        let (corpus, vocab) =
+            loader::load_text_jsonl(Path::new(data), &TokenizerConfig::default(), min_df, max_df)?;
+        return Ok((corpus, Some(vocab)));
+    }
+    let corpus = loader::load_bow(Path::new(data))?;
+    let vocab = match a.get("vocab") {
+        None => None,
+        Some(vp) => {
+            let text = std::fs::read_to_string(vp)
+                .map_err(|e| anyhow::anyhow!("reading --vocab {vp}: {e}"))?;
+            let terms: Vec<String> =
+                text.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+            anyhow::ensure!(
+                terms.len() == corpus.vocab_size,
+                "--vocab has {} terms but the corpus vocab size is {}",
+                terms.len(),
+                corpus.vocab_size
+            );
+            Some(Vocab::from_terms(terms)?)
+        }
+    };
+    Ok((corpus, vocab))
+}
+
 pub fn cmd_train(a: &Args) -> anyhow::Result<i32> {
     let data = a.get("data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
     let out = a.get("out").ok_or_else(|| anyhow::anyhow!("--out is required"))?;
-    let corpus = loader::load_bow(Path::new(data))?;
+    let (corpus, vocab) = load_train_corpus(a, data)?;
     let mut cfg = match a.get("config") {
         Some(p) => ExperimentConfig::load(p)?,
         None => ExperimentConfig::default(),
@@ -251,7 +310,7 @@ pub fn cmd_train(a: &Args) -> anyhow::Result<i32> {
     let engine = engine_from_args(a)?;
     let mut rng = Pcg64::seed_from_u64(cfg.seed);
     let trained = gibbs_train::train(&corpus, &cfg, &engine, &mut rng)?;
-    save_model(&trained.model, Path::new(out))?;
+    save_model_with_vocab(&trained.model, vocab.as_ref(), Path::new(out))?;
     println!(
         "trained T={} on {} docs ({} tokens, {} sweeps): in-sample mse={:.4} acc={:.4}",
         trained.model.t,
@@ -261,7 +320,10 @@ pub fn cmd_train(a: &Args) -> anyhow::Result<i32> {
         trained.model.train_mse,
         trained.model.train_acc,
     );
-    println!("model saved to {out}");
+    match &vocab {
+        Some(v) => println!("model saved to {out} (with {}-term vocabulary)", v.len()),
+        None => println!("model saved to {out}"),
+    }
     Ok(0)
 }
 
@@ -279,12 +341,21 @@ pub fn cmd_predict(a: &Args) -> anyhow::Result<i32> {
     let mut cfg = ExperimentConfig::default();
     apply_kernel_flag(a, &mut cfg)?;
     let engine = engine_from_args(a)?;
-    let mut rng = Pcg64::seed_from_u64(a.get_u64("seed", 20170710)?);
+    let seed = a.get_u64("seed", 20170710)?;
+    let jobs = a.get_usize("jobs", 1)?;
+    anyhow::ensure!(jobs >= 1, "--jobs must be >= 1");
     let ys = corpus.responses();
-    let (pred, _) = gibbs_predict::predict_corpus_with_kernel(
-        &model, &corpus, &cfg.train, cfg.sampler.kernel, &engine, Some(&ys), &mut rng,
+    // Per-document seeded streams: the result is identical for any --jobs
+    // (and matches `cfslda serve` for the same model/seed/doc).
+    let (pred, _) = gibbs_predict::predict_corpus_parallel(
+        &model, &corpus, &cfg.train, cfg.sampler.kernel, &engine, Some(&ys), seed, jobs,
     )?;
-    println!("predicted {} documents: mse={:.4} acc={:.4}", pred.yhat.len(), pred.mse, pred.acc);
+    println!(
+        "predicted {} documents (jobs={jobs}): mse={:.4} acc={:.4}",
+        pred.yhat.len(),
+        pred.mse,
+        pred.acc
+    );
     if let Some(path) = a.get("json") {
         let v = Value::object(vec![
             ("yhat", Value::from_f64_slice(&pred.yhat)),
@@ -307,17 +378,97 @@ pub fn cmd_predict(a: &Args) -> anyhow::Result<i32> {
 pub fn cmd_top_words(a: &Args) -> anyhow::Result<i32> {
     let model_path = a.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
     let k = a.get_usize("k", 10)?;
-    let model = load_model(Path::new(model_path))?;
+    let (model, vocab) = load_model_full(Path::new(model_path))?;
     println!("model: T={} W={} rho={:.4} |eta|={:.3}", model.t, model.w, model.rho,
              model.eta.iter().map(|e| e * e).sum::<f64>().sqrt());
     for t in 0..model.t {
         let tops = model.top_words(t, k);
         let rendered: Vec<String> = tops
             .iter()
-            .map(|&w| format!("{w}:{:.4}", model.phi[w as usize * model.t + t]))
+            .map(|&w| {
+                let name = vocab
+                    .as_ref()
+                    .and_then(|v| v.term(w))
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| w.to_string());
+                format!("{name}:{:.4}", model.phi[w as usize * model.t + t])
+            })
             .collect();
         println!("topic {t:>3} (eta {:+.3}): {}", model.eta[t], rendered.join(" "));
     }
+    Ok(0)
+}
+
+/// Resolve serve-related flags onto the config (shared by serve/serve-bench).
+fn serve_cfg_from_args(a: &Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match a.get("config") {
+        Some(p) => ExperimentConfig::load(p)?,
+        None => ExperimentConfig::default(),
+    };
+    apply_kernel_flag(a, &mut cfg)?;
+    cfg.seed = a.get_u64("seed", cfg.seed)?;
+    if let Some(addr) = a.get("addr") {
+        cfg.serve.addr = addr.to_string();
+    }
+    if let Some(port) = a.get("port") {
+        let port: u16 = port.parse().map_err(|_| anyhow::anyhow!("--port expects 0..=65535"))?;
+        // Override only the port, preserving the host from --addr / config.
+        let host = cfg
+            .serve
+            .addr
+            .rsplit_once(':')
+            .map(|(h, _)| h.to_string())
+            .unwrap_or_else(|| "127.0.0.1".to_string());
+        cfg.serve.addr = format!("{host}:{port}");
+    }
+    cfg.serve.workers = a.get_usize("workers", cfg.serve.workers)?;
+    cfg.serve.max_batch = a.get_usize("max-batch", cfg.serve.max_batch)?;
+    cfg.serve.max_wait_us = a.get_u64("max-wait-us", cfg.serve.max_wait_us)?;
+    cfg.serve.cache_capacity = a.get_usize("cache", cfg.serve.cache_capacity)?;
+    crate::config::validate::validate(&cfg)?;
+    Ok(cfg)
+}
+
+pub fn cmd_serve(a: &Args) -> anyhow::Result<i32> {
+    let model = a.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let cfg = serve_cfg_from_args(a)?;
+    run_blocking(RunOptions {
+        model_path: PathBuf::from(model),
+        cfg,
+        port_file: a.get("port-file").map(PathBuf::from),
+    })?;
+    Ok(0)
+}
+
+fn parse_usize_list(s: &str, flag: &str) -> anyhow::Result<Vec<usize>> {
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("--{flag} expects comma-separated integers, got '{x}'"))
+        })
+        .collect()
+}
+
+pub fn cmd_serve_bench(a: &Args) -> anyhow::Result<i32> {
+    let model = a.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let cfg = serve_cfg_from_args(a)?;
+    let quick = a.has("quick");
+    let mut opts = BenchOptions::new(PathBuf::from(model), quick);
+    if let Some(w) = a.get("workers-list") {
+        opts.workers_list = parse_usize_list(w, "workers-list")?;
+    }
+    if let Some(b) = a.get("batch-list") {
+        opts.batch_list = parse_usize_list(b, "batch-list")?;
+    }
+    opts.clients = a.get_usize("clients", opts.clients)?;
+    opts.requests_per_client = a.get_usize("requests", opts.requests_per_client)?;
+    opts.doc_len = a.get_usize("doc-len", opts.doc_len)?;
+    opts.seed = cfg.seed;
+    if let Some(j) = a.get("json") {
+        opts.out_json = PathBuf::from(j);
+    }
+    run_bench(&cfg, &opts)?;
     Ok(0)
 }
 
@@ -330,6 +481,8 @@ pub fn dispatch(args: Args) -> anyhow::Result<i32> {
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
         Some("top-words") => cmd_top_words(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("figs") => cmd_figs(&args),
         Some("help") | None => {
@@ -402,6 +555,91 @@ mod tests {
         assert_eq!(v.get("yhat").unwrap().as_array().unwrap().len(), 150);
         assert_eq!(cmd_top_words(&parse(&format!("top-words --model {model} --k 3"))).unwrap(), 0);
         for f in [bow, model, preds] {
+            std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn predict_jobs_flag_is_deterministic_across_worker_counts() {
+        let bow = tmp("jobs.bow");
+        let model = tmp("jobs.model");
+        let p1 = tmp("jobs1.json");
+        let p3 = tmp("jobs3.json");
+        cmd_gen_data(&parse(&format!("gen-data --out {bow} --preset small --docs 120 --seed 4")))
+            .unwrap();
+        cmd_train(&parse(&format!("train --data {bow} --out {model} --engine native --seed 4")))
+            .unwrap();
+        cmd_predict(&parse(&format!(
+            "predict --model {model} --data {bow} --engine native --seed 11 --jobs 1 --json {p1}"
+        )))
+        .unwrap();
+        cmd_predict(&parse(&format!(
+            "predict --model {model} --data {bow} --engine native --seed 11 --jobs 3 --json {p3}"
+        )))
+        .unwrap();
+        let v1 = json::parse(&std::fs::read_to_string(&p1).unwrap()).unwrap();
+        let v3 = json::parse(&std::fs::read_to_string(&p3).unwrap()).unwrap();
+        assert_eq!(v1.get("yhat"), v3.get("yhat"));
+        for f in [bow, model, p1, p3] {
+            std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn train_from_text_jsonl_persists_vocab() {
+        let jsonl = tmp("text.jsonl");
+        let model = tmp("text.model");
+        let mut lines = String::new();
+        // enough repetition that every doc survives df pruning
+        for i in 0..24 {
+            let (text, y) = if i % 2 == 0 {
+                ("strong revenue growth and confident operational outlook ahead", 1.0)
+            } else {
+                ("weak revenue decline with operational risk and cautious outlook", -1.0)
+            };
+            lines.push_str(&format!("{{\"text\": \"{text} case{i}\", \"response\": {y}}}\n"));
+        }
+        std::fs::write(&jsonl, lines).unwrap();
+        let rc = cmd_train(&parse(&format!(
+            "train --data {jsonl} --out {model} --engine native --seed 3"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        let (m, vocab) = load_model_full(Path::new(&model)).unwrap();
+        let vocab = vocab.expect("jsonl training should persist the vocabulary");
+        assert_eq!(vocab.len(), m.w);
+        assert!(vocab.id("revenue").is_some());
+        // top-words renders with the vocabulary present
+        assert_eq!(cmd_top_words(&parse(&format!("top-words --model {model} --k 3"))).unwrap(), 0);
+        for f in [jsonl, model] {
+            std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn serve_bench_smoke_emits_json() {
+        let bow = tmp("sb.bow");
+        let model = tmp("sb.model");
+        let out = tmp("sb_bench.json");
+        cmd_gen_data(&parse(&format!("gen-data --out {bow} --preset small --docs 100 --seed 6")))
+            .unwrap();
+        cmd_train(&parse(&format!("train --data {bow} --out {model} --engine native --seed 6")))
+            .unwrap();
+        let rc = cmd_serve_bench(&parse(&format!(
+            "serve-bench --model {model} --workers-list 1,2 --batch-list 2 --clients 2 \
+             --requests 3 --doc-len 12 --json {out}"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        let v = json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("serve"));
+        let cells = v.get("results").unwrap().as_array().unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in cells {
+            assert!(c.get("docs_per_sec").unwrap().as_f64().unwrap() > 0.0);
+            assert!(c.get("p95_ms").unwrap().as_f64().unwrap().is_finite());
+        }
+        for f in [bow, model, out] {
             std::fs::remove_file(f).ok();
         }
     }

@@ -100,7 +100,11 @@ pub fn combine_median(local_preds: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
         for (i, p) in local_preds.iter().enumerate() {
             buf[i] = p[j];
         }
-        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a shard that emits NaN
+        // (e.g. a degenerate eta fit) must not panic the coordinator. NaNs
+        // order last, so they only influence the median when a majority of
+        // shards are already broken.
+        buf.sort_by(|a, b| a.total_cmp(b));
         out.push(if m % 2 == 1 {
             buf[m / 2]
         } else {
@@ -167,6 +171,20 @@ mod tests {
         let w = weights(CombineRule::Median, &[0.1], &[]).unwrap();
         assert_eq!(w, vec![1.0]);
         assert!(combine_median(&[]).is_err());
+    }
+
+    #[test]
+    fn median_survives_nan_predictions() {
+        // Regression: a NaN from one shard used to panic the
+        // partial_cmp().unwrap() sort. With total_cmp the NaN orders last
+        // and the median of the remaining healthy shards wins.
+        let preds = vec![vec![1.0, f64::NAN], vec![2.0, 10.0], vec![f64::NAN, 11.0]];
+        let out = combine_median(&preds).unwrap();
+        assert_eq!(out[0], 2.0); // [1, 2, NaN] -> middle = 2
+        assert_eq!(out[1], 11.0); // [10, 11, NaN] -> middle = 11
+        // even M: midpoint of two central finite values
+        let preds = vec![vec![1.0], vec![3.0], vec![f64::NAN], vec![2.0]];
+        assert_eq!(combine_median(&preds).unwrap(), vec![2.5]);
     }
 
     #[test]

@@ -192,6 +192,37 @@ impl Default for TrainConfig {
     }
 }
 
+/// Prediction-serving knobs (`cfslda serve`, DESIGN.md §Serving).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (printed at startup).
+    pub addr: String,
+    /// Prediction worker threads; 0 means one per available CPU.
+    pub workers: usize,
+    /// Micro-batch ceiling: a worker drains at most this many queued
+    /// documents into one prediction batch.
+    pub max_batch: usize,
+    /// How long a worker waits (microseconds) for more documents to
+    /// coalesce into a batch before predicting what it has. 0 disables
+    /// coalescing (every dequeue predicts immediately).
+    pub max_wait_us: u64,
+    /// Capacity of the doc-level LRU prediction cache (entries, keyed by
+    /// (model version, seed, token hash)). 0 disables the cache.
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 0,
+            max_batch: 32,
+            max_wait_us: 500,
+            cache_capacity: 4096,
+        }
+    }
+}
+
 /// Parallel topology.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParallelConfig {
@@ -214,6 +245,7 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub sampler: SamplerConfig,
     pub parallel: ParallelConfig,
+    pub serve: ServeConfig,
     pub engine: EngineKind,
     pub response: ResponseKind,
     pub seed: u64,
@@ -226,6 +258,7 @@ impl Default for ExperimentConfig {
             train: TrainConfig::default(),
             sampler: SamplerConfig::default(),
             parallel: ParallelConfig::default(),
+            serve: ServeConfig::default(),
             engine: EngineKind::Auto,
             response: ResponseKind::Continuous,
             seed: 20170710,
@@ -285,6 +318,13 @@ impl ExperimentConfig {
                 ("shards", Value::Number(self.parallel.shards as f64)),
                 ("threads", Value::Number(self.parallel.threads as f64)),
             ])),
+            ("serve", Value::object(vec![
+                ("addr", Value::String(self.serve.addr.clone())),
+                ("workers", Value::Number(self.serve.workers as f64)),
+                ("max_batch", Value::Number(self.serve.max_batch as f64)),
+                ("max_wait_us", Value::Number(self.serve.max_wait_us as f64)),
+                ("cache_capacity", Value::Number(self.serve.cache_capacity as f64)),
+            ])),
             ("engine", Value::String(self.engine.name().to_string())),
             ("response", Value::String(self.response.name().to_string())),
             ("seed", Value::Number(self.seed as f64)),
@@ -318,6 +358,18 @@ impl ExperimentConfig {
         if let Some(p) = v.get("parallel") {
             read_usize(p, "shards", &mut c.parallel.shards)?;
             read_usize(p, "threads", &mut c.parallel.threads)?;
+        }
+        if let Some(s) = v.get("serve") {
+            if let Some(a) = s.get("addr") {
+                c.serve.addr =
+                    a.as_str().context("serve.addr must be a string")?.to_string();
+            }
+            read_usize(s, "workers", &mut c.serve.workers)?;
+            read_usize(s, "max_batch", &mut c.serve.max_batch)?;
+            let mut wait = c.serve.max_wait_us as usize;
+            read_usize(s, "max_wait_us", &mut wait)?;
+            c.serve.max_wait_us = wait as u64;
+            read_usize(s, "cache_capacity", &mut c.serve.cache_capacity)?;
         }
         if let Some(e) = v.get("engine") {
             c.engine = EngineKind::parse(e.as_str().context("engine must be a string")?)?;
@@ -414,6 +466,24 @@ mod tests {
             assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
         }
         assert!(KernelKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn serve_section_roundtrips_and_defaults() {
+        let mut c = ExperimentConfig::default();
+        c.serve.addr = "0.0.0.0:9000".to_string();
+        c.serve.workers = 8;
+        c.serve.max_batch = 64;
+        c.serve.max_wait_us = 250;
+        c.serve.cache_capacity = 0;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        // partial json keeps the rest of the defaults
+        let c3 = ExperimentConfig::from_json(r#"{"serve": {"max_batch": 7}}"#).unwrap();
+        assert_eq!(c3.serve.max_batch, 7);
+        assert_eq!(c3.serve.addr, ServeConfig::default().addr);
+        assert!(ExperimentConfig::from_json(r#"{"serve": {"addr": 5}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"serve": {"workers": -1}}"#).is_err());
     }
 
     #[test]

@@ -67,6 +67,26 @@ pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
     if p.threads == 0 {
         bail!("parallel.threads must be >= 1");
     }
+    let s = &c.serve;
+    if s.addr.is_empty() {
+        bail!("serve.addr must not be empty (e.g. 127.0.0.1:7878)");
+    }
+    if s.max_batch == 0 || s.max_batch > 4096 {
+        bail!("serve.max_batch must be in 1..=4096, got {}", s.max_batch);
+    }
+    if s.max_wait_us > 5_000_000 {
+        bail!(
+            "serve.max_wait_us must be <= 5000000 (5s); a longer coalescing \
+             window than that is a latency bug, got {}",
+            s.max_wait_us
+        );
+    }
+    if s.workers > 1024 {
+        bail!("serve.workers must be <= 1024 (0 = one per CPU), got {}", s.workers);
+    }
+    if s.cache_capacity > 1 << 24 {
+        bail!("serve.cache_capacity must be <= {} entries, got {}", 1usize << 24, s.cache_capacity);
+    }
     Ok(())
 }
 
@@ -127,6 +147,25 @@ mod tests {
         assert!(validate(&c).is_err());
         let mut c = ExperimentConfig::quick();
         c.train.predict_burnin = c.train.predict_sweeps;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_serve_settings() {
+        let mut c = ExperimentConfig::quick();
+        c.serve.max_batch = 0;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.max_batch = 5000;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.addr = String::new();
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.max_wait_us = 10_000_000;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.workers = 4096;
         assert!(validate(&c).is_err());
     }
 

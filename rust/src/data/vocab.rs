@@ -87,6 +87,19 @@ impl Vocab {
     pub fn encode(&self, doc: &[String]) -> Vec<u32> {
         doc.iter().filter_map(|t| self.id(t)).collect()
     }
+
+    /// Rebuild a vocabulary from an ordered term list (ids = positions).
+    /// Errors on duplicate terms, which would silently shift ids.
+    pub fn from_terms<I: IntoIterator<Item = String>>(terms: I) -> anyhow::Result<Vocab> {
+        let mut v = Vocab::new();
+        let mut n = 0usize;
+        for t in terms {
+            let id = v.intern(&t);
+            anyhow::ensure!(id as usize == n, "duplicate vocabulary term '{t}'");
+            n += 1;
+        }
+        Ok(v)
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +152,14 @@ mod tests {
         assert_eq!(v.term(0), Some("a"));
         assert_eq!(v.term(1), Some("b"));
         assert_eq!(v.term(2), Some("c"));
+    }
+
+    #[test]
+    fn from_terms_roundtrip_and_duplicates() {
+        let v = Vocab::from_terms(["b", "a"].iter().map(|s| s.to_string())).unwrap();
+        assert_eq!(v.term(0), Some("b"));
+        assert_eq!(v.id("a"), Some(1));
+        assert!(Vocab::from_terms(["x", "x"].iter().map(|s| s.to_string())).is_err());
     }
 
     #[test]

@@ -12,7 +12,8 @@
 //! * **L3 (this crate)** — the coordinator: corpus pipeline, collapsed Gibbs
 //!   sampler, communication-free shard workers, the paper's three combination
 //!   rules (Naive / Simple Average / Weighted Average) plus the non-parallel
-//!   baseline, evaluation, experiment runners, CLI.
+//!   baseline, evaluation, experiment runners, CLI, and the batched,
+//!   hot-swappable prediction server ([`serve`]).
 //! * **L2 (python/compile/model.py)** — the dense sLDA algebra (ridge eta
 //!   solve, batched prediction, weighted combination, Gaussian response
 //!   log-densities) as JAX graphs, AOT-lowered to HLO text at build time.
@@ -51,6 +52,7 @@ pub mod parallel;
 pub mod regress;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod testkit;
 pub mod util;
 

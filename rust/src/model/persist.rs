@@ -1,18 +1,35 @@
 //! Model persistence: a compact binary format for trained [`SldaModel`]s,
-//! enabling the production `cfslda run --save-model` → `cfslda predict`
+//! enabling the production `cfslda train` → `cfslda predict`/`cfslda serve`
 //! workflow (train once, serve predictions later without retraining).
 //!
-//! Format (little-endian):
-//!   magic "CFSLDA1\0" | u32 t | u32 w | f64 rho | f64 alpha |
-//!   f64 train_mse | f64 train_acc | f64 eta[t] | f32 phi[w*t] | u64 fnv
+//! Two on-disk versions share one loader:
+//!
+//! * **v2 (current, `CFSLDA2`)** — little-endian:
+//!   magic "CFSLDA2\0" | u32 t | u32 w | f64 rho | f64 alpha |
+//!   f64 train_mse | f64 train_acc | f64 eta[t] | f32 phi[w*t] |
+//!   u32 vocab_len | vocab_len × (u32 byte_len | utf8 bytes) | u64 fnv
+//!   `vocab_len` is 0 when no vocabulary was persisted; otherwise it must
+//!   equal `w` (term `i` names word id `i`). The vocabulary is what lets
+//!   `cfslda serve` answer `POST /predict/text` and `top-words` render
+//!   real words instead of word ids.
+//! * **v1 (legacy, `CFSLDA1`)** — identical up to `phi`, no vocab section.
+//!   Still loaded transparently; [`save_model_v1`] keeps a writer around
+//!   for cross-version tests and downgrade tooling.
+//!
 //! The trailing FNV-1a checksum covers everything after the magic.
 
 use super::slda::SldaModel;
+use crate::data::vocab::Vocab;
 use anyhow::{bail, Context};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"CFSLDA1\0";
+const MAGIC_V1: &[u8; 8] = b"CFSLDA1\0";
+const MAGIC_V2: &[u8; 8] = b"CFSLDA2\0";
+
+/// Hard cap on a single persisted vocabulary term (bytes): anything larger
+/// is a corrupted length field, not a phrase.
+const MAX_TERM_BYTES: usize = 1 << 16;
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -23,9 +40,8 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Serialize a model to `path`.
-pub fn save_model(model: &SldaModel, path: &Path) -> anyhow::Result<()> {
-    let mut body: Vec<u8> = Vec::with_capacity(32 + model.eta.len() * 8 + model.phi.len() * 4);
+fn core_body(model: &SldaModel) -> Vec<u8> {
+    let mut body: Vec<u8> = Vec::with_capacity(40 + model.eta.len() * 8 + model.phi.len() * 4);
     body.extend_from_slice(&(model.t as u32).to_le_bytes());
     body.extend_from_slice(&(model.w as u32).to_le_bytes());
     body.extend_from_slice(&model.rho.to_le_bytes());
@@ -38,25 +54,80 @@ pub fn save_model(model: &SldaModel, path: &Path) -> anyhow::Result<()> {
     for &p in &model.phi {
         body.extend_from_slice(&p.to_le_bytes());
     }
+    body
+}
+
+fn write_file(path: &Path, magic: &[u8; 8], body: &[u8]) -> anyhow::Result<()> {
     let mut f = BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
     );
-    f.write_all(MAGIC)?;
-    f.write_all(&body)?;
-    f.write_all(&fnv1a(&body).to_le_bytes())?;
+    f.write_all(magic)?;
+    f.write_all(body)?;
+    f.write_all(&fnv1a(body).to_le_bytes())?;
     Ok(())
 }
 
-/// Load a model from `path`, verifying structure and checksum.
+/// Serialize a model to `path` (current format, no vocabulary payload).
+pub fn save_model(model: &SldaModel, path: &Path) -> anyhow::Result<()> {
+    save_model_with_vocab(model, None, path)
+}
+
+/// Serialize a model plus an optional vocabulary (current `CFSLDA2` format).
+/// When given, the vocabulary must have exactly `model.w` terms.
+pub fn save_model_with_vocab(
+    model: &SldaModel,
+    vocab: Option<&Vocab>,
+    path: &Path,
+) -> anyhow::Result<()> {
+    let mut body = core_body(model);
+    match vocab {
+        None => body.extend_from_slice(&0u32.to_le_bytes()),
+        Some(v) => {
+            anyhow::ensure!(
+                v.len() == model.w,
+                "vocabulary has {} terms but model vocab size is {}",
+                v.len(),
+                model.w
+            );
+            body.extend_from_slice(&(v.len() as u32).to_le_bytes());
+            for term in v.terms() {
+                let bytes = term.as_bytes();
+                anyhow::ensure!(bytes.len() <= MAX_TERM_BYTES, "vocabulary term too long");
+                body.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                body.extend_from_slice(bytes);
+            }
+        }
+    }
+    write_file(path, MAGIC_V2, &body)
+}
+
+/// Legacy `CFSLDA1` writer (no vocabulary section). Kept so cross-version
+/// loads stay covered by tests and old consumers can be fed downgrades.
+pub fn save_model_v1(model: &SldaModel, path: &Path) -> anyhow::Result<()> {
+    write_file(path, MAGIC_V1, &core_body(model))
+}
+
+/// Load a model from `path`, verifying structure and checksum. Accepts both
+/// format versions; any vocabulary payload is dropped (see
+/// [`load_model_full`]).
 pub fn load_model(path: &Path) -> anyhow::Result<SldaModel> {
+    load_model_full(path).map(|(m, _)| m)
+}
+
+/// Load a model and its persisted vocabulary (if any) from `path`.
+pub fn load_model_full(path: &Path) -> anyhow::Result<(SldaModel, Option<Vocab>)> {
     let mut f = BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
     );
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic).context("reading magic")?;
-    if &magic != MAGIC {
+    let version = if &magic == MAGIC_V1 {
+        1u32
+    } else if &magic == MAGIC_V2 {
+        2u32
+    } else {
         bail!("{path:?} is not a cfslda model (bad magic)");
-    }
+    };
     let mut rest = Vec::new();
     f.read_to_end(&mut rest)?;
     if rest.len() < 8 {
@@ -94,10 +165,33 @@ pub fn load_model(path: &Path) -> anyhow::Result<SldaModel> {
     for _ in 0..w * t {
         phi.push(f32::from_le_bytes(take(4)?.try_into().unwrap()));
     }
+    let vocab = if version >= 2 {
+        let vlen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+        if vlen == 0 {
+            None
+        } else {
+            if vlen != w {
+                bail!("vocabulary has {vlen} terms but model vocab size is {w}");
+            }
+            let mut terms = Vec::with_capacity(vlen);
+            for _ in 0..vlen {
+                let blen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
+                if blen > MAX_TERM_BYTES {
+                    bail!("implausible vocabulary term length {blen}");
+                }
+                let s = std::str::from_utf8(take(blen)?)
+                    .context("vocabulary term is not valid utf-8")?;
+                terms.push(s.to_string());
+            }
+            Some(Vocab::from_terms(terms)?)
+        }
+    } else {
+        None
+    };
     if off != body.len() {
         bail!("trailing bytes in model file");
     }
-    Ok(SldaModel { t, w, eta, phi, rho, alpha, train_mse, train_acc })
+    Ok((SldaModel { t, w, eta, phi, rho, alpha, train_mse, train_acc }, vocab))
 }
 
 #[cfg(test)]
@@ -125,18 +219,67 @@ mod tests {
         }
     }
 
+    fn vocab_of(w: usize) -> Vocab {
+        Vocab::from_terms((0..w).map(|i| format!("term_{i}"))).unwrap()
+    }
+
     #[test]
     fn roundtrip_exact() {
         let m = random_model(8, 100, 1);
         let p = tmp("rt.bin");
         save_model(&m, &p).unwrap();
-        let m2 = load_model(&p).unwrap();
+        let (m2, v2) = load_model_full(&p).unwrap();
         assert_eq!(m.t, m2.t);
         assert_eq!(m.w, m2.w);
         assert_eq!(m.eta, m2.eta);
         assert_eq!(m.phi, m2.phi);
         assert_eq!(m.rho, m2.rho);
         assert_eq!(m.train_acc, m2.train_acc);
+        assert!(v2.is_none());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn roundtrip_with_vocab() {
+        let m = random_model(4, 37, 5);
+        let v = vocab_of(37);
+        let p = tmp("rt_vocab.bin");
+        save_model_with_vocab(&m, Some(&v), &p).unwrap();
+        let (m2, v2) = load_model_full(&p).unwrap();
+        let v2 = v2.expect("vocab should roundtrip");
+        assert_eq!(m.phi, m2.phi);
+        assert_eq!(v2.len(), 37);
+        assert_eq!(v2.term(0), Some("term_0"));
+        assert_eq!(v2.id("term_36"), Some(36));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn vocab_size_mismatch_rejected_on_save() {
+        let m = random_model(4, 30, 6);
+        let v = vocab_of(29);
+        let p = tmp("mismatch.bin");
+        let err = save_model_with_vocab(&m, Some(&v), &p).unwrap_err().to_string();
+        assert!(err.contains("29"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        // Cross-version: a legacy CFSLDA1 file loads into the same model,
+        // with no vocabulary.
+        let m = random_model(6, 50, 7);
+        let p = tmp("v1.bin");
+        save_model_v1(&m, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], b"CFSLDA1\0");
+        let (m2, v2) = load_model_full(&p).unwrap();
+        assert_eq!(m.eta, m2.eta);
+        assert_eq!(m.phi, m2.phi);
+        assert!(v2.is_none());
+        // and the plain loader too
+        let m3 = load_model(&p).unwrap();
+        assert_eq!(m.phi, m3.phi);
         std::fs::remove_file(p).ok();
     }
 
@@ -155,6 +298,20 @@ mod tests {
     }
 
     #[test]
+    fn corruption_detected_in_vocab_section() {
+        let m = random_model(3, 20, 9);
+        let p = tmp("corrupt_vocab.bin");
+        save_model_with_vocab(&m, Some(&vocab_of(20)), &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 12] ^= 0x55; // inside the last vocab term
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_model_full(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
     fn truncation_and_bad_magic_detected() {
         let m = random_model(4, 30, 3);
         let p = tmp("trunc.bin");
@@ -162,8 +319,30 @@ mod tests {
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() - 20]).unwrap();
         assert!(load_model(&p).is_err());
+        // shorter than magic + checksum
+        std::fs::write(&p, &bytes[..10]).unwrap();
+        assert!(load_model(&p).is_err());
         std::fs::write(&p, b"NOTAMODL").unwrap();
         assert!(load_model(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn truncated_mid_body_with_valid_checksum_detected() {
+        // Re-checksum a truncated body: structure check must still catch it.
+        let m = random_model(4, 30, 4);
+        let p = tmp("restamp.bin");
+        save_model(&m, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let body = &bytes[8..bytes.len() - 8];
+        let cut = &body[..body.len() - 13];
+        let mut out = Vec::new();
+        out.extend_from_slice(&bytes[..8]);
+        out.extend_from_slice(cut);
+        out.extend_from_slice(&fnv1a(cut).to_le_bytes());
+        std::fs::write(&p, &out).unwrap();
+        let err = load_model(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
         std::fs::remove_file(p).ok();
     }
 }

@@ -14,8 +14,122 @@ use crate::config::schema::{KernelKind, TrainConfig};
 use crate::data::corpus::Corpus;
 use crate::model::slda::SldaModel;
 use crate::runtime::{EngineHandle, Prediction};
-use crate::sampler::kernel::{self, PredictState};
-use crate::util::rng::Pcg64;
+use crate::sampler::kernel::{self, PredictState, SamplerKernel};
+use crate::util::pool::scoped_map;
+use crate::util::rng::{splitmix64, Pcg64};
+
+/// FNV-1a hash of a token sequence (little-endian id bytes). Identifies a
+/// document's *content*: the serving cache key and the per-document RNG
+/// stream are both derived from it, so a given (model, seed, doc) always
+/// produces the same prediction regardless of batch composition.
+pub fn token_hash(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in tokens {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Seed of a document's private RNG stream: mixes the base seed with the
+/// doc's [`token_hash`]. Used by the parallel prediction path and the serve
+/// batcher so per-document draws are independent of worker/batch layout.
+pub fn doc_stream_seed(seed: u64, token_hash: u64) -> u64 {
+    let mut s = seed.wrapping_add(token_hash.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    splitmix64(&mut s)
+}
+
+/// Reusable single-document inference state: the kernel instance plus all
+/// per-document scratch buffers, allocated once and reused across documents
+/// (and, in the serving subsystem, across requests). `phi_cum` — the
+/// precomputed per-word sparse smoothing table — is deliberately *not* owned
+/// here: it is per-model, built once by [`kernel::build_phi_cum`] and shared
+/// by every scratch instance (the serve registry keeps it resident).
+pub struct DocInfer {
+    t: usize,
+    kern: Box<dyn SamplerKernel>,
+    ndt: Vec<u32>,
+    acc: Vec<f64>,
+    probs: Vec<f64>,
+    zd: Vec<u16>,
+}
+
+impl DocInfer {
+    /// Allocate scratch for `t` topics; `Auto` resolves by topic count.
+    pub fn new(kind: KernelKind, t: usize) -> Self {
+        DocInfer {
+            t,
+            kern: kernel::make_kernel(kind, t),
+            ndt: vec![0u32; t],
+            acc: vec![0.0f64; t],
+            probs: vec![0.0f64; t],
+            zd: Vec::new(),
+        }
+    }
+
+    pub fn topics(&self) -> usize {
+        self.t
+    }
+
+    /// Infer one document's averaged empirical topic distribution into
+    /// `out` (length T). Identical operation/RNG-consumption sequence to
+    /// the historical corpus loop, so the sequential path stays
+    /// byte-for-byte deterministic. Empty documents yield a zero row.
+    pub fn infer_doc(
+        &mut self,
+        model: &SldaModel,
+        phi_cum: &[f64],
+        cfg: &TrainConfig,
+        tokens: &[u32],
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        let t = self.t;
+        debug_assert_eq!(t, model.t);
+        debug_assert_eq!(out.len(), t);
+        let nd = tokens.len();
+        if nd == 0 {
+            out.iter_mut().for_each(|z| *z = 0.0);
+            return;
+        }
+        self.ndt.iter_mut().for_each(|c| *c = 0);
+        self.acc.iter_mut().for_each(|a| *a = 0.0);
+        // init: sample from phi alone (ndt empty -> prior-proportional)
+        self.zd.clear();
+        for &wi in tokens {
+            let phi = model.phi_row(wi);
+            for ti in 0..t {
+                self.probs[ti] = phi[ti] as f64;
+            }
+            let z = rng.sample_discrete(&self.probs);
+            self.ndt[z] += 1;
+            self.zd.push(z as u16);
+        }
+        let mut samples = 0usize;
+        for sweep in 0..cfg.predict_sweeps {
+            let mut ps = PredictState {
+                t,
+                phi: &model.phi,
+                phi_cum,
+                ndt: &mut self.ndt,
+                rng: &mut *rng,
+            };
+            self.kern.sweep_doc_predict(&mut ps, tokens, &mut self.zd);
+            if sweep >= cfg.predict_burnin {
+                for ti in 0..t {
+                    self.acc[ti] += self.ndt[ti] as f64;
+                }
+                samples += 1;
+            }
+        }
+        let denom = (samples.max(1) * nd) as f64;
+        for ti in 0..t {
+            out[ti] = (self.acc[ti] / denom) as f32;
+        }
+    }
+}
 
 /// Infer averaged empirical topic distributions for every document with an
 /// explicit kernel choice. Returns a row-major [D, T] matrix. The kernels
@@ -30,52 +144,72 @@ pub fn infer_zbar_with_kernel(
     let t = model.t;
     let d = corpus.num_docs();
     let mut zbar = vec![0.0f32; d * t];
-    let mut ndt = vec![0u32; t];
-    let mut acc = vec![0.0f64; t];
-    let mut probs = vec![0.0f64; t];
-    let mut kern = kernel::make_kernel(kernel_kind, t);
+    let mut scratch = DocInfer::new(kernel_kind, t);
     // Per-word cumulative smoothing masses alpha * phi (shared by both
     // kernels; phi is frozen for the whole call).
     let phi_cum = kernel::build_phi_cum(&model.phi, t, model.alpha);
 
     for (di, doc) in corpus.docs.iter().enumerate() {
-        let nd = doc.len();
-        ndt.iter_mut().for_each(|c| *c = 0);
-        acc.iter_mut().for_each(|a| *a = 0.0);
-        // init: sample from phi alone (ndt empty -> prior-proportional)
-        let mut zd: Vec<u16> = Vec::with_capacity(nd);
-        for &wi in &doc.tokens {
-            let phi = model.phi_row(wi);
-            for ti in 0..t {
-                probs[ti] = phi[ti] as f64;
-            }
-            let z = rng.sample_discrete(&probs);
-            ndt[z] += 1;
-            zd.push(z as u16);
-        }
-        let mut samples = 0usize;
-        for sweep in 0..cfg.predict_sweeps {
-            let mut ps = PredictState {
-                t,
-                phi: &model.phi,
-                phi_cum: &phi_cum,
-                ndt: &mut ndt,
-                rng: &mut *rng,
-            };
-            kern.sweep_doc_predict(&mut ps, &doc.tokens, &mut zd);
-            if sweep >= cfg.predict_burnin {
-                for ti in 0..t {
-                    acc[ti] += ndt[ti] as f64;
-                }
-                samples += 1;
-            }
-        }
-        let denom = (samples.max(1) * nd) as f64;
-        for ti in 0..t {
-            zbar[di * t + ti] = (acc[ti] / denom) as f32;
-        }
+        scratch.infer_doc(model, &phi_cum, cfg, &doc.tokens, rng, &mut zbar[di * t..(di + 1) * t]);
     }
     zbar
+}
+
+/// Parallel, per-document-seeded zbar inference: documents are split into
+/// `jobs` contiguous ranges over [`scoped_map`] workers, each with its own
+/// [`DocInfer`] scratch, and every document draws from a private RNG stream
+/// seeded by [`doc_stream_seed`]`(seed, `[`token_hash`]`(doc))`. The result
+/// is therefore identical for any `jobs` value — and identical to what the
+/// serving subsystem computes for the same (model, seed, doc).
+pub fn infer_zbar_parallel(
+    model: &SldaModel,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    kernel_kind: KernelKind,
+    seed: u64,
+    jobs: usize,
+) -> Vec<f32> {
+    let t = model.t;
+    let d = corpus.num_docs();
+    if d == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.max(1).min(d);
+    let per = (d + jobs - 1) / jobs;
+    let phi_cum = kernel::build_phi_cum(&model.phi, t, model.alpha);
+    let ranges: Vec<(usize, usize)> = (0..jobs)
+        .map(|j| (j * per, ((j + 1) * per).min(d)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect();
+    let chunks = scoped_map(&ranges, jobs, |_, &(lo, hi)| {
+        let mut scratch = DocInfer::new(kernel_kind, t);
+        let mut out = vec![0.0f32; (hi - lo) * t];
+        for di in lo..hi {
+            let tokens = &corpus.docs[di].tokens;
+            let mut rng = Pcg64::seed_from_u64(doc_stream_seed(seed, token_hash(tokens)));
+            let row = &mut out[(di - lo) * t..(di - lo + 1) * t];
+            scratch.infer_doc(model, &phi_cum, cfg, tokens, &mut rng, row);
+        }
+        out
+    });
+    chunks.concat()
+}
+
+/// [`infer_zbar_parallel`] plus the batched engine prediction call.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_corpus_parallel(
+    model: &SldaModel,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    kernel_kind: KernelKind,
+    engine: &EngineHandle,
+    labels: Option<&[f64]>,
+    seed: u64,
+    jobs: usize,
+) -> anyhow::Result<(Prediction, Vec<f32>)> {
+    let zbar = infer_zbar_parallel(model, corpus, cfg, kernel_kind, seed, jobs);
+    let pred = engine.predict(&zbar, &model.eta, labels, model.t)?;
+    Ok((pred, zbar))
 }
 
 /// [`infer_zbar_with_kernel`] with the `auto` kernel heuristic.
@@ -184,6 +318,75 @@ mod tests {
         assert_eq!(pred.mse, 0.0);
         assert_eq!(pred.acc, 0.0);
         assert_eq!(zbar.len(), ds.test.num_docs() * out.model.t);
+    }
+
+    #[test]
+    fn parallel_inference_independent_of_jobs() {
+        // Per-document seeding: the same (model, seed, doc) must yield the
+        // same zbar row for any worker count — the serving determinism
+        // guarantee (DESIGN.md §Serving).
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(31);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let engine = EngineHandle::native();
+        let out = train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+        let z1 = infer_zbar_parallel(
+            &out.model, &ds.test, &cfg().train, KernelKind::Auto, 77, 1,
+        );
+        let z4 = infer_zbar_parallel(
+            &out.model, &ds.test, &cfg().train, KernelKind::Auto, 77, 4,
+        );
+        let z9 = infer_zbar_parallel(
+            &out.model, &ds.test, &cfg().train, KernelKind::Auto, 77, 9,
+        );
+        assert_eq!(z1, z4);
+        assert_eq!(z1, z9);
+        // and kernel-independent, like the sequential path
+        let zs = infer_zbar_parallel(
+            &out.model, &ds.test, &cfg().train, KernelKind::Sparse, 77, 3,
+        );
+        assert_eq!(z1, zs);
+        // rows are still distributions
+        let t = out.model.t;
+        for d in 0..ds.test.num_docs() {
+            let s: f32 = z1[d * t..(d + 1) * t].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "doc {d} zbar sums to {s}");
+        }
+    }
+
+    #[test]
+    fn parallel_prediction_reorders_with_documents() {
+        // Content-addressed seeding: moving a document does not change its
+        // prediction.
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(33);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let engine = EngineHandle::native();
+        let out = train(&ds.train, &cfg(), &engine, &mut rng).unwrap();
+        let fwd: Vec<usize> = (0..ds.test.num_docs()).collect();
+        let rev: Vec<usize> = fwd.iter().rev().copied().collect();
+        let (pf, _) = predict_corpus_parallel(
+            &out.model, &ds.test.select(&fwd), &cfg().train, KernelKind::Auto,
+            &engine, None, 5, 2,
+        )
+        .unwrap();
+        let (pr, _) = predict_corpus_parallel(
+            &out.model, &ds.test.select(&rev), &cfg().train, KernelKind::Auto,
+            &engine, None, 5, 3,
+        )
+        .unwrap();
+        let rf: Vec<f64> = pf.yhat.iter().rev().copied().collect();
+        assert_eq!(rf, pr.yhat);
+    }
+
+    #[test]
+    fn token_hash_and_stream_seed_are_stable() {
+        let a = token_hash(&[1, 2, 3]);
+        assert_eq!(a, token_hash(&[1, 2, 3]));
+        assert_ne!(a, token_hash(&[3, 2, 1]));
+        assert_ne!(a, token_hash(&[1, 2]));
+        assert_eq!(doc_stream_seed(7, a), doc_stream_seed(7, a));
+        assert_ne!(doc_stream_seed(7, a), doc_stream_seed(8, a));
     }
 
     #[test]

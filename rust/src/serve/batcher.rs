@@ -1,0 +1,400 @@
+//! Micro-batching prediction queue.
+//!
+//! Connection handlers enqueue one work item per document and block on a
+//! per-request channel; a pool of worker threads drains the shared queue in
+//! batches of up to `max_batch`, waiting up to `max_wait_us` for
+//! concurrent requests to coalesce (the pipelined/batched inference idea of
+//! Yan et al.'s *Towards Big Topic Modeling*, applied to serving). Each
+//! worker owns a reusable [`DocInfer`] scratch, so the hot path allocates
+//! nothing beyond the zbar row.
+//!
+//! **Determinism.** Every document draws from a private RNG stream seeded
+//! by `doc_stream_seed(seed, token_hash(doc))` against an immutable
+//! [`ModelEntry`]. Predictions therefore depend only on
+//! (model version, seed, document content) — never on batch composition,
+//! queue order, worker count, or cache state. Repeating a request returns
+//! byte-identical responses.
+
+use crate::config::schema::{KernelKind, TrainConfig};
+use crate::sampler::gibbs_predict::{doc_stream_seed, token_hash, DocInfer};
+use crate::serve::registry::{ModelEntry, Registry};
+use crate::util::rng::Pcg64;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serving counters, shared by the batcher and the HTTP layer
+/// (`GET /stats` renders them).
+#[derive(Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub predict_docs: AtomicU64,
+    pub batches: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub errors: AtomicU64,
+    pub reloads: AtomicU64,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Batcher knobs (a resolved subset of `config::schema::ServeConfig`).
+#[derive(Clone)]
+pub struct BatcherConfig {
+    /// Worker thread count (>= 1, already resolved from `workers = 0`).
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub kernel: KernelKind,
+    pub train: TrainConfig,
+}
+
+/// One document's prediction outcome.
+#[derive(Clone, Debug)]
+pub struct DocOut {
+    pub yhat: f64,
+    pub model_version: u64,
+    pub cached: bool,
+}
+
+struct WorkItem {
+    tokens: Vec<u32>,
+    seed: u64,
+    slot: usize,
+    tx: mpsc::Sender<(usize, anyhow::Result<DocOut>)>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<WorkItem>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The worker pool + queue handle. Dropping it drains and joins cleanly.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(
+        cfg: BatcherConfig,
+        registry: Arc<Registry>,
+        stats: Arc<ServeStats>,
+    ) -> Batcher {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let registry = Arc::clone(&registry);
+                let stats = Arc::clone(&stats);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || worker_loop(&shared, &registry, &stats, &cfg))
+            })
+            .collect();
+        Batcher { shared, workers }
+    }
+
+    /// Enqueue a request's documents and block until every one resolves.
+    /// Per-document errors (e.g. a token id outside the current model's
+    /// vocabulary) come back as `Err` in that document's slot.
+    pub fn submit(&self, docs: Vec<Vec<u32>>, seed: u64) -> Vec<anyhow::Result<DocOut>> {
+        let n = docs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for (slot, tokens) in docs.into_iter().enumerate() {
+                q.push_back(WorkItem { tokens, seed, slot, tx: tx.clone() });
+            }
+        }
+        self.shared.cv.notify_all();
+        drop(tx);
+        let mut out: Vec<Option<anyhow::Result<DocOut>>> = (0..n).map(|_| None).collect();
+        let mut got = 0usize;
+        while got < n {
+            match rx.recv() {
+                Ok((slot, res)) => {
+                    if out[slot].replace(res).is_none() {
+                        got += 1;
+                    }
+                }
+                Err(_) => break, // workers gone: shutdown mid-request
+            }
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow::anyhow!("server shutting down"))))
+            .collect()
+    }
+
+    /// Queue depth right now (stats surface).
+    pub fn backlog(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    shared: &Shared,
+    registry: &Registry,
+    stats: &ServeStats,
+    cfg: &BatcherConfig,
+) {
+    let mut scratch: Option<DocInfer> = None;
+    let mut zrow: Vec<f32> = Vec::new();
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) && q.is_empty() {
+                    return;
+                }
+                if !q.is_empty() {
+                    break;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+            // Coalesce: hold the batch open briefly so concurrent requests
+            // ride along, up to the batch ceiling.
+            if cfg.max_wait_us > 0 && q.len() < cfg.max_batch {
+                let deadline = Instant::now() + Duration::from_micros(cfg.max_wait_us);
+                while q.len() < cfg.max_batch && !shared.shutdown.load(Ordering::SeqCst) {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, timeout) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+                    q = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+            }
+            let take = q.len().min(cfg.max_batch);
+            q.drain(..take).collect::<Vec<WorkItem>>()
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        // One entry per batch: a hot-swap between batches is picked up
+        // here; within a batch the model is immutable.
+        let entry = registry.current();
+        let t = entry.model.t;
+        if scratch.as_ref().map(|s| s.topics()) != Some(t) {
+            scratch = Some(DocInfer::new(cfg.kernel, t));
+            zrow = vec![0.0f32; t];
+        }
+        let infer = scratch.as_mut().unwrap();
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.predict_docs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        for item in batch {
+            // Per-doc failures surface as the request's 4xx and are
+            // counted once there (the HTTP layer), not per document.
+            let res = predict_one(&entry, infer, &mut zrow, cfg, registry, stats, &item);
+            // Receiver may have given up (client disconnect): ignore.
+            let _ = item.tx.send((item.slot, res));
+        }
+    }
+}
+
+fn predict_one(
+    entry: &Arc<ModelEntry>,
+    infer: &mut DocInfer,
+    zrow: &mut [f32],
+    cfg: &BatcherConfig,
+    registry: &Registry,
+    stats: &ServeStats,
+    item: &WorkItem,
+) -> anyhow::Result<DocOut> {
+    let model = &entry.model;
+    anyhow::ensure!(!item.tokens.is_empty(), "empty document");
+    if let Some(&w) = item.tokens.iter().find(|&&w| w as usize >= model.w) {
+        anyhow::bail!("token id {w} >= model vocab size {}", model.w);
+    }
+    let hash = token_hash(&item.tokens);
+    let key = (entry.version, item.seed, hash);
+    if let Some(yhat) = registry.cache_get(key) {
+        stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(DocOut { yhat, model_version: entry.version, cached: true });
+    }
+    stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+    let mut rng = Pcg64::seed_from_u64(doc_stream_seed(item.seed, hash));
+    infer.infer_doc(model, &entry.phi_cum, &cfg.train, &item.tokens, &mut rng, zrow);
+    let yhat = model.predict_zbar(zrow);
+    registry.cache_put(key, yhat);
+    Ok(DocOut { yhat, model_version: entry.version, cached: false })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::persist::save_model_with_vocab;
+    use crate::model::slda::SldaModel;
+    use crate::util::pool::scoped_map;
+
+    fn tiny_model(seed: u64) -> SldaModel {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let (t, w) = (6usize, 40usize);
+        // positive phi rows so every token has mass somewhere
+        SldaModel {
+            t,
+            w,
+            eta: (0..t).map(|_| rng.next_gaussian()).collect(),
+            phi: (0..w * t).map(|_| 0.01 + rng.next_f32()).collect(),
+            rho: 0.5,
+            alpha: 0.4,
+            train_mse: 0.2,
+            train_acc: 0.8,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_batcher_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn quick_train() -> TrainConfig {
+        TrainConfig { sweeps: 5, burnin: 1, eta_every: 1, predict_sweeps: 6, predict_burnin: 2 }
+    }
+
+    fn start(
+        name: &str,
+        workers: usize,
+        max_batch: usize,
+        cache: usize,
+    ) -> (Batcher, Arc<Registry>, Arc<ServeStats>, std::path::PathBuf) {
+        let p = tmp(name);
+        save_model_with_vocab(&tiny_model(5), None, &p).unwrap();
+        let registry = Arc::new(Registry::open(&p, cache).unwrap());
+        let stats = Arc::new(ServeStats::new());
+        let cfg = BatcherConfig {
+            workers,
+            max_batch,
+            max_wait_us: 200,
+            kernel: KernelKind::Auto,
+            train: quick_train(),
+        };
+        let b = Batcher::start(cfg, Arc::clone(&registry), Arc::clone(&stats));
+        (b, registry, stats, p)
+    }
+
+    fn docs(n: usize, seed: u64) -> Vec<Vec<u32>> {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        (0..n).map(|_| (0..12).map(|_| rng.gen_range(40) as u32).collect()).collect()
+    }
+
+    #[test]
+    fn submit_resolves_every_doc_deterministically() {
+        let (b, _reg, stats, p) = start("det", 3, 4, 0);
+        let d = docs(17, 1);
+        let r1: Vec<f64> =
+            b.submit(d.clone(), 9).into_iter().map(|r| r.unwrap().yhat).collect();
+        let r2: Vec<f64> =
+            b.submit(d.clone(), 9).into_iter().map(|r| r.unwrap().yhat).collect();
+        assert_eq!(r1.len(), 17);
+        assert!(r1.iter().all(|y| y.is_finite()));
+        assert_eq!(r1, r2, "same (model, seed, docs) must repeat exactly");
+        // a different seed changes the draw
+        let r3: Vec<f64> =
+            b.submit(d, 10).into_iter().map(|r| r.unwrap().yhat).collect();
+        assert_ne!(r1, r3);
+        assert_eq!(stats.predict_docs.load(Ordering::Relaxed), 17 * 3);
+        assert!(stats.batches.load(Ordering::Relaxed) >= 3 * 5); // ceil(17/4) each
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn concurrent_submissions_coalesce_and_stay_deterministic() {
+        let (b, _reg, stats, p) = start("conc", 4, 8, 0);
+        let base = docs(6, 2);
+        let solo: Vec<Vec<f64>> = base
+            .iter()
+            .map(|d| {
+                b.submit(vec![d.clone()], 3).into_iter().map(|r| r.unwrap().yhat).collect()
+            })
+            .collect();
+        // hammer from 8 threads concurrently; every thread sends the same
+        // docs and must get the same answers back in its own slots
+        let ids: Vec<usize> = (0..8).collect();
+        let all = scoped_map(&ids, 8, |_, _| {
+            b.submit(base.clone(), 3)
+                .into_iter()
+                .map(|r| r.unwrap().yhat)
+                .collect::<Vec<f64>>()
+        });
+        for got in &all {
+            for (i, y) in got.iter().enumerate() {
+                assert_eq!(*y, solo[i][0], "doc {i} drifted under concurrency");
+            }
+        }
+        assert!(stats.errors.load(Ordering::Relaxed) == 0);
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn cache_serves_repeats_and_batch_errors_are_per_doc() {
+        let (b, _reg, stats, p) = start("cache", 2, 8, 64);
+        let d = docs(3, 3);
+        let first: Vec<DocOut> = b.submit(d.clone(), 1).into_iter().map(|r| r.unwrap()).collect();
+        assert!(first.iter().all(|o| !o.cached));
+        let second: Vec<DocOut> = b.submit(d.clone(), 1).into_iter().map(|r| r.unwrap()).collect();
+        assert!(second.iter().all(|o| o.cached));
+        assert_eq!(
+            first.iter().map(|o| o.yhat).collect::<Vec<_>>(),
+            second.iter().map(|o| o.yhat).collect::<Vec<_>>()
+        );
+        assert_eq!(stats.cache_hits.load(Ordering::Relaxed), 3);
+
+        // one bad doc (token out of vocab) fails alone; empty doc too
+        let mixed = vec![d[0].clone(), vec![9999], Vec::new(), d[1].clone()];
+        let res = b.submit(mixed, 1);
+        assert!(res[0].is_ok());
+        assert!(res[1].is_err());
+        assert!(res[2].is_err());
+        assert!(res[3].is_ok());
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn hot_swap_between_batches_changes_version_not_liveness() {
+        let (b, reg, _stats, p) = start("swap", 2, 4, 16);
+        let p2 = tmp("swap2");
+        save_model_with_vocab(&tiny_model(77), None, &p2).unwrap();
+        let d = docs(4, 4);
+        let v1: Vec<DocOut> = b.submit(d.clone(), 2).into_iter().map(|r| r.unwrap()).collect();
+        assert!(v1.iter().all(|o| o.model_version == 1));
+        reg.reload(Some(&p2)).unwrap();
+        let v2: Vec<DocOut> = b.submit(d, 2).into_iter().map(|r| r.unwrap()).collect();
+        assert!(v2.iter().all(|o| o.model_version == 2));
+        assert!(v2.iter().all(|o| !o.cached), "cache must not leak across versions");
+        drop(b);
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(p2).ok();
+    }
+}

@@ -1,0 +1,269 @@
+//! `cfslda serve-bench`: self-driving loopback load harness.
+//!
+//! For every (server workers × request batch size) cell it boots a fresh
+//! in-process [`Server`] on an ephemeral port, hammers it from a pool of
+//! keep-alive clients, and records throughput (docs/s) plus request
+//! latency quantiles. Results render as a table and land in
+//! `BENCH_serve.json` at the invocation directory (the repo root in CI),
+//! next to `BENCH_gibbs_hotpath.json`.
+
+use crate::config::json::{self, Value};
+use crate::config::schema::ExperimentConfig;
+use crate::model::persist::load_model_full;
+use crate::serve::http::Client;
+use crate::serve::server::Server;
+use crate::util::pool::scoped_map;
+use crate::util::rng::Pcg64;
+use crate::util::stats::quantile;
+use crate::util::timer::Stopwatch;
+use std::path::{Path, PathBuf};
+
+/// One sweep cell's knobs.
+#[derive(Clone, Debug)]
+pub struct BenchOptions {
+    pub model_path: PathBuf,
+    /// Server worker-pool sizes to sweep (the scaling axis).
+    pub workers_list: Vec<usize>,
+    /// Documents per request to sweep (the batching axis).
+    pub batch_list: Vec<usize>,
+    /// Concurrent client connections per cell.
+    pub clients: usize,
+    /// Requests each client issues per cell.
+    pub requests_per_client: usize,
+    /// Tokens per synthetic document.
+    pub doc_len: usize,
+    pub seed: u64,
+    pub out_json: PathBuf,
+}
+
+impl BenchOptions {
+    pub fn new(model_path: PathBuf, quick: bool) -> Self {
+        BenchOptions {
+            model_path,
+            workers_list: if quick { vec![1, 2] } else { vec![1, 2, 4] },
+            batch_list: vec![1, 8],
+            clients: 4,
+            requests_per_client: if quick { 12 } else { 100 },
+            doc_len: 48,
+            seed: 20170710,
+            out_json: PathBuf::from("BENCH_serve.json"),
+        }
+    }
+}
+
+/// One cell's measurements.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub workers: usize,
+    pub batch: usize,
+    pub requests: usize,
+    pub docs: usize,
+    pub wall_secs: f64,
+    pub docs_per_sec: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+fn gen_docs(rng: &mut Pcg64, n: usize, len: usize, vocab: usize) -> Vec<Vec<u32>> {
+    (0..n).map(|_| (0..len).map(|_| rng.gen_range(vocab) as u32).collect()).collect()
+}
+
+fn docs_body(docs: &[Vec<u32>], seed: u64) -> String {
+    let rows: Vec<Value> = docs
+        .iter()
+        .map(|d| Value::Array(d.iter().map(|&t| Value::Number(t as f64)).collect()))
+        .collect();
+    json::to_string(&Value::object(vec![
+        ("docs", Value::Array(rows)),
+        ("seed", Value::Number(seed as f64)),
+    ]))
+}
+
+fn run_cell(
+    cfg_base: &ExperimentConfig,
+    opts: &BenchOptions,
+    vocab: usize,
+    workers: usize,
+    batch: usize,
+) -> anyhow::Result<CellResult> {
+    let mut cfg = cfg_base.clone();
+    cfg.serve.addr = "127.0.0.1:0".to_string();
+    cfg.serve.workers = workers;
+    // measure sampler throughput, not cache hits: distinct docs + no cache
+    cfg.serve.cache_capacity = 0;
+    let server = Server::start(&opts.model_path, &cfg)?;
+    let addr = server.local_addr().to_string();
+
+    // Pre-render one request body per (client, request): distinct docs so
+    // every prediction does real sampling work.
+    let bodies: Vec<Vec<String>> = (0..opts.clients)
+        .map(|c| {
+            let mut rng = Pcg64::seed_from_u64(
+                opts.seed ^ (c as u64) << 32 ^ (workers as u64) << 8 ^ batch as u64,
+            );
+            (0..opts.requests_per_client)
+                .map(|_| {
+                    let docs = gen_docs(&mut rng, batch, opts.doc_len, vocab);
+                    docs_body(&docs, opts.seed)
+                })
+                .collect()
+        })
+        .collect();
+
+    let sw = Stopwatch::new();
+    let per_client: Vec<anyhow::Result<Vec<f64>>> =
+        scoped_map(&bodies, opts.clients.max(1), |_, reqs| {
+            let mut client = Client::connect(&addr)?;
+            let mut lats = Vec::with_capacity(reqs.len());
+            for body in reqs {
+                let t = Stopwatch::new();
+                let (status, resp) = client.request("POST", "/predict", body)?;
+                anyhow::ensure!(status == 200, "predict returned {status}: {resp}");
+                lats.push(t.elapsed_secs());
+            }
+            Ok(lats)
+        });
+    let wall_secs = sw.elapsed_secs();
+    server.stop();
+
+    let mut lats = Vec::new();
+    for r in per_client {
+        lats.extend(r?);
+    }
+    let requests = lats.len();
+    let docs = requests * batch;
+    Ok(CellResult {
+        workers,
+        batch,
+        requests,
+        docs,
+        wall_secs,
+        docs_per_sec: docs as f64 / wall_secs.max(1e-9),
+        p50_ms: quantile(&lats, 0.50) * 1e3,
+        p95_ms: quantile(&lats, 0.95) * 1e3,
+        p99_ms: quantile(&lats, 0.99) * 1e3,
+    })
+}
+
+fn render_table(results: &[CellResult]) -> String {
+    let mut s = String::from("== bench: serve (loopback) ==\n");
+    s.push_str(&format!(
+        "{:<8} {:>6} {:>9} {:>8} {:>12} {:>9} {:>9} {:>9}\n",
+        "workers", "batch", "requests", "docs", "docs/s", "p50(ms)", "p95(ms)", "p99(ms)"
+    ));
+    for r in results {
+        s.push_str(&format!(
+            "{:<8} {:>6} {:>9} {:>8} {:>12.1} {:>9.2} {:>9.2} {:>9.2}\n",
+            r.workers, r.batch, r.requests, r.docs, r.docs_per_sec, r.p50_ms, r.p95_ms, r.p99_ms
+        ));
+    }
+    s
+}
+
+fn results_json(opts: &BenchOptions, t: usize, w: usize, results: &[CellResult]) -> Value {
+    let cells: Vec<Value> = results
+        .iter()
+        .map(|r| {
+            Value::object(vec![
+                ("workers", Value::Number(r.workers as f64)),
+                ("batch", Value::Number(r.batch as f64)),
+                ("requests", Value::Number(r.requests as f64)),
+                ("docs", Value::Number(r.docs as f64)),
+                ("wall_secs", Value::Number(r.wall_secs)),
+                ("docs_per_sec", Value::Number(r.docs_per_sec)),
+                ("p50_ms", Value::Number(r.p50_ms)),
+                ("p95_ms", Value::Number(r.p95_ms)),
+                ("p99_ms", Value::Number(r.p99_ms)),
+            ])
+        })
+        .collect();
+    Value::object(vec![
+        ("bench", Value::String("serve".into())),
+        ("model", Value::object(vec![
+            ("path", Value::String(opts.model_path.display().to_string())),
+            ("topics", Value::Number(t as f64)),
+            ("vocab", Value::Number(w as f64)),
+        ])),
+        ("clients", Value::Number(opts.clients as f64)),
+        ("requests_per_client", Value::Number(opts.requests_per_client as f64)),
+        ("doc_len", Value::Number(opts.doc_len as f64)),
+        ("seed", Value::Number(opts.seed as f64)),
+        ("results", Value::Array(cells)),
+    ])
+}
+
+/// Run the full sweep; prints the table, writes `opts.out_json`, and
+/// returns the parsed results for programmatic use.
+pub fn run_bench(
+    cfg_base: &ExperimentConfig,
+    opts: &BenchOptions,
+) -> anyhow::Result<Vec<CellResult>> {
+    anyhow::ensure!(opts.clients > 0, "need at least one client");
+    anyhow::ensure!(opts.requests_per_client > 0, "need at least one request per client");
+    anyhow::ensure!(!opts.workers_list.is_empty() && !opts.batch_list.is_empty(), "empty sweep");
+    anyhow::ensure!(opts.batch_list.iter().all(|&b| b >= 1), "batch sizes must be >= 1");
+    let (model, _) = load_model_full(Path::new(&opts.model_path))?;
+    let (t, w) = (model.t, model.w);
+    drop(model);
+    let mut results = Vec::new();
+    for &workers in &opts.workers_list {
+        for &batch in &opts.batch_list {
+            let cell = run_cell(cfg_base, opts, w, workers, batch)?;
+            log::info!(
+                "serve-bench workers={} batch={}: {:.1} docs/s p95={:.2}ms",
+                cell.workers, cell.batch, cell.docs_per_sec, cell.p95_ms
+            );
+            results.push(cell);
+        }
+    }
+    println!("{}", render_table(&results));
+    let v = results_json(opts, t, w, &results);
+    std::fs::write(&opts.out_json, json::to_string_pretty(&v))?;
+    println!("wrote {}", opts.out_json.display());
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn docs_body_is_valid_protocol_json() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let docs = gen_docs(&mut rng, 3, 5, 100);
+        let body = docs_body(&docs, 42);
+        let parsed = crate::serve::protocol::parse_predict(&body).unwrap();
+        assert_eq!(parsed.docs, docs);
+        assert_eq!(parsed.seed, Some(42));
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let cell = CellResult {
+            workers: 2,
+            batch: 8,
+            requests: 10,
+            docs: 80,
+            wall_secs: 0.5,
+            docs_per_sec: 160.0,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+        };
+        let table = render_table(&[cell.clone()]);
+        assert!(table.contains("docs/s"));
+        assert!(table.contains("160.0"));
+        let opts = BenchOptions::new(PathBuf::from("m.bin"), true);
+        let v = results_json(&opts, 8, 100, &[cell]);
+        let parsed = json::parse(&json::to_string_pretty(&v)).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
+        assert_eq!(
+            parsed.get("results").unwrap().as_array().unwrap()[0]
+                .get("docs")
+                .unwrap()
+                .as_usize(),
+            Some(80)
+        );
+    }
+}

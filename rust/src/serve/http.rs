@@ -1,0 +1,307 @@
+//! Minimal HTTP/1.1 framing over `std::net` (no hyper/tokio in the
+//! vendored-offline build).
+//!
+//! Exactly what the serving subsystem needs and nothing more: request
+//! parsing with `Content-Length` bodies, keep-alive by default, JSON
+//! responses, and a tiny keep-alive client used by `cfslda serve-bench`
+//! and the integration tests. Chunked transfer encoding, pipelining and
+//! TLS are intentionally out of scope — the server sits behind loopback
+//! or an internal load balancer.
+
+use anyhow::Context;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Cap on the total request-head size (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 64 * 1024;
+/// Cap on a request body; prediction batches are JSON token-id arrays, so
+/// 64 MiB is far beyond any sane batch.
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Lower-cased header names, trimmed values.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Did the client ask to drop the connection after this exchange?
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").map(|v| v.eq_ignore_ascii_case("close")).unwrap_or(false)
+    }
+
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not valid utf-8")
+    }
+}
+
+/// Read one `\n`-terminated line, enforcing `limit` *before* buffering —
+/// unlike `read_line`, a multi-gigabyte line errors out instead of being
+/// accumulated into memory first. `Ok(None)` = clean EOF before any byte.
+fn read_line_limited<R: BufRead>(r: &mut R, limit: usize) -> anyhow::Result<Option<String>> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let used = {
+            let available = r.fill_buf()?;
+            if available.is_empty() {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                anyhow::bail!("connection closed mid-line");
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    anyhow::ensure!(buf.len() + pos + 1 <= limit, "request head too large");
+                    buf.extend_from_slice(&available[..=pos]);
+                    pos + 1
+                }
+                None => {
+                    anyhow::ensure!(buf.len() + available.len() <= limit, "request head too large");
+                    buf.extend_from_slice(available);
+                    available.len()
+                }
+            }
+        };
+        r.consume(used);
+        if buf.last() == Some(&b'\n') {
+            let s = String::from_utf8(buf).context("request head is not valid utf-8")?;
+            return Ok(Some(s));
+        }
+    }
+}
+
+/// Read one request off the stream. `Ok(None)` means the peer closed the
+/// connection cleanly between requests; timeouts surface as `Err` carrying
+/// an [`std::io::Error`] (see [`is_timeout_io`]).
+pub fn read_request<R: BufRead>(r: &mut R) -> anyhow::Result<Option<Request>> {
+    let line = match read_line_limited(r, MAX_HEAD_BYTES)? {
+        None => return Ok(None),
+        Some(l) => l,
+    };
+    let mut head_bytes = line.len();
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let path = parts.next().context("request line missing path")?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    anyhow::ensure!(version.starts_with("HTTP/1."), "unsupported protocol '{version}'");
+
+    let mut headers = Vec::new();
+    loop {
+        let h = read_line_limited(r, MAX_HEAD_BYTES - head_bytes)?
+            .context("connection closed mid-headers")?;
+        head_bytes += h.len();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+
+    let clen = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse::<usize>())
+        .transpose()
+        .context("bad content-length header")?
+        .unwrap_or(0);
+    anyhow::ensure!(clen <= MAX_BODY_BYTES, "request body too large ({clen} bytes)");
+    let mut body = vec![0u8; clen];
+    r.read_exact(&mut body).context("reading request body")?;
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+/// Is this a read-timeout? The connection handler's idle peek treats
+/// those as "keep-alive, poll again", not as failures.
+pub fn is_timeout_io(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock)
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a JSON response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Tiny keep-alive HTTP client (serve-bench load generator + tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> anyhow::Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { reader: BufReader::new(stream) })
+    }
+
+    /// Issue one request and read the full response. Returns (status, body).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> anyhow::Result<(u16, String)> {
+        {
+            let s = self.reader.get_mut();
+            write!(
+                s,
+                "{method} {path} HTTP/1.1\r\nHost: cfslda\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+                body.len()
+            )?;
+            s.write_all(body.as_bytes())?;
+            s.flush()?;
+        }
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed connection before responding");
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .with_context(|| format!("bad status line '{}'", line.trim_end()))?
+            .parse()
+            .context("non-numeric status code")?;
+        let mut clen = 0usize;
+        loop {
+            let mut h = String::new();
+            let n = self.reader.read_line(&mut h)?;
+            anyhow::ensure!(n > 0, "server closed connection mid-headers");
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    clen = v.trim().parse().context("bad response content-length")?;
+                }
+            }
+        }
+        let mut body = vec![0u8; clen];
+        self.reader.read_exact(&mut body)?;
+        Ok((status, String::from_utf8(body).context("response body not utf-8")?))
+    }
+}
+
+/// One-shot convenience: connect, request, return (status, body).
+pub fn request_once(addr: &str, method: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)> {
+    Client::connect(addr)?.request(method, path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> anyhow::Result<Option<Request>> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            "POST /predict HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\n{\"docs\":[]}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert_eq!(req.body_str().unwrap(), "{\"docs\":[]}");
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_get_without_body_and_close() {
+        let req = parse("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.body.len(), 0);
+        assert!(req.wants_close());
+        assert_eq!(req.header("connection"), Some("close"));
+    }
+
+    #[test]
+    fn eof_between_requests_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(parse("GARBAGE\r\n\r\n").is_err()); // no path
+        assert!(parse("GET / SPDY/3\r\n\r\n").is_err()); // bad protocol
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: zebra\r\n\r\n").is_err());
+        // body shorter than content-length
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nxx").is_err());
+        // truncated mid-headers
+        assert!(parse("GET / HTTP/1.1\r\nHost: x\r\n").is_err());
+    }
+
+    #[test]
+    fn oversized_head_rejected() {
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..9000 {
+            raw.push_str(&format!("X-Pad-{i}: aaaaaaaa\r\n"));
+        }
+        raw.push_str("\r\n");
+        let err = parse(&raw).unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn response_framing() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "{\"ok\":true}", true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 11\r\n"));
+        assert!(s.contains("Connection: keep-alive\r\n"));
+        assert!(s.ends_with("{\"ok\":true}"));
+        let mut out = Vec::new();
+        write_response(&mut out, 404, "{}", false).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn timeout_detection() {
+        assert!(is_timeout_io(&std::io::Error::new(std::io::ErrorKind::WouldBlock, "poll")));
+        assert!(is_timeout_io(&std::io::Error::new(std::io::ErrorKind::TimedOut, "slow")));
+        assert!(!is_timeout_io(&std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof")));
+    }
+}

@@ -1,0 +1,28 @@
+//! Long-lived prediction serving (`cfslda serve`, DESIGN.md §Serving).
+//!
+//! The batch `cfslda predict` command reloads the model and rebuilds its
+//! sparse smoothing tables on every invocation; this subsystem keeps them
+//! resident behind a tiny HTTP/1.1 server and turns prediction into a
+//! steady-state service:
+//!
+//! * [`http`] — request/response framing over `std::net` (no async
+//!   runtime in the vendored-offline build) plus the keep-alive client
+//!   used by the bench harness and tests.
+//! * [`protocol`] — JSON wire types for the five endpoints.
+//! * [`registry`] — versioned model slots, atomic hot-swap on `/reload`
+//!   (in-flight requests drain on the old `Arc`), and the doc-level LRU
+//!   prediction cache.
+//! * [`batcher`] — the micro-batching queue: concurrent requests coalesce
+//!   into prediction batches (`max_batch` / `max_wait_us`) executed by a
+//!   worker pool with per-document seeded RNG streams, so responses are
+//!   deterministic for a given (model, seed, doc).
+//! * [`server`] — accept loop, routing, endpoint handlers.
+//! * [`bench`] — the `serve-bench` loopback load harness
+//!   (`BENCH_serve.json`).
+
+pub mod batcher;
+pub mod bench;
+pub mod http;
+pub mod protocol;
+pub mod registry;
+pub mod server;

@@ -1,0 +1,189 @@
+//! Wire types for the serving endpoints: JSON parsing/rendering on top of
+//! `config::json` (no serde in the vendored-offline build).
+//!
+//! Request shapes:
+//!
+//! * `POST /predict`      — `{"docs": [[1, 4, 4], [7]], "seed": 42}`
+//!   (token-id bag-of-words rows; `seed` optional).
+//! * `POST /predict/text` — `{"texts": ["strong revenue growth", ...],
+//!   "seed": 42}` (requires a model persisted with its vocabulary).
+//! * `POST /reload`       — `{"path": "new_model.bin"}` or `{}` to reload
+//!   the currently-served path.
+//!
+//! Responses are JSON objects; errors are `{"error": "..."}` with a 4xx/5xx
+//! status.
+
+use crate::config::json::{self, Value};
+use anyhow::Context;
+
+/// Ceiling on documents per request: keeps one request from monopolizing
+/// the batcher queue; split larger workloads across requests.
+pub const MAX_DOCS_PER_REQUEST: usize = 4096;
+/// Ceiling on tokens per document.
+pub const MAX_TOKENS_PER_DOC: usize = 1 << 20;
+
+/// Parsed body of `POST /predict`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictRequest {
+    pub docs: Vec<Vec<u32>>,
+    pub seed: Option<u64>,
+}
+
+/// Parsed body of `POST /predict/text`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TextRequest {
+    pub texts: Vec<String>,
+    pub seed: Option<u64>,
+}
+
+fn parse_seed(v: &Value) -> anyhow::Result<Option<u64>> {
+    match v.get("seed") {
+        None => Ok(None),
+        Some(s) => {
+            let n = s.as_i64().context("'seed' must be an integer")?;
+            anyhow::ensure!(n >= 0, "'seed' must be non-negative");
+            Ok(Some(n as u64))
+        }
+    }
+}
+
+/// Parse and validate a `POST /predict` body.
+pub fn parse_predict(body: &str) -> anyhow::Result<PredictRequest> {
+    let v = json::parse(body).context("invalid json")?;
+    let docs_v = v
+        .get("docs")
+        .and_then(|d| d.as_array())
+        .context("body must be an object with a 'docs' array")?;
+    anyhow::ensure!(!docs_v.is_empty(), "'docs' must not be empty");
+    anyhow::ensure!(
+        docs_v.len() <= MAX_DOCS_PER_REQUEST,
+        "'docs' has {} rows; max {MAX_DOCS_PER_REQUEST} per request",
+        docs_v.len()
+    );
+    let mut docs = Vec::with_capacity(docs_v.len());
+    for (i, row) in docs_v.iter().enumerate() {
+        let row = row.as_array().with_context(|| format!("doc {i} must be a token array"))?;
+        anyhow::ensure!(!row.is_empty(), "doc {i} is empty");
+        anyhow::ensure!(
+            row.len() <= MAX_TOKENS_PER_DOC,
+            "doc {i} has {} tokens; max {MAX_TOKENS_PER_DOC}",
+            row.len()
+        );
+        let tokens: Option<Vec<u32>> = row
+            .iter()
+            .map(|t| t.as_usize().and_then(|u| u32::try_from(u).ok()))
+            .collect();
+        let tokens =
+            tokens.with_context(|| format!("doc {i} has a non-integer or oversized token id"))?;
+        docs.push(tokens);
+    }
+    Ok(PredictRequest { docs, seed: parse_seed(&v)? })
+}
+
+/// Parse and validate a `POST /predict/text` body.
+pub fn parse_text(body: &str) -> anyhow::Result<TextRequest> {
+    let v = json::parse(body).context("invalid json")?;
+    let texts_v = v
+        .get("texts")
+        .and_then(|t| t.as_array())
+        .context("body must be an object with a 'texts' array")?;
+    anyhow::ensure!(!texts_v.is_empty(), "'texts' must not be empty");
+    anyhow::ensure!(
+        texts_v.len() <= MAX_DOCS_PER_REQUEST,
+        "'texts' has {} rows; max {MAX_DOCS_PER_REQUEST} per request",
+        texts_v.len()
+    );
+    let mut texts = Vec::with_capacity(texts_v.len());
+    for (i, t) in texts_v.iter().enumerate() {
+        texts.push(
+            t.as_str().with_context(|| format!("text {i} must be a string"))?.to_string(),
+        );
+    }
+    Ok(TextRequest { texts, seed: parse_seed(&v)? })
+}
+
+/// Parse a `POST /reload` body; `None` means "reload the current path".
+/// An empty body is allowed and means the same as `{}`.
+pub fn parse_reload(body: &str) -> anyhow::Result<Option<String>> {
+    if body.trim().is_empty() {
+        return Ok(None);
+    }
+    let v = json::parse(body).context("invalid json")?;
+    match v.get("path") {
+        None => Ok(None),
+        Some(p) => Ok(Some(p.as_str().context("'path' must be a string")?.to_string())),
+    }
+}
+
+/// Render a prediction response.
+pub fn predict_response(yhat: &[f64], model_version: u64, cached: usize) -> String {
+    let v = Value::object(vec![
+        ("yhat", Value::from_f64_slice(yhat)),
+        ("model_version", Value::Number(model_version as f64)),
+        ("count", Value::Number(yhat.len() as f64)),
+        ("cached", Value::Number(cached as f64)),
+    ]);
+    json::to_string(&v)
+}
+
+/// Render an error body.
+pub fn error_response(msg: &str) -> String {
+    json::to_string(&Value::object(vec![("error", Value::String(msg.to_string()))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_parse_roundtrip() {
+        let r = parse_predict(r#"{"docs": [[1, 2, 2], [7]], "seed": 9}"#).unwrap();
+        assert_eq!(r.docs, vec![vec![1, 2, 2], vec![7]]);
+        assert_eq!(r.seed, Some(9));
+        let r = parse_predict(r#"{"docs": [[0]]}"#).unwrap();
+        assert_eq!(r.seed, None);
+    }
+
+    #[test]
+    fn predict_parse_rejects_bad_shapes() {
+        assert!(parse_predict("not json").is_err());
+        assert!(parse_predict(r#"{"docs": []}"#).is_err());
+        assert!(parse_predict(r#"{"docs": [[]]}"#).is_err());
+        assert!(parse_predict(r#"{"docs": [[1.5]]}"#).is_err());
+        assert!(parse_predict(r#"{"docs": [[-3]]}"#).is_err());
+        assert!(parse_predict(r#"{"docs": "x"}"#).is_err());
+        assert!(parse_predict(r#"{"docs": [[1]], "seed": -4}"#).is_err());
+        assert!(parse_predict(r#"{"docs": [[1]], "seed": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn text_parse() {
+        let r = parse_text(r#"{"texts": ["strong growth", "weak outlook"]}"#).unwrap();
+        assert_eq!(r.texts.len(), 2);
+        assert!(parse_text(r#"{"texts": []}"#).is_err());
+        assert!(parse_text(r#"{"texts": [5]}"#).is_err());
+        assert!(parse_text(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn reload_parse() {
+        assert_eq!(parse_reload("").unwrap(), None);
+        assert_eq!(parse_reload("{}").unwrap(), None);
+        assert_eq!(parse_reload(r#"{"path": "m.bin"}"#).unwrap(), Some("m.bin".into()));
+        assert!(parse_reload(r#"{"path": 5}"#).is_err());
+        assert!(parse_reload("][").is_err());
+    }
+
+    #[test]
+    fn response_rendering() {
+        let s = predict_response(&[0.5, -1.25], 3, 1);
+        let v = crate::config::json::parse(&s).unwrap();
+        assert_eq!(v.get("model_version").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("cached").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("yhat").unwrap().as_array().unwrap().len(), 2);
+        let e = error_response("boom \"quoted\"");
+        let v = crate::config::json::parse(&e).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+}

@@ -1,0 +1,423 @@
+//! The `cfslda serve` HTTP server: accept loop, routing, endpoints.
+//!
+//! Endpoints (DESIGN.md §Serving):
+//!
+//! * `GET  /healthz`      — liveness + current model version.
+//! * `GET  /stats`        — serving counters, cache + batcher state.
+//! * `POST /predict`      — BoW batches through the micro-batcher.
+//! * `POST /predict/text` — raw text, tokenized against the persisted
+//!   vocabulary (400 when the model was saved without one).
+//! * `POST /reload`       — atomic hot-swap to a new (or re-read) model
+//!   file; in-flight requests finish on the old version.
+//!
+//! Threading: one detached handler thread per connection (keep-alive), all
+//! prediction work funneled through the shared [`Batcher`] pool, so
+//! connection count does not multiply sampler threads.
+
+use crate::config::schema::ExperimentConfig;
+use crate::config::json::{self, Value};
+use crate::data::tokenizer::{tokenize, TokenizerConfig};
+use crate::serve::batcher::{Batcher, BatcherConfig, DocOut, ServeStats};
+use crate::serve::http::{self, Request};
+use crate::serve::protocol;
+use crate::serve::registry::Registry;
+use crate::util::pool::num_cpus;
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Shared per-server state, one `Arc` per connection thread.
+struct State {
+    registry: Arc<Registry>,
+    batcher: Batcher,
+    stats: Arc<ServeStats>,
+    started: Instant,
+    default_seed: u64,
+    workers: usize,
+    tok_cfg: TokenizerConfig,
+}
+
+/// A running server; dropping (or [`Server::stop`]) shuts the accept loop
+/// down and joins the batcher workers.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    state: Arc<State>,
+}
+
+impl Server {
+    /// Bind `cfg.serve.addr`, load the model, spin up the worker pool and
+    /// the accept loop. Returns once the socket is listening.
+    pub fn start(model_path: &Path, cfg: &ExperimentConfig) -> anyhow::Result<Server> {
+        crate::config::validate::validate(cfg)?;
+        let registry =
+            Arc::new(Registry::open(model_path, cfg.serve.cache_capacity)?);
+        let stats = Arc::new(ServeStats::new());
+        let workers = if cfg.serve.workers == 0 { num_cpus() } else { cfg.serve.workers };
+        let batcher = Batcher::start(
+            BatcherConfig {
+                workers,
+                max_batch: cfg.serve.max_batch,
+                max_wait_us: cfg.serve.max_wait_us,
+                kernel: cfg.sampler.kernel,
+                train: cfg.train.clone(),
+            },
+            Arc::clone(&registry),
+            Arc::clone(&stats),
+        );
+        let state = Arc::new(State {
+            registry,
+            batcher,
+            stats,
+            started: Instant::now(),
+            default_seed: cfg.seed,
+            workers,
+            tok_cfg: TokenizerConfig::default(),
+        });
+
+        let listener = TcpListener::bind(&cfg.serve.addr)
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.serve.addr))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let state = Arc::clone(&state);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || accept_loop(listener, state, shutdown))
+        };
+        Ok(Server { addr, shutdown, accept: Some(accept), state })
+    }
+
+    /// The actually-bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current model version (diagnostics).
+    pub fn model_version(&self) -> u64 {
+        self.state.registry.current().version
+    }
+
+    /// Stop accepting and join the accept loop. Existing keep-alive
+    /// connections drop at their next poll tick.
+    pub fn stop(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<State>, shutdown: Arc<AtomicBool>) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let state = Arc::clone(&state);
+                let shutdown = Arc::clone(&shutdown);
+                std::thread::spawn(move || handle_conn(stream, state, shutdown));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::warn!("accept error: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) {
+    // Short read timeout => idle keep-alive connections poll the shutdown
+    // flag a few times per second instead of pinning a thread forever.
+    stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
+    stream.set_nodelay(true).ok();
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut writer = write_half;
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Idle wait happens *here*, on the buffered peek: a read timeout
+        // between requests just re-polls the shutdown flag. Once the first
+        // byte of a request has arrived, a timeout inside read_request is
+        // a protocol error (we never resync a half-read stream).
+        {
+            use std::io::BufRead;
+            match reader.fill_buf() {
+                Ok(buf) if buf.is_empty() => return, // peer closed
+                Ok(_) => {}
+                Err(e) if http::is_timeout_io(&e) => continue,
+                Err(_) => return,
+            }
+        }
+        match http::read_request(&mut reader) {
+            Ok(None) => return, // peer closed
+            Ok(Some(req)) => {
+                state.stats.requests.fetch_add(1, Ordering::Relaxed);
+                let keep_alive = !req.wants_close();
+                let (status, body) = route(&state, &req);
+                if status >= 400 {
+                    state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                if http::write_response(&mut writer, status, &body, keep_alive).is_err() {
+                    return;
+                }
+                if !keep_alive {
+                    return;
+                }
+            }
+            Err(e) => {
+                state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_response(
+                    &mut writer,
+                    400,
+                    &protocol::error_response(&format!("{e:#}")),
+                    false,
+                );
+                return;
+            }
+        }
+    }
+}
+
+fn route(state: &State, req: &Request) -> (u16, String) {
+    let res = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_healthz(state),
+        ("GET", "/stats") => handle_stats(state),
+        ("POST", "/predict") => handle_predict(state, req),
+        ("POST", "/predict/text") => handle_predict_text(state, req),
+        ("POST", "/reload") => handle_reload(state, req),
+        ("GET", _) | ("POST", _) => {
+            return (404, protocol::error_response("no such endpoint"))
+        }
+        _ => return (405, protocol::error_response("method not allowed")),
+    };
+    match res {
+        Ok(body) => (200, body),
+        Err(e) => (e.status, protocol::error_response(&e.msg)),
+    }
+}
+
+/// Handler error carrying the HTTP status to respond with.
+struct HttpError {
+    status: u16,
+    msg: String,
+}
+
+fn bad_request(e: impl std::fmt::Display) -> HttpError {
+    HttpError { status: 400, msg: format!("{e}") }
+}
+
+fn server_error(e: impl std::fmt::Display) -> HttpError {
+    HttpError { status: 500, msg: format!("{e}") }
+}
+
+fn handle_healthz(state: &State) -> Result<String, HttpError> {
+    let entry = state.registry.current();
+    let v = Value::object(vec![
+        ("status", Value::String("ok".into())),
+        ("model_version", Value::Number(entry.version as f64)),
+        ("topics", Value::Number(entry.model.t as f64)),
+        ("vocab", Value::Number(entry.model.w as f64)),
+        ("has_vocab_terms", Value::Bool(entry.vocab.is_some())),
+    ]);
+    Ok(json::to_string(&v))
+}
+
+fn handle_stats(state: &State) -> Result<String, HttpError> {
+    let s = &state.stats;
+    let entry = state.registry.current();
+    let batches = s.batches.load(Ordering::Relaxed);
+    let docs = s.predict_docs.load(Ordering::Relaxed);
+    let mean_batch =
+        if batches > 0 { docs as f64 / batches as f64 } else { 0.0 };
+    let versions: Vec<Value> = state
+        .registry
+        .versions()
+        .into_iter()
+        .map(|(v, p)| {
+            Value::object(vec![
+                ("version", Value::Number(v as f64)),
+                ("path", Value::String(p.display().to_string())),
+            ])
+        })
+        .collect();
+    let v = Value::object(vec![
+        ("uptime_secs", Value::Number(state.started.elapsed().as_secs_f64())),
+        ("model_version", Value::Number(entry.version as f64)),
+        ("workers", Value::Number(state.workers as f64)),
+        ("requests", Value::Number(s.requests.load(Ordering::Relaxed) as f64)),
+        ("predict_docs", Value::Number(docs as f64)),
+        ("batches", Value::Number(batches as f64)),
+        ("mean_batch", Value::Number(mean_batch)),
+        ("cache_hits", Value::Number(s.cache_hits.load(Ordering::Relaxed) as f64)),
+        ("cache_misses", Value::Number(s.cache_misses.load(Ordering::Relaxed) as f64)),
+        ("cache_entries", Value::Number(state.registry.cache_len() as f64)),
+        ("backlog", Value::Number(state.batcher.backlog() as f64)),
+        ("errors", Value::Number(s.errors.load(Ordering::Relaxed) as f64)),
+        ("reloads", Value::Number(s.reloads.load(Ordering::Relaxed) as f64)),
+        ("versions", Value::Array(versions)),
+    ]);
+    Ok(json::to_string(&v))
+}
+
+/// Attempts per request when a hot-swap races the batcher: predictions
+/// are deterministic and cached, so a retry is cheap and converges as
+/// soon as one full pass runs against a single model version.
+const SWAP_RACE_RETRIES: usize = 3;
+
+/// Submit the docs and render a response **if** every document resolved
+/// under the same model version (`want` additionally pins which one, for
+/// the text path whose token ids are only meaningful under the vocabulary
+/// they were encoded with). `Ok(None)` = a hot swap landed mid-request;
+/// the caller re-submits.
+fn submit_uniform(
+    state: &State,
+    docs: &[Vec<u32>],
+    seed: u64,
+    want: Option<u64>,
+) -> Result<Option<String>, HttpError> {
+    let results = state.batcher.submit(docs.to_vec(), seed);
+    let mut yhat = Vec::with_capacity(results.len());
+    let mut version: Option<u64> = None;
+    let mut cached = 0usize;
+    for (i, r) in results.into_iter().enumerate() {
+        match r {
+            Ok(out) => {
+                match version {
+                    None => version = Some(out.model_version),
+                    Some(v) if v != out.model_version => return Ok(None),
+                    Some(_) => {}
+                }
+                yhat.push(out.yhat);
+                cached += out.cached as usize;
+            }
+            Err(e) => return Err(bad_request(format!("doc {i}: {e:#}"))),
+        }
+    }
+    let version = version.unwrap_or(0);
+    if let Some(w) = want {
+        if w != version {
+            return Ok(None);
+        }
+    }
+    Ok(Some(protocol::predict_response(&yhat, version, cached)))
+}
+
+fn handle_predict(state: &State, req: &Request) -> Result<String, HttpError> {
+    let body = req.body_str().map_err(bad_request)?;
+    let preq = protocol::parse_predict(body).map_err(|e| bad_request(format!("{e:#}")))?;
+    let seed = preq.seed.unwrap_or(state.default_seed);
+    for _ in 0..SWAP_RACE_RETRIES {
+        if let Some(body) = submit_uniform(state, &preq.docs, seed, None)? {
+            return Ok(body);
+        }
+    }
+    Err(HttpError { status: 503, msg: "model reloads raced this request; retry".into() })
+}
+
+fn handle_predict_text(state: &State, req: &Request) -> Result<String, HttpError> {
+    let body = req.body_str().map_err(bad_request)?;
+    let treq = protocol::parse_text(body).map_err(|e| bad_request(format!("{e:#}")))?;
+    let seed = treq.seed.unwrap_or(state.default_seed);
+    // Token ids are only meaningful under the vocabulary that produced
+    // them, so each attempt re-encodes against the *current* entry and
+    // requires the batch to run under exactly that version.
+    for _ in 0..SWAP_RACE_RETRIES {
+        let entry = state.registry.current();
+        let vocab = entry.vocab.as_ref().ok_or_else(|| bad_request(
+            "model was saved without a vocabulary; re-train with `cfslda train` \
+             on a raw-text corpus (or pass --vocab) to enable /predict/text",
+        ))?;
+        let mut docs = Vec::with_capacity(treq.texts.len());
+        for (i, text) in treq.texts.iter().enumerate() {
+            let toks = tokenize(text, &state.tok_cfg);
+            let enc = vocab.encode(&toks);
+            if enc.is_empty() {
+                return Err(bad_request(format!(
+                    "text {i} has no in-vocabulary tokens after tokenization"
+                )));
+            }
+            docs.push(enc);
+        }
+        if let Some(body) = submit_uniform(state, &docs, seed, Some(entry.version))? {
+            return Ok(body);
+        }
+    }
+    Err(HttpError { status: 503, msg: "model reloads raced this request; retry".into() })
+}
+
+fn handle_reload(state: &State, req: &Request) -> Result<String, HttpError> {
+    let body = req.body_str().map_err(bad_request)?;
+    let path = protocol::parse_reload(body).map_err(|e| bad_request(format!("{e:#}")))?;
+    let entry = state
+        .registry
+        .reload(path.as_deref().map(Path::new))
+        .map_err(|e| server_error(format!("{e:#}")))?;
+    state.stats.reloads.fetch_add(1, Ordering::Relaxed);
+    let v = Value::object(vec![
+        ("status", Value::String("reloaded".into())),
+        ("model_version", Value::Number(entry.version as f64)),
+        ("path", Value::String(entry.path.display().to_string())),
+        ("topics", Value::Number(entry.model.t as f64)),
+        ("vocab", Value::Number(entry.model.w as f64)),
+    ]);
+    Ok(json::to_string(&v))
+}
+
+/// Resolved options for [`run_blocking`] (the CLI entry point).
+pub struct RunOptions {
+    pub model_path: PathBuf,
+    pub cfg: ExperimentConfig,
+    /// Optional file to write the bound address into (CI / scripts
+    /// discovering an ephemeral port).
+    pub port_file: Option<PathBuf>,
+}
+
+/// Start the server and block forever (the `cfslda serve` command).
+pub fn run_blocking(opts: RunOptions) -> anyhow::Result<()> {
+    let server = Server::start(&opts.model_path, &opts.cfg)?;
+    let entry = server.state.registry.current();
+    println!(
+        "serving on http://{} (model v{} T={} W={} vocab_terms={} workers={} max_batch={} max_wait_us={})",
+        server.local_addr(),
+        entry.version,
+        entry.model.t,
+        entry.model.w,
+        entry.vocab.is_some(),
+        server.state.workers,
+        opts.cfg.serve.max_batch,
+        opts.cfg.serve.max_wait_us,
+    );
+    if let Some(pf) = &opts.port_file {
+        let mut f = std::fs::File::create(pf)?;
+        writeln!(f, "{}", server.local_addr())?;
+    }
+    log::info!("endpoints: POST /predict /predict/text /reload; GET /healthz /stats");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}

@@ -1,0 +1,216 @@
+//! End-to-end serving tests: train a real model, boot the server on an
+//! ephemeral loopback port, and exercise every endpoint over actual HTTP —
+//! determinism across repeated/reshaped requests, hot-swap with zero
+//! dropped requests, raw-text prediction through the persisted vocabulary.
+
+use cfslda::config::json;
+use cfslda::config::schema::ExperimentConfig;
+use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::data::vocab::Vocab;
+use cfslda::model::persist::save_model_with_vocab;
+use cfslda::model::slda::SldaModel;
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_train::train;
+use cfslda::serve::http::{request_once, Client};
+use cfslda::serve::server::Server;
+use cfslda::util::pool::scoped_map;
+use cfslda::util::rng::Pcg64;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("cfslda_it_serve_{}_{name}", std::process::id()));
+    p
+}
+
+fn quick_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick();
+    c.train.sweeps = 20;
+    c.train.burnin = 4;
+    c.train.predict_sweeps = 8;
+    c.train.predict_burnin = 2;
+    c.serve.addr = "127.0.0.1:0".to_string();
+    c.serve.workers = 2;
+    c.serve.max_batch = 8;
+    c.serve.max_wait_us = 200;
+    c.serve.cache_capacity = 256;
+    c
+}
+
+/// Train a small model and persist it (with a synthetic vocabulary so the
+/// text endpoint is exercised too). Returns (model_path, model).
+fn trained_model(name: &str, seed: u64) -> (PathBuf, SldaModel) {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let corpus = generate_corpus(&spec, &mut rng);
+    let engine = EngineHandle::native();
+    let out = train(&corpus, &quick_cfg(), &engine, &mut rng).unwrap();
+    let vocab =
+        Vocab::from_terms((0..out.model.w).map(|i| format!("word{i}"))).unwrap();
+    let path = tmp(name);
+    save_model_with_vocab(&out.model, Some(&vocab), &path).unwrap();
+    (path, out.model)
+}
+
+fn yhat_of(body: &str) -> Vec<f64> {
+    let v = json::parse(body).unwrap();
+    v.get("yhat").unwrap().as_array().unwrap().iter().map(|x| x.as_f64().unwrap()).collect()
+}
+
+#[test]
+fn serve_round_trip_determinism_and_hot_swap() {
+    let (path, model) = trained_model("rt.bin", 1);
+    let server = Server::start(&path, &quick_cfg()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    // healthz
+    let (status, body) = request_once(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(v.get("model_version").unwrap().as_usize(), Some(1));
+    assert_eq!(v.get("has_vocab_terms").unwrap().as_bool(), Some(true));
+
+    // deterministic predictions: same request twice -> identical yhat
+    let mut client = Client::connect(&addr).unwrap();
+    let req = r#"{"docs": [[0, 1, 2, 3, 1], [4, 4, 5]], "seed": 7}"#;
+    let (s1, b1) = client.request("POST", "/predict", req).unwrap();
+    let (s2, b2) = client.request("POST", "/predict", req).unwrap();
+    assert_eq!(s1, 200, "{b1}");
+    assert_eq!(s2, 200);
+    let y1 = yhat_of(&b1);
+    assert_eq!(y1.len(), 2);
+    assert!(y1.iter().all(|y| y.is_finite()));
+    assert_eq!(y1, yhat_of(&b2), "repeat request must be byte-deterministic");
+    // second pass came from the cache but reports the same numbers
+    let v2 = json::parse(&b2).unwrap();
+    assert_eq!(v2.get("cached").unwrap().as_usize(), Some(2));
+
+    // batch-shape independence: the same docs sent one at a time
+    let (_, ba) = client.request("POST", "/predict", r#"{"docs": [[0, 1, 2, 3, 1]], "seed": 7}"#).unwrap();
+    let (_, bb) = client.request("POST", "/predict", r#"{"docs": [[4, 4, 5]], "seed": 7}"#).unwrap();
+    assert_eq!(y1, vec![yhat_of(&ba)[0], yhat_of(&bb)[0]]);
+
+    // text endpoint through the persisted vocabulary ("word0" -> id 0 ...)
+    let (st, bt) = client
+        .request("POST", "/predict/text", r#"{"texts": ["word0 word1 word2 word3 word1"], "seed": 7}"#)
+        .unwrap();
+    assert_eq!(st, 200, "{bt}");
+    // tokenization lowercases and keeps these synthetic terms intact, so
+    // this is exactly doc [0, 1, 2, 3, 1]:
+    assert_eq!(yhat_of(&bt)[0], y1[0]);
+
+    // malformed / out-of-contract requests -> 400 with an error body
+    for bad in [
+        "not json",
+        r#"{"docs": []}"#,
+        r#"{"docs": [[]]}"#,
+        r#"{"docs": [[999999]]}"#, // out of vocab
+        r#"{"texts": ["zzz qqq"]}"#,
+    ] {
+        let path = if bad.contains("texts") { "/predict/text" } else { "/predict" };
+        let (s, b) = client.request("POST", path, bad).unwrap();
+        assert_eq!(s, 400, "{bad} -> {b}");
+        assert!(json::parse(&b).unwrap().get("error").is_some());
+    }
+    let (s404, _) = client.request("GET", "/nope", "").unwrap();
+    assert_eq!(s404, 404);
+
+    // hot swap to a second model while clients keep hammering: zero
+    // dropped requests, versions only ever move forward
+    let (path2, model2) = trained_model("rt2.bin", 2);
+    assert_ne!(model.eta, model2.eta);
+    let ids: Vec<usize> = (0..4).collect();
+    let results = scoped_map(&ids, 4, |i, _| {
+        if i == 0 {
+            // the swapper
+            let (s, b) = request_once(
+                &addr,
+                "POST",
+                "/reload",
+                &format!(r#"{{"path": "{}"}}"#, path2.display()),
+            )
+            .unwrap();
+            assert_eq!(s, 200, "{b}");
+            let v = json::parse(&b).unwrap();
+            assert_eq!(v.get("model_version").unwrap().as_usize(), Some(2));
+            Vec::new()
+        } else {
+            let mut c = Client::connect(&addr).unwrap();
+            let mut versions = Vec::new();
+            for _ in 0..20 {
+                let (s, b) = c.request("POST", "/predict", req).unwrap();
+                assert_eq!(s, 200, "dropped request during hot swap: {b}");
+                let v = json::parse(&b).unwrap();
+                versions.push(v.get("model_version").unwrap().as_usize().unwrap());
+                assert!(yhat_of(&b).iter().all(|y| y.is_finite()));
+            }
+            versions
+        }
+    });
+    for versions in results.iter().skip(1) {
+        assert!(versions.windows(2).all(|ab| ab[0] <= ab[1]), "version went backwards");
+        assert!(versions.iter().all(|&v| v == 1 || v == 2));
+    }
+    // after the swap, the same request routes to the new model
+    let (sv, bv) = request_once(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(sv, 200);
+    assert_eq!(json::parse(&bv).unwrap().get("model_version").unwrap().as_usize(), Some(2));
+
+    // stats reflect the traffic
+    let (ss, bs) = request_once(&addr, "GET", "/stats", "").unwrap();
+    assert_eq!(ss, 200);
+    let sv = json::parse(&bs).unwrap();
+    assert!(sv.get("requests").unwrap().as_f64().unwrap() >= 60.0);
+    assert!(sv.get("predict_docs").unwrap().as_f64().unwrap() >= 60.0);
+    assert!(sv.get("batches").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(sv.get("reloads").unwrap().as_usize(), Some(1));
+    assert_eq!(sv.get("workers").unwrap().as_usize(), Some(2));
+    assert!(sv.get("versions").unwrap().as_array().unwrap().len() >= 2);
+
+    server.stop();
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(path2).ok();
+}
+
+#[test]
+fn predictions_survive_server_restart() {
+    // Resident state (cache, scratch) must not leak into results: a fresh
+    // server on the same model file reproduces the same predictions.
+    let (path, _model) = trained_model("restart.bin", 3);
+    let req = r#"{"docs": [[1, 2, 3], [6, 5, 6, 5]], "seed": 42}"#;
+    let run = || {
+        let server = Server::start(&path, &quick_cfg()).unwrap();
+        let addr = server.local_addr().to_string();
+        let (s, b) = request_once(&addr, "POST", "/predict", req).unwrap();
+        assert_eq!(s, 200, "{b}");
+        let y = yhat_of(&b);
+        server.stop();
+        y
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn model_without_vocab_rejects_text_endpoint() {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(5);
+    let corpus = generate_corpus(&spec, &mut rng);
+    let engine = EngineHandle::native();
+    let out = train(&corpus, &quick_cfg(), &engine, &mut rng).unwrap();
+    let path = tmp("novocab.bin");
+    save_model_with_vocab(&out.model, None, &path).unwrap();
+    let server = Server::start(&path, &quick_cfg()).unwrap();
+    let addr = server.local_addr().to_string();
+    let (s, b) = request_once(&addr, "POST", "/predict/text", r#"{"texts": ["hello"]}"#).unwrap();
+    assert_eq!(s, 400);
+    assert!(b.contains("vocabulary"), "{b}");
+    // BoW prediction still works
+    let (s, b) = request_once(&addr, "POST", "/predict", r#"{"docs": [[0, 1]]}"#).unwrap();
+    assert_eq!(s, 200, "{b}");
+    server.stop();
+    std::fs::remove_file(path).ok();
+}
