@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     // Partition, then corrupt shard 0's labels to create heterogeneity.
     let shards = random_shards(ds.train.num_docs(), m, &mut rng);
     for &di in &shards[0] {
-        ds.train.docs[di].response += 3.0 * rng.next_gaussian();
+        ds.train.responses[di] += 3.0 * rng.next_gaussian();
     }
     let subs = shard_corpora(&ds.train, &shards);
 
@@ -49,9 +49,9 @@ fn main() -> anyhow::Result<()> {
     for (i, sub) in subs.iter().enumerate() {
         let out = run_worker(
             i,
-            sub,
-            &ds.test,
-            &ds.train,
+            sub.view(),
+            ds.test.view(),
+            ds.train.view(),
             WorkerPlan { predict_test: true, predict_full_train: true },
             &cfg,
             &engine,

@@ -11,17 +11,29 @@
 //! * `train-slda` — eta-active sweeps (Gaussian margin): both kernels
 //!   share the dense path, benched once as a reference.
 //!
+//! A fourth regime tracks the token-arena refactor (DESIGN.md §Memory
+//! layout):
+//!
+//! * `shard-setup` — partitioning the training corpus into M ∈ {1, 4, 16}
+//!   shards, **arena** (zero-copy `CorpusView`s) vs **baseline** (the
+//!   legacy deep-copy `select` path), with copied/referenced byte
+//!   accounting, plus end-to-end shard training tokens/s on each layout.
+//!
 //! Emits `BENCH_gibbs_hotpath.json` at the repo root (tokens/sec per kernel
-//! per T ∈ {16, 64, 256}) so the perf trajectory is tracked across PRs.
+//! per T ∈ {16, 64, 256}, and the shard-setup table) so the perf trajectory
+//! is tracked across PRs.
 
-use cfslda::bench_harness::{bench_throughput, quick_mode, render_table, BenchResult};
+use cfslda::bench_harness::{bench, bench_throughput, quick_mode, render_table, BenchResult};
 use cfslda::config::json::{self, Value};
 use cfslda::config::schema::{EngineKind, ExperimentConfig, KernelKind};
+use cfslda::data::partition::{random_shards, shard_corpora, shard_views};
 use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::parallel::comm::view_setup_bytes;
 use cfslda::runtime::EngineHandle;
 use cfslda::sampler::gibbs_predict::infer_zbar_with_kernel;
 use cfslda::sampler::gibbs_train::train;
 use cfslda::util::rng::Pcg64;
+use std::hint::black_box;
 use std::path::Path;
 
 struct Record {
@@ -137,6 +149,95 @@ fn main() -> anyhow::Result<()> {
         results.push(r);
     }
 
+    // === Shard setup: arena views vs deep-copy baseline at M ∈ {1, 4, 16}.
+    // Setup cost is what the paper's communication-free design pays up
+    // front; the arena path must make it index-sized, not token-sized.
+    let mut shard_entries: Vec<Value> = Vec::new();
+    {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.engine = EngineKind::Native;
+        cfg.model.topics = 16;
+        cfg.train.sweeps = 2;
+        cfg.train.burnin = 2;
+        cfg.train.eta_every = 100;
+        let setup_iters = if quick { 20 } else { 50 };
+        for &m in &[1usize, 4, 16] {
+            let shards = random_shards(corpus.num_docs(), m, &mut Pcg64::seed_from_u64(m as u64));
+
+            let r_arena = bench(&format!("shard-setup/arena M={m}"), 1, setup_iters, || {
+                black_box(shard_views(&corpus, &shards));
+            });
+            let (copied, referenced) = shards
+                .iter()
+                .map(|s| view_setup_bytes(&corpus.view_of(s)))
+                .fold((0u64, 0u64), |(c, r), (dc, dr)| (c + dc, r + dr));
+
+            let r_copy = bench(&format!("shard-setup/baseline M={m}"), 1, setup_iters, || {
+                black_box(shard_corpora(&corpus, &shards));
+            });
+            // The baseline physically duplicates every shard's wire image —
+            // exactly the bytes the arena path only references.
+            let copy_bytes: u64 = referenced;
+
+            // End-to-end shard training on each layout (tokens/s over all M
+            // shards, sequential — layout is the only variable).
+            let views = shard_views(&corpus, &shards);
+            let subs = shard_corpora(&corpus, &shards);
+            let train_work = tokens * cfg.train.sweeps as f64;
+            let r_train_arena = bench_throughput(
+                &format!("shard-train/arena M={m}"),
+                0,
+                iters,
+                train_work,
+                || {
+                    for (i, v) in views.iter().enumerate() {
+                        let mut r = Pcg64::seed_from_u64(1000 + i as u64);
+                        train(*v, &cfg, &engine, &mut r).unwrap();
+                    }
+                },
+            );
+            let r_train_copy = bench_throughput(
+                &format!("shard-train/baseline M={m}"),
+                0,
+                iters,
+                train_work,
+                || {
+                    for (i, s) in subs.iter().enumerate() {
+                        let mut r = Pcg64::seed_from_u64(1000 + i as u64);
+                        train(s, &cfg, &engine, &mut r).unwrap();
+                    }
+                },
+            );
+
+            for (layout, setup, tr, cb, rb) in [
+                ("arena", &r_arena, &r_train_arena, copied, referenced),
+                ("baseline", &r_copy, &r_train_copy, copy_bytes, 0u64),
+            ] {
+                shard_entries.push(Value::object(vec![
+                    ("m", Value::Number(m as f64)),
+                    ("layout", Value::String(layout.to_string())),
+                    ("setup_secs", Value::Number(setup.median())),
+                    ("copied_bytes", Value::Number(cb as f64)),
+                    ("referenced_bytes", Value::Number(rb as f64)),
+                    (
+                        "train_tokens_per_sec",
+                        Value::Number(tr.throughput().unwrap_or(0.0)),
+                    ),
+                ]));
+            }
+            println!(
+                "shard-setup M={m}: arena {:.2}us ({copied}B copied, {referenced}B by ref) \
+                 vs baseline {:.2}us ({copy_bytes}B copied)",
+                r_arena.median() * 1e6,
+                r_copy.median() * 1e6,
+            );
+            results.push(r_arena);
+            results.push(r_copy);
+            results.push(r_train_arena);
+            results.push(r_train_copy);
+        }
+    }
+
     println!(
         "{}",
         render_table(
@@ -187,6 +288,7 @@ fn main() -> anyhow::Result<()> {
         ("tokens", Value::Number(tokens)),
         ("results", Value::Array(entries)),
         ("speedups", Value::Array(speedups)),
+        ("shard_setup", Value::Array(shard_entries)),
     ]);
     // Repo root sits one level above the cargo package (rust/); fall back
     // to the working directory when run from the root itself.

@@ -1,7 +1,22 @@
-//! Bag-of-words corpus with per-document responses.
+//! Bag-of-words corpus in a CSR-style **token arena** (DESIGN.md §Memory
+//! layout).
+//!
+//! Storage is three flat, parallel arrays instead of a `Vec` of per-document
+//! `Vec`s: one contiguous `tokens` arena, a `doc_offsets` prefix-sum
+//! delimiting documents, and a flat `responses` array. The O(nnz) Gibbs
+//! kernels stream tokens out of one allocation (no pointer chasing), and
+//! shard partitioning hands workers [`CorpusView`]s — borrowed windows into
+//! the shared arena — so the paper's shard-**setup** step copies no token
+//! data at all (`parallel::comm` audits copied vs referenced bytes).
+//!
+//! [`Document`] survives as a construction-time record: loaders and
+//! generators build documents one at a time and [`Corpus::new`] /
+//! [`Corpus::push_doc`] flatten them into the arena.
 
-/// One document: token ids (with repetition, order irrelevant to the model)
-/// plus the supervised response y_d (EPS, sentiment, ...).
+/// One document at construction time: token ids (with repetition, order
+/// irrelevant to the model) plus the supervised response y_d (EPS,
+/// sentiment, ...). Storage inside [`Corpus`] is the flat arena; this type
+/// never appears on the hot path.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Document {
     pub tokens: Vec<u32>,
@@ -18,53 +33,320 @@ impl Document {
     }
 }
 
-/// A corpus: documents + the vocabulary size they are indexed against.
-#[derive(Clone, Debug, Default)]
+/// A corpus: CSR token arena + responses + the vocabulary size the token
+/// ids are indexed against.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Corpus {
-    pub docs: Vec<Document>,
+    /// Every document's tokens, concatenated (the arena).
+    pub tokens: Vec<u32>,
+    /// Document d occupies `tokens[doc_offsets[d]..doc_offsets[d + 1]]`;
+    /// length is `num_docs() + 1`, first entry 0, non-decreasing.
+    pub doc_offsets: Vec<u32>,
+    /// Per-document responses, parallel to documents.
+    pub responses: Vec<f64>,
     pub vocab_size: usize,
 }
 
+impl Default for Corpus {
+    fn default() -> Self {
+        Corpus { tokens: Vec::new(), doc_offsets: vec![0], responses: Vec::new(), vocab_size: 0 }
+    }
+}
+
 impl Corpus {
+    /// Flatten construction-time documents into the arena.
     pub fn new(docs: Vec<Document>, vocab_size: usize) -> Self {
-        debug_assert!(docs.iter().flat_map(|d| &d.tokens).all(|&w| (w as usize) < vocab_size));
-        Corpus { docs, vocab_size }
+        let total: usize = docs.iter().map(|d| d.tokens.len()).sum();
+        let mut c = Corpus::with_capacity(docs.len(), total, vocab_size);
+        for d in &docs {
+            c.push_doc(&d.tokens, d.response);
+        }
+        c
+    }
+
+    /// Empty corpus with preallocated arena capacity.
+    pub fn with_capacity(docs: usize, tokens: usize, vocab_size: usize) -> Self {
+        let mut doc_offsets = Vec::with_capacity(docs + 1);
+        doc_offsets.push(0);
+        Corpus {
+            tokens: Vec::with_capacity(tokens),
+            doc_offsets,
+            responses: Vec::with_capacity(docs),
+            vocab_size,
+        }
+    }
+
+    /// Construct directly from arena parts, checking the CSR invariants.
+    pub fn from_parts(
+        tokens: Vec<u32>,
+        doc_offsets: Vec<u32>,
+        responses: Vec<f64>,
+        vocab_size: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            !doc_offsets.is_empty() && doc_offsets[0] == 0,
+            "doc_offsets must start with 0"
+        );
+        anyhow::ensure!(
+            doc_offsets.len() == responses.len() + 1,
+            "doc_offsets length {} != responses length {} + 1",
+            doc_offsets.len(),
+            responses.len()
+        );
+        anyhow::ensure!(
+            *doc_offsets.last().unwrap() as usize == tokens.len(),
+            "last offset {} != token count {}",
+            doc_offsets.last().unwrap(),
+            tokens.len()
+        );
+        anyhow::ensure!(
+            doc_offsets.windows(2).all(|w| w[0] <= w[1]),
+            "doc_offsets must be non-decreasing"
+        );
+        Ok(Corpus { tokens, doc_offsets, responses, vocab_size })
+    }
+
+    /// Append one document to the arena. Panics if the arena would exceed
+    /// `u32::MAX` tokens (an invariant assert for in-memory construction;
+    /// I/O paths use [`Corpus::try_push_doc`] and surface an `Err` instead).
+    pub fn push_doc(&mut self, tokens: &[u32], response: f64) {
+        self.try_push_doc(tokens, response)
+            .expect("token arena exceeds u32::MAX tokens; doc_offsets would wrap");
+    }
+
+    /// Fallible [`Corpus::push_doc`]: errors (leaving the corpus unchanged)
+    /// instead of panicking when the arena would outgrow its u32 offsets.
+    pub fn try_push_doc(&mut self, tokens: &[u32], response: f64) -> anyhow::Result<()> {
+        debug_assert!(tokens.iter().all(|&w| (w as usize) < self.vocab_size));
+        let end = self.tokens.len() + tokens.len();
+        anyhow::ensure!(
+            u32::try_from(end).is_ok(),
+            "token arena would grow to {end} tokens; the u32 doc_offsets cap is {}",
+            u32::MAX
+        );
+        self.tokens.extend_from_slice(tokens);
+        self.doc_offsets.push(end as u32);
+        self.responses.push(response);
+        Ok(())
     }
 
     pub fn num_docs(&self) -> usize {
-        self.docs.len()
+        self.doc_offsets.len().saturating_sub(1)
     }
 
     pub fn num_tokens(&self) -> usize {
-        self.docs.iter().map(|d| d.len()).sum()
+        self.tokens.len()
+    }
+
+    /// Document d's tokens: one contiguous arena slice.
+    #[inline]
+    pub fn doc_tokens(&self, d: usize) -> &[u32] {
+        &self.tokens[self.doc_offsets[d] as usize..self.doc_offsets[d + 1] as usize]
+    }
+
+    #[inline]
+    pub fn doc_len(&self, d: usize) -> usize {
+        (self.doc_offsets[d + 1] - self.doc_offsets[d]) as usize
+    }
+
+    #[inline]
+    pub fn response(&self, d: usize) -> f64 {
+        self.responses[d]
     }
 
     pub fn responses(&self) -> Vec<f64> {
-        self.docs.iter().map(|d| d.response).collect()
+        self.responses.clone()
     }
 
-    /// Sub-corpus view by document indices (clones the selected docs).
+    /// Zero-copy view of the whole corpus in document order.
+    pub fn view(&self) -> CorpusView<'_> {
+        CorpusView { corpus: self, ids: None }
+    }
+
+    /// Zero-copy view of the documents named by `ids` (a shard): token and
+    /// response data stay in this corpus's arena, only the index list is
+    /// held by the view.
+    pub fn view_of<'a>(&'a self, ids: &'a [usize]) -> CorpusView<'a> {
+        CorpusView { corpus: self, ids: Some(ids) }
+    }
+
+    /// Materialized sub-corpus by document indices (copies into a fresh
+    /// arena). The parallel path uses [`Corpus::view_of`] instead; this
+    /// remains for train/test splitting and for owners that must outlive
+    /// the source corpus.
     pub fn select(&self, idx: &[usize]) -> Corpus {
-        Corpus {
-            docs: idx.iter().map(|&i| self.docs[i].clone()).collect(),
-            vocab_size: self.vocab_size,
-        }
+        self.view_of(idx).to_corpus()
     }
 
     /// Structural sanity check (token ids within vocab, no empty docs).
     pub fn validate(&self) -> anyhow::Result<()> {
-        for (i, d) in self.docs.iter().enumerate() {
-            if d.is_empty() {
+        self.view().validate()
+    }
+}
+
+/// Borrowed window into a [`Corpus`] arena: either the full corpus or a
+/// shard's document subset. `Copy` — passing one across the worker fan-out
+/// costs two pointers, never a token copy.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusView<'a> {
+    corpus: &'a Corpus,
+    /// `None` = all documents in arena order; `Some` = shard doc indices.
+    ids: Option<&'a [usize]>,
+}
+
+impl<'a> From<&'a Corpus> for CorpusView<'a> {
+    fn from(c: &'a Corpus) -> Self {
+        c.view()
+    }
+}
+
+impl<'a> CorpusView<'a> {
+    pub fn num_docs(&self) -> usize {
+        match self.ids {
+            Some(ids) => ids.len(),
+            None => self.corpus.num_docs(),
+        }
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        match self.ids {
+            Some(ids) => ids.iter().map(|&d| self.corpus.doc_len(d)).sum(),
+            None => self.corpus.num_tokens(),
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.corpus.vocab_size
+    }
+
+    /// True when this view covers the whole corpus (no index indirection —
+    /// the zero-copy *and* zero-index case the ledger prices at 0).
+    pub fn is_full(&self) -> bool {
+        self.ids.is_none()
+    }
+
+    /// Arena document index of the view's i-th document.
+    #[inline]
+    pub fn doc_id(&self, i: usize) -> usize {
+        match self.ids {
+            Some(ids) => ids[i],
+            None => i,
+        }
+    }
+
+    /// The i-th document's tokens, borrowed straight from the arena.
+    #[inline]
+    pub fn doc_tokens(&self, i: usize) -> &'a [u32] {
+        self.corpus.doc_tokens(self.doc_id(i))
+    }
+
+    #[inline]
+    pub fn doc_len(&self, i: usize) -> usize {
+        self.corpus.doc_len(self.doc_id(i))
+    }
+
+    #[inline]
+    pub fn response(&self, i: usize) -> f64 {
+        self.corpus.responses[self.doc_id(i)]
+    }
+
+    /// Materialize the responses in view order (labels are the one thing a
+    /// worker genuinely copies; 8 bytes per document).
+    pub fn responses(&self) -> Vec<f64> {
+        (0..self.num_docs()).map(|i| self.response(i)).collect()
+    }
+
+    /// Iterate `(tokens, response)` in view order.
+    pub fn iter_docs(self) -> impl Iterator<Item = (&'a [u32], f64)> + 'a {
+        (0..self.num_docs()).map(move |i| (self.doc_tokens(i), self.response(i)))
+    }
+
+    /// Local CSR offsets of this view's documents (prefix sums of view doc
+    /// lengths; length `num_docs() + 1`). Flat per-token state (e.g. the
+    /// trainer's z assignments) indexes with these.
+    pub fn local_doc_offsets(&self) -> Vec<u32> {
+        let d = self.num_docs();
+        let mut off = Vec::with_capacity(d + 1);
+        off.push(0u32);
+        for i in 0..d {
+            off.push(off[i] + self.doc_len(i) as u32);
+        }
+        off
+    }
+
+    /// Copy this view's documents into a fresh owned arena.
+    pub fn to_corpus(&self) -> Corpus {
+        let mut c =
+            Corpus::with_capacity(self.num_docs(), self.num_tokens(), self.vocab_size());
+        for i in 0..self.num_docs() {
+            c.push_doc(self.doc_tokens(i), self.response(i));
+        }
+        c
+    }
+
+    /// Structural sanity check over exactly the viewed documents: no empty
+    /// docs, token ids within vocab, finite responses, in-range doc ids.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let vocab = self.vocab_size();
+        if let Some(ids) = self.ids {
+            if let Some(&bad) = ids.iter().find(|&&d| d >= self.corpus.num_docs()) {
+                anyhow::bail!(
+                    "view references document {bad} >= corpus size {}",
+                    self.corpus.num_docs()
+                );
+            }
+        }
+        for i in 0..self.num_docs() {
+            let tokens = self.doc_tokens(i);
+            if tokens.is_empty() {
                 anyhow::bail!("document {i} is empty");
             }
-            if let Some(&w) = d.tokens.iter().find(|&&w| w as usize >= self.vocab_size) {
-                anyhow::bail!("document {i} has token id {w} >= vocab size {}", self.vocab_size);
+            if let Some(&w) = tokens.iter().find(|&&w| w as usize >= vocab) {
+                anyhow::bail!("document {i} has token id {w} >= vocab size {vocab}");
             }
-            if !d.response.is_finite() {
-                anyhow::bail!("document {i} has non-finite response {}", d.response);
+            if !self.response(i).is_finite() {
+                anyhow::bail!("document {i} has non-finite response {}", self.response(i));
             }
         }
         Ok(())
+    }
+}
+
+/// Flat token arena *without* responses: the serve batcher's per-request
+/// document assembly. One request's documents land in a single allocation
+/// shared (via `Arc`) by every per-document work item.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenArena {
+    pub tokens: Vec<u32>,
+    /// Document i occupies `tokens[offsets[i]..offsets[i + 1]]`.
+    pub offsets: Vec<u32>,
+}
+
+impl TokenArena {
+    pub fn from_docs(docs: &[Vec<u32>]) -> Self {
+        let total: usize = docs.iter().map(|d| d.len()).sum();
+        let mut tokens = Vec::with_capacity(total);
+        let mut offsets = Vec::with_capacity(docs.len() + 1);
+        offsets.push(0u32);
+        for d in docs {
+            tokens.extend_from_slice(d);
+            // Unreachable through serving: requests arrive through the HTTP
+            // layer's 64 MiB body cap (`serve::http::MAX_BODY_BYTES`), far
+            // below u32::MAX tokens — this is an invariant assert.
+            let end = u32::try_from(tokens.len())
+                .expect("request arena exceeds u32::MAX tokens; offsets would wrap");
+            offsets.push(end);
+        }
+        TokenArena { tokens, offsets }
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    #[inline]
+    pub fn doc(&self, i: usize) -> &[u32] {
+        &self.tokens[self.offsets[i] as usize..self.offsets[i + 1] as usize]
     }
 }
 
@@ -102,6 +384,10 @@ mod tests {
         assert_eq!(c.num_docs(), 3);
         assert_eq!(c.num_tokens(), 7);
         assert_eq!(c.responses(), vec![0.5, -1.0, 2.0]);
+        assert_eq!(c.doc_offsets, vec![0, 4, 6, 7]);
+        assert_eq!(c.doc_tokens(0), &[0, 1, 1, 2]);
+        assert_eq!(c.doc_tokens(2), &[0]);
+        assert_eq!(c.doc_len(1), 2);
     }
 
     #[test]
@@ -109,24 +395,157 @@ mod tests {
         let c = mini();
         let s = c.select(&[2, 0]);
         assert_eq!(s.num_docs(), 2);
-        assert_eq!(s.docs[0].response, 2.0);
-        assert_eq!(s.docs[1].response, 0.5);
+        assert_eq!(s.response(0), 2.0);
+        assert_eq!(s.response(1), 0.5);
+        assert_eq!(s.doc_tokens(1), &[0, 1, 1, 2]);
         assert_eq!(s.vocab_size, 3);
     }
 
     #[test]
-    fn validate_catches_problems() {
-        let mut c = mini();
+    fn from_parts_checks_invariants() {
+        let c = Corpus::from_parts(vec![0, 1, 2], vec![0, 2, 3], vec![1.0, 2.0], 3).unwrap();
+        assert_eq!(c.num_docs(), 2);
+        assert_eq!(c.doc_tokens(0), &[0, 1]);
+        assert_eq!(c.doc_tokens(1), &[2]);
+        assert_eq!(c.responses, vec![1.0, 2.0]);
         c.validate().unwrap();
-        c.docs[1].tokens.clear();
+    }
+
+    #[test]
+    fn from_parts_rejects_bad_offsets() {
+        // missing leading zero
+        assert!(Corpus::from_parts(vec![0], vec![1, 1], vec![1.0], 3).is_err());
+        // last offset disagrees with token count
+        assert!(Corpus::from_parts(vec![0, 1], vec![0, 1], vec![1.0], 3).is_err());
+        // offsets/responses length mismatch
+        assert!(Corpus::from_parts(vec![0, 1], vec![0, 2], vec![1.0, 2.0], 3).is_err());
+        // decreasing offsets
+        assert!(
+            Corpus::from_parts(vec![0, 1], vec![0, 2, 1, 2], vec![1.0, 2.0, 3.0], 3).is_err()
+        );
+    }
+
+    #[test]
+    fn legacy_and_arena_construction_agree() {
+        let legacy = mini();
+        let arena = Corpus::from_parts(
+            vec![0, 1, 1, 2, 2, 2, 0],
+            vec![0, 4, 6, 7],
+            vec![0.5, -1.0, 2.0],
+            3,
+        )
+        .unwrap();
+        assert_eq!(legacy, arena);
+    }
+
+    #[test]
+    fn validate_catches_problems() {
+        let c = mini();
+        c.validate().unwrap();
+
+        // empty document via from_parts
+        let c = Corpus::from_parts(vec![0, 1], vec![0, 2, 2], vec![0.5, 1.0], 3).unwrap();
         assert!(c.validate().is_err());
 
+        // out-of-range token id
         let mut c = mini();
-        c.docs[0].tokens.push(99);
+        c.tokens[0] = 99;
         assert!(c.validate().is_err());
 
+        // non-finite response
         let mut c = mini();
-        c.docs[2].response = f64::NAN;
+        c.responses[2] = f64::NAN;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn full_view_matches_corpus() {
+        let c = mini();
+        let v = c.view();
+        assert!(v.is_full());
+        assert_eq!(v.num_docs(), 3);
+        assert_eq!(v.num_tokens(), 7);
+        assert_eq!(v.vocab_size(), 3);
+        assert_eq!(v.doc_tokens(1), c.doc_tokens(1));
+        assert_eq!(v.response(2), 2.0);
+        assert_eq!(v.responses(), c.responses());
+        assert_eq!(v.local_doc_offsets(), c.doc_offsets);
+        let collected: Vec<(Vec<u32>, f64)> =
+            v.iter_docs().map(|(t, y)| (t.to_vec(), y)).collect();
+        assert_eq!(collected.len(), 3);
+        assert_eq!(collected[0].0, vec![0, 1, 1, 2]);
+        v.validate().unwrap();
+    }
+
+    #[test]
+    fn indexed_view_is_zero_copy_window() {
+        let c = mini();
+        let ids = vec![2usize, 0];
+        let v = c.view_of(&ids);
+        assert!(!v.is_full());
+        assert_eq!(v.num_docs(), 2);
+        assert_eq!(v.num_tokens(), 5);
+        assert_eq!(v.doc_id(0), 2);
+        assert_eq!(v.doc_tokens(0), &[0]);
+        assert_eq!(v.doc_tokens(1), &[0, 1, 1, 2]);
+        assert_eq!(v.responses(), vec![2.0, 0.5]);
+        assert_eq!(v.local_doc_offsets(), vec![0, 1, 5]);
+        // the view's token slices alias the arena (zero-copy)
+        assert!(std::ptr::eq(v.doc_tokens(1).as_ptr(), c.tokens.as_ptr()));
+        // materializing reproduces select()
+        assert_eq!(v.to_corpus(), c.select(&ids));
+    }
+
+    #[test]
+    fn view_edge_cases() {
+        let c = mini();
+        // empty shard
+        let empty: Vec<usize> = vec![];
+        let v = c.view_of(&empty);
+        assert_eq!(v.num_docs(), 0);
+        assert_eq!(v.num_tokens(), 0);
+        assert_eq!(v.local_doc_offsets(), vec![0]);
+        v.validate().unwrap();
+        assert_eq!(v.to_corpus().num_docs(), 0);
+        // single-doc shard at both arena extremes
+        for (&id, len) in [0usize, 2].iter().zip([4usize, 1]) {
+            let ids = vec![id];
+            let v = c.view_of(&ids);
+            assert_eq!(v.num_docs(), 1);
+            assert_eq!(v.num_tokens(), len);
+            v.validate().unwrap();
+        }
+        // out-of-range doc id is caught by validate
+        let bad = vec![7usize];
+        assert!(c.view_of(&bad).validate().is_err());
+    }
+
+    #[test]
+    fn view_validate_rejects_out_of_range_tokens() {
+        let mut c = mini();
+        c.tokens[5] = 42; // inside doc 1 (offsets 4..6)
+        let ids = vec![1usize];
+        assert!(c.view_of(&ids).validate().is_err());
+        let ids = vec![0usize, 2];
+        c.view_of(&ids).validate().unwrap(); // other docs untouched
+    }
+
+    #[test]
+    fn token_arena_assembles_requests() {
+        let docs = vec![vec![1u32, 2, 2], vec![7], vec![]];
+        let a = TokenArena::from_docs(&docs);
+        assert_eq!(a.num_docs(), 3);
+        assert_eq!(a.doc(0), &[1, 2, 2]);
+        assert_eq!(a.doc(1), &[7]);
+        assert!(a.doc(2).is_empty());
+        assert_eq!(a.offsets, vec![0, 3, 4, 4]);
+    }
+
+    #[test]
+    fn default_is_valid_empty() {
+        let c = Corpus::default();
+        assert_eq!(c.num_docs(), 0);
+        assert_eq!(c.num_tokens(), 0);
+        c.validate().unwrap();
     }
 }

@@ -49,14 +49,14 @@ pub fn load_text_jsonl(
     if vocab.is_empty() {
         bail!("vocabulary is empty after pruning (min_df_frac={min_df_frac})");
     }
-    let mut docs = Vec::new();
+    let mut corpus = Corpus::with_capacity(texts.len(), 0, vocab.len());
     for (toks, y) in texts.iter().zip(&responses) {
         let enc = vocab.encode(toks);
         if !enc.is_empty() {
-            docs.push(Document { tokens: enc, response: *y });
+            corpus.try_push_doc(&enc, *y)?;
         }
     }
-    Ok((Corpus::new(docs, vocab.len()), vocab))
+    Ok((corpus, vocab))
 }
 
 /// Load a pre-encoded JSONL corpus (`tokens` arrays). `vocab_size` is taken
@@ -94,7 +94,13 @@ pub fn load_encoded_jsonl(path: &Path) -> anyhow::Result<Corpus> {
             docs.push(Document { tokens, response: y });
         }
     }
-    let c = Corpus::new(docs, vocab_size);
+    // vocab_size is only final after the full scan, so documents buffer as
+    // construction-time records and flatten fallibly here.
+    let total: usize = docs.iter().map(|d| d.tokens.len()).sum();
+    let mut c = Corpus::with_capacity(docs.len(), total, vocab_size);
+    for d in &docs {
+        c.try_push_doc(&d.tokens, d.response)?;
+    }
     c.validate()?;
     Ok(c)
 }
@@ -105,9 +111,9 @@ pub fn save_bow(corpus: &Corpus, path: &Path) -> anyhow::Result<()> {
         std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
     );
     writeln!(f, "#cfslda-bow vocab={}", corpus.vocab_size)?;
-    for d in &corpus.docs {
-        write!(f, "{}", d.response)?;
-        for &t in &d.tokens {
+    for (tokens, response) in corpus.view().iter_docs() {
+        write!(f, "{response}")?;
+        for &t in tokens {
             write!(f, " {t}")?;
         }
         writeln!(f)?;
@@ -126,7 +132,9 @@ pub fn load_bow(path: &Path) -> anyhow::Result<Corpus> {
         .trim()
         .parse()
         .context("bad vocab size in bow header")?;
-    let mut docs = Vec::new();
+    // Vocab is known from the header, so lines stream straight into the
+    // token arena — no per-document Vec of the legacy layout survives.
+    let mut c = Corpus::with_capacity(0, 0, vocab_size);
     for (lineno, line) in lines.enumerate() {
         let line = line?;
         if line.trim().is_empty() {
@@ -141,10 +149,9 @@ pub fn load_bow(path: &Path) -> anyhow::Result<Corpus> {
         let tokens: Result<Vec<u32>, _> = parts.map(|p| p.parse::<u32>()).collect();
         let tokens = tokens.with_context(|| format!("bad token at data line {}", lineno + 1))?;
         if !tokens.is_empty() {
-            docs.push(Document { tokens, response: y });
+            c.try_push_doc(&tokens, y)?;
         }
     }
-    let c = Corpus::new(docs, vocab_size);
     c.validate()?;
     Ok(c)
 }
@@ -172,9 +179,10 @@ mod tests {
         save_bow(&c, &p).unwrap();
         let c2 = load_bow(&p).unwrap();
         assert_eq!(c2.vocab_size, 3);
-        assert_eq!(c2.docs.len(), 2);
-        assert_eq!(c2.docs[0].tokens, vec![0, 2, 2]);
-        assert_eq!(c2.docs[1].response, -0.25);
+        assert_eq!(c2.num_docs(), 2);
+        assert_eq!(c2.doc_tokens(0), &[0, 2, 2]);
+        assert_eq!(c2.response(1), -0.25);
+        assert_eq!(c2, c); // arena round-trips exactly
         std::fs::remove_file(p).ok();
     }
 
@@ -188,8 +196,8 @@ mod tests {
         .unwrap();
         let c = load_encoded_jsonl(&p).unwrap();
         assert_eq!(c.vocab_size, 10);
-        assert_eq!(c.docs.len(), 2);
-        assert_eq!(c.docs[0].tokens, vec![0, 3, 3]);
+        assert_eq!(c.num_docs(), 2);
+        assert_eq!(c.doc_tokens(0), &[0, 3, 3]);
         std::fs::remove_file(p).ok();
     }
 
@@ -207,7 +215,7 @@ mod tests {
         .unwrap();
         let (c, v) = load_text_jsonl(&p, &TokenizerConfig::default(), 0.3, 1.0).unwrap();
         assert!(v.id("revenue").is_some());
-        assert_eq!(c.docs.len(), 3);
+        assert_eq!(c.num_docs(), 3);
         assert!(c.vocab_size > 0);
         c.validate().unwrap();
         std::fs::remove_file(p).ok();

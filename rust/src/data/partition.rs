@@ -6,7 +6,7 @@
 //! (|size_i − size_j| ≤ 1). Property tests in `rust/tests/properties.rs`
 //! enforce the exactly-once invariant.
 
-use super::corpus::{Corpus, Dataset};
+use super::corpus::{Corpus, CorpusView, Dataset};
 use crate::util::rng::Pcg64;
 
 /// Random train/test split with exactly `n_train` training documents.
@@ -38,7 +38,17 @@ pub fn random_shards(n_docs: usize, m: usize, rng: &mut Pcg64) -> Vec<Vec<usize>
     shards
 }
 
-/// Materialize shard sub-corpora from a partition.
+/// Zero-copy shard views over a partition: each view borrows the corpus's
+/// token arena plus its shard's doc-index list — the leader/worker handoff
+/// ships no token data (DESIGN.md §Memory layout). This is the parallel
+/// path's shard setup.
+pub fn shard_views<'a>(corpus: &'a Corpus, shards: &'a [Vec<usize>]) -> Vec<CorpusView<'a>> {
+    shards.iter().map(|s| corpus.view_of(s)).collect()
+}
+
+/// Materialize shard sub-corpora from a partition (deep copies; kept as the
+/// benchmark baseline and for owners that must outlive the source corpus —
+/// the runtime path uses [`shard_views`]).
 pub fn shard_corpora(corpus: &Corpus, shards: &[Vec<usize>]) -> Vec<Corpus> {
     shards.iter().map(|s| corpus.select(s)).collect()
 }
@@ -63,10 +73,10 @@ mod tests {
         assert_eq!(ds.test.num_docs(), 27);
         let mut all: Vec<i64> = ds
             .train
-            .docs
+            .responses
             .iter()
-            .chain(&ds.test.docs)
-            .map(|d| d.response as i64)
+            .chain(&ds.test.responses)
+            .map(|&y| y as i64)
             .collect();
         all.sort_unstable();
         assert_eq!(all, (0..100).collect::<Vec<i64>>());
@@ -104,8 +114,27 @@ mod tests {
         let c = corpus(10);
         let shards = vec![vec![0, 1], vec![2, 3, 4], vec![5, 6, 7, 8, 9]];
         let subs = shard_corpora(&c, &shards);
-        assert_eq!(subs[1].docs[0].response, 2.0);
+        assert_eq!(subs[1].response(0), 2.0);
         assert_eq!(subs[2].num_docs(), 5);
+    }
+
+    #[test]
+    fn shard_views_alias_arena_and_match_materialized() {
+        let c = corpus(10);
+        let shards = vec![vec![0, 1], vec![2, 3, 4], vec![5, 6, 7, 8, 9]];
+        let views = shard_views(&c, &shards);
+        let subs = shard_corpora(&c, &shards);
+        assert_eq!(views.len(), subs.len());
+        for (v, s) in views.iter().zip(&subs) {
+            assert_eq!(v.num_docs(), s.num_docs());
+            assert_eq!(v.num_tokens(), s.num_tokens());
+            for i in 0..v.num_docs() {
+                assert_eq!(v.doc_tokens(i), s.doc_tokens(i));
+                assert_eq!(v.response(i), s.response(i));
+            }
+            // zero-copy: the view's slices point into the shared arena
+            assert!(c.tokens.as_ptr_range().contains(&v.doc_tokens(0).as_ptr()));
+        }
     }
 
     #[test]

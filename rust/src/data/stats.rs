@@ -22,14 +22,15 @@ pub struct CorpusStats {
 }
 
 pub fn corpus_stats(c: &Corpus) -> CorpusStats {
-    let lens: Vec<usize> = c.docs.iter().map(|d| d.len()).collect();
+    let d = c.num_docs();
+    let lens = (0..d).map(|i| c.doc_len(i));
     CorpusStats {
-        docs: c.num_docs(),
+        docs: d,
         tokens: c.num_tokens(),
         vocab: c.vocab_size,
-        mean_doc_len: if lens.is_empty() { 0.0 } else { c.num_tokens() as f64 / lens.len() as f64 },
-        min_doc_len: lens.iter().copied().min().unwrap_or(0),
-        max_doc_len: lens.iter().copied().max().unwrap_or(0),
+        mean_doc_len: if d == 0 { 0.0 } else { c.num_tokens() as f64 / d as f64 },
+        min_doc_len: lens.clone().min().unwrap_or(0),
+        max_doc_len: lens.max().unwrap_or(0),
     }
 }
 

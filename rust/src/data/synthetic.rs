@@ -12,7 +12,7 @@
 //! (phi, eta) is available for diagnostics — e.g. the Hungarian
 //! topic-alignment probe that quantifies quasi-ergodicity.
 
-use super::corpus::{Corpus, Dataset, Document};
+use super::corpus::{Corpus, Dataset};
 use crate::config::schema::ResponseKind;
 use crate::util::rng::Pcg64;
 
@@ -160,12 +160,19 @@ pub fn generate_with_truth(spec: &SyntheticSpec, rng: &mut Pcg64) -> (Corpus, Gr
         *e -= mean_eta;
     }
 
-    let mut docs = Vec::with_capacity(spec.docs);
+    // Documents flow straight into the token arena; one reusable token
+    // buffer serves every document.
+    let mut corpus = Corpus::with_capacity(
+        spec.docs,
+        (spec.docs as f64 * spec.doc_len_mean) as usize,
+        v,
+    );
+    let mut tokens: Vec<u32> = Vec::new();
     for _ in 0..spec.docs {
         // 2a) theta_d ~ Dir(alpha)
         let theta = rng.next_dirichlet_sym(spec.alpha, t);
         let n = sample_poisson(rng, spec.doc_len_mean).max(4);
-        let mut tokens = Vec::with_capacity(n);
+        tokens.clear();
         let mut zbar = vec![0.0f64; t];
         for _ in 0..n {
             // 2b-i) z ~ Multi(theta)
@@ -197,10 +204,10 @@ pub fn generate_with_truth(spec: &SyntheticSpec, rng: &mut Pcg64) -> (Corpus, Gr
                 if rng.next_f64() < p { 1.0 } else { 0.0 }
             }
         };
-        docs.push(Document { tokens, response });
+        corpus.push_doc(&tokens, response);
     }
 
-    (Corpus::new(docs, v), GroundTruth { phi, eta })
+    (corpus, GroundTruth { phi, eta })
 }
 
 /// Draw a corpus, discarding the ground truth.
@@ -245,7 +252,7 @@ mod tests {
         let spec = SyntheticSpec::continuous_small();
         let a = generate_corpus(&spec, &mut Pcg64::seed_from_u64(9));
         let b = generate_corpus(&spec, &mut Pcg64::seed_from_u64(9));
-        assert_eq!(a.docs, b.docs);
+        assert_eq!(a, b);
     }
 
     #[test]

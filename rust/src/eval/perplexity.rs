@@ -8,31 +8,33 @@
 //!   p(w) = sum_t theta_hat_dt phi_hat_{t, w}.
 
 use crate::config::schema::TrainConfig;
-use crate::data::corpus::Corpus;
+use crate::data::corpus::CorpusView;
 use crate::model::slda::SldaModel;
 use crate::sampler::gibbs_predict::infer_zbar;
 use crate::util::rng::Pcg64;
 
-/// Fold-in perplexity of `model` on a held-out corpus.
-pub fn perplexity(
+/// Fold-in perplexity of `model` on a held-out corpus (or view).
+pub fn perplexity<'a>(
     model: &SldaModel,
-    corpus: &Corpus,
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &TrainConfig,
     rng: &mut Pcg64,
 ) -> f64 {
+    let corpus: CorpusView<'a> = corpus.into();
     let t = model.t;
     let zbar = infer_zbar(model, corpus, cfg, rng);
     let alpha = model.alpha;
     let mut loglik = 0.0f64;
     let mut tokens = 0usize;
-    for (di, doc) in corpus.docs.iter().enumerate() {
+    for di in 0..corpus.num_docs() {
+        let doc_tokens = corpus.doc_tokens(di);
         // smooth theta-hat with the Dirichlet prior
-        let nd = doc.len() as f64;
+        let nd = doc_tokens.len() as f64;
         let denom = nd + t as f64 * alpha;
         let theta: Vec<f64> = (0..t)
             .map(|ti| (zbar[di * t + ti] as f64 * nd + alpha) / denom)
             .collect();
-        for &wi in &doc.tokens {
+        for &wi in doc_tokens {
             let phi = model.phi_row(wi);
             let p: f64 = theta.iter().zip(phi).map(|(&th, &ph)| th * ph as f64).sum();
             loglik += p.max(1e-300).ln();

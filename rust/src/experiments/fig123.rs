@@ -159,10 +159,10 @@ pub fn fig3_projection(
     let mut rng = Pcg64::seed_from_u64(cfg.seed ^ 0xF16_3);
     let take = ds.test.num_docs().min(400);
     let idx: Vec<usize> = (0..take).collect();
-    let sub = ds.test.select(&idx);
+    let sub = ds.test.view_of(&idx); // zero-copy slice of the test arena
     for model in &models {
         let (p, _) = crate::sampler::gibbs_predict::predict_corpus(
-            model, &sub, &cfg.train, engine, None, &mut rng,
+            model, sub, &cfg.train, engine, None, &mut rng,
         )?;
         preds.push(p.yhat);
     }

@@ -164,7 +164,16 @@ impl CountMatrices {
     /// artifacts). Values are written straight into the preallocated output
     /// buffer — no per-document temporary.
     pub fn zbar_matrix(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.d * self.t];
+        let mut out = Vec::new();
+        self.zbar_matrix_into(&mut out);
+        out
+    }
+
+    /// [`CountMatrices::zbar_matrix`] into a caller-owned buffer, so a
+    /// training loop's repeated eta steps reuse one allocation.
+    pub fn zbar_matrix_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.d * self.t, 0.0);
         for d in 0..self.d {
             let n = self.nd[d].max(1) as f32;
             let row = &self.ndt[d * self.t..(d + 1) * self.t];
@@ -173,7 +182,32 @@ impl CountMatrices {
                 *o = c as f32 / n;
             }
         }
-        out
+    }
+
+    /// Random topic initialization over a corpus view: every token gets a
+    /// uniform topic, counts are accumulated, and the flat per-token
+    /// assignment vector (view order, delimited by
+    /// [`crate::data::corpus::CorpusView::local_doc_offsets`]) is returned.
+    /// RNG consumption is exactly one `gen_range` per token in document
+    /// order — the sequence every trainer has always used, so arena and
+    /// legacy construction stay seed-exact.
+    pub fn init_random(
+        corpus: crate::data::corpus::CorpusView<'_>,
+        t: usize,
+        rng: &mut crate::util::rng::Pcg64,
+    ) -> (CountMatrices, Vec<u16>) {
+        let d = corpus.num_docs();
+        let w = corpus.vocab_size();
+        let mut counts = CountMatrices::new(d, t, w);
+        let mut z: Vec<u16> = Vec::with_capacity(corpus.num_tokens());
+        for di in 0..d {
+            for &wi in corpus.doc_tokens(di) {
+                let topic = rng.gen_range(t);
+                counts.inc(di, wi, topic);
+                z.push(topic as u16);
+            }
+        }
+        (counts, z)
     }
 
     /// Pool another chain's word-topic statistics into this one — the Naive

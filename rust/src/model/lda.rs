@@ -9,41 +9,33 @@
 
 use super::counts::CountMatrices;
 use super::slda::SldaModel;
-use crate::data::corpus::Corpus;
+use crate::data::corpus::CorpusView;
 use crate::util::rng::Pcg64;
 
 /// Train plain LDA; returns phi-hat (word-major, like [`SldaModel::phi`])
-/// and the final counts.
-pub fn train_lda(
-    corpus: &Corpus,
+/// and the final counts. Accepts `&Corpus` or any [`CorpusView`].
+pub fn train_lda<'a>(
+    corpus: impl Into<CorpusView<'a>>,
     topics: usize,
     alpha: f64,
     beta: f64,
     sweeps: usize,
     rng: &mut Pcg64,
 ) -> (Vec<f32>, CountMatrices) {
+    let corpus: CorpusView<'a> = corpus.into();
     let t = topics;
-    let w = corpus.vocab_size;
     let d = corpus.num_docs();
-    let wbeta = w as f64 * beta;
+    let wbeta = corpus.vocab_size() as f64 * beta;
 
-    let mut counts = CountMatrices::new(d, t, w);
-    let mut z: Vec<Vec<u16>> = Vec::with_capacity(d);
-    for (di, doc) in corpus.docs.iter().enumerate() {
-        let mut zd = Vec::with_capacity(doc.len());
-        for &wi in &doc.tokens {
-            let topic = rng.gen_range(t);
-            counts.inc(di, wi, topic);
-            zd.push(topic as u16);
-        }
-        z.push(zd);
-    }
+    let z_offsets = corpus.local_doc_offsets();
+    let (mut counts, mut z) = CountMatrices::init_random(corpus, t, rng);
 
     let mut probs = vec![0.0f64; t];
     for _ in 0..sweeps {
-        for (di, doc) in corpus.docs.iter().enumerate() {
-            let zd = &mut z[di];
-            for (n, &wi) in doc.tokens.iter().enumerate() {
+        for di in 0..d {
+            let tokens = corpus.doc_tokens(di);
+            let zd = &mut z[z_offsets[di] as usize..z_offsets[di + 1] as usize];
+            for (n, &wi) in tokens.iter().enumerate() {
                 let old = zd[n] as usize;
                 counts.dec(di, wi, old);
                 {

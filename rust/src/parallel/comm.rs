@@ -4,17 +4,28 @@
 //! (the leader hands each worker its sub-corpus, plus the test set / full
 //! training set when local predictions are required) and final **gather**
 //! (each worker returns its model summary and local predictions). During
-//! sampling there is exactly zero traffic. The ledger measures both in
-//! bytes — so the experiment reports can show what an MPI/posterior-sharing
-//! parallel sampler would have paid per sweep vs what this one pays total.
+//! sampling there is exactly zero traffic.
+//!
+//! Since the token-arena refactor (DESIGN.md §Memory layout) the setup step
+//! is priced in two currencies:
+//!
+//! * **copied bytes** — data physically duplicated per worker. With
+//!   [`crate::data::corpus::CorpusView`] shard handoff this is only the
+//!   shard's doc-index list plus the per-document responses/labels the
+//!   worker materializes — never token arrays.
+//! * **referenced bytes** — data a worker reads through the shared arena
+//!   by reference. This is what an MPI deployment *would* ship at setup
+//!   (and what the legacy deep-copy `select` path used to duplicate), so
+//!   experiment reports can still quote the paper's wire-transfer totals.
 
-use crate::data::corpus::Corpus;
+use crate::data::corpus::{Corpus, CorpusView};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Thread-safe byte counters for one parallel run.
 #[derive(Debug, Default)]
 pub struct CommLedger {
-    setup_bytes: AtomicU64,
+    setup_copied_bytes: AtomicU64,
+    setup_referenced_bytes: AtomicU64,
     gather_bytes: AtomicU64,
     /// Synchronization events during sampling (always 0 for this system;
     /// present so alternative baselines could be instrumented).
@@ -24,7 +35,12 @@ pub struct CommLedger {
 /// Immutable snapshot for reports.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
-    pub setup_bytes: u64,
+    /// Setup bytes physically duplicated per worker (doc-index lists +
+    /// responses/labels; ~0 relative to token data on the view path).
+    pub setup_copied_bytes: u64,
+    /// Setup bytes shared by reference through the token arena (the wire
+    /// cost a distributed deployment would pay).
+    pub setup_referenced_bytes: u64,
     pub gather_bytes: u64,
     pub sampling_syncs: u64,
 }
@@ -34,8 +50,19 @@ impl CommLedger {
         Self::default()
     }
 
-    pub fn add_setup(&self, bytes: u64) {
-        self.setup_bytes.fetch_add(bytes, Ordering::Relaxed);
+    pub fn add_setup_copied(&self, bytes: u64) {
+        self.setup_copied_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_setup_referenced(&self, bytes: u64) {
+        self.setup_referenced_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Record one view handoff: its copied and referenced costs at once.
+    pub fn add_setup_view(&self, view: &CorpusView<'_>) {
+        let (copied, referenced) = view_setup_bytes(view);
+        self.add_setup_copied(copied);
+        self.add_setup_referenced(referenced);
     }
 
     pub fn add_gather(&self, bytes: u64) {
@@ -48,7 +75,8 @@ impl CommLedger {
 
     pub fn snapshot(&self) -> CommStats {
         CommStats {
-            setup_bytes: self.setup_bytes.load(Ordering::Relaxed),
+            setup_copied_bytes: self.setup_copied_bytes.load(Ordering::Relaxed),
+            setup_referenced_bytes: self.setup_referenced_bytes.load(Ordering::Relaxed),
             gather_bytes: self.gather_bytes.load(Ordering::Relaxed),
             sampling_syncs: self.sampling_syncs.load(Ordering::Relaxed),
         }
@@ -59,6 +87,20 @@ impl CommLedger {
 /// (u32) per document.
 pub fn corpus_bytes(c: &Corpus) -> u64 {
     (c.num_tokens() * 4 + c.num_docs() * 12) as u64
+}
+
+/// Setup cost of handing a worker one [`CorpusView`], split into
+/// `(copied, referenced)` bytes.
+///
+/// * A **full** view is pure aliasing: nothing is copied, the whole corpus
+///   wire size is referenced.
+/// * A **shard** view copies its doc-index list (8 bytes per doc) plus the
+///   responses the worker materializes (8 bytes per doc); the shard's token
+///   arrays and lengths — the O(nnz) payload — are referenced only.
+pub fn view_setup_bytes(v: &CorpusView<'_>) -> (u64, u64) {
+    let referenced = (v.num_tokens() * 4 + v.num_docs() * 12) as u64;
+    let copied = if v.is_full() { 0 } else { (v.num_docs() * 16) as u64 };
+    (copied, referenced)
 }
 
 /// Wire size of a trained local model summary: eta (f64 x T) + phi
@@ -73,14 +115,20 @@ pub fn predictions_bytes(n: usize) -> u64 {
 }
 
 impl CommStats {
+    /// Total setup volume (copied + referenced).
+    pub fn setup_bytes(&self) -> u64 {
+        self.setup_copied_bytes + self.setup_referenced_bytes
+    }
+
     pub fn total(&self) -> u64 {
-        self.setup_bytes + self.gather_bytes
+        self.setup_bytes() + self.gather_bytes
     }
 
     pub fn render(&self) -> String {
         format!(
-            "setup={:.2}MB gather={:.2}MB sampling_syncs={}",
-            self.setup_bytes as f64 / 1e6,
+            "setup[copied={:.1}KB ref={:.2}MB] gather={:.2}MB sampling_syncs={}",
+            self.setup_copied_bytes as f64 / 1e3,
+            self.setup_referenced_bytes as f64 / 1e6,
             self.gather_bytes as f64 / 1e6,
             self.sampling_syncs
         )
@@ -98,13 +146,16 @@ mod tests {
         std::thread::scope(|s| {
             for _ in 0..8 {
                 s.spawn(|| {
-                    ledger.add_setup(100);
+                    ledger.add_setup_copied(25);
+                    ledger.add_setup_referenced(75);
                     ledger.add_gather(10);
                 });
             }
         });
         let st = ledger.snapshot();
-        assert_eq!(st.setup_bytes, 800);
+        assert_eq!(st.setup_copied_bytes, 200);
+        assert_eq!(st.setup_referenced_bytes, 600);
+        assert_eq!(st.setup_bytes(), 800);
         assert_eq!(st.gather_bytes, 80);
         assert_eq!(st.sampling_syncs, 0);
         assert_eq!(st.total(), 880);
@@ -120,6 +171,31 @@ mod tests {
             4,
         );
         assert_eq!(corpus_bytes(&c), (4 * 4 + 2 * 12) as u64);
+    }
+
+    #[test]
+    fn view_setup_is_zero_copy_for_full_and_index_only_for_shards() {
+        let c = Corpus::new(
+            vec![
+                Document { tokens: vec![0, 1, 2], response: 0.0 },
+                Document { tokens: vec![3], response: 1.0 },
+            ],
+            4,
+        );
+        let (copied, referenced) = view_setup_bytes(&c.view());
+        assert_eq!(copied, 0, "full view must copy nothing");
+        assert_eq!(referenced, corpus_bytes(&c));
+
+        let ids = vec![1usize];
+        let (copied, referenced) = view_setup_bytes(&c.view_of(&ids));
+        assert_eq!(copied, 16, "shard view copies doc ids + responses only");
+        assert_eq!(referenced, 16); // 1 token * 4B + 1 doc * 12B
+
+        let ledger = CommLedger::new();
+        ledger.add_setup_view(&c.view_of(&ids));
+        let st = ledger.snapshot();
+        assert_eq!(st.setup_copied_bytes, 16);
+        assert_eq!(st.setup_referenced_bytes, 16);
     }
 
     #[test]

@@ -17,13 +17,13 @@ use crate::combine::rules::combine_median;
 use crate::combine::{combine_predictions, weights, CombineRule, WeightScheme};
 use crate::config::schema::{ExperimentConfig, ResponseKind};
 use crate::config::validate::validate;
-use crate::data::corpus::{Corpus, Dataset};
-use crate::data::partition::{random_shards, shard_corpora};
+use crate::data::corpus::{CorpusView, Dataset};
+use crate::data::partition::{random_shards, shard_views};
 use crate::eval::metrics::{compute, Metrics};
 use crate::model::counts::CountMatrices;
 use crate::model::slda::SldaModel;
 use crate::parallel::comm::{
-    corpus_bytes, model_bytes, predictions_bytes, CommLedger, CommStats,
+    model_bytes, predictions_bytes, CommLedger, CommStats,
 };
 use crate::parallel::worker::{run_worker, WorkerPlan, WorkerOutput};
 use crate::runtime::EngineHandle;
@@ -231,6 +231,12 @@ pub fn run_with_engine(
 }
 
 /// Shared parallel training stage: partition, spawn workers, gather.
+///
+/// Shard handoff is **zero-copy** (DESIGN.md §Memory layout): each worker
+/// receives [`CorpusView`]s into the leader's token arena — its shard, the
+/// test set, and (Weighted Average) the full training set. The only bytes
+/// physically duplicated per worker are the shard's doc-index list and the
+/// responses it materializes; the ledger records that split.
 fn parallel_train(
     ds: &Dataset,
     cfg: &ExperimentConfig,
@@ -241,27 +247,32 @@ fn parallel_train(
 ) -> anyhow::Result<Vec<WorkerOutput>> {
     let m = cfg.parallel.shards;
     let shards = random_shards(ds.train.num_docs(), m, rng);
-    let subs = shard_corpora(&ds.train, &shards);
+    let views = shard_views(&ds.train, &shards);
     // Per-shard deterministic RNG streams, derived before the fan-out.
-    let jobs: Vec<(usize, Corpus, Pcg64)> = subs
+    let jobs: Vec<(usize, CorpusView<'_>, Pcg64)> = views
         .into_iter()
         .enumerate()
-        .map(|(i, c)| (i, c, rng.split(i as u64)))
+        .map(|(i, v)| (i, v, rng.split(i as u64)))
         .collect();
 
-    for (_, c, _) in &jobs {
-        let mut setup = corpus_bytes(c);
+    let test_view = ds.test.view();
+    let full_train_view = ds.train.view();
+    for (_, v, _) in &jobs {
+        ledger.add_setup_view(v);
         if plan.predict_test {
-            setup += corpus_bytes(&ds.test);
+            ledger.add_setup_view(&test_view);
         }
         if plan.predict_full_train {
-            setup += corpus_bytes(&ds.train);
+            ledger.add_setup_view(&full_train_view);
+            // The full-train pass materializes every training label in the
+            // worker (`CorpusView::responses`): a real per-worker copy the
+            // full-view pricing (copied = 0) does not include.
+            ledger.add_setup_copied(predictions_bytes(ds.train.num_docs()));
         }
-        ledger.add_setup(setup);
     }
 
-    let results = scoped_map(&jobs, cfg.parallel.threads.max(1), |_, (i, c, worker_rng)| {
-        run_worker(*i, c, &ds.test, &ds.train, plan, cfg, engine, worker_rng.clone())
+    let results = scoped_map(&jobs, cfg.parallel.threads.max(1), |_, (i, v, worker_rng)| {
+        run_worker(*i, *v, test_view, full_train_view, plan, cfg, engine, worker_rng.clone())
     });
     let outputs: anyhow::Result<Vec<WorkerOutput>> = results.into_iter().collect();
     let outputs = outputs?;
@@ -497,11 +508,24 @@ mod tests {
                 }
                 Algorithm::NaiveCombination => {
                     assert_eq!(out.shards.len(), 4);
-                    assert!(out.comm.setup_bytes > 0);
+                    assert!(out.comm.setup_referenced_bytes > 0);
                     assert!(out.weights.is_none());
+                    // Zero-copy handoff: the only duplicated setup bytes
+                    // are shard doc-index lists + responses (16 B/doc) —
+                    // no token arrays.
+                    assert_eq!(
+                        out.comm.setup_copied_bytes,
+                        (ds.train.num_docs() * 16) as u64
+                    );
                     // Naive never ships the test set to workers.
-                    let per_shard = out.comm.setup_bytes / 4;
+                    let per_shard = out.comm.setup_referenced_bytes / 4;
                     assert!(per_shard < crate::parallel::comm::corpus_bytes(&ds.train));
+                    // ...and the shard partition references exactly the
+                    // training corpus, once.
+                    assert_eq!(
+                        out.comm.setup_referenced_bytes,
+                        crate::parallel::comm::corpus_bytes(&ds.train)
+                    );
                 }
                 Algorithm::SimpleAverage => {
                     let w = out.weights.as_ref().unwrap();

@@ -1,9 +1,14 @@
 //! One shard's workload, executed on its own thread with its own RNG
 //! stream and **no shared mutable state** (communication-free by
 //! construction — the ledger in `comm` audits the only two transfers).
+//!
+//! Since the token-arena refactor a worker receives [`CorpusView`]s: its
+//! shard, the test set and (Weighted Average) the full training set are all
+//! borrowed windows into the leader's arena — handing a worker its workload
+//! copies doc indices and responses, never token arrays.
 
 use crate::config::schema::ExperimentConfig;
-use crate::data::corpus::Corpus;
+use crate::data::corpus::CorpusView;
 use crate::runtime::{EngineHandle, Prediction};
 use crate::sampler::{gibbs_predict, gibbs_train};
 use crate::util::rng::Pcg64;
@@ -33,11 +38,12 @@ pub struct WorkerOutput {
 
 /// Run one shard: train on `shard_corpus`, then the planned predictions.
 /// `full_train` is the complete training corpus (all shards' documents).
+#[allow(clippy::too_many_arguments)]
 pub fn run_worker(
     shard_id: usize,
-    shard_corpus: &Corpus,
-    test: &Corpus,
-    full_train: &Corpus,
+    shard_corpus: CorpusView<'_>,
+    test: CorpusView<'_>,
+    full_train: CorpusView<'_>,
     plan: WorkerPlan,
     cfg: &ExperimentConfig,
     engine: &EngineHandle,
@@ -90,7 +96,8 @@ pub fn run_worker(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::partition::{random_shards, shard_corpora};
+    use crate::data::corpus::Corpus;
+    use crate::data::partition::{random_shards, shard_views};
     use crate::data::synthetic::{generate_split, SyntheticSpec};
 
     fn setup() -> (Corpus, Corpus, ExperimentConfig) {
@@ -110,9 +117,9 @@ mod tests {
         let engine = EngineHandle::native();
         let out = run_worker(
             0,
-            &train,
-            &test,
-            &train,
+            train.view(),
+            test.view(),
+            train.view(),
             WorkerPlan { predict_test: false, predict_full_train: false },
             &cfg,
             &engine,
@@ -130,13 +137,13 @@ mod tests {
         let (train, test, cfg) = setup();
         let mut rng = Pcg64::seed_from_u64(3);
         let shards = random_shards(train.num_docs(), 4, &mut rng);
-        let subs = shard_corpora(&train, &shards);
+        let views = shard_views(&train, &shards);
         let engine = EngineHandle::native();
         let out = run_worker(
             2,
-            &subs[2],
-            &test,
-            &train,
+            views[2],
+            test.view(),
+            train.view(),
             WorkerPlan { predict_test: true, predict_full_train: true },
             &cfg,
             &engine,
@@ -151,5 +158,25 @@ mod tests {
         assert!((0.0..=1.0).contains(&acc));
         // Weighted's extra work must show up in the timing breakdown.
         assert!(out.timings.get("predict_train") > 0.0);
+    }
+
+    #[test]
+    fn shard_view_training_matches_materialized_shard() {
+        // A worker training on a zero-copy view must be draw-for-draw
+        // identical to one training on the deep-copied sub-corpus.
+        let (train, _test, cfg) = setup();
+        let mut rng = Pcg64::seed_from_u64(7);
+        let shards = random_shards(train.num_docs(), 4, &mut rng);
+        let views = shard_views(&train, &shards);
+        let sub = train.select(&shards[1]);
+        let engine = EngineHandle::native();
+        let a = gibbs_train::train(views[1], &cfg, &engine, &mut Pcg64::seed_from_u64(9))
+            .unwrap();
+        let b = gibbs_train::train(&sub, &cfg, &engine, &mut Pcg64::seed_from_u64(9))
+            .unwrap();
+        assert_eq!(a.z, b.z);
+        assert_eq!(a.counts.ndt, b.counts.ndt);
+        assert_eq!(a.model.eta, b.model.eta);
+        assert_eq!(a.responses, b.responses);
     }
 }

@@ -11,7 +11,7 @@
 //! artifact on the XLA path.
 
 use crate::config::schema::{KernelKind, TrainConfig};
-use crate::data::corpus::Corpus;
+use crate::data::corpus::CorpusView;
 use crate::model::slda::SldaModel;
 use crate::runtime::{EngineHandle, Prediction};
 use crate::sampler::kernel::{self, PredictState, SamplerKernel};
@@ -134,13 +134,15 @@ impl DocInfer {
 /// Infer averaged empirical topic distributions for every document with an
 /// explicit kernel choice. Returns a row-major [D, T] matrix. The kernels
 /// are draw-for-draw identical, so the choice affects throughput only.
-pub fn infer_zbar_with_kernel(
+/// Accepts `&Corpus` or any [`CorpusView`] (e.g. a zero-copy shard window).
+pub fn infer_zbar_with_kernel<'a>(
     model: &SldaModel,
-    corpus: &Corpus,
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &TrainConfig,
     kernel_kind: KernelKind,
     rng: &mut Pcg64,
 ) -> Vec<f32> {
+    let corpus: CorpusView<'a> = corpus.into();
     let t = model.t;
     let d = corpus.num_docs();
     let mut zbar = vec![0.0f32; d * t];
@@ -149,8 +151,15 @@ pub fn infer_zbar_with_kernel(
     // kernels; phi is frozen for the whole call).
     let phi_cum = kernel::build_phi_cum(&model.phi, t, model.alpha);
 
-    for (di, doc) in corpus.docs.iter().enumerate() {
-        scratch.infer_doc(model, &phi_cum, cfg, &doc.tokens, rng, &mut zbar[di * t..(di + 1) * t]);
+    for di in 0..d {
+        scratch.infer_doc(
+            model,
+            &phi_cum,
+            cfg,
+            corpus.doc_tokens(di),
+            rng,
+            &mut zbar[di * t..(di + 1) * t],
+        );
     }
     zbar
 }
@@ -161,14 +170,15 @@ pub fn infer_zbar_with_kernel(
 /// seeded by [`doc_stream_seed`]`(seed, `[`token_hash`]`(doc))`. The result
 /// is therefore identical for any `jobs` value — and identical to what the
 /// serving subsystem computes for the same (model, seed, doc).
-pub fn infer_zbar_parallel(
+pub fn infer_zbar_parallel<'a>(
     model: &SldaModel,
-    corpus: &Corpus,
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &TrainConfig,
     kernel_kind: KernelKind,
     seed: u64,
     jobs: usize,
 ) -> Vec<f32> {
+    let corpus: CorpusView<'a> = corpus.into();
     let t = model.t;
     let d = corpus.num_docs();
     if d == 0 {
@@ -185,7 +195,7 @@ pub fn infer_zbar_parallel(
         let mut scratch = DocInfer::new(kernel_kind, t);
         let mut out = vec![0.0f32; (hi - lo) * t];
         for di in lo..hi {
-            let tokens = &corpus.docs[di].tokens;
+            let tokens = corpus.doc_tokens(di);
             let mut rng = Pcg64::seed_from_u64(doc_stream_seed(seed, token_hash(tokens)));
             let row = &mut out[(di - lo) * t..(di - lo + 1) * t];
             scratch.infer_doc(model, &phi_cum, cfg, tokens, &mut rng, row);
@@ -197,9 +207,9 @@ pub fn infer_zbar_parallel(
 
 /// [`infer_zbar_parallel`] plus the batched engine prediction call.
 #[allow(clippy::too_many_arguments)]
-pub fn predict_corpus_parallel(
+pub fn predict_corpus_parallel<'a>(
     model: &SldaModel,
-    corpus: &Corpus,
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &TrainConfig,
     kernel_kind: KernelKind,
     engine: &EngineHandle,
@@ -213,9 +223,9 @@ pub fn predict_corpus_parallel(
 }
 
 /// [`infer_zbar_with_kernel`] with the `auto` kernel heuristic.
-pub fn infer_zbar(
+pub fn infer_zbar<'a>(
     model: &SldaModel,
-    corpus: &Corpus,
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &TrainConfig,
     rng: &mut Pcg64,
 ) -> Vec<f32> {
@@ -225,9 +235,9 @@ pub fn infer_zbar(
 /// Full prediction pipeline with an explicit kernel: infer zbar, then
 /// batched yhat + metrics. `labels`: pass the ground truth to obtain
 /// MSE/accuracy (paper's test evaluation), or `None` for pure inference.
-pub fn predict_corpus_with_kernel(
+pub fn predict_corpus_with_kernel<'a>(
     model: &SldaModel,
-    corpus: &Corpus,
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &TrainConfig,
     kernel_kind: KernelKind,
     engine: &EngineHandle,
@@ -240,9 +250,9 @@ pub fn predict_corpus_with_kernel(
 }
 
 /// [`predict_corpus_with_kernel`] with the `auto` kernel heuristic.
-pub fn predict_corpus(
+pub fn predict_corpus<'a>(
     model: &SldaModel,
-    corpus: &Corpus,
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &TrainConfig,
     engine: &EngineHandle,
     labels: Option<&[f64]>,

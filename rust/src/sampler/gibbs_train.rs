@@ -15,9 +15,14 @@
 //! kernel's plain-LDA path runs — the sparse kernel exploits the bucket
 //! decomposition there; once eta activates, both kernels share the dense
 //! Gaussian-margin path [`kernel::sweep_doc_gauss`] (DESIGN.md §Perf).
+//!
+//! The trainer consumes a [`CorpusView`]: a shard worker trains directly on
+//! a borrowed window of the leader's token arena (zero setup copies,
+//! DESIGN.md §Memory layout). Per-document state (`z`, responses, zbar
+//! scratch) lives in flat buffers allocated once per `train` call.
 
 use crate::config::schema::{ExperimentConfig, KernelKind};
-use crate::data::corpus::Corpus;
+use crate::data::corpus::CorpusView;
 use crate::model::counts::CountMatrices;
 use crate::model::slda::SldaModel;
 use crate::runtime::EngineHandle;
@@ -40,8 +45,12 @@ pub struct TrainOutput {
     pub model: SldaModel,
     /// Final count state (needed by the Naive Combination pooling).
     pub counts: CountMatrices,
-    /// Final token-topic assignments (z), per document.
-    pub z: Vec<Vec<u16>>,
+    /// Final token-topic assignments (z), one per token in corpus-view
+    /// order; document d's run is `z[z_offsets[d] as usize..z_offsets[d+1]
+    /// as usize]`.
+    pub z: Vec<u16>,
+    /// CSR offsets delimiting `z` per document (length `docs + 1`).
+    pub z_offsets: Vec<u32>,
     /// Responses of the training documents, in `counts` row order (needed
     /// by the Naive Combination pooling stage to align the pooled zbar rows
     /// with their labels).
@@ -54,15 +63,17 @@ pub struct TrainOutput {
     pub timings: PhaseTimings,
 }
 
-/// Train an sLDA model with collapsed Gibbs + stochastic EM.
-pub fn train(
-    corpus: &Corpus,
+/// Train an sLDA model with collapsed Gibbs + stochastic EM. Accepts
+/// `&Corpus` or any [`CorpusView`] (e.g. a zero-copy shard window).
+pub fn train<'a>(
+    corpus: impl Into<CorpusView<'a>>,
     cfg: &ExperimentConfig,
     engine: &EngineHandle,
     rng: &mut Pcg64,
 ) -> anyhow::Result<TrainOutput> {
+    let corpus: CorpusView<'a> = corpus.into();
     let t = cfg.model.topics;
-    let w = corpus.vocab_size;
+    let w = corpus.vocab_size();
     let d = corpus.num_docs();
     anyhow::ensure!(d > 0, "cannot train on an empty corpus");
     anyhow::ensure!(t >= 2, "need at least 2 topics");
@@ -74,18 +85,13 @@ pub fn train(
     let mut eta = vec![0.0f64; t];
     let mut eta_active = false; // all-zero eta => response term is constant
 
-    // Random initialization of topic assignments.
-    let mut counts = CountMatrices::new(d, t, w);
-    let mut z: Vec<Vec<u16>> = Vec::with_capacity(d);
-    for (di, doc) in corpus.docs.iter().enumerate() {
-        let mut zd = Vec::with_capacity(doc.len());
-        for &wi in &doc.tokens {
-            let topic = rng.gen_range(t);
-            counts.inc(di, wi, topic);
-            zd.push(topic as u16);
-        }
-        z.push(zd);
-    }
+    // Random initialization of topic assignments: flat z in arena order.
+    let z_offsets = corpus.local_doc_offsets();
+    let (mut counts, mut z) = CountMatrices::init_random(corpus, t, rng);
+
+    // Responses materialized once for the whole run (the only per-document
+    // data a shard worker copies out of the arena).
+    let y: Vec<f64> = corpus.responses();
 
     // Kernel selection (DESIGN.md §Perf): `auto` resolves by topic count.
     // The sparse kernel needs the counts' non-zero index; built once here,
@@ -109,14 +115,17 @@ pub fn train(
     // so u_t = exp(-e_t^2/2rho) costs T exps per *document* and each token
     // pays one fused multiply inside the remaining exp.
     let mut scratch = GaussScratch::new(t);
+    // Reusable zbar buffer for the eta steps (one allocation per run).
+    let mut zbar_buf: Vec<f32> = Vec::new();
     let mut history = Vec::new();
     let mut tokens_sampled: u64 = 0;
     let mut timings = PhaseTimings::new();
 
     for sweep in 0..cfg.train.sweeps {
         let sw = CpuStopwatch::new();
-        for (di, doc) in corpus.docs.iter().enumerate() {
-            let zd = &mut z[di];
+        for di in 0..d {
+            let tokens = corpus.doc_tokens(di);
+            let zd = &mut z[z_offsets[di] as usize..z_offsets[di + 1] as usize];
             let mut st = TrainState {
                 counts: &mut counts,
                 inv_nt: &mut inv_nt,
@@ -128,12 +137,12 @@ pub fn train(
             };
             if eta_active {
                 kernel::sweep_doc_gauss(
-                    &mut st, &mut scratch, &eta, doc.response, rho, di, &doc.tokens, zd,
+                    &mut st, &mut scratch, &eta, y[di], rho, di, tokens, zd,
                 );
             } else {
-                kern.sweep_doc_lda(&mut st, di, &doc.tokens, zd);
+                kern.sweep_doc_lda(&mut st, di, tokens, zd);
             }
-            tokens_sampled += doc.len() as u64;
+            tokens_sampled += tokens.len() as u64;
         }
         timings.add("gibbs", sw.elapsed_secs());
 
@@ -144,10 +153,9 @@ pub fn train(
         let last = sweep + 1 == cfg.train.sweeps;
         if due || last {
             let sw = CpuStopwatch::new();
-            let zbar = counts.zbar_matrix();
-            let y: Vec<f64> = corpus.responses();
+            counts.zbar_matrix_into(&mut zbar_buf);
             let lambda = cfg.model.lambda(rho);
-            let (eta_new, mse) = engine.eta_solve(&zbar, &y, t, lambda, cfg.model.mu)?;
+            let (eta_new, mse) = engine.eta_solve(&zbar_buf, &y, t, lambda, cfg.model.mu)?;
             eta = eta_new;
             eta_active = eta.iter().any(|&e| e != 0.0);
             if cfg.model.learn_rho {
@@ -166,9 +174,8 @@ pub fn train(
     // Final in-sample metrics on the fitted zbar (model card data; the
     // Weighted Average combiner computes its weights separately by
     // *predicting* the whole training set, as the paper specifies).
-    let zbar = counts.zbar_matrix();
-    let y = corpus.responses();
-    let fit = engine.predict(&zbar, &eta, Some(&y), t)?;
+    counts.zbar_matrix_into(&mut zbar_buf);
+    let fit = engine.predict(&zbar_buf, &eta, Some(&y), t)?;
 
     let phi = SldaModel::phi_from_counts(&counts, beta);
     let model = SldaModel {
@@ -181,13 +188,23 @@ pub fn train(
         train_mse: fit.mse,
         train_acc: fit.acc,
     };
-    Ok(TrainOutput { model, counts, z, responses: y, history, tokens_sampled, timings })
+    Ok(TrainOutput {
+        model,
+        counts,
+        z,
+        z_offsets,
+        responses: y,
+        history,
+        tokens_sampled,
+        timings,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::schema::ExperimentConfig;
+    use crate::data::corpus::Corpus;
     use crate::data::synthetic::{generate_with_truth, SyntheticSpec};
 
     fn quick_cfg() -> ExperimentConfig {
@@ -210,6 +227,8 @@ mod tests {
         out.counts.check_invariants().unwrap();
         assert_eq!(out.counts.total_tokens(), corpus.num_tokens() as u64);
         assert_eq!(out.tokens_sampled, (corpus.num_tokens() * cfg.train.sweeps) as u64);
+        assert_eq!(out.z.len(), corpus.num_tokens());
+        assert_eq!(out.z_offsets, corpus.doc_offsets);
 
         // MSE at the last eta step must improve over the first.
         let first = out.history.first().unwrap().train_mse;
@@ -239,6 +258,28 @@ mod tests {
         assert_eq!(a.model.eta, b.model.eta);
         assert_eq!(a.counts.ndt, b.counts.ndt);
         assert_eq!(a.model.train_mse, b.model.train_mse);
+    }
+
+    #[test]
+    fn view_training_equals_whole_corpus_training() {
+        // Training on corpus.view() and on an indexed identity view must be
+        // draw-for-draw identical to training on &corpus.
+        let spec = SyntheticSpec::continuous_small();
+        let cfg = quick_cfg();
+        let engine = EngineHandle::native();
+        let mut rng = Pcg64::seed_from_u64(8);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let ids: Vec<usize> = (0..corpus.num_docs()).collect();
+        let a = train(&corpus, &cfg, &engine, &mut Pcg64::seed_from_u64(55)).unwrap();
+        let b =
+            train(corpus.view(), &cfg, &engine, &mut Pcg64::seed_from_u64(55)).unwrap();
+        let c = train(corpus.view_of(&ids), &cfg, &engine, &mut Pcg64::seed_from_u64(55))
+            .unwrap();
+        assert_eq!(a.z, b.z);
+        assert_eq!(a.z, c.z);
+        assert_eq!(a.model.eta, b.model.eta);
+        assert_eq!(a.model.eta, c.model.eta);
+        assert_eq!(a.counts.ndt, c.counts.ndt);
     }
 
     #[test]

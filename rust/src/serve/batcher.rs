@@ -8,6 +8,12 @@
 //! worker owns a reusable [`DocInfer`] scratch, so the hot path allocates
 //! nothing beyond the zbar row.
 //!
+//! Request documents are assembled into one flat [`TokenArena`] per request
+//! (the same CSR layout the training corpus uses — DESIGN.md §Memory
+//! layout): every per-document work item holds an `Arc` of the request's
+//! arena plus a doc index, so enqueueing N documents costs one token
+//! allocation, not N.
+//!
 //! **Determinism.** Every document draws from a private RNG stream seeded
 //! by `doc_stream_seed(seed, token_hash(doc))` against an immutable
 //! [`ModelEntry`]. Predictions therefore depend only on
@@ -16,6 +22,7 @@
 //! byte-identical responses.
 
 use crate::config::schema::{KernelKind, TrainConfig};
+use crate::data::corpus::TokenArena;
 use crate::sampler::gibbs_predict::{doc_stream_seed, token_hash, DocInfer};
 use crate::serve::registry::{ModelEntry, Registry};
 use crate::util::rng::Pcg64;
@@ -65,10 +72,20 @@ pub struct DocOut {
 }
 
 struct WorkItem {
-    tokens: Vec<u32>,
+    /// The owning request's flat token arena, shared across its items.
+    docs: Arc<TokenArena>,
+    /// This item's document index within the arena.
+    doc: usize,
     seed: u64,
     slot: usize,
     tx: mpsc::Sender<(usize, anyhow::Result<DocOut>)>,
+}
+
+impl WorkItem {
+    #[inline]
+    fn tokens(&self) -> &[u32] {
+        self.docs.doc(self.doc)
+    }
 }
 
 struct Shared {
@@ -108,17 +125,26 @@ impl Batcher {
 
     /// Enqueue a request's documents and block until every one resolves.
     /// Per-document errors (e.g. a token id outside the current model's
-    /// vocabulary) come back as `Err` in that document's slot.
-    pub fn submit(&self, docs: Vec<Vec<u32>>, seed: u64) -> Vec<anyhow::Result<DocOut>> {
+    /// vocabulary) come back as `Err` in that document's slot. The request
+    /// is flattened into one shared [`TokenArena`] up front — per-document
+    /// work items borrow it through an `Arc` instead of owning a `Vec`.
+    pub fn submit(&self, docs: &[Vec<u32>], seed: u64) -> Vec<anyhow::Result<DocOut>> {
         let n = docs.len();
         if n == 0 {
             return Vec::new();
         }
+        let arena = Arc::new(TokenArena::from_docs(docs));
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
-            for (slot, tokens) in docs.into_iter().enumerate() {
-                q.push_back(WorkItem { tokens, seed, slot, tx: tx.clone() });
+            for slot in 0..n {
+                q.push_back(WorkItem {
+                    docs: Arc::clone(&arena),
+                    doc: slot,
+                    seed,
+                    slot,
+                    tx: tx.clone(),
+                });
             }
         }
         self.shared.cv.notify_all();
@@ -229,11 +255,12 @@ fn predict_one(
     item: &WorkItem,
 ) -> anyhow::Result<DocOut> {
     let model = &entry.model;
-    anyhow::ensure!(!item.tokens.is_empty(), "empty document");
-    if let Some(&w) = item.tokens.iter().find(|&&w| w as usize >= model.w) {
+    let tokens = item.tokens();
+    anyhow::ensure!(!tokens.is_empty(), "empty document");
+    if let Some(&w) = tokens.iter().find(|&&w| w as usize >= model.w) {
         anyhow::bail!("token id {w} >= model vocab size {}", model.w);
     }
-    let hash = token_hash(&item.tokens);
+    let hash = token_hash(tokens);
     let key = (entry.version, item.seed, hash);
     if let Some(yhat) = registry.cache_get(key) {
         stats.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -241,7 +268,7 @@ fn predict_one(
     }
     stats.cache_misses.fetch_add(1, Ordering::Relaxed);
     let mut rng = Pcg64::seed_from_u64(doc_stream_seed(item.seed, hash));
-    infer.infer_doc(model, &entry.phi_cum, &cfg.train, &item.tokens, &mut rng, zrow);
+    infer.infer_doc(model, &entry.phi_cum, &cfg.train, tokens, &mut rng, zrow);
     let yhat = model.predict_zbar(zrow);
     registry.cache_put(key, yhat);
     Ok(DocOut { yhat, model_version: entry.version, cached: false })
@@ -311,15 +338,15 @@ mod tests {
         let (b, _reg, stats, p) = start("det", 3, 4, 0);
         let d = docs(17, 1);
         let r1: Vec<f64> =
-            b.submit(d.clone(), 9).into_iter().map(|r| r.unwrap().yhat).collect();
+            b.submit(&d, 9).into_iter().map(|r| r.unwrap().yhat).collect();
         let r2: Vec<f64> =
-            b.submit(d.clone(), 9).into_iter().map(|r| r.unwrap().yhat).collect();
+            b.submit(&d, 9).into_iter().map(|r| r.unwrap().yhat).collect();
         assert_eq!(r1.len(), 17);
         assert!(r1.iter().all(|y| y.is_finite()));
         assert_eq!(r1, r2, "same (model, seed, docs) must repeat exactly");
         // a different seed changes the draw
         let r3: Vec<f64> =
-            b.submit(d, 10).into_iter().map(|r| r.unwrap().yhat).collect();
+            b.submit(&d, 10).into_iter().map(|r| r.unwrap().yhat).collect();
         assert_ne!(r1, r3);
         assert_eq!(stats.predict_docs.load(Ordering::Relaxed), 17 * 3);
         assert!(stats.batches.load(Ordering::Relaxed) >= 3 * 5); // ceil(17/4) each
@@ -334,14 +361,14 @@ mod tests {
         let solo: Vec<Vec<f64>> = base
             .iter()
             .map(|d| {
-                b.submit(vec![d.clone()], 3).into_iter().map(|r| r.unwrap().yhat).collect()
+                b.submit(std::slice::from_ref(d), 3).into_iter().map(|r| r.unwrap().yhat).collect()
             })
             .collect();
         // hammer from 8 threads concurrently; every thread sends the same
         // docs and must get the same answers back in its own slots
         let ids: Vec<usize> = (0..8).collect();
         let all = scoped_map(&ids, 8, |_, _| {
-            b.submit(base.clone(), 3)
+            b.submit(&base, 3)
                 .into_iter()
                 .map(|r| r.unwrap().yhat)
                 .collect::<Vec<f64>>()
@@ -360,9 +387,9 @@ mod tests {
     fn cache_serves_repeats_and_batch_errors_are_per_doc() {
         let (b, _reg, stats, p) = start("cache", 2, 8, 64);
         let d = docs(3, 3);
-        let first: Vec<DocOut> = b.submit(d.clone(), 1).into_iter().map(|r| r.unwrap()).collect();
+        let first: Vec<DocOut> = b.submit(&d, 1).into_iter().map(|r| r.unwrap()).collect();
         assert!(first.iter().all(|o| !o.cached));
-        let second: Vec<DocOut> = b.submit(d.clone(), 1).into_iter().map(|r| r.unwrap()).collect();
+        let second: Vec<DocOut> = b.submit(&d, 1).into_iter().map(|r| r.unwrap()).collect();
         assert!(second.iter().all(|o| o.cached));
         assert_eq!(
             first.iter().map(|o| o.yhat).collect::<Vec<_>>(),
@@ -372,7 +399,7 @@ mod tests {
 
         // one bad doc (token out of vocab) fails alone; empty doc too
         let mixed = vec![d[0].clone(), vec![9999], Vec::new(), d[1].clone()];
-        let res = b.submit(mixed, 1);
+        let res = b.submit(&mixed, 1);
         assert!(res[0].is_ok());
         assert!(res[1].is_err());
         assert!(res[2].is_err());
@@ -387,10 +414,10 @@ mod tests {
         let p2 = tmp("swap2");
         save_model_with_vocab(&tiny_model(77), None, &p2).unwrap();
         let d = docs(4, 4);
-        let v1: Vec<DocOut> = b.submit(d.clone(), 2).into_iter().map(|r| r.unwrap()).collect();
+        let v1: Vec<DocOut> = b.submit(&d, 2).into_iter().map(|r| r.unwrap()).collect();
         assert!(v1.iter().all(|o| o.model_version == 1));
         reg.reload(Some(&p2)).unwrap();
-        let v2: Vec<DocOut> = b.submit(d, 2).into_iter().map(|r| r.unwrap()).collect();
+        let v2: Vec<DocOut> = b.submit(&d, 2).into_iter().map(|r| r.unwrap()).collect();
         assert!(v2.iter().all(|o| o.model_version == 2));
         assert!(v2.iter().all(|o| !o.cached), "cache must not leak across versions");
         drop(b);

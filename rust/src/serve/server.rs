@@ -300,7 +300,7 @@ fn submit_uniform(
     seed: u64,
     want: Option<u64>,
 ) -> Result<Option<String>, HttpError> {
-    let results = state.batcher.submit(docs.to_vec(), seed);
+    let results = state.batcher.submit(docs, seed);
     let mut yhat = Vec::with_capacity(results.len());
     let mut version: Option<u64> = None;
     let mut cached = 0usize;

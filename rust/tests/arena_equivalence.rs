@@ -1,0 +1,153 @@
+//! Seed-exact equivalence between the legacy `Vec<Document>` construction
+//! path and the CSR token-arena layout (DESIGN.md §Memory layout), end to
+//! end: training draws, count state, eta, zbar and final metrics must be
+//! byte-identical however the corpus was built, for every `Algorithm`
+//! variant at M = 4 shards — and the view-based shard handoff must copy no
+//! token arrays (ledger `setup_copied_bytes` = doc ids + responses only).
+
+use cfslda::config::schema::{EngineKind, ExperimentConfig, KernelKind};
+use cfslda::data::corpus::{Corpus, Dataset, Document};
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::parallel::leader::{run_with_engine, Algorithm};
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_predict::infer_zbar_with_kernel;
+use cfslda::sampler::gibbs_train::train;
+use cfslda::util::rng::Pcg64;
+
+/// Rebuild a corpus the legacy way: per-document `Document` records pushed
+/// through `Corpus::new` (the pre-arena constructor every loader used).
+fn legacy_rebuild(c: &Corpus) -> Corpus {
+    let docs: Vec<Document> = (0..c.num_docs())
+        .map(|i| Document { tokens: c.doc_tokens(i).to_vec(), response: c.response(i) })
+        .collect();
+    Corpus::new(docs, c.vocab_size)
+}
+
+/// Rebuild a corpus straight from arena parts (`from_parts`).
+fn arena_rebuild(c: &Corpus) -> Corpus {
+    Corpus::from_parts(
+        c.tokens.clone(),
+        c.doc_offsets.clone(),
+        c.responses.clone(),
+        c.vocab_size,
+    )
+    .unwrap()
+}
+
+fn fixture() -> (Dataset, ExperimentConfig) {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(20170710);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let mut cfg = ExperimentConfig::quick();
+    cfg.engine = EngineKind::Native;
+    cfg.train.sweeps = 12;
+    cfg.train.burnin = 3;
+    cfg.train.eta_every = 3;
+    cfg.train.predict_sweeps = 6;
+    cfg.train.predict_burnin = 2;
+    cfg.parallel.shards = 4;
+    cfg.parallel.threads = 4;
+    (ds, cfg)
+}
+
+#[test]
+fn construction_paths_produce_identical_corpora() {
+    let (ds, _) = fixture();
+    assert_eq!(legacy_rebuild(&ds.train), ds.train);
+    assert_eq!(arena_rebuild(&ds.train), ds.train);
+    assert_eq!(legacy_rebuild(&ds.test), arena_rebuild(&ds.test));
+}
+
+#[test]
+fn training_is_seed_exact_across_layouts() {
+    // z draws, ndt, eta, prediction zbar and final metrics must not depend
+    // on how the corpus was constructed.
+    let (ds, cfg) = fixture();
+    let engine = EngineHandle::native();
+    let run = |c: &Corpus| {
+        let out = train(c, &cfg, &engine, &mut Pcg64::seed_from_u64(77)).unwrap();
+        let zbar = infer_zbar_with_kernel(
+            &out.model,
+            &ds.test,
+            &cfg.train,
+            KernelKind::Auto,
+            &mut Pcg64::seed_from_u64(78),
+        );
+        (out, zbar)
+    };
+    let (a, za) = run(&ds.train);
+    let (b, zb) = run(&legacy_rebuild(&ds.train));
+    let (c, zc) = run(&arena_rebuild(&ds.train));
+    assert_eq!(a.z, b.z, "z draws diverged (legacy)");
+    assert_eq!(a.z, c.z, "z draws diverged (from_parts)");
+    assert_eq!(a.z_offsets, b.z_offsets);
+    assert_eq!(a.counts.ndt, b.counts.ndt, "ndt diverged");
+    assert_eq!(a.counts.ntw, c.counts.ntw, "ntw diverged");
+    assert_eq!(a.model.eta, b.model.eta, "eta diverged");
+    assert_eq!(a.model.eta, c.model.eta);
+    assert_eq!(a.model.train_mse, b.model.train_mse, "final metrics diverged");
+    assert_eq!(a.model.train_acc, c.model.train_acc);
+    assert_eq!(a.responses, b.responses);
+    assert_eq!(za, zb, "prediction zbar diverged");
+    assert_eq!(za, zc);
+}
+
+#[test]
+fn all_algorithms_seed_exact_across_layouts_at_m4() {
+    // The full five-variant comparison (M = 4 shards): legacy-built and
+    // arena-built datasets must yield byte-identical predictions, metrics
+    // and per-shard summaries.
+    let (ds, cfg) = fixture();
+    let legacy = Dataset { train: legacy_rebuild(&ds.train), test: legacy_rebuild(&ds.test) };
+    let arena = Dataset { train: arena_rebuild(&ds.train), test: arena_rebuild(&ds.test) };
+    let engine = EngineHandle::native();
+    for algo in Algorithm::ALL_EXTENDED {
+        let (a, _) = run_with_engine(algo, &ds, &cfg, &engine, false).unwrap();
+        let (b, _) = run_with_engine(algo, &legacy, &cfg, &engine, false).unwrap();
+        let (c, _) = run_with_engine(algo, &arena, &cfg, &engine, false).unwrap();
+        assert_eq!(a.yhat, b.yhat, "{}: yhat diverged (legacy)", algo.name());
+        assert_eq!(a.yhat, c.yhat, "{}: yhat diverged (from_parts)", algo.name());
+        assert_eq!(a.test_metrics, b.test_metrics, "{}: metrics diverged", algo.name());
+        assert_eq!(a.test_metrics, c.test_metrics);
+        for (sa, sb) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(sa.eta, sb.eta, "{}: shard eta diverged", algo.name());
+            assert_eq!(sa.fit_mse, sb.fit_mse);
+            assert_eq!(sa.docs, sb.docs);
+        }
+        assert_eq!(a.comm, b.comm, "{}: comm accounting diverged", algo.name());
+    }
+}
+
+#[test]
+fn shard_setup_copies_no_token_arrays() {
+    // The acceptance bar: with view-based handoff the duplicated setup
+    // bytes are per-document doc ids + responses (16 B/doc per shard
+    // assignment), plus — Weighted Average only — the full training labels
+    // each worker materializes for its eq. 8 weight pass (8 B/doc/worker).
+    // Token arrays move exactly zero times for every parallel algorithm.
+    let (ds, cfg) = fixture();
+    let engine = EngineHandle::native();
+    let docs = ds.train.num_docs() as u64;
+    let m = cfg.parallel.shards as u64;
+    for algo in [
+        Algorithm::NaiveCombination,
+        Algorithm::SimpleAverage,
+        Algorithm::WeightedAverage,
+        Algorithm::MedianAverage,
+    ] {
+        let (out, _) = run_with_engine(algo, &ds, &cfg, &engine, false).unwrap();
+        let full_train_labels =
+            if algo == Algorithm::WeightedAverage { m * docs * 8 } else { 0 };
+        assert_eq!(
+            out.comm.setup_copied_bytes,
+            docs * 16 + full_train_labels,
+            "{}: shard setup copied more than doc ids + labels",
+            algo.name()
+        );
+        // token payload is referenced, never copied: the train corpus is
+        // referenced exactly once by the shard partition (plus full-corpus
+        // views for test/full-train prediction, which copy no tokens).
+        assert!(out.comm.setup_referenced_bytes >= cfslda::parallel::comm::corpus_bytes(&ds.train));
+        assert_eq!(out.comm.sampling_syncs, 0);
+    }
+}

@@ -52,10 +52,10 @@ fn split_preserves_multiset_of_docs() {
             let ds = train_test_split(&corpus, k, &mut rng);
             let mut all: Vec<i64> = ds
                 .train
-                .docs
+                .responses
                 .iter()
-                .chain(&ds.test.docs)
-                .map(|d| d.response as i64)
+                .chain(&ds.test.responses)
+                .map(|&y| y as i64)
                 .collect();
             all.sort_unstable();
             assert_eq!(all, (0..n as i64).collect::<Vec<_>>());
