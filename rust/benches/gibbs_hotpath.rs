@@ -1,13 +1,15 @@
 //! Bench: the L3 hot path — collapsed-Gibbs token updates per second,
-//! reported **per kernel** (dense vs sparse; DESIGN.md §Perf).
+//! reported **per kernel** (dense vs sparse vs alias-MH; DESIGN.md §Perf).
 //!
 //! The paper's wall-time claims all reduce to this number times token
 //! count. Three regimes:
 //!
 //! * `train-lda`  — eta-inactive training sweeps (plain-LDA conditional):
-//!   kernel-specific; the sparse kernel's bucket decomposition applies.
+//!   kernel-specific; the sparse kernel's bucket decomposition and the
+//!   alias kernel's O(1) MH proposals apply.
 //! * `predict`    — frozen-phi inference (paper eq. 4): fully kernel-
-//!   specific; the sparse path is O(nnz(N_d)) per token.
+//!   specific; the sparse path is O(nnz(N_d)) per token and the alias
+//!   path amortized O(1) (the serving regime).
 //! * `train-slda` — eta-active sweeps (Gaussian margin): both kernels
 //!   share the dense path, benched once as a reference.
 //!
@@ -20,8 +22,8 @@
 //!   accounting, plus end-to-end shard training tokens/s on each layout.
 //!
 //! Emits `BENCH_gibbs_hotpath.json` at the repo root (tokens/sec per kernel
-//! per T ∈ {16, 64, 256}, and the shard-setup table) so the perf trajectory
-//! is tracked across PRs.
+//! per T ∈ {16, 64, 256, 1024}, kernel-over-kernel speedups, and the
+//! shard-setup table) so the perf trajectory is tracked across PRs.
 
 use cfslda::bench_harness::{bench, bench_throughput, quick_mode, render_table, BenchResult};
 use cfslda::config::json::{self, Value};
@@ -69,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     let mut records: Vec<Record> = Vec::new();
 
-    for &t in &[16usize, 64, 256] {
+    for &t in &[16usize, 64, 256, 1024] {
         // Base config: burn-in-only training => eta stays zero => the
         // plain-LDA conditional runs for every sweep.
         let mut base = ExperimentConfig::quick();
@@ -91,8 +93,8 @@ fn main() -> anyhow::Result<()> {
             train(&corpus, &cfg, &engine, &mut r)?.model
         };
 
-        for &kernel in &[KernelKind::Dense, KernelKind::Sparse] {
-            let kname = kernel.resolve(t).name();
+        for &kernel in &[KernelKind::Dense, KernelKind::Sparse, KernelKind::Alias] {
+            let kname = kernel.name();
 
             let mut cfg = base.clone();
             cfg.sampler.kernel = kernel;
@@ -246,9 +248,10 @@ fn main() -> anyhow::Result<()> {
         )
     );
 
-    // Sparse-over-dense speedups per (T, path).
+    // Kernel-over-kernel speedups per (T, path). The acceptance bar for
+    // the alias kernel: predict throughput above sparse at T >= 256.
     let mut speedups: Vec<Value> = Vec::new();
-    for &t in &[16usize, 64, 256] {
+    for &t in &[16usize, 64, 256, 1024] {
         for path in ["train_lda", "predict"] {
             let find = |kernel: &str| {
                 records
@@ -256,13 +259,23 @@ fn main() -> anyhow::Result<()> {
                     .find(|r| r.t == t && r.path == path && r.kernel == kernel)
                     .map(|r| r.tokens_per_sec)
             };
-            if let (Some(d), Some(s)) = (find("dense"), find("sparse")) {
-                if d > 0.0 {
-                    println!("speedup {path} T={t}: sparse/dense = {:.2}x", s / d);
+            if let (Some(d), Some(s), Some(a)) =
+                (find("dense"), find("sparse"), find("alias"))
+            {
+                if d > 0.0 && s > 0.0 {
+                    println!(
+                        "speedup {path} T={t}: sparse/dense = {:.2}x, \
+                         alias/dense = {:.2}x, alias/sparse = {:.2}x",
+                        s / d,
+                        a / d,
+                        a / s
+                    );
                     speedups.push(Value::object(vec![
                         ("t", Value::Number(t as f64)),
                         ("path", Value::String(path.to_string())),
                         ("sparse_over_dense", Value::Number(s / d)),
+                        ("alias_over_dense", Value::Number(a / d)),
+                        ("alias_over_sparse", Value::Number(a / s)),
                     ]));
                 }
             }

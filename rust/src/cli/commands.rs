@@ -33,10 +33,12 @@ COMMANDS:
   run         Run one algorithm on a corpus
               --data FILE.bow --algorithm non-parallel|naive|simple|weighted|median
               [--train N] [--config CFG.json] [--engine auto|xla|native]
-              [--kernel dense|sparse|auto] [--seed S] [--json OUT.json]
+              [--kernel dense|sparse|alias|auto] [--alias-staleness N]
+              [--seed S] [--json OUT.json]
   train       Train a single sLDA model and save it
               --data FILE.bow|FILE.jsonl --out MODEL.bin [--config CFG.json]
-              [--seed S] [--kernel dense|sparse|auto] [--vocab TERMS.txt]
+              [--seed S] [--kernel dense|sparse|alias|auto] [--alias-staleness N]
+              [--vocab TERMS.txt]
               [--min-df F] [--max-df F]
               A .jsonl corpus ({\"text\", \"response\"} lines) is tokenized
               here and the learned vocabulary is persisted into the model,
@@ -44,7 +46,7 @@ COMMANDS:
               corpora pass --vocab (one term per line, id order) to attach
               terms.
   predict     Predict with a saved model
-              --model MODEL.bin --data FILE.bow [--kernel dense|sparse|auto]
+              --model MODEL.bin --data FILE.bow [--kernel dense|sparse|alias|auto]
               [--jobs N] [--seed S] [--json OUT.json]
               Documents are seeded individually (content-addressed), so the
               output is identical for any --jobs and matches `cfslda serve`
@@ -63,12 +65,14 @@ COMMANDS:
                 cfslda train --data corpus.bow --out m.bin
                 cfslda serve --model m.bin --port 7878 &
                 curl -d '{\"docs\": [[0, 4, 4]]}' localhost:7878/predict
-  serve-bench Loopback load harness; writes BENCH_serve.json
+  serve-bench Loopback load harness; writes BENCH_serve.json with
+              before/after docs/s per kernel (default sparse,alias)
               --model MODEL.bin [--quick] [--workers-list 1,2,4]
-              [--batch-list 1,8] [--clients N] [--requests N] [--json F]
+              [--batch-list 1,8] [--kernel-list sparse,alias] [--clients N]
+              [--requests N] [--json F]
   experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
               --fig 6|7 [--scale F] [--runs N] [--engine E]
-              [--kernel dense|sparse|auto] [--check]
+              [--kernel dense|sparse|alias|auto] [--check]
   figs        Reproduce illustration figures: --fig 1|2|3|5
   help        This text
 
@@ -97,11 +101,14 @@ fn spec_from_args(a: &Args) -> anyhow::Result<SyntheticSpec> {
     Ok(spec)
 }
 
-/// Apply the shared `--kernel dense|sparse|auto` flag to a config.
+/// Apply the shared `--kernel dense|sparse|alias|auto` flag (plus the alias
+/// kernel's `--alias-staleness` rebuild budget) to a config.
 fn apply_kernel_flag(a: &Args, cfg: &mut ExperimentConfig) -> anyhow::Result<()> {
     if let Some(k) = a.get("kernel") {
         cfg.sampler.kernel = KernelKind::parse(k)?;
     }
+    cfg.sampler.alias_staleness =
+        a.get_usize("alias-staleness", cfg.sampler.alias_staleness)?;
     Ok(())
 }
 
@@ -461,6 +468,12 @@ pub fn cmd_serve_bench(a: &Args) -> anyhow::Result<i32> {
     if let Some(b) = a.get("batch-list") {
         opts.batch_list = parse_usize_list(b, "batch-list")?;
     }
+    if let Some(k) = a.get("kernel-list") {
+        opts.kernel_list = k
+            .split(',')
+            .map(|x| KernelKind::parse(x.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
     opts.clients = a.get_usize("clients", opts.clients)?;
     opts.requests_per_client = a.get_usize("requests", opts.requests_per_client)?;
     opts.doc_len = a.get_usize("doc-len", opts.doc_len)?;
@@ -634,11 +647,15 @@ mod tests {
         let v = json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(v.get("bench").unwrap().as_str(), Some("serve"));
         let cells = v.get("results").unwrap().as_array().unwrap();
-        assert_eq!(cells.len(), 2);
+        // default kernel sweep (sparse, alias) x workers-list (1, 2)
+        assert_eq!(cells.len(), 4);
         for c in cells {
             assert!(c.get("docs_per_sec").unwrap().as_f64().unwrap() > 0.0);
             assert!(c.get("p95_ms").unwrap().as_f64().unwrap().is_finite());
         }
+        let kernels: Vec<&str> =
+            cells.iter().filter_map(|c| c.get("kernel").unwrap().as_str()).collect();
+        assert_eq!(kernels, vec!["sparse", "sparse", "alias", "alias"]);
         for f in [bow, model, out] {
             std::fs::remove_file(f).ok();
         }

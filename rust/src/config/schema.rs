@@ -46,21 +46,33 @@ pub enum KernelKind {
     Dense,
     /// SparseLDA-style bucket decomposition iterating only non-zero counts.
     Sparse,
-    /// Sparse when T >= [`SPARSE_AUTO_TOPICS`], else dense.
+    /// Walker alias tables + Metropolis-Hastings correction: amortized O(1)
+    /// per token (LightLDA-style). Statistically equivalent to dense/sparse
+    /// but a *different* (still seed-deterministic) chain — exempt from the
+    /// byte-identical contract (DESIGN.md §Perf).
+    Alias,
+    /// Path-dependent resolution: see [`KernelKind::resolve_train`] and
+    /// [`KernelKind::resolve_predict`].
     Auto,
 }
 
-/// `auto` kernel threshold: below this topic count the dense kernel's
+/// `auto` train-kernel threshold: below this topic count the dense kernel's
 /// branch-free loops win; at and above it sparsity pays (DESIGN.md §Perf).
 pub const SPARSE_AUTO_TOPICS: usize = 64;
+
+/// `auto` train-kernel threshold for the alias-MH kernel: at and above this
+/// topic count the amortized O(1) alias draw beats even the sparse bucket
+/// walk on burn-in sweeps (DESIGN.md §Perf).
+pub const ALIAS_AUTO_TOPICS: usize = 256;
 
 impl KernelKind {
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "dense" => KernelKind::Dense,
             "sparse" => KernelKind::Sparse,
+            "alias" => KernelKind::Alias,
             "auto" => KernelKind::Auto,
-            other => bail!("unknown sampler kernel '{other}' (expected dense|sparse|auto)"),
+            other => bail!("unknown sampler kernel '{other}' (expected dense|sparse|alias|auto)"),
         })
     }
 
@@ -68,16 +80,20 @@ impl KernelKind {
         match self {
             KernelKind::Dense => "dense",
             KernelKind::Sparse => "sparse",
+            KernelKind::Alias => "alias",
             KernelKind::Auto => "auto",
         }
     }
 
-    /// Resolve `Auto` by topic count; `Dense`/`Sparse` pass through. The
-    /// result is never `Auto`.
-    pub fn resolve(self, topics: usize) -> KernelKind {
+    /// Resolve `Auto` for the training path by topic count: alias-MH at
+    /// T >= [`ALIAS_AUTO_TOPICS`], sparse at T >= [`SPARSE_AUTO_TOPICS`],
+    /// dense below. Explicit kinds pass through; the result is never `Auto`.
+    pub fn resolve_train(self, topics: usize) -> KernelKind {
         match self {
             KernelKind::Auto => {
-                if topics >= SPARSE_AUTO_TOPICS {
+                if topics >= ALIAS_AUTO_TOPICS {
+                    KernelKind::Alias
+                } else if topics >= SPARSE_AUTO_TOPICS {
                     KernelKind::Sparse
                 } else {
                     KernelKind::Dense
@@ -86,19 +102,37 @@ impl KernelKind {
             k => k,
         }
     }
+
+    /// Resolve `Auto` for the prediction path: phi is frozen there, so the
+    /// per-word alias tables are exact (never stale) and the amortized O(1)
+    /// MH draw wins at every T. Explicit kinds pass through; the result is
+    /// never `Auto`.
+    pub fn resolve_predict(self, _topics: usize) -> KernelKind {
+        match self {
+            KernelKind::Auto => KernelKind::Alias,
+            k => k,
+        }
+    }
 }
 
 /// Sampler implementation knobs (orthogonal to the model/schedule).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SamplerConfig {
-    /// Token-update kernel; both kernels are draw-for-draw identical under
-    /// a fixed seed, so this only changes throughput.
+    /// Token-update kernel. Dense and sparse are draw-for-draw identical
+    /// under a fixed seed; alias is statistically equivalent (and still
+    /// seed-deterministic) but a different chain.
     pub kernel: KernelKind,
+    /// Alias-kernel staleness budget (training path only): how many count
+    /// updates a word's table may absorb before the next touch rebuilds it.
+    /// 0 = auto (resolves to `max(T, 16)` — amortized O(1) rebuild cost).
+    /// Only meaningful for `kernel = alias` (or `auto`); prediction tables
+    /// are built once against frozen phi and are always exact.
+    pub alias_staleness: usize,
 }
 
 impl Default for SamplerConfig {
     fn default() -> Self {
-        SamplerConfig { kernel: KernelKind::Auto }
+        SamplerConfig { kernel: KernelKind::Auto, alias_staleness: 0 }
     }
 }
 
@@ -313,6 +347,7 @@ impl ExperimentConfig {
             ])),
             ("sampler", Value::object(vec![
                 ("kernel", Value::String(self.sampler.kernel.name().to_string())),
+                ("alias_staleness", Value::Number(self.sampler.alias_staleness as f64)),
             ])),
             ("parallel", Value::object(vec![
                 ("shards", Value::Number(self.parallel.shards as f64)),
@@ -354,6 +389,7 @@ impl ExperimentConfig {
                 c.sampler.kernel =
                     KernelKind::parse(k.as_str().context("sampler.kernel must be a string")?)?;
             }
+            read_usize(s, "alias_staleness", &mut c.sampler.alias_staleness)?;
         }
         if let Some(p) = v.get("parallel") {
             read_usize(p, "shards", &mut c.parallel.shards)?;
@@ -457,15 +493,40 @@ mod tests {
         assert_eq!(c2.sampler.kernel, KernelKind::Sparse);
         let c3 = ExperimentConfig::from_json("{}").unwrap();
         assert_eq!(c3.sampler.kernel, KernelKind::Auto);
+        assert_eq!(c3.sampler.alias_staleness, 0);
 
-        assert_eq!(KernelKind::Auto.resolve(SPARSE_AUTO_TOPICS - 1), KernelKind::Dense);
-        assert_eq!(KernelKind::Auto.resolve(SPARSE_AUTO_TOPICS), KernelKind::Sparse);
-        assert_eq!(KernelKind::Dense.resolve(1024), KernelKind::Dense);
-        assert_eq!(KernelKind::Sparse.resolve(2), KernelKind::Sparse);
-        for k in [KernelKind::Dense, KernelKind::Sparse, KernelKind::Auto] {
+        // auto train resolution: dense -> sparse -> alias by topic count
+        assert_eq!(KernelKind::Auto.resolve_train(SPARSE_AUTO_TOPICS - 1), KernelKind::Dense);
+        assert_eq!(KernelKind::Auto.resolve_train(SPARSE_AUTO_TOPICS), KernelKind::Sparse);
+        assert_eq!(KernelKind::Auto.resolve_train(ALIAS_AUTO_TOPICS - 1), KernelKind::Sparse);
+        assert_eq!(KernelKind::Auto.resolve_train(ALIAS_AUTO_TOPICS), KernelKind::Alias);
+        // auto predict resolution: alias at every T (frozen phi => exact tables)
+        assert_eq!(KernelKind::Auto.resolve_predict(2), KernelKind::Alias);
+        assert_eq!(KernelKind::Auto.resolve_predict(4096), KernelKind::Alias);
+        // explicit kinds pass through on both paths
+        assert_eq!(KernelKind::Dense.resolve_train(1024), KernelKind::Dense);
+        assert_eq!(KernelKind::Sparse.resolve_train(2), KernelKind::Sparse);
+        assert_eq!(KernelKind::Alias.resolve_train(2), KernelKind::Alias);
+        assert_eq!(KernelKind::Dense.resolve_predict(1024), KernelKind::Dense);
+        assert_eq!(KernelKind::Sparse.resolve_predict(1024), KernelKind::Sparse);
+        for k in [KernelKind::Dense, KernelKind::Sparse, KernelKind::Alias, KernelKind::Auto] {
             assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
         }
         assert!(KernelKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn alias_staleness_roundtrips() {
+        let mut c = ExperimentConfig::quick();
+        c.sampler.kernel = KernelKind::Alias;
+        c.sampler.alias_staleness = 128;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sampler.alias_staleness, 128);
+        assert_eq!(c2.sampler.kernel, KernelKind::Alias);
+        assert!(ExperimentConfig::from_json(
+            r#"{"sampler": {"alias_staleness": -4}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Config validation: fail fast with actionable messages before a run.
 
-use super::schema::{EngineKind, ExperimentConfig};
+use super::schema::{EngineKind, ExperimentConfig, KernelKind};
 use anyhow::bail;
 
 /// Hard topic ceiling: token assignments are stored as `u16` and the
@@ -58,6 +58,24 @@ pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
         bail!(
             "train.predict_burnin ({}) must be < train.predict_sweeps ({})",
             t.predict_burnin, t.predict_sweeps
+        );
+    }
+    let sp = &c.sampler;
+    if sp.alias_staleness > 0
+        && matches!(sp.kernel, KernelKind::Dense | KernelKind::Sparse)
+    {
+        bail!(
+            "sampler.alias_staleness ({}) only applies to the alias kernel, \
+             but sampler.kernel = {}; drop the knob or set kernel = alias|auto",
+            sp.alias_staleness,
+            sp.kernel.name()
+        );
+    }
+    if sp.alias_staleness > 1 << 20 {
+        bail!(
+            "sampler.alias_staleness must be <= {} (0 = auto), got {}",
+            1usize << 20,
+            sp.alias_staleness
         );
     }
     let p = &c.parallel;
@@ -166,6 +184,36 @@ mod tests {
         assert!(validate(&c).is_err());
         let mut c = ExperimentConfig::quick();
         c.serve.workers = 4096;
+        assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_alias_staleness_on_non_alias_kernels() {
+        use crate::config::schema::KernelKind;
+        // staleness knob with a kernel that can never resolve to alias
+        for k in [KernelKind::Dense, KernelKind::Sparse] {
+            let mut c = ExperimentConfig::quick();
+            c.sampler.kernel = k;
+            c.sampler.alias_staleness = 64;
+            let err = validate(&c).unwrap_err().to_string();
+            assert!(err.contains("alias_staleness"), "{err}");
+        }
+        // fine with alias and with auto (which may resolve to alias)
+        for k in [KernelKind::Alias, KernelKind::Auto] {
+            let mut c = ExperimentConfig::quick();
+            c.sampler.kernel = k;
+            c.sampler.alias_staleness = 64;
+            validate(&c).unwrap();
+        }
+        // 0 = auto is always valid
+        let mut c = ExperimentConfig::quick();
+        c.sampler.kernel = KernelKind::Dense;
+        c.sampler.alias_staleness = 0;
+        validate(&c).unwrap();
+        // absurd budgets are rejected
+        let mut c = ExperimentConfig::quick();
+        c.sampler.kernel = KernelKind::Alias;
+        c.sampler.alias_staleness = (1 << 20) + 1;
         assert!(validate(&c).is_err());
     }
 

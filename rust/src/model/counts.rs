@@ -61,6 +61,12 @@ pub struct CountMatrices {
     /// Optional non-zero index for the sparse kernel (see
     /// [`CountMatrices::enable_sparse_index`]).
     pub nz: Option<SparseIndex>,
+    /// Optional per-word update counter for the alias kernel's staleness
+    /// policy (see [`CountMatrices::enable_alias_rev`]): `alias_rev[w]` is
+    /// bumped on every `inc`/`dec` that touches word `w`, so the kernel can
+    /// rebuild word `w`'s alias table lazily once the updates since its
+    /// build exceed the staleness budget.
+    pub alias_rev: Option<Vec<u32>>,
 }
 
 impl CountMatrices {
@@ -74,7 +80,16 @@ impl CountMatrices {
             ntw: vec![0; w * t],
             nt: vec![0; t],
             nz: None,
+            alias_rev: None,
         }
+    }
+
+    /// Start counting per-word updates for the alias kernel's staleness
+    /// policy (counters reset to zero; maintained by `inc`/`dec` from here
+    /// on). Wrapping arithmetic on the consumer side makes overflow benign —
+    /// at worst one early rebuild every 2^32 updates.
+    pub fn enable_alias_rev(&mut self) {
+        self.alias_rev = Some(vec![0u32; self.w]);
     }
 
     /// Build (or rebuild) the sparse non-zero index from the current
@@ -117,6 +132,9 @@ impl CountMatrices {
                 insert_sorted(&mut nz.word_nz[w as usize], topic as u16);
             }
         }
+        if let Some(rev) = &mut self.alias_rev {
+            rev[w as usize] = rev[w as usize].wrapping_add(1);
+        }
     }
 
     /// Remove the assignment of token `w` of document `d` to `topic`.
@@ -138,6 +156,9 @@ impl CountMatrices {
             if word_empty {
                 remove_sorted(&mut nz.word_nz[w as usize], topic as u16);
             }
+        }
+        if let Some(rev) = &mut self.alias_rev {
+            rev[w as usize] = rev[w as usize].wrapping_add(1);
         }
     }
 
@@ -224,9 +245,11 @@ impl CountMatrices {
         for (a, b) in self.nt.iter_mut().zip(&other.nt) {
             *a += b;
         }
-        // Bulk pooling bypasses inc/dec; drop the index rather than let it
-        // go stale (re-enable after pooling if sparse sampling is needed).
+        // Bulk pooling bypasses inc/dec; drop the index and the alias
+        // update counters rather than let them go stale (re-enable after
+        // pooling if sparse/alias sampling is needed).
         self.nz = None;
+        self.alias_rev = None;
     }
 
     /// Verify internal consistency: sum_t N_dt == N_d, sum_w N_tw == N_t,
@@ -253,6 +276,9 @@ impl CountMatrices {
         let total_t: u64 = self.nt.iter().map(|&x| x as u64).sum();
         if total_d != total_t {
             anyhow::bail!("token totals disagree: docs {total_d} vs topics {total_t}");
+        }
+        if let Some(rev) = &self.alias_rev {
+            anyhow::ensure!(rev.len() == self.w, "alias_rev length mismatch");
         }
         if let Some(nz) = &self.nz {
             anyhow::ensure!(nz.doc_nz.len() == self.d, "doc_nz row count mismatch");
@@ -439,6 +465,27 @@ mod tests {
         a.absorb_word_topic(&b);
         assert!(a.nz.is_none());
         a.check_invariants().unwrap_err(); // doc-side counts untouched by design
+    }
+
+    #[test]
+    fn alias_rev_counts_per_word_updates() {
+        let mut c = CountMatrices::new(2, 3, 4);
+        c.inc(0, 1, 0); // pre-hook updates are not counted
+        c.enable_alias_rev();
+        assert!(c.alias_rev.as_ref().unwrap().iter().all(|&x| x == 0));
+        c.inc(0, 1, 2);
+        c.inc(1, 1, 0);
+        c.inc(0, 3, 1);
+        c.dec(0, 1, 2); // dec counts too: the table's weights changed
+        let rev = c.alias_rev.as_ref().unwrap();
+        assert_eq!(rev[1], 3);
+        assert_eq!(rev[3], 1);
+        assert_eq!(rev[0], 0);
+        c.check_invariants().unwrap();
+        // bulk pooling drops the counters like it drops the sparse index
+        let other = CountMatrices::new(1, 3, 4);
+        c.absorb_word_topic(&other);
+        assert!(c.alias_rev.is_none());
     }
 
     #[test]

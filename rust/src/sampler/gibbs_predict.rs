@@ -14,7 +14,7 @@ use crate::config::schema::{KernelKind, TrainConfig};
 use crate::data::corpus::CorpusView;
 use crate::model::slda::SldaModel;
 use crate::runtime::{EngineHandle, Prediction};
-use crate::sampler::kernel::{self, PredictState, SamplerKernel};
+use crate::sampler::kernel::{self, PhiAliasTables, PredictState, SamplerKernel};
 use crate::util::pool::scoped_map;
 use crate::util::rng::{splitmix64, Pcg64};
 
@@ -43,12 +43,15 @@ pub fn doc_stream_seed(seed: u64, token_hash: u64) -> u64 {
 
 /// Reusable single-document inference state: the kernel instance plus all
 /// per-document scratch buffers, allocated once and reused across documents
-/// (and, in the serving subsystem, across requests). `phi_cum` — the
-/// precomputed per-word sparse smoothing table — is deliberately *not* owned
-/// here: it is per-model, built once by [`kernel::build_phi_cum`] and shared
-/// by every scratch instance (the serve registry keeps it resident).
+/// (and, in the serving subsystem, across requests). The per-model tables —
+/// `phi_cum` (sparse smoothing, [`kernel::build_phi_cum`]) and the frozen-phi
+/// alias tables ([`kernel::PhiAliasTables`], required when the resolved
+/// kernel is alias) — are deliberately *not* owned here: they are built once
+/// per model and shared by every scratch instance (the serve registry keeps
+/// both resident).
 pub struct DocInfer {
     t: usize,
+    kind: KernelKind,
     kern: Box<dyn SamplerKernel>,
     ndt: Vec<u32>,
     acc: Vec<f64>,
@@ -57,11 +60,14 @@ pub struct DocInfer {
 }
 
 impl DocInfer {
-    /// Allocate scratch for `t` topics; `Auto` resolves by topic count.
+    /// Allocate scratch for `t` topics; `Auto` resolves per the prediction
+    /// rule ([`KernelKind::resolve_predict`] — alias at every T).
     pub fn new(kind: KernelKind, t: usize) -> Self {
+        let kind = kind.resolve_predict(t);
         DocInfer {
             t,
-            kern: kernel::make_kernel(kind, t),
+            kind,
+            kern: kernel::make_predict_kernel(kind, t),
             ndt: vec![0u32; t],
             acc: vec![0.0f64; t],
             probs: vec![0.0f64; t],
@@ -73,14 +79,24 @@ impl DocInfer {
         self.t
     }
 
+    /// The resolved kernel kind this scratch runs (never `Auto`).
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.kind
+    }
+
     /// Infer one document's averaged empirical topic distribution into
-    /// `out` (length T). Identical operation/RNG-consumption sequence to
-    /// the historical corpus loop, so the sequential path stays
-    /// byte-for-byte deterministic. Empty documents yield a zero row.
+    /// `out` (length T). For the dense/sparse kernels this is the identical
+    /// operation/RNG-consumption sequence to the historical corpus loop, so
+    /// those paths stay byte-for-byte deterministic; the alias kernel is a
+    /// different (still seed-deterministic) chain and additionally needs
+    /// the model's prebuilt `alias` tables. Empty documents yield a zero
+    /// row.
+    #[allow(clippy::too_many_arguments)]
     pub fn infer_doc(
         &mut self,
         model: &SldaModel,
         phi_cum: &[f64],
+        alias: Option<&PhiAliasTables>,
         cfg: &TrainConfig,
         tokens: &[u32],
         rng: &mut Pcg64,
@@ -113,6 +129,8 @@ impl DocInfer {
                 t,
                 phi: &model.phi,
                 phi_cum,
+                alias,
+                alpha: model.alpha,
                 ndt: &mut self.ndt,
                 rng: &mut *rng,
             };
@@ -131,10 +149,21 @@ impl DocInfer {
     }
 }
 
+/// Build the per-model frozen-phi alias tables when (and only when) the
+/// resolved prediction kernel needs them.
+fn build_alias_tables(model: &SldaModel, kind: KernelKind) -> Option<PhiAliasTables> {
+    match kind.resolve_predict(model.t) {
+        KernelKind::Alias => Some(PhiAliasTables::build(&model.phi, model.t)),
+        _ => None,
+    }
+}
+
 /// Infer averaged empirical topic distributions for every document with an
-/// explicit kernel choice. Returns a row-major [D, T] matrix. The kernels
-/// are draw-for-draw identical, so the choice affects throughput only.
-/// Accepts `&Corpus` or any [`CorpusView`] (e.g. a zero-copy shard window).
+/// explicit kernel choice. Returns a row-major [D, T] matrix. Dense and
+/// sparse are draw-for-draw identical (the choice affects throughput only);
+/// alias is statistically equivalent but a different seed-deterministic
+/// chain. Accepts `&Corpus` or any [`CorpusView`] (e.g. a zero-copy shard
+/// window).
 pub fn infer_zbar_with_kernel<'a>(
     model: &SldaModel,
     corpus: impl Into<CorpusView<'a>>,
@@ -147,14 +176,17 @@ pub fn infer_zbar_with_kernel<'a>(
     let d = corpus.num_docs();
     let mut zbar = vec![0.0f32; d * t];
     let mut scratch = DocInfer::new(kernel_kind, t);
-    // Per-word cumulative smoothing masses alpha * phi (shared by both
-    // kernels; phi is frozen for the whole call).
+    // Per-model tables, built once per call (phi is frozen throughout):
+    // cumulative smoothing masses alpha * phi for dense/sparse, Walker
+    // alias tables for the alias kernel.
     let phi_cum = kernel::build_phi_cum(&model.phi, t, model.alpha);
+    let alias = build_alias_tables(model, kernel_kind);
 
     for di in 0..d {
         scratch.infer_doc(
             model,
             &phi_cum,
+            alias.as_ref(),
             cfg,
             corpus.doc_tokens(di),
             rng,
@@ -185,8 +217,11 @@ pub fn infer_zbar_parallel<'a>(
         return Vec::new();
     }
     let jobs = jobs.max(1).min(d);
-    let per = (d + jobs - 1) / jobs;
+    let per = d.div_ceil(jobs);
     let phi_cum = kernel::build_phi_cum(&model.phi, t, model.alpha);
+    // Shared read-only across the fan-out, like phi_cum.
+    let alias = build_alias_tables(model, kernel_kind);
+    let alias_ref = alias.as_ref();
     let ranges: Vec<(usize, usize)> = (0..jobs)
         .map(|j| (j * per, ((j + 1) * per).min(d)))
         .filter(|&(lo, hi)| lo < hi)
@@ -198,7 +233,7 @@ pub fn infer_zbar_parallel<'a>(
             let tokens = corpus.doc_tokens(di);
             let mut rng = Pcg64::seed_from_u64(doc_stream_seed(seed, token_hash(tokens)));
             let row = &mut out[(di - lo) * t..(di - lo + 1) * t];
-            scratch.infer_doc(model, &phi_cum, cfg, tokens, &mut rng, row);
+            scratch.infer_doc(model, &phi_cum, alias_ref, cfg, tokens, &mut rng, row);
         }
         out
     });
@@ -351,12 +386,17 @@ mod tests {
         );
         assert_eq!(z1, z4);
         assert_eq!(z1, z9);
-        // and kernel-independent, like the sequential path
+        // dense and sparse stay draw-for-draw interchangeable (auto now
+        // resolves to the alias-MH chain on the prediction path, which is
+        // only statistically equivalent — tests/alias_equivalence.rs)
+        let zd = infer_zbar_parallel(
+            &out.model, &ds.test, &cfg().train, KernelKind::Dense, 77, 2,
+        );
         let zs = infer_zbar_parallel(
             &out.model, &ds.test, &cfg().train, KernelKind::Sparse, 77, 3,
         );
-        assert_eq!(z1, zs);
-        // rows are still distributions
+        assert_eq!(zd, zs);
+        // rows are still distributions under the alias chain
         let t = out.model.t;
         for d in 0..ds.test.num_docs() {
             let s: f32 = z1[d * t..(d + 1) * t].iter().sum();

@@ -13,8 +13,9 @@
 //! The token updates are delegated to the configured [`kernel`]: while eta
 //! is all-zero (every burn-in sweep) the response factor is constant and the
 //! kernel's plain-LDA path runs — the sparse kernel exploits the bucket
-//! decomposition there; once eta activates, both kernels share the dense
-//! Gaussian-margin path [`kernel::sweep_doc_gauss`] (DESIGN.md §Perf).
+//! decomposition there, the alias kernel its O(1) MH proposals; once eta
+//! activates, every kernel shares the dense Gaussian-margin path
+//! [`kernel::sweep_doc_gauss`] (DESIGN.md §Perf).
 //!
 //! The trainer consumes a [`CorpusView`]: a shard worker trains directly on
 //! a borrowed window of the leader's token arena (zero setup copies,
@@ -94,13 +95,16 @@ pub fn train<'a>(
     let y: Vec<f64> = corpus.responses();
 
     // Kernel selection (DESIGN.md §Perf): `auto` resolves by topic count.
-    // The sparse kernel needs the counts' non-zero index; built once here,
-    // maintained incrementally by inc/dec from now on.
-    let resolved = cfg.sampler.kernel.resolve(t);
-    if resolved == KernelKind::Sparse {
-        counts.enable_sparse_index();
+    // The sparse kernel needs the counts' non-zero index and the alias
+    // kernel the per-word update counters; both are maintained
+    // incrementally by inc/dec from here on.
+    let resolved = cfg.sampler.kernel.resolve_train(t);
+    match resolved {
+        KernelKind::Sparse => counts.enable_sparse_index(),
+        KernelKind::Alias => counts.enable_alias_rev(),
+        _ => {}
     }
-    let mut kern = kernel::make_kernel(resolved, t);
+    let mut kern = kernel::make_train_kernel(resolved, t, cfg.sampler.alias_staleness);
 
     // Incrementally maintained 1/(N_t + W beta): replaces T divisions per
     // token with 2 reciprocal updates (§Perf opt A). `ssum` caches its sum

@@ -1,9 +1,13 @@
 //! Pluggable Gibbs token-update kernels (DESIGN.md §Perf).
 //!
-//! One token-update contract, two implementations:
+//! One token-update contract, three implementations:
 //!
 //! * [`DenseKernel`] — the classic O(T) conditional, extracted from the
 //!   formerly duplicated inner loops of `gibbs_train` / `gibbs_predict`.
+//! * [`AliasKernel`] — Walker alias tables + cycling doc-/word-proposal
+//!   Metropolis-Hastings correction (the LightLDA construction, Yuan et al.
+//!   2015): amortized O(1) per token at any T. See the `AliasKernel` docs
+//!   for the proposal mix, acceptance ratios and the staleness policy.
 //! * [`SparseKernel`] — SparseLDA-style bucket decomposition (Yao, Mimno &
 //!   McCallum 2009; Magnusson et al. 2017). The unsupervised conditional
 //!
@@ -20,13 +24,18 @@
 //!   of [`crate::model::counts::SparseIndex`]. A uniform draw first picks a
 //!   bucket, then walks only that bucket's support.
 //!
-//! **Draw-for-draw equivalence.** Both kernels execute the *same* floating-
-//! point operation sequence: the dense kernel's extra terms are exact IEEE
-//! zeros (a zero count multiplies to `+0.0`, and `x + 0.0 == x` bit-exactly
-//! for the non-negative accumulators used here), and the sparse index lists
-//! are sorted ascending so accumulation order matches the dense loop. Both
-//! consume exactly one `next_f64` per token. The `properties.rs` equivalence
-//! test asserts byte-identical `z`, `ndt` and `eta` across kernels.
+//! **Draw-for-draw equivalence (dense/sparse only).** Dense and sparse
+//! execute the *same* floating-point operation sequence: the dense kernel's
+//! extra terms are exact IEEE zeros (a zero count multiplies to `+0.0`, and
+//! `x + 0.0 == x` bit-exactly for the non-negative accumulators used here),
+//! and the sparse index lists are sorted ascending so accumulation order
+//! matches the dense loop. Both consume exactly one `next_f64` per token.
+//! The `properties.rs` equivalence test asserts byte-identical `z`, `ndt`
+//! and `eta` across those two kernels. The alias kernel is **exempt from
+//! the byte-identical contract**: MH draws consume a different RNG
+//! sequence, so it carries a *statistical-equivalence* contract instead
+//! (same stationary distribution as the exact conditional —
+//! `tests/alias_equivalence.rs`) while remaining fully seed-deterministic.
 //!
 //! The Gaussian response factor of the *supervised* training conditional is
 //! dense in every topic (the margin `exp(a·e_t)·u_t` never vanishes), so
@@ -61,6 +70,14 @@ pub struct PredictState<'a> {
     /// Per-word cumulative smoothing masses (see [`build_phi_cum`]):
     /// `cum[w*T + t] = Σ_{t' <= t} α·phi[w*T + t']`.
     pub phi_cum: &'a [f64],
+    /// Per-word Walker alias tables over frozen phi (exact — phi never
+    /// changes at prediction time). Required by the alias kernel, ignored
+    /// by dense/sparse. Built once per model ([`PhiAliasTables::build`]);
+    /// the serve registry keeps them resident across requests.
+    pub alias: Option<&'a PhiAliasTables>,
+    /// Dirichlet prior on document-topic proportions (the alias kernel's
+    /// doc-proposal smoothing mass; dense/sparse read it from `phi_cum`).
+    pub alpha: f64,
     /// The document's topic counts (local, not part of `CountMatrices`).
     pub ndt: &'a mut [u32],
     pub rng: &'a mut Pcg64,
@@ -80,11 +97,30 @@ pub trait SamplerKernel {
     fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]);
 }
 
-/// Instantiate the kernel for a resolved [`KernelKind`] (`Auto` resolves by
-/// topic count first — see [`KernelKind::resolve`]).
-pub fn make_kernel(kind: KernelKind, topics: usize) -> Box<dyn SamplerKernel> {
-    match kind.resolve(topics) {
+/// Instantiate the kernel for the **training** path (`Auto` resolves by
+/// topic count — see [`KernelKind::resolve_train`]). `alias_staleness` is
+/// the alias kernel's rebuild budget (0 = auto); it is ignored by the other
+/// kernels.
+pub fn make_train_kernel(
+    kind: KernelKind,
+    topics: usize,
+    alias_staleness: usize,
+) -> Box<dyn SamplerKernel> {
+    match kind.resolve_train(topics) {
         KernelKind::Sparse => Box::new(SparseKernel::new()),
+        KernelKind::Alias => Box::new(AliasKernel::new(topics, alias_staleness)),
+        _ => Box::new(DenseKernel),
+    }
+}
+
+/// Instantiate the kernel for the **prediction** path (`Auto` resolves to
+/// alias at every T — see [`KernelKind::resolve_predict`]). The alias
+/// kernel additionally needs [`PredictState::alias`] populated with the
+/// model's prebuilt [`PhiAliasTables`].
+pub fn make_predict_kernel(kind: KernelKind, topics: usize) -> Box<dyn SamplerKernel> {
+    match kind.resolve_predict(topics) {
+        KernelKind::Sparse => Box::new(SparseKernel::new()),
+        KernelKind::Alias => Box::new(AliasKernel::new(topics, 0)),
         _ => Box::new(DenseKernel),
     }
 }
@@ -417,6 +453,475 @@ impl SamplerKernel for SparseKernel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Alias-table Metropolis-Hastings kernel (LightLDA construction)
+// ---------------------------------------------------------------------------
+
+/// (word-proposal, doc-proposal) MH pairs per token. Each proposal is O(1),
+/// so extra cycles buy mixing speed at a small constant cost; two pairs
+/// (four proposals) is the LightLDA operating point.
+const MH_CYCLES: usize = 2;
+
+/// Walker alias table over an unnormalized non-negative weight vector:
+/// O(n) build, O(1) sample, exactly one `next_f64` per draw. The build-time
+/// weights are retained so MH acceptance ratios can evaluate the *exact*
+/// (possibly stale) proposal distribution the table draws from — the
+/// invariant the MH correction's detailed balance depends on.
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+    weight: Vec<f64>,
+    total: f64,
+}
+
+impl AliasTable {
+    pub fn build(weights: &[f64]) -> AliasTable {
+        let mut table = AliasTable {
+            prob: Vec::new(),
+            alias: Vec::new(),
+            weight: Vec::new(),
+            total: 0.0,
+        };
+        table.rebuild_from(weights, &mut WalkerScratch::default());
+        table
+    }
+
+    /// Rebuild this table in place from fresh weights, reusing its own
+    /// buffers and the caller's walker scratch — the alias kernel's
+    /// staleness-driven rebuild path allocates nothing in steady state.
+    pub fn rebuild_from(&mut self, weights: &[f64], scratch: &mut WalkerScratch) {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one outcome");
+        self.prob.clear();
+        self.prob.resize(n, 1.0);
+        self.alias.clear();
+        self.alias.extend(0..n as u32);
+        self.weight.clear();
+        self.weight.extend_from_slice(weights);
+        self.total = weights.iter().sum();
+        build_walker(
+            weights,
+            self.total,
+            &mut self.prob,
+            &mut self.alias,
+            &mut scratch.small,
+            &mut scratch.large,
+            &mut scratch.scaled,
+        );
+    }
+
+    /// Draw an outcome ∝ the build-time weights; one `next_f64`.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        alias_draw(&self.prob, &self.alias, rng)
+    }
+
+    /// Build-time unnormalized weight of outcome `i` — exactly proportional
+    /// to this table's sampling distribution (stale w.r.t. live counts).
+    #[inline]
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weight[i]
+    }
+
+    /// Sum of the build-time weights.
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Heap bytes held by this table.
+    pub fn resident_bytes(&self) -> usize {
+        self.prob.len() * 8 + self.alias.len() * 4 + self.weight.len() * 8
+    }
+}
+
+/// Reusable two-stack scratch for [`build_walker`] (avoids per-rebuild
+/// allocation on the training hot path).
+#[derive(Default)]
+pub struct WalkerScratch {
+    small: Vec<u32>,
+    large: Vec<u32>,
+    scaled: Vec<f64>,
+}
+
+/// Walker construction into caller-provided `prob`/`alias` rows. `prob`
+/// must be pre-filled with 1.0 and `alias` with the identity mapping; a
+/// degenerate row (zero/non-finite total) is then already a valid uniform
+/// table. Deterministic: stack order depends only on the weights.
+fn build_walker(
+    weights: &[f64],
+    total: f64,
+    prob: &mut [f64],
+    alias: &mut [u32],
+    small: &mut Vec<u32>,
+    large: &mut Vec<u32>,
+    scaled: &mut Vec<f64>,
+) {
+    if !(total > 0.0 && total.is_finite()) {
+        return;
+    }
+    let n = weights.len();
+    let scale = n as f64 / total;
+    scaled.clear();
+    scaled.extend(weights.iter().map(|&w| w * scale));
+    small.clear();
+    large.clear();
+    for (i, &s) in scaled.iter().enumerate() {
+        if s < 1.0 {
+            small.push(i as u32);
+        } else {
+            large.push(i as u32);
+        }
+    }
+    while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+        prob[s as usize] = scaled[s as usize];
+        alias[s as usize] = l;
+        let rem = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+        scaled[l as usize] = rem;
+        if rem < 1.0 {
+            small.push(l);
+        } else {
+            large.push(l);
+        }
+    }
+    // Leftovers on either stack are fp slack around 1.0: an exact self-loop
+    // (prob = 1.0) is the standard resolution.
+    while let Some(i) = small.pop() {
+        prob[i as usize] = 1.0;
+    }
+    while let Some(i) = large.pop() {
+        prob[i as usize] = 1.0;
+    }
+}
+
+/// One alias draw over a (prob, alias) row; exactly one `next_f64`.
+#[inline]
+fn alias_draw(prob: &[f64], alias: &[u32], rng: &mut Pcg64) -> usize {
+    let n = prob.len();
+    let x = rng.next_f64() * n as f64;
+    let k = (x as usize).min(n - 1);
+    if x - k as f64 < prob[k] {
+        k
+    } else {
+        alias[k] as usize
+    }
+}
+
+/// Per-word Walker alias tables over a frozen word-major phi matrix — the
+/// prediction path's O(1) word proposal. Phi never changes at inference
+/// time, so these tables are **exact, never stale**: built once per model
+/// and reused for every document. The serve registry builds them at
+/// load/`POST /reload` and shares them across all batcher workers through
+/// the pinned entry `Arc`; the batch CLI builds them once per corpus call.
+pub struct PhiAliasTables {
+    t: usize,
+    /// Acceptance thresholds, word-major `[w * T + t]`.
+    prob: Vec<f64>,
+    /// Alias targets, word-major `[w * T + t]`.
+    alias: Vec<u32>,
+    /// f64 copies of phi — the exact proposal weights used in MH ratios.
+    weight: Vec<f64>,
+}
+
+impl PhiAliasTables {
+    pub fn build(phi: &[f32], t: usize) -> PhiAliasTables {
+        assert!(t > 0 && phi.len() % t == 0, "phi must be word-major [W, T]");
+        let n = phi.len();
+        let mut prob = vec![1.0f64; n];
+        let mut alias = vec![0u32; n];
+        let weight: Vec<f64> = phi.iter().map(|&p| p as f64).collect();
+        let mut small = Vec::with_capacity(t);
+        let mut large = Vec::with_capacity(t);
+        let mut scaled = Vec::with_capacity(t);
+        for w in 0..n / t {
+            let row = w * t..(w + 1) * t;
+            for (i, a) in alias[row.clone()].iter_mut().enumerate() {
+                *a = i as u32;
+            }
+            let total: f64 = weight[row.clone()].iter().sum();
+            build_walker(
+                &weight[row.clone()],
+                total,
+                &mut prob[row.clone()],
+                &mut alias[row],
+                &mut small,
+                &mut large,
+                &mut scaled,
+            );
+        }
+        PhiAliasTables { t, prob, alias, weight }
+    }
+
+    pub fn topics(&self) -> usize {
+        self.t
+    }
+
+    pub fn words(&self) -> usize {
+        self.weight.len() / self.t
+    }
+
+    /// Draw a topic ∝ phi[w, ·]; exactly one `next_f64`.
+    #[inline]
+    pub fn sample(&self, w: u32, rng: &mut Pcg64) -> usize {
+        let o = w as usize * self.t;
+        alias_draw(&self.prob[o..o + self.t], &self.alias[o..o + self.t], rng)
+    }
+
+    /// Exact proposal weight phi[w, ti] (as f64) for MH ratios.
+    #[inline]
+    pub fn weight(&self, w: u32, ti: usize) -> f64 {
+        self.weight[w as usize * self.t + ti]
+    }
+
+    /// Heap bytes held by the tables (surfaced by serve `/stats`).
+    pub fn resident_bytes(&self) -> usize {
+        self.prob.len() * 8 + self.alias.len() * 4 + self.weight.len() * 8
+    }
+}
+
+/// Draw from the exact document proposal q_d(t) ∝ N^{-dn}_dt + α without
+/// materializing it: with probability (N_d - 1)/(N_d - 1 + Tα) copy a
+/// uniformly chosen *other* token's current topic, otherwise a uniform
+/// topic (the α smoothing component). One `next_f64` total. `zd` holds the
+/// document's live assignments with token `n` excluded by index-skipping,
+/// so the draw matches the exclusive counts exactly — no staleness, and
+/// the MH acceptance against it needs only the word factor.
+#[inline]
+fn sample_doc_proposal(zd: &[u16], n: usize, t: usize, alpha: f64, rng: &mut Pcg64) -> usize {
+    let nd = zd.len();
+    let others = (nd - 1) as f64;
+    let x = rng.next_f64() * (others + t as f64 * alpha);
+    if x < others {
+        let mut j = x as usize;
+        if j >= n {
+            j += 1;
+        }
+        zd[j.min(nd - 1)] as usize
+    } else {
+        (((x - others) / alpha) as usize).min(t - 1)
+    }
+}
+
+/// One token's prediction-path MH chain against frozen phi: alternating
+/// exact word proposal (alias table ∝ phi[w]) and exact doc proposal
+/// (mixture of other tokens' topics and α-uniform). Both proposals equal
+/// one factor of the target `(N_dt + α)·phi[w, t]`, so each acceptance
+/// ratio reduces to the *other* factor. `ndt` must already exclude token
+/// `n`. Returns the new topic.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn mh_token_predict(
+    tables: &PhiAliasTables,
+    ndt: &[u32],
+    zd: &[u16],
+    n: usize,
+    w: u32,
+    t: usize,
+    alpha: f64,
+    old: usize,
+    rng: &mut Pcg64,
+) -> usize {
+    let mut cur = old;
+    for _ in 0..MH_CYCLES {
+        // Word proposal q ∝ phi[w]: acceptance is the doc factor.
+        let s = tables.sample(w, rng);
+        if s != cur {
+            let ratio = (ndt[s] as f64 + alpha) / (ndt[cur] as f64 + alpha);
+            if rng.next_f64() < ratio {
+                cur = s;
+            }
+        }
+        // Doc proposal q ∝ N^{-dn}_dt + α: acceptance is the word factor.
+        let s = sample_doc_proposal(zd, n, t, alpha, rng);
+        if s != cur {
+            let ratio = tables.weight(w, s) / tables.weight(w, cur);
+            if rng.next_f64() < ratio {
+                cur = s;
+            }
+        }
+    }
+    cur
+}
+
+/// Alias-MH kernel: amortized O(1) per token at any T (DESIGN.md §Perf).
+///
+/// **Training (burn-in LDA path).** Target conditional
+/// `π(t) ∝ (N_dt + α)(N_tw + β)/(N_t + Wβ)` with exclusive counts. Two
+/// proposals alternate per MH cycle:
+///
+/// * *word proposal* — a per-word Walker alias table over the word factor
+///   `(N_tw + β)/(N_t + Wβ)`, rebuilt lazily on a staleness budget
+///   (LightLDA-style). The table's build-time weights are retained, so the
+///   acceptance ratio `π(s)·q̃(cur) / (π(cur)·q̃(s))` evaluates the exact
+///   stale proposal — staleness costs mixing speed, never correctness.
+/// * *doc proposal* — the exact mixture `q_d(t) ∝ N^{-dn}_dt + α`, sampled
+///   in O(1) by copying a random other token's topic (or α-uniform); its
+///   acceptance reduces to the word-factor ratio.
+///
+/// **Staleness policy.** A word's table is rebuilt at the next touch after
+/// it absorbed `staleness` count updates ([`CountMatrices::enable_alias_rev`]
+/// hook); without the hook a uses-since-build fallback bounds drift. The
+/// budget resolves `0` to `max(T, 16)`, making the amortized rebuild cost
+/// O(1) per token.
+///
+/// **Prediction.** Phi is frozen, so the per-word tables
+/// ([`PhiAliasTables`], supplied via [`PredictState::alias`]) are built
+/// once and are exact; every proposal matches one factor of the target
+/// `(N_dt + α)·phi[w, t]` and serving pays amortized O(1) per token at any
+/// T.
+///
+/// Exempt from the dense/sparse byte-identical contract (different RNG
+/// consumption), but fully seed-deterministic and statistically equivalent
+/// (`tests/alias_equivalence.rs`). The supervised Gaussian margin stays on
+/// the shared [`sweep_doc_gauss`] path like every other kernel.
+pub struct AliasKernel {
+    /// Rebuild budget in per-word count updates (and, absent the counts
+    /// hook, in table uses). Resolved from the config knob: 0 => max(T, 16).
+    staleness: usize,
+    tables: Vec<Option<AliasTable>>,
+    built_rev: Vec<u32>,
+    uses: Vec<u32>,
+    weights: Vec<f64>,
+    scratch: WalkerScratch,
+}
+
+impl AliasKernel {
+    pub fn new(t: usize, staleness: usize) -> Self {
+        AliasKernel {
+            staleness: if staleness == 0 { t.max(16) } else { staleness },
+            tables: Vec::new(),
+            built_rev: Vec::new(),
+            uses: Vec::new(),
+            weights: Vec::with_capacity(t),
+            scratch: WalkerScratch::default(),
+        }
+    }
+
+    fn ensure_words(&mut self, w: usize) {
+        if self.tables.len() < w {
+            self.tables.resize_with(w, || None);
+            self.built_rev.resize(w, 0);
+            self.uses.resize(w, 0);
+        }
+    }
+
+    /// Rebuild word `w`'s table if it is missing or has exceeded the
+    /// staleness budget, then count this use.
+    fn refresh_word_table(&mut self, st: &TrainState, w: u32) {
+        let wi = w as usize;
+        let rev = st.counts.alias_rev.as_ref().map_or(0, |r| r[wi]);
+        let fresh = self.tables[wi].is_some() && {
+            let updates = rev.wrapping_sub(self.built_rev[wi]) as usize;
+            let drift_ok = updates < self.staleness;
+            // Without the counts hook, bound drift by uses instead.
+            let uses_ok = st.counts.alias_rev.is_some()
+                || (self.uses[wi] as usize) < self.staleness;
+            drift_ok && uses_ok
+        };
+        if !fresh {
+            let t = st.counts.t;
+            let ntw = &st.counts.ntw[wi * t..(wi + 1) * t];
+            self.weights.clear();
+            self.weights.extend(
+                ntw.iter().zip(st.inv_nt.iter()).map(|(&c, &inv)| (c as f64 + st.beta) * inv),
+            );
+            // In-place rebuild: reuses the table's buffers and the kernel's
+            // walker scratch — no steady-state allocation.
+            let table = self.tables[wi].get_or_insert_with(|| AliasTable {
+                prob: Vec::new(),
+                alias: Vec::new(),
+                weight: Vec::new(),
+                total: 0.0,
+            });
+            table.rebuild_from(&self.weights, &mut self.scratch);
+            self.built_rev[wi] = rev;
+            self.uses[wi] = 0;
+        }
+        self.uses[wi] = self.uses[wi].wrapping_add(1);
+    }
+
+    /// One token's training-path MH chain. Counts must already exclude the
+    /// token (`remove_token` ran); `zd` is consulted by the doc proposal
+    /// with token `n` index-skipped. Returns the new topic.
+    fn mh_token_train(
+        &mut self,
+        st: &mut TrainState,
+        d: usize,
+        w: u32,
+        n: usize,
+        zd: &[u16],
+        old: usize,
+    ) -> usize {
+        let t = st.counts.t;
+        let alpha = st.alpha;
+        let beta = st.beta;
+        let mut cur = old;
+        for _ in 0..MH_CYCLES {
+            // Word proposal from the (stale) alias table; full MH ratio
+            // against the exact conditional.
+            self.refresh_word_table(st, w);
+            let table = self.tables[w as usize].as_ref().unwrap();
+            let s = table.sample(st.rng);
+            if s != cur {
+                let ndt = &st.counts.ndt[d * t..(d + 1) * t];
+                let ntw = &st.counts.ntw[w as usize * t..(w as usize + 1) * t];
+                let pi_s = (ndt[s] as f64 + alpha) * (ntw[s] as f64 + beta) * st.inv_nt[s];
+                let pi_c =
+                    (ndt[cur] as f64 + alpha) * (ntw[cur] as f64 + beta) * st.inv_nt[cur];
+                let ratio = pi_s * table.weight(cur) / (pi_c * table.weight(s));
+                if st.rng.next_f64() < ratio {
+                    cur = s;
+                }
+            }
+            // Doc proposal is exact, so the ratio is the word factor alone.
+            let s = sample_doc_proposal(zd, n, t, alpha, st.rng);
+            if s != cur {
+                let ntw = &st.counts.ntw[w as usize * t..(w as usize + 1) * t];
+                let ratio = (ntw[s] as f64 + beta) * st.inv_nt[s]
+                    / ((ntw[cur] as f64 + beta) * st.inv_nt[cur]);
+                if st.rng.next_f64() < ratio {
+                    cur = s;
+                }
+            }
+        }
+        cur
+    }
+}
+
+impl SamplerKernel for AliasKernel {
+    fn name(&self) -> &'static str {
+        "alias"
+    }
+
+    fn sweep_doc_lda(&mut self, st: &mut TrainState, d: usize, tokens: &[u32], zd: &mut [u16]) {
+        self.ensure_words(st.counts.w);
+        for n in 0..tokens.len() {
+            let wi = tokens[n];
+            let old = zd[n] as usize;
+            remove_token(st, d, wi, old);
+            let new = self.mh_token_train(st, d, wi, n, zd, old);
+            add_token(st, d, wi, new);
+            zd[n] = new as u16;
+        }
+    }
+
+    fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]) {
+        let tables = ps
+            .alias
+            .expect("alias kernel needs PredictState.alias (prebuilt frozen-phi tables)");
+        let t = ps.t;
+        let alpha = ps.alpha;
+        for n in 0..tokens.len() {
+            let wi = tokens[n];
+            let old = zd[n] as usize;
+            ps.ndt[old] -= 1;
+            let new =
+                mh_token_predict(tables, ps.ndt, zd, n, wi, t, alpha, old, ps.rng);
+            ps.ndt[new] += 1;
+            zd[n] = new as u16;
+        }
+    }
+}
+
 /// Shared supervised-conditional sweep (paper eq. 1 with the Gaussian
 /// response margin). The margin is dense in every topic, so both kernels
 /// use this identical path whenever `eta` is active; see the module docs.
@@ -606,6 +1111,7 @@ mod tests {
         sparse: bool,
         seed: u64,
         t: usize,
+        alpha: f64,
         phi: &[f32],
         phi_cum: &[f64],
         ndt: &mut [u32],
@@ -613,7 +1119,8 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(seed);
         let list: Vec<u16> =
             (0..t).filter(|&ti| ndt[ti] > 0).map(|ti| ti as u16).collect();
-        let mut ps = PredictState { t, phi, phi_cum, ndt, rng: &mut rng };
+        let mut ps =
+            PredictState { t, phi, phi_cum, alias: None, alpha, ndt, rng: &mut rng };
         if sparse {
             sparse_predict_draw(&mut ps, &list, 0)
         } else {
@@ -634,8 +1141,8 @@ mod tests {
         // cross-kernel agreement over many RNG streams
         for trial in 0..200u64 {
             let seed = 1000 + trial;
-            let a = predict_draw_once(false, seed, t, &phi, &phi_cum, &mut ndt);
-            let b = predict_draw_once(true, seed, t, &phi, &phi_cum, &mut ndt);
+            let a = predict_draw_once(false, seed, t, alpha, &phi, &phi_cum, &mut ndt);
+            let b = predict_draw_once(true, seed, t, alpha, &phi, &phi_cum, &mut ndt);
             assert_eq!(a, b, "seed {seed}");
         }
 
@@ -651,6 +1158,8 @@ mod tests {
                 t,
                 phi: &phi,
                 phi_cum: &phi_cum,
+                alias: None,
+                alpha,
                 ndt: &mut ndt,
                 rng: &mut rng,
             };
@@ -668,10 +1177,281 @@ mod tests {
     }
 
     #[test]
-    fn kernel_factory_resolves_auto_by_topic_count() {
-        assert_eq!(make_kernel(KernelKind::Auto, 8).name(), "dense");
-        assert_eq!(make_kernel(KernelKind::Auto, 64).name(), "sparse");
-        assert_eq!(make_kernel(KernelKind::Dense, 256).name(), "dense");
-        assert_eq!(make_kernel(KernelKind::Sparse, 8).name(), "sparse");
+    fn kernel_factories_resolve_auto_by_path() {
+        // train: dense -> sparse -> alias by topic count
+        assert_eq!(make_train_kernel(KernelKind::Auto, 8, 0).name(), "dense");
+        assert_eq!(make_train_kernel(KernelKind::Auto, 64, 0).name(), "sparse");
+        assert_eq!(make_train_kernel(KernelKind::Auto, 256, 0).name(), "alias");
+        assert_eq!(make_train_kernel(KernelKind::Dense, 256, 0).name(), "dense");
+        assert_eq!(make_train_kernel(KernelKind::Sparse, 8, 0).name(), "sparse");
+        assert_eq!(make_train_kernel(KernelKind::Alias, 8, 0).name(), "alias");
+        // predict: frozen phi makes alias tables exact, so auto is alias at
+        // every T
+        assert_eq!(make_predict_kernel(KernelKind::Auto, 2).name(), "alias");
+        assert_eq!(make_predict_kernel(KernelKind::Auto, 1024).name(), "alias");
+        assert_eq!(make_predict_kernel(KernelKind::Dense, 8).name(), "dense");
+        assert_eq!(make_predict_kernel(KernelKind::Sparse, 8).name(), "sparse");
+    }
+
+    #[test]
+    fn alias_table_draw_frequencies_match_weights() {
+        let mut meta = Pcg64::seed_from_u64(31);
+        let weights: Vec<f64> = (0..9).map(|_| 0.05 + meta.next_f64() * 2.0).collect();
+        let table = AliasTable::build(&weights);
+        let total: f64 = weights.iter().sum();
+        assert!((table.total() - total).abs() < 1e-12);
+        for (i, &w) in weights.iter().enumerate() {
+            assert_eq!(table.weight(i), w);
+        }
+        let n = 200_000usize;
+        let mut hits = vec![0usize; weights.len()];
+        let mut rng = Pcg64::seed_from_u64(77);
+        for _ in 0..n {
+            hits[table.sample(&mut rng)] += 1;
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            let want = w / total * n as f64;
+            let sd = want.max(1.0).sqrt();
+            assert!(
+                (hits[i] as f64 - want).abs() < 6.0 * sd + 3.0,
+                "outcome {i}: got {} want {want}",
+                hits[i]
+            );
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate_weights_fall_back_to_uniform() {
+        // all-zero mass: every outcome must still be reachable (uniform)
+        let table = AliasTable::build(&[0.0, 0.0, 0.0]);
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mut hits = [0usize; 3];
+        for _ in 0..6000 {
+            hits[table.sample(&mut rng)] += 1;
+        }
+        for &h in &hits {
+            assert!(h > 1500, "hits {hits:?}");
+        }
+        // single outcome
+        let one = AliasTable::build(&[2.5]);
+        assert_eq!(one.sample(&mut rng), 0);
+    }
+
+    #[test]
+    fn phi_alias_tables_match_per_row_tables() {
+        let (t, w) = (7usize, 11usize);
+        let mut meta = Pcg64::seed_from_u64(13);
+        let phi: Vec<f32> = (0..w * t).map(|_| 0.01 + meta.next_f32()).collect();
+        let tables = PhiAliasTables::build(&phi, t);
+        assert_eq!(tables.topics(), t);
+        assert_eq!(tables.words(), w);
+        assert!(tables.resident_bytes() >= w * t * 20);
+        for wi in 0..w {
+            let row: Vec<f64> =
+                (0..t).map(|ti| phi[wi * t + ti] as f64).collect();
+            let single = AliasTable::build(&row);
+            for ti in 0..t {
+                assert_eq!(tables.weight(wi as u32, ti), row[ti]);
+            }
+            // identical draws: the flat build and the per-row build must
+            // produce the same table
+            for seed in 0..50u64 {
+                let a = tables.sample(wi as u32, &mut Pcg64::seed_from_u64(seed));
+                let b = single.sample(&mut Pcg64::seed_from_u64(seed));
+                assert_eq!(a, b, "word {wi} seed {seed}");
+            }
+        }
+    }
+
+    /// Build a single-document count state whose `zd` is consistent with
+    /// `ndt` — the fixture for the MH chain tests.
+    fn doc_fixture(
+        rng: &mut Pcg64,
+        t: usize,
+        w: usize,
+        nd: usize,
+    ) -> (CountMatrices, Vec<u32>, Vec<u16>, Vec<f64>, f64) {
+        let mut counts = CountMatrices::new(1, t, w);
+        let mut tokens = Vec::with_capacity(nd);
+        let mut zd = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            let wi = rng.gen_range(w) as u32;
+            let ti = rng.gen_range(t);
+            counts.inc(0, wi, ti);
+            tokens.push(wi);
+            zd.push(ti as u16);
+        }
+        let wbeta = w as f64 * 0.1;
+        let inv_nt: Vec<f64> =
+            counts.nt.iter().map(|&c| 1.0 / (c as f64 + wbeta)).collect();
+        let ssum: f64 = inv_nt.iter().sum();
+        (counts, tokens, zd, inv_nt, ssum)
+    }
+
+    /// The training-path MH chain resampling one token must have the exact
+    /// conditional as its stationary distribution — for a fresh table
+    /// (staleness 1) and for a table that is never rebuilt: staleness only
+    /// affects mixing, never the target.
+    #[test]
+    fn alias_train_chain_matches_exact_conditional() {
+        let (alpha, beta) = (0.5, 0.1);
+        let (t, w, nd) = (6usize, 10usize, 30usize);
+        let wbeta = w as f64 * beta;
+        for &staleness in &[1usize, 1 << 30] {
+            let mut meta = Pcg64::seed_from_u64(17);
+            let (mut counts, tokens, mut zd, mut inv_nt, mut ssum) =
+                doc_fixture(&mut meta, t, w, nd);
+            counts.enable_alias_rev();
+            let n = 4usize; // the resampled token position
+            let wi = tokens[n];
+
+            // exact conditional from the exclusive counts
+            let probs: Vec<f64> = {
+                let old = zd[n] as usize;
+                counts.dec(0, wi, old);
+                let p: Vec<f64> = (0..t)
+                    .map(|ti| {
+                        (counts.ndt[ti] as f64 + alpha)
+                            * (counts.ntw[wi as usize * t + ti] as f64 + beta)
+                            / (counts.nt[ti] as f64 + wbeta)
+                    })
+                    .collect();
+                counts.inc(0, wi, old);
+                p
+            };
+            let total: f64 = probs.iter().sum();
+
+            let mut kern = AliasKernel::new(t, staleness);
+            kern.ensure_words(w);
+            if staleness > 1 {
+                // Inject a deliberately wrong (but full-support) table for
+                // the sampled word and pin it via the huge budget: the MH
+                // correction must still target the exact conditional — a
+                // stale proposal costs mixing speed, never correctness.
+                let skewed: Vec<f64> =
+                    (0..t).map(|ti| 0.2 + ((ti * 7) % 5) as f64).collect();
+                kern.tables[wi as usize] = Some(AliasTable::build(&skewed));
+            }
+            let mut rng = Pcg64::seed_from_u64(4000 + staleness as u64);
+            let iters = 200_000usize;
+            let mut hits = vec![0usize; t];
+            for _ in 0..iters {
+                let mut st = TrainState {
+                    counts: &mut counts,
+                    inv_nt: &mut inv_nt,
+                    ssum: &mut ssum,
+                    alpha,
+                    beta,
+                    wbeta,
+                    rng: &mut rng,
+                };
+                let old = zd[n] as usize;
+                remove_token(&mut st, 0, wi, old);
+                let new = kern.mh_token_train(&mut st, 0, wi, n, &zd, old);
+                add_token(&mut st, 0, wi, new);
+                zd[n] = new as u16;
+                hits[new] += 1;
+            }
+            for ti in 0..t {
+                let want = probs[ti] / total * iters as f64;
+                let got = hits[ti] as f64;
+                // MH samples are autocorrelated: widen the iid band.
+                let sd = want.max(1.0).sqrt();
+                assert!(
+                    (got - want).abs() < 12.0 * sd + 0.02 * want + 30.0,
+                    "staleness {staleness} topic {ti}: got {got} want {want} (hits {hits:?})"
+                );
+            }
+        }
+    }
+
+    /// The prediction-path MH chain against frozen phi tables must target
+    /// the exact conditional (N_dt + α)·phi[w, t].
+    #[test]
+    fn alias_predict_chain_matches_exact_conditional() {
+        let alpha = 0.4f64;
+        let (t, w, nd) = (6usize, 8usize, 24usize);
+        let mut meta = Pcg64::seed_from_u64(23);
+        let phi: Vec<f32> = (0..w * t).map(|_| 0.01 + meta.next_f32() * 0.3).collect();
+        let tables = PhiAliasTables::build(&phi, t);
+
+        // document state: zd consistent with ndt
+        let mut ndt = vec![0u32; t];
+        let mut zd: Vec<u16> = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            let ti = meta.gen_range(t);
+            ndt[ti] += 1;
+            zd.push(ti as u16);
+        }
+        let n = 3usize;
+        let wi = 2u32;
+
+        // exact conditional from the exclusive counts
+        let old0 = zd[n] as usize;
+        ndt[old0] -= 1;
+        let probs: Vec<f64> = (0..t)
+            .map(|ti| (ndt[ti] as f64 + alpha) * phi[wi as usize * t + ti] as f64)
+            .collect();
+        ndt[old0] += 1;
+        let total: f64 = probs.iter().sum();
+
+        let mut rng = Pcg64::seed_from_u64(91);
+        let iters = 200_000usize;
+        let mut hits = vec![0usize; t];
+        for _ in 0..iters {
+            let old = zd[n] as usize;
+            ndt[old] -= 1;
+            let new =
+                mh_token_predict(&tables, &ndt, &zd, n, wi, t, alpha, old, &mut rng);
+            ndt[new] += 1;
+            zd[n] = new as u16;
+            hits[new] += 1;
+        }
+        for ti in 0..t {
+            let want = probs[ti] / total * iters as f64;
+            let got = hits[ti] as f64;
+            let sd = want.max(1.0).sqrt();
+            assert!(
+                (got - want).abs() < 12.0 * sd + 0.02 * want + 30.0,
+                "topic {ti}: got {got} want {want} (hits {hits:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn alias_sweeps_preserve_count_invariants_and_determinism() {
+        let (alpha, beta) = (0.5, 0.1);
+        let (t, w, nd) = (5usize, 12usize, 40usize);
+        let wbeta = w as f64 * beta;
+        let run = |seed: u64| {
+            let mut meta = Pcg64::seed_from_u64(2);
+            let (mut counts, tokens, mut zd, mut inv_nt, mut ssum) =
+                doc_fixture(&mut meta, t, w, nd);
+            counts.enable_alias_rev();
+            let mut kern = AliasKernel::new(t, 8);
+            let mut rng = Pcg64::seed_from_u64(seed);
+            for _ in 0..10 {
+                let mut st = TrainState {
+                    counts: &mut counts,
+                    inv_nt: &mut inv_nt,
+                    ssum: &mut ssum,
+                    alpha,
+                    beta,
+                    wbeta,
+                    rng: &mut rng,
+                };
+                kern.sweep_doc_lda(&mut st, 0, &tokens, &mut zd);
+            }
+            counts.check_invariants().unwrap();
+            assert_eq!(counts.total_tokens(), nd as u64);
+            // caches must still match the counts
+            for (ti, &inv) in inv_nt.iter().enumerate() {
+                let want = 1.0 / (counts.nt[ti] as f64 + wbeta);
+                assert!((inv - want).abs() < 1e-12, "inv_nt[{ti}] drifted");
+            }
+            zd
+        };
+        assert_eq!(run(42), run(42), "alias kernel must be seed-deterministic");
+        assert_ne!(run(42), run(43), "different seeds should move some token");
     }
 }

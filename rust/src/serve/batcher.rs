@@ -268,7 +268,18 @@ fn predict_one(
     }
     stats.cache_misses.fetch_add(1, Ordering::Relaxed);
     let mut rng = Pcg64::seed_from_u64(doc_stream_seed(item.seed, hash));
-    infer.infer_doc(model, &entry.phi_cum, &cfg.train, tokens, &mut rng, zrow);
+    // The frozen-phi alias tables ride the entry Arc: built once at
+    // load/hot-swap, shared by every worker (present whenever the
+    // configured kernel may resolve to alias, ignored otherwise).
+    infer.infer_doc(
+        model,
+        &entry.phi_cum,
+        entry.phi_alias.as_ref(),
+        &cfg.train,
+        tokens,
+        &mut rng,
+        zrow,
+    );
     let yhat = model.predict_zbar(zrow);
     registry.cache_put(key, yhat);
     Ok(DocOut { yhat, model_version: entry.version, cached: false })
@@ -315,7 +326,7 @@ mod tests {
     ) -> (Batcher, Arc<Registry>, Arc<ServeStats>, std::path::PathBuf) {
         let p = tmp(name);
         save_model_with_vocab(&tiny_model(5), None, &p).unwrap();
-        let registry = Arc::new(Registry::open(&p, cache).unwrap());
+        let registry = Arc::new(Registry::open(&p, cache, true).unwrap());
         let stats = Arc::new(ServeStats::new());
         let cfg = BatcherConfig {
             workers,

@@ -1,14 +1,16 @@
 //! `cfslda serve-bench`: self-driving loopback load harness.
 //!
-//! For every (server workers × request batch size) cell it boots a fresh
-//! in-process [`Server`] on an ephemeral port, hammers it from a pool of
-//! keep-alive clients, and records throughput (docs/s) plus request
-//! latency quantiles. Results render as a table and land in
-//! `BENCH_serve.json` at the invocation directory (the repo root in CI),
+//! For every (sampler kernel × server workers × request batch size) cell
+//! it boots a fresh in-process [`Server`] on an ephemeral port, hammers it
+//! from a pool of keep-alive clients, and records throughput (docs/s) plus
+//! request latency quantiles. The kernel axis defaults to
+//! `sparse,alias` so every run lands a before/after pair — the alias
+//! kernel's serving speedup is read straight out of `BENCH_serve.json`,
+//! which is written at the invocation directory (the repo root in CI),
 //! next to `BENCH_gibbs_hotpath.json`.
 
 use crate::config::json::{self, Value};
-use crate::config::schema::ExperimentConfig;
+use crate::config::schema::{ExperimentConfig, KernelKind};
 use crate::model::persist::load_model_full;
 use crate::serve::http::Client;
 use crate::serve::server::Server;
@@ -22,6 +24,9 @@ use std::path::{Path, PathBuf};
 #[derive(Clone, Debug)]
 pub struct BenchOptions {
     pub model_path: PathBuf,
+    /// Sampler kernels to sweep (the before/after axis; default
+    /// sparse -> alias so the speedup lands in one JSON).
+    pub kernel_list: Vec<KernelKind>,
     /// Server worker-pool sizes to sweep (the scaling axis).
     pub workers_list: Vec<usize>,
     /// Documents per request to sweep (the batching axis).
@@ -40,6 +45,7 @@ impl BenchOptions {
     pub fn new(model_path: PathBuf, quick: bool) -> Self {
         BenchOptions {
             model_path,
+            kernel_list: vec![KernelKind::Sparse, KernelKind::Alias],
             workers_list: if quick { vec![1, 2] } else { vec![1, 2, 4] },
             batch_list: vec![1, 8],
             clients: 4,
@@ -54,6 +60,7 @@ impl BenchOptions {
 /// One cell's measurements.
 #[derive(Clone, Debug)]
 pub struct CellResult {
+    pub kernel: &'static str,
     pub workers: usize,
     pub batch: usize,
     pub requests: usize,
@@ -84,12 +91,14 @@ fn run_cell(
     cfg_base: &ExperimentConfig,
     opts: &BenchOptions,
     vocab: usize,
+    kernel: KernelKind,
     workers: usize,
     batch: usize,
 ) -> anyhow::Result<CellResult> {
     let mut cfg = cfg_base.clone();
     cfg.serve.addr = "127.0.0.1:0".to_string();
     cfg.serve.workers = workers;
+    cfg.sampler.kernel = kernel;
     // measure sampler throughput, not cache hits: distinct docs + no cache
     cfg.serve.cache_capacity = 0;
     let server = Server::start(&opts.model_path, &cfg)?;
@@ -134,6 +143,7 @@ fn run_cell(
     let requests = lats.len();
     let docs = requests * batch;
     Ok(CellResult {
+        kernel: kernel.name(),
         workers,
         batch,
         requests,
@@ -149,13 +159,15 @@ fn run_cell(
 fn render_table(results: &[CellResult]) -> String {
     let mut s = String::from("== bench: serve (loopback) ==\n");
     s.push_str(&format!(
-        "{:<8} {:>6} {:>9} {:>8} {:>12} {:>9} {:>9} {:>9}\n",
-        "workers", "batch", "requests", "docs", "docs/s", "p50(ms)", "p95(ms)", "p99(ms)"
+        "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12} {:>9} {:>9} {:>9}\n",
+        "kernel", "workers", "batch", "requests", "docs", "docs/s", "p50(ms)", "p95(ms)",
+        "p99(ms)"
     ));
     for r in results {
         s.push_str(&format!(
-            "{:<8} {:>6} {:>9} {:>8} {:>12.1} {:>9.2} {:>9.2} {:>9.2}\n",
-            r.workers, r.batch, r.requests, r.docs, r.docs_per_sec, r.p50_ms, r.p95_ms, r.p99_ms
+            "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12.1} {:>9.2} {:>9.2} {:>9.2}\n",
+            r.kernel, r.workers, r.batch, r.requests, r.docs, r.docs_per_sec, r.p50_ms,
+            r.p95_ms, r.p99_ms
         ));
     }
     s
@@ -166,6 +178,7 @@ fn results_json(opts: &BenchOptions, t: usize, w: usize, results: &[CellResult])
         .iter()
         .map(|r| {
             Value::object(vec![
+                ("kernel", Value::String(r.kernel.to_string())),
                 ("workers", Value::Number(r.workers as f64)),
                 ("batch", Value::Number(r.batch as f64)),
                 ("requests", Value::Number(r.requests as f64)),
@@ -206,18 +219,39 @@ pub fn run_bench(
     let (model, _) = load_model_full(Path::new(&opts.model_path))?;
     let (t, w) = (model.t, model.w);
     drop(model);
+    anyhow::ensure!(!opts.kernel_list.is_empty(), "empty kernel sweep");
     let mut results = Vec::new();
-    for &workers in &opts.workers_list {
-        for &batch in &opts.batch_list {
-            let cell = run_cell(cfg_base, opts, w, workers, batch)?;
-            log::info!(
-                "serve-bench workers={} batch={}: {:.1} docs/s p95={:.2}ms",
-                cell.workers, cell.batch, cell.docs_per_sec, cell.p95_ms
-            );
-            results.push(cell);
+    for &kernel in &opts.kernel_list {
+        for &workers in &opts.workers_list {
+            for &batch in &opts.batch_list {
+                let cell = run_cell(cfg_base, opts, w, kernel, workers, batch)?;
+                log::info!(
+                    "serve-bench kernel={} workers={} batch={}: {:.1} docs/s p95={:.2}ms",
+                    cell.kernel, cell.workers, cell.batch, cell.docs_per_sec, cell.p95_ms
+                );
+                results.push(cell);
+            }
         }
     }
     println!("{}", render_table(&results));
+    // Before/after headline: alias speedup over the first non-alias kernel
+    // at matching (workers, batch) cells.
+    for a in results.iter().filter(|r| r.kernel == "alias") {
+        if let Some(b) = results
+            .iter()
+            .find(|r| r.kernel != "alias" && r.workers == a.workers && r.batch == a.batch)
+        {
+            if b.docs_per_sec > 0.0 {
+                println!(
+                    "speedup workers={} batch={}: alias/{} = {:.2}x",
+                    a.workers,
+                    a.batch,
+                    b.kernel,
+                    a.docs_per_sec / b.docs_per_sec
+                );
+            }
+        }
+    }
     let v = results_json(opts, t, w, &results);
     std::fs::write(&opts.out_json, json::to_string_pretty(&v))?;
     println!("wrote {}", opts.out_json.display());
@@ -241,6 +275,7 @@ mod tests {
     #[test]
     fn table_and_json_render() {
         let cell = CellResult {
+            kernel: "alias",
             workers: 2,
             batch: 8,
             requests: 10,
@@ -258,6 +293,13 @@ mod tests {
         let v = results_json(&opts, 8, 100, &[cell]);
         let parsed = json::parse(&json::to_string_pretty(&v)).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
+        assert_eq!(
+            parsed.get("results").unwrap().as_array().unwrap()[0]
+                .get("kernel")
+                .unwrap()
+                .as_str(),
+            Some("alias")
+        );
         assert_eq!(
             parsed.get("results").unwrap().as_array().unwrap()[0]
                 .get("docs")

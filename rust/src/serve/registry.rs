@@ -3,9 +3,13 @@
 //!
 //! A [`ModelEntry`] bundles everything the prediction workers need to stay
 //! allocation-free on the request path: the model, its optional persisted
-//! vocabulary, and the precomputed per-word sparse smoothing table
-//! (`phi_cum`, see [`kernel::build_phi_cum`]) that `cfslda predict` would
-//! otherwise rebuild on every invocation.
+//! vocabulary, the precomputed per-word sparse smoothing table (`phi_cum`,
+//! see [`kernel::build_phi_cum`]) and the frozen-phi Walker alias tables
+//! ([`PhiAliasTables`] — the alias kernel's exact O(1) word proposal) that
+//! `cfslda predict` would otherwise rebuild on every invocation. The tables
+//! are built at load/`POST /reload`, so a hot swap pays the build cost once
+//! and every batcher worker shares them through the pinned entry `Arc`;
+//! `GET /stats` reports the build time and resident bytes per version.
 //!
 //! Hot-swap protocol: `/reload` loads the new file into a fresh entry,
 //! then atomically replaces the `current` pointer. In-flight batches keep
@@ -20,7 +24,8 @@ use crate::model::persist::load_model_full;
 use crate::model::slda::SldaModel;
 use crate::data::vocab::Vocab;
 use crate::sampler::gibbs_predict::token_hash;
-use crate::sampler::kernel;
+use crate::sampler::kernel::{self, PhiAliasTables};
+use crate::util::timer::Stopwatch;
 use anyhow::Context;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -41,6 +46,24 @@ pub struct ModelEntry {
     /// Precomputed per-word cumulative smoothing masses `Σ α·phi` — the
     /// sparse prediction kernel's lookup table, built once per load.
     pub phi_cum: Vec<f64>,
+    /// Frozen-phi Walker alias tables — the alias kernel's exact O(1) word
+    /// proposal, built once per load/hot-swap and shared by every batcher
+    /// worker via this entry's `Arc`. `None` when the registry was opened
+    /// with a kernel that can never resolve to alias (dense/sparse), so
+    /// those deployments pay neither the O(W·T) build nor the residency.
+    pub phi_alias: Option<PhiAliasTables>,
+    /// Wall-clock seconds spent building `phi_alias` (0 when not built;
+    /// surfaced by `/stats`).
+    pub alias_build_secs: f64,
+}
+
+/// One row of the registry's bounded version history (`/stats`).
+#[derive(Clone, Debug)]
+pub struct VersionInfo {
+    pub version: u64,
+    pub path: PathBuf,
+    pub alias_build_secs: f64,
+    pub alias_resident_bytes: usize,
 }
 
 /// Cache key: (model version, request seed, document token hash).
@@ -49,7 +72,11 @@ pub type CacheKey = (u64, u64, u64);
 /// Versioned model slots + prediction cache.
 pub struct Registry {
     current: RwLock<Arc<ModelEntry>>,
-    retained: Mutex<Vec<(u64, PathBuf)>>,
+    retained: Mutex<Vec<VersionInfo>>,
+    /// Whether loads build the frozen-phi alias tables (the serving kernel
+    /// is alias or may resolve to it). Fixed at open time, applied to every
+    /// reload.
+    build_alias: bool,
     next_version: AtomicU64,
     cache: Mutex<Lru>,
     /// Serializes whole reload operations (version take → load → swap) so
@@ -59,19 +86,50 @@ pub struct Registry {
 }
 
 impl Registry {
-    fn load_entry(path: &Path, version: u64) -> anyhow::Result<ModelEntry> {
+    fn load_entry(path: &Path, version: u64, build_alias: bool) -> anyhow::Result<ModelEntry> {
         let (model, vocab) =
             load_model_full(path).with_context(|| format!("loading model {path:?}"))?;
         let phi_cum = kernel::build_phi_cum(&model.phi, model.t, model.alpha);
-        Ok(ModelEntry { version, path: path.to_path_buf(), model, vocab, phi_cum })
+        let sw = Stopwatch::new();
+        let phi_alias =
+            build_alias.then(|| PhiAliasTables::build(&model.phi, model.t));
+        let alias_build_secs = if phi_alias.is_some() { sw.elapsed_secs() } else { 0.0 };
+        Ok(ModelEntry {
+            version,
+            path: path.to_path_buf(),
+            model,
+            vocab,
+            phi_cum,
+            phi_alias,
+            alias_build_secs,
+        })
     }
 
-    /// Open the registry with the initial model (version 1).
-    pub fn open(path: &Path, cache_capacity: usize) -> anyhow::Result<Registry> {
-        let entry = Arc::new(Self::load_entry(path, 1)?);
+    fn info_of(entry: &ModelEntry) -> VersionInfo {
+        VersionInfo {
+            version: entry.version,
+            path: entry.path.clone(),
+            alias_build_secs: entry.alias_build_secs,
+            alias_resident_bytes: entry
+                .phi_alias
+                .as_ref()
+                .map_or(0, |t| t.resident_bytes()),
+        }
+    }
+
+    /// Open the registry with the initial model (version 1). `build_alias`
+    /// controls whether loads prebuild the frozen-phi alias tables (pass
+    /// true unless the serving kernel is pinned to dense/sparse).
+    pub fn open(
+        path: &Path,
+        cache_capacity: usize,
+        build_alias: bool,
+    ) -> anyhow::Result<Registry> {
+        let entry = Arc::new(Self::load_entry(path, 1, build_alias)?);
         Ok(Registry {
-            retained: Mutex::new(vec![(1, entry.path.clone())]),
+            retained: Mutex::new(vec![Self::info_of(&entry)]),
             current: RwLock::new(entry),
+            build_alias,
             next_version: AtomicU64::new(1),
             cache: Mutex::new(Lru::new(cache_capacity)),
             reload_lock: Mutex::new(()),
@@ -94,10 +152,10 @@ impl Registry {
             None => self.current().path.clone(),
         };
         let version = self.next_version.fetch_add(1, Ordering::SeqCst) + 1;
-        let entry = Arc::new(Self::load_entry(&path, version)?);
+        let entry = Arc::new(Self::load_entry(&path, version, self.build_alias)?);
         {
             let mut retained = self.retained.lock().unwrap();
-            retained.push((version, path));
+            retained.push(Self::info_of(&entry));
             let excess = retained.len().saturating_sub(RETAINED_VERSIONS);
             retained.drain(..excess);
         }
@@ -106,8 +164,9 @@ impl Registry {
         Ok(entry)
     }
 
-    /// (version, path) history, oldest first (bounded ring).
-    pub fn versions(&self) -> Vec<(u64, PathBuf)> {
+    /// Version history (with alias-table build cost/footprint), oldest
+    /// first (bounded ring).
+    pub fn versions(&self) -> Vec<VersionInfo> {
         self.retained.lock().unwrap().clone()
     }
 
@@ -350,7 +409,7 @@ mod tests {
         save_model_with_vocab(&tiny_model(1), None, &p1).unwrap();
         save_model_with_vocab(&tiny_model(2), None, &p2).unwrap();
 
-        let reg = Registry::open(&p1, 16).unwrap();
+        let reg = Registry::open(&p1, 16, true).unwrap();
         let e1 = reg.current();
         assert_eq!(e1.version, 1);
         assert_eq!(e1.phi_cum.len(), e1.model.phi.len());
@@ -360,6 +419,20 @@ mod tests {
             let row = &e1.phi_cum[w * e1.model.t..(w + 1) * e1.model.t];
             assert!(row.windows(2).all(|ab| ab[0] <= ab[1]));
         }
+        // frozen-phi alias tables are prebuilt and accounted for
+        let tables = e1.phi_alias.as_ref().expect("open(build_alias=true) must build");
+        assert_eq!(tables.topics(), e1.model.t);
+        assert_eq!(tables.words(), e1.model.w);
+        assert!(tables.resident_bytes() >= e1.model.phi.len() * 20);
+        assert!(e1.alias_build_secs >= 0.0);
+        let infos = reg.versions();
+        assert_eq!(infos[0].version, 1);
+        assert_eq!(infos[0].alias_resident_bytes, tables.resident_bytes());
+        // a dense/sparse-pinned registry skips the build entirely
+        let no_alias = Registry::open(&p1, 4, false).unwrap();
+        assert!(no_alias.current().phi_alias.is_none());
+        assert_eq!(no_alias.current().alias_build_secs, 0.0);
+        assert_eq!(no_alias.versions()[0].alias_resident_bytes, 0);
 
         reg.cache_put(Registry::cache_key(&e1, 0, &[1, 2]), 0.5);
         assert_eq!(reg.cache_get(Registry::cache_key(&e1, 0, &[1, 2])), Some(0.5));
@@ -382,7 +455,7 @@ mod tests {
         assert_eq!(e3.version, 4); // version 3 was burned by the failed attempt
         assert_eq!(e3.path, p2);
         let versions = reg.versions();
-        assert_eq!(versions.last().unwrap().0, 4);
+        assert_eq!(versions.last().unwrap().version, 4);
 
         std::fs::remove_file(p1).ok();
         std::fs::remove_file(p2).ok();

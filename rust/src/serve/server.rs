@@ -55,8 +55,17 @@ impl Server {
     /// the accept loop. Returns once the socket is listening.
     pub fn start(model_path: &Path, cfg: &ExperimentConfig) -> anyhow::Result<Server> {
         crate::config::validate::validate(cfg)?;
+        // Prebuild the frozen-phi alias tables unless the kernel is pinned
+        // to dense/sparse and can never resolve to alias (DESIGN.md
+        // §Serving): dense/sparse deployments skip the O(W·T) build and
+        // its residency entirely.
+        let build_alias = !matches!(
+            cfg.sampler.kernel,
+            crate::config::schema::KernelKind::Dense
+                | crate::config::schema::KernelKind::Sparse
+        );
         let registry =
-            Arc::new(Registry::open(model_path, cfg.serve.cache_capacity)?);
+            Arc::new(Registry::open(model_path, cfg.serve.cache_capacity, build_alias)?);
         let stats = Arc::new(ServeStats::new());
         let workers = if cfg.serve.workers == 0 { num_cpus() } else { cfg.serve.workers };
         let batcher = Batcher::start(
@@ -258,10 +267,12 @@ fn handle_stats(state: &State) -> Result<String, HttpError> {
         .registry
         .versions()
         .into_iter()
-        .map(|(v, p)| {
+        .map(|v| {
             Value::object(vec![
-                ("version", Value::Number(v as f64)),
-                ("path", Value::String(p.display().to_string())),
+                ("version", Value::Number(v.version as f64)),
+                ("path", Value::String(v.path.display().to_string())),
+                ("alias_build_secs", Value::Number(v.alias_build_secs)),
+                ("alias_resident_bytes", Value::Number(v.alias_resident_bytes as f64)),
             ])
         })
         .collect();
@@ -276,6 +287,13 @@ fn handle_stats(state: &State) -> Result<String, HttpError> {
         ("cache_hits", Value::Number(s.cache_hits.load(Ordering::Relaxed) as f64)),
         ("cache_misses", Value::Number(s.cache_misses.load(Ordering::Relaxed) as f64)),
         ("cache_entries", Value::Number(state.registry.cache_len() as f64)),
+        ("alias_build_secs", Value::Number(entry.alias_build_secs)),
+        (
+            "alias_resident_bytes",
+            Value::Number(
+                entry.phi_alias.as_ref().map_or(0, |t| t.resident_bytes()) as f64,
+            ),
+        ),
         ("backlog", Value::Number(state.batcher.backlog() as f64)),
         ("errors", Value::Number(s.errors.load(Ordering::Relaxed) as f64)),
         ("reloads", Value::Number(s.reloads.load(Ordering::Relaxed) as f64)),

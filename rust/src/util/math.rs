@@ -114,6 +114,67 @@ pub fn ln_gamma(x: f64) -> f64 {
     0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
 }
 
+/// Regularized upper incomplete gamma Q(a, x) = Γ(a, x)/Γ(a) — the
+/// chi-square upper-tail CDF is `Q(k/2, x/2)`. Series expansion below the
+/// a+1 knee, Lentz continued fraction above (Numerical Recipes 6.2).
+pub fn gamma_q(a: f64, x: f64) -> f64 {
+    if !(a > 0.0) || x < 0.0 || !x.is_finite() {
+        return f64::NAN;
+    }
+    if x == 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        1.0 - gamma_p_series(a, x)
+    } else {
+        gamma_q_cf(a, x)
+    }
+}
+
+/// P(a, x) by series: P = e^{-x} x^a / Γ(a) · Σ x^n / (a(a+1)...(a+n)).
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-15 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+/// Q(a, x) by modified Lentz continued fraction.
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    const FPMIN: f64 = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / FPMIN;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = b + an / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    ((-x + a * x.ln() - ln_gamma(a)).exp() * h).clamp(0.0, 1.0)
+}
+
 /// Dot product (f64 accumulate over f32 slices).
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f64 {
@@ -200,6 +261,29 @@ mod tests {
         }
         // psi(1) = -gamma
         assert!((digamma(1.0) + 0.577_215_664_901_532_9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gamma_q_reference_values() {
+        // Q(1, x) = e^{-x} (chi-square with 2 dof)
+        for &x in &[0.1, 1.0, 2.5, 10.0] {
+            assert!((gamma_q(1.0, x) - (-x).exp()).abs() < 1e-10, "x={x}");
+        }
+        // Q(1/2, x) = erfc(sqrt(x)) (chi-square with 1 dof)
+        for &x in &[0.05, 0.5, 2.0, 5.0] {
+            let want = 1.0 - erf(x.sqrt());
+            assert!((gamma_q(0.5, x) - want).abs() < 1e-6, "x={x}");
+        }
+        // boundaries and monotonicity in x
+        assert_eq!(gamma_q(3.0, 0.0), 1.0);
+        assert!(gamma_q(3.0, 1.0) > gamma_q(3.0, 2.0));
+        assert!(gamma_q(3.0, 100.0) < 1e-12);
+        assert!(gamma_q(-1.0, 1.0).is_nan());
+        assert!(gamma_q(1.0, -1.0).is_nan());
+        // both evaluation branches agree near the a+1 knee
+        let lo = gamma_q(4.0, 4.999_999);
+        let hi = gamma_q(4.0, 5.000_001);
+        assert!((lo - hi).abs() < 1e-9);
     }
 
     #[test]

@@ -2,11 +2,14 @@
 //!
 //! Used by (a) the evaluation layer (summaries over repeated runs — the
 //! paper's figures average 100 runs), (b) the Fig-5 label-distribution
-//! reproduction (histogram + normality probe), and (c) the Fig-1/2
+//! reproduction (histogram + normality probe), (c) the Fig-1/2
 //! quasi-ergodicity demos (Kolmogorov-Smirnov distance between pooled
-//! sub-chain samples and the true posterior).
+//! sub-chain samples and the true posterior), and (d) the alias-MH
+//! statistical-equivalence suite (chi-square goodness of fit of the alias
+//! kernel's per-token topic marginals against the exact conditional —
+//! `tests/alias_equivalence.rs`).
 
-use crate::util::math::normal_cdf;
+use crate::util::math::{gamma_q, normal_cdf};
 
 /// Streaming summary (Welford) of a scalar series.
 #[derive(Clone, Debug, Default)]
@@ -149,6 +152,46 @@ impl Histogram {
     }
 }
 
+/// Pearson chi-square statistic of observed counts against expected
+/// counts. Bins with expected mass below `min_expected` are pooled into
+/// their successor (the classic small-expected-count guard); pass 0.0 to
+/// disable pooling. Returns `(statistic, effective degrees of freedom)` —
+/// dof = pooled bins - 1.
+pub fn chi_square_stat(observed: &[f64], expected: &[f64], min_expected: f64) -> (f64, usize) {
+    assert_eq!(observed.len(), expected.len());
+    assert!(!observed.is_empty());
+    let mut pooled: Vec<(f64, f64)> = Vec::new();
+    let (mut o_acc, mut e_acc) = (0.0f64, 0.0f64);
+    for (&o, &e) in observed.iter().zip(expected) {
+        o_acc += o;
+        e_acc += e;
+        if e_acc >= min_expected {
+            pooled.push((o_acc, e_acc));
+            o_acc = 0.0;
+            e_acc = 0.0;
+        }
+    }
+    if o_acc > 0.0 || e_acc > 0.0 {
+        // Trailing underweight remainder: fold into the last emitted bin so
+        // the min_expected guard holds for every term of the statistic.
+        match pooled.last_mut() {
+            Some(last) => {
+                last.0 += o_acc;
+                last.1 += e_acc;
+            }
+            None => pooled.push((o_acc, e_acc)),
+        }
+    }
+    let stat = pooled.iter().map(|&(o, e)| (o - e) * (o - e) / e.max(1e-12)).sum();
+    let dof = pooled.len().saturating_sub(1).max(1);
+    (stat, dof)
+}
+
+/// Upper-tail chi-square p-value: P(X² >= stat | dof) = Q(dof/2, stat/2).
+pub fn chi_square_pvalue(stat: f64, dof: usize) -> f64 {
+    gamma_q(dof as f64 / 2.0, stat / 2.0)
+}
+
 /// Two-sample Kolmogorov-Smirnov statistic.
 pub fn ks_two_sample(a: &[f64], b: &[f64]) -> f64 {
     assert!(!a.is_empty() && !b.is_empty());
@@ -228,6 +271,53 @@ mod tests {
         assert_eq!(h.overflow, 1);
         assert_eq!(h.counts.iter().sum::<usize>(), 3);
         assert_eq!(h.n, 5);
+    }
+
+    #[test]
+    fn chi_square_detects_fit_and_misfit() {
+        // well-matched multinomial sample: large p-value
+        let mut r = Pcg64::seed_from_u64(7);
+        let probs = [0.1, 0.25, 0.4, 0.2, 0.05];
+        let n = 50_000usize;
+        let mut obs = [0.0f64; 5];
+        for _ in 0..n {
+            let u = r.next_f64();
+            let mut acc = 0.0;
+            for (i, &p) in probs.iter().enumerate() {
+                acc += p;
+                if u < acc {
+                    obs[i] += 1.0;
+                    break;
+                }
+            }
+        }
+        let expected: Vec<f64> = probs.iter().map(|&p| p * n as f64).collect();
+        let (stat, dof) = chi_square_stat(&obs, &expected, 5.0);
+        assert_eq!(dof, 4);
+        assert!(chi_square_pvalue(stat, dof) > 1e-3, "stat={stat}");
+        // a clearly wrong expectation: tiny p-value
+        let wrong: Vec<f64> = probs.iter().rev().map(|&p| p * n as f64).collect();
+        let (stat, dof) = chi_square_stat(&obs, &wrong, 5.0);
+        assert!(chi_square_pvalue(stat, dof) < 1e-10, "stat={stat}");
+    }
+
+    #[test]
+    fn chi_square_pools_small_expected_bins() {
+        let obs = [100.0, 2.0, 1.0, 3.0, 98.0];
+        let exp = [100.0, 2.0, 2.0, 2.0, 98.0];
+        // min_expected 5 pools the middle three bins (2+2+2 = 6) into one
+        let (_, dof) = chi_square_stat(&obs, &exp, 5.0);
+        assert_eq!(dof, 2);
+        let (_, dof_unpooled) = chi_square_stat(&obs, &exp, 0.0);
+        assert_eq!(dof_unpooled, 4);
+        // a trailing underweight remainder folds into the last emitted bin
+        // instead of forming its own near-zero-expectation bin
+        let (stat, dof) = chi_square_stat(&[100.0, 5.0], &[100.0, 0.01], 5.0);
+        assert_eq!(dof, 1);
+        assert!(stat < 1.0, "trailing bin must be pooled, got stat {stat}");
+        // reference p-values: dof=1 at the 5% critical value 3.841
+        assert!((chi_square_pvalue(3.841, 1) - 0.05).abs() < 2e-3);
+        assert!((chi_square_pvalue(5.991, 2) - 0.05).abs() < 2e-3);
     }
 
     #[test]

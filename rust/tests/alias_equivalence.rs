@@ -1,0 +1,228 @@
+//! Statistical-equivalence suite for the alias-MH kernel (DESIGN.md §Perf).
+//!
+//! The alias kernel is exempt from the dense/sparse byte-identical
+//! contract: Metropolis-Hastings draws consume a different RNG sequence.
+//! Its contract is instead *statistical*: the MH correction targets the
+//! exact Gibbs conditional, so per-token topic marginals, pooled topic
+//! mass, held-out predictions and training fits must all agree with the
+//! dense kernel within sampling noise — while every run stays fully
+//! seed-deterministic. This suite pins that contract on synthetic corpora;
+//! the per-token chain-level marginal tests live next to the kernel in
+//! `sampler/kernel.rs`.
+
+use cfslda::config::schema::{ExperimentConfig, KernelKind};
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_predict::{
+    infer_zbar_parallel, infer_zbar_with_kernel, predict_corpus_with_kernel,
+};
+use cfslda::sampler::gibbs_train::train;
+use cfslda::util::rng::Pcg64;
+use cfslda::util::stats::{chi_square_pvalue, chi_square_stat, Summary};
+
+/// Quick training schedule with a long prediction chain: the equivalence
+/// checks compare sweep-averaged estimates, so extra predict sweeps shrink
+/// chain noise on both sides of every comparison.
+fn cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick();
+    c.train.sweeps = 25;
+    c.train.burnin = 5;
+    c.train.eta_every = 5;
+    c.train.predict_sweeps = 60;
+    c.train.predict_burnin = 20;
+    c
+}
+
+/// Pooled per-topic token mass of a zbar matrix: Σ_d zbar[d, t] · N_d.
+/// Rows sum to one, so the topic masses of two kernels on the same corpus
+/// total identically — a clean chi-square pairing.
+fn pooled_topic_mass(zbar: &[f32], doc_lens: &[usize], t: usize) -> Vec<f64> {
+    let mut mass = vec![0.0f64; t];
+    for (d, &nd) in doc_lens.iter().enumerate() {
+        for ti in 0..t {
+            mass[ti] += zbar[d * t + ti] as f64 * nd as f64;
+        }
+    }
+    mass
+}
+
+#[test]
+fn alias_predict_topic_marginals_match_dense() {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(101);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let cfg = cfg();
+    let out = train(&ds.train, &cfg, &engine, &mut rng).unwrap();
+    let t = out.model.t;
+    let doc_lens: Vec<usize> =
+        (0..ds.test.num_docs()).map(|d| ds.test.doc_len(d)).collect();
+
+    let zd = infer_zbar_with_kernel(
+        &out.model, &ds.test, &cfg.train, KernelKind::Dense,
+        &mut Pcg64::seed_from_u64(7),
+    );
+    let za = infer_zbar_with_kernel(
+        &out.model, &ds.test, &cfg.train, KernelKind::Alias,
+        &mut Pcg64::seed_from_u64(7),
+    );
+    // every alias row is still a distribution
+    for d in 0..ds.test.num_docs() {
+        let s: f32 = za[d * t..(d + 1) * t].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "doc {d} alias zbar sums to {s}");
+    }
+
+    let mass_d = pooled_topic_mass(&zd, &doc_lens, t);
+    let mass_a = pooled_topic_mass(&za, &doc_lens, t);
+    let total: f64 = mass_d.iter().sum();
+    // per-topic proportions agree within generous sampling tolerance
+    for ti in 0..t {
+        let (pd, pa) = (mass_d[ti] / total, mass_a[ti] / total);
+        assert!(
+            (pd - pa).abs() < 0.03,
+            "topic {ti}: dense proportion {pd:.4} vs alias {pa:.4}"
+        );
+    }
+    // and the chi-square over the pooled masses sees no gross mismatch
+    let (stat, dof) = chi_square_stat(&mass_a, &mass_d, 5.0);
+    let p = chi_square_pvalue(stat, dof);
+    assert!(p > 1e-5, "chi-square stat {stat:.2} (dof {dof}) p {p:.2e}");
+}
+
+#[test]
+fn alias_heldout_predictions_within_tolerance_of_dense() {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(202);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let cfg = cfg();
+    let out = train(&ds.train, &cfg, &engine, &mut rng).unwrap();
+    let ys = ds.test.responses();
+    let var = Summary::from_slice(&ys).var();
+
+    let (pd, _) = predict_corpus_with_kernel(
+        &out.model, &ds.test, &cfg.train, KernelKind::Dense, &engine, Some(&ys),
+        &mut Pcg64::seed_from_u64(11),
+    )
+    .unwrap();
+    let (pa, _) = predict_corpus_with_kernel(
+        &out.model, &ds.test, &cfg.train, KernelKind::Alias, &engine, Some(&ys),
+        &mut Pcg64::seed_from_u64(11),
+    )
+    .unwrap();
+
+    // the alias chain must clear the paper's mean-baseline bar like dense
+    assert!(pa.mse < 0.6 * var, "alias mse {} vs baseline {var}", pa.mse);
+    // held-out MSE within tolerance of the dense kernel's
+    assert!(
+        (pa.mse - pd.mse).abs() < 0.25 * pd.mse + 0.02 * var,
+        "alias mse {} drifted from dense mse {} (var {var})",
+        pa.mse,
+        pd.mse
+    );
+    // per-document predictions track each other (same posterior mean, two
+    // chains): small mean absolute deviation relative to the label spread
+    let mad: f64 = pd
+        .yhat
+        .iter()
+        .zip(&pa.yhat)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / pd.yhat.len() as f64;
+    assert!(
+        mad < 0.35 * var.sqrt(),
+        "mean |yhat_dense - yhat_alias| = {mad} vs label sd {}",
+        var.sqrt()
+    );
+}
+
+#[test]
+fn alias_training_reaches_dense_quality() {
+    let spec = SyntheticSpec::continuous_small();
+    let engine = EngineHandle::native();
+    let mut cfg = cfg();
+    let run = |kernel: KernelKind, cfg: &ExperimentConfig| {
+        let mut rng = Pcg64::seed_from_u64(303);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let mut c = cfg.clone();
+        c.sampler.kernel = kernel;
+        let out = train(&ds.train, &c, &engine, &mut rng).unwrap();
+        out.counts.check_invariants().unwrap();
+        (out, ds)
+    };
+    let (dense, ds) = run(KernelKind::Dense, &cfg);
+    // a non-auto staleness budget must work too
+    cfg.sampler.alias_staleness = 24;
+    let (alias, _) = run(KernelKind::Alias, &cfg);
+
+    assert_eq!(alias.z.len(), dense.z.len());
+    assert_eq!(alias.counts.total_tokens(), dense.counts.total_tokens());
+    let var = Summary::from_slice(&ds.train.responses()).var();
+    // both kernels learn: in-sample fit explains most label variance, and
+    // neither chain is grossly worse than the other
+    assert!(dense.model.train_mse < 0.5 * var, "dense mse {}", dense.model.train_mse);
+    assert!(alias.model.train_mse < 0.6 * var, "alias mse {}", alias.model.train_mse);
+    let (lo, hi) = if dense.model.train_mse < alias.model.train_mse {
+        (dense.model.train_mse, alias.model.train_mse)
+    } else {
+        (alias.model.train_mse, dense.model.train_mse)
+    };
+    assert!(
+        hi < 2.0 * lo + 0.02 * var,
+        "train mse diverged: dense {} vs alias {}",
+        dense.model.train_mse,
+        alias.model.train_mse
+    );
+}
+
+#[test]
+fn alias_kernel_is_seed_deterministic() {
+    let spec = SyntheticSpec::continuous_small();
+    let engine = EngineHandle::native();
+    let mut cfg = cfg();
+    cfg.sampler.kernel = KernelKind::Alias;
+    cfg.train.predict_sweeps = 20;
+    cfg.train.predict_burnin = 5;
+    let run = |seed: u64| {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let ds = generate_split(&spec, 180, &mut rng);
+        let out = train(&ds.train, &cfg, &engine, &mut rng).unwrap();
+        let zbar = infer_zbar_with_kernel(
+            &out.model, &ds.test, &cfg.train, KernelKind::Alias, &mut rng,
+        );
+        (out, zbar)
+    };
+    let (a, za) = run(404);
+    let (b, zb) = run(404);
+    assert_eq!(a.z, b.z, "alias training must repeat exactly under one seed");
+    assert_eq!(a.model.eta, b.model.eta);
+    assert_eq!(a.counts.ndt, b.counts.ndt);
+    assert_eq!(za, zb, "alias prediction must repeat exactly under one seed");
+    let (c, zc) = run(405);
+    assert_ne!(a.z, c.z, "different seeds must move the chain");
+    assert_ne!(za, zc);
+}
+
+#[test]
+fn alias_parallel_prediction_is_jobs_independent() {
+    // Per-document content-addressed seeding holds for the alias chain
+    // exactly as for dense/sparse: any worker count, same bytes.
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(505);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let cfg = {
+        let mut c = cfg();
+        c.train.predict_sweeps = 20;
+        c.train.predict_burnin = 5;
+        c
+    };
+    let out = train(&ds.train, &cfg, &engine, &mut rng).unwrap();
+    let z1 = infer_zbar_parallel(
+        &out.model, &ds.test, &cfg.train, KernelKind::Alias, 99, 1,
+    );
+    let z5 = infer_zbar_parallel(
+        &out.model, &ds.test, &cfg.train, KernelKind::Alias, 99, 5,
+    );
+    assert_eq!(z1, z5);
+}
