@@ -10,8 +10,11 @@
 //! * `predict`    — frozen-phi inference (paper eq. 4): fully kernel-
 //!   specific; the sparse path is O(nnz(N_d)) per token and the alias
 //!   path amortized O(1) (the serving regime).
-//! * `train-slda` — eta-active sweeps (Gaussian margin): both kernels
-//!   share the dense path, benched once as a reference.
+//! * `train-slda` — eta-active sweeps (Gaussian margin): kernel-specific
+//!   since the supervised MH decomposition (DESIGN.md §Perf) — dense runs
+//!   the exact O(T) conditional, sparse/alias their own proposals with the
+//!   O(1) response-ratio correction (`resp_mode = auto`); MH acceptance
+//!   rates are reported alongside tokens/s.
 //!
 //! A fourth regime tracks the token-arena refactor (DESIGN.md §Memory
 //! layout):
@@ -44,15 +47,25 @@ struct Record {
     path: &'static str,
     tokens_per_sec: f64,
     median_secs: f64,
+    /// Supervised-MH acceptance rate (train-slda on sparse/alias only).
+    mh_accept_rate: Option<f64>,
 }
 
-fn push(records: &mut Vec<Record>, t: usize, kernel: &'static str, path: &'static str, r: &BenchResult) {
+fn push(
+    records: &mut Vec<Record>,
+    t: usize,
+    kernel: &'static str,
+    path: &'static str,
+    r: &BenchResult,
+    mh_accept_rate: Option<f64>,
+) {
     records.push(Record {
         t,
         kernel,
         path,
         tokens_per_sec: r.throughput().unwrap_or(0.0),
         median_secs: r.median(),
+        mh_accept_rate,
     });
 }
 
@@ -110,7 +123,7 @@ fn main() -> anyhow::Result<()> {
                     train(&corpus, &cfg, &engine, &mut r).unwrap();
                 },
             );
-            push(&mut records, t, kname, "train_lda", &r);
+            push(&mut records, t, kname, "train_lda", &r, None);
             results.push(r);
 
             let mut seed = t as u64 * 2000;
@@ -125,30 +138,42 @@ fn main() -> anyhow::Result<()> {
                     infer_zbar_with_kernel(&model, &corpus, &base.train, kernel, &mut r);
                 },
             );
-            push(&mut records, t, kname, "predict", &r);
+            push(&mut records, t, kname, "predict", &r, None);
+            results.push(r);
+
+            // Supervised (eta-active) sweeps, per kernel: resp_mode = auto
+            // gives dense the exact conditional and sparse/alias their MH
+            // decomposition (DESIGN.md §Perf). Acceptance rates ride along.
+            let mut cfg2 = base.clone();
+            cfg2.sampler.kernel = kernel;
+            cfg2.train.sweeps = 4;
+            cfg2.train.burnin = 1;
+            cfg2.train.eta_every = 1;
+            let mut seed = t as u64 * 3000;
+            let mut mh = (0u64, 0u64);
+            let r = bench_throughput(
+                &format!("gibbs/train-slda {kname} T={t}"),
+                0,
+                iters,
+                tokens * cfg2.train.sweeps as f64,
+                || {
+                    seed += 1;
+                    let mut r = Pcg64::seed_from_u64(seed);
+                    let out = train(&corpus, &cfg2, &engine, &mut r).unwrap();
+                    mh = (out.resp_proposed, out.resp_accepted);
+                },
+            );
+            let accept = if mh.0 > 0 {
+                Some(mh.1 as f64 / mh.0 as f64)
+            } else {
+                None
+            };
+            if let Some(a) = accept {
+                println!("train-slda {kname} T={t}: MH acceptance {:.1}%", a * 100.0);
+            }
+            push(&mut records, t, kname, "train_slda", &r, accept);
             results.push(r);
         }
-
-        // Reference: eta-active sweeps (identical for both kernels — the
-        // Gaussian margin is dense in every topic).
-        let mut cfg2 = base.clone();
-        cfg2.train.sweeps = 4;
-        cfg2.train.burnin = 1;
-        cfg2.train.eta_every = 1;
-        let mut seed = t as u64 * 3000;
-        let r = bench_throughput(
-            &format!("gibbs/train-slda shared T={t}"),
-            0,
-            iters,
-            tokens * cfg2.train.sweeps as f64,
-            || {
-                seed += 1;
-                let mut r = Pcg64::seed_from_u64(seed);
-                train(&corpus, &cfg2, &engine, &mut r).unwrap();
-            },
-        );
-        push(&mut records, t, "shared", "train_slda", &r);
-        results.push(r);
     }
 
     // === Shard setup: arena views vs deep-copy baseline at M ∈ {1, 4, 16}.
@@ -248,11 +273,12 @@ fn main() -> anyhow::Result<()> {
         )
     );
 
-    // Kernel-over-kernel speedups per (T, path). The acceptance bar for
-    // the alias kernel: predict throughput above sparse at T >= 256.
+    // Kernel-over-kernel speedups per (T, path). The acceptance bars: alias
+    // predict throughput above sparse at T >= 256, and the supervised
+    // (train_slda) MH kernels above dense at T = 1024.
     let mut speedups: Vec<Value> = Vec::new();
     for &t in &[16usize, 64, 256, 1024] {
-        for path in ["train_lda", "predict"] {
+        for path in ["train_lda", "predict", "train_slda"] {
             let find = |kernel: &str| {
                 records
                     .iter()
@@ -285,13 +311,17 @@ fn main() -> anyhow::Result<()> {
     let entries: Vec<Value> = records
         .iter()
         .map(|r| {
-            Value::object(vec![
+            let mut fields = vec![
                 ("t", Value::Number(r.t as f64)),
                 ("kernel", Value::String(r.kernel.to_string())),
                 ("path", Value::String(r.path.to_string())),
                 ("tokens_per_sec", Value::Number(r.tokens_per_sec)),
                 ("median_secs", Value::Number(r.median_secs)),
-            ])
+            ];
+            if let Some(a) = r.mh_accept_rate {
+                fields.push(("mh_accept_rate", Value::Number(a)));
+            }
+            Value::object(fields)
         })
         .collect();
     let doc = Value::object(vec![

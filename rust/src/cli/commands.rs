@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::config::json::{self, Value};
-use crate::config::schema::{EngineKind, ExperimentConfig, KernelKind, ResponseKind};
+use crate::config::schema::{EngineKind, ExperimentConfig, KernelKind, RespMode, ResponseKind};
 use crate::data::loader;
 use crate::data::partition::train_test_split;
 use crate::data::stats::{corpus_stats, label_report};
@@ -34,12 +34,17 @@ COMMANDS:
               --data FILE.bow --algorithm non-parallel|naive|simple|weighted|median
               [--train N] [--config CFG.json] [--engine auto|xla|native]
               [--kernel dense|sparse|alias|auto] [--alias-staleness N]
-              [--seed S] [--json OUT.json]
+              [--resp-mode exact|mh|auto] [--seed S] [--json OUT.json]
   train       Train a single sLDA model and save it
               --data FILE.bow|FILE.jsonl --out MODEL.bin [--config CFG.json]
               [--seed S] [--kernel dense|sparse|alias|auto] [--alias-staleness N]
-              [--vocab TERMS.txt]
+              [--resp-mode exact|mh|auto] [--vocab TERMS.txt]
               [--min-df F] [--max-df F]
+              --resp-mode picks the supervised (eta-active) sweep: exact =
+              dense O(T)/token Gaussian conditional on every kernel; mh =
+              the kernel's own sparse/alias proposals with an O(1)
+              Metropolis-Hastings response correction; auto = exact for
+              dense, mh for sparse/alias.
               A .jsonl corpus ({\"text\", \"response\"} lines) is tokenized
               here and the learned vocabulary is persisted into the model,
               enabling serve's /predict/text and named top-words. For .bow
@@ -72,7 +77,8 @@ COMMANDS:
               [--requests N] [--json F]
   experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
               --fig 6|7 [--scale F] [--runs N] [--engine E]
-              [--kernel dense|sparse|alias|auto] [--check]
+              [--kernel dense|sparse|alias|auto] [--resp-mode exact|mh|auto]
+              [--check]
   figs        Reproduce illustration figures: --fig 1|2|3|5
   help        This text
 
@@ -102,13 +108,17 @@ fn spec_from_args(a: &Args) -> anyhow::Result<SyntheticSpec> {
 }
 
 /// Apply the shared `--kernel dense|sparse|alias|auto` flag (plus the alias
-/// kernel's `--alias-staleness` rebuild budget) to a config.
+/// kernel's `--alias-staleness` rebuild budget and the supervised-sweep
+/// `--resp-mode exact|mh|auto` knob) to a config.
 fn apply_kernel_flag(a: &Args, cfg: &mut ExperimentConfig) -> anyhow::Result<()> {
     if let Some(k) = a.get("kernel") {
         cfg.sampler.kernel = KernelKind::parse(k)?;
     }
     cfg.sampler.alias_staleness =
         a.get_usize("alias-staleness", cfg.sampler.alias_staleness)?;
+    if let Some(r) = a.get("resp-mode") {
+        cfg.sampler.resp_mode = RespMode::parse(r)?;
+    }
     Ok(())
 }
 
@@ -272,7 +282,10 @@ pub fn cmd_figs(a: &Args) -> anyhow::Result<i32> {
 /// Load a training corpus, producing a vocabulary when one is available:
 /// raw-text `.jsonl` corpora build it during tokenization; `.bow` corpora
 /// can attach one via `--vocab TERMS.txt` (one term per line, id order).
-fn load_train_corpus(a: &Args, data: &str) -> anyhow::Result<(crate::data::corpus::Corpus, Option<Vocab>)> {
+fn load_train_corpus(
+    a: &Args,
+    data: &str,
+) -> anyhow::Result<(crate::data::corpus::Corpus, Option<Vocab>)> {
     if data.ends_with(".jsonl") {
         let min_df = a.get_f64("min-df", 0.02)?; // the paper's 2% floor
         let max_df = a.get_f64("max-df", 1.0)?;
@@ -568,6 +581,34 @@ mod tests {
         assert_eq!(v.get("yhat").unwrap().as_array().unwrap().len(), 150);
         assert_eq!(cmd_top_words(&parse(&format!("top-words --model {model} --k 3"))).unwrap(), 0);
         for f in [bow, model, preds] {
+            std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn train_with_alias_mh_kernel_flags() {
+        let bow = tmp("mh.bow");
+        let model = tmp("mh.model");
+        cmd_gen_data(&parse(&format!("gen-data --out {bow} --preset small --docs 120 --seed 8")))
+            .unwrap();
+        let rc = cmd_train(&parse(&format!(
+            "train --data {bow} --out {model} --engine native --seed 8 \
+             --kernel alias --resp-mode mh"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        // the supervised-MH-trained model predicts like any other
+        let rc = cmd_predict(&parse(&format!(
+            "predict --model {model} --data {bow} --engine native --seed 8"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        // validation wiring: mh on the dense kernel must be rejected
+        assert!(cmd_train(&parse(&format!(
+            "train --data {bow} --out {model} --engine native --kernel dense --resp-mode mh"
+        )))
+        .is_err());
+        for f in [bow, model] {
             std::fs::remove_file(f).ok();
         }
     }

@@ -115,11 +115,63 @@ impl KernelKind {
     }
 }
 
+/// How the *supervised* (eta-active) training sweep draws topics
+/// (DESIGN.md §Perf "Supervised MH decomposition").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RespMode {
+    /// Exact supervised conditional: the dense O(T)-per-token Gaussian
+    /// margin sweep (`sweep_doc_gauss`) — the reference path.
+    Exact,
+    /// Metropolis-Hastings: propose from the kernel's unsupervised
+    /// machinery (sparse buckets / alias tables) and correct with the O(1)
+    /// Gaussian response ratio. Requires `kernel = sparse|alias` (or
+    /// `auto`); the dense kernel has no MH supervised path.
+    Mh,
+    /// Per-kernel resolution: exact for dense, MH for sparse/alias (see
+    /// [`RespMode::resolve`]).
+    Auto,
+}
+
+impl RespMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "exact" => RespMode::Exact,
+            "mh" => RespMode::Mh,
+            "auto" => RespMode::Auto,
+            other => bail!("unknown sampler resp_mode '{other}' (expected exact|mh|auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RespMode::Exact => "exact",
+            RespMode::Mh => "mh",
+            RespMode::Auto => "auto",
+        }
+    }
+
+    /// Resolve against a *resolved* (never `Auto`) train kernel: the dense
+    /// kernel always runs the exact sweep (its MH machinery does not
+    /// exist — validation rejects an explicit `mh` + `dense` pairing, and
+    /// an `auto` kernel that resolves to dense degrades `mh` to exact);
+    /// sparse/alias resolve `Auto` to MH. The result is never `Auto`.
+    pub fn resolve(self, kernel: KernelKind) -> RespMode {
+        match kernel {
+            KernelKind::Dense => RespMode::Exact,
+            _ => match self {
+                RespMode::Exact => RespMode::Exact,
+                _ => RespMode::Mh,
+            },
+        }
+    }
+}
+
 /// Sampler implementation knobs (orthogonal to the model/schedule).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SamplerConfig {
     /// Token-update kernel. Dense and sparse are draw-for-draw identical
-    /// under a fixed seed; alias is statistically equivalent (and still
+    /// under a fixed seed (burn-in, prediction and `resp_mode = exact`
+    /// supervised sweeps); alias is statistically equivalent (and still
     /// seed-deterministic) but a different chain.
     pub kernel: KernelKind,
     /// Alias-kernel staleness budget (training path only): how many count
@@ -128,11 +180,20 @@ pub struct SamplerConfig {
     /// Only meaningful for `kernel = alias` (or `auto`); prediction tables
     /// are built once against frozen phi and are always exact.
     pub alias_staleness: usize,
+    /// Supervised-sweep mode: `exact` keeps every kernel on the dense
+    /// Gaussian-margin conditional once eta activates; `mh` runs the
+    /// kernel's own proposals with the O(1) response-ratio MH correction;
+    /// `auto` resolves per kernel (exact for dense, MH for sparse/alias).
+    pub resp_mode: RespMode,
 }
 
 impl Default for SamplerConfig {
     fn default() -> Self {
-        SamplerConfig { kernel: KernelKind::Auto, alias_staleness: 0 }
+        SamplerConfig {
+            kernel: KernelKind::Auto,
+            alias_staleness: 0,
+            resp_mode: RespMode::Auto,
+        }
     }
 }
 
@@ -305,7 +366,13 @@ impl ExperimentConfig {
     pub fn quick() -> Self {
         let mut c = Self::default();
         c.model.topics = 8;
-        c.train = TrainConfig { sweeps: 30, burnin: 5, eta_every: 5, predict_sweeps: 10, predict_burnin: 3 };
+        c.train = TrainConfig {
+            sweeps: 30,
+            burnin: 5,
+            eta_every: 5,
+            predict_sweeps: 10,
+            predict_burnin: 3,
+        };
         c
     }
 
@@ -314,7 +381,13 @@ impl ExperimentConfig {
         let mut c = Self::default();
         c.model.topics = 16;
         c.response = ResponseKind::Continuous;
-        c.train = TrainConfig { sweeps: 100, burnin: 10, eta_every: 5, predict_sweeps: 20, predict_burnin: 5 };
+        c.train = TrainConfig {
+            sweeps: 100,
+            burnin: 10,
+            eta_every: 5,
+            predict_sweeps: 20,
+            predict_burnin: 5,
+        };
         c
     }
 
@@ -348,6 +421,7 @@ impl ExperimentConfig {
             ("sampler", Value::object(vec![
                 ("kernel", Value::String(self.sampler.kernel.name().to_string())),
                 ("alias_staleness", Value::Number(self.sampler.alias_staleness as f64)),
+                ("resp_mode", Value::String(self.sampler.resp_mode.name().to_string())),
             ])),
             ("parallel", Value::object(vec![
                 ("shards", Value::Number(self.parallel.shards as f64)),
@@ -390,6 +464,10 @@ impl ExperimentConfig {
                     KernelKind::parse(k.as_str().context("sampler.kernel must be a string")?)?;
             }
             read_usize(s, "alias_staleness", &mut c.sampler.alias_staleness)?;
+            if let Some(r) = s.get("resp_mode") {
+                c.sampler.resp_mode =
+                    RespMode::parse(r.as_str().context("sampler.resp_mode must be a string")?)?;
+            }
         }
         if let Some(p) = v.get("parallel") {
             read_usize(p, "shards", &mut c.parallel.shards)?;
@@ -483,6 +561,7 @@ mod tests {
         assert!(ExperimentConfig::from_json(r#"{"engine": "gpu"}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"response": 7}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"sampler": {"kernel": "turbo"}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"sampler": {"resp_mode": "sorta"}}"#).is_err());
     }
 
     #[test]
@@ -513,6 +592,32 @@ mod tests {
             assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
         }
         assert!(KernelKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn resp_mode_roundtrips_and_resolves() {
+        let mut c = ExperimentConfig::quick();
+        c.sampler.kernel = KernelKind::Sparse;
+        c.sampler.resp_mode = RespMode::Mh;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sampler.resp_mode, RespMode::Mh);
+        let c3 = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(c3.sampler.resp_mode, RespMode::Auto);
+
+        // per-kernel resolution: dense is always exact, sparse/alias
+        // resolve auto (and explicit mh) to MH; the result is never Auto.
+        for m in [RespMode::Exact, RespMode::Mh, RespMode::Auto] {
+            assert_eq!(m.resolve(KernelKind::Dense), RespMode::Exact);
+        }
+        for k in [KernelKind::Sparse, KernelKind::Alias] {
+            assert_eq!(RespMode::Auto.resolve(k), RespMode::Mh);
+            assert_eq!(RespMode::Mh.resolve(k), RespMode::Mh);
+            assert_eq!(RespMode::Exact.resolve(k), RespMode::Exact);
+        }
+        for m in [RespMode::Exact, RespMode::Mh, RespMode::Auto] {
+            assert_eq!(RespMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(RespMode::parse("bogus").is_err());
     }
 
     #[test]

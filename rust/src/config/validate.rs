@@ -1,6 +1,6 @@
 //! Config validation: fail fast with actionable messages before a run.
 
-use super::schema::{EngineKind, ExperimentConfig, KernelKind};
+use super::schema::{EngineKind, ExperimentConfig, KernelKind, RespMode};
 use anyhow::bail;
 
 /// Hard topic ceiling: token assignments are stored as `u16` and the
@@ -69,6 +69,13 @@ pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
              but sampler.kernel = {}; drop the knob or set kernel = alias|auto",
             sp.alias_staleness,
             sp.kernel.name()
+        );
+    }
+    if sp.resp_mode == RespMode::Mh && sp.kernel == KernelKind::Dense {
+        bail!(
+            "sampler.resp_mode = mh requires a kernel with an MH supervised \
+             path, but sampler.kernel = dense; set kernel = sparse|alias|auto \
+             or resp_mode = exact|auto"
         );
     }
     if sp.alias_staleness > 1 << 20 {
@@ -215,6 +222,31 @@ mod tests {
         c.sampler.kernel = KernelKind::Alias;
         c.sampler.alias_staleness = (1 << 20) + 1;
         assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_mh_resp_mode_on_the_dense_kernel() {
+        use crate::config::schema::{KernelKind, RespMode};
+        let mut c = ExperimentConfig::quick();
+        c.sampler.kernel = KernelKind::Dense;
+        c.sampler.resp_mode = RespMode::Mh;
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("resp_mode"), "{err}");
+        // exact and auto are fine on dense
+        for m in [RespMode::Exact, RespMode::Auto] {
+            let mut c = ExperimentConfig::quick();
+            c.sampler.kernel = KernelKind::Dense;
+            c.sampler.resp_mode = m;
+            validate(&c).unwrap();
+        }
+        // mh pairs with every kernel that has (or may resolve to) an MH
+        // supervised path
+        for k in [KernelKind::Sparse, KernelKind::Alias, KernelKind::Auto] {
+            let mut c = ExperimentConfig::quick();
+            c.sampler.kernel = k;
+            c.sampler.resp_mode = RespMode::Mh;
+            validate(&c).unwrap();
+        }
     }
 
     #[test]

@@ -168,6 +168,25 @@ impl CountMatrices {
         &self.ndt[d * self.t..(d + 1) * self.t]
     }
 
+    /// Sorted topic ids with `N_dt > 0` for document `d`: a borrow of the
+    /// live [`SparseIndex`] when enabled (the sparse/alias training paths
+    /// keep it consistent through burn-in *and* supervised sweeps, since
+    /// every token move goes through `inc`/`dec`), otherwise computed into
+    /// `scratch`. Consumers: the count-sided Gram accumulation
+    /// (`regress::ridge::gram_moments_from_counts`) and its MSE twin.
+    pub fn doc_nonzeros<'a>(&'a self, d: usize, scratch: &'a mut Vec<u16>) -> &'a [u16] {
+        if let Some(nz) = &self.nz {
+            &nz.doc_nz[d]
+        } else {
+            scratch.clear();
+            let row = self.ndt_row(d);
+            scratch.extend(
+                (0..self.t).filter(|&ti| row[ti] > 0).map(|ti| ti as u16),
+            );
+            scratch
+        }
+    }
+
     /// Per-word topic count column (contiguous thanks to word-major layout).
     #[inline]
     pub fn ntw_row(&self, w: u32) -> &[u32] {
@@ -486,6 +505,33 @@ mod tests {
         let other = CountMatrices::new(1, 3, 4);
         c.absorb_word_topic(&other);
         assert!(c.alias_rev.is_none());
+    }
+
+    #[test]
+    fn doc_nonzeros_agrees_with_and_without_index() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let (d, t, w) = (4, 6, 9);
+        let mut c = CountMatrices::new(d, t, w);
+        for doc in 0..d {
+            for _ in 0..12 {
+                c.inc(doc, rng.gen_range(w) as u32, rng.gen_range(t));
+            }
+        }
+        let mut scratch = Vec::new();
+        let plain: Vec<Vec<u16>> =
+            (0..d).map(|doc| c.doc_nonzeros(doc, &mut scratch).to_vec()).collect();
+        c.enable_sparse_index();
+        for doc in 0..d {
+            assert_eq!(c.doc_nonzeros(doc, &mut scratch), plain[doc].as_slice());
+            let want: Vec<u16> = (0..t)
+                .filter(|&ti| c.ndt[doc * t + ti] > 0)
+                .map(|ti| ti as u16)
+                .collect();
+            assert_eq!(plain[doc], want);
+        }
+        // empty document: empty list either way
+        let c2 = CountMatrices::new(1, 3, 2);
+        assert!(c2.doc_nonzeros(0, &mut scratch).is_empty());
     }
 
     #[test]

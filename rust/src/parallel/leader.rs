@@ -548,10 +548,13 @@ mod tests {
 
     #[test]
     fn kernel_choice_does_not_change_results() {
-        // dense and sparse kernels are draw-for-draw identical, so a whole
-        // parallel run must produce byte-identical predictions either way.
+        // dense and sparse kernels are draw-for-draw identical (under
+        // resp_mode = exact — `auto` would give sparse its own supervised
+        // MH chain), so a whole parallel run must produce byte-identical
+        // predictions either way.
         let (ds, mut cfg) = fixture();
         let engine = EngineHandle::native();
+        cfg.sampler.resp_mode = crate::config::schema::RespMode::Exact;
         cfg.sampler.kernel = crate::config::schema::KernelKind::Dense;
         let a = run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap().0;
         cfg.sampler.kernel = crate::config::schema::KernelKind::Sparse;

@@ -6,6 +6,16 @@
 //! T <= 64 here, so an O(T^3) Cholesky is microseconds; the expensive
 //! D x T Gram accumulation is the part that the XLA engine offloads to the
 //! AOT Pallas `gram` kernel, with this module consuming the (G, b) moments.
+//!
+//! The native training loop instead accumulates the moments **straight from
+//! the Gibbs count state** ([`gram_moments_from_counts`]): each document
+//! contributes only its non-zero topic counts, so the eta step costs
+//! O(Σ_d nnz_d²) instead of O(D·T²) and never materializes the [D, T] f32
+//! zbar matrix. The zbar values are re-derived with the exact same
+//! `u32 -> f32` rounding, so the moments are bitwise equal to
+//! [`gram_moments`] on [`CountMatrices::zbar_matrix`]'s output.
+
+use crate::model::counts::CountMatrices;
 
 /// Symmetric positive-definite solve via Cholesky: a x = b, `a` row-major
 /// n x n. Returns `None` if the factorization fails (not SPD).
@@ -78,6 +88,79 @@ pub fn gram_moments(zbar: &[f32], y: &[f64], w: &[f64], t: usize) -> (Vec<f64>, 
         }
     }
     (g, b, n)
+}
+
+/// Weighted Gram moments G = Z̄ᵀWZ̄, b = Z̄ᵀWy, n = Σw straight from the
+/// count matrices, accumulating over each document's non-zero topic counts
+/// only — O(Σ_d nnz_d²) instead of O(D·T²), no [D, T] zbar buffer.
+/// `w = None` means unit weights. Bitwise equal to [`gram_moments`] on the
+/// matching zbar matrix: every contribution is the same f32-rounded value
+/// (`N_dt as f32 / N_d as f32`) added in the same (doc, i, j) order, and
+/// the skipped zero-count terms are exact IEEE no-ops there.
+pub fn gram_moments_from_counts(
+    counts: &CountMatrices,
+    y: &[f64],
+    w: Option<&[f64]>,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let t = counts.t;
+    debug_assert_eq!(counts.d, y.len());
+    let mut g = vec![0.0f64; t * t];
+    let mut b = vec![0.0f64; t];
+    let mut n = 0.0f64;
+    let mut scratch: Vec<u16> = Vec::new();
+    for d in 0..counts.d {
+        let wd = w.map_or(1.0, |w| w[d]);
+        if wd == 0.0 {
+            continue;
+        }
+        n += wd;
+        let nd = counts.nd[d].max(1) as f32;
+        let row = counts.ndt_row(d);
+        let nzs = counts.doc_nonzeros(d, &mut scratch);
+        for &iu in nzs {
+            let i = iu as usize;
+            let zi = wd * (row[i] as f32 / nd) as f64;
+            b[i] += zi * y[d];
+            let gi = &mut g[i * t..(i + 1) * t];
+            for &ju in nzs {
+                let j = ju as usize;
+                gi[j] += zi * (row[j] as f32 / nd) as f64;
+            }
+        }
+    }
+    (g, b, n)
+}
+
+/// Weighted train MSE of `eta` straight from the count matrices — the
+/// count-sided twin of [`weighted_mse`], bitwise equal on the matching
+/// zbar (same f32 rounding, same ascending accumulation order, skipped
+/// terms are exact zeros). `w = None` means unit weights.
+pub fn mse_from_counts(
+    counts: &CountMatrices,
+    eta: &[f64],
+    y: &[f64],
+    w: Option<&[f64]>,
+) -> f64 {
+    debug_assert_eq!(counts.d, y.len());
+    let mut se = 0.0;
+    let mut n = 0.0;
+    let mut scratch: Vec<u16> = Vec::new();
+    for d in 0..counts.d {
+        let wd = w.map_or(1.0, |w| w[d]);
+        if wd == 0.0 {
+            continue;
+        }
+        let nd = counts.nd[d].max(1) as f32;
+        let row = counts.ndt_row(d);
+        let mut yhat = 0.0f64;
+        for &tu in counts.doc_nonzeros(d, &mut scratch) {
+            let ti = tu as usize;
+            yhat += (row[ti] as f32 / nd) as f64 * eta[ti];
+        }
+        se += wd * (y[d] - yhat) * (y[d] - yhat);
+        n += wd;
+    }
+    if n == 0.0 { 0.0 } else { se / n }
 }
 
 /// Full ridge solve from raw rows: returns (eta, weighted train MSE).
@@ -210,6 +293,55 @@ mod tests {
     }
 
     #[test]
+    fn count_sided_moments_equal_zbar_moments_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let (d, t, w) = (23usize, 7usize, 15usize);
+        let mut counts = CountMatrices::new(d, t, w);
+        for di in 0..d {
+            // ragged docs, one left empty (nd.max(1) guard)
+            for _ in 0..(di * 5) % 29 {
+                counts.inc(di, rng.gen_range(w) as u32, rng.gen_range(t));
+            }
+        }
+        let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let wts: Vec<f64> =
+            (0..d).map(|i| if i % 4 == 0 { 0.0 } else { 0.5 + rng.next_f64() }).collect();
+        let ones = vec![1.0f64; d];
+        let zbar = counts.zbar_matrix();
+        let eta: Vec<f64> = (0..t).map(|_| rng.next_gaussian()).collect();
+
+        // with and without the sparse index, weighted and unweighted, the
+        // count-sided accumulation must be bitwise equal to the zbar path
+        for indexed in [false, true] {
+            if indexed {
+                counts.enable_sparse_index();
+            }
+            let (g0, b0, n0) = gram_moments(&zbar, &y, &wts, t);
+            let (g1, b1, n1) = gram_moments_from_counts(&counts, &y, Some(&wts));
+            assert_eq!(g0, g1, "G diverged (indexed={indexed})");
+            assert_eq!(b0, b1, "b diverged (indexed={indexed})");
+            assert_eq!(n0, n1);
+
+            let (g0, b0, n0) = gram_moments(&zbar, &y, &ones, t);
+            let (g1, b1, n1) = gram_moments_from_counts(&counts, &y, None);
+            assert_eq!(g0, g1, "unit-weight G diverged (indexed={indexed})");
+            assert_eq!(b0, b1, "unit-weight b diverged (indexed={indexed})");
+            assert_eq!(n0, n1);
+
+            assert_eq!(
+                weighted_mse(&zbar, &eta, &y, &wts, t),
+                mse_from_counts(&counts, &eta, &y, Some(&wts)),
+                "weighted mse diverged (indexed={indexed})"
+            );
+            assert_eq!(
+                weighted_mse(&zbar, &eta, &y, &ones, t),
+                mse_from_counts(&counts, &eta, &y, None),
+                "unit-weight mse diverged (indexed={indexed})"
+            );
+        }
+    }
+
+    #[test]
     fn ridge_recovers_generating_eta() {
         let mut rng = Pcg64::seed_from_u64(3);
         let (d, t) = (400, 6);
@@ -256,7 +388,8 @@ mod tests {
         for wi in &mut w[15..] {
             *wi = 0.0;
         }
-        let y2: Vec<f64> = y.iter().enumerate().map(|(i, &v)| if i >= 15 { 1e6 } else { v }).collect();
+        let y2: Vec<f64> =
+            y.iter().enumerate().map(|(i, &v)| if i >= 15 { 1e6 } else { v }).collect();
         let zbar1: Vec<f32> = zbar[..15 * t].to_vec();
         let (eta_ref, _) = ridge_fit(&zbar1, &y[..15], &w[..15], t, 0.1, 0.0).unwrap();
         let (eta2, _) = ridge_fit(&zbar, &y2, &w, t, 0.1, 0.0).unwrap();

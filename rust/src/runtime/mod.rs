@@ -19,6 +19,8 @@ pub mod service;
 pub mod xla;
 
 use crate::config::schema::EngineKind;
+use crate::model::counts::CountMatrices;
+use crate::regress::ridge;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -120,6 +122,37 @@ impl EngineHandle {
         match self {
             EngineHandle::Native(e) => e.eta_solve(zbar, y, t, lambda, mu),
             EngineHandle::Xla(s) => s.eta_solve(zbar, y, t, lambda, mu),
+        }
+    }
+
+    /// MAP eta (paper eq. 2) straight from the Gibbs count state. The
+    /// native engine accumulates the Gram moments over the counts'
+    /// non-zeros ([`ridge::gram_moments_from_counts`], O(Σ_d nnz_d²)) and
+    /// never touches `zbar_scratch`; the XLA engine materializes zbar into
+    /// the caller's reusable buffer and dispatches the AOT gram kernel as
+    /// before. Numerically identical to [`EngineHandle::eta_solve`] on
+    /// [`CountMatrices::zbar_matrix`]'s output (bitwise, on the native
+    /// path).
+    pub fn eta_solve_counts(
+        &self,
+        counts: &CountMatrices,
+        y: &[f64],
+        lambda: f64,
+        mu: f64,
+        zbar_scratch: &mut Vec<f32>,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        match self {
+            EngineHandle::Native(_) => {
+                let t = counts.t;
+                let (g, b, _) = ridge::gram_moments_from_counts(counts, y, None);
+                let eta = ridge::ridge_solve_moments(&g, &b, t, lambda, mu)?;
+                let mse = ridge::mse_from_counts(counts, &eta, y, None);
+                Ok((eta, mse))
+            }
+            EngineHandle::Xla(s) => {
+                counts.zbar_matrix_into(zbar_scratch);
+                s.eta_solve(zbar_scratch, y, counts.t, lambda, mu)
+            }
         }
     }
 

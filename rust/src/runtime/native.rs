@@ -149,6 +149,28 @@ mod tests {
     }
 
     #[test]
+    fn eta_solve_counts_is_bitwise_equal_to_zbar_eta_solve() {
+        use crate::model::counts::CountMatrices;
+        use crate::runtime::EngineHandle;
+        let mut rng = Pcg64::seed_from_u64(6);
+        let (d, t, w) = (40usize, 5usize, 12usize);
+        let mut counts = CountMatrices::new(d, t, w);
+        for di in 0..d {
+            for _ in 0..10 + di % 7 {
+                counts.inc(di, rng.gen_range(w) as u32, rng.gen_range(t));
+            }
+        }
+        let y: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let engine = EngineHandle::native();
+        let (eta_a, mse_a) =
+            engine.eta_solve(&counts.zbar_matrix(), &y, t, 0.1, 0.0).unwrap();
+        let (eta_b, mse_b) =
+            engine.eta_solve_counts(&counts, &y, 0.1, 0.0, &mut Vec::new()).unwrap();
+        assert_eq!(eta_a, eta_b, "count-sided eta must match the zbar path bitwise");
+        assert_eq!(mse_a, mse_b);
+    }
+
+    #[test]
     fn eta_solve_delegates_to_ridge() {
         let mut rng = Pcg64::seed_from_u64(5);
         let (d, t) = (300, 4);

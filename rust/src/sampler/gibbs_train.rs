@@ -13,9 +13,16 @@
 //! The token updates are delegated to the configured [`kernel`]: while eta
 //! is all-zero (every burn-in sweep) the response factor is constant and the
 //! kernel's plain-LDA path runs — the sparse kernel exploits the bucket
-//! decomposition there, the alias kernel its O(1) MH proposals; once eta
-//! activates, every kernel shares the dense Gaussian-margin path
-//! [`kernel::sweep_doc_gauss`] (DESIGN.md §Perf).
+//! decomposition there, the alias kernel its O(1) MH proposals. Once eta
+//! activates, the same kernel's supervised entry point
+//! [`kernel::SamplerKernel::sweep_doc_resp`] takes over: exact
+//! O(T)-per-token Gaussian-margin sweeps on the dense kernel (and under
+//! `sampler.resp_mode = exact`), Metropolis-Hastings-corrected sparse/alias
+//! proposals with the O(1) response ratio under `resp_mode = mh|auto`
+//! (DESIGN.md §Perf "Supervised MH decomposition"). The eta step itself
+//! consumes the Gram moments straight from the count state
+//! ([`EngineHandle::eta_solve_counts`]) — no [D, T] zbar materialization
+//! per step.
 //!
 //! The trainer consumes a [`CorpusView`]: a shard worker trains directly on
 //! a borrowed window of the leader's token arena (zero setup copies,
@@ -27,7 +34,7 @@ use crate::data::corpus::CorpusView;
 use crate::model::counts::CountMatrices;
 use crate::model::slda::SldaModel;
 use crate::runtime::EngineHandle;
-use crate::sampler::kernel::{self, GaussScratch, TrainState};
+use crate::sampler::kernel::{self, GaussScratch, RespState, TrainState};
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CpuStopwatch, PhaseTimings};
 
@@ -60,6 +67,11 @@ pub struct TrainOutput {
     pub history: Vec<SweepStats>,
     /// Total token updates performed (throughput accounting).
     pub tokens_sampled: u64,
+    /// Supervised-MH proposals issued across all eta-active sweeps (0 when
+    /// the supervised path ran the exact conditional).
+    pub resp_proposed: u64,
+    /// Supervised-MH proposals accepted (self-proposals count as accepted).
+    pub resp_accepted: u64,
     /// Phase timing breakdown (gibbs vs eta-solve).
     pub timings: PhaseTimings,
 }
@@ -94,17 +106,24 @@ pub fn train<'a>(
     // data a shard worker copies out of the arena).
     let y: Vec<f64> = corpus.responses();
 
-    // Kernel selection (DESIGN.md §Perf): `auto` resolves by topic count.
-    // The sparse kernel needs the counts' non-zero index and the alias
-    // kernel the per-word update counters; both are maintained
-    // incrementally by inc/dec from here on.
+    // Kernel selection (DESIGN.md §Perf): `auto` resolves by topic count,
+    // `resp_mode` per kernel (exact for dense, MH for sparse/alias). The
+    // sparse kernel needs the counts' non-zero index and the alias kernel
+    // the per-word update counters; both are maintained incrementally by
+    // inc/dec through every sweep — burn-in and supervised alike — so the
+    // MH supervised path keeps drawing from live structures.
     let resolved = cfg.sampler.kernel.resolve_train(t);
     match resolved {
         KernelKind::Sparse => counts.enable_sparse_index(),
         KernelKind::Alias => counts.enable_alias_rev(),
         _ => {}
     }
-    let mut kern = kernel::make_train_kernel(resolved, t, cfg.sampler.alias_staleness);
+    let mut kern = kernel::make_train_kernel(
+        resolved,
+        t,
+        cfg.sampler.alias_staleness,
+        cfg.sampler.resp_mode,
+    );
 
     // Incrementally maintained 1/(N_t + W beta): replaces T divisions per
     // token with 2 reciprocal updates (§Perf opt A). `ssum` caches its sum
@@ -119,7 +138,9 @@ pub fn train<'a>(
     // so u_t = exp(-e_t^2/2rho) costs T exps per *document* and each token
     // pays one fused multiply inside the remaining exp.
     let mut scratch = GaussScratch::new(t);
-    // Reusable zbar buffer for the eta steps (one allocation per run).
+    // Reusable zbar buffer: only the XLA engine's eta path materializes
+    // into it (native consumes the counts directly); the final model-card
+    // fit below reuses it too.
     let mut zbar_buf: Vec<f32> = Vec::new();
     let mut history = Vec::new();
     let mut tokens_sampled: u64 = 0;
@@ -140,9 +161,8 @@ pub fn train<'a>(
                 rng: &mut *rng,
             };
             if eta_active {
-                kernel::sweep_doc_gauss(
-                    &mut st, &mut scratch, &eta, y[di], rho, di, tokens, zd,
-                );
+                let mut rs = RespState { eta: &eta, y: y[di], rho, scratch: &mut scratch };
+                kern.sweep_doc_resp(&mut st, &mut rs, di, tokens, zd);
             } else {
                 kern.sweep_doc_lda(&mut st, di, tokens, zd);
             }
@@ -157,9 +177,12 @@ pub fn train<'a>(
         let last = sweep + 1 == cfg.train.sweeps;
         if due || last {
             let sw = CpuStopwatch::new();
-            counts.zbar_matrix_into(&mut zbar_buf);
             let lambda = cfg.model.lambda(rho);
-            let (eta_new, mse) = engine.eta_solve(&zbar_buf, &y, t, lambda, cfg.model.mu)?;
+            // Gram moments straight from the counts (O(Σ_d nnz_d²), no
+            // [D, T] zbar materialization) — numerically identical to the
+            // zbar-matrix path (DESIGN.md §Perf).
+            let (eta_new, mse) =
+                engine.eta_solve_counts(&counts, &y, lambda, cfg.model.mu, &mut zbar_buf)?;
             eta = eta_new;
             eta_active = eta.iter().any(|&e| e != 0.0);
             if cfg.model.learn_rho {
@@ -177,7 +200,8 @@ pub fn train<'a>(
 
     // Final in-sample metrics on the fitted zbar (model card data; the
     // Weighted Average combiner computes its weights separately by
-    // *predicting* the whole training set, as the paper specifies).
+    // *predicting* the whole training set, as the paper specifies). The
+    // only place the native path still materializes the [D, T] zbar.
     counts.zbar_matrix_into(&mut zbar_buf);
     let fit = engine.predict(&zbar_buf, &eta, Some(&y), t)?;
 
@@ -192,6 +216,7 @@ pub fn train<'a>(
         train_mse: fit.mse,
         train_acc: fit.acc,
     };
+    let (resp_proposed, resp_accepted) = kern.resp_mh_stats().unwrap_or((0, 0));
     Ok(TrainOutput {
         model,
         counts,
@@ -200,6 +225,8 @@ pub fn train<'a>(
         responses: y,
         history,
         tokens_sampled,
+        resp_proposed,
+        resp_accepted,
         timings,
     })
 }
@@ -284,6 +311,40 @@ mod tests {
         assert_eq!(a.model.eta, b.model.eta);
         assert_eq!(a.model.eta, c.model.eta);
         assert_eq!(a.counts.ndt, c.counts.ndt);
+    }
+
+    #[test]
+    fn supervised_mh_dispatch_reports_acceptance_and_learns() {
+        use crate::config::schema::KernelKind;
+        let spec = SyntheticSpec::continuous_small();
+        let engine = EngineHandle::native();
+        let run = |kernel: KernelKind| {
+            let mut rng = Pcg64::seed_from_u64(21);
+            let (corpus, _) = generate_with_truth(&spec, &mut rng);
+            let mut cfg = quick_cfg();
+            cfg.sampler.kernel = kernel;
+            train(&corpus, &cfg, &engine, &mut rng).unwrap()
+        };
+        // resp_mode auto => MH supervised sweeps on sparse/alias: the
+        // eta-active phase runs the kernel (not the dense fallback) and
+        // reports its acceptance counters.
+        for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+            let out = run(kernel);
+            assert!(out.resp_proposed > 0, "{kernel:?} never proposed");
+            assert!(
+                out.resp_accepted > 0 && out.resp_accepted <= out.resp_proposed,
+                "{kernel:?} acceptance out of range: {}/{}",
+                out.resp_accepted,
+                out.resp_proposed
+            );
+            out.counts.check_invariants().unwrap();
+            let first = out.history.first().unwrap().train_mse;
+            let last = out.history.last().unwrap().train_mse;
+            assert!(last < first, "{kernel:?} no learning: first={first} last={last}");
+        }
+        // the dense kernel's supervised path is exact: no MH activity
+        let out = run(KernelKind::Dense);
+        assert_eq!((out.resp_proposed, out.resp_accepted), (0, 0));
     }
 
     #[test]

@@ -37,13 +37,21 @@
 //! (same stationary distribution as the exact conditional —
 //! `tests/alias_equivalence.rs`) while remaining fully seed-deterministic.
 //!
-//! The Gaussian response factor of the *supervised* training conditional is
-//! dense in every topic (the margin `exp(a·e_t)·u_t` never vanishes), so
-//! eta-active sweeps fall back to the shared [`sweep_doc_gauss`] path for
-//! both kernels; burn-in sweeps and the entire prediction path (which has no
-//! response term) run the kernel-specific code.
+//! **Supervised sweeps.** The Gaussian response factor of the supervised
+//! training conditional is dense in every topic (the margin
+//! `exp(a·e_t)·u_t` never vanishes), so it cannot be bucket-decomposed —
+//! but the conditional *factors* into the plain-LDA term times a response
+//! term that is O(1) to evaluate per candidate topic. Each kernel therefore
+//! implements [`SamplerKernel::sweep_doc_resp`]: the dense kernel runs the
+//! exact O(T)-per-token [`sweep_doc_gauss`] (the reference), while sparse
+//! and alias (under `resp_mode = mh`) propose from their unsupervised
+//! machinery and Metropolis-Hastings-correct with the Gaussian response
+//! ratio `N(y_d; μ_s, ρ)/N(y_d; μ_cur, ρ)` — one `fast_exp` per candidate
+//! (see `resp_weight`'s derivation). Burn-in sweeps and the prediction
+//! path (no response term) run the kernel-specific unsupervised code as
+//! before.
 
-use crate::config::schema::KernelKind;
+use crate::config::schema::{KernelKind, RespMode};
 use crate::model::counts::{insert_sorted, remove_sorted, CountMatrices};
 use crate::util::math::fast_exp;
 use crate::util::rng::Pcg64;
@@ -83,8 +91,23 @@ pub struct PredictState<'a> {
     pub rng: &'a mut Pcg64,
 }
 
-/// One token-update contract; implementations must be draw-for-draw
-/// interchangeable under a fixed RNG stream (see module docs).
+/// Per-document inputs of one *supervised* training sweep (paper eq. 1's
+/// Gaussian response margin), threaded to
+/// [`SamplerKernel::sweep_doc_resp`].
+pub struct RespState<'a> {
+    /// Current response coefficients (eta-active: not all zero).
+    pub eta: &'a [f64],
+    /// The document's observed response y_d.
+    pub y: f64,
+    /// Response variance rho.
+    pub rho: f64,
+    /// Per-chain buffers for the exact Gaussian path ([`sweep_doc_gauss`]);
+    /// the MH paths evaluate the response factor on demand instead.
+    pub scratch: &'a mut GaussScratch,
+}
+
+/// One token-update contract; dense/sparse implementations must be
+/// draw-for-draw interchangeable under a fixed RNG stream (see module docs).
 pub trait SamplerKernel {
     fn name(&self) -> &'static str;
 
@@ -92,23 +115,52 @@ pub trait SamplerKernel {
     /// (training, response term inactive).
     fn sweep_doc_lda(&mut self, st: &mut TrainState, d: usize, tokens: &[u32], zd: &mut [u16]);
 
+    /// Resample every token of document `d` under the *supervised* training
+    /// conditional (paper eq. 1: the plain-LDA factor times the Gaussian
+    /// response margin). The dense kernel — and any kernel constructed with
+    /// `resp_mode = exact` — runs the exact O(T)-per-token
+    /// [`sweep_doc_gauss`]; sparse/alias under `resp_mode = mh` propose
+    /// from their O(nnz)/O(1) unsupervised machinery and MH-correct with
+    /// the O(1) response ratio (DESIGN.md §Perf).
+    fn sweep_doc_resp(
+        &mut self,
+        st: &mut TrainState,
+        rs: &mut RespState,
+        d: usize,
+        tokens: &[u32],
+        zd: &mut [u16],
+    );
+
     /// Resample every token of one held-out document against frozen phi
     /// (prediction conditional, paper eq. 4).
     fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]);
+
+    /// Cumulative (proposals, acceptances) of the supervised MH path since
+    /// construction; `None` when this kernel's supervised sweeps run the
+    /// exact conditional.
+    fn resp_mh_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Instantiate the kernel for the **training** path (`Auto` resolves by
 /// topic count — see [`KernelKind::resolve_train`]). `alias_staleness` is
 /// the alias kernel's rebuild budget (0 = auto); it is ignored by the other
-/// kernels.
+/// kernels. `resp` picks the supervised-sweep mode and is resolved against
+/// the resolved kernel ([`RespMode::resolve`]: dense is always exact).
 pub fn make_train_kernel(
     kind: KernelKind,
     topics: usize,
     alias_staleness: usize,
+    resp: RespMode,
 ) -> Box<dyn SamplerKernel> {
-    match kind.resolve_train(topics) {
-        KernelKind::Sparse => Box::new(SparseKernel::new()),
-        KernelKind::Alias => Box::new(AliasKernel::new(topics, alias_staleness)),
+    let resolved = kind.resolve_train(topics);
+    let mh = resp.resolve(resolved) == RespMode::Mh;
+    match resolved {
+        KernelKind::Sparse => Box::new(SparseKernel::new().with_resp_mh(mh)),
+        KernelKind::Alias => {
+            Box::new(AliasKernel::new(topics, alias_staleness).with_resp_mh(mh))
+        }
         _ => Box::new(DenseKernel),
     }
 }
@@ -384,6 +436,20 @@ impl SamplerKernel for DenseKernel {
         }
     }
 
+    fn sweep_doc_resp(
+        &mut self,
+        st: &mut TrainState,
+        rs: &mut RespState,
+        d: usize,
+        tokens: &[u32],
+        zd: &mut [u16],
+    ) {
+        // The exact supervised conditional — byte-identical to the
+        // pre-trait `sweep_doc_gauss` dispatch (pinned by
+        // `exact_resp_sweep_is_byte_identical_to_sweep_doc_gauss`).
+        sweep_doc_gauss(st, rs.scratch, rs.eta, rs.y, rs.rho, d, tokens, zd);
+    }
+
     fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]) {
         for (n, &wi) in tokens.iter().enumerate() {
             let old = zd[n] as usize;
@@ -395,15 +461,118 @@ impl SamplerKernel for DenseKernel {
     }
 }
 
+/// Bucket proposals per token in the sparse kernel's supervised MH sweep.
+/// Each proposal pays one O(nnz) bucket draw; the Gaussian response ratio
+/// keeps acceptance near one (the per-token margin shift is O(1/N_d)), so
+/// two proposals already mix essentially like the exact Gibbs draw.
+const RESP_MH_PROPOSALS: usize = 2;
+
+/// Unnormalized Gaussian response factor of candidate topic `t` for the
+/// current token:
+///
+/// ```text
+/// N(y_d; mu_t, rho) ∝ exp(a·e_t − e_t²/2ρ),   e_t = η_t / N_d,
+///                                             a   = (y_d − s^{-dn}/N_d)/ρ
+/// ```
+///
+/// (the constant margin factor `exp(−c²/2ρ)` cancels in every draw and MH
+/// ratio — same derivation as [`sweep_doc_gauss`]'s per-document tables,
+/// but folded into a single `fast_exp` so a proposal's acceptance costs
+/// O(1) with no per-document O(T) table fill).
+#[inline]
+fn resp_weight(eta_t: f64, a: f64, inv_nd: f64, inv2rho: f64) -> f64 {
+    let e = eta_t * inv_nd;
+    fast_exp(a * e - e * e * inv2rho)
+}
+
+/// Shared skeleton of the supervised MH sweeps (sparse and alias): token
+/// removal against exclusive counts, the running response dot product
+/// `s^{-dn} = η·N^{-dn}_dt` (seeded in O(N_d) from the live assignments,
+/// O(1) per token), the per-token `a = (y_d − s^{-dn}/N_d)/ρ`, and
+/// count/cache restoration. `propose(st, n, w, zd, old, a)` runs the
+/// kernel-specific MH proposal chain and returns the new topic.
+fn sweep_doc_resp_mh(
+    st: &mut TrainState,
+    rs: &mut RespState,
+    d: usize,
+    tokens: &[u32],
+    zd: &mut [u16],
+    mut propose: impl FnMut(&mut TrainState, usize, u32, &[u16], usize, f64) -> usize,
+) {
+    let inv_nd = 1.0 / tokens.len() as f64;
+    let inv_rho = 1.0 / rs.rho;
+    let mut s_dot: f64 = zd.iter().map(|&ti| rs.eta[ti as usize]).sum();
+    for (n, &wi) in tokens.iter().enumerate() {
+        let old = zd[n] as usize;
+        remove_token(st, d, wi, old);
+        s_dot -= rs.eta[old];
+        let a = (rs.y - s_dot * inv_nd) * inv_rho;
+        let new = propose(st, n, wi, zd, old, a);
+        add_token(st, d, wi, new);
+        s_dot += rs.eta[new];
+        zd[n] = new as u16;
+    }
+}
+
 /// SparseLDA-style bucket kernel. Training iterates the counts' sparse
 /// index; prediction maintains its own per-document non-zero scratch list.
+/// Under `resp_mode = mh` the supervised sweep proposes from the
+/// bucket-decomposed plain-LDA conditional and MH-corrects with the O(1)
+/// Gaussian response ratio (DESIGN.md §Perf).
 pub struct SparseKernel {
     doc_nz: Vec<u16>,
+    /// Supervised sweeps use the MH correction instead of the exact dense
+    /// Gaussian conditional.
+    resp_mh: bool,
+    resp_proposed: u64,
+    resp_accepted: u64,
 }
 
 impl SparseKernel {
     pub fn new() -> Self {
-        SparseKernel { doc_nz: Vec::new() }
+        SparseKernel { doc_nz: Vec::new(), resp_mh: false, resp_proposed: 0, resp_accepted: 0 }
+    }
+
+    /// Select the supervised-sweep mode (`true` = MH, `false` = exact).
+    pub fn with_resp_mh(mut self, mh: bool) -> Self {
+        self.resp_mh = mh;
+        self
+    }
+
+    /// One token's supervised MH chain: propose from the exact (exclusive
+    /// counts) bucket-decomposed LDA conditional, accept with the Gaussian
+    /// response ratio — the proposal equals the target's LDA factor, so the
+    /// acceptance probability collapses to `resp_weight(s)/resp_weight(cur)`.
+    /// Counts must already exclude the token (`remove_token` ran). Returns
+    /// the new topic.
+    #[allow(clippy::too_many_arguments)]
+    fn resp_token(
+        &mut self,
+        st: &mut TrainState,
+        d: usize,
+        w: u32,
+        eta: &[f64],
+        a: f64,
+        inv_nd: f64,
+        inv2rho: f64,
+        old: usize,
+    ) -> usize {
+        let mut cur = old;
+        for _ in 0..RESP_MH_PROPOSALS {
+            let cand = sparse_lda_draw(st, d, w);
+            self.resp_proposed += 1;
+            if cand == cur {
+                self.resp_accepted += 1;
+                continue;
+            }
+            let ratio = resp_weight(eta[cand], a, inv_nd, inv2rho)
+                / resp_weight(eta[cur], a, inv_nd, inv2rho);
+            if st.rng.next_f64() < ratio {
+                cur = cand;
+                self.resp_accepted += 1;
+            }
+        }
+        cur
     }
 }
 
@@ -426,6 +595,30 @@ impl SamplerKernel for SparseKernel {
             add_token(st, d, wi, new);
             zd[n] = new as u16;
         }
+    }
+
+    fn sweep_doc_resp(
+        &mut self,
+        st: &mut TrainState,
+        rs: &mut RespState,
+        d: usize,
+        tokens: &[u32],
+        zd: &mut [u16],
+    ) {
+        if !self.resp_mh {
+            sweep_doc_gauss(st, rs.scratch, rs.eta, rs.y, rs.rho, d, tokens, zd);
+            return;
+        }
+        let eta = rs.eta;
+        let inv_nd = 1.0 / tokens.len() as f64;
+        let inv2rho = 1.0 / (2.0 * rs.rho);
+        sweep_doc_resp_mh(st, rs, d, tokens, zd, |st, _n, wi, _zd, old, a| {
+            self.resp_token(st, d, wi, eta, a, inv_nd, inv2rho, old)
+        });
+    }
+
+    fn resp_mh_stats(&self) -> Option<(u64, u64)> {
+        self.resp_mh.then_some((self.resp_proposed, self.resp_accepted))
     }
 
     fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]) {
@@ -771,8 +964,11 @@ fn mh_token_predict(
 ///
 /// Exempt from the dense/sparse byte-identical contract (different RNG
 /// consumption), but fully seed-deterministic and statistically equivalent
-/// (`tests/alias_equivalence.rs`). The supervised Gaussian margin stays on
-/// the shared [`sweep_doc_gauss`] path like every other kernel.
+/// (`tests/alias_equivalence.rs`). **Supervised sweeps** (`resp_mode = mh`)
+/// run the same word-/doc-proposal cycle with the O(1) Gaussian response
+/// factor folded into every acceptance ratio
+/// (`resp_token_train`, `tests/resp_equivalence.rs`);
+/// `resp_mode = exact` falls back to the shared [`sweep_doc_gauss`].
 pub struct AliasKernel {
     /// Rebuild budget in per-word count updates (and, absent the counts
     /// hook, in table uses). Resolved from the config knob: 0 => max(T, 16).
@@ -782,6 +978,11 @@ pub struct AliasKernel {
     uses: Vec<u32>,
     weights: Vec<f64>,
     scratch: WalkerScratch,
+    /// Supervised sweeps fold the Gaussian response ratio into the MH
+    /// acceptance instead of falling back to the exact dense conditional.
+    resp_mh: bool,
+    resp_proposed: u64,
+    resp_accepted: u64,
 }
 
 impl AliasKernel {
@@ -793,7 +994,16 @@ impl AliasKernel {
             uses: Vec::new(),
             weights: Vec::with_capacity(t),
             scratch: WalkerScratch::default(),
+            resp_mh: false,
+            resp_proposed: 0,
+            resp_accepted: 0,
         }
+    }
+
+    /// Select the supervised-sweep mode (`true` = MH, `false` = exact).
+    pub fn with_resp_mh(mut self, mh: bool) -> Self {
+        self.resp_mh = mh;
+        self
     }
 
     fn ensure_words(&mut self, w: usize) {
@@ -865,8 +1075,7 @@ impl AliasKernel {
                 let ndt = &st.counts.ndt[d * t..(d + 1) * t];
                 let ntw = &st.counts.ntw[w as usize * t..(w as usize + 1) * t];
                 let pi_s = (ndt[s] as f64 + alpha) * (ntw[s] as f64 + beta) * st.inv_nt[s];
-                let pi_c =
-                    (ndt[cur] as f64 + alpha) * (ntw[cur] as f64 + beta) * st.inv_nt[cur];
+                let pi_c = (ndt[cur] as f64 + alpha) * (ntw[cur] as f64 + beta) * st.inv_nt[cur];
                 let ratio = pi_s * table.weight(cur) / (pi_c * table.weight(s));
                 if st.rng.next_f64() < ratio {
                     cur = s;
@@ -885,6 +1094,79 @@ impl AliasKernel {
         }
         cur
     }
+
+    /// One token's *supervised* MH chain: the burn-in word-/doc-proposal
+    /// cycle of [`AliasKernel::mh_token_train`] with the Gaussian response
+    /// factor [`resp_weight`] folded into every acceptance ratio — the
+    /// target becomes the full supervised conditional (paper eq. 1) while
+    /// each proposal stays O(1). Counts must already exclude the token.
+    /// Returns the new topic.
+    #[allow(clippy::too_many_arguments)]
+    fn resp_token_train(
+        &mut self,
+        st: &mut TrainState,
+        d: usize,
+        w: u32,
+        n: usize,
+        zd: &[u16],
+        old: usize,
+        eta: &[f64],
+        a: f64,
+        inv_nd: f64,
+        inv2rho: f64,
+    ) -> usize {
+        let t = st.counts.t;
+        let alpha = st.alpha;
+        let beta = st.beta;
+        let mut cur = old;
+        for _ in 0..MH_CYCLES {
+            // Word proposal from the (stale) alias table; full MH ratio
+            // against the exact supervised conditional.
+            self.refresh_word_table(st, w);
+            let table = self.tables[w as usize].as_ref().unwrap();
+            let s = table.sample(st.rng);
+            self.resp_proposed += 1;
+            if s == cur {
+                self.resp_accepted += 1;
+            } else {
+                let ndt = &st.counts.ndt[d * t..(d + 1) * t];
+                let ntw = &st.counts.ntw[w as usize * t..(w as usize + 1) * t];
+                let pi_s = (ndt[s] as f64 + alpha)
+                    * (ntw[s] as f64 + beta)
+                    * st.inv_nt[s]
+                    * resp_weight(eta[s], a, inv_nd, inv2rho);
+                let pi_c = (ndt[cur] as f64 + alpha)
+                    * (ntw[cur] as f64 + beta)
+                    * st.inv_nt[cur]
+                    * resp_weight(eta[cur], a, inv_nd, inv2rho);
+                let ratio = pi_s * table.weight(cur) / (pi_c * table.weight(s));
+                if st.rng.next_f64() < ratio {
+                    cur = s;
+                    self.resp_accepted += 1;
+                }
+            }
+            // Doc proposal is exact in the document factor, so the ratio is
+            // the word factor times the response factor.
+            let s = sample_doc_proposal(zd, n, t, alpha, st.rng);
+            self.resp_proposed += 1;
+            if s == cur {
+                self.resp_accepted += 1;
+            } else {
+                let ntw = &st.counts.ntw[w as usize * t..(w as usize + 1) * t];
+                let ratio = (ntw[s] as f64 + beta)
+                    * st.inv_nt[s]
+                    * resp_weight(eta[s], a, inv_nd, inv2rho)
+                    / ((ntw[cur] as f64 + beta)
+                        * st.inv_nt[cur]
+                        * resp_weight(eta[cur], a, inv_nd, inv2rho));
+                if st.rng.next_f64() < ratio {
+                    cur = s;
+                    self.resp_accepted += 1;
+                }
+            }
+        }
+        cur
+    }
 }
 
 impl SamplerKernel for AliasKernel {
@@ -894,8 +1176,7 @@ impl SamplerKernel for AliasKernel {
 
     fn sweep_doc_lda(&mut self, st: &mut TrainState, d: usize, tokens: &[u32], zd: &mut [u16]) {
         self.ensure_words(st.counts.w);
-        for n in 0..tokens.len() {
-            let wi = tokens[n];
+        for (n, &wi) in tokens.iter().enumerate() {
             let old = zd[n] as usize;
             remove_token(st, d, wi, old);
             let new = self.mh_token_train(st, d, wi, n, zd, old);
@@ -904,27 +1185,52 @@ impl SamplerKernel for AliasKernel {
         }
     }
 
+    fn sweep_doc_resp(
+        &mut self,
+        st: &mut TrainState,
+        rs: &mut RespState,
+        d: usize,
+        tokens: &[u32],
+        zd: &mut [u16],
+    ) {
+        if !self.resp_mh {
+            sweep_doc_gauss(st, rs.scratch, rs.eta, rs.y, rs.rho, d, tokens, zd);
+            return;
+        }
+        self.ensure_words(st.counts.w);
+        let eta = rs.eta;
+        let inv_nd = 1.0 / tokens.len() as f64;
+        let inv2rho = 1.0 / (2.0 * rs.rho);
+        sweep_doc_resp_mh(st, rs, d, tokens, zd, |st, n, wi, zd, old, a| {
+            self.resp_token_train(st, d, wi, n, zd, old, eta, a, inv_nd, inv2rho)
+        });
+    }
+
     fn sweep_doc_predict(&mut self, ps: &mut PredictState, tokens: &[u32], zd: &mut [u16]) {
         let tables = ps
             .alias
             .expect("alias kernel needs PredictState.alias (prebuilt frozen-phi tables)");
         let t = ps.t;
         let alpha = ps.alpha;
-        for n in 0..tokens.len() {
-            let wi = tokens[n];
+        for (n, &wi) in tokens.iter().enumerate() {
             let old = zd[n] as usize;
             ps.ndt[old] -= 1;
-            let new =
-                mh_token_predict(tables, ps.ndt, zd, n, wi, t, alpha, old, ps.rng);
+            let new = mh_token_predict(tables, ps.ndt, zd, n, wi, t, alpha, old, ps.rng);
             ps.ndt[new] += 1;
             zd[n] = new as u16;
         }
     }
+
+    fn resp_mh_stats(&self) -> Option<(u64, u64)> {
+        self.resp_mh.then_some((self.resp_proposed, self.resp_accepted))
+    }
 }
 
-/// Shared supervised-conditional sweep (paper eq. 1 with the Gaussian
-/// response margin). The margin is dense in every topic, so both kernels
-/// use this identical path whenever `eta` is active; see the module docs.
+/// Exact supervised-conditional sweep (paper eq. 1 with the Gaussian
+/// response margin), O(T) per token. This is the dense kernel's
+/// [`SamplerKernel::sweep_doc_resp`] and the `resp_mode = exact` fallback
+/// of the sparse/alias kernels — the reference chain the MH supervised
+/// sweeps are statistically equivalent to (`tests/resp_equivalence.rs`).
 /// The hot-path tricks are unchanged from the original inner loop
 /// (DESIGN.md §Perf): running dot product `s_d = η·N_dt`, per-document
 /// `e`/`u` tables, `fast_exp`, dropped constant margin factor.
@@ -1178,19 +1484,43 @@ mod tests {
 
     #[test]
     fn kernel_factories_resolve_auto_by_path() {
+        let auto = RespMode::Auto;
         // train: dense -> sparse -> alias by topic count
-        assert_eq!(make_train_kernel(KernelKind::Auto, 8, 0).name(), "dense");
-        assert_eq!(make_train_kernel(KernelKind::Auto, 64, 0).name(), "sparse");
-        assert_eq!(make_train_kernel(KernelKind::Auto, 256, 0).name(), "alias");
-        assert_eq!(make_train_kernel(KernelKind::Dense, 256, 0).name(), "dense");
-        assert_eq!(make_train_kernel(KernelKind::Sparse, 8, 0).name(), "sparse");
-        assert_eq!(make_train_kernel(KernelKind::Alias, 8, 0).name(), "alias");
+        assert_eq!(make_train_kernel(KernelKind::Auto, 8, 0, auto).name(), "dense");
+        assert_eq!(make_train_kernel(KernelKind::Auto, 64, 0, auto).name(), "sparse");
+        assert_eq!(make_train_kernel(KernelKind::Auto, 256, 0, auto).name(), "alias");
+        assert_eq!(make_train_kernel(KernelKind::Dense, 256, 0, auto).name(), "dense");
+        assert_eq!(make_train_kernel(KernelKind::Sparse, 8, 0, auto).name(), "sparse");
+        assert_eq!(make_train_kernel(KernelKind::Alias, 8, 0, auto).name(), "alias");
         // predict: frozen phi makes alias tables exact, so auto is alias at
         // every T
         assert_eq!(make_predict_kernel(KernelKind::Auto, 2).name(), "alias");
         assert_eq!(make_predict_kernel(KernelKind::Auto, 1024).name(), "alias");
         assert_eq!(make_predict_kernel(KernelKind::Dense, 8).name(), "dense");
         assert_eq!(make_predict_kernel(KernelKind::Sparse, 8).name(), "sparse");
+    }
+
+    #[test]
+    fn kernel_factory_resolves_resp_mode_per_kernel() {
+        // auto/mh give sparse and alias the MH supervised path (counters
+        // exposed), exact disables it, and dense never has one.
+        for (kind, resp, want) in [
+            (KernelKind::Sparse, RespMode::Auto, true),
+            (KernelKind::Sparse, RespMode::Mh, true),
+            (KernelKind::Sparse, RespMode::Exact, false),
+            (KernelKind::Alias, RespMode::Auto, true),
+            (KernelKind::Alias, RespMode::Mh, true),
+            (KernelKind::Alias, RespMode::Exact, false),
+            (KernelKind::Dense, RespMode::Auto, false),
+            (KernelKind::Dense, RespMode::Exact, false),
+        ] {
+            let k = make_train_kernel(kind, 8, 0, resp);
+            assert_eq!(
+                k.resp_mh_stats().is_some(),
+                want,
+                "kind {kind:?} resp {resp:?}"
+            );
+        }
     }
 
     #[test]
@@ -1453,5 +1783,288 @@ mod tests {
         };
         assert_eq!(run(42), run(42), "alias kernel must be seed-deterministic");
         assert_ne!(run(42), run(43), "different seeds should move some token");
+    }
+
+    /// `resp_mode = exact` must stay byte-identical to a direct
+    /// [`sweep_doc_gauss`] call on every kernel — the pre-change supervised
+    /// dispatch hardcoded that function, and the trait's exact path pins
+    /// those draws bit-for-bit.
+    #[test]
+    fn exact_resp_sweep_is_byte_identical_to_sweep_doc_gauss() {
+        let (alpha, beta) = (0.5, 0.1);
+        let (t, w, nd) = (6usize, 10usize, 30usize);
+        let wbeta = w as f64 * beta;
+        let (y, rho) = (1.7f64, 0.4f64);
+        let mut meta = Pcg64::seed_from_u64(29);
+        let eta: Vec<f64> = (0..t).map(|_| meta.next_f64() * 2.0 - 1.0).collect();
+        let (counts0, tokens, zd0, inv_nt0, ssum0) = doc_fixture(&mut meta, t, w, nd);
+
+        let reference = {
+            let mut counts = counts0.clone();
+            let mut inv_nt = inv_nt0.clone();
+            let mut ssum = ssum0;
+            let mut zd = zd0.clone();
+            let mut scratch = GaussScratch::new(t);
+            let mut rng = Pcg64::seed_from_u64(777);
+            for _ in 0..5 {
+                let mut st = TrainState {
+                    counts: &mut counts,
+                    inv_nt: &mut inv_nt,
+                    ssum: &mut ssum,
+                    alpha,
+                    beta,
+                    wbeta,
+                    rng: &mut rng,
+                };
+                sweep_doc_gauss(&mut st, &mut scratch, &eta, y, rho, 0, &tokens, &mut zd);
+            }
+            (zd, counts.ndt.clone(), counts.ntw.clone())
+        };
+
+        let kernels: Vec<Box<dyn SamplerKernel>> = vec![
+            Box::new(DenseKernel),
+            Box::new(SparseKernel::new().with_resp_mh(false)),
+            Box::new(AliasKernel::new(t, 0).with_resp_mh(false)),
+        ];
+        for mut kern in kernels {
+            let mut counts = counts0.clone();
+            if kern.name() == "sparse" {
+                counts.enable_sparse_index();
+            }
+            let mut inv_nt = inv_nt0.clone();
+            let mut ssum = ssum0;
+            let mut zd = zd0.clone();
+            let mut scratch = GaussScratch::new(t);
+            let mut rng = Pcg64::seed_from_u64(777);
+            for _ in 0..5 {
+                let mut st = TrainState {
+                    counts: &mut counts,
+                    inv_nt: &mut inv_nt,
+                    ssum: &mut ssum,
+                    alpha,
+                    beta,
+                    wbeta,
+                    rng: &mut rng,
+                };
+                let mut rs = RespState { eta: &eta, y, rho, scratch: &mut scratch };
+                kern.sweep_doc_resp(&mut st, &mut rs, 0, &tokens, &mut zd);
+            }
+            assert_eq!(zd, reference.0, "{} exact resp sweep diverged", kern.name());
+            assert_eq!(counts.ndt, reference.1, "{} ndt diverged", kern.name());
+            assert_eq!(counts.ntw, reference.2, "{} ntw diverged", kern.name());
+            assert!(kern.resp_mh_stats().is_none(), "{} exact path has no MH", kern.name());
+        }
+    }
+
+    /// Exact supervised conditional of one token from exclusive counts:
+    /// `(N_dt+α)(N_tw+β)/(N_t+Wβ) · exp(a·e_t − e_t²/2ρ)` — the target both
+    /// supervised MH chains must be stationary for.
+    #[allow(clippy::too_many_arguments)]
+    fn resp_target(
+        counts: &mut CountMatrices,
+        zd: &[u16],
+        n: usize,
+        wi: u32,
+        alpha: f64,
+        beta: f64,
+        wbeta: f64,
+        eta: &[f64],
+        y: f64,
+        rho: f64,
+    ) -> (Vec<f64>, f64) {
+        let t = counts.t;
+        let inv_nd = 1.0 / zd.len() as f64;
+        let s_excl: f64 =
+            zd.iter().enumerate().filter(|&(m, _)| m != n).map(|(_, &ti)| eta[ti as usize]).sum();
+        let a = (y - s_excl * inv_nd) / rho;
+        let old = zd[n] as usize;
+        counts.dec(0, wi, old);
+        let probs: Vec<f64> = (0..t)
+            .map(|ti| {
+                let e = eta[ti] * inv_nd;
+                (counts.ndt[ti] as f64 + alpha)
+                    * (counts.ntw[wi as usize * t + ti] as f64 + beta)
+                    / (counts.nt[ti] as f64 + wbeta)
+                    * (a * e - e * e / (2.0 * rho)).exp()
+            })
+            .collect();
+        counts.inc(0, wi, old);
+        (probs, a)
+    }
+
+    /// The sparse supervised MH chain resampling one token must have the
+    /// exact supervised conditional as its stationary distribution.
+    #[test]
+    fn sparse_resp_chain_matches_exact_conditional() {
+        let (alpha, beta) = (0.5, 0.1);
+        let (t, w, nd) = (6usize, 10usize, 30usize);
+        let wbeta = w as f64 * beta;
+        let (y, rho) = (2.5f64, 0.3f64);
+        let mut meta = Pcg64::seed_from_u64(37);
+        let eta: Vec<f64> = (0..t).map(|_| meta.next_f64() * 3.0 - 1.5).collect();
+        let (mut counts, tokens, mut zd, mut inv_nt, mut ssum) = doc_fixture(&mut meta, t, w, nd);
+        counts.enable_sparse_index();
+        let n = 4usize;
+        let wi = tokens[n];
+
+        let (probs, a) = resp_target(&mut counts, &zd, n, wi, alpha, beta, wbeta, &eta, y, rho);
+        let total: f64 = probs.iter().sum();
+        let inv_nd = 1.0 / nd as f64;
+        let inv2rho = 1.0 / (2.0 * rho);
+
+        let mut kern = SparseKernel::new().with_resp_mh(true);
+        let mut rng = Pcg64::seed_from_u64(5100);
+        let iters = 200_000usize;
+        let mut hits = vec![0usize; t];
+        for _ in 0..iters {
+            let mut st = TrainState {
+                counts: &mut counts,
+                inv_nt: &mut inv_nt,
+                ssum: &mut ssum,
+                alpha,
+                beta,
+                wbeta,
+                rng: &mut rng,
+            };
+            let old = zd[n] as usize;
+            remove_token(&mut st, 0, wi, old);
+            let new = kern.resp_token(&mut st, 0, wi, &eta, a, inv_nd, inv2rho, old);
+            add_token(&mut st, 0, wi, new);
+            zd[n] = new as u16;
+            hits[new] += 1;
+        }
+        let (proposed, accepted) = kern.resp_mh_stats().unwrap();
+        assert_eq!(proposed, (iters * RESP_MH_PROPOSALS) as u64);
+        assert!(accepted > proposed / 3, "acceptance collapsed: {accepted}/{proposed}");
+        for ti in 0..t {
+            let want = probs[ti] / total * iters as f64;
+            let got = hits[ti] as f64;
+            // MH samples are autocorrelated: widen the iid band.
+            let sd = want.max(1.0).sqrt();
+            assert!(
+                (got - want).abs() < 12.0 * sd + 0.02 * want + 30.0,
+                "topic {ti}: got {got} want {want} (hits {hits:?})"
+            );
+        }
+    }
+
+    /// The alias supervised MH chain must target the exact supervised
+    /// conditional — for a fresh table (staleness 1) and for a pinned,
+    /// deliberately wrong table: staleness costs mixing, never correctness.
+    #[test]
+    fn alias_resp_chain_matches_exact_conditional() {
+        let (alpha, beta) = (0.5, 0.1);
+        let (t, w, nd) = (6usize, 10usize, 30usize);
+        let wbeta = w as f64 * beta;
+        let (y, rho) = (2.5f64, 0.3f64);
+        for &staleness in &[1usize, 1 << 30] {
+            let mut meta = Pcg64::seed_from_u64(41);
+            let eta: Vec<f64> = (0..t).map(|_| meta.next_f64() * 3.0 - 1.5).collect();
+            let (mut counts, tokens, mut zd, mut inv_nt, mut ssum) =
+                doc_fixture(&mut meta, t, w, nd);
+            counts.enable_alias_rev();
+            let n = 4usize;
+            let wi = tokens[n];
+
+            let (probs, a) =
+                resp_target(&mut counts, &zd, n, wi, alpha, beta, wbeta, &eta, y, rho);
+            let total: f64 = probs.iter().sum();
+            let inv_nd = 1.0 / nd as f64;
+            let inv2rho = 1.0 / (2.0 * rho);
+
+            let mut kern = AliasKernel::new(t, staleness).with_resp_mh(true);
+            kern.ensure_words(w);
+            if staleness > 1 {
+                let skewed: Vec<f64> =
+                    (0..t).map(|ti| 0.2 + ((ti * 7) % 5) as f64).collect();
+                kern.tables[wi as usize] = Some(AliasTable::build(&skewed));
+            }
+            let mut rng = Pcg64::seed_from_u64(6200 + staleness as u64);
+            let iters = 200_000usize;
+            let mut hits = vec![0usize; t];
+            for _ in 0..iters {
+                let mut st = TrainState {
+                    counts: &mut counts,
+                    inv_nt: &mut inv_nt,
+                    ssum: &mut ssum,
+                    alpha,
+                    beta,
+                    wbeta,
+                    rng: &mut rng,
+                };
+                let old = zd[n] as usize;
+                remove_token(&mut st, 0, wi, old);
+                let new = kern
+                    .resp_token_train(&mut st, 0, wi, n, &zd, old, &eta, a, inv_nd, inv2rho);
+                add_token(&mut st, 0, wi, new);
+                zd[n] = new as u16;
+                hits[new] += 1;
+            }
+            let (proposed, accepted) = kern.resp_mh_stats().unwrap();
+            assert_eq!(proposed, (iters * 2 * MH_CYCLES) as u64);
+            assert!(accepted > 0);
+            for ti in 0..t {
+                let want = probs[ti] / total * iters as f64;
+                let got = hits[ti] as f64;
+                let sd = want.max(1.0).sqrt();
+                assert!(
+                    (got - want).abs() < 12.0 * sd + 0.02 * want + 30.0,
+                    "staleness {staleness} topic {ti}: got {got} want {want} (hits {hits:?})"
+                );
+            }
+        }
+    }
+
+    /// Supervised MH sweeps must keep every incrementally maintained
+    /// structure — counts, sparse index, alias rev counters, `inv_nt`/`ssum`
+    /// caches — live and consistent, and stay seed-deterministic.
+    #[test]
+    fn resp_sweeps_preserve_count_invariants_and_determinism() {
+        let (alpha, beta) = (0.5, 0.1);
+        let (t, w, nd) = (5usize, 12usize, 40usize);
+        let wbeta = w as f64 * beta;
+        let (y, rho) = (1.2f64, 0.5f64);
+        for sparse in [true, false] {
+            let run = |seed: u64| {
+                let mut meta = Pcg64::seed_from_u64(2);
+                let eta: Vec<f64> = (0..t).map(|_| meta.next_f64() - 0.5).collect();
+                let (mut counts, tokens, mut zd, mut inv_nt, mut ssum) =
+                    doc_fixture(&mut meta, t, w, nd);
+                let mut kern: Box<dyn SamplerKernel> = if sparse {
+                    counts.enable_sparse_index();
+                    Box::new(SparseKernel::new().with_resp_mh(true))
+                } else {
+                    counts.enable_alias_rev();
+                    Box::new(AliasKernel::new(t, 8).with_resp_mh(true))
+                };
+                let mut scratch = GaussScratch::new(t);
+                let mut rng = Pcg64::seed_from_u64(seed);
+                for _ in 0..10 {
+                    let mut st = TrainState {
+                        counts: &mut counts,
+                        inv_nt: &mut inv_nt,
+                        ssum: &mut ssum,
+                        alpha,
+                        beta,
+                        wbeta,
+                        rng: &mut rng,
+                    };
+                    let mut rs = RespState { eta: &eta, y, rho, scratch: &mut scratch };
+                    kern.sweep_doc_resp(&mut st, &mut rs, 0, &tokens, &mut zd);
+                }
+                // validates ndt/ntw/nt totals AND the sparse lists exactly
+                counts.check_invariants().unwrap();
+                assert_eq!(counts.total_tokens(), nd as u64);
+                for (ti, &inv) in inv_nt.iter().enumerate() {
+                    let want = 1.0 / (counts.nt[ti] as f64 + wbeta);
+                    assert!((inv - want).abs() < 1e-12, "inv_nt[{ti}] drifted");
+                }
+                let (proposed, accepted) = kern.resp_mh_stats().unwrap();
+                assert!(proposed > 0 && accepted <= proposed);
+                zd
+            };
+            assert_eq!(run(42), run(42), "supervised MH must be seed-deterministic");
+            assert_ne!(run(42), run(43), "different seeds should move some token");
+        }
     }
 }

@@ -118,7 +118,9 @@ pub fn ln_gamma(x: f64) -> f64 {
 /// chi-square upper-tail CDF is `Q(k/2, x/2)`. Series expansion below the
 /// a+1 knee, Lentz continued fraction above (Numerical Recipes 6.2).
 pub fn gamma_q(a: f64, x: f64) -> f64 {
-    if !(a > 0.0) || x < 0.0 || !x.is_finite() {
+    // NaN shape parameters fall through to NaN here (a.is_nan() => neither
+    // branch of the <= saves it), matching the old !(a > 0.0) guard.
+    if a.is_nan() || a <= 0.0 || x < 0.0 || !x.is_finite() {
         return f64::NAN;
     }
     if x == 0.0 {

@@ -105,9 +105,13 @@ fn gibbs_style_count_updates_preserve_invariants() {
 /// the same `Pcg64` stream, training must produce byte-identical topic
 /// assignments, counts and regression coefficients, and prediction must
 /// produce a byte-identical zbar — the sparse bucket decomposition only
-/// skips exact-zero terms, it never changes the arithmetic.
+/// skips exact-zero terms, it never changes the arithmetic. Supervised
+/// sweeps are pinned to `resp_mode = exact`: under the default `auto` the
+/// sparse kernel's eta-active phase runs its own MH chain (a different,
+/// statistically equivalent RNG sequence — `tests/resp_equivalence.rs`).
 #[test]
 fn sparse_and_dense_kernels_are_seed_exact_identical() {
+    use cfslda::config::schema::RespMode;
     let spec = SyntheticSpec::continuous_small();
     for &topics in &[8usize, 17] {
         let run = |kernel: KernelKind| {
@@ -119,6 +123,7 @@ fn sparse_and_dense_kernels_are_seed_exact_identical() {
             cfg.train.burnin = 4;
             cfg.train.eta_every = 4;
             cfg.sampler.kernel = kernel;
+            cfg.sampler.resp_mode = RespMode::Exact;
             let engine = EngineHandle::native();
             let out = train(&corpus, &cfg, &engine, &mut rng).unwrap();
             out.counts.check_invariants().unwrap();
@@ -300,7 +305,8 @@ fn native_predict_is_linear_in_eta() {
         |rng| {
             let b = usize_in(rng, 1, 40);
             let t = usize_in(rng, 1, 10);
-            (vec_f32(rng, b * t, 0.0, 1.0), vec_f64(rng, t, -2.0, 2.0), vec_f64(rng, t, -2.0, 2.0), t)
+            let zbar = vec_f32(rng, b * t, 0.0, 1.0);
+            (zbar, vec_f64(rng, t, -2.0, 2.0), vec_f64(rng, t, -2.0, 2.0), t)
         },
         |(zbar, e1, e2, t)| {
             let eng = NativeEngine::new();

@@ -1,0 +1,268 @@
+//! Statistical-equivalence suite for the **supervised** (eta-active) MH
+//! sweeps (DESIGN.md §Perf "Supervised MH decomposition").
+//!
+//! Under `resp_mode = mh` the sparse and alias kernels stop falling back to
+//! the exact dense Gaussian conditional once eta activates: they propose
+//! from their own unsupervised machinery and Metropolis-Hastings-correct
+//! with the O(1) response ratio. That chain consumes a different RNG
+//! sequence, so it is exempt from the dense/sparse byte-identical contract
+//! (which `resp_mode = exact` preserves — pinned below) and carries a
+//! *statistical* contract instead: the MH correction targets the exact
+//! supervised conditional, so trained-model topic structure, held-out
+//! predictions and training fits must agree with the exact chain within
+//! sampling noise, while staying fully seed-deterministic. Per-token
+//! chain-level marginal pins live next to the kernels in
+//! `sampler/kernel.rs`.
+
+use cfslda::config::schema::{ExperimentConfig, KernelKind, RespMode};
+use cfslda::data::synthetic::{generate_split, SyntheticSpec};
+use cfslda::parallel::leader::{run_with_engine, Algorithm};
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_predict::{infer_zbar_with_kernel, predict_corpus_with_kernel};
+use cfslda::sampler::gibbs_train::{train, TrainOutput};
+use cfslda::util::rng::Pcg64;
+use cfslda::util::stats::{chi_square_pvalue, chi_square_stat, Summary};
+
+/// Quick training schedule with a long prediction chain: the equivalence
+/// checks compare sweep-averaged estimates, so extra predict sweeps shrink
+/// chain noise on both sides of every comparison. 5 burn-in + 20 supervised
+/// sweeps — most of the run exercises the eta-active path under test.
+fn cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick();
+    c.train.sweeps = 25;
+    c.train.burnin = 5;
+    c.train.eta_every = 5;
+    c.train.predict_sweeps = 60;
+    c.train.predict_burnin = 20;
+    c
+}
+
+/// Train on a fresh copy of the same corpus/seed with the given kernel and
+/// supervised-sweep mode. Same seed => identical corpus, identical random
+/// init; an exact-vs-MH pair of the same kernel shares every burn-in draw
+/// and diverges only once eta activates, so topic labels stay aligned and
+/// per-topic comparisons are meaningful.
+fn train_with(
+    kernel: KernelKind,
+    resp: RespMode,
+    engine: &EngineHandle,
+) -> (TrainOutput, cfslda::data::corpus::Dataset) {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(606);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let mut c = cfg();
+    c.sampler.kernel = kernel;
+    c.sampler.resp_mode = resp;
+    let out = train(&ds.train, &c, engine, &mut rng).unwrap();
+    out.counts.check_invariants().unwrap();
+    (out, ds)
+}
+
+/// Pooled per-topic token mass of a zbar matrix: Σ_d zbar[d, t] · N_d.
+fn pooled_topic_mass(zbar: &[f32], doc_lens: &[usize], t: usize) -> Vec<f64> {
+    let mut mass = vec![0.0f64; t];
+    for (d, &nd) in doc_lens.iter().enumerate() {
+        for ti in 0..t {
+            mass[ti] += zbar[d * t + ti] as f64 * nd as f64;
+        }
+    }
+    mass
+}
+
+#[test]
+fn mh_supervised_topic_mass_matches_exact_chain() {
+    let engine = EngineHandle::native();
+    for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+        // Reference: the same kernel with exact supervised sweeps. Exact
+        // and MH share every burn-in draw and the first eta solve, so
+        // topic labels stay aligned and the only divergence is the
+        // supervised sampler under test. (For sparse, the exact run is
+        // additionally byte-identical to the dense reference chain.)
+        let (exact, ds) = train_with(kernel, RespMode::Exact, &engine);
+        let (mh, _) = train_with(kernel, RespMode::Mh, &engine);
+        let t = exact.model.t;
+        assert_eq!((exact.resp_proposed, exact.resp_accepted), (0, 0));
+        assert!(mh.resp_proposed > 0, "{kernel:?} supervised phase never ran MH");
+        // the MH chain must actually move: a healthy share of proposals
+        // accepted when each proposal carries one factor of the target
+        assert!(
+            mh.resp_accepted * 3 > mh.resp_proposed,
+            "{kernel:?} acceptance collapsed: {}/{}",
+            mh.resp_accepted,
+            mh.resp_proposed
+        );
+        // in-training pooled topic mass (final counts) stays aligned
+        let nt_ref: Vec<f64> = exact.counts.nt.iter().map(|&x| x as f64).collect();
+        let nt_mh: Vec<f64> = mh.counts.nt.iter().map(|&x| x as f64).collect();
+        let train_total: f64 = nt_ref.iter().sum();
+        for ti in 0..t {
+            let (pd, pm) = (nt_ref[ti] / train_total, nt_mh[ti] / train_total);
+            assert!(
+                (pd - pm).abs() < 0.04,
+                "{kernel:?} training topic {ti}: exact proportion {pd:.4} vs MH {pm:.4}"
+            );
+        }
+        // held-out pooled topic mass through the *same* dense predictor and
+        // seed: only the trained models differ
+        let doc_lens: Vec<usize> = (0..ds.test.num_docs()).map(|d| ds.test.doc_len(d)).collect();
+        let c = cfg();
+        let zbar_of = |out: &TrainOutput| {
+            infer_zbar_with_kernel(
+                &out.model, &ds.test, &c.train, KernelKind::Dense,
+                &mut Pcg64::seed_from_u64(7),
+            )
+        };
+        let mass_ref = pooled_topic_mass(&zbar_of(&exact), &doc_lens, t);
+        let mass_mh = pooled_topic_mass(&zbar_of(&mh), &doc_lens, t);
+        let total: f64 = mass_ref.iter().sum();
+        for ti in 0..t {
+            let (pd, pm) = (mass_ref[ti] / total, mass_mh[ti] / total);
+            assert!(
+                (pd - pm).abs() < 0.04,
+                "{kernel:?} topic {ti}: exact proportion {pd:.4} vs MH {pm:.4}"
+            );
+        }
+        let (stat, dof) = chi_square_stat(&mass_mh, &mass_ref, 5.0);
+        let p = chi_square_pvalue(stat, dof);
+        assert!(p > 1e-5, "{kernel:?} chi-square stat {stat:.2} (dof {dof}) p {p:.2e}");
+    }
+}
+
+#[test]
+fn mh_heldout_predictions_within_tolerance_of_dense() {
+    let engine = EngineHandle::native();
+    let (dense, ds) = train_with(KernelKind::Dense, RespMode::Exact, &engine);
+    let ys = ds.test.responses();
+    let var = Summary::from_slice(&ys).var();
+    let c = cfg();
+    let predict = |out: &TrainOutput| {
+        predict_corpus_with_kernel(
+            &out.model, &ds.test, &c.train, KernelKind::Dense, &engine, Some(&ys),
+            &mut Pcg64::seed_from_u64(11),
+        )
+        .unwrap()
+        .0
+    };
+    let pd = predict(&dense);
+
+    for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+        let (mh, _) = train_with(kernel, RespMode::Mh, &engine);
+        let pm = predict(&mh);
+        // the MH-trained model must clear the paper's mean-baseline bar
+        assert!(pm.mse < 0.6 * var, "{kernel:?} mse {} vs baseline {var}", pm.mse);
+        // held-out MSE within tolerance of the exact-trained model's (two
+        // independently trained chains of the same posterior, so the band
+        // is wider than the same-model prediction comparison in
+        // alias_equivalence.rs)
+        assert!(
+            (pm.mse - pd.mse).abs() < 0.35 * pd.mse + 0.05 * var,
+            "{kernel:?} mse {} drifted from dense mse {} (var {var})",
+            pm.mse,
+            pd.mse
+        );
+        // per-document predictions track each other (same posterior mean,
+        // two independently trained models)
+        let mad: f64 = pd
+            .yhat
+            .iter()
+            .zip(&pm.yhat)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / pd.yhat.len() as f64;
+        assert!(
+            mad < 0.5 * var.sqrt(),
+            "{kernel:?} mean |yhat_exact - yhat_mh| = {mad} vs label sd {}",
+            var.sqrt()
+        );
+        // and the training fit itself stays in the same quality band
+        let (lo, hi) = if dense.model.train_mse < mh.model.train_mse {
+            (dense.model.train_mse, mh.model.train_mse)
+        } else {
+            (mh.model.train_mse, dense.model.train_mse)
+        };
+        assert!(
+            hi < 2.0 * lo + 0.02 * var,
+            "{kernel:?} train mse diverged: dense {} vs MH {}",
+            dense.model.train_mse,
+            mh.model.train_mse
+        );
+    }
+}
+
+#[test]
+fn mh_supervised_training_is_seed_deterministic() {
+    let engine = EngineHandle::native();
+    for kernel in [KernelKind::Sparse, KernelKind::Alias] {
+        let run = |seed: u64| {
+            let spec = SyntheticSpec::continuous_small();
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let ds = generate_split(&spec, 180, &mut rng);
+            let mut c = cfg();
+            c.sampler.kernel = kernel;
+            c.sampler.resp_mode = RespMode::Mh;
+            train(&ds.train, &c, &engine, &mut rng).unwrap()
+        };
+        let (a, b) = (run(404), run(404));
+        assert_eq!(a.z, b.z, "{kernel:?} supervised MH must repeat under one seed");
+        assert_eq!(a.model.eta, b.model.eta);
+        assert_eq!(a.counts.ndt, b.counts.ndt);
+        assert_eq!(
+            (a.resp_proposed, a.resp_accepted),
+            (b.resp_proposed, b.resp_accepted),
+            "{kernel:?} MH counters must be deterministic too"
+        );
+        let c = run(405);
+        assert_ne!(a.z, c.z, "{kernel:?}: different seeds must move the chain");
+    }
+}
+
+#[test]
+fn mh_supervised_parallel_run_is_thread_count_independent() {
+    // Worker RNG streams are derived per shard before the fan-out, so a
+    // supervised-MH parallel run must produce identical bytes for any
+    // thread count (the jobs-independence contract of the exact path).
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(505);
+    let ds = generate_split(&spec, 180, &mut rng);
+    let engine = EngineHandle::native();
+    let mut c = cfg();
+    c.engine = cfslda::config::schema::EngineKind::Native;
+    c.sampler.kernel = KernelKind::Sparse;
+    c.sampler.resp_mode = RespMode::Mh;
+    c.train.predict_sweeps = 20;
+    c.train.predict_burnin = 5;
+    c.parallel.shards = 4;
+    let mut run = |threads: usize| {
+        c.parallel.threads = threads;
+        run_with_engine(Algorithm::SimpleAverage, &ds, &c, &engine, false)
+            .unwrap()
+            .0
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.yhat, b.yhat);
+    assert_eq!(a.test_metrics, b.test_metrics);
+}
+
+/// `resp_mode = exact` pins the historical byte-exact contract: the sparse
+/// kernel's supervised sweeps delegate to the same `sweep_doc_gauss` draws
+/// as the dense kernel (and `auto` on dense resolves to exact), so z,
+/// counts and eta agree bit-for-bit.
+#[test]
+fn exact_resp_mode_preserves_dense_sparse_byte_contract() {
+    let engine = EngineHandle::native();
+    let (dense_auto, _) = train_with(KernelKind::Dense, RespMode::Auto, &engine);
+    let (dense_exact, _) = train_with(KernelKind::Dense, RespMode::Exact, &engine);
+    let (sparse_exact, _) = train_with(KernelKind::Sparse, RespMode::Exact, &engine);
+    assert_eq!(dense_auto.z, dense_exact.z, "auto must resolve to exact on dense");
+    assert_eq!(dense_auto.model.eta, dense_exact.model.eta);
+    assert_eq!(dense_exact.z, sparse_exact.z, "sparse exact diverged from dense");
+    assert_eq!(dense_exact.counts.ndt, sparse_exact.counts.ndt);
+    assert_eq!(dense_exact.model.eta, sparse_exact.model.eta);
+    assert_eq!((dense_exact.resp_proposed, sparse_exact.resp_proposed), (0, 0));
+    // while the MH chain on the same seed is a genuinely different (but
+    // valid) sequence
+    let (sparse_mh, _) = train_with(KernelKind::Sparse, RespMode::Mh, &engine);
+    assert_ne!(sparse_mh.z, sparse_exact.z);
+    assert!(sparse_mh.resp_proposed > 0);
+}
