@@ -1,14 +1,51 @@
 //! JSON parsing and serialization (RFC 8259 subset, no serde offline).
 //!
-//! Supports the full JSON value model with:
-//! * numbers parsed as f64 (integers round-trip exactly up to 2^53, which
-//!   covers every count this project serializes),
-//! * `\uXXXX` escapes incl. surrogate pairs,
-//! * precise error positions (line:col) for config debugging,
-//! * pretty and compact serialization.
+//! Two layers share one tokenizer:
+//!
+//! * **Streaming** — [`Lexer`] pulls [`Event`]s straight off a `&[u8]` with
+//!   no intermediate tree. Strings borrow from the input when they contain
+//!   no escapes; integers lex exactly as [`Number::U64`]/[`Number::I64`]
+//!   (full 64-bit range, no f64 round-trip). This is the serve hot path:
+//!   the protocol codec feeds token ids from the wire directly into the
+//!   batcher's arena.
+//! * **Tree** — [`parse`] builds the classic [`Value`] model on top of the
+//!   lexer for cold paths (configs, manifests, tests). Numbers are stored
+//!   as f64; integer literals that cannot round-trip through f64 exactly
+//!   (magnitude above 2^53) are *rejected*, never silently rounded.
+//!
+//! Both layers keep precise line:col error positions, support `\uXXXX`
+//! escapes incl. surrogate pairs, and cap nesting at [`MAX_DEPTH`] so
+//! malicious documents cannot overflow the stack. Serialization goes
+//! through [`to_string`]/[`to_string_pretty`] for trees and the reusable
+//! [`JsonWriter`] for allocation-free rendering into a recycled buffer.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fmt::Write as _;
+
+/// Maximum container nesting depth accepted by the lexer (and therefore by
+/// the tree parser, whose recursion is bounded by it) and supported by
+/// [`JsonWriter`]. Both track container state in fixed bitsets, so depth
+/// costs no allocation.
+pub const MAX_DEPTH: usize = 128;
+
+/// Words in the fixed bitsets that track per-level container state.
+const DEPTH_WORDS: usize = MAX_DEPTH / 64;
+
+#[inline]
+fn bit_get(bits: &[u64; DEPTH_WORDS], i: usize) -> bool {
+    bits[i >> 6] & (1u64 << (i & 63)) != 0
+}
+
+#[inline]
+fn bit_set(bits: &mut [u64; DEPTH_WORDS], i: usize, v: bool) {
+    let mask = 1u64 << (i & 63);
+    if v {
+        bits[i >> 6] |= mask;
+    } else {
+        bits[i >> 6] &= !mask;
+    }
+}
 
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,8 +73,21 @@ impl Value {
         })
     }
 
+    /// Integer access, `None` when the stored f64 is fractional or its
+    /// magnitude exceeds 2^53 (beyond which f64 cannot represent every
+    /// integer — use the streaming [`Lexer`] for full 64-bit range).
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().and_then(|n| if n.fract() == 0.0 { Some(n as i64) } else { None })
+        self.as_f64().and_then(|n| {
+            if n.fract() == 0.0 && n.abs() <= 2f64.powi(53) { Some(n as i64) } else { None }
+        })
+    }
+
+    /// Non-negative integer access with the same 2^53 exactness bound as
+    /// [`Value::as_i64`].
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53) { Some(n as u64) } else { None }
+        })
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -87,13 +137,148 @@ impl fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
-struct Parser<'a> {
-    bytes: &'a [u8],
-    pos: usize,
+/// An exactly-lexed JSON number. Integer literals that fit 64 bits keep
+/// their exact value (`U64` for non-negative, `I64` for negative);
+/// everything else (fractions, exponents, magnitudes beyond 64 bits)
+/// falls back to `F64`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Number {
+    U64(u64),
+    I64(i64),
+    F64(f64),
 }
 
-impl<'a> Parser<'a> {
-    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+impl Number {
+    /// Lossy f64 view (what the tree model stores).
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Number::U64(n) => n as f64,
+            Number::I64(n) => n as f64,
+            Number::F64(f) => f,
+        }
+    }
+
+    /// The f64 value if the conversion is exact; `None` when an integer
+    /// literal would lose precision (magnitude above 2^53 with low bits
+    /// set). `F64` is returned as-is: the literal already went through
+    /// float parsing, so f64 *is* its value.
+    pub fn as_exact_f64(self) -> Option<f64> {
+        match self {
+            Number::U64(n) => {
+                let f = n as f64;
+                // The cast rounds; accept only when it round-trips. Guard
+                // against f == 2^64 (u64::MAX rounds up), where the
+                // saturating cast back would falsely "round-trip".
+                if f < 18_446_744_073_709_551_616.0 && f as u64 == n { Some(f) } else { None }
+            }
+            Number::I64(n) => {
+                let f = n as f64;
+                if f >= -9_223_372_036_854_775_808.0 && f as i64 == n { Some(f) } else { None }
+            }
+            Number::F64(f) => Some(f),
+        }
+    }
+
+    /// Exact u64 view: integer literals in `[0, u64::MAX]`, including
+    /// integral floats (e.g. `7.0`, `1e3`) below 2^64.
+    pub fn as_u64_exact(self) -> Option<u64> {
+        match self {
+            Number::U64(n) => Some(n),
+            Number::I64(_) => None,
+            Number::F64(f) => {
+                if f >= 0.0 && f.fract() == 0.0 && f < 18_446_744_073_709_551_616.0 {
+                    Some(f as u64)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Exact u32 view (token ids); accepts integral floats like the tree
+    /// path's `as_usize` did, so the two codecs agree on what a token is.
+    pub fn as_u32_exact(self) -> Option<u32> {
+        match self {
+            Number::U64(n) => u32::try_from(n).ok(),
+            Number::I64(_) => None,
+            Number::F64(f) => {
+                if f >= 0.0 && f.fract() == 0.0 && f <= u32::MAX as f64 {
+                    Some(f as u32)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// One streaming parse event. String payloads borrow from the lexer (and
+/// from the input directly when escape-free), so consuming them before the
+/// next `next()` call is copy-free.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event<'a> {
+    ObjectStart,
+    ObjectEnd,
+    ArrayStart,
+    ArrayEnd,
+    /// An object key (the following event is its value).
+    Key(&'a str),
+    String(&'a str),
+    Number(Number),
+    Bool(bool),
+    Null,
+    /// Document complete (emitted once, after the top-level value).
+    Eof,
+}
+
+/// Pull-based JSON tokenizer over raw bytes. Allocation-free in the steady
+/// state: container bookkeeping lives in fixed bitsets, and the only
+/// buffer (`scratch`, for strings with escapes) is recycled across calls.
+///
+/// ```text
+/// {"docs": [[1, 2]]}  ->  ObjectStart, Key("docs"), ArrayStart,
+///                         ArrayStart, Number(U64(1)), Number(U64(2)),
+///                         ArrayEnd, ArrayEnd, ObjectEnd, Eof
+/// ```
+pub struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    depth: usize,
+    /// Bit set => the container at that level is an object.
+    is_obj: [u64; DEPTH_WORDS],
+    /// Bit set => the container at that level already emitted an element.
+    has_elem: [u64; DEPTH_WORDS],
+    /// A key was just emitted; the next event is its value.
+    after_key: bool,
+    /// The top-level value has been fully consumed.
+    done: bool,
+    /// Decode buffer for strings containing escapes (reused).
+    scratch: String,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(bytes: &'a [u8]) -> Lexer<'a> {
+        Lexer {
+            bytes,
+            pos: 0,
+            depth: 0,
+            is_obj: [0; DEPTH_WORDS],
+            has_elem: [0; DEPTH_WORDS],
+            after_key: false,
+            done: false,
+            scratch: String::new(),
+        }
+    }
+
+    /// Current byte offset (for diagnostics).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Build a positioned error at the current offset (public so typed
+    /// codecs layered on the lexer can report schema errors with the same
+    /// line:col precision as syntax errors).
+    pub fn error(&self, msg: impl Into<String>) -> ParseError {
         let (mut line, mut col) = (1, 1);
         for &b in &self.bytes[..self.pos.min(self.bytes.len())] {
             if b == b'\n' {
@@ -103,7 +288,11 @@ impl<'a> Parser<'a> {
                 col += 1;
             }
         }
-        Err(ParseError { line, col, msg: msg.into() })
+        ParseError { line, col, msg: msg.into() }
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(self.error(msg))
     }
 
     fn peek(&self) -> Option<u8> {
@@ -130,45 +319,182 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn parse_value(&mut self) -> Result<Value, ParseError> {
+    fn push(&mut self, obj: bool) -> Result<(), ParseError> {
+        if self.depth >= MAX_DEPTH {
+            return self.err(format!("nesting deeper than {MAX_DEPTH} levels"));
+        }
+        bit_set(&mut self.is_obj, self.depth, obj);
+        bit_set(&mut self.has_elem, self.depth, false);
+        self.depth += 1;
+        Ok(())
+    }
+
+    /// Pull the next event. After [`Event::Eof`] further calls keep
+    /// returning `Eof`.
+    pub fn next(&mut self) -> Result<Event<'_>, ParseError> {
         self.skip_ws();
+        if self.depth == 0 {
+            if self.done {
+                return if self.pos == self.bytes.len() {
+                    Ok(Event::Eof)
+                } else {
+                    self.err("trailing characters after document")
+                };
+            }
+            self.done = true;
+            return self.lex_value();
+        }
+        if self.after_key {
+            self.after_key = false;
+            self.expect(b':')?;
+            self.skip_ws();
+            return self.lex_value();
+        }
+        let top = self.depth - 1;
+        let first = !bit_get(&self.has_elem, top);
+        if bit_get(&self.is_obj, top) {
+            if first {
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Event::ObjectEnd);
+                }
+            } else {
+                match self.bump() {
+                    Some(b',') => self.skip_ws(),
+                    Some(b'}') => {
+                        self.depth -= 1;
+                        return Ok(Event::ObjectEnd);
+                    }
+                    _ => return self.err("expected ',' or '}'"),
+                }
+            }
+            bit_set(&mut self.has_elem, top, true);
+            self.after_key = true;
+            let s = self.lex_string()?;
+            Ok(Event::Key(s))
+        } else {
+            if first {
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Event::ArrayEnd);
+                }
+            } else {
+                match self.bump() {
+                    Some(b',') => self.skip_ws(),
+                    Some(b']') => {
+                        self.depth -= 1;
+                        return Ok(Event::ArrayEnd);
+                    }
+                    _ => return self.err("expected ',' or ']'"),
+                }
+            }
+            bit_set(&mut self.has_elem, top, true);
+            self.lex_value()
+        }
+    }
+
+    /// Consume one complete value (scalar or whole container). Call where
+    /// a value is expected — e.g. right after an unrecognized [`Event::Key`]
+    /// — to skip fields a typed codec does not care about.
+    pub fn skip_value(&mut self) -> Result<(), ParseError> {
+        let mut depth = 0usize;
+        loop {
+            match self.next()? {
+                Event::ObjectStart | Event::ArrayStart => depth += 1,
+                Event::ObjectEnd | Event::ArrayEnd => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Event::Key(_) => {}
+                Event::String(_) | Event::Number(_) | Event::Bool(_) | Event::Null => {
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Event::Eof => return self.err("unexpected EOF"),
+            }
+        }
+    }
+
+    fn lex_value(&mut self) -> Result<Event<'_>, ParseError> {
         match self.peek() {
-            Some(b'{') => self.parse_object(),
-            Some(b'[') => self.parse_array(),
-            Some(b'"') => Ok(Value::String(self.parse_string()?)),
-            Some(b't') => self.parse_lit("true", Value::Bool(true)),
-            Some(b'f') => self.parse_lit("false", Value::Bool(false)),
-            Some(b'n') => self.parse_lit("null", Value::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.parse_number(),
+            Some(b'{') => {
+                self.pos += 1;
+                self.push(true)?;
+                Ok(Event::ObjectStart)
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.push(false)?;
+                Ok(Event::ArrayStart)
+            }
+            Some(b'"') => {
+                let s = self.lex_string()?;
+                Ok(Event::String(s))
+            }
+            Some(b't') => {
+                self.lex_lit("true")?;
+                Ok(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.lex_lit("false")?;
+                Ok(Event::Bool(false))
+            }
+            Some(b'n') => {
+                self.lex_lit("null")?;
+                Ok(Event::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => Ok(Event::Number(self.lex_number()?)),
             Some(c) => self.err(format!("unexpected character '{}'", c as char)),
             None => self.err("unexpected EOF"),
         }
     }
 
-    fn parse_lit(&mut self, lit: &str, v: Value) -> Result<Value, ParseError> {
+    fn lex_lit(&mut self, lit: &str) -> Result<(), ParseError> {
         if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
-            Ok(v)
+            Ok(())
         } else {
             self.err(format!("invalid literal, expected '{lit}'"))
         }
     }
 
-    fn parse_number(&mut self) -> Result<Value, ParseError> {
+    fn lex_number(&mut self) -> Result<Number, ParseError> {
         let start = self.pos;
-        if self.peek() == Some(b'-') {
+        let neg = self.peek() == Some(b'-');
+        if neg {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+        // Accumulate the integral magnitude exactly; on u64 overflow keep
+        // consuming digits and fall back to the float path below.
+        let mut mag = 0u64;
+        let mut digits = 0usize;
+        let mut overflow = false;
+        while let Some(c) = self.peek() {
+            if !c.is_ascii_digit() {
+                break;
+            }
             self.pos += 1;
+            digits += 1;
+            match mag.checked_mul(10).and_then(|m| m.checked_add(u64::from(c - b'0'))) {
+                Some(m) => mag = m,
+                None => overflow = true,
+            }
         }
+        let mut integral = digits > 0;
         if self.peek() == Some(b'.') {
+            integral = false;
             self.pos += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
             self.pos += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
@@ -177,20 +503,74 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        if integral && !overflow {
+            if !neg {
+                return Ok(Number::U64(mag));
+            }
+            if mag <= 1u64 << 63 {
+                // mag == 2^63 wraps to exactly i64::MIN, which is -2^63.
+                return Ok(Number::I64((mag as i64).wrapping_neg()));
+            }
+        }
         let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         match s.parse::<f64>() {
-            Ok(n) if n.is_finite() => Ok(Value::Number(n)),
+            Ok(n) if n.is_finite() => Ok(Number::F64(n)),
             _ => self.err(format!("invalid number '{s}'")),
         }
     }
 
-    fn parse_string(&mut self) -> Result<String, ParseError> {
+    /// Lex a string. Escape-free strings are returned as a borrow of the
+    /// input (zero-copy); strings with escapes decode into the reused
+    /// scratch buffer.
+    fn lex_string(&mut self) -> Result<&str, ParseError> {
         self.expect(b'"')?;
-        let mut out = String::new();
+        let bytes = self.bytes;
+        let mut i = self.pos;
+        while i < bytes.len() && bytes[i] != b'"' && bytes[i] != b'\\' && bytes[i] >= 0x20 {
+            i += 1;
+        }
+        if i < bytes.len() && bytes[i] == b'"' {
+            let raw = &bytes[self.pos..i];
+            match std::str::from_utf8(raw) {
+                Ok(s) => {
+                    self.pos = i + 1;
+                    Ok(s)
+                }
+                Err(_) => self.err("invalid utf-8"),
+            }
+        } else if i < bytes.len() && bytes[i] < 0x20 {
+            self.pos = i + 1;
+            self.err("control character in string")
+        } else if i >= bytes.len() {
+            self.pos = i;
+            self.err("unterminated string")
+        } else {
+            // Hit a backslash: copy the clean prefix into scratch and
+            // finish with the escape-decoding loop.
+            let mut out = std::mem::take(&mut self.scratch);
+            out.clear();
+            match std::str::from_utf8(&bytes[self.pos..i]) {
+                Ok(s) => out.push_str(s),
+                Err(_) => {
+                    self.scratch = out;
+                    return self.err("invalid utf-8");
+                }
+            }
+            self.pos = i;
+            let r = self.string_tail(&mut out);
+            self.scratch = out;
+            r?;
+            Ok(&self.scratch)
+        }
+    }
+
+    /// Decode the remainder of a string (starting at an escape) into `out`,
+    /// consuming the closing quote.
+    fn string_tail(&mut self, out: &mut String) -> Result<(), ParseError> {
         loop {
             match self.bump() {
                 None => return self.err("unterminated string"),
-                Some(b'"') => return Ok(out),
+                Some(b'"') => return Ok(()),
                 Some(b'\\') => match self.bump() {
                     Some(b'"') => out.push('"'),
                     Some(b'\\') => out.push('\\'),
@@ -254,57 +634,14 @@ impl<'a> Parser<'a> {
                 None => return self.err("truncated \\u escape"),
             };
             let d = match c {
-                b'0'..=b'9' => (c - b'0') as u32,
-                b'a'..=b'f' => (c - b'a') as u32 + 10,
-                b'A'..=b'F' => (c - b'A') as u32 + 10,
+                b'0'..=b'9' => u32::from(c - b'0'),
+                b'a'..=b'f' => u32::from(c - b'a') + 10,
+                b'A'..=b'F' => u32::from(c - b'A') + 10,
                 _ => return self.err("invalid hex digit"),
             };
             v = (v << 4) | d;
         }
         Ok(v)
-    }
-
-    fn parse_array(&mut self) -> Result<Value, ParseError> {
-        self.expect(b'[')?;
-        let mut items = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Value::Array(items));
-        }
-        loop {
-            items.push(self.parse_value()?);
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b']') => return Ok(Value::Array(items)),
-                _ => return self.err("expected ',' or ']'"),
-            }
-        }
-    }
-
-    fn parse_object(&mut self) -> Result<Value, ParseError> {
-        self.expect(b'{')?;
-        let mut map = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Value::Object(map));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.parse_string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            let val = self.parse_value()?;
-            map.insert(key, val);
-            self.skip_ws();
-            match self.bump() {
-                Some(b',') => continue,
-                Some(b'}') => return Ok(Value::Object(map)),
-                _ => return self.err("expected ',' or '}'"),
-            }
-        }
     }
 }
 
@@ -317,15 +654,78 @@ fn utf8_len(b: u8) -> usize {
     }
 }
 
-/// Parse a complete JSON document (trailing whitespace allowed).
-pub fn parse(input: &str) -> Result<Value, ParseError> {
-    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
-    let v = p.parse_value()?;
-    p.skip_ws();
-    if p.pos != p.bytes.len() {
-        return p.err("trailing characters after document");
+/// First event of a value, pre-classified so the array loop can tell "next
+/// element" apart from "container closed" with a single `next()` call.
+enum First {
+    Obj,
+    Arr,
+    Num(Number),
+    Val(Value),
+    End,
+}
+
+fn classify(lex: &mut Lexer<'_>) -> Result<First, ParseError> {
+    Ok(match lex.next()? {
+        Event::ObjectStart => First::Obj,
+        Event::ArrayStart => First::Arr,
+        Event::ObjectEnd | Event::ArrayEnd => First::End,
+        Event::String(s) => First::Val(Value::String(s.to_string())),
+        Event::Number(n) => First::Num(n),
+        Event::Bool(b) => First::Val(Value::Bool(b)),
+        Event::Null => First::Val(Value::Null),
+        // The lexer never yields these where a value can start.
+        Event::Key(_) | Event::Eof => return Err(lex.error("unexpected token")),
+    })
+}
+
+fn build_from(lex: &mut Lexer<'_>, first: First) -> Result<Value, ParseError> {
+    match first {
+        First::Val(v) => Ok(v),
+        First::Num(n) => match n.as_exact_f64() {
+            Some(f) => Ok(Value::Number(f)),
+            // Refuse to round: callers that need full 64-bit integers
+            // (e.g. RNG seeds) go through the streaming layer instead.
+            None => Err(lex.error("integer literal not exactly representable as f64 (|n| > 2^53)")),
+        },
+        First::End => Err(lex.error("unexpected token")),
+        First::Obj => {
+            let mut map = BTreeMap::new();
+            loop {
+                let key = match lex.next()? {
+                    Event::ObjectEnd => return Ok(Value::Object(map)),
+                    Event::Key(k) => k.to_string(),
+                    _ => return Err(lex.error("unexpected token in object")),
+                };
+                let f = classify(lex)?;
+                if matches!(f, First::End) {
+                    return Err(lex.error("unexpected token in object"));
+                }
+                let val = build_from(lex, f)?;
+                map.insert(key, val);
+            }
+        }
+        First::Arr => {
+            let mut items = Vec::new();
+            loop {
+                match classify(lex)? {
+                    First::End => return Ok(Value::Array(items)),
+                    f => items.push(build_from(lex, f)?),
+                }
+            }
+        }
     }
-    Ok(v)
+}
+
+/// Parse a complete JSON document (trailing whitespace allowed). Built on
+/// the streaming [`Lexer`], so both layers share one tokenizer.
+pub fn parse(input: &str) -> Result<Value, ParseError> {
+    let mut lex = Lexer::new(input.as_bytes());
+    let first = classify(&mut lex)?;
+    let v = build_from(&mut lex, first)?;
+    match lex.next()? {
+        Event::Eof => Ok(v),
+        _ => Err(lex.error("trailing characters after document")),
+    }
 }
 
 fn escape_into(s: &str, out: &mut String) {
@@ -337,7 +737,9 @@ fn escape_into(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }
@@ -346,9 +748,143 @@ fn escape_into(s: &str, out: &mut String) {
 
 fn write_number(n: f64, out: &mut String) {
     if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
-        out.push_str(&format!("{}", n as i64));
+        let _ = write!(out, "{}", n as i64);
     } else {
-        out.push_str(&format!("{n}"));
+        let _ = write!(out, "{n}");
+    }
+}
+
+/// Streaming serializer into a reusable buffer. The serve hot path keeps
+/// one per connection: `clear()` retains capacity, so a warmed writer
+/// renders a response with zero heap allocations. Output bytes are
+/// identical to [`to_string`] of the equivalent tree (same number and
+/// string formatting) — emit object keys in sorted order to match the
+/// `BTreeMap` iteration order of the tree path bit-for-bit.
+pub struct JsonWriter {
+    buf: String,
+    depth: usize,
+    has_elem: [u64; DEPTH_WORDS],
+    pending_key: bool,
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter { buf: String::new(), depth: 0, has_elem: [0; DEPTH_WORDS], pending_key: false }
+    }
+
+    pub fn with_capacity(n: usize) -> JsonWriter {
+        JsonWriter {
+            buf: String::with_capacity(n),
+            depth: 0,
+            has_elem: [0; DEPTH_WORDS],
+            pending_key: false,
+        }
+    }
+
+    /// Reset for the next document, keeping the buffer's capacity.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.depth = 0;
+        self.has_elem = [0; DEPTH_WORDS];
+        self.pending_key = false;
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_string(self) -> String {
+        self.buf
+    }
+
+    /// Comma/`:` bookkeeping shared by every emitter.
+    fn sep(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if self.depth > 0 {
+            if bit_get(&self.has_elem, self.depth - 1) {
+                self.buf.push(',');
+            }
+            bit_set(&mut self.has_elem, self.depth - 1, true);
+        }
+    }
+
+    fn push_level(&mut self) {
+        assert!(self.depth < MAX_DEPTH, "JsonWriter nesting deeper than {MAX_DEPTH}");
+        bit_set(&mut self.has_elem, self.depth, false);
+        self.depth += 1;
+    }
+
+    pub fn begin_object(&mut self) {
+        self.sep();
+        self.push_level();
+        self.buf.push('{');
+    }
+
+    pub fn end_object(&mut self) {
+        debug_assert!(self.depth > 0, "end_object at depth 0");
+        self.depth -= 1;
+        self.buf.push('}');
+    }
+
+    pub fn begin_array(&mut self) {
+        self.sep();
+        self.push_level();
+        self.buf.push('[');
+    }
+
+    pub fn end_array(&mut self) {
+        debug_assert!(self.depth > 0, "end_array at depth 0");
+        self.depth -= 1;
+        self.buf.push(']');
+    }
+
+    pub fn key(&mut self, k: &str) {
+        self.sep();
+        escape_into(k, &mut self.buf);
+        self.buf.push(':');
+        self.pending_key = true;
+    }
+
+    pub fn string(&mut self, s: &str) {
+        self.sep();
+        escape_into(s, &mut self.buf);
+    }
+
+    pub fn number_f64(&mut self, n: f64) {
+        self.sep();
+        write_number(n, &mut self.buf);
+    }
+
+    pub fn number_u64(&mut self, n: u64) {
+        self.sep();
+        let _ = write!(self.buf, "{n}");
+    }
+
+    pub fn boolean(&mut self, b: bool) {
+        self.sep();
+        self.buf.push_str(if b { "true" } else { "false" });
+    }
+
+    pub fn null(&mut self) {
+        self.sep();
+        self.buf.push_str("null");
     }
 }
 
@@ -503,6 +1039,7 @@ mod tests {
         assert_eq!(v.get("n").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("x").unwrap().as_usize(), None);
         assert_eq!(v.get("n").unwrap().as_i64(), Some(3));
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(3));
         assert_eq!(v.get("missing"), None);
     }
 
@@ -519,5 +1056,167 @@ mod tests {
         let shape = fns[0].get("params").unwrap().as_array().unwrap()[0]
             .get("shape").unwrap().as_array().unwrap();
         assert_eq!(shape[0].as_usize(), Some(4096));
+    }
+
+    // ---- streaming layer -------------------------------------------------
+
+    #[test]
+    fn lexer_event_stream() {
+        let mut lex = Lexer::new(br#"{"docs": [[1, 2]], "s": "a\nb", "t": true}"#);
+        assert_eq!(lex.next().unwrap(), Event::ObjectStart);
+        assert_eq!(lex.next().unwrap(), Event::Key("docs"));
+        assert_eq!(lex.next().unwrap(), Event::ArrayStart);
+        assert_eq!(lex.next().unwrap(), Event::ArrayStart);
+        assert_eq!(lex.next().unwrap(), Event::Number(Number::U64(1)));
+        assert_eq!(lex.next().unwrap(), Event::Number(Number::U64(2)));
+        assert_eq!(lex.next().unwrap(), Event::ArrayEnd);
+        assert_eq!(lex.next().unwrap(), Event::ArrayEnd);
+        assert_eq!(lex.next().unwrap(), Event::Key("s"));
+        assert_eq!(lex.next().unwrap(), Event::String("a\nb"));
+        assert_eq!(lex.next().unwrap(), Event::Key("t"));
+        assert_eq!(lex.next().unwrap(), Event::Bool(true));
+        assert_eq!(lex.next().unwrap(), Event::ObjectEnd);
+        assert_eq!(lex.next().unwrap(), Event::Eof);
+        assert_eq!(lex.next().unwrap(), Event::Eof);
+    }
+
+    #[test]
+    fn lexer_numbers_exact() {
+        let mut lex = Lexer::new(
+            b"[18446744073709551615, -9223372036854775808, 9007199254740993, 2.5, 1e3]",
+        );
+        assert_eq!(lex.next().unwrap(), Event::ArrayStart);
+        assert_eq!(lex.next().unwrap(), Event::Number(Number::U64(u64::MAX)));
+        assert_eq!(lex.next().unwrap(), Event::Number(Number::I64(i64::MIN)));
+        // 2^53 + 1: exact as u64, not representable as f64.
+        let n = match lex.next().unwrap() {
+            Event::Number(n) => n,
+            e => panic!("{e:?}"),
+        };
+        assert_eq!(n, Number::U64(9007199254740993));
+        assert_eq!(n.as_exact_f64(), None);
+        assert_eq!(n.as_u64_exact(), Some(9007199254740993));
+        assert_eq!(lex.next().unwrap(), Event::Number(Number::F64(2.5)));
+        assert_eq!(lex.next().unwrap(), Event::Number(Number::F64(1e3)));
+        assert_eq!(lex.next().unwrap(), Event::ArrayEnd);
+        assert_eq!(lex.next().unwrap(), Event::Eof);
+    }
+
+    #[test]
+    fn number_accessors_are_exact() {
+        assert_eq!(Number::U64(u64::MAX).as_u64_exact(), Some(u64::MAX));
+        assert_eq!(Number::U64(u64::MAX).as_exact_f64(), None);
+        assert_eq!(Number::U64(1u64 << 53).as_exact_f64(), Some(9007199254740992.0));
+        assert_eq!(Number::I64(-1).as_u64_exact(), None);
+        assert_eq!(Number::F64(7.0).as_u64_exact(), Some(7));
+        assert_eq!(Number::F64(7.5).as_u64_exact(), None);
+        assert_eq!(Number::F64(-1.0).as_u64_exact(), None);
+        assert_eq!(Number::U64(7).as_u32_exact(), Some(7));
+        assert_eq!(Number::U64(u64::from(u32::MAX) + 1).as_u32_exact(), None);
+        assert_eq!(Number::F64(1e2).as_u32_exact(), Some(100));
+        assert_eq!(Number::I64(-3).as_u32_exact(), None);
+    }
+
+    #[test]
+    fn tree_rejects_imprecise_integers() {
+        // 2^53 is the last exactly-representable power; +1 must be refused,
+        // not rounded (it used to come back as 9007199254740992.0).
+        assert!(parse("9007199254740992").is_ok());
+        assert!(parse("9007199254740993").is_err());
+        assert!(parse("18446744073709551615").is_err());
+        assert!(parse(r#"{"seed": 18446744073709551615}"#).is_err());
+        // Floats keep their usual lossy semantics.
+        assert_eq!(parse("1e300").unwrap(), Value::Number(1e300));
+    }
+
+    #[test]
+    fn as_i64_no_longer_saturates() {
+        assert_eq!(parse("1e300").unwrap().as_i64(), None);
+        assert_eq!(parse("-42").unwrap().as_i64(), Some(-42));
+        assert_eq!(parse("1e300").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn nesting_bombs_are_rejected_not_overflowed() {
+        let deep_ok = format!("{}0{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&deep_ok).is_ok());
+        let bomb = "[".repeat(100_000);
+        let e = parse(&bomb).unwrap_err();
+        assert!(e.msg.contains("nesting"), "{e}");
+        let obj_bomb = r#"{"a":"#.repeat(10_000) + "1";
+        assert!(parse(&obj_bomb).is_err());
+    }
+
+    #[test]
+    fn skip_value_consumes_whole_subtree() {
+        let mut lex = Lexer::new(br#"{"skip": {"a": [1, {"b": 2}], "c": "x"}, "keep": 7}"#);
+        assert_eq!(lex.next().unwrap(), Event::ObjectStart);
+        assert_eq!(lex.next().unwrap(), Event::Key("skip"));
+        lex.skip_value().unwrap();
+        assert_eq!(lex.next().unwrap(), Event::Key("keep"));
+        assert_eq!(lex.next().unwrap(), Event::Number(Number::U64(7)));
+        assert_eq!(lex.next().unwrap(), Event::ObjectEnd);
+        assert_eq!(lex.next().unwrap(), Event::Eof);
+    }
+
+    #[test]
+    fn lexer_borrowed_vs_decoded_strings() {
+        // Escape-free: borrowed straight from the input slice.
+        let input = br#""plain utf8: naive""#;
+        let mut lex = Lexer::new(input);
+        match lex.next().unwrap() {
+            Event::String(s) => {
+                let inside = &input[1..input.len() - 1];
+                assert!(std::ptr::eq(s.as_bytes().as_ptr(), inside.as_ptr()));
+            }
+            e => panic!("{e:?}"),
+        }
+        // Escaped (incl. surrogate pair): decoded into scratch.
+        let mut lex = Lexer::new(br#""pre\u0041post \ud83d\ude00""#);
+        match lex.next().unwrap() {
+            Event::String(s) => assert_eq!(s, "preApost 😀"),
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn writer_matches_tree_serialization() {
+        let v = parse(r#"{"a":[1,2.5,true,null,"s\n"],"b":{"k":-7},"z":"🦀"}"#).unwrap();
+        let mut w = JsonWriter::new();
+        w.begin_object();
+        w.key("a");
+        w.begin_array();
+        w.number_f64(1.0);
+        w.number_f64(2.5);
+        w.boolean(true);
+        w.null();
+        w.string("s\n");
+        w.end_array();
+        w.key("b");
+        w.begin_object();
+        w.key("k");
+        w.number_f64(-7.0);
+        w.end_object();
+        w.key("z");
+        w.string("🦀");
+        w.end_object();
+        assert_eq!(w.as_str(), to_string(&v));
+    }
+
+    #[test]
+    fn writer_reuse_and_empty_containers() {
+        let mut w = JsonWriter::with_capacity(64);
+        w.begin_array();
+        w.end_array();
+        assert_eq!(w.as_str(), "[]");
+        w.clear();
+        w.begin_object();
+        w.key("u");
+        w.number_u64(u64::MAX);
+        w.key("e");
+        w.begin_object();
+        w.end_object();
+        w.end_object();
+        assert_eq!(w.as_str(), r#"{"u":18446744073709551615,"e":{}}"#);
     }
 }

@@ -40,6 +40,13 @@
 //! println!("test MSE = {:.4}", out.test_metrics.mse);
 //! ```
 
+/// With `--features bench-alloc`, route every heap allocation through the
+/// counting wrapper so serve-bench can report allocs/request for the
+/// streaming codec (see [`util::alloc_count`]).
+#[cfg(feature = "bench-alloc")]
+#[global_allocator]
+static ALLOC_COUNTER: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
+
 pub mod bench_harness;
 pub mod cli;
 pub mod combine;

@@ -94,6 +94,75 @@ struct Shared {
     shutdown: AtomicBool,
 }
 
+/// Incremental [`TokenArena`] assembly for the streaming request codec:
+/// the protocol layer pushes token ids straight off the wire (no
+/// per-document `Vec<Vec<u32>>` staging), and the buffers recycle across
+/// requests via [`ArenaBuilder::reclaim`], so a warmed keep-alive
+/// connection builds its request arena with zero heap allocations.
+#[derive(Default)]
+pub struct ArenaBuilder {
+    tokens: Vec<u32>,
+    /// CSR offsets; maintained as `[0, end_0, end_1, ...]`.
+    offsets: Vec<u32>,
+}
+
+impl ArenaBuilder {
+    pub fn new() -> ArenaBuilder {
+        ArenaBuilder { tokens: Vec::new(), offsets: vec![0] }
+    }
+
+    /// Drop any partially-assembled request, keeping buffer capacity.
+    pub fn clear(&mut self) {
+        self.tokens.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+    }
+
+    #[inline]
+    pub fn push_token(&mut self, t: u32) {
+        self.tokens.push(t);
+    }
+
+    /// Close the current document. Errors only if the arena would exceed
+    /// u32::MAX tokens (unreachable under the HTTP layer's 64 MiB body
+    /// cap, but the offsets must never silently wrap).
+    pub fn end_doc(&mut self) -> anyhow::Result<()> {
+        let end = u32::try_from(self.tokens.len())
+            .map_err(|_| anyhow::anyhow!("request arena exceeds u32::MAX tokens"))?;
+        self.offsets.push(end);
+        Ok(())
+    }
+
+    /// Completed documents so far.
+    pub fn num_docs(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Tokens pushed since the last [`ArenaBuilder::end_doc`].
+    pub fn cur_doc_len(&self) -> usize {
+        self.tokens.len() - *self.offsets.last().unwrap() as usize
+    }
+
+    /// Move the assembled documents out as a [`TokenArena`], leaving the
+    /// builder empty (and without its buffers — pair with `reclaim`).
+    pub fn finish(&mut self) -> TokenArena {
+        let arena = TokenArena {
+            tokens: std::mem::take(&mut self.tokens),
+            offsets: std::mem::take(&mut self.offsets),
+        };
+        self.offsets.push(0);
+        arena
+    }
+
+    /// Take an arena's buffers back for the next request (best-effort:
+    /// callers skip this when other `Arc` holders still exist).
+    pub fn reclaim(&mut self, arena: TokenArena) {
+        self.tokens = arena.tokens;
+        self.offsets = arena.offsets;
+        self.clear();
+    }
+}
+
 /// The worker pool + queue handle. Dropping it drains and joins cleanly.
 pub struct Batcher {
     shared: Arc<Shared>,
@@ -129,11 +198,24 @@ impl Batcher {
     /// is flattened into one shared [`TokenArena`] up front — per-document
     /// work items borrow it through an `Arc` instead of owning a `Vec`.
     pub fn submit(&self, docs: &[Vec<u32>], seed: u64) -> Vec<anyhow::Result<DocOut>> {
-        let n = docs.len();
+        self.submit_streamed(Arc::new(TokenArena::from_docs(docs)), seed)
+    }
+
+    /// [`Batcher::submit`] for a pre-assembled arena — the streaming codec
+    /// path: `protocol::parse_predict_streamed` fills an [`ArenaBuilder`]
+    /// straight from the wire and hands the result here without ever
+    /// staging per-document `Vec`s. The caller keeps (a clone of) the
+    /// `Arc` and can attempt [`Arc::try_unwrap`] afterwards to recycle the
+    /// buffers through [`ArenaBuilder::reclaim`].
+    pub fn submit_streamed(
+        &self,
+        arena: Arc<TokenArena>,
+        seed: u64,
+    ) -> Vec<anyhow::Result<DocOut>> {
+        let n = arena.num_docs();
         if n == 0 {
             return Vec::new();
         }
-        let arena = Arc::new(TokenArena::from_docs(docs));
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
@@ -434,5 +516,57 @@ mod tests {
         drop(b);
         std::fs::remove_file(p).ok();
         std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn arena_builder_assembles_and_recycles() {
+        let mut b = ArenaBuilder::new();
+        for &t in &[1u32, 2, 2] {
+            b.push_token(t);
+        }
+        assert_eq!(b.cur_doc_len(), 3);
+        b.end_doc().unwrap();
+        b.push_token(7);
+        b.end_doc().unwrap();
+        assert_eq!(b.num_docs(), 2);
+        let arena = b.finish();
+        assert_eq!(arena, TokenArena::from_docs(&[vec![1, 2, 2], vec![7]]));
+        assert_eq!(b.num_docs(), 0);
+        // Reclaimed buffers come back cleared but with capacity.
+        let cap = arena.tokens.capacity();
+        b.reclaim(arena);
+        assert_eq!(b.num_docs(), 0);
+        assert_eq!(b.cur_doc_len(), 0);
+        b.push_token(9);
+        b.end_doc().unwrap();
+        let again = b.finish();
+        assert_eq!(again.doc(0), &[9]);
+        assert!(again.tokens.capacity() >= cap.min(1));
+    }
+
+    #[test]
+    fn submit_streamed_matches_submit() {
+        let (b, _reg, _stats, p) = start("streamed", 2, 4, 0);
+        let d = docs(5, 7);
+        let via_vecs: Vec<f64> =
+            b.submit(&d, 11).into_iter().map(|r| r.unwrap().yhat).collect();
+        let mut builder = ArenaBuilder::new();
+        for row in &d {
+            for &t in row {
+                builder.push_token(t);
+            }
+            builder.end_doc().unwrap();
+        }
+        let arena = Arc::new(builder.finish());
+        let via_arena: Vec<f64> = b
+            .submit_streamed(Arc::clone(&arena), 11)
+            .into_iter()
+            .map(|r| r.unwrap().yhat)
+            .collect();
+        assert_eq!(via_vecs, via_arena, "codec path must not change predictions");
+        // Zero-doc arenas resolve immediately.
+        assert!(b.submit_streamed(Arc::new(TokenArena::from_docs(&[])), 1).is_empty());
+        drop(b);
+        std::fs::remove_file(p).ok();
     }
 }

@@ -70,6 +70,58 @@ pub struct CellResult {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Steady-state heap allocations per request in the codec path
+    /// (parse into arena + render response), measured by the counting
+    /// allocator; `-1` when built without `--features bench-alloc`.
+    pub allocs_per_request: f64,
+    /// Bytes allocated per request in the same loop; `-1` when
+    /// uninstrumented.
+    pub bytes_per_request: f64,
+}
+
+/// Measure steady-state codec allocations for one request body: warmed
+/// parse-into-arena + response render, no server or batcher threads in
+/// the picture (counters are process-global, so this runs before the
+/// first cell boots). The response render uses a synthetic yhat of the
+/// right length; its cost is identical to the served one.
+#[cfg(feature = "bench-alloc")]
+fn codec_allocs_per_request(body: &str, iters: usize) -> (f64, f64) {
+    use crate::config::json::JsonWriter;
+    use crate::serve::batcher::ArenaBuilder;
+    use crate::serve::protocol;
+    use crate::util::alloc_count;
+
+    let bytes = body.as_bytes();
+    let mut builder = ArenaBuilder::new();
+    let mut w = JsonWriter::with_capacity(1024);
+    let mut yhat: Vec<f64> = Vec::new();
+    let mut run_once = |builder: &mut ArenaBuilder, w: &mut JsonWriter, yhat: &mut Vec<f64>| {
+        let seed = protocol::parse_predict_streamed(bytes, builder)
+            .expect("bench body parses")
+            .unwrap_or(0);
+        let arena = builder.finish();
+        yhat.clear();
+        for d in 0..arena.num_docs() {
+            yhat.push(arena.doc(d).len() as f64 * 0.25);
+        }
+        protocol::predict_response_into(w, yhat, seed, 0);
+        builder.reclaim(arena);
+    };
+    // Warmup grows every reusable buffer to its steady-state capacity.
+    for _ in 0..8 {
+        run_once(&mut builder, &mut w, &mut yhat);
+    }
+    let before = alloc_count::snapshot();
+    for _ in 0..iters {
+        run_once(&mut builder, &mut w, &mut yhat);
+    }
+    let (da, db) = alloc_count::delta(before);
+    (da as f64 / iters as f64, db as f64 / iters as f64)
+}
+
+#[cfg(not(feature = "bench-alloc"))]
+fn codec_allocs_per_request(_body: &str, _iters: usize) -> (f64, f64) {
+    (-1.0, -1.0)
 }
 
 fn gen_docs(rng: &mut Pcg64, n: usize, len: usize, vocab: usize) -> Vec<Vec<u32>> {
@@ -153,21 +205,24 @@ fn run_cell(
         p50_ms: quantile(&lats, 0.50) * 1e3,
         p95_ms: quantile(&lats, 0.95) * 1e3,
         p99_ms: quantile(&lats, 0.99) * 1e3,
+        // Filled in by run_bench from the per-batch codec measurement.
+        allocs_per_request: -1.0,
+        bytes_per_request: -1.0,
     })
 }
 
 fn render_table(results: &[CellResult]) -> String {
     let mut s = String::from("== bench: serve (loopback) ==\n");
     s.push_str(&format!(
-        "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12} {:>9} {:>9} {:>9}\n",
+        "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12} {:>9} {:>9} {:>9} {:>11} {:>11}\n",
         "kernel", "workers", "batch", "requests", "docs", "docs/s", "p50(ms)", "p95(ms)",
-        "p99(ms)"
+        "p99(ms)", "allocs/req", "bytes/req"
     ));
     for r in results {
         s.push_str(&format!(
-            "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12.1} {:>9.2} {:>9.2} {:>9.2}\n",
+            "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2} {:>11.0}\n",
             r.kernel, r.workers, r.batch, r.requests, r.docs, r.docs_per_sec, r.p50_ms,
-            r.p95_ms, r.p99_ms
+            r.p95_ms, r.p99_ms, r.allocs_per_request, r.bytes_per_request
         ));
     }
     s
@@ -188,6 +243,8 @@ fn results_json(opts: &BenchOptions, t: usize, w: usize, results: &[CellResult])
                 ("p50_ms", Value::Number(r.p50_ms)),
                 ("p95_ms", Value::Number(r.p95_ms)),
                 ("p99_ms", Value::Number(r.p99_ms)),
+                ("allocs_per_request", Value::Number(r.allocs_per_request)),
+                ("bytes_per_request", Value::Number(r.bytes_per_request)),
             ])
         })
         .collect();
@@ -202,6 +259,7 @@ fn results_json(opts: &BenchOptions, t: usize, w: usize, results: &[CellResult])
         ("requests_per_client", Value::Number(opts.requests_per_client as f64)),
         ("doc_len", Value::Number(opts.doc_len as f64)),
         ("seed", Value::Number(opts.seed as f64)),
+        ("alloc_instrumented", Value::Bool(cfg!(feature = "bench-alloc"))),
         ("results", Value::Array(cells)),
     ])
 }
@@ -220,11 +278,27 @@ pub fn run_bench(
     let (t, w) = (model.t, model.w);
     drop(model);
     anyhow::ensure!(!opts.kernel_list.is_empty(), "empty kernel sweep");
+    // Codec allocation profile per batch size, measured while the process
+    // is still quiet (the counting allocator's totals are process-global,
+    // so this must run before the first cell's server threads spin up).
+    let codec_allocs: Vec<(usize, (f64, f64))> = opts
+        .batch_list
+        .iter()
+        .map(|&batch| {
+            let mut rng = Pcg64::seed_from_u64(opts.seed ^ batch as u64);
+            let docs = gen_docs(&mut rng, batch, opts.doc_len, w);
+            (batch, codec_allocs_per_request(&docs_body(&docs, opts.seed), 64))
+        })
+        .collect();
     let mut results = Vec::new();
     for &kernel in &opts.kernel_list {
         for &workers in &opts.workers_list {
             for &batch in &opts.batch_list {
-                let cell = run_cell(cfg_base, opts, w, kernel, workers, batch)?;
+                let mut cell = run_cell(cfg_base, opts, w, kernel, workers, batch)?;
+                if let Some(&(_, (a, b))) = codec_allocs.iter().find(|(x, _)| *x == batch) {
+                    cell.allocs_per_request = a;
+                    cell.bytes_per_request = b;
+                }
                 log::info!(
                     "serve-bench kernel={} workers={} batch={}: {:.1} docs/s p95={:.2}ms",
                     cell.kernel, cell.workers, cell.batch, cell.docs_per_sec, cell.p95_ms
@@ -285,6 +359,8 @@ mod tests {
             p50_ms: 1.0,
             p95_ms: 2.0,
             p99_ms: 3.0,
+            allocs_per_request: 0.0,
+            bytes_per_request: 0.0,
         };
         let table = render_table(&[cell.clone()]);
         assert!(table.contains("docs/s"));
@@ -307,5 +383,34 @@ mod tests {
                 .as_usize(),
             Some(80)
         );
+        // The CI serve-smoke job greps for these; keep them present even
+        // when the build is uninstrumented.
+        assert_eq!(
+            parsed.get("alloc_instrumented").unwrap().as_bool(),
+            Some(cfg!(feature = "bench-alloc"))
+        );
+        assert_eq!(
+            parsed.get("results").unwrap().as_array().unwrap()[0]
+                .get("allocs_per_request")
+                .unwrap()
+                .as_f64(),
+            Some(0.0)
+        );
+        assert!(
+            parsed.get("results").unwrap().as_array().unwrap()[0]
+                .get("bytes_per_request")
+                .is_some()
+        );
+    }
+
+    #[cfg(feature = "bench-alloc")]
+    #[test]
+    fn codec_measurement_runs_and_is_finite() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let docs = gen_docs(&mut rng, 4, 16, 50);
+        let body = docs_body(&docs, 9);
+        let (allocs, bytes) = codec_allocs_per_request(&body, 16);
+        assert!(allocs.is_finite() && allocs >= 0.0, "allocs/req = {allocs}");
+        assert!(bytes.is_finite() && bytes >= 0.0, "bytes/req = {bytes}");
     }
 }

@@ -7,6 +7,12 @@
 //! and the integration tests. Chunked transfer encoding, pipelining and
 //! TLS are intentionally out of scope — the server sits behind loopback
 //! or an internal load balancer.
+//!
+//! The server side frames requests into a per-connection
+//! [`RequestScratch`]: the raw head accumulates in one reused buffer with
+//! method/path/header *spans* into it (no per-line or per-header `String`s)
+//! and the body lands in a second reused buffer, so a warmed keep-alive
+//! connection parses requests without heap allocation.
 
 use anyhow::Context;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -18,7 +24,11 @@ pub const MAX_HEAD_BYTES: usize = 64 * 1024;
 /// 64 MiB is far beyond any sane batch.
 pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
 
-/// One parsed HTTP request.
+/// Byte range into [`RequestScratch::head`].
+type Span = (usize, usize);
+
+/// One parsed HTTP request with owned fields (cold paths and tests; the
+/// connection loop uses [`RequestScratch`] + [`read_request_into`]).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub method: String,
@@ -43,28 +53,105 @@ impl Request {
     }
 }
 
-/// Read one `\n`-terminated line, enforcing `limit` *before* buffering —
-/// unlike `read_line`, a multi-gigabyte line errors out instead of being
-/// accumulated into memory first. `Ok(None)` = clean EOF before any byte.
-fn read_line_limited<R: BufRead>(r: &mut R, limit: usize) -> anyhow::Result<Option<String>> {
-    let mut buf: Vec<u8> = Vec::new();
+/// Per-connection request framing buffers, reused across keep-alive
+/// requests: the head is one flat byte buffer with spans pointing at the
+/// method, path and (lower-cased in place) header names/values; the body
+/// is a second reusable buffer.
+#[derive(Default)]
+pub struct RequestScratch {
+    head: Vec<u8>,
+    headers: Vec<(Span, Span)>,
+    method: Span,
+    path: Span,
+    body: Vec<u8>,
+}
+
+impl RequestScratch {
+    pub fn new() -> RequestScratch {
+        RequestScratch::default()
+    }
+
+    fn str_at(&self, sp: Span) -> &str {
+        // Every span lies inside head bytes that were UTF-8 validated at
+        // read time, trimmed/split only at ASCII boundaries.
+        std::str::from_utf8(&self.head[sp.0..sp.1]).unwrap_or("")
+    }
+
+    pub fn method(&self) -> &str {
+        self.str_at(self.method)
+    }
+
+    pub fn path(&self) -> &str {
+        self.str_at(self.path)
+    }
+
+    /// Look up a header by lower-cased name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| &self.head[k.0..k.1] == name.as_bytes())
+            .map(|&(_, v)| self.str_at(v))
+    }
+
+    /// (name, value) pairs in arrival order, names lower-cased.
+    pub fn headers(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.headers.iter().map(|&(k, v)| (self.str_at(k), self.str_at(v)))
+    }
+
+    pub fn wants_close(&self) -> bool {
+        self.header("connection").map(|v| v.eq_ignore_ascii_case("close")).unwrap_or(false)
+    }
+
+    pub fn body(&self) -> &[u8] {
+        &self.body
+    }
+
+    pub fn body_str(&self) -> anyhow::Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not valid utf-8")
+    }
+
+    fn reset(&mut self) {
+        self.head.clear();
+        self.headers.clear();
+        self.method = (0, 0);
+        self.path = (0, 0);
+        self.body.clear();
+    }
+}
+
+/// Append one `\n`-terminated line to `buf`, enforcing `limit` on the
+/// line's length *before* buffering — a multi-gigabyte line errors out
+/// instead of being accumulated into memory first. Returns the new line's
+/// span, or `None` on clean EOF before any byte.
+fn read_line_into<R: BufRead>(
+    r: &mut R,
+    limit: usize,
+    buf: &mut Vec<u8>,
+) -> anyhow::Result<Option<Span>> {
+    let start = buf.len();
     loop {
         let used = {
             let available = r.fill_buf()?;
             if available.is_empty() {
-                if buf.is_empty() {
+                if buf.len() == start {
                     return Ok(None);
                 }
                 anyhow::bail!("connection closed mid-line");
             }
             match available.iter().position(|&b| b == b'\n') {
                 Some(pos) => {
-                    anyhow::ensure!(buf.len() + pos + 1 <= limit, "request head too large");
+                    anyhow::ensure!(
+                        buf.len() - start + pos + 1 <= limit,
+                        "request head too large"
+                    );
                     buf.extend_from_slice(&available[..=pos]);
                     pos + 1
                 }
                 None => {
-                    anyhow::ensure!(buf.len() + available.len() <= limit, "request head too large");
+                    anyhow::ensure!(
+                        buf.len() - start + available.len() <= limit,
+                        "request head too large"
+                    );
                     buf.extend_from_slice(available);
                     available.len()
                 }
@@ -72,52 +159,107 @@ fn read_line_limited<R: BufRead>(r: &mut R, limit: usize) -> anyhow::Result<Opti
         };
         r.consume(used);
         if buf.last() == Some(&b'\n') {
-            let s = String::from_utf8(buf).context("request head is not valid utf-8")?;
-            return Ok(Some(s));
+            return Ok(Some((start, buf.len())));
         }
     }
 }
 
-/// Read one request off the stream. `Ok(None)` means the peer closed the
-/// connection cleanly between requests; timeouts surface as `Err` carrying
-/// an [`std::io::Error`] (see [`is_timeout_io`]).
-pub fn read_request<R: BufRead>(r: &mut R) -> anyhow::Result<Option<Request>> {
-    let line = match read_line_limited(r, MAX_HEAD_BYTES)? {
-        None => return Ok(None),
-        Some(l) => l,
-    };
-    let mut head_bytes = line.len();
-    let mut parts = line.split_whitespace();
-    let method = parts.next().context("empty request line")?.to_string();
-    let path = parts.next().context("request line missing path")?.to_string();
-    let version = parts.next().unwrap_or("HTTP/1.1");
-    anyhow::ensure!(version.starts_with("HTTP/1."), "unsupported protocol '{version}'");
+fn trim_span(buf: &[u8], mut sp: Span) -> Span {
+    while sp.0 < sp.1 && buf[sp.0].is_ascii_whitespace() {
+        sp.0 += 1;
+    }
+    while sp.1 > sp.0 && buf[sp.1 - 1].is_ascii_whitespace() {
+        sp.1 -= 1;
+    }
+    sp
+}
 
-    let mut headers = Vec::new();
+/// Read one request off the stream into the connection's scratch buffers.
+/// `Ok(false)` means the peer closed cleanly between requests; timeouts
+/// surface as `Err` carrying an [`std::io::Error`] (see [`is_timeout_io`]).
+pub fn read_request_into<R: BufRead>(
+    r: &mut R,
+    s: &mut RequestScratch,
+) -> anyhow::Result<bool> {
+    s.reset();
+    let line = match read_line_into(r, MAX_HEAD_BYTES, &mut s.head)? {
+        None => return Ok(false),
+        Some(sp) => sp,
+    };
+    std::str::from_utf8(&s.head[line.0..line.1]).context("request head is not valid utf-8")?;
+    let mut head_bytes = line.1 - line.0;
+
+    // Request line: method SP path SP version, whitespace-tolerant.
+    let mut cursor = line;
+    let mut next_word = |buf: &[u8]| -> Span {
+        let mut a = cursor.0;
+        while a < cursor.1 && buf[a].is_ascii_whitespace() {
+            a += 1;
+        }
+        let mut b = a;
+        while b < cursor.1 && !buf[b].is_ascii_whitespace() {
+            b += 1;
+        }
+        cursor.0 = b;
+        (a, b)
+    };
+    let method = next_word(&s.head);
+    anyhow::ensure!(method.0 < method.1, "empty request line");
+    let path = next_word(&s.head);
+    anyhow::ensure!(path.0 < path.1, "request line missing path");
+    let version = next_word(&s.head);
+    anyhow::ensure!(
+        version.0 == version.1 || s.head[version.0..version.1].starts_with(b"HTTP/1."),
+        "unsupported protocol '{}'",
+        String::from_utf8_lossy(&s.head[version.0..version.1])
+    );
+    s.method = method;
+    s.path = path;
+
     loop {
-        let h = read_line_limited(r, MAX_HEAD_BYTES - head_bytes)?
+        let sp = read_line_into(r, MAX_HEAD_BYTES - head_bytes, &mut s.head)?
             .context("connection closed mid-headers")?;
-        head_bytes += h.len();
-        let h = h.trim_end();
-        if h.is_empty() {
+        head_bytes += sp.1 - sp.0;
+        std::str::from_utf8(&s.head[sp.0..sp.1])
+            .context("request head is not valid utf-8")?;
+        let t = trim_span(&s.head, sp);
+        if t.0 == t.1 {
             break;
         }
-        if let Some((k, v)) = h.split_once(':') {
-            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        if let Some(ci) = s.head[t.0..t.1].iter().position(|&b| b == b':') {
+            let name = trim_span(&s.head, (t.0, t.0 + ci));
+            let value = trim_span(&s.head, (t.0 + ci + 1, t.1));
+            s.head[name.0..name.1].make_ascii_lowercase();
+            s.headers.push((name, value));
         }
     }
 
-    let clen = headers
-        .iter()
-        .find(|(k, _)| k == "content-length")
-        .map(|(_, v)| v.parse::<usize>())
+    let clen = s
+        .header("content-length")
+        .map(|v| v.parse::<usize>())
         .transpose()
         .context("bad content-length header")?
         .unwrap_or(0);
     anyhow::ensure!(clen <= MAX_BODY_BYTES, "request body too large ({clen} bytes)");
-    let mut body = vec![0u8; clen];
-    r.read_exact(&mut body).context("reading request body")?;
-    Ok(Some(Request { method, path, headers, body }))
+    s.body.resize(clen, 0);
+    r.read_exact(&mut s.body).context("reading request body")?;
+    Ok(true)
+}
+
+/// Read one request off the stream with owned fields. `Ok(None)` means the
+/// peer closed cleanly between requests. Thin wrapper over
+/// [`read_request_into`] for cold paths and tests.
+pub fn read_request<R: BufRead>(r: &mut R) -> anyhow::Result<Option<Request>> {
+    let mut s = RequestScratch::new();
+    if !read_request_into(r, &mut s)? {
+        return Ok(None);
+    }
+    Ok(Some(Request {
+        method: s.method().to_string(),
+        path: s.path().to_string(),
+        headers: s.headers().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        body: std::mem::take(&mut s.body),
+    }))
 }
 
 /// Is this a read-timeout? The connection handler's idle peek treats
@@ -138,23 +280,39 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Write a JSON response.
-pub fn write_response<W: Write>(
+/// Write a JSON response, assembling the head in a reusable scratch buffer
+/// first: one allocation-free format pass, then two `write_all` calls.
+pub fn write_response_buffered<W: Write>(
     w: &mut W,
+    head: &mut Vec<u8>,
     status: u16,
-    body: &str,
+    body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    head.clear();
     write!(
-        w,
+        head,
         "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         status,
         reason(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" }
     )?;
-    w.write_all(body.as_bytes())?;
+    w.write_all(head)?;
+    w.write_all(body)?;
     w.flush()
+}
+
+/// Write a JSON response (one-shot convenience; the connection loop uses
+/// [`write_response_buffered`]).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = Vec::with_capacity(128);
+    write_response_buffered(w, &mut head, status, body.as_bytes(), keep_alive)
 }
 
 /// Tiny keep-alive HTTP client (serve-bench load generator + tests).
@@ -261,6 +419,28 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuses_across_keep_alive_requests() {
+        let raw = "POST /predict HTTP/1.1\r\nHost: x\r\nX-Mixed-CASE: Keep\r\n\
+                   Content-Length: 5\r\n\r\nhello\
+                   GET /stats HTTP/1.1\r\n\r\n";
+        let mut r = Cursor::new(raw.as_bytes().to_vec());
+        let mut s = RequestScratch::new();
+        assert!(read_request_into(&mut r, &mut s).unwrap());
+        assert_eq!(s.method(), "POST");
+        assert_eq!(s.path(), "/predict");
+        assert_eq!(s.header("x-mixed-case"), Some("Keep"));
+        assert_eq!(s.body(), b"hello");
+        let head_cap = { s.head.capacity() };
+        assert!(read_request_into(&mut r, &mut s).unwrap());
+        assert_eq!(s.method(), "GET");
+        assert_eq!(s.path(), "/stats");
+        assert_eq!(s.header("x-mixed-case"), None, "stale headers must not leak");
+        assert!(s.body().is_empty());
+        assert!(s.head.capacity() >= head_cap.min(1), "buffers must be retained");
+        assert!(!read_request_into(&mut r, &mut s).unwrap(), "clean EOF");
+    }
+
+    #[test]
     fn malformed_requests_rejected() {
         assert!(parse("GARBAGE\r\n\r\n").is_err()); // no path
         assert!(parse("GET / SPDY/3\r\n\r\n").is_err()); // bad protocol
@@ -296,6 +476,13 @@ mod tests {
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
         assert!(s.contains("Connection: close\r\n"));
+        // The buffered form emits identical bytes and reuses its head.
+        let mut out = Vec::new();
+        let mut head = Vec::new();
+        write_response_buffered(&mut out, &mut head, 200, b"{\"ok\":true}", true).unwrap();
+        let mut out2 = Vec::new();
+        write_response(&mut out2, 200, "{\"ok\":true}", true).unwrap();
+        assert_eq!(out, out2);
     }
 
     #[test]

@@ -12,8 +12,27 @@
 //!
 //! Responses are JSON objects; errors are `{"error": "..."}` with a 4xx/5xx
 //! status.
+//!
+//! Two codecs cover each shape:
+//!
+//! * **Streaming** (`*_streamed`, `*_into`) — the serve hot path. Bodies
+//!   lex event-by-event: `/predict` token ids land directly in the
+//!   caller's [`ArenaBuilder`] (the batcher's flat CSR arena, recycled
+//!   across requests), limits are enforced *while* scanning (oversized
+//!   requests are rejected before their tokens are buffered), and
+//!   responses render through a reusable [`JsonWriter`]. With warmed
+//!   buffers this path performs zero heap allocations per request.
+//!   Integer seeds lex exactly (full u64 range — no f64 round-trip).
+//! * **Tree** (`parse_predict`, `predict_response`, ...) — the original
+//!   `Value`-based implementations, kept as the cold-path/reference codec.
+//!   The differential suite (`tests/json_streaming.rs`) pins the two to
+//!   identical accept/reject decisions and values, with one documented
+//!   asymmetry: integer literals in `(2^53, u64::MAX]` parse exactly when
+//!   streamed but are *rejected* by the tree parser (which stores f64 and
+//!   refuses to round).
 
-use crate::config::json::{self, Value};
+use crate::config::json::{self, Event, JsonWriter, Lexer, Value};
+use crate::serve::batcher::ArenaBuilder;
 use anyhow::Context;
 
 /// Ceiling on documents per request: keeps one request from monopolizing
@@ -36,6 +55,267 @@ pub struct TextRequest {
     pub seed: Option<u64>,
 }
 
+fn invalid_json(e: json::ParseError) -> anyhow::Error {
+    anyhow::Error::new(e).context("invalid json")
+}
+
+// ---- streaming codec (hot path) ----------------------------------------
+
+/// Streaming `POST /predict` parser: token ids go straight from the wire
+/// into `builder` (cleared first; on error it may hold a partial request —
+/// `clear()` before reuse). Returns the optional seed.
+pub fn parse_predict_streamed(
+    body: &[u8],
+    builder: &mut ArenaBuilder,
+) -> anyhow::Result<Option<u64>> {
+    builder.clear();
+    let mut lex = Lexer::new(body);
+    match lex.next().map_err(invalid_json)? {
+        Event::ObjectStart => {}
+        _ => anyhow::bail!("body must be an object with a 'docs' array"),
+    }
+    let mut seed = None;
+    let mut saw_docs = false;
+    loop {
+        enum Field {
+            Docs,
+            Seed,
+            Other,
+        }
+        let field = match lex.next().map_err(invalid_json)? {
+            Event::ObjectEnd => break,
+            Event::Key("docs") => Field::Docs,
+            Event::Key("seed") => Field::Seed,
+            Event::Key(_) => Field::Other,
+            _ => anyhow::bail!("invalid json"),
+        };
+        match field {
+            Field::Docs => {
+                saw_docs = true;
+                // Duplicate keys: last one wins, like the tree's BTreeMap.
+                builder.clear();
+                parse_docs_into(&mut lex, builder)?;
+            }
+            Field::Seed => seed = Some(parse_seed_streamed(&mut lex)?),
+            Field::Other => lex.skip_value().map_err(invalid_json)?,
+        }
+    }
+    match lex.next().map_err(invalid_json)? {
+        Event::Eof => {}
+        _ => anyhow::bail!("invalid json"),
+    }
+    anyhow::ensure!(saw_docs, "body must be an object with a 'docs' array");
+    anyhow::ensure!(builder.num_docs() > 0, "'docs' must not be empty");
+    Ok(seed)
+}
+
+fn parse_docs_into(lex: &mut Lexer<'_>, builder: &mut ArenaBuilder) -> anyhow::Result<()> {
+    match lex.next().map_err(invalid_json)? {
+        Event::ArrayStart => {}
+        _ => anyhow::bail!("body must be an object with a 'docs' array"),
+    }
+    loop {
+        match lex.next().map_err(invalid_json)? {
+            Event::ArrayEnd => return Ok(()),
+            Event::ArrayStart => {}
+            _ => anyhow::bail!("doc {} must be a token array", builder.num_docs()),
+        }
+        let i = builder.num_docs();
+        // Enforced mid-scan: row 4097's opening bracket is enough to
+        // reject — its tokens are never buffered.
+        anyhow::ensure!(
+            i < MAX_DOCS_PER_REQUEST,
+            "'docs' has more than {MAX_DOCS_PER_REQUEST} rows; max {MAX_DOCS_PER_REQUEST} \
+             per request"
+        );
+        loop {
+            let n = match lex.next().map_err(invalid_json)? {
+                Event::ArrayEnd => break,
+                Event::Number(n) => n,
+                _ => anyhow::bail!("doc {i} has a non-integer or oversized token id"),
+            };
+            let t = n
+                .as_u32_exact()
+                .with_context(|| format!("doc {i} has a non-integer or oversized token id"))?;
+            anyhow::ensure!(
+                builder.cur_doc_len() < MAX_TOKENS_PER_DOC,
+                "doc {i} has more than {MAX_TOKENS_PER_DOC} tokens"
+            );
+            builder.push_token(t);
+        }
+        anyhow::ensure!(builder.cur_doc_len() > 0, "doc {i} is empty");
+        builder.end_doc()?;
+    }
+}
+
+/// Streaming seed value: exact u64 (integral floats like `1e3` accepted,
+/// matching the tree path; negatives and fractions rejected).
+fn parse_seed_streamed(lex: &mut Lexer<'_>) -> anyhow::Result<u64> {
+    let n = match lex.next().map_err(invalid_json)? {
+        Event::Number(n) => n,
+        _ => anyhow::bail!("'seed' must be an integer"),
+    };
+    if let Some(u) = n.as_u64_exact() {
+        return Ok(u);
+    }
+    let f = n.as_f64();
+    anyhow::ensure!(f >= 0.0 || f.fract() != 0.0, "'seed' must be non-negative");
+    anyhow::bail!("'seed' must be an integer")
+}
+
+/// Streaming `POST /predict/text` parser: texts accumulate into the
+/// caller's reused `Vec` (the `String`s themselves are the only copies).
+pub fn parse_text_streamed(
+    body: &[u8],
+    texts: &mut Vec<String>,
+) -> anyhow::Result<Option<u64>> {
+    texts.clear();
+    let mut lex = Lexer::new(body);
+    match lex.next().map_err(invalid_json)? {
+        Event::ObjectStart => {}
+        _ => anyhow::bail!("body must be an object with a 'texts' array"),
+    }
+    let mut seed = None;
+    let mut saw_texts = false;
+    loop {
+        enum Field {
+            Texts,
+            Seed,
+            Other,
+        }
+        let field = match lex.next().map_err(invalid_json)? {
+            Event::ObjectEnd => break,
+            Event::Key("texts") => Field::Texts,
+            Event::Key("seed") => Field::Seed,
+            Event::Key(_) => Field::Other,
+            _ => anyhow::bail!("invalid json"),
+        };
+        match field {
+            Field::Texts => {
+                saw_texts = true;
+                texts.clear();
+                match lex.next().map_err(invalid_json)? {
+                    Event::ArrayStart => {}
+                    _ => anyhow::bail!("body must be an object with a 'texts' array"),
+                }
+                loop {
+                    match lex.next().map_err(invalid_json)? {
+                        Event::ArrayEnd => break,
+                        Event::String(s) => {
+                            anyhow::ensure!(
+                                texts.len() < MAX_DOCS_PER_REQUEST,
+                                "'texts' has more than {MAX_DOCS_PER_REQUEST} rows; \
+                                 max {MAX_DOCS_PER_REQUEST} per request"
+                            );
+                            texts.push(s.to_string());
+                        }
+                        _ => anyhow::bail!("text {} must be a string", texts.len()),
+                    }
+                }
+            }
+            Field::Seed => seed = Some(parse_seed_streamed(&mut lex)?),
+            Field::Other => lex.skip_value().map_err(invalid_json)?,
+        }
+    }
+    match lex.next().map_err(invalid_json)? {
+        Event::Eof => {}
+        _ => anyhow::bail!("invalid json"),
+    }
+    anyhow::ensure!(saw_texts, "body must be an object with a 'texts' array");
+    anyhow::ensure!(!texts.is_empty(), "'texts' must not be empty");
+    Ok(seed)
+}
+
+/// Streaming `POST /reload` parser; `None` means "reload the current
+/// path". Matches the tree semantics: empty body and non-object (but
+/// valid) JSON both mean `None`.
+pub fn parse_reload_streamed(body: &[u8]) -> anyhow::Result<Option<String>> {
+    if body.iter().all(|b| b.is_ascii_whitespace()) {
+        return Ok(None);
+    }
+    let mut lex = Lexer::new(body);
+    let mut path: Option<String> = None;
+    match lex.next().map_err(invalid_json)? {
+        Event::ObjectStart => loop {
+            enum Field {
+                Path,
+                Other,
+            }
+            let field = match lex.next().map_err(invalid_json)? {
+                Event::ObjectEnd => break,
+                Event::Key("path") => Field::Path,
+                Event::Key(_) => Field::Other,
+                _ => anyhow::bail!("invalid json"),
+            };
+            match field {
+                Field::Path => {
+                    path = Some(match lex.next().map_err(invalid_json)? {
+                        Event::String(s) => s.to_string(),
+                        _ => anyhow::bail!("'path' must be a string"),
+                    });
+                }
+                Field::Other => lex.skip_value().map_err(invalid_json)?,
+            }
+        },
+        // Non-object document: no path, but the body must still be valid
+        // JSON end to end (the tree path parses it fully).
+        Event::ArrayStart => {
+            let mut depth = 1usize;
+            while depth > 0 {
+                match lex.next().map_err(invalid_json)? {
+                    Event::ObjectStart | Event::ArrayStart => depth += 1,
+                    Event::ObjectEnd | Event::ArrayEnd => depth -= 1,
+                    Event::Eof => anyhow::bail!("invalid json"),
+                    _ => {}
+                }
+            }
+        }
+        _ => {}
+    }
+    match lex.next().map_err(invalid_json)? {
+        Event::Eof => Ok(path),
+        _ => anyhow::bail!("invalid json"),
+    }
+}
+
+/// Render a prediction response into a reusable writer. Byte-identical to
+/// [`predict_response`]: keys in sorted order (the tree path serializes a
+/// `BTreeMap`) and the same integer/float formatting.
+pub fn predict_response_into(
+    w: &mut JsonWriter,
+    yhat: &[f64],
+    model_version: u64,
+    cached: usize,
+) {
+    w.clear();
+    w.begin_object();
+    w.key("cached");
+    w.number_u64(cached as u64);
+    w.key("count");
+    w.number_u64(yhat.len() as u64);
+    w.key("model_version");
+    w.number_u64(model_version);
+    w.key("yhat");
+    w.begin_array();
+    for &y in yhat {
+        w.number_f64(y);
+    }
+    w.end_array();
+    w.end_object();
+}
+
+/// Render an error body into a reusable writer (byte-identical to
+/// [`error_response`]).
+pub fn error_response_into(w: &mut JsonWriter, msg: &str) {
+    w.clear();
+    w.begin_object();
+    w.key("error");
+    w.string(msg);
+    w.end_object();
+}
+
+// ---- tree codec (cold path / differential reference) --------------------
+
 fn parse_seed(v: &Value) -> anyhow::Result<Option<u64>> {
     match v.get("seed") {
         None => Ok(None),
@@ -47,7 +327,10 @@ fn parse_seed(v: &Value) -> anyhow::Result<Option<u64>> {
     }
 }
 
-/// Parse and validate a `POST /predict` body.
+/// Parse and validate a `POST /predict` body through the tree codec.
+/// Serving uses [`parse_predict_streamed`]; this stays as the reference
+/// implementation the differential suite checks the streaming path
+/// against (and rejects — never rounds — integer seeds above 2^53).
 pub fn parse_predict(body: &str) -> anyhow::Result<PredictRequest> {
     let v = json::parse(body).context("invalid json")?;
     let docs_v = v
@@ -80,7 +363,8 @@ pub fn parse_predict(body: &str) -> anyhow::Result<PredictRequest> {
     Ok(PredictRequest { docs, seed: parse_seed(&v)? })
 }
 
-/// Parse and validate a `POST /predict/text` body.
+/// Parse and validate a `POST /predict/text` body (tree codec; serving
+/// uses [`parse_text_streamed`]).
 pub fn parse_text(body: &str) -> anyhow::Result<TextRequest> {
     let v = json::parse(body).context("invalid json")?;
     let texts_v = v
@@ -103,7 +387,8 @@ pub fn parse_text(body: &str) -> anyhow::Result<TextRequest> {
 }
 
 /// Parse a `POST /reload` body; `None` means "reload the current path".
-/// An empty body is allowed and means the same as `{}`.
+/// An empty body is allowed and means the same as `{}` (tree codec;
+/// serving uses [`parse_reload_streamed`]).
 pub fn parse_reload(body: &str) -> anyhow::Result<Option<String>> {
     if body.trim().is_empty() {
         return Ok(None);
@@ -115,7 +400,8 @@ pub fn parse_reload(body: &str) -> anyhow::Result<Option<String>> {
     }
 }
 
-/// Render a prediction response.
+/// Render a prediction response (tree codec; serving renders through
+/// [`predict_response_into`], which this must stay byte-identical to).
 pub fn predict_response(yhat: &[f64], model_version: u64, cached: usize) -> String {
     let v = Value::object(vec![
         ("yhat", Value::from_f64_slice(yhat)),
@@ -185,5 +471,127 @@ mod tests {
         let e = error_response("boom \"quoted\"");
         let v = crate::config::json::parse(&e).unwrap();
         assert_eq!(v.get("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+
+    // ---- streaming codec ------------------------------------------------
+
+    fn streamed_docs(body: &str) -> anyhow::Result<(Vec<Vec<u32>>, Option<u64>)> {
+        let mut b = ArenaBuilder::new();
+        let seed = parse_predict_streamed(body.as_bytes(), &mut b)?;
+        let arena = b.finish();
+        let docs = (0..arena.num_docs()).map(|i| arena.doc(i).to_vec()).collect();
+        Ok((docs, seed))
+    }
+
+    #[test]
+    fn streamed_predict_matches_tree() {
+        for body in [
+            r#"{"docs": [[1, 2, 2], [7]], "seed": 9}"#,
+            r#"{"docs": [[0]]}"#,
+            r#"{"seed": 3, "docs": [[5, 5]], "extra": {"ignored": [1, {"x": null}]}}"#,
+            r#"{"docs": [[1]], "docs": [[2, 3]]}"#,
+            r#"{"docs": [[1e2, 4.0]], "seed": 1e3}"#,
+        ] {
+            let tree = parse_predict(body).unwrap();
+            let (docs, seed) = streamed_docs(body).unwrap();
+            assert_eq!(docs, tree.docs, "{body}");
+            assert_eq!(seed, tree.seed, "{body}");
+        }
+    }
+
+    #[test]
+    fn streamed_predict_rejects_bad_shapes() {
+        for body in [
+            "not json",
+            r#"{"docs": []}"#,
+            r#"{"docs": [[]]}"#,
+            r#"{"docs": [[1.5]]}"#,
+            r#"{"docs": [[-3]]}"#,
+            r#"{"docs": "x"}"#,
+            r#"{"docs": [[1]], "seed": -4}"#,
+            r#"{"docs": [[1]], "seed": 1.5}"#,
+            r#"{"docs": [[1]]} trailing"#,
+            r#"{"docs": [[4294967296]]}"#,
+            r#"[1, 2]"#,
+            r#"{}"#,
+        ] {
+            assert!(streamed_docs(body).is_err(), "{body}");
+            assert!(parse_predict(body).is_err(), "{body}");
+        }
+    }
+
+    #[test]
+    fn streamed_seed_keeps_full_u64_precision() {
+        // Satellite regression: seeds above 2^53 must not round. The
+        // streaming codec accepts them exactly; the tree codec rejects.
+        let max = r#"{"docs": [[1]], "seed": 18446744073709551615}"#;
+        let (_, seed) = streamed_docs(max).unwrap();
+        assert_eq!(seed, Some(u64::MAX));
+        assert!(parse_predict(max).is_err(), "tree must reject, not round");
+        let above53 = r#"{"docs": [[1]], "seed": 9007199254740993}"#;
+        let (_, seed) = streamed_docs(above53).unwrap();
+        assert_eq!(seed, Some(9007199254740993));
+        assert!(parse_predict(above53).is_err());
+        // At the boundary both agree.
+        let at53 = r#"{"docs": [[1]], "seed": 9007199254740992}"#;
+        assert_eq!(streamed_docs(at53).unwrap().1, Some(1u64 << 53));
+        assert_eq!(parse_predict(at53).unwrap().seed, Some(1u64 << 53));
+    }
+
+    #[test]
+    fn streamed_limits_enforced_mid_scan() {
+        // 4097 rows: rejected at row 4097's bracket, before its tokens.
+        let mut body = String::from(r#"{"docs": ["#);
+        for i in 0..(MAX_DOCS_PER_REQUEST + 1) {
+            if i > 0 {
+                body.push(',');
+            }
+            body.push_str("[1]");
+        }
+        body.push_str("]}");
+        let mut b = ArenaBuilder::new();
+        let e = parse_predict_streamed(body.as_bytes(), &mut b).unwrap_err();
+        assert!(e.to_string().contains("rows"), "{e}");
+        // ... and the tree agrees on reject.
+        assert!(parse_predict(&body).is_err());
+    }
+
+    #[test]
+    fn streamed_text_and_reload_match_tree() {
+        let body = r#"{"texts": ["strong growth", "weak outlook"], "seed": 2}"#;
+        let tree = parse_text(body).unwrap();
+        let mut texts = Vec::new();
+        let seed = parse_text_streamed(body.as_bytes(), &mut texts).unwrap();
+        assert_eq!(texts, tree.texts);
+        assert_eq!(seed, tree.seed);
+        for bad in [r#"{"texts": []}"#, r#"{"texts": [5]}"#, r#"{}"#, "nope"] {
+            assert!(parse_text_streamed(bad.as_bytes(), &mut texts).is_err(), "{bad}");
+            assert!(parse_text(bad).is_err(), "{bad}");
+        }
+        for (body, want) in [
+            ("", None),
+            ("{}", None),
+            (r#"{"path": "m.bin"}"#, Some("m.bin".to_string())),
+            (r#"[1, {"path": "x"}]"#, None),
+        ] {
+            assert_eq!(parse_reload_streamed(body.as_bytes()).unwrap(), want, "{body}");
+            assert_eq!(parse_reload(body).unwrap(), want, "{body}");
+        }
+        for bad in [r#"{"path": 5}"#, "][", r#"[1"#] {
+            assert!(parse_reload_streamed(bad.as_bytes()).is_err(), "{bad}");
+            assert!(parse_reload(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn writer_responses_match_tree_bytes() {
+        let mut w = JsonWriter::new();
+        predict_response_into(&mut w, &[0.5, -1.25, 3.0], 7, 2);
+        assert_eq!(w.as_str(), predict_response(&[0.5, -1.25, 3.0], 7, 2));
+        error_response_into(&mut w, "boom \"quoted\"\n");
+        assert_eq!(w.as_str(), error_response("boom \"quoted\"\n"));
+        // Reuse after clear stays identical.
+        predict_response_into(&mut w, &[1.0], 1, 0);
+        assert_eq!(w.as_str(), predict_response(&[1.0], 1, 0));
     }
 }

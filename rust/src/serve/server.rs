@@ -13,12 +13,19 @@
 //! Threading: one detached handler thread per connection (keep-alive), all
 //! prediction work funneled through the shared [`Batcher`] pool, so
 //! connection count does not multiply sampler threads.
+//!
+//! Allocation discipline (DESIGN.md §Serving, "Streaming codec"): each
+//! connection owns a [`ConnScratch`] — request-head/body buffers, a
+//! [`JsonWriter`], an [`ArenaBuilder`] and the yhat staging vector — so a
+//! warmed keep-alive connection parses `/predict` bodies straight into the
+//! arena and serializes responses without touching the heap.
 
+use crate::config::json::JsonWriter;
 use crate::config::schema::ExperimentConfig;
-use crate::config::json::{self, Value};
+use crate::data::corpus::TokenArena;
 use crate::data::tokenizer::{tokenize, TokenizerConfig};
-use crate::serve::batcher::{Batcher, BatcherConfig, DocOut, ServeStats};
-use crate::serve::http::{self, Request};
+use crate::serve::batcher::{ArenaBuilder, Batcher, BatcherConfig, ServeStats};
+use crate::serve::http::{self, RequestScratch};
 use crate::serve::protocol;
 use crate::serve::registry::Registry;
 use crate::util::pool::num_cpus;
@@ -39,6 +46,35 @@ struct State {
     default_seed: u64,
     workers: usize,
     tok_cfg: TokenizerConfig,
+}
+
+/// Per-connection reusable buffers. Everything the hot path writes into
+/// lives here and is recycled across keep-alive requests; only the cold
+/// paths (errors, `/stats`, `/predict/text`) allocate per request.
+struct ConnScratch {
+    /// Response body under construction (also reused for error bodies).
+    writer: JsonWriter,
+    /// Response head bytes (status line + headers).
+    head: Vec<u8>,
+    /// CSR staging area for `/predict` docs; recycled via
+    /// [`ArenaBuilder::reclaim`] when the batcher drops its handle in time.
+    builder: ArenaBuilder,
+    /// `/predict/text` rows.
+    texts: Vec<String>,
+    /// Per-request responses collected from the batcher before rendering.
+    yhat: Vec<f64>,
+}
+
+impl ConnScratch {
+    fn new() -> ConnScratch {
+        ConnScratch {
+            writer: JsonWriter::with_capacity(256),
+            head: Vec::with_capacity(128),
+            builder: ArenaBuilder::new(),
+            texts: Vec::new(),
+            yhat: Vec::new(),
+        }
+    }
 }
 
 /// A running server; dropping (or [`Server::stop`]) shuts the accept loop
@@ -165,14 +201,16 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
     };
     let mut writer = write_half;
     let mut reader = BufReader::new(stream);
+    let mut req = RequestScratch::new();
+    let mut out = ConnScratch::new();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
         // Idle wait happens *here*, on the buffered peek: a read timeout
         // between requests just re-polls the shutdown flag. Once the first
-        // byte of a request has arrived, a timeout inside read_request is
-        // a protocol error (we never resync a half-read stream).
+        // byte of a request has arrived, a timeout inside read_request_into
+        // is a protocol error (we never resync a half-read stream).
         {
             use std::io::BufRead;
             match reader.fill_buf() {
@@ -182,28 +220,34 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
                 Err(_) => return,
             }
         }
-        match http::read_request(&mut reader) {
-            Ok(None) => return, // peer closed
-            Ok(Some(req)) => {
+        match http::read_request_into(&mut reader, &mut req) {
+            Ok(false) => return, // peer closed
+            Ok(true) => {
                 state.stats.requests.fetch_add(1, Ordering::Relaxed);
                 let keep_alive = !req.wants_close();
-                let (status, body) = route(&state, &req);
+                let status = route(&state, &req, &mut out);
                 if status >= 400 {
                     state.stats.errors.fetch_add(1, Ordering::Relaxed);
                 }
-                if http::write_response(&mut writer, status, &body, keep_alive).is_err() {
-                    return;
-                }
-                if !keep_alive {
+                let write_ok = http::write_response_buffered(
+                    &mut writer,
+                    &mut out.head,
+                    status,
+                    out.writer.as_str().as_bytes(),
+                    keep_alive,
+                );
+                if write_ok.is_err() || !keep_alive {
                     return;
                 }
             }
             Err(e) => {
                 state.stats.errors.fetch_add(1, Ordering::Relaxed);
-                let _ = http::write_response(
+                protocol::error_response_into(&mut out.writer, &format!("{e:#}"));
+                let _ = http::write_response_buffered(
                     &mut writer,
+                    &mut out.head,
                     400,
-                    &protocol::error_response(&format!("{e:#}")),
+                    out.writer.as_str().as_bytes(),
                     false,
                 );
                 return;
@@ -212,21 +256,26 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
     }
 }
 
-fn route(state: &State, req: &Request) -> (u16, String) {
-    let res = match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => handle_healthz(state),
-        ("GET", "/stats") => handle_stats(state),
-        ("POST", "/predict") => handle_predict(state, req),
-        ("POST", "/predict/text") => handle_predict_text(state, req),
-        ("POST", "/reload") => handle_reload(state, req),
+/// Dispatch one parsed request. The response body is left in
+/// `out.writer`; the returned status selects the head line.
+fn route(state: &State, req: &RequestScratch, out: &mut ConnScratch) -> u16 {
+    let res = match (req.method(), req.path()) {
+        ("GET", "/healthz") => handle_healthz(state, &mut out.writer),
+        ("GET", "/stats") => handle_stats(state, &mut out.writer),
+        ("POST", "/predict") => handle_predict(state, req, out),
+        ("POST", "/predict/text") => handle_predict_text(state, req, out),
+        ("POST", "/reload") => handle_reload(state, req, &mut out.writer),
         ("GET", _) | ("POST", _) => {
-            return (404, protocol::error_response("no such endpoint"))
+            Err(HttpError { status: 404, msg: "no such endpoint".into() })
         }
-        _ => return (405, protocol::error_response("method not allowed")),
+        _ => Err(HttpError { status: 405, msg: "method not allowed".into() }),
     };
     match res {
-        Ok(body) => (200, body),
-        Err(e) => (e.status, protocol::error_response(&e.msg)),
+        Ok(()) => 200,
+        Err(e) => {
+            protocol::error_response_into(&mut out.writer, &e.msg);
+            e.status
+        }
     }
 }
 
@@ -244,62 +293,88 @@ fn server_error(e: impl std::fmt::Display) -> HttpError {
     HttpError { status: 500, msg: format!("{e}") }
 }
 
-fn handle_healthz(state: &State) -> Result<String, HttpError> {
-    let entry = state.registry.current();
-    let v = Value::object(vec![
-        ("status", Value::String("ok".into())),
-        ("model_version", Value::Number(entry.version as f64)),
-        ("topics", Value::Number(entry.model.t as f64)),
-        ("vocab", Value::Number(entry.model.w as f64)),
-        ("has_vocab_terms", Value::Bool(entry.vocab.is_some())),
-    ]);
-    Ok(json::to_string(&v))
+fn raced() -> HttpError {
+    HttpError { status: 503, msg: "model reloads raced this request; retry".into() }
 }
 
-fn handle_stats(state: &State) -> Result<String, HttpError> {
+// Response keys are emitted in sorted order on purpose: the tree codec
+// serialized `BTreeMap` objects, and the streamed writers must stay
+// byte-identical to it (pinned by protocol + integration tests).
+
+fn handle_healthz(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
+    let entry = state.registry.current();
+    w.clear();
+    w.begin_object();
+    w.key("has_vocab_terms");
+    w.boolean(entry.vocab.is_some());
+    w.key("model_version");
+    w.number_f64(entry.version as f64);
+    w.key("status");
+    w.string("ok");
+    w.key("topics");
+    w.number_f64(entry.model.t as f64);
+    w.key("vocab");
+    w.number_f64(entry.model.w as f64);
+    w.end_object();
+    Ok(())
+}
+
+fn handle_stats(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
     let s = &state.stats;
     let entry = state.registry.current();
     let batches = s.batches.load(Ordering::Relaxed);
     let docs = s.predict_docs.load(Ordering::Relaxed);
     let mean_batch =
         if batches > 0 { docs as f64 / batches as f64 } else { 0.0 };
-    let versions: Vec<Value> = state
-        .registry
-        .versions()
-        .into_iter()
-        .map(|v| {
-            Value::object(vec![
-                ("version", Value::Number(v.version as f64)),
-                ("path", Value::String(v.path.display().to_string())),
-                ("alias_build_secs", Value::Number(v.alias_build_secs)),
-                ("alias_resident_bytes", Value::Number(v.alias_resident_bytes as f64)),
-            ])
-        })
-        .collect();
-    let v = Value::object(vec![
-        ("uptime_secs", Value::Number(state.started.elapsed().as_secs_f64())),
-        ("model_version", Value::Number(entry.version as f64)),
-        ("workers", Value::Number(state.workers as f64)),
-        ("requests", Value::Number(s.requests.load(Ordering::Relaxed) as f64)),
-        ("predict_docs", Value::Number(docs as f64)),
-        ("batches", Value::Number(batches as f64)),
-        ("mean_batch", Value::Number(mean_batch)),
-        ("cache_hits", Value::Number(s.cache_hits.load(Ordering::Relaxed) as f64)),
-        ("cache_misses", Value::Number(s.cache_misses.load(Ordering::Relaxed) as f64)),
-        ("cache_entries", Value::Number(state.registry.cache_len() as f64)),
-        ("alias_build_secs", Value::Number(entry.alias_build_secs)),
-        (
-            "alias_resident_bytes",
-            Value::Number(
-                entry.phi_alias.as_ref().map_or(0, |t| t.resident_bytes()) as f64,
-            ),
-        ),
-        ("backlog", Value::Number(state.batcher.backlog() as f64)),
-        ("errors", Value::Number(s.errors.load(Ordering::Relaxed) as f64)),
-        ("reloads", Value::Number(s.reloads.load(Ordering::Relaxed) as f64)),
-        ("versions", Value::Array(versions)),
-    ]);
-    Ok(json::to_string(&v))
+    w.clear();
+    w.begin_object();
+    w.key("alias_build_secs");
+    w.number_f64(entry.alias_build_secs);
+    w.key("alias_resident_bytes");
+    w.number_f64(entry.phi_alias.as_ref().map_or(0, |t| t.resident_bytes()) as f64);
+    w.key("backlog");
+    w.number_f64(state.batcher.backlog() as f64);
+    w.key("batches");
+    w.number_f64(batches as f64);
+    w.key("cache_entries");
+    w.number_f64(state.registry.cache_len() as f64);
+    w.key("cache_hits");
+    w.number_f64(s.cache_hits.load(Ordering::Relaxed) as f64);
+    w.key("cache_misses");
+    w.number_f64(s.cache_misses.load(Ordering::Relaxed) as f64);
+    w.key("errors");
+    w.number_f64(s.errors.load(Ordering::Relaxed) as f64);
+    w.key("mean_batch");
+    w.number_f64(mean_batch);
+    w.key("model_version");
+    w.number_f64(entry.version as f64);
+    w.key("predict_docs");
+    w.number_f64(docs as f64);
+    w.key("reloads");
+    w.number_f64(s.reloads.load(Ordering::Relaxed) as f64);
+    w.key("requests");
+    w.number_f64(s.requests.load(Ordering::Relaxed) as f64);
+    w.key("uptime_secs");
+    w.number_f64(state.started.elapsed().as_secs_f64());
+    w.key("versions");
+    w.begin_array();
+    for v in state.registry.versions() {
+        w.begin_object();
+        w.key("alias_build_secs");
+        w.number_f64(v.alias_build_secs);
+        w.key("alias_resident_bytes");
+        w.number_f64(v.alias_resident_bytes as f64);
+        w.key("path");
+        w.string(&v.path.display().to_string());
+        w.key("version");
+        w.number_f64(v.version as f64);
+        w.end_object();
+    }
+    w.end_array();
+    w.key("workers");
+    w.number_f64(state.workers as f64);
+    w.end_object();
+    Ok(())
 }
 
 /// Attempts per request when a hot-swap races the batcher: predictions
@@ -307,19 +382,21 @@ fn handle_stats(state: &State) -> Result<String, HttpError> {
 /// soon as one full pass runs against a single model version.
 const SWAP_RACE_RETRIES: usize = 3;
 
-/// Submit the docs and render a response **if** every document resolved
-/// under the same model version (`want` additionally pins which one, for
-/// the text path whose token ids are only meaningful under the vocabulary
-/// they were encoded with). `Ok(None)` = a hot swap landed mid-request;
-/// the caller re-submits.
+/// Submit an arena and render a response into `w` **if** every document
+/// resolved under the same model version (`want` additionally pins which
+/// one, for the text path whose token ids are only meaningful under the
+/// vocabulary they were encoded with). `Ok(false)` = a hot swap landed
+/// mid-request; the caller re-submits.
 fn submit_uniform(
     state: &State,
-    docs: &[Vec<u32>],
+    arena: &Arc<TokenArena>,
     seed: u64,
     want: Option<u64>,
-) -> Result<Option<String>, HttpError> {
-    let results = state.batcher.submit(docs, seed);
-    let mut yhat = Vec::with_capacity(results.len());
+    yhat: &mut Vec<f64>,
+    w: &mut JsonWriter,
+) -> Result<bool, HttpError> {
+    let results = state.batcher.submit_streamed(Arc::clone(arena), seed);
+    yhat.clear();
     let mut version: Option<u64> = None;
     let mut cached = 0usize;
     for (i, r) in results.into_iter().enumerate() {
@@ -327,7 +404,7 @@ fn submit_uniform(
             Ok(out) => {
                 match version {
                     None => version = Some(out.model_version),
-                    Some(v) if v != out.model_version => return Ok(None),
+                    Some(v) if v != out.model_version => return Ok(false),
                     Some(_) => {}
                 }
                 yhat.push(out.yhat);
@@ -337,30 +414,52 @@ fn submit_uniform(
         }
     }
     let version = version.unwrap_or(0);
-    if let Some(w) = want {
-        if w != version {
-            return Ok(None);
+    if let Some(wv) = want {
+        if wv != version {
+            return Ok(false);
         }
     }
-    Ok(Some(protocol::predict_response(&yhat, version, cached)))
+    protocol::predict_response_into(w, yhat, version, cached);
+    Ok(true)
 }
 
-fn handle_predict(state: &State, req: &Request) -> Result<String, HttpError> {
-    let body = req.body_str().map_err(bad_request)?;
-    let preq = protocol::parse_predict(body).map_err(|e| bad_request(format!("{e:#}")))?;
-    let seed = preq.seed.unwrap_or(state.default_seed);
+fn handle_predict(
+    state: &State,
+    req: &RequestScratch,
+    out: &mut ConnScratch,
+) -> Result<(), HttpError> {
+    let seed = protocol::parse_predict_streamed(req.body(), &mut out.builder)
+        .map_err(|e| bad_request(format!("{e:#}")))?
+        .unwrap_or(state.default_seed);
+    let arena = Arc::new(out.builder.finish());
+    let mut outcome: Result<bool, HttpError> = Ok(false);
     for _ in 0..SWAP_RACE_RETRIES {
-        if let Some(body) = submit_uniform(state, &preq.docs, seed, None)? {
-            return Ok(body);
+        outcome = submit_uniform(state, &arena, seed, None, &mut out.yhat, &mut out.writer);
+        if !matches!(outcome, Ok(false)) {
+            break;
         }
     }
-    Err(HttpError { status: 503, msg: "model reloads raced this request; retry".into() })
+    // Best-effort buffer recycling: the batcher's clones are normally gone
+    // by the time all results are in; if a worker still holds one, the
+    // builder simply reallocates on the next request.
+    if let Ok(arena) = Arc::try_unwrap(arena) {
+        out.builder.reclaim(arena);
+    }
+    match outcome {
+        Ok(true) => Ok(()),
+        Ok(false) => Err(raced()),
+        Err(e) => Err(e),
+    }
 }
 
-fn handle_predict_text(state: &State, req: &Request) -> Result<String, HttpError> {
-    let body = req.body_str().map_err(bad_request)?;
-    let treq = protocol::parse_text(body).map_err(|e| bad_request(format!("{e:#}")))?;
-    let seed = treq.seed.unwrap_or(state.default_seed);
+fn handle_predict_text(
+    state: &State,
+    req: &RequestScratch,
+    out: &mut ConnScratch,
+) -> Result<(), HttpError> {
+    let seed = protocol::parse_text_streamed(req.body(), &mut out.texts)
+        .map_err(|e| bad_request(format!("{e:#}")))?
+        .unwrap_or(state.default_seed);
     // Token ids are only meaningful under the vocabulary that produced
     // them, so each attempt re-encodes against the *current* entry and
     // requires the batch to run under exactly that version.
@@ -370,8 +469,8 @@ fn handle_predict_text(state: &State, req: &Request) -> Result<String, HttpError
             "model was saved without a vocabulary; re-train with `cfslda train` \
              on a raw-text corpus (or pass --vocab) to enable /predict/text",
         ))?;
-        let mut docs = Vec::with_capacity(treq.texts.len());
-        for (i, text) in treq.texts.iter().enumerate() {
+        let mut docs = Vec::with_capacity(out.texts.len());
+        for (i, text) in out.texts.iter().enumerate() {
             let toks = tokenize(text, &state.tok_cfg);
             let enc = vocab.encode(&toks);
             if enc.is_empty() {
@@ -381,29 +480,48 @@ fn handle_predict_text(state: &State, req: &Request) -> Result<String, HttpError
             }
             docs.push(enc);
         }
-        if let Some(body) = submit_uniform(state, &docs, seed, Some(entry.version))? {
-            return Ok(body);
+        let arena = Arc::new(TokenArena::from_docs(&docs));
+        let done = submit_uniform(
+            state,
+            &arena,
+            seed,
+            Some(entry.version),
+            &mut out.yhat,
+            &mut out.writer,
+        )?;
+        if done {
+            return Ok(());
         }
     }
-    Err(HttpError { status: 503, msg: "model reloads raced this request; retry".into() })
+    Err(raced())
 }
 
-fn handle_reload(state: &State, req: &Request) -> Result<String, HttpError> {
-    let body = req.body_str().map_err(bad_request)?;
-    let path = protocol::parse_reload(body).map_err(|e| bad_request(format!("{e:#}")))?;
+fn handle_reload(
+    state: &State,
+    req: &RequestScratch,
+    w: &mut JsonWriter,
+) -> Result<(), HttpError> {
+    let path = protocol::parse_reload_streamed(req.body())
+        .map_err(|e| bad_request(format!("{e:#}")))?;
     let entry = state
         .registry
         .reload(path.as_deref().map(Path::new))
         .map_err(|e| server_error(format!("{e:#}")))?;
     state.stats.reloads.fetch_add(1, Ordering::Relaxed);
-    let v = Value::object(vec![
-        ("status", Value::String("reloaded".into())),
-        ("model_version", Value::Number(entry.version as f64)),
-        ("path", Value::String(entry.path.display().to_string())),
-        ("topics", Value::Number(entry.model.t as f64)),
-        ("vocab", Value::Number(entry.model.w as f64)),
-    ]);
-    Ok(json::to_string(&v))
+    w.clear();
+    w.begin_object();
+    w.key("model_version");
+    w.number_f64(entry.version as f64);
+    w.key("path");
+    w.string(&entry.path.display().to_string());
+    w.key("status");
+    w.string("reloaded");
+    w.key("topics");
+    w.number_f64(entry.model.t as f64);
+    w.key("vocab");
+    w.number_f64(entry.model.w as f64);
+    w.end_object();
+    Ok(())
 }
 
 /// Resolved options for [`run_blocking`] (the CLI entry point).

@@ -1,0 +1,80 @@
+//! Counting global allocator for the `bench-alloc` feature.
+//!
+//! Wraps [`std::alloc::System`] and bumps two process-wide relaxed atomics
+//! on every allocation, so `serve-bench` (and the codec pin test in
+//! `tests/json_streaming.rs`) can report allocs/request and bytes/request
+//! for the streaming JSON hot path. Installed as `#[global_allocator]` in
+//! `lib.rs` only when the crate is built with `--features bench-alloc`;
+//! release builds carry zero overhead.
+//!
+//! Counters are process-global, so a meaningful measurement must run on a
+//! quiet process: single-threaded, before any server/batcher threads start
+//! (serve-bench measures the codec loop before booting the first cell, and
+//! the pin test runs under `--test-threads=1`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// The counting allocator; a unit struct so it can be a `static`.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A grow/shrink is one trip to the allocator; only the growth
+        // counts toward the byte tally (shrinks are free real estate).
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size.saturating_sub(layout.size()) as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Snapshot of `(allocations, bytes)` since process start.
+pub fn snapshot() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed))
+}
+
+/// `(allocations, bytes)` since `before` (a prior [`snapshot`]).
+pub fn delta(before: (u64, u64)) -> (u64, u64) {
+    let now = snapshot();
+    (now.0.wrapping_sub(before.0), now.1.wrapping_sub(before.1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_observe_heap_traffic() {
+        let before = snapshot();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let (allocs, bytes) = delta(before);
+        // Only meaningful when the counting allocator is actually
+        // installed (feature on); otherwise the statics never move.
+        if cfg!(feature = "bench-alloc") {
+            assert!(allocs >= 1, "Vec::with_capacity must allocate (saw {allocs})");
+            assert!(bytes >= 1024 * 8, "expected >= 8KiB counted, saw {bytes}");
+        } else {
+            assert_eq!((allocs, bytes), (0, 0));
+        }
+        drop(v);
+    }
+}

@@ -3,6 +3,7 @@
 //! the usual crates — rand, rayon, criterion — are reimplemented in-repo at
 //! the scale this project needs).
 
+pub mod alloc_count;
 pub mod logging;
 pub mod math;
 pub mod pool;

@@ -1,0 +1,292 @@
+//! Differential suite: the streaming serve codec vs the tree reference.
+//!
+//! The tree parsers (`parse_predict` & co) are the semantics oracle; the
+//! streaming parsers must agree on accept/reject and on every parsed value
+//! for the shared corpus below. The one *documented* divergence — integer
+//! seeds in (2^53, u64::MAX] stream exactly but are rejected by the tree
+//! (which would otherwise round them through f64) — is pinned separately.
+//!
+//! Also here: torture tests that request limits are enforced *during*
+//! streaming (before the body is fully buffered into the arena), and the
+//! feature-gated allocation pin for the warmed hot path (run under
+//! `--features bench-alloc --test-threads=1`).
+
+use cfslda::config::json::JsonWriter;
+use cfslda::serve::batcher::ArenaBuilder;
+use cfslda::serve::protocol::{
+    self, MAX_DOCS_PER_REQUEST, MAX_TOKENS_PER_DOC,
+};
+
+/// Streaming-parse a /predict body, returning (docs, seed) on success.
+fn stream_predict(body: &str) -> anyhow::Result<(Vec<Vec<u32>>, Option<u64>)> {
+    let mut b = ArenaBuilder::new();
+    let seed = protocol::parse_predict_streamed(body.as_bytes(), &mut b)?;
+    let arena = b.finish();
+    let docs = (0..arena.num_docs()).map(|d| arena.doc(d).to_vec()).collect();
+    Ok((docs, seed))
+}
+
+fn stream_text(body: &str) -> anyhow::Result<(Vec<String>, Option<u64>)> {
+    let mut texts = Vec::new();
+    let seed = protocol::parse_text_streamed(body.as_bytes(), &mut texts)?;
+    Ok((texts, seed))
+}
+
+/// Bodies on which tree and streaming must agree exactly (accept/reject
+/// *and* every parsed value). Seeds stay below 2^53 here; the documented
+/// divergence above that is covered by its own test.
+const PREDICT_CORPUS: &[&str] = &[
+    // valid
+    r#"{"docs": [[0, 1, 2]]}"#,
+    r#"{"docs": [[0], [1, 1], [2, 2, 2]], "seed": 7}"#,
+    r#"{"docs": [[4294967295]], "seed": 0}"#,
+    r#"{"seed": 9007199254740992, "docs": [[1]]}"#, // 2^53: exact in both
+    r#"{"docs": [[1e2, 4.0]]}"#,                    // integral floats as ids
+    r#"{"docs": [[0,1],[2,3]], "docs": [[5]]}"#,    // duplicate key: last wins
+    r#"{"extra": {"deep": [1, {"x": null}]}, "docs": [[9]]}"#, // unknown keys skipped
+    "{\n  \"docs\" : [ [ 0 , 1 ] ]\n}",             // whitespace-tolerant
+    r#"{"docs": [[1]], "seed": 1.5e1}"#,            // 15.0 is an integral seed
+    // invalid in both
+    r#"{}"#,
+    r#"{"docs": []}"#,
+    r#"{"docs": [[]]}"#,
+    r#"{"docs": [[-1]]}"#,
+    r#"{"docs": [[0.5]]}"#,
+    r#"{"docs": [[4294967296]]}"#, // > u32::MAX
+    r#"{"docs": [0]}"#,
+    r#"{"docs": {"0": [1]}}"#,
+    r#"{"docs": [[1]], "seed": -3}"#,
+    r#"{"docs": [[1]], "seed": 1.5}"#,
+    r#"{"docs": [[1]], "seed": "7"}"#,
+    r#"[{"docs": [[1]]}]"#,
+    r#""docs""#,
+    r#"{"docs": [[1]]"#,       // truncated object
+    r#"{"docs": [[1, ]]}"#,    // trailing comma
+    r#"{"docs": [[1]]} x"#,    // trailing garbage
+    r#"{"docs" [[1]]}"#,       // missing colon
+    r#"{"docs": [[1]], }"#,    // trailing comma in object
+    r#"{"docs": [["a"]]}"#,
+    r#"{"docs": [[01]]}"#, // leading zero: the shared lexer is lenient, both read 1
+    r#"{"docs": [[+1]]}"#,
+    r#"{"docs": [[1e]]}"#,     // bad exponent
+    "{\"docs\": [[1]],\x00}",  // control byte outside string
+    "not json at all",
+    "",
+];
+
+#[test]
+fn predict_differential_corpus() {
+    for body in PREDICT_CORPUS {
+        let tree = protocol::parse_predict(body);
+        let streamed = stream_predict(body);
+        match (&tree, &streamed) {
+            (Ok(t), Ok(s)) => {
+                assert_eq!(t.docs, s.0, "docs differ on {body:?}");
+                assert_eq!(t.seed, s.1, "seed differs on {body:?}");
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!(
+                "accept/reject divergence on {body:?}: tree={:?} streamed={:?}",
+                tree.as_ref().map(|t| t.docs.len()),
+                streamed.as_ref().map(|s| s.0.len()),
+            ),
+        }
+    }
+}
+
+const TEXT_CORPUS: &[&str] = &[
+    r#"{"texts": ["hello world"]}"#,
+    r#"{"texts": ["a", "b c", ""], "seed": 3}"#,
+    r#"{"texts": ["tab\there \"quoted\" back\\slash / \b\f\n\r\t"]}"#,
+    r#"{"texts": ["Aé中"]}"#,
+    r#"{"texts": ["pair: 😀 done"]}"#, // surrogate pair -> 😀
+    r#"{"texts": ["\ud800"]}"#,                  // lone high surrogate: reject
+    r#"{"texts": ["\ud83dA"]}"#,            // high + non-low: reject
+    r#"{"texts": ["bad \x escape"]}"#,
+    r#"{"texts": ["unterminated}"#,
+    r#"{"texts": [42]}"#,
+    r#"{"texts": []}"#,
+    r#"{}"#,
+];
+
+#[test]
+fn text_differential_corpus() {
+    for body in TEXT_CORPUS {
+        let tree = protocol::parse_text(body);
+        let streamed = stream_text(body);
+        match (&tree, &streamed) {
+            (Ok(t), Ok(s)) => {
+                assert_eq!(t.texts, s.0, "texts differ on {body:?}");
+                assert_eq!(t.seed, s.1, "seed differs on {body:?}");
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("accept/reject divergence on {body:?}"),
+        }
+    }
+}
+
+#[test]
+fn reload_differential_corpus() {
+    for body in &[
+        r#"{"path": "/tmp/m.bin"}"#,
+        r#"{"path": "with \"quotes\""}"#,
+        r#"{}"#,
+        r#"{"other": [1, 2, {"k": true}]}"#,
+        "",
+        "   \t\n",
+        r#"{"path": 7}"#,
+        r#"{"path"#,
+        r#"[1"#,
+        r#"null"#,
+        r#"42"#,
+    ] {
+        let tree = protocol::parse_reload(body);
+        let streamed = protocol::parse_reload_streamed(body.as_bytes());
+        match (&tree, &streamed) {
+            (Ok(t), Ok(s)) => assert_eq!(t, s, "path differs on {body:?}"),
+            (Err(_), Err(_)) => {}
+            _ => panic!(
+                "accept/reject divergence on {body:?}: tree={tree:?} streamed={streamed:?}"
+            ),
+        }
+    }
+}
+
+// ---- seed precision (satellite 1) ---------------------------------------
+
+#[test]
+fn seed_u64_max_streams_exactly_and_tree_rejects() {
+    let body = r#"{"docs": [[1]], "seed": 18446744073709551615}"#;
+    let (_, seed) = stream_predict(body).unwrap();
+    assert_eq!(seed, Some(u64::MAX));
+    // The tree path would round through f64; it must refuse, not round.
+    let err = protocol::parse_predict(body).unwrap_err();
+    assert!(format!("{err:#}").contains("exactly representable"), "got: {err:#}");
+}
+
+#[test]
+fn seed_2p53_plus_1_streams_exactly_and_tree_rejects() {
+    let body = r#"{"docs": [[1]], "seed": 9007199254740993}"#;
+    let (_, seed) = stream_predict(body).unwrap();
+    assert_eq!(seed, Some((1u64 << 53) + 1));
+    assert!(protocol::parse_predict(body).is_err());
+}
+
+// ---- nesting bombs -------------------------------------------------------
+
+#[test]
+fn nesting_bombs_rejected_by_both() {
+    let deep_arr = format!("{}{}", "[".repeat(50_000), "]".repeat(50_000));
+    let body = format!(r#"{{"docs": {deep_arr}}}"#);
+    assert!(protocol::parse_predict(&body).is_err());
+    assert!(stream_predict(&body).is_err());
+
+    let mut deep_obj = String::from(r#"{"docs": [[1]], "x": "#);
+    for _ in 0..50_000 {
+        deep_obj.push_str(r#"{"y": "#);
+    }
+    // Never closed; depth blows the cap long before EOF either way.
+    assert!(protocol::parse_predict(&deep_obj).is_err());
+    assert!(stream_predict(&deep_obj).is_err());
+}
+
+// ---- limits enforced mid-scan (satellite 3) ------------------------------
+
+#[test]
+fn doc_row_limit_enforced_during_streaming() {
+    // One row past the cap, then *deliberately truncated* JSON: only a
+    // parser that rejects mid-scan can produce the limit error here.
+    let mut body = String::from(r#"{"docs": ["#);
+    for _ in 0..(MAX_DOCS_PER_REQUEST + 1) {
+        body.push_str("[1],");
+    }
+    let err = stream_predict(&body).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("rows"),
+        "expected the row-limit error before the truncation error, got: {err:#}"
+    );
+}
+
+#[test]
+fn token_limit_enforced_during_streaming() {
+    let mut body = String::from(r#"{"docs": [["#);
+    for _ in 0..(MAX_TOKENS_PER_DOC + 1) {
+        body.push_str("7,");
+    }
+    let err = stream_predict(&body).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("tokens"),
+        "expected the token-limit error before the truncation error, got: {err:#}"
+    );
+}
+
+#[test]
+fn limits_match_tree_on_complete_bodies() {
+    // A complete over-limit body: both codecs reject.
+    let mut body = String::from(r#"{"docs": ["#);
+    for i in 0..(MAX_DOCS_PER_REQUEST + 1) {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str("[1]");
+    }
+    body.push_str("]}");
+    assert!(protocol::parse_predict(&body).is_err());
+    assert!(stream_predict(&body).is_err());
+}
+
+// ---- response rendering --------------------------------------------------
+
+#[test]
+fn streamed_responses_are_byte_identical_to_tree() {
+    let yhat = [0.0, -1.5, 3.25, 1e-9, 12345.0];
+    let mut w = JsonWriter::new();
+    protocol::predict_response_into(&mut w, &yhat, 42, 3);
+    assert_eq!(w.as_str(), protocol::predict_response(&yhat, 42, 3));
+
+    protocol::error_response_into(&mut w, "bad \"input\"\n");
+    assert_eq!(w.as_str(), protocol::error_response("bad \"input\"\n"));
+}
+
+// ---- allocation pin (satellite 4 / acceptance) ---------------------------
+
+/// The warmed parse+serialize path must not touch the heap: target 0,
+/// hard cap 2 allocations per request. Only meaningful with the counting
+/// allocator installed and no concurrent tests (`--features bench-alloc
+/// -- --test-threads=1`, which is how CI runs it).
+#[cfg(feature = "bench-alloc")]
+#[test]
+fn warmed_predict_codec_is_allocation_free() {
+    use cfslda::util::alloc_count;
+
+    let body = br#"{"docs": [[0, 1, 2, 3], [4, 5], [6, 7, 8]], "seed": 11}"#;
+    let mut builder = ArenaBuilder::new();
+    let mut w = JsonWriter::with_capacity(256);
+    let mut yhat: Vec<f64> = Vec::with_capacity(8);
+    let mut run_once = |builder: &mut ArenaBuilder, w: &mut JsonWriter, yhat: &mut Vec<f64>| {
+        let seed = protocol::parse_predict_streamed(body, builder).unwrap().unwrap();
+        let arena = builder.finish();
+        yhat.clear();
+        for d in 0..arena.num_docs() {
+            yhat.push(arena.doc(d).len() as f64);
+        }
+        protocol::predict_response_into(w, yhat, seed, 1);
+        builder.reclaim(arena);
+    };
+    for _ in 0..8 {
+        run_once(&mut builder, &mut w, &mut yhat);
+    }
+    const ITERS: u64 = 32;
+    let before = alloc_count::snapshot();
+    for _ in 0..ITERS {
+        run_once(&mut builder, &mut w, &mut yhat);
+    }
+    let (allocs, bytes) = alloc_count::delta(before);
+    let per_req = allocs as f64 / ITERS as f64;
+    assert!(
+        per_req <= 2.0,
+        "warmed codec path allocates: {per_req} allocs/request \
+         ({bytes} bytes over {ITERS} requests)"
+    );
+    assert_eq!(allocs, 0, "target is zero allocations, measured {allocs} over {ITERS} requests");
+}
