@@ -49,6 +49,9 @@ struct Record {
     median_secs: f64,
     /// Supervised-MH acceptance rate (train-slda on sparse/alias only).
     mh_accept_rate: Option<f64>,
+    /// Alias-table rebuilds per 1k tokens over one run (alias kernel only)
+    /// — tracks how well the staleness budget amortizes table construction.
+    alias_rebuilds_per_1k_tokens: Option<f64>,
 }
 
 fn push(
@@ -58,6 +61,7 @@ fn push(
     path: &'static str,
     r: &BenchResult,
     mh_accept_rate: Option<f64>,
+    alias_rebuilds_per_1k_tokens: Option<f64>,
 ) {
     records.push(Record {
         t,
@@ -66,7 +70,15 @@ fn push(
         tokens_per_sec: r.throughput().unwrap_or(0.0),
         median_secs: r.median(),
         mh_accept_rate,
+        alias_rebuilds_per_1k_tokens,
     });
+}
+
+/// Normalize one run's `(alias_rebuilds, tokens_sampled)` to rebuilds per
+/// 1k token updates; `None` for kernels without alias tables.
+fn rebuilds_per_1k((rebuilds, tokens_sampled): (u64, u64)) -> Option<f64> {
+    (rebuilds > 0 && tokens_sampled > 0)
+        .then(|| rebuilds as f64 * 1000.0 / tokens_sampled as f64)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -112,6 +124,7 @@ fn main() -> anyhow::Result<()> {
             let mut cfg = base.clone();
             cfg.sampler.kernel = kernel;
             let mut seed = t as u64 * 1000;
+            let mut rebuilds = (0u64, 0u64); // (rebuilds, tokens_sampled)
             let r = bench_throughput(
                 &format!("gibbs/train-lda {kname} T={t}"),
                 0,
@@ -120,10 +133,11 @@ fn main() -> anyhow::Result<()> {
                 || {
                     seed += 1;
                     let mut r = Pcg64::seed_from_u64(seed);
-                    train(&corpus, &cfg, &engine, &mut r).unwrap();
+                    let out = train(&corpus, &cfg, &engine, &mut r).unwrap();
+                    rebuilds = (out.alias_rebuilds, out.tokens_sampled);
                 },
             );
-            push(&mut records, t, kname, "train_lda", &r, None);
+            push(&mut records, t, kname, "train_lda", &r, None, rebuilds_per_1k(rebuilds));
             results.push(r);
 
             let mut seed = t as u64 * 2000;
@@ -138,7 +152,7 @@ fn main() -> anyhow::Result<()> {
                     infer_zbar_with_kernel(&model, &corpus, &base.train, kernel, &mut r);
                 },
             );
-            push(&mut records, t, kname, "predict", &r, None);
+            push(&mut records, t, kname, "predict", &r, None, None);
             results.push(r);
 
             // Supervised (eta-active) sweeps, per kernel: resp_mode = auto
@@ -151,6 +165,7 @@ fn main() -> anyhow::Result<()> {
             cfg2.train.eta_every = 1;
             let mut seed = t as u64 * 3000;
             let mut mh = (0u64, 0u64);
+            let mut rebuilds = (0u64, 0u64);
             let r = bench_throughput(
                 &format!("gibbs/train-slda {kname} T={t}"),
                 0,
@@ -161,6 +176,7 @@ fn main() -> anyhow::Result<()> {
                     let mut r = Pcg64::seed_from_u64(seed);
                     let out = train(&corpus, &cfg2, &engine, &mut r).unwrap();
                     mh = (out.resp_proposed, out.resp_accepted);
+                    rebuilds = (out.alias_rebuilds, out.tokens_sampled);
                 },
             );
             let accept = if mh.0 > 0 {
@@ -171,7 +187,7 @@ fn main() -> anyhow::Result<()> {
             if let Some(a) = accept {
                 println!("train-slda {kname} T={t}: MH acceptance {:.1}%", a * 100.0);
             }
-            push(&mut records, t, kname, "train_slda", &r, accept);
+            push(&mut records, t, kname, "train_slda", &r, accept, rebuilds_per_1k(rebuilds));
             results.push(r);
         }
     }
@@ -320,6 +336,9 @@ fn main() -> anyhow::Result<()> {
             ];
             if let Some(a) = r.mh_accept_rate {
                 fields.push(("mh_accept_rate", Value::Number(a)));
+            }
+            if let Some(rb) = r.alias_rebuilds_per_1k_tokens {
+                fields.push(("alias_rebuilds_per_1k_tokens", Value::Number(rb)));
             }
             Value::object(fields)
         })

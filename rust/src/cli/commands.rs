@@ -65,7 +65,8 @@ COMMANDS:
               [--seed S] [--kernel K] [--config CFG.json] [--port-file F]
               Endpoints: POST /predict {\"docs\": [[id, ...], ...]},
               POST /predict/text {\"texts\": [\"...\"]}, POST /reload
-              [{\"path\": \"new.bin\"}], GET /healthz, GET /stats.
+              [{\"path\": \"new.bin\"}], GET /healthz, GET /stats,
+              GET /metrics (Prometheus text format).
               Quickstart:
                 cfslda train --data corpus.bow --out m.bin
                 cfslda serve --model m.bin --port 7878 &
@@ -78,13 +79,13 @@ COMMANDS:
   experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
               --fig 6|7 [--scale F] [--runs N] [--engine E]
               [--kernel dense|sparse|alias|auto] [--resp-mode exact|mh|auto]
-              [--check]
+              [--heartbeat-secs F] [--check]
   figs        Reproduce illustration figures: --fig 1|2|3|5
   help        This text
 
 ENVIRONMENT:
   CFSLDA_ARTIFACTS  artifacts directory (default ./artifacts)
-  CFSLDA_LOG        error|warn|info|debug|trace
+  CFSLDA_LOG        off|error|warn|info|debug|trace
 ";
 
 fn spec_from_args(a: &Args) -> anyhow::Result<SyntheticSpec> {
@@ -217,6 +218,10 @@ pub fn cmd_experiment(a: &Args) -> anyhow::Result<i32> {
         c.cfg.train.sweeps = s.parse()?;
     }
     apply_kernel_flag(a, &mut c.cfg)?;
+    // Training progress heartbeat (structured JSON info line every F
+    // seconds; 0 = off) — see DESIGN.md §Observability.
+    c.cfg.obs.heartbeat_secs = a.get_f64("heartbeat-secs", c.cfg.obs.heartbeat_secs)?;
+    crate::config::validate::validate(&c.cfg)?;
     let engine = engine_from_args(a)?;
     let binary = fig == 7;
     let (series, _) = runner::run_comparison(&c, &engine)?;
@@ -693,6 +698,8 @@ mod tests {
         for c in cells {
             assert!(c.get("docs_per_sec").unwrap().as_f64().unwrap() > 0.0);
             assert!(c.get("p95_ms").unwrap().as_f64().unwrap().is_finite());
+            // sourced from the server's own latency histogram
+            assert!(c.get("server_p95_ms").unwrap().as_f64().unwrap() > 0.0);
         }
         let kernels: Vec<&str> =
             cells.iter().filter_map(|c| c.get("kernel").unwrap().as_str()).collect();

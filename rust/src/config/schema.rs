@@ -318,6 +318,25 @@ impl Default for ServeConfig {
     }
 }
 
+/// Observability knobs (DESIGN.md §Observability).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Interval (seconds) between structured JSON heartbeat lines emitted
+    /// by the parallel-training leader. 0 disables the heartbeat.
+    pub heartbeat_secs: f64,
+    /// Record per-endpoint request latency histograms in the server.
+    pub latency_histograms: bool,
+    /// Record per-sweep training telemetry (tokens/s, MH acceptance,
+    /// alias rebuilds) into the process-global registry.
+    pub train_telemetry: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { heartbeat_secs: 0.0, latency_histograms: true, train_telemetry: true }
+    }
+}
+
 /// Parallel topology.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParallelConfig {
@@ -341,6 +360,7 @@ pub struct ExperimentConfig {
     pub sampler: SamplerConfig,
     pub parallel: ParallelConfig,
     pub serve: ServeConfig,
+    pub obs: ObsConfig,
     pub engine: EngineKind,
     pub response: ResponseKind,
     pub seed: u64,
@@ -354,6 +374,7 @@ impl Default for ExperimentConfig {
             sampler: SamplerConfig::default(),
             parallel: ParallelConfig::default(),
             serve: ServeConfig::default(),
+            obs: ObsConfig::default(),
             engine: EngineKind::Auto,
             response: ResponseKind::Continuous,
             seed: 20170710,
@@ -434,6 +455,11 @@ impl ExperimentConfig {
                 ("max_wait_us", Value::Number(self.serve.max_wait_us as f64)),
                 ("cache_capacity", Value::Number(self.serve.cache_capacity as f64)),
             ])),
+            ("obs", Value::object(vec![
+                ("heartbeat_secs", Value::Number(self.obs.heartbeat_secs)),
+                ("latency_histograms", Value::Bool(self.obs.latency_histograms)),
+                ("train_telemetry", Value::Bool(self.obs.train_telemetry)),
+            ])),
             ("engine", Value::String(self.engine.name().to_string())),
             ("response", Value::String(self.response.name().to_string())),
             ("seed", Value::Number(self.seed as f64)),
@@ -484,6 +510,11 @@ impl ExperimentConfig {
             read_usize(s, "max_wait_us", &mut wait)?;
             c.serve.max_wait_us = wait as u64;
             read_usize(s, "cache_capacity", &mut c.serve.cache_capacity)?;
+        }
+        if let Some(o) = v.get("obs") {
+            read_f64(o, "heartbeat_secs", &mut c.obs.heartbeat_secs)?;
+            read_bool(o, "latency_histograms", &mut c.obs.latency_histograms)?;
+            read_bool(o, "train_telemetry", &mut c.obs.train_telemetry)?;
         }
         if let Some(e) = v.get("engine") {
             c.engine = EngineKind::parse(e.as_str().context("engine must be a string")?)?;
@@ -650,6 +681,24 @@ mod tests {
         assert_eq!(c3.serve.addr, ServeConfig::default().addr);
         assert!(ExperimentConfig::from_json(r#"{"serve": {"addr": 5}}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"serve": {"workers": -1}}"#).is_err());
+    }
+
+    #[test]
+    fn obs_section_roundtrips_and_defaults() {
+        let mut c = ExperimentConfig::default();
+        c.obs.heartbeat_secs = 2.5;
+        c.obs.latency_histograms = false;
+        c.obs.train_telemetry = false;
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        // partial json keeps the rest of the defaults
+        let c3 = ExperimentConfig::from_json(r#"{"obs": {"heartbeat_secs": 1.0}}"#).unwrap();
+        assert_eq!(c3.obs.heartbeat_secs, 1.0);
+        assert!(c3.obs.latency_histograms);
+        assert!(c3.obs.train_telemetry);
+        let c4 = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(c4.obs, ObsConfig::default());
+        assert!(ExperimentConfig::from_json(r#"{"obs": {"latency_histograms": 3}}"#).is_err());
     }
 
     #[test]

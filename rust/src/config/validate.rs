@@ -112,6 +112,20 @@ pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
     if s.cache_capacity > 1 << 24 {
         bail!("serve.cache_capacity must be <= {} entries, got {}", 1usize << 24, s.cache_capacity);
     }
+    let o = &c.obs;
+    if !o.heartbeat_secs.is_finite() || o.heartbeat_secs < 0.0 {
+        bail!(
+            "obs.heartbeat_secs must be finite and >= 0 (0 = off), got {}",
+            o.heartbeat_secs
+        );
+    }
+    if o.heartbeat_secs > 0.0 && o.heartbeat_secs < 0.01 {
+        bail!(
+            "obs.heartbeat_secs must be >= 0.01 when enabled (a sub-10ms \
+             heartbeat floods the log), got {}",
+            o.heartbeat_secs
+        );
+    }
     Ok(())
 }
 
@@ -247,6 +261,26 @@ mod tests {
             c.sampler.resp_mode = RespMode::Mh;
             validate(&c).unwrap();
         }
+    }
+
+    #[test]
+    fn rejects_bad_obs_settings() {
+        let mut c = ExperimentConfig::quick();
+        c.obs.heartbeat_secs = -1.0;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.obs.heartbeat_secs = f64::NAN;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.obs.heartbeat_secs = 0.001;
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("heartbeat"), "{err}");
+        // 0 (off) and sane intervals are fine
+        let mut c = ExperimentConfig::quick();
+        c.obs.heartbeat_secs = 0.0;
+        validate(&c).unwrap();
+        c.obs.heartbeat_secs = 5.0;
+        validate(&c).unwrap();
     }
 
     #[test]

@@ -55,6 +55,7 @@ pub mod data;
 pub mod eval;
 pub mod experiments;
 pub mod model;
+pub mod obs;
 pub mod parallel;
 pub mod regress;
 pub mod runtime;

@@ -1,0 +1,409 @@
+//! Preregistered metric sets and Prometheus text-format exposition.
+//!
+//! All cells are created up front (`ServeMetrics` per server instance,
+//! `TrainingMetrics`/`LogMetrics` in the process-global
+//! [`crate::obs::registry`]), so the record path never allocates or takes
+//! a lock. Exposition renders into a caller-owned reusable `String` (the
+//! serve layer keeps one per connection, `JsonWriter`-style) in a fixed
+//! metric order, so two renders of identical state are byte-identical.
+//!
+//! Naming scheme: `cfslda_<area>_<what>[_total|_seconds|_bytes]` with
+//! low-cardinality labels only (`endpoint`, `level`, `shard`, `phase`).
+//! Latency histograms record microseconds internally and are scaled to
+//! seconds at render time.
+
+use std::fmt::Write;
+
+use super::cell::{Counter, Gauge};
+use super::hist::{Histogram, BUCKETS};
+
+/// Seconds per recorded microsecond: scale factor applied at render time.
+const US_TO_SECS: f64 = 1e-6;
+
+/// Endpoints with dedicated latency histograms, in render order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Endpoint {
+    Healthz = 0,
+    Metrics = 1,
+    Predict = 2,
+    PredictText = 3,
+    Reload = 4,
+    Stats = 5,
+    Other = 6,
+}
+
+pub const ENDPOINT_COUNT: usize = 7;
+
+impl Endpoint {
+    pub fn classify(method: &str, path: &str) -> Endpoint {
+        match (method, path) {
+            ("GET", "/healthz") => Endpoint::Healthz,
+            ("GET", "/metrics") => Endpoint::Metrics,
+            ("POST", "/predict") => Endpoint::Predict,
+            ("POST", "/predict/text") => Endpoint::PredictText,
+            ("POST", "/reload") => Endpoint::Reload,
+            ("GET", "/stats") => Endpoint::Stats,
+            _ => Endpoint::Other,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Endpoint::Healthz => "healthz",
+            Endpoint::Metrics => "metrics",
+            Endpoint::Predict => "predict",
+            Endpoint::PredictText => "predict_text",
+            Endpoint::Reload => "reload",
+            Endpoint::Stats => "stats",
+            Endpoint::Other => "other",
+        }
+    }
+
+    pub fn all() -> [Endpoint; ENDPOINT_COUNT] {
+        [
+            Endpoint::Healthz,
+            Endpoint::Metrics,
+            Endpoint::Predict,
+            Endpoint::PredictText,
+            Endpoint::Reload,
+            Endpoint::Stats,
+            Endpoint::Other,
+        ]
+    }
+}
+
+/// Serve-side metric set. One instance per [`crate::serve::Server`]
+/// (shared with its batcher via `Arc`), replacing the old hand-rolled
+/// `ServeStats` atomics.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: Counter,
+    pub errors: Counter,
+    pub reloads: Counter,
+    pub predict_docs: Counter,
+    pub batches: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    /// Work items queued in the batcher, sampled after each queue op.
+    pub queue_depth: Gauge,
+    /// Coalescing wait per formed batch, in microseconds.
+    pub batch_wait: Histogram,
+    /// Request latency per endpoint, in microseconds.
+    pub latency: [Histogram; ENDPOINT_COUNT],
+}
+
+impl ServeMetrics {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const HIST: Histogram = Histogram::new();
+        ServeMetrics {
+            requests: Counter::new(),
+            errors: Counter::new(),
+            reloads: Counter::new(),
+            predict_docs: Counter::new(),
+            batches: Counter::new(),
+            cache_hits: Counter::new(),
+            cache_misses: Counter::new(),
+            queue_depth: Gauge::new(),
+            batch_wait: HIST,
+            latency: [HIST; ENDPOINT_COUNT],
+        }
+    }
+
+    #[inline]
+    pub fn latency_for(&self, ep: Endpoint) -> &Histogram {
+        &self.latency[ep as usize]
+    }
+}
+
+/// Maximum number of per-shard gauges rendered; shards beyond this still
+/// train, they just are not individually exposed.
+pub const SHARD_SLOTS: usize = 64;
+
+/// Training-side metric set. Lives in the process-global registry:
+/// training runs once per process and serving can co-expose whatever the
+/// trainer recorded.
+#[derive(Debug)]
+pub struct TrainingMetrics {
+    pub sweeps: Counter,
+    pub tokens: Counter,
+    /// Tokens/s of the most recent completed sweep.
+    pub tokens_per_sec: Gauge,
+    pub resp_proposed: Counter,
+    pub resp_accepted: Counter,
+    pub alias_rebuilds: Counter,
+    /// Configured alias staleness budget of the active kernel.
+    pub alias_staleness: Gauge,
+    pub shards_total: Gauge,
+    pub shards_done: Gauge,
+    /// Tokens sampled by each finished shard (first `SHARD_SLOTS` shards).
+    pub shard_tokens: [Gauge; SHARD_SLOTS],
+    pub comm_setup_bytes: Gauge,
+    pub comm_corpus_bytes: Gauge,
+    pub comm_model_bytes: Gauge,
+    pub comm_predictions_bytes: Gauge,
+}
+
+impl Default for TrainingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainingMetrics {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const GAUGE: Gauge = Gauge::new();
+        TrainingMetrics {
+            sweeps: Counter::new(),
+            tokens: Counter::new(),
+            tokens_per_sec: Gauge::new(),
+            resp_proposed: Counter::new(),
+            resp_accepted: Counter::new(),
+            alias_rebuilds: Counter::new(),
+            alias_staleness: Gauge::new(),
+            shards_total: Gauge::new(),
+            shards_done: Gauge::new(),
+            shard_tokens: [GAUGE; SHARD_SLOTS],
+            comm_setup_bytes: Gauge::new(),
+            comm_corpus_bytes: Gauge::new(),
+            comm_model_bytes: Gauge::new(),
+            comm_predictions_bytes: Gauge::new(),
+        }
+    }
+}
+
+/// Counters fed by the logger: every record at `warn`/`error` level lands
+/// here so `/metrics` reflects log noise without scraping stderr.
+#[derive(Debug, Default)]
+pub struct LogMetrics {
+    pub warns: Counter,
+    pub errors: Counter,
+}
+
+impl LogMetrics {
+    pub const fn new() -> Self {
+        LogMetrics {
+            warns: Counter::new(),
+            errors: Counter::new(),
+        }
+    }
+}
+
+/// Render the full exposition for one server instance plus the
+/// process-global training/log registries.
+pub fn render_prometheus(serve: &ServeMetrics, buf: &mut String) {
+    let reg = super::registry();
+    render_parts(serve, &reg.training, &reg.log, buf);
+}
+
+/// Deterministic render of explicit metric sets; `buf` is cleared first.
+/// Separated from [`render_prometheus`] so tests can render isolated,
+/// locally-owned sets without the process-global registry.
+pub fn render_parts(
+    serve: &ServeMetrics,
+    train: &TrainingMetrics,
+    log: &LogMetrics,
+    buf: &mut String,
+) {
+    buf.clear();
+    counter(buf, "cfslda_http_requests_total", "HTTP requests accepted.", serve.requests.get());
+    counter(buf, "cfslda_http_errors_total", "HTTP responses with status >= 400.", serve.errors.get());
+    counter(buf, "cfslda_model_reloads_total", "Successful POST /reload hot swaps.", serve.reloads.get());
+    counter(buf, "cfslda_predict_docs_total", "Documents scored by the batcher.", serve.predict_docs.get());
+    counter(buf, "cfslda_predict_batches_total", "Batches drained by batcher workers.", serve.batches.get());
+    counter(buf, "cfslda_cache_hits_total", "Prediction LRU cache hits.", serve.cache_hits.get());
+    counter(buf, "cfslda_cache_misses_total", "Prediction LRU cache misses.", serve.cache_misses.get());
+    gauge(buf, "cfslda_batch_queue_depth", "Work items waiting in the batcher queue.", serve.queue_depth.get());
+    histogram(
+        buf,
+        "cfslda_batch_wait_seconds",
+        "Coalescing wait before a batch is drained.",
+        &[("", "", &serve.batch_wait)],
+    );
+    let lat: Vec<(&str, &str, &Histogram)> = Endpoint::all()
+        .iter()
+        .map(|&ep| ("endpoint", ep.label(), serve.latency_for(ep)))
+        .collect();
+    histogram(
+        buf,
+        "cfslda_request_duration_seconds",
+        "Wall time from parsed request to flushed response.",
+        &lat,
+    );
+    header(buf, "cfslda_log_messages_total", "Log records by severity (warn and above).", "counter");
+    series_u64(buf, "cfslda_log_messages_total", "level", "error", log.errors.get());
+    series_u64(buf, "cfslda_log_messages_total", "level", "warn", log.warns.get());
+
+    counter(buf, "cfslda_train_sweeps_total", "Completed Gibbs sweeps across all shards.", train.sweeps.get());
+    counter(buf, "cfslda_train_tokens_total", "Token-level sampling steps performed.", train.tokens.get());
+    gauge(buf, "cfslda_train_tokens_per_sec", "Throughput of the most recent completed sweep.", train.tokens_per_sec.get());
+    counter(buf, "cfslda_train_resp_proposed_total", "Metropolis-Hastings response proposals.", train.resp_proposed.get());
+    counter(buf, "cfslda_train_resp_accepted_total", "Accepted Metropolis-Hastings response proposals.", train.resp_accepted.get());
+    counter(buf, "cfslda_train_alias_rebuilds_total", "Alias tables rebuilt after staleness expiry.", train.alias_rebuilds.get());
+    gauge(buf, "cfslda_train_alias_staleness", "Configured alias staleness budget (uses per table).", train.alias_staleness.get());
+    gauge(buf, "cfslda_train_shards_total", "Shards in the current parallel run.", train.shards_total.get());
+    gauge(buf, "cfslda_train_shards_done", "Shards that finished training.", train.shards_done.get());
+    let shards = (train.shards_total.get() as usize).min(SHARD_SLOTS);
+    if shards > 0 {
+        header(buf, "cfslda_train_shard_tokens", "Tokens sampled by each finished shard.", "gauge");
+        let mut label = String::with_capacity(4);
+        for (i, cell) in train.shard_tokens.iter().take(shards).enumerate() {
+            label.clear();
+            let _ = write!(label, "{i}");
+            series_u64(buf, "cfslda_train_shard_tokens", "shard", &label, cell.get());
+        }
+    }
+    header(buf, "cfslda_comm_bytes", "Communication ledger totals by phase.", "gauge");
+    series_u64(buf, "cfslda_comm_bytes", "phase", "corpus", train.comm_corpus_bytes.get());
+    series_u64(buf, "cfslda_comm_bytes", "phase", "model", train.comm_model_bytes.get());
+    series_u64(buf, "cfslda_comm_bytes", "phase", "predictions", train.comm_predictions_bytes.get());
+    series_u64(buf, "cfslda_comm_bytes", "phase", "setup", train.comm_setup_bytes.get());
+}
+
+fn header(buf: &mut String, name: &str, help: &str, kind: &str) {
+    let _ = writeln!(buf, "# HELP {name} {help}");
+    let _ = writeln!(buf, "# TYPE {name} {kind}");
+}
+
+fn series_u64(buf: &mut String, name: &str, key: &str, val: &str, v: u64) {
+    let _ = writeln!(buf, "{name}{{{key}=\"{val}\"}} {v}");
+}
+
+fn counter(buf: &mut String, name: &str, help: &str, v: u64) {
+    header(buf, name, help, "counter");
+    let _ = writeln!(buf, "{name} {v}");
+}
+
+fn gauge(buf: &mut String, name: &str, help: &str, v: u64) {
+    header(buf, name, help, "gauge");
+    let _ = writeln!(buf, "{name} {v}");
+}
+
+/// Render one histogram family. Each entry is `(label_key, label_value,
+/// hist)`; an empty `label_key` renders an unlabeled series. Bucket
+/// bounds and sums are scaled from recorded microseconds to seconds.
+fn histogram(buf: &mut String, name: &str, help: &str, series: &[(&str, &str, &Histogram)]) {
+    header(buf, name, help, "histogram");
+    for &(key, val, h) in series {
+        let snap = h.snapshot();
+        let mut cum = 0u64;
+        for (i, &c) in snap.counts.iter().enumerate() {
+            cum += c;
+            let _ = write!(buf, "{name}_bucket{{");
+            if !key.is_empty() {
+                let _ = write!(buf, "{key}=\"{val}\",");
+            }
+            if i == BUCKETS {
+                let _ = writeln!(buf, "le=\"+Inf\"}} {cum}");
+            } else {
+                let bound = (1u64 << i) as f64 * US_TO_SECS;
+                let _ = writeln!(buf, "le=\"{bound}\"}} {cum}");
+            }
+        }
+        let sum_secs = snap.sum as f64 * US_TO_SECS;
+        if key.is_empty() {
+            let _ = writeln!(buf, "{name}_sum {sum_secs}");
+            let _ = writeln!(buf, "{name}_count {cum}");
+        } else {
+            let _ = writeln!(buf, "{name}_sum{{{key}=\"{val}\"}} {sum_secs}");
+            let _ = writeln!(buf, "{name}_count{{{key}=\"{val}\"}} {cum}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_covers_routes() {
+        assert_eq!(Endpoint::classify("GET", "/healthz"), Endpoint::Healthz);
+        assert_eq!(Endpoint::classify("GET", "/metrics"), Endpoint::Metrics);
+        assert_eq!(Endpoint::classify("POST", "/predict"), Endpoint::Predict);
+        assert_eq!(Endpoint::classify("POST", "/predict/text"), Endpoint::PredictText);
+        assert_eq!(Endpoint::classify("POST", "/reload"), Endpoint::Reload);
+        assert_eq!(Endpoint::classify("GET", "/stats"), Endpoint::Stats);
+        assert_eq!(Endpoint::classify("GET", "/nope"), Endpoint::Other);
+        assert_eq!(Endpoint::classify("PUT", "/predict"), Endpoint::Other);
+    }
+
+    #[test]
+    fn render_is_byte_stable_across_identical_states() {
+        let serve = ServeMetrics::new();
+        let train = TrainingMetrics::new();
+        let log = LogMetrics::new();
+        serve.requests.add(3);
+        serve.latency_for(Endpoint::Predict).observe(250);
+        train.sweeps.add(10);
+        train.shards_total.set(2);
+        train.shard_tokens[0].set(123);
+        log.warns.inc();
+
+        let mut a = String::new();
+        let mut b = String::new();
+        render_parts(&serve, &train, &log, &mut a);
+        render_parts(&serve, &train, &log, &mut b);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "identical state must render identical bytes");
+    }
+
+    #[test]
+    fn render_has_expected_series_and_shapes() {
+        let serve = ServeMetrics::new();
+        let train = TrainingMetrics::new();
+        let log = LogMetrics::new();
+        serve.requests.add(5);
+        serve.errors.inc();
+        serve.latency_for(Endpoint::Predict).observe(100);
+        serve.latency_for(Endpoint::Predict).observe(100_000);
+        let mut out = String::new();
+        render_parts(&serve, &train, &log, &mut out);
+
+        assert!(out.contains("# TYPE cfslda_http_requests_total counter\ncfslda_http_requests_total 5\n"));
+        assert!(out.contains("cfslda_http_errors_total 1\n"));
+        assert!(out.contains("cfslda_request_duration_seconds_bucket{endpoint=\"predict\",le=\"+Inf\"} 2\n"));
+        assert!(out.contains("cfslda_request_duration_seconds_count{endpoint=\"predict\"} 2\n"));
+        assert!(out.contains("cfslda_request_duration_seconds_sum{endpoint=\"predict\"} 0.1001\n"));
+        assert!(out.contains("cfslda_log_messages_total{level=\"warn\"} 0\n"));
+        assert!(out.contains("cfslda_comm_bytes{phase=\"setup\"} 0\n"));
+        // No shard gauges when shards_total is 0.
+        assert!(!out.contains("cfslda_train_shard_tokens{"));
+
+        // Every non-comment line is `name[{labels}] value`.
+        for line in out.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("space-separated sample");
+            assert!(!series.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotonic() {
+        let serve = ServeMetrics::new();
+        for v in [1u64, 10, 100, 1000, 10_000, 1 << 30] {
+            serve.batch_wait.observe(v);
+        }
+        let mut out = String::new();
+        render_parts(&serve, &TrainingMetrics::new(), &LogMetrics::new(), &mut out);
+        let mut last = 0u64;
+        let mut inf = 0u64;
+        for line in out.lines() {
+            if let Some(rest) = line.strip_prefix("cfslda_batch_wait_seconds_bucket{le=\"") {
+                let (_, v) = rest.rsplit_once(' ').unwrap();
+                let c: u64 = v.parse().unwrap();
+                assert!(c >= last, "non-monotonic cumulative bucket in {line:?}");
+                last = c;
+                if rest.starts_with("+Inf") {
+                    inf = c;
+                }
+            }
+        }
+        assert_eq!(inf, 6);
+        assert!(out.contains("cfslda_batch_wait_seconds_count 6\n"));
+    }
+}

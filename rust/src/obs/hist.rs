@@ -1,0 +1,228 @@
+//! Log-bucketed atomic histogram with a fixed bucket array.
+//!
+//! Values are recorded as raw `u64`s (the serve layer feeds in
+//! microseconds); bucket `i` covers `(2^{i-1}, 2^i]` so the array spans
+//! 1 µs … 2^27 µs ≈ 134 s with one extra overflow bucket. `observe` is
+//! two relaxed `fetch_add`s — no locks, no allocation — so it is safe to
+//! call from the zero-alloc warmed `/predict` path and from sampler inner
+//! loops. Percentiles are derived from the cumulative bucket counts and
+//! report the upper bound of the bucket containing the requested rank,
+//! which is exact to within one power-of-two bucket.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of finite buckets; bucket `BUCKETS` is the +Inf overflow bucket.
+pub const BUCKETS: usize = 28;
+
+/// Upper bound (inclusive) of finite bucket `i`, in recorded units.
+#[inline]
+pub fn upper_bound(i: usize) -> u64 {
+    1u64 << i.min(BUCKETS)
+}
+
+/// Index of the bucket that `v` falls in: the smallest `i` with
+/// `v <= 2^i`, clamped to the overflow bucket.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        return 0;
+    }
+    let i = 64 - (v - 1).leading_zeros() as usize;
+    if i >= BUCKETS {
+        BUCKETS
+    } else {
+        i
+    }
+}
+
+/// Fixed-size lock-free histogram. Const-constructible so metric sets can
+/// live in `static`s.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS + 1],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            counts: [ZERO; BUCKETS + 1],
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. Allocation-free and lock-free.
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough point-in-time copy (relaxed loads).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS + 1];
+        for (dst, src) in counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            counts,
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-integer copy of a [`Histogram`], used for exposition and
+/// percentile math.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS + 1],
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Upper bound of the bucket holding the `q`-quantile sample
+    /// (`q` in `[0, 1]`), in recorded units. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return upper_bound(i);
+            }
+        }
+        upper_bound(BUCKETS)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 27), BUCKETS - 1);
+        assert_eq!(bucket_index((1 << 27) + 1), BUCKETS);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS);
+    }
+
+    #[test]
+    fn every_value_lands_at_or_below_its_bound() {
+        for v in 1u64..=4096 {
+            let i = bucket_index(v);
+            assert!(v <= upper_bound(i), "v={v} i={i}");
+            if i > 0 {
+                assert!(v > upper_bound(i - 1), "v={v} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantiles_on_exact_distribution() {
+        let h = Histogram::new();
+        // 50 samples at 1us, 45 at 100us, 5 at 10_000us.
+        for _ in 0..50 {
+            h.observe(1);
+        }
+        for _ in 0..45 {
+            h.observe(100);
+        }
+        for _ in 0..5 {
+            h.observe(10_000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.sum, 50 + 45 * 100 + 5 * 10_000);
+        // p50 rank = 50 -> still inside the 1us bucket.
+        assert_eq!(s.quantile(0.50), 1);
+        // p95 rank = 95 -> the bucket holding 100us is (64,128].
+        assert_eq!(s.quantile(0.95), 128);
+        // p99 rank = 99 -> the bucket holding 10_000us is (8192,16384].
+        assert_eq!(s.quantile(0.99), 16_384);
+        assert_eq!(s.quantile(1.0), 16_384);
+        assert_eq!(s.quantile(0.0), 1);
+    }
+
+    #[test]
+    fn overflow_bucket_catches_huge_values() {
+        let h = Histogram::new();
+        h.observe(u64::MAX);
+        h.observe(1 << 30);
+        let s = h.snapshot();
+        assert_eq!(s.counts[BUCKETS], 2);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.quantile(0.5), upper_bound(BUCKETS));
+        assert_eq!(s.sum, u64::MAX.wrapping_add(1 << 30));
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.99), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_observe_sums_correctly() {
+        let h = Arc::new(Histogram::new());
+        let threads = 8;
+        let per_thread = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        // Mix of buckets, deterministic per thread.
+                        h.observe((t as u64 * 37 + i) % 1000 + 1);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), threads as u64 * per_thread);
+        let mut expect_sum = 0u64;
+        for t in 0..threads as u64 {
+            for i in 0..per_thread {
+                expect_sum += (t * 37 + i) % 1000 + 1;
+            }
+        }
+        assert_eq!(s.sum, expect_sum);
+    }
+}

@@ -1,0 +1,50 @@
+//! Lock-free, allocation-free-at-record-time observability core.
+//!
+//! Three layers:
+//!
+//! * [`cell`] — atomic [`Counter`]/[`Gauge`] cells, const-constructible.
+//! * [`hist`] — log-bucketed fixed-array [`Histogram`]s (no allocation on
+//!   `observe`, percentiles derived from cumulative bucket counts).
+//! * [`expo`] — preregistered metric sets ([`ServeMetrics`],
+//!   [`TrainingMetrics`], [`LogMetrics`]) and deterministic Prometheus
+//!   text-format rendering into a reusable buffer.
+//!
+//! The process-global [`Registry`] holds the training and log metric
+//! sets; serve metrics are per-server instances (so tests and benches can
+//! boot isolated servers in one process) and are joined with the global
+//! registry at exposition time by [`expo::render_prometheus`], served at
+//! `GET /metrics`.
+//!
+//! Every record-path operation is a relaxed atomic RMW on a preallocated
+//! cell: instrumenting the warmed `/predict` path keeps the
+//! `bench-alloc` zero-allocation pin intact.
+
+pub mod cell;
+pub mod expo;
+pub mod hist;
+
+pub use cell::{Counter, Gauge};
+pub use expo::{
+    render_parts, render_prometheus, Endpoint, LogMetrics, ServeMetrics, TrainingMetrics,
+    ENDPOINT_COUNT, SHARD_SLOTS,
+};
+pub use hist::{bucket_index, upper_bound, HistSnapshot, Histogram, BUCKETS};
+
+/// Process-global metric sets: training telemetry (one training run per
+/// process) and logger severity counters.
+#[derive(Debug)]
+pub struct Registry {
+    pub training: TrainingMetrics,
+    pub log: LogMetrics,
+}
+
+static REGISTRY: Registry = Registry {
+    training: TrainingMetrics::new(),
+    log: LogMetrics::new(),
+};
+
+/// The process-global registry. Cells are preregistered statics; callers
+/// record directly into them with no setup step.
+pub fn registry() -> &'static Registry {
+    &REGISTRY
+}

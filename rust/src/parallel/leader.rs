@@ -32,6 +32,7 @@ use crate::util::pool::scoped_map;
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CpuStopwatch, PhaseTimings, Stopwatch};
 use std::path::Path;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// The four algorithms compared in the paper's Figures 6 and 7.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -159,6 +160,9 @@ pub fn run_with_engine(
         "train/test vocab mismatch"
     );
     let total = Stopwatch::new();
+    // Periodic structured progress line while the run is in flight
+    // (`obs.heartbeat_secs > 0`); stops on drop at function exit.
+    let _heartbeat = Heartbeat::start(cfg.obs.heartbeat_secs);
     let mut rng = Pcg64::seed_from_u64(cfg.seed);
     let test_labels = ds.test.responses();
 
@@ -246,6 +250,17 @@ fn parallel_train(
     ledger: &CommLedger,
 ) -> anyhow::Result<Vec<WorkerOutput>> {
     let m = cfg.parallel.shards;
+    // Shard-progress gauges (DESIGN.md §Observability): reset per run so a
+    // scrape mid-training reads this run's fan-out, not a stale one.
+    let telemetry = cfg.obs.train_telemetry;
+    if telemetry {
+        let tr = &crate::obs::registry().training;
+        tr.shards_total.set(m as u64);
+        tr.shards_done.set(0);
+        for cell in tr.shard_tokens.iter().take(m.min(crate::obs::SHARD_SLOTS)) {
+            cell.set(0);
+        }
+    }
     let shards = random_shards(ds.train.num_docs(), m, rng);
     let views = shard_views(&ds.train, &shards);
     // Per-shard deterministic RNG streams, derived before the fan-out.
@@ -272,22 +287,120 @@ fn parallel_train(
     }
 
     let results = scoped_map(&jobs, cfg.parallel.threads.max(1), |_, (i, v, worker_rng)| {
-        run_worker(*i, *v, test_view, full_train_view, plan, cfg, engine, worker_rng.clone())
+        let out =
+            run_worker(*i, *v, test_view, full_train_view, plan, cfg, engine, worker_rng.clone());
+        if telemetry {
+            if let Ok(o) = &out {
+                let tr = &crate::obs::registry().training;
+                tr.shards_done.add(1);
+                if *i < crate::obs::SHARD_SLOTS {
+                    tr.shard_tokens[*i].set(o.train.tokens_sampled);
+                }
+            }
+        }
+        out
     });
     let outputs: anyhow::Result<Vec<WorkerOutput>> = results.into_iter().collect();
     let outputs = outputs?;
 
+    let mut gathered_model_bytes = 0u64;
+    let mut gathered_pred_bytes = 0u64;
     for o in &outputs {
-        let mut gather = model_bytes(o.train.model.t, o.train.model.w);
+        let mb = model_bytes(o.train.model.t, o.train.model.w);
+        gathered_model_bytes += mb;
+        let mut gather = mb;
         if o.test_pred.is_some() {
-            gather += predictions_bytes(ds.test.num_docs());
+            let pb = predictions_bytes(ds.test.num_docs());
+            gathered_pred_bytes += pb;
+            gather += pb;
         }
         if o.full_train_quality.is_some() {
             gather += 16; // (mse, acc) pair
         }
         ledger.add_gather(gather);
     }
+    if telemetry {
+        let snap = ledger.snapshot();
+        let tr = &crate::obs::registry().training;
+        tr.comm_setup_bytes.set(snap.setup_copied_bytes);
+        tr.comm_corpus_bytes.set(snap.setup_referenced_bytes);
+        tr.comm_model_bytes.set(gathered_model_bytes);
+        tr.comm_predictions_bytes.set(gathered_pred_bytes);
+    }
     Ok(outputs)
+}
+
+/// Background thread that logs one structured JSON progress line every
+/// `interval_secs` while a [`run_with_engine`] call is in flight, read
+/// straight off the global training registry (relaxed atomic loads — the
+/// samplers never block on it). The line is `info`-level and
+/// machine-parseable:
+///
+/// ```json
+/// {"heartbeat":{"elapsed_secs":1.503,"sweeps":40,"tokens":812000,
+///  "tokens_per_sec":540000,"shards_done":2,"shards_total":4,
+///  "comm_setup_bytes":2880,"comm_corpus_bytes":1048576}}
+/// ```
+///
+/// Stops promptly on drop (condvar-signalled, no full-interval lag).
+struct Heartbeat {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    fn start(interval_secs: f64) -> Option<Heartbeat> {
+        if interval_secs <= 0.0 || !interval_secs.is_finite() {
+            return None;
+        }
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let shared = Arc::clone(&stop);
+        let interval = std::time::Duration::from_secs_f64(interval_secs);
+        let t0 = std::time::Instant::now();
+        let handle = std::thread::Builder::new()
+            .name("cfslda-heartbeat".into())
+            .spawn(move || {
+                let (lock, cv) = &*shared;
+                let mut stopped = lock.lock().unwrap();
+                loop {
+                    let (guard, timeout) = cv.wait_timeout(stopped, interval).unwrap();
+                    stopped = guard;
+                    if *stopped {
+                        return;
+                    }
+                    if timeout.timed_out() {
+                        let tr = &crate::obs::registry().training;
+                        log::info!(
+                            "{{\"heartbeat\":{{\"elapsed_secs\":{:.3},\"sweeps\":{},\
+                             \"tokens\":{},\"tokens_per_sec\":{},\"shards_done\":{},\
+                             \"shards_total\":{},\"comm_setup_bytes\":{},\
+                             \"comm_corpus_bytes\":{}}}}}",
+                            t0.elapsed().as_secs_f64(),
+                            tr.sweeps.get(),
+                            tr.tokens.get(),
+                            tr.tokens_per_sec.get(),
+                            tr.shards_done.get(),
+                            tr.shards_total.get(),
+                            tr.comm_setup_bytes.get(),
+                            tr.comm_corpus_bytes.get(),
+                        );
+                    }
+                }
+            })
+            .ok()?;
+        Some(Heartbeat { stop, handle: Some(handle) })
+    }
+}
+
+impl Drop for Heartbeat {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 fn summaries(outputs: &[WorkerOutput]) -> Vec<ShardSummary> {
@@ -627,6 +740,42 @@ mod tests {
             assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
         }
         assert!(Algorithm::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn heartbeat_starts_ticks_and_stops() {
+        // Off at 0 (and for non-finite garbage).
+        assert!(Heartbeat::start(0.0).is_none());
+        assert!(Heartbeat::start(f64::NAN).is_none());
+        // On: must tick at least once and then stop promptly on drop.
+        let hb = Heartbeat::start(0.01).expect("heartbeat thread");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let sw = Stopwatch::new();
+        drop(hb);
+        assert!(sw.elapsed_secs() < 5.0, "drop must not hang on the interval");
+    }
+
+    #[test]
+    fn parallel_run_populates_training_telemetry() {
+        let (ds, cfg) = fixture();
+        let engine = EngineHandle::native();
+        let tr = &crate::obs::registry().training;
+        let (sweeps0, tokens0) = (tr.sweeps.get(), tr.tokens.get());
+        run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap();
+        // Counters are global and monotonic (other tests may add too), so
+        // assert movement, not absolute values.
+        assert!(tr.sweeps.get() >= sweeps0 + (cfg.train.sweeps * 4) as u64);
+        assert!(tr.tokens.get() > tokens0);
+        assert!(tr.shards_total.get() > 0);
+        assert!(tr.comm_corpus_bytes.get() > 0);
+        assert!(tr.comm_model_bytes.get() > 0);
+
+        // train_telemetry = false must still run clean end to end (other
+        // tests mutate the global registry concurrently, so "counters
+        // untouched" cannot be asserted race-free here).
+        let mut quiet = cfg.clone();
+        quiet.obs.train_telemetry = false;
+        run_with_engine(Algorithm::NaiveCombination, &ds, &quiet, &engine, false).unwrap();
     }
 
     #[test]

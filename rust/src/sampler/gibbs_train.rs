@@ -72,6 +72,10 @@ pub struct TrainOutput {
     pub resp_proposed: u64,
     /// Supervised-MH proposals accepted (self-proposals count as accepted).
     pub resp_accepted: u64,
+    /// Alias-table rebuilds across the whole run (0 for kernels without
+    /// alias tables) — pairs with the staleness budget for the
+    /// amortization accounting in `BENCH_gibbs_hotpath.json`.
+    pub alias_rebuilds: u64,
     /// Phase timing breakdown (gibbs vs eta-solve).
     pub timings: PhaseTimings,
 }
@@ -146,8 +150,14 @@ pub fn train<'a>(
     let mut tokens_sampled: u64 = 0;
     let mut timings = PhaseTimings::new();
 
+    // Training telemetry (DESIGN.md §Observability): per-sweep counters and
+    // throughput gauges on the global registry. Every record is a relaxed
+    // atomic op on a preregistered cell — nothing here allocates or locks.
+    let telemetry = cfg.obs.train_telemetry;
+
     for sweep in 0..cfg.train.sweeps {
         let sw = CpuStopwatch::new();
+        let tokens_before = tokens_sampled;
         for di in 0..d {
             let tokens = corpus.doc_tokens(di);
             let zd = &mut z[z_offsets[di] as usize..z_offsets[di + 1] as usize];
@@ -168,7 +178,17 @@ pub fn train<'a>(
             }
             tokens_sampled += tokens.len() as u64;
         }
-        timings.add("gibbs", sw.elapsed_secs());
+        let gibbs_secs = sw.elapsed_secs();
+        timings.add("gibbs", gibbs_secs);
+        if telemetry {
+            let tr = &crate::obs::registry().training;
+            tr.sweeps.inc();
+            let swept = tokens_sampled - tokens_before;
+            tr.tokens.add(swept);
+            if gibbs_secs > 0.0 {
+                tr.tokens_per_sec.set((swept as f64 / gibbs_secs) as u64);
+            }
+        }
 
         // eta step (eq. 2) after burn-in, every eta_every sweeps, and on the
         // final sweep so the returned model always reflects the last state.
@@ -217,6 +237,16 @@ pub fn train<'a>(
         train_acc: fit.acc,
     };
     let (resp_proposed, resp_accepted) = kern.resp_mh_stats().unwrap_or((0, 0));
+    let (alias_rebuilds, alias_staleness) = kern.alias_stats().unwrap_or((0, 0));
+    if telemetry {
+        let tr = &crate::obs::registry().training;
+        tr.resp_proposed.add(resp_proposed);
+        tr.resp_accepted.add(resp_accepted);
+        tr.alias_rebuilds.add(alias_rebuilds);
+        if alias_staleness > 0 {
+            tr.alias_staleness.set(alias_staleness);
+        }
+    }
     Ok(TrainOutput {
         model,
         counts,
@@ -227,6 +257,7 @@ pub fn train<'a>(
         tokens_sampled,
         resp_proposed,
         resp_accepted,
+        alias_rebuilds,
         timings,
     })
 }
@@ -342,6 +373,11 @@ mod tests {
             let last = out.history.last().unwrap().train_mse;
             assert!(last < first, "{kernel:?} no learning: first={first} last={last}");
         }
+        // the alias kernel is the only one with tables to rebuild
+        let out = run(KernelKind::Alias);
+        assert!(out.alias_rebuilds > 0, "alias kernel never rebuilt a table");
+        let out = run(KernelKind::Sparse);
+        assert_eq!(out.alias_rebuilds, 0);
         // the dense kernel's supervised path is exact: no MH activity
         let out = run(KernelKind::Dense);
         assert_eq!((out.resp_proposed, out.resp_accepted), (0, 0));

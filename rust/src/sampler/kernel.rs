@@ -141,6 +141,14 @@ pub trait SamplerKernel {
     fn resp_mh_stats(&self) -> Option<(u64, u64)> {
         None
     }
+
+    /// Alias-table bookkeeping: cumulative `(rebuilds, resolved staleness
+    /// budget)` since construction; `None` for kernels without alias
+    /// tables. Feeds the training telemetry gauges/counters
+    /// (`cfslda_train_alias_*`).
+    fn alias_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Instantiate the kernel for the **training** path (`Auto` resolves by
@@ -983,6 +991,10 @@ pub struct AliasKernel {
     resp_mh: bool,
     resp_proposed: u64,
     resp_accepted: u64,
+    /// Cumulative table rebuilds (misses + staleness evictions) across all
+    /// words since construction — the telemetry counterweight to the
+    /// staleness budget.
+    rebuilds: u64,
 }
 
 impl AliasKernel {
@@ -997,6 +1009,7 @@ impl AliasKernel {
             resp_mh: false,
             resp_proposed: 0,
             resp_accepted: 0,
+            rebuilds: 0,
         }
     }
 
@@ -1045,6 +1058,7 @@ impl AliasKernel {
             table.rebuild_from(&self.weights, &mut self.scratch);
             self.built_rev[wi] = rev;
             self.uses[wi] = 0;
+            self.rebuilds += 1;
         }
         self.uses[wi] = self.uses[wi].wrapping_add(1);
     }
@@ -1223,6 +1237,10 @@ impl SamplerKernel for AliasKernel {
 
     fn resp_mh_stats(&self) -> Option<(u64, u64)> {
         self.resp_mh.then_some((self.resp_proposed, self.resp_accepted))
+    }
+
+    fn alias_stats(&self) -> Option<(u64, u64)> {
+        Some((self.rebuilds, self.staleness as u64))
     }
 }
 

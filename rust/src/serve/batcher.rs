@@ -1,18 +1,28 @@
 //! Micro-batching prediction queue.
 //!
 //! Connection handlers enqueue one work item per document and block on a
-//! per-request channel; a pool of worker threads drains the shared queue in
-//! batches of up to `max_batch`, waiting up to `max_wait_us` for
-//! concurrent requests to coalesce (the pipelined/batched inference idea of
-//! Yan et al.'s *Towards Big Topic Modeling*, applied to serving). Each
-//! worker owns a reusable [`DocInfer`] scratch, so the hot path allocates
-//! nothing beyond the zbar row.
+//! per-request [`Completion`] rendezvous; a pool of worker threads drains
+//! the shared queue in batches of up to `max_batch`, waiting up to
+//! `max_wait_us` for concurrent requests to coalesce (the
+//! pipelined/batched inference idea of Yan et al.'s *Towards Big Topic
+//! Modeling*, applied to serving). Each worker owns a reusable
+//! [`DocInfer`] scratch, so the hot path allocates nothing beyond the
+//! zbar row.
 //!
 //! Request documents are assembled into one flat [`TokenArena`] per request
 //! (the same CSR layout the training corpus uses — DESIGN.md §Memory
 //! layout): every per-document work item holds an `Arc` of the request's
 //! arena plus a doc index, so enqueueing N documents costs one token
 //! allocation, not N.
+//!
+//! **Allocation discipline.** The [`Completion`] replaces the old
+//! per-request `mpsc::channel` + results `Vec`: connections keep one
+//! `Arc<Completion>` and one results `Vec` in their scratch and recycle
+//! both across requests ([`Batcher::submit_streamed_into`]), so the
+//! warmed end-to-end `/predict` path enqueues, waits, and collects with
+//! zero heap allocations. Metrics land in preregistered
+//! [`ServeMetrics`](crate::obs::ServeMetrics) cells (relaxed atomics),
+//! which keeps that property.
 //!
 //! **Determinism.** Every document draws from a private RNG stream seeded
 //! by `doc_stream_seed(seed, token_hash(doc))` against an immutable
@@ -23,34 +33,15 @@
 
 use crate::config::schema::{KernelKind, TrainConfig};
 use crate::data::corpus::TokenArena;
+use crate::obs::ServeMetrics;
 use crate::sampler::gibbs_predict::{doc_stream_seed, token_hash, DocInfer};
 use crate::serve::registry::{ModelEntry, Registry};
 use crate::util::rng::Pcg64;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-
-/// Serving counters, shared by the batcher and the HTTP layer
-/// (`GET /stats` renders them).
-#[derive(Default)]
-pub struct ServeStats {
-    pub requests: AtomicU64,
-    pub predict_docs: AtomicU64,
-    pub batches: AtomicU64,
-    pub cache_hits: AtomicU64,
-    pub cache_misses: AtomicU64,
-    pub errors: AtomicU64,
-    pub reloads: AtomicU64,
-}
-
-impl ServeStats {
-    pub fn new() -> Self {
-        Self::default()
-    }
-}
 
 /// Batcher knobs (a resolved subset of `config::schema::ServeConfig`).
 #[derive(Clone)]
@@ -71,6 +62,69 @@ pub struct DocOut {
     pub cached: bool,
 }
 
+/// Reusable rendezvous between one submitting request and the workers
+/// resolving its documents. Holds a slot per document; workers fill slots
+/// and wake the submitter when the last one lands. Connections pool one
+/// of these (plus its slots `Vec`) across requests, so a warmed submit
+/// performs no heap allocation where the old per-request
+/// `mpsc::channel()` + results `Vec` allocated every time.
+#[derive(Default)]
+pub struct Completion {
+    inner: Mutex<CompletionInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct CompletionInner {
+    slots: Vec<Option<anyhow::Result<DocOut>>>,
+    remaining: usize,
+}
+
+impl Completion {
+    pub fn new() -> Completion {
+        Completion::default()
+    }
+
+    /// Reset for a request of `n` documents, keeping slot capacity.
+    fn arm(&self, n: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.slots.clear();
+        inner.slots.resize_with(n, || None);
+        inner.remaining = n;
+    }
+
+    /// Deliver one document's result. First write wins; the last write
+    /// standing wakes the submitter.
+    fn fill(&self, slot: usize, res: anyhow::Result<DocOut>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(s) = inner.slots.get_mut(slot) {
+            if s.is_none() {
+                *s = Some(res);
+                inner.remaining -= 1;
+                if inner.remaining == 0 {
+                    self.cv.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Block until every slot is filled, then move the results into `out`
+    /// (cleared first), preserving slot order.
+    fn wait_into(&self, out: &mut Vec<anyhow::Result<DocOut>>) {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.remaining > 0 {
+            inner = self.cv.wait(inner).unwrap();
+        }
+        out.clear();
+        out.extend(
+            inner
+                .slots
+                .drain(..)
+                .map(|o| o.unwrap_or_else(|| Err(anyhow::anyhow!("server shutting down")))),
+        );
+    }
+}
+
 struct WorkItem {
     /// The owning request's flat token arena, shared across its items.
     docs: Arc<TokenArena>,
@@ -78,13 +132,29 @@ struct WorkItem {
     doc: usize,
     seed: u64,
     slot: usize,
-    tx: mpsc::Sender<(usize, anyhow::Result<DocOut>)>,
+    comp: Arc<Completion>,
+    done: bool,
 }
 
 impl WorkItem {
     #[inline]
     fn tokens(&self) -> &[u32] {
         self.docs.doc(self.doc)
+    }
+
+    fn complete(&mut self, res: anyhow::Result<DocOut>) {
+        self.done = true;
+        self.comp.fill(self.slot, res);
+    }
+}
+
+impl Drop for WorkItem {
+    /// An item dropped unresolved (worker panic, queue torn down) still
+    /// releases its submitter instead of leaving it parked forever.
+    fn drop(&mut self) {
+        if !self.done {
+            self.comp.fill(self.slot, Err(anyhow::anyhow!("server shutting down")));
+        }
     }
 }
 
@@ -166,6 +236,7 @@ impl ArenaBuilder {
 /// The worker pool + queue handle. Dropping it drains and joins cleanly.
 pub struct Batcher {
     shared: Arc<Shared>,
+    stats: Arc<ServeMetrics>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -173,7 +244,7 @@ impl Batcher {
     pub fn start(
         cfg: BatcherConfig,
         registry: Arc<Registry>,
-        stats: Arc<ServeStats>,
+        stats: Arc<ServeMetrics>,
     ) -> Batcher {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -189,7 +260,7 @@ impl Batcher {
                 std::thread::spawn(move || worker_loop(&shared, &registry, &stats, &cfg))
             })
             .collect();
-        Batcher { shared, workers }
+        Batcher { shared, stats, workers }
     }
 
     /// Enqueue a request's documents and block until every one resolves.
@@ -202,21 +273,40 @@ impl Batcher {
     }
 
     /// [`Batcher::submit`] for a pre-assembled arena — the streaming codec
-    /// path: `protocol::parse_predict_streamed` fills an [`ArenaBuilder`]
-    /// straight from the wire and hands the result here without ever
-    /// staging per-document `Vec`s. The caller keeps (a clone of) the
-    /// `Arc` and can attempt [`Arc::try_unwrap`] afterwards to recycle the
-    /// buffers through [`ArenaBuilder::reclaim`].
+    /// path. Convenience wrapper that allocates a fresh [`Completion`] and
+    /// results `Vec` per call; the serve layer uses
+    /// [`Batcher::submit_streamed_into`] with pooled ones instead.
     pub fn submit_streamed(
         &self,
         arena: Arc<TokenArena>,
         seed: u64,
     ) -> Vec<anyhow::Result<DocOut>> {
+        let comp = Arc::new(Completion::new());
+        let mut out = Vec::new();
+        self.submit_streamed_into(arena, seed, &comp, &mut out);
+        out
+    }
+
+    /// Enqueue a pre-assembled arena and collect results through
+    /// caller-pooled buffers: `comp` is re-armed for this request and
+    /// `out` is cleared and filled in document order. With a warmed
+    /// `comp`/`out` (capacity from earlier requests) this path performs
+    /// no heap allocation beyond queue growth.
+    ///
+    /// `comp` must not be shared with a concurrently submitting request.
+    pub fn submit_streamed_into(
+        &self,
+        arena: Arc<TokenArena>,
+        seed: u64,
+        comp: &Arc<Completion>,
+        out: &mut Vec<anyhow::Result<DocOut>>,
+    ) {
         let n = arena.num_docs();
+        out.clear();
         if n == 0 {
-            return Vec::new();
+            return;
         }
-        let (tx, rx) = mpsc::channel();
+        comp.arm(n);
         {
             let mut q = self.shared.queue.lock().unwrap();
             for slot in 0..n {
@@ -225,27 +315,16 @@ impl Batcher {
                     doc: slot,
                     seed,
                     slot,
-                    tx: tx.clone(),
+                    comp: Arc::clone(comp),
+                    done: false,
                 });
             }
+            self.stats.queue_depth.set(q.len() as u64);
         }
         self.shared.cv.notify_all();
-        drop(tx);
-        let mut out: Vec<Option<anyhow::Result<DocOut>>> = (0..n).map(|_| None).collect();
-        let mut got = 0usize;
-        while got < n {
-            match rx.recv() {
-                Ok((slot, res)) => {
-                    if out[slot].replace(res).is_none() {
-                        got += 1;
-                    }
-                }
-                Err(_) => break, // workers gone: shutdown mid-request
-            }
-        }
-        out.into_iter()
-            .map(|o| o.unwrap_or_else(|| Err(anyhow::anyhow!("server shutting down"))))
-            .collect()
+        // Workers drain the queue even during shutdown, and dropped items
+        // fill their slot with an error, so every armed slot resolves.
+        comp.wait_into(out);
     }
 
     /// Queue depth right now (stats surface).
@@ -267,12 +346,13 @@ impl Drop for Batcher {
 fn worker_loop(
     shared: &Shared,
     registry: &Registry,
-    stats: &ServeStats,
+    stats: &ServeMetrics,
     cfg: &BatcherConfig,
 ) {
     let mut scratch: Option<DocInfer> = None;
     let mut zrow: Vec<f32> = Vec::new();
     loop {
+        let mut waited_us = 0u64;
         let batch = {
             let mut q = shared.queue.lock().unwrap();
             loop {
@@ -287,7 +367,8 @@ fn worker_loop(
             // Coalesce: hold the batch open briefly so concurrent requests
             // ride along, up to the batch ceiling.
             if cfg.max_wait_us > 0 && q.len() < cfg.max_batch {
-                let deadline = Instant::now() + Duration::from_micros(cfg.max_wait_us);
+                let start = Instant::now();
+                let deadline = start + Duration::from_micros(cfg.max_wait_us);
                 while q.len() < cfg.max_batch && !shared.shutdown.load(Ordering::SeqCst) {
                     let now = Instant::now();
                     if now >= deadline {
@@ -299,13 +380,17 @@ fn worker_loop(
                         break;
                     }
                 }
+                waited_us = start.elapsed().as_micros() as u64;
             }
             let take = q.len().min(cfg.max_batch);
-            q.drain(..take).collect::<Vec<WorkItem>>()
+            let batch = q.drain(..take).collect::<Vec<WorkItem>>();
+            stats.queue_depth.set(q.len() as u64);
+            batch
         };
         if batch.is_empty() {
             continue;
         }
+        stats.batch_wait.observe(waited_us);
         // One entry per batch: a hot-swap between batches is picked up
         // here; within a batch the model is immutable.
         let entry = registry.current();
@@ -315,14 +400,13 @@ fn worker_loop(
             zrow = vec![0.0f32; t];
         }
         let infer = scratch.as_mut().unwrap();
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.predict_docs.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        for item in batch {
+        stats.batches.inc();
+        stats.predict_docs.add(batch.len() as u64);
+        for mut item in batch {
             // Per-doc failures surface as the request's 4xx and are
             // counted once there (the HTTP layer), not per document.
             let res = predict_one(&entry, infer, &mut zrow, cfg, registry, stats, &item);
-            // Receiver may have given up (client disconnect): ignore.
-            let _ = item.tx.send((item.slot, res));
+            item.complete(res);
         }
     }
 }
@@ -333,7 +417,7 @@ fn predict_one(
     zrow: &mut [f32],
     cfg: &BatcherConfig,
     registry: &Registry,
-    stats: &ServeStats,
+    stats: &ServeMetrics,
     item: &WorkItem,
 ) -> anyhow::Result<DocOut> {
     let model = &entry.model;
@@ -345,10 +429,10 @@ fn predict_one(
     let hash = token_hash(tokens);
     let key = (entry.version, item.seed, hash);
     if let Some(yhat) = registry.cache_get(key) {
-        stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        stats.cache_hits.inc();
         return Ok(DocOut { yhat, model_version: entry.version, cached: true });
     }
-    stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+    stats.cache_misses.inc();
     let mut rng = Pcg64::seed_from_u64(doc_stream_seed(item.seed, hash));
     // The frozen-phi alias tables ride the entry Arc: built once at
     // load/hot-swap, shared by every worker (present whenever the
@@ -405,11 +489,11 @@ mod tests {
         workers: usize,
         max_batch: usize,
         cache: usize,
-    ) -> (Batcher, Arc<Registry>, Arc<ServeStats>, std::path::PathBuf) {
+    ) -> (Batcher, Arc<Registry>, Arc<ServeMetrics>, std::path::PathBuf) {
         let p = tmp(name);
         save_model_with_vocab(&tiny_model(5), None, &p).unwrap();
         let registry = Arc::new(Registry::open(&p, cache, true).unwrap());
-        let stats = Arc::new(ServeStats::new());
+        let stats = Arc::new(ServeMetrics::new());
         let cfg = BatcherConfig {
             workers,
             max_batch,
@@ -441,8 +525,9 @@ mod tests {
         let r3: Vec<f64> =
             b.submit(&d, 10).into_iter().map(|r| r.unwrap().yhat).collect();
         assert_ne!(r1, r3);
-        assert_eq!(stats.predict_docs.load(Ordering::Relaxed), 17 * 3);
-        assert!(stats.batches.load(Ordering::Relaxed) >= 3 * 5); // ceil(17/4) each
+        assert_eq!(stats.predict_docs.get(), 17 * 3);
+        assert!(stats.batches.get() >= 3 * 5); // ceil(17/4) each
+        assert_eq!(stats.batch_wait.snapshot().count(), stats.batches.get());
         drop(b);
         std::fs::remove_file(p).ok();
     }
@@ -471,7 +556,7 @@ mod tests {
                 assert_eq!(*y, solo[i][0], "doc {i} drifted under concurrency");
             }
         }
-        assert!(stats.errors.load(Ordering::Relaxed) == 0);
+        assert!(stats.errors.get() == 0);
         drop(b);
         std::fs::remove_file(p).ok();
     }
@@ -488,7 +573,7 @@ mod tests {
             first.iter().map(|o| o.yhat).collect::<Vec<_>>(),
             second.iter().map(|o| o.yhat).collect::<Vec<_>>()
         );
-        assert_eq!(stats.cache_hits.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.cache_hits.get(), 3);
 
         // one bad doc (token out of vocab) fails alone; empty doc too
         let mixed = vec![d[0].clone(), vec![9999], Vec::new(), d[1].clone()];
@@ -566,6 +651,28 @@ mod tests {
         assert_eq!(via_vecs, via_arena, "codec path must not change predictions");
         // Zero-doc arenas resolve immediately.
         assert!(b.submit_streamed(Arc::new(TokenArena::from_docs(&[])), 1).is_empty());
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pooled_completion_recycles_across_requests() {
+        let (b, _reg, stats, p) = start("pooled", 2, 4, 0);
+        let d = docs(5, 8);
+        let arena = Arc::new(TokenArena::from_docs(&d));
+        let comp = Arc::new(Completion::new());
+        let mut out = Vec::new();
+        let baseline: Vec<f64> =
+            b.submit(&d, 4).into_iter().map(|r| r.unwrap().yhat).collect();
+        for _ in 0..3 {
+            b.submit_streamed_into(Arc::clone(&arena), 4, &comp, &mut out);
+            let got: Vec<f64> = out.drain(..).map(|r| r.unwrap().yhat).collect();
+            assert_eq!(got, baseline, "pooled path must match the plain path");
+        }
+        assert!(stats.predict_docs.get() >= 20);
+        // Zero-doc submits leave out empty without arming anything.
+        b.submit_streamed_into(Arc::new(TokenArena::from_docs(&[])), 4, &comp, &mut out);
+        assert!(out.is_empty());
         drop(b);
         std::fs::remove_file(p).ok();
     }

@@ -70,6 +70,13 @@ pub struct CellResult {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Server-side request-duration percentiles for `POST /predict`, read
+    /// from the server's own latency histogram (`cfslda_request_duration_
+    /// seconds{endpoint="predict"}`) after the load run. Client-side
+    /// `p*_ms` include loopback + client scheduling; these do not.
+    pub server_p50_ms: f64,
+    pub server_p95_ms: f64,
+    pub server_p99_ms: f64,
     /// Steady-state heap allocations per request in the codec path
     /// (parse into arena + render response), measured by the counting
     /// allocator; `-1` when built without `--features bench-alloc`.
@@ -122,6 +129,102 @@ fn codec_allocs_per_request(body: &str, iters: usize) -> (f64, f64) {
 #[cfg(not(feature = "bench-alloc"))]
 fn codec_allocs_per_request(_body: &str, _iters: usize) -> (f64, f64) {
     (-1.0, -1.0)
+}
+
+/// Measure steady-state allocations for the **whole warmed request
+/// pipeline**: parse into the pooled arena, submit through the batcher
+/// with a pooled [`Completion`] + results `Vec`, render the response, and
+/// reclaim the arena. Unlike [`codec_allocs_per_request`] this includes
+/// the batcher queue hop and the worker's prediction (which allocates its
+/// sampling state), so it bounds the serve hot path from above. Runs with
+/// one worker before any cell's server boots (the counters are
+/// process-global).
+#[cfg(feature = "bench-alloc")]
+fn pipeline_allocs_per_request(
+    cfg: &ExperimentConfig,
+    model_path: &Path,
+    body: &str,
+    iters: usize,
+) -> anyhow::Result<(f64, f64)> {
+    use crate::config::json::JsonWriter;
+    use crate::serve::batcher::{ArenaBuilder, Batcher, BatcherConfig, Completion, DocOut};
+    use crate::serve::protocol;
+    use crate::serve::registry::Registry;
+    use crate::util::alloc_count;
+    use std::sync::Arc;
+
+    let registry = Arc::new(Registry::open(model_path, 0, true)?);
+    let stats = Arc::new(crate::obs::ServeMetrics::new());
+    let batcher = Batcher::start(
+        BatcherConfig {
+            workers: 1,
+            max_batch: cfg.serve.max_batch.max(1),
+            max_wait_us: 0,
+            kernel: cfg.sampler.kernel,
+            train: cfg.train.clone(),
+        },
+        registry,
+        stats,
+    );
+
+    let bytes = body.as_bytes();
+    let mut builder = ArenaBuilder::new();
+    let mut w = JsonWriter::with_capacity(1024);
+    let mut results: Vec<anyhow::Result<DocOut>> = Vec::new();
+    let mut yhat: Vec<f64> = Vec::new();
+    let comp = Arc::new(Completion::new());
+    let mut run_once = |builder: &mut ArenaBuilder,
+                        w: &mut JsonWriter,
+                        results: &mut Vec<anyhow::Result<DocOut>>,
+                        yhat: &mut Vec<f64>| {
+        let seed = protocol::parse_predict_streamed(bytes, builder)
+            .expect("bench body parses")
+            .unwrap_or(0);
+        let mut arena = Arc::new(builder.finish());
+        batcher.submit_streamed_into(Arc::clone(&arena), seed, &comp, results);
+        yhat.clear();
+        let mut version = 0;
+        for r in results.iter() {
+            let d = r.as_ref().expect("bench prediction succeeds");
+            yhat.push(d.yhat);
+            version = d.model_version;
+        }
+        protocol::predict_response_into(w, yhat, version, 0);
+        // The worker may still hold its (already-completed) item's arena
+        // Arc for an instant after waking us; spin briefly to reclaim.
+        for _ in 0..1000 {
+            match Arc::try_unwrap(arena) {
+                Ok(a) => {
+                    builder.reclaim(a);
+                    return;
+                }
+                Err(back) => {
+                    arena = back;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    };
+    for _ in 0..8 {
+        run_once(&mut builder, &mut w, &mut results, &mut yhat);
+    }
+    let before = alloc_count::snapshot();
+    for _ in 0..iters {
+        run_once(&mut builder, &mut w, &mut results, &mut yhat);
+    }
+    let (da, db) = alloc_count::delta(before);
+    drop(batcher);
+    Ok((da as f64 / iters as f64, db as f64 / iters as f64))
+}
+
+#[cfg(not(feature = "bench-alloc"))]
+fn pipeline_allocs_per_request(
+    _cfg: &ExperimentConfig,
+    _model_path: &Path,
+    _body: &str,
+    _iters: usize,
+) -> anyhow::Result<(f64, f64)> {
+    Ok((-1.0, -1.0))
 }
 
 fn gen_docs(rng: &mut Pcg64, n: usize, len: usize, vocab: usize) -> Vec<Vec<u32>> {
@@ -186,6 +289,9 @@ fn run_cell(
             Ok(lats)
         });
     let wall_secs = sw.elapsed_secs();
+    // Server-side latency distribution: this cell booted its own Server,
+    // so its metrics cover exactly this cell's traffic.
+    let hist = server.metrics().latency_for(crate::obs::Endpoint::Predict).snapshot();
     server.stop();
 
     let mut lats = Vec::new();
@@ -205,6 +311,9 @@ fn run_cell(
         p50_ms: quantile(&lats, 0.50) * 1e3,
         p95_ms: quantile(&lats, 0.95) * 1e3,
         p99_ms: quantile(&lats, 0.99) * 1e3,
+        server_p50_ms: hist.quantile(0.50) as f64 * 1e-3,
+        server_p95_ms: hist.quantile(0.95) as f64 * 1e-3,
+        server_p99_ms: hist.quantile(0.99) as f64 * 1e-3,
         // Filled in by run_bench from the per-batch codec measurement.
         allocs_per_request: -1.0,
         bytes_per_request: -1.0,
@@ -214,21 +323,28 @@ fn run_cell(
 fn render_table(results: &[CellResult]) -> String {
     let mut s = String::from("== bench: serve (loopback) ==\n");
     s.push_str(&format!(
-        "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12} {:>9} {:>9} {:>9} {:>11} {:>11}\n",
+        "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12} {:>9} {:>9} {:>9} {:>9} {:>11} {:>11}\n",
         "kernel", "workers", "batch", "requests", "docs", "docs/s", "p50(ms)", "p95(ms)",
-        "p99(ms)", "allocs/req", "bytes/req"
+        "p99(ms)", "sp95(ms)", "allocs/req", "bytes/req"
     ));
     for r in results {
         s.push_str(&format!(
-            "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2} {:>11.0}\n",
+            "{:<8} {:<8} {:>6} {:>9} {:>8} {:>12.1} {:>9.2} {:>9.2} {:>9.2} {:>9.2} \
+             {:>11.2} {:>11.0}\n",
             r.kernel, r.workers, r.batch, r.requests, r.docs, r.docs_per_sec, r.p50_ms,
-            r.p95_ms, r.p99_ms, r.allocs_per_request, r.bytes_per_request
+            r.p95_ms, r.p99_ms, r.server_p95_ms, r.allocs_per_request, r.bytes_per_request
         ));
     }
     s
 }
 
-fn results_json(opts: &BenchOptions, t: usize, w: usize, results: &[CellResult]) -> Value {
+fn results_json(
+    opts: &BenchOptions,
+    t: usize,
+    w: usize,
+    results: &[CellResult],
+    pipeline_allocs: &[(usize, (f64, f64))],
+) -> Value {
     let cells: Vec<Value> = results
         .iter()
         .map(|r| {
@@ -243,8 +359,21 @@ fn results_json(opts: &BenchOptions, t: usize, w: usize, results: &[CellResult])
                 ("p50_ms", Value::Number(r.p50_ms)),
                 ("p95_ms", Value::Number(r.p95_ms)),
                 ("p99_ms", Value::Number(r.p99_ms)),
+                ("server_p50_ms", Value::Number(r.server_p50_ms)),
+                ("server_p95_ms", Value::Number(r.server_p95_ms)),
+                ("server_p99_ms", Value::Number(r.server_p99_ms)),
                 ("allocs_per_request", Value::Number(r.allocs_per_request)),
                 ("bytes_per_request", Value::Number(r.bytes_per_request)),
+            ])
+        })
+        .collect();
+    let pipeline: Vec<Value> = pipeline_allocs
+        .iter()
+        .map(|&(batch, (a, b))| {
+            Value::object(vec![
+                ("batch", Value::Number(batch as f64)),
+                ("allocs_per_request", Value::Number(a)),
+                ("bytes_per_request", Value::Number(b)),
             ])
         })
         .collect();
@@ -261,6 +390,7 @@ fn results_json(opts: &BenchOptions, t: usize, w: usize, results: &[CellResult])
         ("seed", Value::Number(opts.seed as f64)),
         ("alloc_instrumented", Value::Bool(cfg!(feature = "bench-alloc"))),
         ("results", Value::Array(cells)),
+        ("pipeline", Value::Array(pipeline)),
     ])
 }
 
@@ -290,6 +420,26 @@ pub fn run_bench(
             (batch, codec_allocs_per_request(&docs_body(&docs, opts.seed), 64))
         })
         .collect();
+    // End-to-end pipeline allocation profile (codec + batcher hop with the
+    // pooled Completion + worker prediction), per batch size.
+    let pipeline_allocs: Vec<(usize, (f64, f64))> = opts
+        .batch_list
+        .iter()
+        .map(|&batch| {
+            let mut rng = Pcg64::seed_from_u64(opts.seed ^ 0x5eed ^ batch as u64);
+            let docs = gen_docs(&mut rng, batch, opts.doc_len, w);
+            let body = docs_body(&docs, opts.seed);
+            let (a, b) = pipeline_allocs_per_request(cfg_base, &opts.model_path, &body, 32)?;
+            Ok((batch, (a, b)))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    for &(batch, (a, b)) in &pipeline_allocs {
+        if a >= 0.0 {
+            log::info!(
+                "pipeline allocs batch={batch}: {a:.2} allocs/req, {b:.0} bytes/req"
+            );
+        }
+    }
     let mut results = Vec::new();
     for &kernel in &opts.kernel_list {
         for &workers in &opts.workers_list {
@@ -326,7 +476,7 @@ pub fn run_bench(
             }
         }
     }
-    let v = results_json(opts, t, w, &results);
+    let v = results_json(opts, t, w, &results, &pipeline_allocs);
     std::fs::write(&opts.out_json, json::to_string_pretty(&v))?;
     println!("wrote {}", opts.out_json.display());
     Ok(results)
@@ -359,14 +509,18 @@ mod tests {
             p50_ms: 1.0,
             p95_ms: 2.0,
             p99_ms: 3.0,
+            server_p50_ms: 0.5,
+            server_p95_ms: 1.5,
+            server_p99_ms: 2.5,
             allocs_per_request: 0.0,
             bytes_per_request: 0.0,
         };
         let table = render_table(&[cell.clone()]);
         assert!(table.contains("docs/s"));
         assert!(table.contains("160.0"));
+        assert!(table.contains("sp95(ms)"));
         let opts = BenchOptions::new(PathBuf::from("m.bin"), true);
-        let v = results_json(&opts, 8, 100, &[cell]);
+        let v = results_json(&opts, 8, 100, &[cell], &[(8, (3.0, 512.0))]);
         let parsed = json::parse(&json::to_string_pretty(&v)).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
         assert_eq!(
@@ -401,6 +555,16 @@ mod tests {
                 .get("bytes_per_request")
                 .is_some()
         );
+        assert_eq!(
+            parsed.get("results").unwrap().as_array().unwrap()[0]
+                .get("server_p95_ms")
+                .unwrap()
+                .as_f64(),
+            Some(1.5)
+        );
+        let pipe = parsed.get("pipeline").unwrap().as_array().unwrap();
+        assert_eq!(pipe[0].get("batch").unwrap().as_usize(), Some(8));
+        assert_eq!(pipe[0].get("allocs_per_request").unwrap().as_f64(), Some(3.0));
     }
 
     #[cfg(feature = "bench-alloc")]

@@ -280,8 +280,39 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Write a JSON response, assembling the head in a reusable scratch buffer
-/// first: one allocation-free format pass, then two `write_all` calls.
+/// `Content-Type` for JSON responses (everything except `/metrics`).
+pub const CT_JSON: &str = "application/json";
+/// `Content-Type` for Prometheus text exposition (`GET /metrics`).
+pub const CT_PROMETHEUS: &str = "text/plain; version=0.0.4";
+
+/// Write a response with an explicit content type, assembling the head in
+/// a reusable scratch buffer first: one allocation-free format pass, then
+/// two `write_all` calls.
+pub fn write_response_typed<W: Write>(
+    w: &mut W,
+    head: &mut Vec<u8>,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    head.clear();
+    write!(
+        head,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.write_all(head)?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// [`write_response_typed`] pinned to JSON — byte-identical framing to
+/// every release before `/metrics` existed.
 pub fn write_response_buffered<W: Write>(
     w: &mut W,
     head: &mut Vec<u8>,
@@ -289,18 +320,7 @@ pub fn write_response_buffered<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    head.clear();
-    write!(
-        head,
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-        status,
-        reason(status),
-        body.len(),
-        if keep_alive { "keep-alive" } else { "close" }
-    )?;
-    w.write_all(head)?;
-    w.write_all(body)?;
-    w.flush()
+    write_response_typed(w, head, status, CT_JSON, body, keep_alive)
 }
 
 /// Write a JSON response (one-shot convenience; the connection loop uses
@@ -483,6 +503,17 @@ mod tests {
         let mut out2 = Vec::new();
         write_response(&mut out2, 200, "{\"ok\":true}", true).unwrap();
         assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn typed_response_framing() {
+        let mut out = Vec::new();
+        let mut head = Vec::new();
+        write_response_typed(&mut out, &mut head, 200, CT_PROMETHEUS, b"m 1\n", true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Content-Type: text/plain; version=0.0.4\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 4\r\n"));
+        assert!(s.ends_with("m 1\n"));
     }
 
     #[test]

@@ -8,7 +8,10 @@
 //! * [`http`] — request/response framing over `std::net` (no async
 //!   runtime in the vendored-offline build) plus the keep-alive client
 //!   used by the bench harness and tests.
-//! * [`protocol`] — JSON wire types for the five endpoints.
+//! * [`protocol`] — JSON wire types for the JSON endpoints (`/predict`,
+//!   `/predict/text`, `/reload`, `/healthz`, `/stats`); `GET /metrics`
+//!   serves Prometheus text format straight from the preregistered
+//!   [`crate::obs`] cells (DESIGN.md §Observability).
 //! * [`registry`] — versioned model slots, atomic hot-swap on `/reload`
 //!   (in-flight requests drain on the old `Arc`), and the doc-level LRU
 //!   prediction cache.

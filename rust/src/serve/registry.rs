@@ -161,6 +161,12 @@ impl Registry {
         }
         *self.current.write().unwrap() = entry.clone();
         self.cache.lock().unwrap().clear();
+        log::info!(
+            "model hot-swap: now serving version {} from {:?} (alias build {:.3}s)",
+            entry.version,
+            entry.path,
+            entry.alias_build_secs
+        );
         Ok(entry)
     }
 

@@ -4,6 +4,9 @@
 //!
 //! * `GET  /healthz`      — liveness + current model version.
 //! * `GET  /stats`        — serving counters, cache + batcher state.
+//! * `GET  /metrics`      — Prometheus text exposition (DESIGN.md
+//!   §Observability): per-endpoint latency histograms, batcher/cache
+//!   counters, training telemetry.
 //! * `POST /predict`      — BoW batches through the micro-batcher.
 //! * `POST /predict/text` — raw text, tokenized against the persisted
 //!   vocabulary (400 when the model was saved without one).
@@ -16,15 +19,19 @@
 //!
 //! Allocation discipline (DESIGN.md §Serving, "Streaming codec"): each
 //! connection owns a [`ConnScratch`] — request-head/body buffers, a
-//! [`JsonWriter`], an [`ArenaBuilder`] and the yhat staging vector — so a
-//! warmed keep-alive connection parses `/predict` bodies straight into the
-//! arena and serializes responses without touching the heap.
+//! [`JsonWriter`], an [`ArenaBuilder`], a pooled batcher [`Completion`]
+//! and the results/yhat staging vectors — so a warmed keep-alive
+//! connection parses `/predict` bodies straight into the arena, rides the
+//! batcher, and serializes responses without touching the heap. Metric
+//! recording is relaxed atomics on preregistered cells and keeps that
+//! property.
 
 use crate::config::json::JsonWriter;
 use crate::config::schema::ExperimentConfig;
 use crate::data::corpus::TokenArena;
 use crate::data::tokenizer::{tokenize, TokenizerConfig};
-use crate::serve::batcher::{ArenaBuilder, Batcher, BatcherConfig, ServeStats};
+use crate::obs::{Endpoint, ServeMetrics};
+use crate::serve::batcher::{ArenaBuilder, Batcher, BatcherConfig, Completion, DocOut};
 use crate::serve::http::{self, RequestScratch};
 use crate::serve::protocol;
 use crate::serve::registry::Registry;
@@ -41,16 +48,27 @@ use std::time::{Duration, Instant};
 struct State {
     registry: Arc<Registry>,
     batcher: Batcher,
-    stats: Arc<ServeStats>,
+    stats: Arc<ServeMetrics>,
     started: Instant,
     default_seed: u64,
     workers: usize,
     tok_cfg: TokenizerConfig,
+    /// `[obs] latency_histograms` — record per-endpoint latency when set.
+    latency_hist: bool,
+}
+
+/// Which scratch buffer holds the response body for the current request.
+enum BodyKind {
+    /// `out.writer` (JSON, the default).
+    Json,
+    /// `out.metrics_buf` (Prometheus text exposition).
+    Metrics,
 }
 
 /// Per-connection reusable buffers. Everything the hot path writes into
 /// lives here and is recycled across keep-alive requests; only the cold
-/// paths (errors, `/stats`, `/predict/text`) allocate per request.
+/// paths (errors, `/stats`, `/predict/text` tokenization) allocate per
+/// request.
 struct ConnScratch {
     /// Response body under construction (also reused for error bodies).
     writer: JsonWriter,
@@ -61,8 +79,16 @@ struct ConnScratch {
     builder: ArenaBuilder,
     /// `/predict/text` rows.
     texts: Vec<String>,
+    /// Pooled batcher rendezvous, re-armed per request.
+    comp: Arc<Completion>,
+    /// Per-document batcher results, drained into `yhat` per request.
+    results: Vec<anyhow::Result<DocOut>>,
     /// Per-request responses collected from the batcher before rendering.
     yhat: Vec<f64>,
+    /// `GET /metrics` exposition body (reused across scrapes).
+    metrics_buf: String,
+    /// Selects the body buffer when writing the response.
+    body_kind: BodyKind,
 }
 
 impl ConnScratch {
@@ -72,7 +98,11 @@ impl ConnScratch {
             head: Vec::with_capacity(128),
             builder: ArenaBuilder::new(),
             texts: Vec::new(),
+            comp: Arc::new(Completion::new()),
+            results: Vec::new(),
             yhat: Vec::new(),
+            metrics_buf: String::new(),
+            body_kind: BodyKind::Json,
         }
     }
 }
@@ -102,7 +132,7 @@ impl Server {
         );
         let registry =
             Arc::new(Registry::open(model_path, cfg.serve.cache_capacity, build_alias)?);
-        let stats = Arc::new(ServeStats::new());
+        let stats = Arc::new(ServeMetrics::new());
         let workers = if cfg.serve.workers == 0 { num_cpus() } else { cfg.serve.workers };
         let batcher = Batcher::start(
             BatcherConfig {
@@ -123,6 +153,7 @@ impl Server {
             default_seed: cfg.seed,
             workers,
             tok_cfg: TokenizerConfig::default(),
+            latency_hist: cfg.obs.latency_histograms,
         });
 
         let listener = TcpListener::bind(&cfg.serve.addr)
@@ -146,6 +177,11 @@ impl Server {
     /// Current model version (diagnostics).
     pub fn model_version(&self) -> u64 {
         self.state.registry.current().version
+    }
+
+    /// This server's metric cells (benches read histograms from here).
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.state.stats)
     }
 
     /// Stop accepting and join the accept loop. Existing keep-alive
@@ -223,25 +259,37 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
         match http::read_request_into(&mut reader, &mut req) {
             Ok(false) => return, // peer closed
             Ok(true) => {
-                state.stats.requests.fetch_add(1, Ordering::Relaxed);
+                state.stats.requests.inc();
                 let keep_alive = !req.wants_close();
+                // Latency covers handler + response write: the span a
+                // client actually waits once its request is parsed.
+                let t0 = Instant::now();
+                let ep = Endpoint::classify(req.method(), req.path());
                 let status = route(&state, &req, &mut out);
                 if status >= 400 {
-                    state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    state.stats.errors.inc();
                 }
-                let write_ok = http::write_response_buffered(
+                let (body, ctype): (&[u8], &str) = match out.body_kind {
+                    BodyKind::Json => (out.writer.as_str().as_bytes(), http::CT_JSON),
+                    BodyKind::Metrics => (out.metrics_buf.as_bytes(), http::CT_PROMETHEUS),
+                };
+                let write_ok = http::write_response_typed(
                     &mut writer,
                     &mut out.head,
                     status,
-                    out.writer.as_str().as_bytes(),
+                    ctype,
+                    body,
                     keep_alive,
                 );
+                if state.latency_hist {
+                    state.stats.latency_for(ep).observe(t0.elapsed().as_micros() as u64);
+                }
                 if write_ok.is_err() || !keep_alive {
                     return;
                 }
             }
             Err(e) => {
-                state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                state.stats.errors.inc();
                 protocol::error_response_into(&mut out.writer, &format!("{e:#}"));
                 let _ = http::write_response_buffered(
                     &mut writer,
@@ -256,12 +304,15 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
     }
 }
 
-/// Dispatch one parsed request. The response body is left in
-/// `out.writer`; the returned status selects the head line.
+/// Dispatch one parsed request. The response body is left in the scratch
+/// buffer selected by `out.body_kind`; the returned status selects the
+/// head line.
 fn route(state: &State, req: &RequestScratch, out: &mut ConnScratch) -> u16 {
+    out.body_kind = BodyKind::Json;
     let res = match (req.method(), req.path()) {
         ("GET", "/healthz") => handle_healthz(state, &mut out.writer),
         ("GET", "/stats") => handle_stats(state, &mut out.writer),
+        ("GET", "/metrics") => handle_metrics(state, out),
         ("POST", "/predict") => handle_predict(state, req, out),
         ("POST", "/predict/text") => handle_predict_text(state, req, out),
         ("POST", "/reload") => handle_reload(state, req, &mut out.writer),
@@ -273,6 +324,7 @@ fn route(state: &State, req: &RequestScratch, out: &mut ConnScratch) -> u16 {
     match res {
         Ok(()) => 200,
         Err(e) => {
+            out.body_kind = BodyKind::Json;
             protocol::error_response_into(&mut out.writer, &e.msg);
             e.status
         }
@@ -322,8 +374,8 @@ fn handle_healthz(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
 fn handle_stats(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
     let s = &state.stats;
     let entry = state.registry.current();
-    let batches = s.batches.load(Ordering::Relaxed);
-    let docs = s.predict_docs.load(Ordering::Relaxed);
+    let batches = s.batches.get();
+    let docs = s.predict_docs.get();
     let mean_batch =
         if batches > 0 { docs as f64 / batches as f64 } else { 0.0 };
     w.clear();
@@ -339,11 +391,11 @@ fn handle_stats(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
     w.key("cache_entries");
     w.number_f64(state.registry.cache_len() as f64);
     w.key("cache_hits");
-    w.number_f64(s.cache_hits.load(Ordering::Relaxed) as f64);
+    w.number_f64(s.cache_hits.get() as f64);
     w.key("cache_misses");
-    w.number_f64(s.cache_misses.load(Ordering::Relaxed) as f64);
+    w.number_f64(s.cache_misses.get() as f64);
     w.key("errors");
-    w.number_f64(s.errors.load(Ordering::Relaxed) as f64);
+    w.number_f64(s.errors.get() as f64);
     w.key("mean_batch");
     w.number_f64(mean_batch);
     w.key("model_version");
@@ -351,9 +403,9 @@ fn handle_stats(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
     w.key("predict_docs");
     w.number_f64(docs as f64);
     w.key("reloads");
-    w.number_f64(s.reloads.load(Ordering::Relaxed) as f64);
+    w.number_f64(s.reloads.get() as f64);
     w.key("requests");
-    w.number_f64(s.requests.load(Ordering::Relaxed) as f64);
+    w.number_f64(s.requests.get() as f64);
     w.key("uptime_secs");
     w.number_f64(state.started.elapsed().as_secs_f64());
     w.key("versions");
@@ -377,38 +429,44 @@ fn handle_stats(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
     Ok(())
 }
 
+fn handle_metrics(state: &State, out: &mut ConnScratch) -> Result<(), HttpError> {
+    crate::obs::render_prometheus(&state.stats, &mut out.metrics_buf);
+    out.body_kind = BodyKind::Metrics;
+    Ok(())
+}
+
 /// Attempts per request when a hot-swap races the batcher: predictions
 /// are deterministic and cached, so a retry is cheap and converges as
 /// soon as one full pass runs against a single model version.
 const SWAP_RACE_RETRIES: usize = 3;
 
-/// Submit an arena and render a response into `w` **if** every document
-/// resolved under the same model version (`want` additionally pins which
-/// one, for the text path whose token ids are only meaningful under the
-/// vocabulary they were encoded with). `Ok(false)` = a hot swap landed
-/// mid-request; the caller re-submits.
+/// Submit an arena through the connection's pooled completion and render
+/// a response into `out.writer` **if** every document resolved under the
+/// same model version (`want` additionally pins which one, for the text
+/// path whose token ids are only meaningful under the vocabulary they
+/// were encoded with). `Ok(false)` = a hot swap landed mid-request; the
+/// caller re-submits.
 fn submit_uniform(
     state: &State,
     arena: &Arc<TokenArena>,
     seed: u64,
     want: Option<u64>,
-    yhat: &mut Vec<f64>,
-    w: &mut JsonWriter,
+    out: &mut ConnScratch,
 ) -> Result<bool, HttpError> {
-    let results = state.batcher.submit_streamed(Arc::clone(arena), seed);
-    yhat.clear();
+    state.batcher.submit_streamed_into(Arc::clone(arena), seed, &out.comp, &mut out.results);
+    out.yhat.clear();
     let mut version: Option<u64> = None;
     let mut cached = 0usize;
-    for (i, r) in results.into_iter().enumerate() {
+    for (i, r) in out.results.drain(..).enumerate() {
         match r {
-            Ok(out) => {
+            Ok(d) => {
                 match version {
-                    None => version = Some(out.model_version),
-                    Some(v) if v != out.model_version => return Ok(false),
+                    None => version = Some(d.model_version),
+                    Some(v) if v != d.model_version => return Ok(false),
                     Some(_) => {}
                 }
-                yhat.push(out.yhat);
-                cached += out.cached as usize;
+                out.yhat.push(d.yhat);
+                cached += d.cached as usize;
             }
             Err(e) => return Err(bad_request(format!("doc {i}: {e:#}"))),
         }
@@ -419,7 +477,7 @@ fn submit_uniform(
             return Ok(false);
         }
     }
-    protocol::predict_response_into(w, yhat, version, cached);
+    protocol::predict_response_into(&mut out.writer, &out.yhat, version, cached);
     Ok(true)
 }
 
@@ -434,7 +492,7 @@ fn handle_predict(
     let arena = Arc::new(out.builder.finish());
     let mut outcome: Result<bool, HttpError> = Ok(false);
     for _ in 0..SWAP_RACE_RETRIES {
-        outcome = submit_uniform(state, &arena, seed, None, &mut out.yhat, &mut out.writer);
+        outcome = submit_uniform(state, &arena, seed, None, out);
         if !matches!(outcome, Ok(false)) {
             break;
         }
@@ -469,26 +527,29 @@ fn handle_predict_text(
             "model was saved without a vocabulary; re-train with `cfslda train` \
              on a raw-text corpus (or pass --vocab) to enable /predict/text",
         ))?;
-        let mut docs = Vec::with_capacity(out.texts.len());
+        // Encode straight into the connection's arena builder — no
+        // per-document `Vec<Vec<u32>>` staging; out-of-vocabulary tokens
+        // drop exactly as `Vocab::encode` drops them.
+        out.builder.clear();
         for (i, text) in out.texts.iter().enumerate() {
-            let toks = tokenize(text, &state.tok_cfg);
-            let enc = vocab.encode(&toks);
-            if enc.is_empty() {
+            for tok in tokenize(text, &state.tok_cfg) {
+                if let Some(id) = vocab.id(&tok) {
+                    out.builder.push_token(id);
+                }
+            }
+            if out.builder.cur_doc_len() == 0 {
+                out.builder.clear();
                 return Err(bad_request(format!(
                     "text {i} has no in-vocabulary tokens after tokenization"
                 )));
             }
-            docs.push(enc);
+            out.builder.end_doc().map_err(|e| bad_request(format!("{e:#}")))?;
         }
-        let arena = Arc::new(TokenArena::from_docs(&docs));
-        let done = submit_uniform(
-            state,
-            &arena,
-            seed,
-            Some(entry.version),
-            &mut out.yhat,
-            &mut out.writer,
-        )?;
+        let arena = Arc::new(out.builder.finish());
+        let done = submit_uniform(state, &arena, seed, Some(entry.version), out)?;
+        if let Ok(a) = Arc::try_unwrap(arena) {
+            out.builder.reclaim(a);
+        }
         if done {
             return Ok(());
         }
@@ -507,7 +568,7 @@ fn handle_reload(
         .registry
         .reload(path.as_deref().map(Path::new))
         .map_err(|e| server_error(format!("{e:#}")))?;
-    state.stats.reloads.fetch_add(1, Ordering::Relaxed);
+    state.stats.reloads.inc();
     w.clear();
     w.begin_object();
     w.key("model_version");
@@ -552,7 +613,7 @@ pub fn run_blocking(opts: RunOptions) -> anyhow::Result<()> {
         let mut f = std::fs::File::create(pf)?;
         writeln!(f, "{}", server.local_addr())?;
     }
-    log::info!("endpoints: POST /predict /predict/text /reload; GET /healthz /stats");
+    log::info!("endpoints: POST /predict /predict/text /reload; GET /healthz /stats /metrics");
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }

@@ -1,7 +1,12 @@
 //! Minimal stderr logger backing the `log` facade.
 //!
-//! Level comes from `CFSLDA_LOG` (error|warn|info|debug|trace, default
-//! info). Install once at process start (`main.rs`, example binaries).
+//! Level comes from `CFSLDA_LOG` (off|error|warn|info|debug|trace, default
+//! info; an unrecognized value falls back to info with a one-time warning).
+//! Install once at process start (`main.rs`, example binaries).
+//!
+//! Every record at `warn` or above is also counted into the global metrics
+//! registry ([`crate::obs::LogMetrics`]), so `/metrics` reflects log noise
+//! without anything scraping stderr.
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::time::Instant;
@@ -16,6 +21,13 @@ impl log::Log for StderrLogger {
     }
 
     fn log(&self, record: &Record) {
+        // Count warn/error records whether or not they pass the stderr
+        // filter: running at CFSLDA_LOG=off must not blind the counters.
+        match record.level() {
+            Level::Error => crate::obs::registry().log.errors.inc(),
+            Level::Warn => crate::obs::registry().log.warns.inc(),
+            _ => {}
+        }
         if self.enabled(record.metadata()) {
             let t = self.start.elapsed().as_secs_f64();
             let lvl = match record.level() {
@@ -32,27 +44,76 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Parse a `CFSLDA_LOG` value. `None` means unrecognized (caller decides
+/// the fallback); the empty string counts as unset, not unrecognized.
+pub fn parse_filter(s: &str) -> Option<LevelFilter> {
+    Some(match s {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "" | "info" => LevelFilter::Info,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => return None,
+    })
+}
+
 /// Install the logger (idempotent — later calls are no-ops).
 pub fn init() {
-    let level = match std::env::var("CFSLDA_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+    let raw = std::env::var("CFSLDA_LOG").unwrap_or_default();
+    let (level, unknown) = match parse_filter(&raw) {
+        Some(l) => (l, false),
+        None => (LevelFilter::Info, true),
     };
     let logger = Box::new(StderrLogger { start: Instant::now() });
     if log::set_boxed_logger(logger).is_ok() {
         log::set_max_level(level);
+        if unknown {
+            // Once per process by construction: only the installing call
+            // reaches this branch.
+            log::warn!(
+                "unrecognized CFSLDA_LOG value {raw:?}; \
+                 expected off|error|warn|info|debug|trace, using info"
+            );
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use log::LevelFilter;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn parse_filter_accepts_all_levels_and_rejects_garbage() {
+        assert_eq!(super::parse_filter("off"), Some(LevelFilter::Off));
+        assert_eq!(super::parse_filter("error"), Some(LevelFilter::Error));
+        assert_eq!(super::parse_filter("warn"), Some(LevelFilter::Warn));
+        assert_eq!(super::parse_filter(""), Some(LevelFilter::Info));
+        assert_eq!(super::parse_filter("info"), Some(LevelFilter::Info));
+        assert_eq!(super::parse_filter("debug"), Some(LevelFilter::Debug));
+        assert_eq!(super::parse_filter("trace"), Some(LevelFilter::Trace));
+        assert_eq!(super::parse_filter("verbose"), None);
+        assert_eq!(super::parse_filter("WARN"), None, "values are lowercase");
+    }
+
+    #[test]
+    fn warn_and_error_records_land_in_the_obs_counters() {
+        super::init();
+        let log_metrics = &crate::obs::registry().log;
+        let (w0, e0) = (log_metrics.warns.get(), log_metrics.errors.get());
+        log::warn!("counted warn");
+        log::error!("counted error");
+        log::info!("not counted");
+        // Counters are global; other tests may log warnings concurrently,
+        // so assert at-least movement.
+        assert!(log_metrics.warns.get() >= w0 + 1);
+        assert!(log_metrics.errors.get() >= e0 + 1);
     }
 }

@@ -1,0 +1,253 @@
+//! End-to-end observability test: boot a real server, drive scripted
+//! traffic (cache hits, an error, repeated predicts), and scrape
+//! `GET /metrics` over actual HTTP. Asserts the exposition is
+//! line-by-line valid Prometheus text format and that the series move
+//! the way the traffic says they must.
+//!
+//! Byte-stability of the renderer across identical states is covered
+//! in-process by `obs::expo` unit tests — over HTTP each scrape
+//! increments the request counters, so two scrapes are never identical.
+
+use cfslda::config::schema::ExperimentConfig;
+use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
+use cfslda::data::vocab::Vocab;
+use cfslda::model::persist::save_model_with_vocab;
+use cfslda::runtime::EngineHandle;
+use cfslda::sampler::gibbs_train::train;
+use cfslda::serve::http::{request_once, Client};
+use cfslda::serve::server::Server;
+use cfslda::util::rng::Pcg64;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("cfslda_it_obs_{}_{name}", std::process::id()));
+    p
+}
+
+fn quick_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::quick();
+    c.train.sweeps = 15;
+    c.train.burnin = 3;
+    c.train.predict_sweeps = 6;
+    c.train.predict_burnin = 2;
+    c.serve.addr = "127.0.0.1:0".to_string();
+    c.serve.workers = 2;
+    c.serve.max_batch = 8;
+    c.serve.max_wait_us = 200;
+    c.serve.cache_capacity = 64;
+    c
+}
+
+fn trained_model(name: &str, seed: u64) -> PathBuf {
+    let spec = SyntheticSpec::continuous_small();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let corpus = generate_corpus(&spec, &mut rng);
+    let engine = EngineHandle::native();
+    let out = train(&corpus, &quick_cfg(), &engine, &mut rng).unwrap();
+    let vocab =
+        Vocab::from_terms((0..out.model.w).map(|i| format!("word{i}"))).unwrap();
+    let path = tmp(name);
+    save_model_with_vocab(&out.model, Some(&vocab), &path).unwrap();
+    path
+}
+
+/// Value of a sample whose series part (name + optional labels) matches
+/// `series` exactly, e.g. `cfslda_http_requests_total` or
+/// `cfslda_request_duration_seconds_count{endpoint="predict"}`.
+fn sample(body: &str, series: &str) -> f64 {
+    for line in body.lines() {
+        if let Some((s, v)) = line.rsplit_once(' ') {
+            if s == series {
+                return v.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+            }
+        }
+    }
+    panic!("series {series:?} not found in exposition");
+}
+
+/// Every line is either a `# HELP`/`# TYPE` comment or `series value`
+/// with a float-parseable value, and every `# TYPE` names a known kind.
+fn assert_valid_exposition(body: &str) {
+    assert!(!body.is_empty());
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("HELP ") || rest.starts_with("TYPE "),
+                "unknown comment {line:?}"
+            );
+            if let Some(t) = rest.strip_prefix("TYPE ") {
+                let kind = t.rsplit(' ').next().unwrap();
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "histogram"),
+                    "unknown metric type in {line:?}"
+                );
+            }
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("space-separated sample");
+        assert!(series.starts_with("cfslda_"), "foreign series {line:?}");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        assert!(v >= 0.0, "negative sample in {line:?}");
+        samples += 1;
+    }
+    assert!(samples > 20, "suspiciously small exposition ({samples} samples)");
+}
+
+/// Cumulative histogram buckets must be non-decreasing in `le` order and
+/// the `+Inf` bucket must equal `_count`.
+fn assert_histogram_shape(body: &str, name: &str, label: &str) {
+    let prefix = if label.is_empty() {
+        format!("{name}_bucket{{le=\"")
+    } else {
+        format!("{name}_bucket{{{label},le=\"")
+    };
+    let mut last = 0.0f64;
+    let mut inf = f64::NAN;
+    let mut seen = 0usize;
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix(&prefix) {
+            let (_, v) = line.rsplit_once(' ').unwrap();
+            let c: f64 = v.parse().unwrap();
+            assert!(c >= last, "non-monotonic cumulative bucket {line:?}");
+            last = c;
+            seen += 1;
+            if rest.starts_with("+Inf") {
+                inf = c;
+            }
+        }
+    }
+    assert!(seen > 1, "no buckets found for {prefix:?}");
+    let count_series = if label.is_empty() {
+        format!("{name}_count")
+    } else {
+        format!("{name}_count{{{label}}}")
+    };
+    assert_eq!(inf, sample(body, &count_series), "{count_series} != +Inf bucket");
+}
+
+#[test]
+fn metrics_endpoint_is_valid_and_series_move_under_load() {
+    let path = trained_model("metrics.bin", 11);
+    let server = Server::start(&path, &quick_cfg()).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Scripted traffic: 3 predicts (one repeated -> cache hits), one
+    // malformed request (-> errors counter), one healthz.
+    let req = r#"{"docs": [[0, 1, 2, 3], [4, 5]], "seed": 9}"#;
+    for _ in 0..2 {
+        let (s, b) = client.request("POST", "/predict", req).unwrap();
+        assert_eq!(s, 200, "{b}");
+    }
+    let (s, _) = client.request("POST", "/predict", r#"{"docs": [[5, 5, 5]], "seed": 1}"#).unwrap();
+    assert_eq!(s, 200);
+    let (s, _) = client.request("POST", "/predict", "not json").unwrap();
+    assert_eq!(s, 400);
+    let (s, _) = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(s, 200);
+
+    let (s1, scrape1) = client.request("GET", "/metrics", "").unwrap();
+    assert_eq!(s1, 200, "{scrape1}");
+    assert_valid_exposition(&scrape1);
+
+    // Traffic-driven minimums. The training counters are process-global
+    // and other tests may run concurrently, so serve-side counters (which
+    // belong to this server instance alone) get exact lower bounds.
+    assert!(sample(&scrape1, "cfslda_http_requests_total") >= 6.0);
+    assert!(sample(&scrape1, "cfslda_http_errors_total") >= 1.0);
+    assert!(sample(&scrape1, "cfslda_predict_docs_total") >= 5.0);
+    assert!(sample(&scrape1, "cfslda_predict_batches_total") >= 1.0);
+    // Second identical request was served from the LRU cache.
+    assert!(sample(&scrape1, "cfslda_cache_hits_total") >= 2.0);
+    assert!(sample(&scrape1, "cfslda_cache_misses_total") >= 2.0);
+    // Latency histograms are on by default: every predict observed once.
+    assert!(
+        sample(&scrape1, "cfslda_request_duration_seconds_count{endpoint=\"predict\"}") >= 4.0
+    );
+    assert!(
+        sample(&scrape1, "cfslda_request_duration_seconds_sum{endpoint=\"predict\"}") > 0.0
+    );
+    // This process trained a model in `trained_model`, so the global
+    // training registry has moved.
+    assert!(sample(&scrape1, "cfslda_train_sweeps_total") >= 15.0);
+    assert!(sample(&scrape1, "cfslda_train_tokens_total") > 0.0);
+
+    assert_histogram_shape(&scrape1, "cfslda_request_duration_seconds", "endpoint=\"predict\"");
+    assert_histogram_shape(&scrape1, "cfslda_batch_wait_seconds", "");
+
+    // A second scrape strictly advances the request counter (the first
+    // scrape itself was a request) and observes the scrape latency.
+    let (s2, scrape2) = client.request("GET", "/metrics", "").unwrap();
+    assert_eq!(s2, 200);
+    assert_valid_exposition(&scrape2);
+    assert!(
+        sample(&scrape2, "cfslda_http_requests_total")
+            > sample(&scrape1, "cfslda_http_requests_total")
+    );
+    assert!(
+        sample(&scrape2, "cfslda_request_duration_seconds_count{endpoint=\"metrics\"}")
+            >= 1.0
+    );
+
+    // `/stats` still serves the legacy JSON view off the same counters.
+    let (ss, bs) = client.request("GET", "/stats", "").unwrap();
+    assert_eq!(ss, 200);
+    let v = cfslda::config::json::parse(&bs).unwrap();
+    assert!(v.get("requests").unwrap().as_f64().unwrap() >= 7.0);
+
+    server.stop();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn metrics_endpoint_uses_prometheus_content_type() {
+    let path = trained_model("ctype.bin", 12);
+    let server = Server::start(&path, &quick_cfg()).unwrap();
+    let addr = server.local_addr();
+
+    // The test client discards headers, so speak raw HTTP for this one.
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: cfslda\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    assert!(
+        head.contains("Content-Type: text/plain; version=0.0.4"),
+        "missing Prometheus content type: {head}"
+    );
+    assert_valid_exposition(body);
+
+    server.stop();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn latency_histograms_can_be_disabled() {
+    let path = trained_model("nolat.bin", 13);
+    let mut cfg = quick_cfg();
+    cfg.obs.latency_histograms = false;
+    let server = Server::start(&path, &cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let (s, b) =
+        request_once(&addr, "POST", "/predict", r#"{"docs": [[0, 1]], "seed": 3}"#).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let (s, scrape) = request_once(&addr, "GET", "/metrics", "").unwrap();
+    assert_eq!(s, 200);
+    assert_valid_exposition(&scrape);
+    // Counters still move; the per-endpoint duration histograms do not.
+    assert!(sample(&scrape, "cfslda_http_requests_total") >= 2.0);
+    assert_eq!(
+        sample(&scrape, "cfslda_request_duration_seconds_count{endpoint=\"predict\"}"),
+        0.0
+    );
+
+    server.stop();
+    std::fs::remove_file(path).ok();
+}
