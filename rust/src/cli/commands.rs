@@ -2,7 +2,9 @@
 
 use super::args::Args;
 use crate::config::json::{self, Value};
-use crate::config::schema::{EngineKind, ExperimentConfig, KernelKind, RespMode, ResponseKind};
+use crate::config::schema::{
+    EngineKind, ExperimentConfig, KernelKind, RespMode, ResponseKind, ServeBackend,
+};
 use crate::data::loader;
 use crate::data::partition::train_test_split;
 use crate::data::stats::{corpus_stats, label_report};
@@ -63,6 +65,22 @@ COMMANDS:
               --model MODEL.bin [--addr HOST:PORT] [--port N]
               [--workers N] [--max-batch N] [--max-wait-us N] [--cache N]
               [--seed S] [--kernel K] [--config CFG.json] [--port-file F]
+              [--backend threads|epoll] [--max-conns N]
+              [--queue-depth-max N] [--idle-timeout-ms N]
+              [--read-timeout-ms N]
+              --backend picks the connection engine: threads = one
+              blocking handler thread per connection (portable
+              fallback); epoll = one non-blocking readiness event loop
+              for all connections (10k+ concurrent, Linux only).
+              Responses are byte-identical across backends for the same
+              (model, seed, doc).
+              Admission control: past --max-conns open connections (0 =
+              unlimited) or a full prediction queue (--queue-depth-max
+              items, 0 = unbounded) requests are shed with
+              503 + Retry-After. Idle keep-alive connections are reaped
+              after --idle-timeout-ms; a request (headers+body) that
+              takes longer than --read-timeout-ms to arrive is timed out
+              (0 disables either timer).
               Endpoints: POST /predict {\"docs\": [[id, ...], ...]},
               POST /predict/text {\"texts\": [\"...\"]}, POST /reload
               [{\"path\": \"new.bin\"}], GET /healthz, GET /stats,
@@ -72,10 +90,13 @@ COMMANDS:
                 cfslda serve --model m.bin --port 7878 &
                 curl -d '{\"docs\": [[0, 4, 4]]}' localhost:7878/predict
   serve-bench Loopback load harness; writes BENCH_serve.json with
-              before/after docs/s per kernel (default sparse,alias)
+              before/after docs/s per kernel (default sparse,alias) plus
+              a connection-scaling sweep (latency quantiles + shed_rate
+              per backend at each --conns-list count)
               --model MODEL.bin [--quick] [--workers-list 1,2,4]
               [--batch-list 1,8] [--kernel-list sparse,alias] [--clients N]
-              [--requests N] [--json F]
+              [--requests N] [--conns-list 64,1024,4096]
+              [--backend-list threads,epoll] [--json F]
   experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
               --fig 6|7 [--scale F] [--runs N] [--engine E]
               [--kernel dense|sparse|alias|auto] [--resp-mode exact|mh|auto]
@@ -450,6 +471,13 @@ fn serve_cfg_from_args(a: &Args) -> anyhow::Result<ExperimentConfig> {
     cfg.serve.max_batch = a.get_usize("max-batch", cfg.serve.max_batch)?;
     cfg.serve.max_wait_us = a.get_u64("max-wait-us", cfg.serve.max_wait_us)?;
     cfg.serve.cache_capacity = a.get_usize("cache", cfg.serve.cache_capacity)?;
+    if let Some(b) = a.get("backend") {
+        cfg.serve.backend = ServeBackend::parse(b)?;
+    }
+    cfg.serve.max_conns = a.get_usize("max-conns", cfg.serve.max_conns)?;
+    cfg.serve.queue_depth_max = a.get_usize("queue-depth-max", cfg.serve.queue_depth_max)?;
+    cfg.serve.idle_timeout_ms = a.get_u64("idle-timeout-ms", cfg.serve.idle_timeout_ms)?;
+    cfg.serve.read_timeout_ms = a.get_u64("read-timeout-ms", cfg.serve.read_timeout_ms)?;
     crate::config::validate::validate(&cfg)?;
     Ok(cfg)
 }
@@ -495,6 +523,15 @@ pub fn cmd_serve_bench(a: &Args) -> anyhow::Result<i32> {
     opts.clients = a.get_usize("clients", opts.clients)?;
     opts.requests_per_client = a.get_usize("requests", opts.requests_per_client)?;
     opts.doc_len = a.get_usize("doc-len", opts.doc_len)?;
+    if let Some(c) = a.get("conns-list") {
+        opts.conns_list = parse_usize_list(c, "conns-list")?;
+    }
+    if let Some(b) = a.get("backend-list") {
+        opts.backend_list = b
+            .split(',')
+            .map(|x| ServeBackend::parse(x.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
     opts.seed = cfg.seed;
     if let Some(j) = a.get("json") {
         opts.out_json = PathBuf::from(j);
@@ -686,7 +723,8 @@ mod tests {
             .unwrap();
         let rc = cmd_serve_bench(&parse(&format!(
             "serve-bench --model {model} --workers-list 1,2 --batch-list 2 --clients 2 \
-             --requests 3 --doc-len 12 --json {out}"
+             --requests 3 --doc-len 12 --conns-list 4 --backend-list threads,epoll \
+             --json {out}"
         )))
         .unwrap();
         assert_eq!(rc, 0);
@@ -704,6 +742,21 @@ mod tests {
         let kernels: Vec<&str> =
             cells.iter().filter_map(|c| c.get("kernel").unwrap().as_str()).collect();
         assert_eq!(kernels, vec!["sparse", "sparse", "alias", "alias"]);
+        // connection-scaling sweep: one cell per backend at 4 conns
+        let conns = v.get("conns").unwrap().as_array().unwrap();
+        assert_eq!(conns.len(), 2);
+        let backends: Vec<&str> =
+            conns.iter().filter_map(|c| c.get("backend").unwrap().as_str()).collect();
+        assert_eq!(backends, vec!["threads", "epoll"]);
+        for c in conns {
+            assert_eq!(c.get("conns").unwrap().as_usize(), Some(4));
+            assert_eq!(c.get("connected").unwrap().as_usize(), Some(4));
+            assert!(c.get("requests").unwrap().as_usize().unwrap() > 0);
+            for k in ["p50_ms", "p95_ms", "p99_ms", "shed_rate"] {
+                assert!(c.get(k).unwrap().as_f64().unwrap().is_finite(), "{k}");
+            }
+            assert_eq!(c.get("shed").unwrap().as_usize(), Some(0));
+        }
         for f in [bow, model, out] {
             std::fs::remove_file(f).ok();
         }

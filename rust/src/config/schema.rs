@@ -287,11 +287,46 @@ impl Default for TrainConfig {
     }
 }
 
+/// Which connection-handling backend `cfslda serve` runs
+/// (DESIGN.md §Serving "Event-loop architecture").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeBackend {
+    /// Thread-per-connection over blocking `std::net` — the portable
+    /// fallback and the behavioral reference for the byte-identical
+    /// response contract.
+    Threads,
+    /// Single-threaded epoll readiness loop with per-connection state
+    /// machines (Linux only): keep-alive pipelining, idle/read timeouts,
+    /// and admission control at 10k+ concurrent connections.
+    Epoll,
+}
+
+impl ServeBackend {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "threads" => ServeBackend::Threads,
+            "epoll" => ServeBackend::Epoll,
+            other => bail!("unknown serve backend '{other}' (expected threads|epoll)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeBackend::Threads => "threads",
+            ServeBackend::Epoll => "epoll",
+        }
+    }
+}
+
 /// Prediction-serving knobs (`cfslda serve`, DESIGN.md §Serving).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
     /// Bind address; port 0 picks an ephemeral port (printed at startup).
     pub addr: String,
+    /// Connection-handling backend: portable blocking threads or the
+    /// Linux epoll readiness loop. Both return byte-identical responses
+    /// for the same (model, seed, doc) request stream.
+    pub backend: ServeBackend,
     /// Prediction worker threads; 0 means one per available CPU.
     pub workers: usize,
     /// Micro-batch ceiling: a worker drains at most this many queued
@@ -304,16 +339,36 @@ pub struct ServeConfig {
     /// Capacity of the doc-level LRU prediction cache (entries, keyed by
     /// (model version, seed, token hash)). 0 disables the cache.
     pub cache_capacity: usize,
+    /// Admission control: maximum concurrently open client connections.
+    /// Connections beyond the limit are shed with `503 Retry-After`
+    /// before any request parsing. 0 = unlimited.
+    pub max_conns: usize,
+    /// Admission control: maximum queued documents in the batcher before
+    /// new requests are shed with `503 Retry-After`. 0 = unbounded.
+    pub queue_depth_max: usize,
+    /// Idle keep-alive timeout (milliseconds): a connection with no
+    /// in-flight request is reaped after this long without bytes.
+    /// 0 = never reaped.
+    pub idle_timeout_ms: u64,
+    /// Mid-request read timeout (milliseconds): a connection that has
+    /// started a request head/body but stalls for this long is dropped
+    /// (slow-loris defense). 0 = never dropped.
+    pub read_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             addr: "127.0.0.1:7878".to_string(),
+            backend: ServeBackend::Threads,
             workers: 0,
             max_batch: 32,
             max_wait_us: 500,
             cache_capacity: 4096,
+            max_conns: 8192,
+            queue_depth_max: 4096,
+            idle_timeout_ms: 30_000,
+            read_timeout_ms: 10_000,
         }
     }
 }
@@ -450,10 +505,15 @@ impl ExperimentConfig {
             ])),
             ("serve", Value::object(vec![
                 ("addr", Value::String(self.serve.addr.clone())),
+                ("backend", Value::String(self.serve.backend.name().to_string())),
                 ("workers", Value::Number(self.serve.workers as f64)),
                 ("max_batch", Value::Number(self.serve.max_batch as f64)),
                 ("max_wait_us", Value::Number(self.serve.max_wait_us as f64)),
                 ("cache_capacity", Value::Number(self.serve.cache_capacity as f64)),
+                ("max_conns", Value::Number(self.serve.max_conns as f64)),
+                ("queue_depth_max", Value::Number(self.serve.queue_depth_max as f64)),
+                ("idle_timeout_ms", Value::Number(self.serve.idle_timeout_ms as f64)),
+                ("read_timeout_ms", Value::Number(self.serve.read_timeout_ms as f64)),
             ])),
             ("obs", Value::object(vec![
                 ("heartbeat_secs", Value::Number(self.obs.heartbeat_secs)),
@@ -504,12 +564,24 @@ impl ExperimentConfig {
                 c.serve.addr =
                     a.as_str().context("serve.addr must be a string")?.to_string();
             }
+            if let Some(b) = s.get("backend") {
+                c.serve.backend =
+                    ServeBackend::parse(b.as_str().context("serve.backend must be a string")?)?;
+            }
             read_usize(s, "workers", &mut c.serve.workers)?;
             read_usize(s, "max_batch", &mut c.serve.max_batch)?;
             let mut wait = c.serve.max_wait_us as usize;
             read_usize(s, "max_wait_us", &mut wait)?;
             c.serve.max_wait_us = wait as u64;
             read_usize(s, "cache_capacity", &mut c.serve.cache_capacity)?;
+            read_usize(s, "max_conns", &mut c.serve.max_conns)?;
+            read_usize(s, "queue_depth_max", &mut c.serve.queue_depth_max)?;
+            let mut idle = c.serve.idle_timeout_ms as usize;
+            read_usize(s, "idle_timeout_ms", &mut idle)?;
+            c.serve.idle_timeout_ms = idle as u64;
+            let mut rt = c.serve.read_timeout_ms as usize;
+            read_usize(s, "read_timeout_ms", &mut rt)?;
+            c.serve.read_timeout_ms = rt as u64;
         }
         if let Some(o) = v.get("obs") {
             read_f64(o, "heartbeat_secs", &mut c.obs.heartbeat_secs)?;
@@ -669,18 +741,38 @@ mod tests {
     fn serve_section_roundtrips_and_defaults() {
         let mut c = ExperimentConfig::default();
         c.serve.addr = "0.0.0.0:9000".to_string();
+        c.serve.backend = ServeBackend::Epoll;
         c.serve.workers = 8;
         c.serve.max_batch = 64;
         c.serve.max_wait_us = 250;
         c.serve.cache_capacity = 0;
+        c.serve.max_conns = 10_000;
+        c.serve.queue_depth_max = 512;
+        c.serve.idle_timeout_ms = 1_500;
+        c.serve.read_timeout_ms = 750;
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
         // partial json keeps the rest of the defaults
         let c3 = ExperimentConfig::from_json(r#"{"serve": {"max_batch": 7}}"#).unwrap();
         assert_eq!(c3.serve.max_batch, 7);
         assert_eq!(c3.serve.addr, ServeConfig::default().addr);
+        assert_eq!(c3.serve.backend, ServeBackend::Threads);
+        assert_eq!(c3.serve.max_conns, ServeConfig::default().max_conns);
+        assert_eq!(c3.serve.queue_depth_max, ServeConfig::default().queue_depth_max);
+        assert_eq!(c3.serve.idle_timeout_ms, ServeConfig::default().idle_timeout_ms);
+        assert_eq!(c3.serve.read_timeout_ms, ServeConfig::default().read_timeout_ms);
         assert!(ExperimentConfig::from_json(r#"{"serve": {"addr": 5}}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"serve": {"workers": -1}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"serve": {"backend": "uring"}}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"serve": {"backend": 3}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_backend_parse_name_roundtrip() {
+        for b in [ServeBackend::Threads, ServeBackend::Epoll] {
+            assert_eq!(ServeBackend::parse(b.name()).unwrap(), b);
+        }
+        assert!(ServeBackend::parse("bogus").is_err());
     }
 
     #[test]

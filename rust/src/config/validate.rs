@@ -112,6 +112,26 @@ pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
     if s.cache_capacity > 1 << 24 {
         bail!("serve.cache_capacity must be <= {} entries, got {}", 1usize << 24, s.cache_capacity);
     }
+    if s.max_conns > 1 << 20 {
+        bail!(
+            "serve.max_conns must be <= {} (0 = unlimited), got {}",
+            1usize << 20,
+            s.max_conns
+        );
+    }
+    if s.queue_depth_max > 1 << 20 {
+        bail!(
+            "serve.queue_depth_max must be <= {} (0 = unbounded), got {}",
+            1usize << 20,
+            s.queue_depth_max
+        );
+    }
+    for (name, v) in [("idle_timeout_ms", s.idle_timeout_ms), ("read_timeout_ms", s.read_timeout_ms)]
+    {
+        if v > 3_600_000 {
+            bail!("serve.{name} must be <= 3600000 (1h; 0 = off), got {v}");
+        }
+    }
     let o = &c.obs;
     if !o.heartbeat_secs.is_finite() || o.heartbeat_secs < 0.0 {
         bail!(
@@ -206,6 +226,25 @@ mod tests {
         let mut c = ExperimentConfig::quick();
         c.serve.workers = 4096;
         assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.max_conns = (1 << 20) + 1;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.queue_depth_max = (1 << 20) + 1;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.idle_timeout_ms = 3_600_001;
+        assert!(validate(&c).is_err());
+        let mut c = ExperimentConfig::quick();
+        c.serve.read_timeout_ms = 3_600_001;
+        assert!(validate(&c).is_err());
+        // 0 sentinels (unlimited / unbounded / no timeout) are valid
+        let mut c = ExperimentConfig::quick();
+        c.serve.max_conns = 0;
+        c.serve.queue_depth_max = 0;
+        c.serve.idle_timeout_ms = 0;
+        c.serve.read_timeout_ms = 0;
+        validate(&c).unwrap();
     }
 
     #[test]

@@ -53,6 +53,12 @@ impl Gauge {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Wrapping decrement (connection counts and other up/down gauges).
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
     #[inline]
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
@@ -79,5 +85,7 @@ mod tests {
         assert_eq!(g.get(), 3);
         g.add(4);
         assert_eq!(g.get(), 7);
+        g.sub(5);
+        assert_eq!(g.get(), 2);
     }
 }

@@ -85,10 +85,22 @@ pub struct ServeMetrics {
     pub batches: Counter,
     pub cache_hits: Counter,
     pub cache_misses: Counter,
+    /// Client connections accepted (both backends; includes ones
+    /// subsequently shed by the open-connection admission limit).
+    pub accepted: Counter,
+    /// Requests/connections refused by admission control (`503
+    /// Retry-After`): over the open-connection limit or the batcher
+    /// queue bound.
+    pub shed: Counter,
+    /// Currently open client connections.
+    pub open_connections: Gauge,
     /// Work items queued in the batcher, sampled after each queue op.
     pub queue_depth: Gauge,
     /// Coalescing wait per formed batch, in microseconds.
     pub batch_wait: Histogram,
+    /// Event-loop iteration time (epoll backend): microseconds spent
+    /// processing one `epoll_wait` batch, excluding the wait itself.
+    pub loop_iteration: Histogram,
     /// Request latency per endpoint, in microseconds.
     pub latency: [Histogram; ENDPOINT_COUNT],
 }
@@ -105,8 +117,12 @@ impl ServeMetrics {
             batches: Counter::new(),
             cache_hits: Counter::new(),
             cache_misses: Counter::new(),
+            accepted: Counter::new(),
+            shed: Counter::new(),
+            open_connections: Gauge::new(),
             queue_depth: Gauge::new(),
             batch_wait: HIST,
+            loop_iteration: HIST,
             latency: [HIST; ENDPOINT_COUNT],
         }
     }
@@ -215,12 +231,21 @@ pub fn render_parts(
     counter(buf, "cfslda_predict_batches_total", "Batches drained by batcher workers.", serve.batches.get());
     counter(buf, "cfslda_cache_hits_total", "Prediction LRU cache hits.", serve.cache_hits.get());
     counter(buf, "cfslda_cache_misses_total", "Prediction LRU cache misses.", serve.cache_misses.get());
+    counter(buf, "cfslda_accepted_total", "Client connections accepted.", serve.accepted.get());
+    counter(buf, "cfslda_shed_total", "Connections/requests shed by admission control (503 Retry-After).", serve.shed.get());
+    gauge(buf, "cfslda_open_connections", "Currently open client connections.", serve.open_connections.get());
     gauge(buf, "cfslda_batch_queue_depth", "Work items waiting in the batcher queue.", serve.queue_depth.get());
     histogram(
         buf,
         "cfslda_batch_wait_seconds",
         "Coalescing wait before a batch is drained.",
         &[("", "", &serve.batch_wait)],
+    );
+    histogram(
+        buf,
+        "cfslda_event_loop_iteration_seconds",
+        "Time processing one epoll_wait batch (epoll backend only).",
+        &[("", "", &serve.loop_iteration)],
     );
     let lat: Vec<(&str, &str, &Histogram)> = Endpoint::all()
         .iter()
@@ -358,11 +383,20 @@ mod tests {
         serve.errors.inc();
         serve.latency_for(Endpoint::Predict).observe(100);
         serve.latency_for(Endpoint::Predict).observe(100_000);
+        serve.accepted.add(4);
+        serve.shed.inc();
+        serve.open_connections.set(3);
+        serve.loop_iteration.observe(42);
         let mut out = String::new();
         render_parts(&serve, &train, &log, &mut out);
 
         assert!(out.contains("# TYPE cfslda_http_requests_total counter\ncfslda_http_requests_total 5\n"));
         assert!(out.contains("cfslda_http_errors_total 1\n"));
+        assert!(out.contains("# TYPE cfslda_accepted_total counter\ncfslda_accepted_total 4\n"));
+        assert!(out.contains("# TYPE cfslda_shed_total counter\ncfslda_shed_total 1\n"));
+        assert!(out.contains("# TYPE cfslda_open_connections gauge\ncfslda_open_connections 3\n"));
+        assert!(out.contains("# TYPE cfslda_event_loop_iteration_seconds histogram\n"));
+        assert!(out.contains("cfslda_event_loop_iteration_seconds_count 1\n"));
         assert!(out.contains("cfslda_request_duration_seconds_bucket{endpoint=\"predict\",le=\"+Inf\"} 2\n"));
         assert!(out.contains("cfslda_request_duration_seconds_count{endpoint=\"predict\"} 2\n"));
         assert!(out.contains("cfslda_request_duration_seconds_sum{endpoint=\"predict\"} 0.1001\n"));

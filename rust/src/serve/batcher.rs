@@ -50,6 +50,10 @@ pub struct BatcherConfig {
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait_us: u64,
+    /// Admission bound: a submit whose documents would push the queue past
+    /// this depth is refused (the HTTP layer sheds it with `503
+    /// Retry-After`). 0 = unbounded.
+    pub queue_depth_max: usize,
     pub kernel: KernelKind,
     pub train: TrainConfig,
 }
@@ -78,6 +82,10 @@ pub struct Completion {
 struct CompletionInner {
     slots: Vec<Option<anyhow::Result<DocOut>>>,
     remaining: usize,
+    /// Event-loop rendezvous: when armed with a notify fd, the last fill
+    /// also writes 1 to this eventfd so the epoll reactor wakes without
+    /// any thread parked on the condvar.
+    notify_fd: Option<i32>,
 }
 
 impl Completion {
@@ -91,10 +99,23 @@ impl Completion {
         inner.slots.clear();
         inner.slots.resize_with(n, || None);
         inner.remaining = n;
+        inner.notify_fd = None;
+    }
+
+    /// [`Completion::arm`] for the event-loop path: the last fill writes
+    /// 1 to `notify_fd` (an eventfd) instead of relying on a parked
+    /// submitter thread.
+    fn arm_notify(&self, n: usize, notify_fd: i32) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.slots.clear();
+        inner.slots.resize_with(n, || None);
+        inner.remaining = n;
+        inner.notify_fd = Some(notify_fd);
     }
 
     /// Deliver one document's result. First write wins; the last write
-    /// standing wakes the submitter.
+    /// standing wakes the submitter (condvar and, when armed with one,
+    /// the reactor's eventfd).
     fn fill(&self, slot: usize, res: anyhow::Result<DocOut>) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(s) = inner.slots.get_mut(slot) {
@@ -103,6 +124,9 @@ impl Completion {
                 inner.remaining -= 1;
                 if inner.remaining == 0 {
                     self.cv.notify_all();
+                    if let Some(fd) = inner.notify_fd {
+                        signal_eventfd(fd);
+                    }
                 }
             }
         }
@@ -122,6 +146,33 @@ impl Completion {
                 .drain(..)
                 .map(|o| o.unwrap_or_else(|| Err(anyhow::anyhow!("server shutting down")))),
         );
+    }
+
+    /// Non-blocking collect for the event-loop path: if every slot is
+    /// filled, move the results into `out` (cleared first, slot order)
+    /// and return `true`; otherwise leave `out` untouched and return
+    /// `false` (spurious eventfd wakeups are fine — poll again later).
+    pub fn try_take_into(&self, out: &mut Vec<anyhow::Result<DocOut>>) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.remaining > 0 || inner.slots.is_empty() {
+            return false;
+        }
+        out.clear();
+        out.extend(inner.slots.drain(..).map(|o| {
+            o.unwrap_or_else(|| Err(anyhow::anyhow!("server shutting down")))
+        }));
+        true
+    }
+}
+
+/// Best-effort eventfd signal: adds 1 to the counter, waking an epoll
+/// waiter. Failure is ignored — the reactor also sweeps in-flight
+/// completions on its timeout tick, so a lost wakeup degrades latency,
+/// not correctness.
+fn signal_eventfd(fd: i32) {
+    let one: u64 = 1;
+    unsafe {
+        libc::write(fd, &one as *const u64 as *const libc::c_void, 8);
     }
 }
 
@@ -237,6 +288,7 @@ impl ArenaBuilder {
 pub struct Batcher {
     shared: Arc<Shared>,
     stats: Arc<ServeMetrics>,
+    queue_depth_max: usize,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -251,6 +303,7 @@ impl Batcher {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
+        let queue_depth_max = cfg.queue_depth_max;
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let shared = Arc::clone(&shared);
@@ -260,7 +313,7 @@ impl Batcher {
                 std::thread::spawn(move || worker_loop(&shared, &registry, &stats, &cfg))
             })
             .collect();
-        Batcher { shared, stats, workers }
+        Batcher { shared, stats, queue_depth_max, workers }
     }
 
     /// Enqueue a request's documents and block until every one resolves.
@@ -307,29 +360,114 @@ impl Batcher {
             return;
         }
         comp.arm(n);
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            for slot in 0..n {
-                q.push_back(WorkItem {
-                    docs: Arc::clone(&arena),
-                    doc: slot,
-                    seed,
-                    slot,
-                    comp: Arc::clone(comp),
-                    done: false,
-                });
-            }
-            self.stats.queue_depth.set(q.len() as u64);
-        }
-        self.shared.cv.notify_all();
+        self.enqueue(&arena, seed, comp, n);
         // Workers drain the queue even during shutdown, and dropped items
         // fill their slot with an error, so every armed slot resolves.
         comp.wait_into(out);
     }
 
+    /// Admission-controlled [`Batcher::submit_streamed_into`]: refuses the
+    /// whole request (returning `false`, enqueueing nothing, leaving `out`
+    /// cleared) when its documents would push the queue past
+    /// `queue_depth_max`. The HTTP layer turns a refusal into `503
+    /// Retry-After`.
+    pub fn try_submit_streamed_into(
+        &self,
+        arena: Arc<TokenArena>,
+        seed: u64,
+        comp: &Arc<Completion>,
+        out: &mut Vec<anyhow::Result<DocOut>>,
+    ) -> bool {
+        let n = arena.num_docs();
+        out.clear();
+        if n == 0 {
+            return true;
+        }
+        comp.arm(n);
+        if !self.enqueue_bounded(&arena, seed, comp, n) {
+            return false;
+        }
+        comp.wait_into(out);
+        true
+    }
+
+    /// Non-blocking, admission-controlled submit for the epoll reactor:
+    /// arms `comp` so the *last* worker fill writes 1 to `notify_fd` (an
+    /// eventfd registered with the event loop), enqueues, and returns
+    /// immediately. Returns `false` (nothing enqueued) when the queue
+    /// bound would be exceeded — the caller sheds the request. Collect
+    /// results later with [`Completion::try_take_into`].
+    pub fn submit_streamed_notify(
+        &self,
+        arena: Arc<TokenArena>,
+        seed: u64,
+        comp: &Arc<Completion>,
+        notify_fd: i32,
+    ) -> bool {
+        let n = arena.num_docs();
+        if n == 0 {
+            // Arm zero slots so try_take_into reports not-ready; callers
+            // handle the empty request inline without dispatching.
+            comp.arm(0);
+            return true;
+        }
+        comp.arm_notify(n, notify_fd);
+        self.enqueue_bounded(&arena, seed, comp, n)
+    }
+
+    fn enqueue(&self, arena: &Arc<TokenArena>, seed: u64, comp: &Arc<Completion>, n: usize) {
+        self.enqueue_inner(arena, seed, comp, n, 0);
+    }
+
+    /// [`Batcher::enqueue`] with the admission bound applied atomically
+    /// under the queue lock: all-or-nothing, so a shed request never
+    /// leaves partial work behind.
+    fn enqueue_bounded(
+        &self,
+        arena: &Arc<TokenArena>,
+        seed: u64,
+        comp: &Arc<Completion>,
+        n: usize,
+    ) -> bool {
+        self.enqueue_inner(arena, seed, comp, n, self.queue_depth_max)
+    }
+
+    fn enqueue_inner(
+        &self,
+        arena: &Arc<TokenArena>,
+        seed: u64,
+        comp: &Arc<Completion>,
+        n: usize,
+        bound: usize,
+    ) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        if bound > 0 && q.len() + n > bound {
+            return false;
+        }
+        for slot in 0..n {
+            q.push_back(WorkItem {
+                docs: Arc::clone(arena),
+                doc: slot,
+                seed,
+                slot,
+                comp: Arc::clone(comp),
+                done: false,
+            });
+        }
+        self.stats.queue_depth.set(q.len() as u64);
+        drop(q);
+        self.shared.cv.notify_all();
+        true
+    }
+
     /// Queue depth right now (stats surface).
     pub fn backlog(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
+    }
+
+    /// The configured admission bound (0 = unbounded).
+    pub fn queue_bound(&self) -> usize {
+        self.queue_depth_max
     }
 }
 
@@ -498,6 +636,7 @@ mod tests {
             workers,
             max_batch,
             max_wait_us: 200,
+            queue_depth_max: 0,
             kernel: KernelKind::Auto,
             train: quick_train(),
         };
@@ -651,6 +790,127 @@ mod tests {
         assert_eq!(via_vecs, via_arena, "codec path must not change predictions");
         // Zero-doc arenas resolve immediately.
         assert!(b.submit_streamed(Arc::new(TokenArena::from_docs(&[])), 1).is_empty());
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    /// The admission bound is all-or-nothing at `len + n > bound`. Checked
+    /// against an empty queue so the decisions are deterministic under any
+    /// worker scheduling: a request larger than the bound always sheds, a
+    /// request exactly at the bound always admits.
+    #[test]
+    fn bounded_queue_sheds_all_or_nothing_at_the_boundary() {
+        let p = tmp("bound");
+        save_model_with_vocab(&tiny_model(5), None, &p).unwrap();
+        let registry = Arc::new(Registry::open(&p, 0, true).unwrap());
+        let stats = Arc::new(ServeMetrics::new());
+        let cfg = BatcherConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait_us: 0,
+            queue_depth_max: 4,
+            kernel: KernelKind::Auto,
+            train: quick_train(),
+        };
+        let b = Batcher::start(cfg, Arc::clone(&registry), Arc::clone(&stats));
+        assert_eq!(b.queue_bound(), 4);
+        let mut out = Vec::new();
+
+        // 5 docs > bound 4: shed even into an empty queue, nothing
+        // enqueued, the completion never resolves.
+        let five = Arc::new(TokenArena::from_docs(&docs(5, 9)));
+        let shed_comp = Arc::new(Completion::new());
+        assert!(!b.submit_streamed_notify(Arc::clone(&five), 1, &shed_comp, -1));
+        assert!(!shed_comp.try_take_into(&mut out));
+        // ... and the blocking admission wrapper sheds identically.
+        assert!(!b.try_submit_streamed_into(Arc::clone(&five), 1, &shed_comp, &mut out));
+        assert!(out.is_empty());
+
+        // Exactly the bound (0 + 4 = 4): admitted and resolved.
+        let four = Arc::new(TokenArena::from_docs(&docs(4, 9)));
+        let comp = Arc::new(Completion::new());
+        assert!(b.submit_streamed_notify(Arc::clone(&four), 1, &comp, -1));
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !comp.try_take_into(&mut out) {
+            assert!(Instant::now() < deadline, "admitted request never resolved");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|r| r.as_ref().unwrap().yhat.is_finite()));
+
+        // The blocking wrapper admits at the boundary too, with results
+        // matching the unbounded reference path.
+        assert!(b.try_submit_streamed_into(Arc::clone(&four), 1, &comp, &mut out));
+        let bounded: Vec<f64> = out.drain(..).map(|r| r.unwrap().yhat).collect();
+        let reference: Vec<f64> = b
+            .submit_streamed(Arc::clone(&four), 1)
+            .into_iter()
+            .map(|r| r.unwrap().yhat)
+            .collect();
+        assert_eq!(bounded, reference);
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn try_submit_blocking_path_sheds_and_admits() {
+        let (b, _reg, _stats, p) = start("tryblock", 2, 8, 0);
+        // Unbounded (queue_depth_max = 0): always admitted.
+        let d = docs(4, 12);
+        let arena = Arc::new(TokenArena::from_docs(&d));
+        let comp = Arc::new(Completion::new());
+        let mut out = Vec::new();
+        assert!(b.try_submit_streamed_into(Arc::clone(&arena), 2, &comp, &mut out));
+        assert_eq!(out.len(), 4);
+        let blocking: Vec<f64> = out.drain(..).map(|r| r.unwrap().yhat).collect();
+        let plain: Vec<f64> =
+            b.submit(&d, 2).into_iter().map(|r| r.unwrap().yhat).collect();
+        assert_eq!(blocking, plain, "admission wrapper must not change predictions");
+        // Zero-doc requests are trivially admitted.
+        assert!(b.try_submit_streamed_into(
+            Arc::new(TokenArena::from_docs(&[])),
+            2,
+            &comp,
+            &mut out
+        ));
+        assert!(out.is_empty());
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn notify_submit_signals_eventfd_and_collects() {
+        let (b, _reg, _stats, p) = start("notify", 2, 4, 0);
+        let efd = unsafe { libc::eventfd(0, libc::EFD_NONBLOCK | libc::EFD_CLOEXEC) };
+        assert!(efd >= 0);
+        let d = docs(5, 21);
+        let arena = Arc::new(TokenArena::from_docs(&d));
+        let comp = Arc::new(Completion::new());
+        assert!(b.submit_streamed_notify(Arc::clone(&arena), 6, &comp, efd));
+        // Wait for the eventfd to fire (the last fill writes 1).
+        let mut val: u64 = 0;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let n = unsafe {
+                libc::read(efd, &mut val as *mut u64 as *mut libc::c_void, 8)
+            };
+            if n == 8 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "eventfd never signaled");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(val >= 1);
+        let mut out = Vec::new();
+        assert!(comp.try_take_into(&mut out), "signaled completion must be ready");
+        assert_eq!(out.len(), 5);
+        let notified: Vec<f64> = out.drain(..).map(|r| r.unwrap().yhat).collect();
+        let plain: Vec<f64> =
+            b.submit(&d, 6).into_iter().map(|r| r.unwrap().yhat).collect();
+        assert_eq!(notified, plain, "notify path must not change predictions");
+        // A drained completion reports not-ready until re-armed.
+        assert!(!comp.try_take_into(&mut out));
+        unsafe { libc::close(efd) };
         drop(b);
         std::fs::remove_file(p).ok();
     }

@@ -8,9 +8,18 @@
 //! kernel's serving speedup is read straight out of `BENCH_serve.json`,
 //! which is written at the invocation directory (the repo root in CI),
 //! next to `BENCH_gibbs_hotpath.json`.
+//!
+//! A second sweep scales *open connections* instead of throughput: for
+//! every (serve backend × `--conns-list` count) cell it holds that many
+//! keep-alive connections open simultaneously, round-robins single-doc
+//! predicts across them, and records latency quantiles plus the
+//! admission counters (`accepted`, `shed`, `shed_rate`) into the
+//! top-level `conns` array of the same JSON. This is the epoll backend's
+//! headline measurement — the threads backend pays one OS thread per
+//! open connection; the reactor pays one registered fd.
 
 use crate::config::json::{self, Value};
-use crate::config::schema::{ExperimentConfig, KernelKind};
+use crate::config::schema::{ExperimentConfig, KernelKind, ServeBackend};
 use crate::model::persist::load_model_full;
 use crate::serve::http::Client;
 use crate::serve::server::Server;
@@ -37,6 +46,12 @@ pub struct BenchOptions {
     pub requests_per_client: usize,
     /// Tokens per synthetic document.
     pub doc_len: usize,
+    /// Open-connection counts for the connection-scaling sweep (each cell
+    /// holds this many keep-alive connections open simultaneously and
+    /// round-robins single-doc predicts across them).
+    pub conns_list: Vec<usize>,
+    /// Serve backends swept on the connection-scaling axis.
+    pub backend_list: Vec<ServeBackend>,
     pub seed: u64,
     pub out_json: PathBuf,
 }
@@ -51,6 +66,8 @@ impl BenchOptions {
             clients: 4,
             requests_per_client: if quick { 12 } else { 100 },
             doc_len: 48,
+            conns_list: if quick { vec![8, 32] } else { vec![64, 1024, 4096] },
+            backend_list: vec![ServeBackend::Threads, ServeBackend::Epoll],
             seed: 20170710,
             out_json: PathBuf::from("BENCH_serve.json"),
         }
@@ -84,6 +101,31 @@ pub struct CellResult {
     /// Bytes allocated per request in the same loop; `-1` when
     /// uninstrumented.
     pub bytes_per_request: f64,
+}
+
+/// One connection-scaling cell: `conns` keep-alive connections held open
+/// against one backend, latency quantiles over round-robin predicts, and
+/// the server's own admission counters.
+#[derive(Clone, Debug)]
+pub struct ConnsCellResult {
+    pub backend: &'static str,
+    /// Connections attempted.
+    pub conns: usize,
+    /// Connections that survived admission and completed every round
+    /// (the rest were shed with `503 Retry-After` or reset).
+    pub connected: usize,
+    /// Successful (200) requests measured.
+    pub requests: usize,
+    pub wall_secs: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// `cfslda_accepted_total` / `cfslda_shed_total` from the cell's own
+    /// server, read after the load run.
+    pub accepted: u64,
+    pub shed: u64,
+    /// shed / accepted (0 when nothing was accepted).
+    pub shed_rate: f64,
 }
 
 /// Measure steady-state codec allocations for one request body: warmed
@@ -160,6 +202,7 @@ fn pipeline_allocs_per_request(
             workers: 1,
             max_batch: cfg.serve.max_batch.max(1),
             max_wait_us: 0,
+            queue_depth_max: 0,
             kernel: cfg.sampler.kernel,
             train: cfg.train.clone(),
         },
@@ -320,6 +363,92 @@ fn run_cell(
     })
 }
 
+/// Predict rounds each surviving connection issues in the
+/// connection-scaling sweep (round one doubles as the admission probe:
+/// a shed connection 503s or resets on its first request).
+const CONNS_ROUNDS: usize = 2;
+
+fn run_conns_cell(
+    cfg_base: &ExperimentConfig,
+    opts: &BenchOptions,
+    vocab: usize,
+    backend: ServeBackend,
+    conns: usize,
+) -> anyhow::Result<ConnsCellResult> {
+    let mut cfg = cfg_base.clone();
+    cfg.serve.addr = "127.0.0.1:0".to_string();
+    cfg.serve.backend = backend;
+    cfg.serve.cache_capacity = 0;
+    let server = Server::start(&opts.model_path, &cfg)?;
+    let addr = server.local_addr().to_string();
+
+    // Driver threads each own a shard of connections. Every shard connects
+    // its whole shard first, so the full `conns` population is open
+    // simultaneously, then round-robins single-doc predicts across the
+    // connections that survived admission.
+    let threads = conns.clamp(1, 16);
+    let shards: Vec<Vec<String>> = (0..threads)
+        .map(|s| {
+            let mut rng = Pcg64::seed_from_u64(
+                opts.seed ^ 0xc0a5 ^ (s as u64) << 20 ^ conns as u64,
+            );
+            let count = conns / threads + usize::from(s < conns % threads);
+            (0..count)
+                .map(|_| {
+                    docs_body(&gen_docs(&mut rng, 1, opts.doc_len.min(16), vocab), opts.seed)
+                })
+                .collect()
+        })
+        .collect();
+    let sw = Stopwatch::new();
+    let per_shard: Vec<anyhow::Result<(Vec<f64>, usize)>> =
+        scoped_map(&shards, threads, |_, bodies| {
+            let mut clients: Vec<Option<Client>> =
+                bodies.iter().map(|_| Client::connect(&addr).ok()).collect();
+            let mut lats = Vec::new();
+            for _ in 0..CONNS_ROUNDS {
+                for (i, slot) in clients.iter_mut().enumerate() {
+                    let Some(client) = slot.as_mut() else { continue };
+                    let t = Stopwatch::new();
+                    match client.request("POST", "/predict", &bodies[i]) {
+                        Ok((200, _)) => lats.push(t.elapsed_secs()),
+                        // Shed (503 + close) or reset: drop the connection
+                        // from later rounds; the server's counters record it.
+                        _ => *slot = None,
+                    }
+                }
+            }
+            let connected = clients.iter().filter(|c| c.is_some()).count();
+            Ok((lats, connected))
+        });
+    let wall_secs = sw.elapsed_secs();
+    let accepted = server.metrics().accepted.get();
+    let shed = server.metrics().shed.get();
+    server.stop();
+
+    let mut lats = Vec::new();
+    let mut connected = 0;
+    for r in per_shard {
+        let (l, c) = r?;
+        lats.extend(l);
+        connected += c;
+    }
+    let q = |p: f64| if lats.is_empty() { 0.0 } else { quantile(&lats, p) * 1e3 };
+    Ok(ConnsCellResult {
+        backend: backend.name(),
+        conns,
+        connected,
+        requests: lats.len(),
+        wall_secs,
+        p50_ms: q(0.50),
+        p95_ms: q(0.95),
+        p99_ms: q(0.99),
+        accepted,
+        shed,
+        shed_rate: if accepted > 0 { shed as f64 / accepted as f64 } else { 0.0 },
+    })
+}
+
 fn render_table(results: &[CellResult]) -> String {
     let mut s = String::from("== bench: serve (loopback) ==\n");
     s.push_str(&format!(
@@ -338,11 +467,30 @@ fn render_table(results: &[CellResult]) -> String {
     s
 }
 
+fn render_conns_table(cells: &[ConnsCellResult]) -> String {
+    let mut s = String::from("== bench: serve connection scaling ==\n");
+    s.push_str(&format!(
+        "{:<8} {:>7} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7} {:>10}\n",
+        "backend", "conns", "connected", "requests", "p50(ms)", "p95(ms)", "p99(ms)",
+        "accepted", "shed", "shed_rate"
+    ));
+    for r in cells {
+        s.push_str(&format!(
+            "{:<8} {:>7} {:>9} {:>9} {:>9.2} {:>9.2} {:>9.2} {:>9} {:>7} {:>10.4}\n",
+            r.backend, r.conns, r.connected, r.requests, r.p50_ms, r.p95_ms, r.p99_ms,
+            r.accepted, r.shed, r.shed_rate
+        ));
+    }
+    s
+}
+
 fn results_json(
     opts: &BenchOptions,
     t: usize,
     w: usize,
+    backend: &str,
     results: &[CellResult],
+    conns: &[ConnsCellResult],
     pipeline_allocs: &[(usize, (f64, f64))],
 ) -> Value {
     let cells: Vec<Value> = results
@@ -364,6 +512,24 @@ fn results_json(
                 ("server_p99_ms", Value::Number(r.server_p99_ms)),
                 ("allocs_per_request", Value::Number(r.allocs_per_request)),
                 ("bytes_per_request", Value::Number(r.bytes_per_request)),
+            ])
+        })
+        .collect();
+    let conns_cells: Vec<Value> = conns
+        .iter()
+        .map(|r| {
+            Value::object(vec![
+                ("backend", Value::String(r.backend.to_string())),
+                ("conns", Value::Number(r.conns as f64)),
+                ("connected", Value::Number(r.connected as f64)),
+                ("requests", Value::Number(r.requests as f64)),
+                ("wall_secs", Value::Number(r.wall_secs)),
+                ("p50_ms", Value::Number(r.p50_ms)),
+                ("p95_ms", Value::Number(r.p95_ms)),
+                ("p99_ms", Value::Number(r.p99_ms)),
+                ("accepted", Value::Number(r.accepted as f64)),
+                ("shed", Value::Number(r.shed as f64)),
+                ("shed_rate", Value::Number(r.shed_rate)),
             ])
         })
         .collect();
@@ -389,7 +555,11 @@ fn results_json(
         ("doc_len", Value::Number(opts.doc_len as f64)),
         ("seed", Value::Number(opts.seed as f64)),
         ("alloc_instrumented", Value::Bool(cfg!(feature = "bench-alloc"))),
+        // Backend serving the kernel/workers/batch sweep in `results`;
+        // `conns` carries its own per-cell backend axis.
+        ("backend", Value::String(backend.to_string())),
         ("results", Value::Array(cells)),
+        ("conns", Value::Array(conns_cells)),
         ("pipeline", Value::Array(pipeline)),
     ])
 }
@@ -457,7 +627,29 @@ pub fn run_bench(
             }
         }
     }
+    // Connection-scaling sweep: per backend, hold `conns` keep-alive
+    // connections open simultaneously and measure latency quantiles plus
+    // the admission counters (shed_rate stays 0 until `--max-conns` /
+    // `--queue-depth-max` bites).
+    let mut conns_cells = Vec::new();
+    for &backend in &opts.backend_list {
+        for &conns in &opts.conns_list {
+            let cell = run_conns_cell(cfg_base, opts, w, backend, conns)?;
+            log::info!(
+                "serve-bench backend={} conns={}: connected={} p95={:.2}ms shed_rate={:.4}",
+                cell.backend,
+                cell.conns,
+                cell.connected,
+                cell.p95_ms,
+                cell.shed_rate
+            );
+            conns_cells.push(cell);
+        }
+    }
     println!("{}", render_table(&results));
+    if !conns_cells.is_empty() {
+        println!("{}", render_conns_table(&conns_cells));
+    }
     // Before/after headline: alias speedup over the first non-alias kernel
     // at matching (workers, batch) cells.
     for a in results.iter().filter(|r| r.kernel == "alias") {
@@ -476,7 +668,15 @@ pub fn run_bench(
             }
         }
     }
-    let v = results_json(opts, t, w, &results, &pipeline_allocs);
+    let v = results_json(
+        opts,
+        t,
+        w,
+        cfg_base.serve.backend.name(),
+        &results,
+        &conns_cells,
+        &pipeline_allocs,
+    );
     std::fs::write(&opts.out_json, json::to_string_pretty(&v))?;
     println!("wrote {}", opts.out_json.display());
     Ok(results)
@@ -515,12 +715,36 @@ mod tests {
             allocs_per_request: 0.0,
             bytes_per_request: 0.0,
         };
+        let conns_cell = ConnsCellResult {
+            backend: "epoll",
+            conns: 1024,
+            connected: 1000,
+            requests: 2000,
+            wall_secs: 1.5,
+            p50_ms: 0.8,
+            p95_ms: 2.2,
+            p99_ms: 4.0,
+            accepted: 1024,
+            shed: 24,
+            shed_rate: 24.0 / 1024.0,
+        };
         let table = render_table(&[cell.clone()]);
         assert!(table.contains("docs/s"));
         assert!(table.contains("160.0"));
         assert!(table.contains("sp95(ms)"));
+        let conns_table = render_conns_table(&[conns_cell.clone()]);
+        assert!(conns_table.contains("shed_rate"));
+        assert!(conns_table.contains("epoll"));
         let opts = BenchOptions::new(PathBuf::from("m.bin"), true);
-        let v = results_json(&opts, 8, 100, &[cell], &[(8, (3.0, 512.0))]);
+        let v = results_json(
+            &opts,
+            8,
+            100,
+            "threads",
+            &[cell],
+            &[conns_cell],
+            &[(8, (3.0, 512.0))],
+        );
         let parsed = json::parse(&json::to_string_pretty(&v)).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
         assert_eq!(
@@ -565,6 +789,13 @@ mod tests {
         let pipe = parsed.get("pipeline").unwrap().as_array().unwrap();
         assert_eq!(pipe[0].get("batch").unwrap().as_usize(), Some(8));
         assert_eq!(pipe[0].get("allocs_per_request").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("backend").unwrap().as_str(), Some("threads"));
+        let conns = parsed.get("conns").unwrap().as_array().unwrap();
+        assert_eq!(conns[0].get("backend").unwrap().as_str(), Some("epoll"));
+        assert_eq!(conns[0].get("conns").unwrap().as_usize(), Some(1024));
+        let rate = conns[0].get("shed_rate").unwrap().as_f64().unwrap();
+        assert!(rate.is_finite() && (rate - 24.0 / 1024.0).abs() < 1e-12);
+        assert!(conns[0].get("p99_ms").unwrap().as_f64().unwrap().is_finite());
     }
 
     #[cfg(feature = "bench-alloc")]

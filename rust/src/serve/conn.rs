@@ -1,0 +1,452 @@
+//! Per-connection state machine for the epoll backend.
+//!
+//! Each connection advances through
+//! `ReadHead → ReadBody → (Dispatched) → WriteResponse → ReadHead …`
+//! entirely from readiness callbacks — no thread ever blocks on it:
+//!
+//! * **ReadHead** — bytes accumulate in `inbuf`; [`http::parse_head`]
+//!   re-parses the prefix on each arrival until the blank line lands.
+//! * **ReadBody** — waits until `Content-Length` bytes follow the head.
+//! * **Dispatched** — `/predict` and `/predict/text` ride the shared
+//!   micro-batcher via [`Batcher::submit_streamed_notify`]; the worker
+//!   that fills the last slot signals the reactor's eventfd and the
+//!   reactor calls [`Conn::poll_completion`]. Everything else is answered
+//!   inline through the same [`server::route`] the threads backend uses.
+//! * **WriteResponse** — the response is rendered into `outbuf` by the
+//!   *same* `http::write_response_*` writers as the threads backend
+//!   (`Vec<u8>` implements `Write`), which makes the byte-identical
+//!   response contract structural rather than aspirational; the buffer
+//!   then drains through non-blocking writes.
+//!
+//! **Pipelining.** One request is in flight per connection; bytes of
+//! follow-on pipelined requests simply accumulate in `inbuf` and parse as
+//! soon as the current response finishes writing, so responses always
+//! return in request order.
+//!
+//! **Buffer discipline.** `inbuf`/`outbuf`, the [`RequestScratch`] and the
+//! [`ConnScratch`] (arena builder, pooled completion, results/yhat
+//! staging, JSON writer) are all owned per connection and recycled across
+//! keep-alive requests — a warmed `/predict` request is handled without
+//! heap allocation, exactly as on the threads backend.
+//!
+//! [`Batcher::submit_streamed_notify`]: crate::serve::batcher::Batcher::submit_streamed_notify
+
+use crate::data::corpus::TokenArena;
+use crate::obs::Endpoint;
+use crate::serve::http::{self, RequestScratch};
+use crate::serve::protocol;
+use crate::serve::server::{self, BodyKind, ConnScratch, HttpError, OpenConnGuard, State};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What the reactor should do with the connection after a callback.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Step {
+    /// Keep the connection registered (re-derive interest from
+    /// [`Conn::wants_write`]).
+    Continue,
+    /// Deregister and drop the connection.
+    Close,
+}
+
+enum ConnState {
+    /// Accumulating request-head bytes.
+    ReadHead,
+    /// Head parsed; waiting for the declared body bytes.
+    ReadBody { head_len: usize, content_length: usize },
+    /// A predict batch is in the micro-batcher; waiting on the eventfd.
+    Dispatched,
+    /// Draining `outbuf` to the socket.
+    WriteResponse,
+}
+
+/// In-flight predict dispatch (the retry state for hot-swap races).
+struct Dispatch {
+    seed: u64,
+    /// `/predict/text`: re-encode against the current vocabulary on retry.
+    is_text: bool,
+    attempts: usize,
+    /// Version pin for the text path (ids only mean something under the
+    /// vocabulary that produced them).
+    want: Option<u64>,
+    arena: Option<Arc<TokenArena>>,
+}
+
+pub(crate) struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    /// Received-but-unconsumed bytes (incl. pipelined follow-on requests).
+    inbuf: Vec<u8>,
+    /// Rendered response bytes not yet written to the socket.
+    outbuf: Vec<u8>,
+    outpos: usize,
+    req: RequestScratch,
+    out: ConnScratch,
+    /// Completion of the last request (idle-reap reference point).
+    last_activity: Instant,
+    /// Armed while a request is partially read; [`Conn::timed_out`].
+    read_deadline: Option<Instant>,
+    keep_alive: bool,
+    close_after_write: bool,
+    peer_eof: bool,
+    dispatch: Option<Dispatch>,
+    /// Request start (latency histograms span parse → response queued).
+    t0: Instant,
+    ep: Endpoint,
+    _open: OpenConnGuard,
+}
+
+impl Conn {
+    pub(crate) fn new(stream: TcpStream, open: OpenConnGuard) -> Conn {
+        stream.set_nodelay(true).ok();
+        Conn {
+            stream,
+            state: ConnState::ReadHead,
+            inbuf: Vec::with_capacity(4 * 1024),
+            outbuf: Vec::with_capacity(4 * 1024),
+            outpos: 0,
+            req: RequestScratch::new(),
+            out: ConnScratch::new(),
+            last_activity: Instant::now(),
+            read_deadline: None,
+            keep_alive: true,
+            close_after_write: false,
+            peer_eof: false,
+            dispatch: None,
+            t0: Instant::now(),
+            ep: Endpoint::classify("GET", "/healthz"),
+            _open: open,
+        }
+    }
+
+    pub(crate) fn raw_fd(&self) -> i32 {
+        use std::os::unix::io::AsRawFd;
+        self.stream.as_raw_fd()
+    }
+
+    /// Does the reactor need EPOLLOUT for this connection right now?
+    pub(crate) fn wants_write(&self) -> bool {
+        self.outpos < self.outbuf.len()
+    }
+
+    pub(crate) fn is_dispatched(&self) -> bool {
+        matches!(self.state, ConnState::Dispatched)
+    }
+
+    /// Should the reactor reap this connection at `now`? Mid-request
+    /// stalls hit the read deadline; quiet keep-alive connections hit the
+    /// idle timeout. (The threads backend answers a mid-request stall
+    /// with `400`; here the connection simply closes — the byte-identical
+    /// contract covers well-formed request streams only.)
+    pub(crate) fn timed_out(&self, state: &State, now: Instant) -> bool {
+        if let Some(d) = self.read_deadline {
+            if now >= d {
+                return true;
+            }
+        }
+        if matches!(self.state, ConnState::ReadHead)
+            && self.inbuf.is_empty()
+            && !self.wants_write()
+        {
+            if let Some(limit) = state.idle_timeout {
+                return now.duration_since(self.last_activity) >= limit;
+            }
+        }
+        false
+    }
+
+    /// EPOLLIN: drain the socket into `inbuf`, then pump the state machine.
+    pub(crate) fn handle_readable(&mut self, state: &State, notify_fd: i32) -> Step {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&chunk[..n]);
+                    if n < chunk.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Step::Close,
+            }
+        }
+        self.advance(state, notify_fd)
+    }
+
+    /// EPOLLOUT: flush pending response bytes, then pump the state machine
+    /// (a finished response may unblock a pipelined request in `inbuf`).
+    pub(crate) fn handle_writable(&mut self, state: &State, notify_fd: i32) -> Step {
+        self.advance(state, notify_fd)
+    }
+
+    /// Eventfd/tick sweep: collect a ready batcher completion, render the
+    /// response (or re-dispatch on a hot-swap race), and pump.
+    pub(crate) fn poll_completion(&mut self, state: &State, notify_fd: i32) -> Step {
+        if !matches!(self.state, ConnState::Dispatched) {
+            return Step::Continue;
+        }
+        if !self.out.comp.try_take_into(&mut self.out.results) {
+            return Step::Continue; // spurious wake; results still pending
+        }
+        let d = self.dispatch.take().expect("dispatched conn has dispatch state");
+        self.resolve(state, notify_fd, d);
+        self.advance(state, notify_fd)
+    }
+
+    /// The state-machine pump: loops until no further progress is possible
+    /// without new readiness (or a batcher completion).
+    fn advance(&mut self, state: &State, notify_fd: i32) -> Step {
+        loop {
+            match self.state {
+                ConnState::ReadHead => match http::parse_head(&self.inbuf, &mut self.req) {
+                    Ok(None) => {
+                        if self.peer_eof {
+                            // Clean close between requests, or EOF
+                            // mid-head — either way nothing to answer.
+                            return Step::Close;
+                        }
+                        if !self.inbuf.is_empty() && self.read_deadline.is_none() {
+                            self.read_deadline =
+                                state.read_timeout.map(|t| Instant::now() + t);
+                        }
+                        return Step::Continue;
+                    }
+                    Ok(Some(info)) => {
+                        if self.read_deadline.is_none() {
+                            self.read_deadline =
+                                state.read_timeout.map(|t| Instant::now() + t);
+                        }
+                        self.state = ConnState::ReadBody {
+                            head_len: info.head_len,
+                            content_length: info.content_length,
+                        };
+                    }
+                    Err(e) => {
+                        self.queue_parse_error(state, &format!("{e:#}"));
+                    }
+                },
+                ConnState::ReadBody { head_len, content_length } => {
+                    let total = head_len + content_length;
+                    if self.inbuf.len() < total {
+                        if self.peer_eof {
+                            return Step::Close; // body can never complete
+                        }
+                        return Step::Continue;
+                    }
+                    self.req.set_body(&self.inbuf[head_len..total]);
+                    self.inbuf.drain(..total);
+                    self.read_deadline = None;
+                    self.begin_request(state, notify_fd);
+                }
+                ConnState::Dispatched => return Step::Continue,
+                ConnState::WriteResponse => match self.flush_out() {
+                    Ok(true) => {
+                        self.outbuf.clear();
+                        self.outpos = 0;
+                        if self.close_after_write || !self.keep_alive {
+                            return Step::Close;
+                        }
+                        self.last_activity = Instant::now();
+                        self.state = ConnState::ReadHead;
+                        // Loop: a pipelined request may already be buffered.
+                    }
+                    Ok(false) => return Step::Continue, // socket full; EPOLLOUT
+                    Err(_) => return Step::Close,
+                },
+            }
+        }
+    }
+
+    /// One fully-framed request is in `self.req`; answer it inline or
+    /// dispatch it to the batcher.
+    fn begin_request(&mut self, state: &State, notify_fd: i32) {
+        state.stats.requests.inc();
+        self.t0 = Instant::now();
+        self.ep = Endpoint::classify(self.req.method(), self.req.path());
+        self.keep_alive = !self.req.wants_close();
+        if !server::is_batched(self.req.method(), self.req.path()) {
+            // Inline endpoints (healthz/stats/metrics/reload/404/405) go
+            // through the exact routing the threads backend uses; none of
+            // route's blocking predict arms can execute here.
+            let status = server::route(state, &self.req, &mut self.out);
+            self.queue_response(state, status);
+            return;
+        }
+        self.out.body_kind = BodyKind::Json;
+        self.out.retry_after = None;
+        let is_text = self.req.path() == "/predict/text";
+        let parsed = if is_text {
+            protocol::parse_text_streamed(self.req.body(), &mut self.out.texts)
+        } else {
+            protocol::parse_predict_streamed(self.req.body(), &mut self.out.builder)
+        };
+        let seed = match parsed {
+            Ok(s) => s.unwrap_or(state.default_seed),
+            Err(e) => {
+                self.queue_http_error(state, server::bad_request(format!("{e:#}")));
+                return;
+            }
+        };
+        self.dispatch =
+            Some(Dispatch { seed, is_text, attempts: 0, want: None, arena: None });
+        self.try_dispatch(state, notify_fd);
+    }
+
+    /// One submission attempt for the current [`Dispatch`]. Text requests
+    /// (re-)encode against the current vocabulary first.
+    fn try_dispatch(&mut self, state: &State, notify_fd: i32) {
+        let mut d = self.dispatch.take().expect("try_dispatch without dispatch state");
+        if d.is_text {
+            match server::encode_texts_against_current(state, &mut self.out) {
+                Ok(v) => d.want = Some(v),
+                Err(e) => {
+                    self.queue_http_error(state, e);
+                    return;
+                }
+            }
+            d.arena = Some(Arc::new(self.out.builder.finish()));
+        } else if d.arena.is_none() {
+            d.arena = Some(Arc::new(self.out.builder.finish()));
+        }
+        let arena = Arc::clone(d.arena.as_ref().unwrap());
+        if arena.num_docs() == 0 {
+            // Same outcome as the threads backend: nothing to enqueue, the
+            // (empty) result set renders immediately.
+            self.out.results.clear();
+            self.resolve(state, notify_fd, d);
+            return;
+        }
+        if !state.batcher.submit_streamed_notify(arena, d.seed, &self.out.comp, notify_fd) {
+            state.stats.shed.inc();
+            self.reclaim(d.arena.take());
+            self.queue_http_error(state, server::overloaded());
+            return;
+        }
+        self.dispatch = Some(d);
+        self.state = ConnState::Dispatched;
+    }
+
+    /// Results for one attempt are in `out.results`: render the response,
+    /// or retry on a hot-swap race (same policy/limit as the threads
+    /// backend's `SWAP_RACE_RETRIES` loop).
+    fn resolve(&mut self, state: &State, notify_fd: i32, mut d: Dispatch) {
+        match server::render_uniform(d.want, &mut self.out) {
+            Ok(true) => {
+                self.reclaim(d.arena.take());
+                self.queue_response(state, 200);
+            }
+            Ok(false) => {
+                d.attempts += 1;
+                if d.attempts >= server::SWAP_RACE_RETRIES {
+                    self.reclaim(d.arena.take());
+                    self.queue_http_error(state, server::raced());
+                    return;
+                }
+                if d.is_text {
+                    // Stale-vocabulary encodings are useless; reclaim the
+                    // buffers and re-encode in try_dispatch.
+                    self.reclaim(d.arena.take());
+                }
+                self.dispatch = Some(d);
+                self.try_dispatch(state, notify_fd);
+            }
+            Err(e) => {
+                self.reclaim(d.arena.take());
+                self.queue_http_error(state, e);
+            }
+        }
+    }
+
+    /// Best-effort buffer recycling, mirroring the threads backend: if the
+    /// batcher's clones are gone, the arena's buffers return to the
+    /// builder; otherwise the next request simply reallocates.
+    fn reclaim(&mut self, arena: Option<Arc<TokenArena>>) {
+        if let Some(a) = arena {
+            if let Ok(a) = Arc::try_unwrap(a) {
+                self.out.builder.reclaim(a);
+            }
+        }
+    }
+
+    /// Unparseable request: `400` + close, byte-identical to the threads
+    /// backend's parse-error path.
+    fn queue_parse_error(&mut self, state: &State, msg: &str) {
+        self.out.body_kind = BodyKind::Json;
+        self.out.retry_after = None;
+        protocol::error_response_into(&mut self.out.writer, msg);
+        self.keep_alive = false;
+        self.close_after_write = true;
+        self.queue_response(state, 400);
+    }
+
+    fn queue_http_error(&mut self, state: &State, e: HttpError) {
+        self.out.body_kind = BodyKind::Json;
+        self.out.retry_after = e.retry_after;
+        protocol::error_response_into(&mut self.out.writer, &e.msg);
+        self.queue_response(state, e.status);
+    }
+
+    /// Frame the response currently in the scratch buffers into `outbuf`
+    /// (via the shared `http` writers — `Vec<u8>: Write`, so the bytes are
+    /// exactly the threads backend's) and switch to `WriteResponse`.
+    fn queue_response(&mut self, state: &State, status: u16) {
+        if status >= 400 {
+            state.stats.errors.inc();
+        }
+        let (body, ctype): (&[u8], &str) = match self.out.body_kind {
+            BodyKind::Json => (self.out.writer.as_str().as_bytes(), http::CT_JSON),
+            BodyKind::Metrics => (self.out.metrics_buf.as_bytes(), http::CT_PROMETHEUS),
+        };
+        let keep_alive = self.keep_alive && !self.close_after_write;
+        let framed = match self.out.retry_after {
+            Some(secs) => http::write_response_retry_after(
+                &mut self.outbuf,
+                &mut self.out.head,
+                status,
+                body,
+                keep_alive,
+                secs,
+            ),
+            None => http::write_response_typed(
+                &mut self.outbuf,
+                &mut self.out.head,
+                status,
+                ctype,
+                body,
+                keep_alive,
+            ),
+        };
+        debug_assert!(framed.is_ok(), "Vec<u8> writes are infallible");
+        let _ = framed;
+        if state.latency_hist {
+            state.stats.latency_for(self.ep).observe(self.t0.elapsed().as_micros() as u64);
+        }
+        self.state = ConnState::WriteResponse;
+    }
+
+    /// Non-blocking drain of `outbuf`; `Ok(true)` = fully flushed.
+    fn flush_out(&mut self) -> std::io::Result<bool> {
+        while self.outpos < self.outbuf.len() {
+            match self.stream.write(&self.outbuf[self.outpos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket write returned 0",
+                    ))
+                }
+                Ok(n) => self.outpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(true)
+    }
+}

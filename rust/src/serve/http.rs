@@ -110,6 +110,14 @@ impl RequestScratch {
         std::str::from_utf8(&self.body).context("request body is not valid utf-8")
     }
 
+    /// Install the request body (event-loop path: the reactor slices it
+    /// out of the connection's receive buffer once `Content-Length` bytes
+    /// have arrived). Reuses the body buffer's capacity.
+    pub fn set_body(&mut self, bytes: &[u8]) {
+        self.body.clear();
+        self.body.extend_from_slice(bytes);
+    }
+
     fn reset(&mut self) {
         self.head.clear();
         self.headers.clear();
@@ -117,6 +125,110 @@ impl RequestScratch {
         self.path = (0, 0);
         self.body.clear();
     }
+}
+
+/// Outcome of a successful [`parse_head`]: how many bytes of the input
+/// the head consumed, and the declared body length still to arrive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeadInfo {
+    pub head_len: usize,
+    pub content_length: usize,
+}
+
+/// Incremental request-head parse over an accumulated receive buffer (the
+/// epoll path's counterpart to [`read_request_into`]). Returns
+/// `Ok(None)` while the head is still incomplete — call again once more
+/// bytes arrive; the caps ([`MAX_HEAD_BYTES`], [`MAX_BODY_BYTES`]) and
+/// every parse error match the blocking parser, so both backends reject
+/// identical requests identically. On success the scratch holds the
+/// parsed head (method/path/headers); the body is *not* consumed here —
+/// once `content_length` more bytes follow `head_len`, hand them to
+/// [`RequestScratch::set_body`].
+pub fn parse_head(raw: &[u8], s: &mut RequestScratch) -> anyhow::Result<Option<HeadInfo>> {
+    s.reset();
+    // Locate the end of head: the first line *after* the request line
+    // that is empty once trimmed.
+    let mut line_start = 0usize;
+    let mut first_line_end = None;
+    let mut head_end = None;
+    for (pos, &b) in raw.iter().enumerate() {
+        if b != b'\n' {
+            continue;
+        }
+        if first_line_end.is_none() {
+            first_line_end = Some(pos + 1);
+        } else if raw[line_start..=pos].iter().all(|c| c.is_ascii_whitespace()) {
+            head_end = Some(pos + 1);
+            break;
+        }
+        line_start = pos + 1;
+    }
+    let Some(head_end) = head_end else {
+        anyhow::ensure!(raw.len() <= MAX_HEAD_BYTES, "request head too large");
+        return Ok(None);
+    };
+    anyhow::ensure!(head_end <= MAX_HEAD_BYTES, "request head too large");
+    let first_line_end = first_line_end.unwrap();
+
+    s.head.extend_from_slice(&raw[..head_end]);
+    std::str::from_utf8(&s.head).context("request head is not valid utf-8")?;
+
+    // Request line: method SP path SP version, whitespace-tolerant
+    // (same grammar as the blocking parser).
+    let mut cursor = (0usize, first_line_end);
+    let mut next_word = |buf: &[u8]| -> Span {
+        let mut a = cursor.0;
+        while a < cursor.1 && buf[a].is_ascii_whitespace() {
+            a += 1;
+        }
+        let mut b = a;
+        while b < cursor.1 && !buf[b].is_ascii_whitespace() {
+            b += 1;
+        }
+        cursor.0 = b;
+        (a, b)
+    };
+    let method = next_word(&s.head);
+    anyhow::ensure!(method.0 < method.1, "empty request line");
+    let path = next_word(&s.head);
+    anyhow::ensure!(path.0 < path.1, "request line missing path");
+    let version = next_word(&s.head);
+    anyhow::ensure!(
+        version.0 == version.1 || s.head[version.0..version.1].starts_with(b"HTTP/1."),
+        "unsupported protocol '{}'",
+        String::from_utf8_lossy(&s.head[version.0..version.1])
+    );
+    s.method = method;
+    s.path = path;
+
+    // Header lines between the request line and the blank terminator.
+    let mut start = first_line_end;
+    while start < head_end {
+        let end = s.head[start..head_end]
+            .iter()
+            .position(|&b| b == b'\n')
+            .map(|p| start + p + 1)
+            .unwrap_or(head_end);
+        let t = trim_span(&s.head, (start, end));
+        if t.0 < t.1 {
+            if let Some(ci) = s.head[t.0..t.1].iter().position(|&b| b == b':') {
+                let name = trim_span(&s.head, (t.0, t.0 + ci));
+                let value = trim_span(&s.head, (t.0 + ci + 1, t.1));
+                s.head[name.0..name.1].make_ascii_lowercase();
+                s.headers.push((name, value));
+            }
+        }
+        start = end;
+    }
+
+    let clen = s
+        .header("content-length")
+        .map(|v| v.parse::<usize>())
+        .transpose()
+        .context("bad content-length header")?
+        .unwrap_or(0);
+    anyhow::ensure!(clen <= MAX_BODY_BYTES, "request body too large ({clen} bytes)");
+    Ok(Some(HeadInfo { head_len: head_end, content_length: clen }))
 }
 
 /// Append one `\n`-terminated line to `buf`, enforcing `limit` on the
@@ -304,6 +416,33 @@ pub fn write_response_typed<W: Write>(
         reason(status),
         content_type,
         body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.write_all(head)?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// The admission-control shed response: [`write_response_typed`] framing
+/// plus a `Retry-After: {secs}` header, so load balancers and well-behaved
+/// clients back off instead of hammering an overloaded server.
+pub fn write_response_retry_after<W: Write>(
+    w: &mut W,
+    head: &mut Vec<u8>,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+    retry_after_secs: u64,
+) -> std::io::Result<()> {
+    head.clear();
+    write!(
+        head,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nRetry-After: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        CT_JSON,
+        body.len(),
+        retry_after_secs,
         if keep_alive { "keep-alive" } else { "close" }
     )?;
     w.write_all(head)?;
@@ -514,6 +653,105 @@ mod tests {
         assert!(s.contains("Content-Type: text/plain; version=0.0.4\r\n"), "{s}");
         assert!(s.contains("Content-Length: 4\r\n"));
         assert!(s.ends_with("m 1\n"));
+    }
+
+    #[test]
+    fn incremental_head_parse_matches_blocking_parser() {
+        let raw = "POST /predict HTTP/1.1\r\nHost: x\r\nX-Mixed-CASE: Keep\r\n\
+                   Content-Length: 5\r\n\r\nhello";
+        let bytes = raw.as_bytes();
+        let mut s = RequestScratch::new();
+        // Every prefix that ends before the blank line is incomplete.
+        let head_len = raw.find("\r\n\r\n").unwrap() + 4;
+        for cut in 0..head_len {
+            assert!(
+                parse_head(&bytes[..cut], &mut s).unwrap().is_none(),
+                "cut at {cut} should be incomplete"
+            );
+        }
+        // From the blank line on, the head parses; the body is untouched.
+        let info = parse_head(bytes, &mut s).unwrap().unwrap();
+        assert_eq!(info, HeadInfo { head_len, content_length: 5 });
+        assert_eq!(s.method(), "POST");
+        assert_eq!(s.path(), "/predict");
+        assert_eq!(s.header("x-mixed-case"), Some("Keep"));
+        assert_eq!(s.header("content-length"), Some("5"));
+        s.set_body(&bytes[info.head_len..info.head_len + info.content_length]);
+        assert_eq!(s.body(), b"hello");
+        assert!(!s.wants_close());
+
+        // Field-for-field agreement with the blocking parser.
+        let mut blocking = RequestScratch::new();
+        let mut r = Cursor::new(bytes.to_vec());
+        assert!(read_request_into(&mut r, &mut blocking).unwrap());
+        assert_eq!(s.method(), blocking.method());
+        assert_eq!(s.path(), blocking.path());
+        assert_eq!(s.body(), blocking.body());
+        let a: Vec<(String, String)> =
+            s.headers().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let b: Vec<(String, String)> =
+            blocking.headers().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn incremental_head_parse_rejects_like_blocking() {
+        let mut s = RequestScratch::new();
+        // Same malformed heads the blocking parser rejects.
+        assert!(parse_head(b"GARBAGE\r\n\r\n", &mut s).is_err());
+        assert!(parse_head(b"GET / SPDY/3\r\n\r\n", &mut s).is_err());
+        assert!(
+            parse_head(b"POST / HTTP/1.1\r\nContent-Length: zebra\r\n\r\n", &mut s).is_err()
+        );
+        // Oversized head: rejected both complete and still-accumulating.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..9000 {
+            raw.push_str(&format!("X-Pad-{i}: aaaaaaaa\r\n"));
+        }
+        let err = parse_head(raw.as_bytes(), &mut s).unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
+        raw.push_str("\r\n");
+        let err = parse_head(raw.as_bytes(), &mut s).unwrap_err().to_string();
+        assert!(err.contains("too large"), "{err}");
+        // Oversized declared body.
+        let huge = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let err = parse_head(huge.as_bytes(), &mut s).unwrap_err().to_string();
+        assert!(err.contains("body too large"), "{err}");
+        // GET with no headers at all parses fine.
+        let info = parse_head(b"GET /healthz HTTP/1.1\r\n\r\n", &mut s).unwrap().unwrap();
+        assert_eq!(info.content_length, 0);
+        assert_eq!(s.path(), "/healthz");
+    }
+
+    #[test]
+    fn incremental_parse_supports_pipelined_requests() {
+        let raw = b"POST /predict HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                    GET /stats HTTP/1.1\r\n\r\ntrailing";
+        let mut s = RequestScratch::new();
+        let info = parse_head(raw, &mut s).unwrap().unwrap();
+        s.set_body(&raw[info.head_len..info.head_len + info.content_length]);
+        assert_eq!(s.method(), "POST");
+        assert_eq!(s.body(), b"hi");
+        let rest = &raw[info.head_len + info.content_length..];
+        let info2 = parse_head(rest, &mut s).unwrap().unwrap();
+        assert_eq!(s.method(), "GET");
+        assert_eq!(s.path(), "/stats");
+        assert_eq!(info2.content_length, 0);
+        assert_eq!(&rest[info2.head_len..], b"trailing");
+    }
+
+    #[test]
+    fn retry_after_response_framing() {
+        let mut out = Vec::new();
+        let mut head = Vec::new();
+        write_response_retry_after(&mut out, &mut head, 503, b"{\"error\":\"x\"}", true, 2)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 2\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 13\r\n"));
+        assert!(s.contains("Connection: keep-alive\r\n"));
+        assert!(s.ends_with("{\"error\":\"x\"}"));
     }
 
     #[test]

@@ -19,13 +19,23 @@
 //!   into prediction batches (`max_batch` / `max_wait_us`) executed by a
 //!   worker pool with per-document seeded RNG streams, so responses are
 //!   deterministic for a given (model, seed, doc).
-//! * [`server`] — accept loop, routing, endpoint handlers.
+//! * [`server`] — routing, endpoint handlers, admission control, and the
+//!   `threads` backend (one handler thread per connection — the portable
+//!   fallback and behavioral reference).
+//! * [`conn`] — per-connection non-blocking state machine (ReadHead →
+//!   ReadBody → Dispatched → WriteResponse → KeepAlive) used by the epoll
+//!   backend; keep-alive pipelining, buffer reuse.
+//! * [`reactor`] — the `epoll` backend: a single readiness event loop
+//!   driving [`conn`] state machines for 10k+ concurrent connections,
+//!   with batcher completions delivered via `eventfd`.
 //! * [`bench`] — the `serve-bench` loopback load harness
 //!   (`BENCH_serve.json`).
 
 pub mod batcher;
 pub mod bench;
+pub mod conn;
 pub mod http;
 pub mod protocol;
+pub mod reactor;
 pub mod registry;
 pub mod server;

@@ -1,0 +1,330 @@
+//! The epoll backend: one non-blocking readiness loop for every
+//! connection (`[serve] backend = "epoll"`, DESIGN.md §Serving
+//! "Event-loop architecture").
+//!
+//! A single reactor thread owns an `epoll` instance with three kinds of
+//! registrations, distinguished by the event cookie:
+//!
+//! * cookie `0` — the listening socket; readiness drains an `accept4`
+//!   loop (`SOCK_NONBLOCK | SOCK_CLOEXEC`, one syscall per connection)
+//!   behind the `max_conns` admission gate (`503 Retry-After` + close
+//!   past it).
+//! * cookie `1` — an `eventfd`. Batcher workers signal it when the last
+//!   document of a dispatched predict request resolves
+//!   ([`Completion`]'s notify arm), replacing the blocking condvar
+//!   rendezvous of the threads backend: the reactor wakes, drains the
+//!   counter, and sweeps dispatched connections with the non-blocking
+//!   [`Conn::poll_completion`].
+//! * cookie `slot + 2` — connections, stored in a slab (`Vec<Option>` +
+//!   free list) so cookies stay dense and stable. Write interest
+//!   (`EPOLLOUT`) is toggled with `EPOLL_CTL_MOD` only while a response
+//!   is partially written.
+//!
+//! The wait runs with a 50ms tick: each tick (and each eventfd wake)
+//! sweeps dispatched completions — a lost wakeup degrades latency by at
+//! most one tick, never correctness — and reaps idle / stalled
+//! connections against `idle_timeout_ms` / `read_timeout_ms`. Time spent
+//! *processing* each non-empty `epoll_wait` batch is recorded in the
+//! `cfslda_event_loop_iteration_seconds` histogram.
+//!
+//! [`Completion`]: crate::serve::batcher::Completion
+//! [`Conn::poll_completion`]: crate::serve::conn::Conn::poll_completion
+
+use crate::serve::conn::{Conn, Step};
+use crate::serve::server::{self, ConnScratch, OpenConnGuard, State};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, FromRawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const LISTENER_COOKIE: u64 = 0;
+const EVENTFD_COOKIE: u64 = 1;
+/// Connection slot `s` registers with cookie `s + CONN_BASE`.
+const CONN_BASE: u64 = 2;
+/// Events collected per `epoll_wait` call.
+const MAX_EVENTS: usize = 256;
+/// Wait timeout: the cadence of completion sweeps, timeout reaps, and
+/// shutdown-flag polls when the loop is otherwise quiet.
+const TICK_MS: i32 = 50;
+
+/// Run the event loop until `shutdown` is set. Consumes the listening
+/// socket; connections still open at shutdown are dropped (the same
+/// contract as the threads backend, whose handlers exit at their next
+/// poll tick).
+pub fn run(
+    listener: TcpListener,
+    state: Arc<State>,
+    shutdown: Arc<AtomicBool>,
+) -> anyhow::Result<()> {
+    Reactor::new(listener, state, shutdown)?.run_loop()
+}
+
+fn ep_ctl(epfd: i32, op: i32, fd: i32, events: u32, cookie: u64) -> std::io::Result<()> {
+    let mut ev = libc::epoll_event { events, u64: cookie };
+    let rc = unsafe { libc::epoll_ctl(epfd, op, fd, &mut ev) };
+    if rc < 0 {
+        Err(std::io::Error::last_os_error())
+    } else {
+        Ok(())
+    }
+}
+
+struct Reactor {
+    epfd: i32,
+    /// Completion-notify eventfd, shared with batcher workers.
+    efd: i32,
+    listener: TcpListener,
+    state: Arc<State>,
+    shutdown: Arc<AtomicBool>,
+    /// Connection slab; index = cookie - CONN_BASE.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    /// Currently-registered epoll interest per slot (skips no-op MODs).
+    interest: Vec<u32>,
+    /// Scratch for admission-shed responses written inline at accept.
+    shed_out: ConnScratch,
+}
+
+impl Reactor {
+    fn new(
+        listener: TcpListener,
+        state: Arc<State>,
+        shutdown: Arc<AtomicBool>,
+    ) -> anyhow::Result<Reactor> {
+        // The accept4 flags only affect the *accepted* socket; the listener
+        // itself must be non-blocking or a connection that resets between
+        // readiness and accept would block the whole reactor.
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("listener set_nonblocking: {e}"))?;
+        let epfd = unsafe { libc::epoll_create1(libc::EPOLL_CLOEXEC) };
+        anyhow::ensure!(epfd >= 0, "epoll_create1: {}", std::io::Error::last_os_error());
+        let efd = unsafe { libc::eventfd(0, libc::EFD_NONBLOCK | libc::EFD_CLOEXEC) };
+        if efd < 0 {
+            let e = std::io::Error::last_os_error();
+            unsafe { libc::close(epfd) };
+            anyhow::bail!("eventfd: {e}");
+        }
+        let r = Reactor {
+            epfd,
+            efd,
+            listener,
+            state,
+            shutdown,
+            conns: Vec::new(),
+            free: Vec::new(),
+            interest: Vec::new(),
+            shed_out: ConnScratch::new(),
+        };
+        ep_ctl(epfd, libc::EPOLL_CTL_ADD, r.listener.as_raw_fd(), libc::EPOLLIN, LISTENER_COOKIE)
+            .map_err(|e| anyhow::anyhow!("registering listener: {e}"))?;
+        ep_ctl(epfd, libc::EPOLL_CTL_ADD, efd, libc::EPOLLIN, EVENTFD_COOKIE)
+            .map_err(|e| anyhow::anyhow!("registering eventfd: {e}"))?;
+        Ok(r)
+    }
+
+    fn run_loop(&mut self) -> anyhow::Result<()> {
+        let mut events = [libc::epoll_event { events: 0, u64: 0 }; MAX_EVENTS];
+        let mut last_reap = Instant::now();
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            let n = unsafe {
+                libc::epoll_wait(self.epfd, events.as_mut_ptr(), MAX_EVENTS as i32, TICK_MS)
+            };
+            if n < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                anyhow::bail!("epoll_wait: {e}");
+            }
+            let t0 = Instant::now();
+            let mut sweep = n == 0; // quiet tick: safety-net sweep
+            for ev in events.iter().take(n as usize) {
+                // Braced reads: the x86_64 struct is packed.
+                let cookie = { ev.u64 };
+                let mask = { ev.events };
+                match cookie {
+                    LISTENER_COOKIE => self.accept_ready(),
+                    EVENTFD_COOKIE => {
+                        self.drain_eventfd();
+                        sweep = true;
+                    }
+                    c => self.conn_ready((c - CONN_BASE) as usize, mask),
+                }
+            }
+            if sweep {
+                self.sweep_dispatched();
+            }
+            if last_reap.elapsed() >= Duration::from_millis(TICK_MS as u64) {
+                last_reap = Instant::now();
+                self.reap_timeouts();
+            }
+            if n > 0 {
+                self.state.stats.loop_iteration.observe(t0.elapsed().as_micros() as u64);
+            }
+        }
+    }
+
+    /// Drain the accept backlog: one `accept4` per connection, admission
+    /// gate applied before registration.
+    fn accept_ready(&mut self) {
+        loop {
+            let fd = unsafe {
+                libc::accept4(
+                    self.listener.as_raw_fd(),
+                    std::ptr::null_mut(),
+                    std::ptr::null_mut(),
+                    libc::SOCK_NONBLOCK | libc::SOCK_CLOEXEC,
+                )
+            };
+            if fd < 0 {
+                let e = std::io::Error::last_os_error();
+                match e.kind() {
+                    std::io::ErrorKind::WouldBlock => return,
+                    std::io::ErrorKind::Interrupted => continue,
+                    _ => {
+                        log::warn!("accept error: {e}");
+                        return;
+                    }
+                }
+            }
+            let mut stream = unsafe { TcpStream::from_raw_fd(fd) };
+            self.state.stats.accepted.inc();
+            if self.state.max_conns > 0
+                && self.state.stats.open_connections.get() >= self.state.max_conns as u64
+            {
+                self.state.stats.shed.inc();
+                server::write_shed_response(&mut stream, &mut self.shed_out);
+                continue; // drop closes the socket
+            }
+            let open = OpenConnGuard::new(&self.state.stats);
+            let conn = Conn::new(stream, open);
+            let slot = self.free.pop().unwrap_or_else(|| {
+                self.conns.push(None);
+                self.interest.push(0);
+                self.conns.len() - 1
+            });
+            let want = libc::EPOLLIN | libc::EPOLLRDHUP;
+            if let Err(e) =
+                ep_ctl(self.epfd, libc::EPOLL_CTL_ADD, conn.raw_fd(), want, CONN_BASE + slot as u64)
+            {
+                log::warn!("registering connection: {e}");
+                self.free.push(slot);
+                continue; // conn drops, guard decrements
+            }
+            self.interest[slot] = want;
+            self.conns[slot] = Some(conn);
+        }
+    }
+
+    fn drain_eventfd(&mut self) {
+        // Non-semaphore eventfd: one read returns the whole counter.
+        let mut v: u64 = 0;
+        unsafe {
+            libc::read(self.efd, &mut v as *mut u64 as *mut libc::c_void, 8);
+        }
+    }
+
+    fn conn_ready(&mut self, slot: usize, mask: u32) {
+        let step = {
+            let Some(conn) = self.conns.get_mut(slot).and_then(Option::as_mut) else {
+                return; // already closed this iteration
+            };
+            if mask & libc::EPOLLERR != 0 {
+                Step::Close
+            } else {
+                // RDHUP/HUP surface through read() (EOF), which still
+                // lets a final buffered request be answered first.
+                let mut step = Step::Continue;
+                if mask & (libc::EPOLLIN | libc::EPOLLRDHUP | libc::EPOLLHUP) != 0 {
+                    step = conn.handle_readable(&self.state, self.efd);
+                }
+                if step == Step::Continue && mask & libc::EPOLLOUT != 0 {
+                    step = conn.handle_writable(&self.state, self.efd);
+                }
+                step
+            }
+        };
+        self.finish_step(slot, step);
+    }
+
+    /// Collect any ready completions on dispatched connections.
+    fn sweep_dispatched(&mut self) {
+        for slot in 0..self.conns.len() {
+            let dispatched =
+                matches!(self.conns[slot].as_ref(), Some(c) if c.is_dispatched());
+            if !dispatched {
+                continue;
+            }
+            let step = self.conns[slot]
+                .as_mut()
+                .unwrap()
+                .poll_completion(&self.state, self.efd);
+            self.finish_step(slot, step);
+        }
+    }
+
+    fn reap_timeouts(&mut self) {
+        let now = Instant::now();
+        for slot in 0..self.conns.len() {
+            let expired =
+                matches!(self.conns[slot].as_ref(), Some(c) if c.timed_out(&self.state, now));
+            if expired {
+                self.close_conn(slot);
+            }
+        }
+    }
+
+    fn finish_step(&mut self, slot: usize, step: Step) {
+        match step {
+            Step::Close => self.close_conn(slot),
+            Step::Continue => self.update_interest(slot),
+        }
+    }
+
+    /// Re-derive the slot's epoll interest (write interest only while a
+    /// response is partially flushed); no-op unless it changed.
+    fn update_interest(&mut self, slot: usize) {
+        let Some(conn) = self.conns[slot].as_ref() else { return };
+        let mut want = libc::EPOLLIN | libc::EPOLLRDHUP;
+        if conn.wants_write() {
+            want |= libc::EPOLLOUT;
+        }
+        if want != self.interest[slot] {
+            match ep_ctl(self.epfd, libc::EPOLL_CTL_MOD, conn.raw_fd(), want, CONN_BASE + slot as u64)
+            {
+                Ok(()) => self.interest[slot] = want,
+                Err(e) => {
+                    log::warn!("epoll_ctl MOD: {e}");
+                    self.close_conn(slot);
+                }
+            }
+        }
+    }
+
+    fn close_conn(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            // Kernels before 2.6.9 required a non-null event for DEL; ours
+            // don't, but passing one costs nothing.
+            let _ = ep_ctl(self.epfd, libc::EPOLL_CTL_DEL, conn.raw_fd(), 0, 0);
+            self.interest[slot] = 0;
+            self.free.push(slot);
+            // Dropping the conn closes the socket and decrements the
+            // open-connections gauge; any still-running batcher work for
+            // it resolves into a completion nobody collects — harmless.
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        unsafe {
+            libc::close(self.efd);
+            libc::close(self.epfd);
+        }
+    }
+}

@@ -13,9 +13,21 @@
 //! * `POST /reload`       — atomic hot-swap to a new (or re-read) model
 //!   file; in-flight requests finish on the old version.
 //!
-//! Threading: one detached handler thread per connection (keep-alive), all
-//! prediction work funneled through the shared [`Batcher`] pool, so
-//! connection count does not multiply sampler threads.
+//! Connection handling is backend-selectable (`[serve] backend`,
+//! DESIGN.md §Serving "Event-loop architecture"):
+//!
+//! * `threads` — one detached handler thread per connection (keep-alive),
+//!   the portable fallback and the behavioral reference.
+//! * `epoll` — a single non-blocking readiness loop
+//!   ([`crate::serve::reactor`]) driving per-connection state machines
+//!   ([`crate::serve::conn`]) for 10k+ concurrent connections.
+//!
+//! Both funnel prediction work through the shared [`Batcher`] pool (so
+//! connection count does not multiply sampler threads), share every
+//! endpoint handler below, and return byte-identical responses for the
+//! same (model, seed, doc) request stream. Admission control is shared
+//! too: beyond `max_conns` open connections or `queue_depth_max` queued
+//! documents, requests are shed with `503 Retry-After`.
 //!
 //! Allocation discipline (DESIGN.md §Serving, "Streaming codec"): each
 //! connection owns a [`ConnScratch`] — request-head/body buffers, a
@@ -27,7 +39,7 @@
 //! property.
 
 use crate::config::json::JsonWriter;
-use crate::config::schema::ExperimentConfig;
+use crate::config::schema::{ExperimentConfig, ServeBackend};
 use crate::data::corpus::TokenArena;
 use crate::data::tokenizer::{tokenize, TokenizerConfig};
 use crate::obs::{Endpoint, ServeMetrics};
@@ -36,7 +48,7 @@ use crate::serve::http::{self, RequestScratch};
 use crate::serve::protocol;
 use crate::serve::registry::Registry;
 use crate::util::pool::num_cpus;
-use std::io::{BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -44,21 +56,33 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Shared per-server state, one `Arc` per connection thread.
-struct State {
-    registry: Arc<Registry>,
-    batcher: Batcher,
-    stats: Arc<ServeMetrics>,
-    started: Instant,
-    default_seed: u64,
-    workers: usize,
-    tok_cfg: TokenizerConfig,
+/// Shared per-server state, one `Arc` per connection thread (threads
+/// backend) or one for the whole reactor (epoll backend).
+pub(crate) struct State {
+    pub(crate) registry: Arc<Registry>,
+    pub(crate) batcher: Batcher,
+    pub(crate) stats: Arc<ServeMetrics>,
+    pub(crate) started: Instant,
+    pub(crate) default_seed: u64,
+    pub(crate) workers: usize,
+    pub(crate) tok_cfg: TokenizerConfig,
     /// `[obs] latency_histograms` — record per-endpoint latency when set.
-    latency_hist: bool,
+    pub(crate) latency_hist: bool,
+    /// Admission limit on concurrently open connections (0 = unlimited).
+    pub(crate) max_conns: usize,
+    /// Idle keep-alive reap timeout (`None` = never).
+    pub(crate) idle_timeout: Option<Duration>,
+    /// Mid-request stall timeout (`None` = never).
+    pub(crate) read_timeout: Option<Duration>,
+    /// Graceful-shutdown flag: `/healthz` reports `draining` while set.
+    pub(crate) draining: AtomicBool,
 }
 
+/// `Retry-After` seconds carried on every admission-control shed.
+pub(crate) const RETRY_AFTER_SECS: u64 = 1;
+
 /// Which scratch buffer holds the response body for the current request.
-enum BodyKind {
+pub(crate) enum BodyKind {
     /// `out.writer` (JSON, the default).
     Json,
     /// `out.metrics_buf` (Prometheus text exposition).
@@ -69,30 +93,33 @@ enum BodyKind {
 /// lives here and is recycled across keep-alive requests; only the cold
 /// paths (errors, `/stats`, `/predict/text` tokenization) allocate per
 /// request.
-struct ConnScratch {
+pub(crate) struct ConnScratch {
     /// Response body under construction (also reused for error bodies).
-    writer: JsonWriter,
+    pub(crate) writer: JsonWriter,
     /// Response head bytes (status line + headers).
-    head: Vec<u8>,
+    pub(crate) head: Vec<u8>,
     /// CSR staging area for `/predict` docs; recycled via
     /// [`ArenaBuilder::reclaim`] when the batcher drops its handle in time.
-    builder: ArenaBuilder,
+    pub(crate) builder: ArenaBuilder,
     /// `/predict/text` rows.
-    texts: Vec<String>,
+    pub(crate) texts: Vec<String>,
     /// Pooled batcher rendezvous, re-armed per request.
-    comp: Arc<Completion>,
+    pub(crate) comp: Arc<Completion>,
     /// Per-document batcher results, drained into `yhat` per request.
-    results: Vec<anyhow::Result<DocOut>>,
+    pub(crate) results: Vec<anyhow::Result<DocOut>>,
     /// Per-request responses collected from the batcher before rendering.
-    yhat: Vec<f64>,
+    pub(crate) yhat: Vec<f64>,
     /// `GET /metrics` exposition body (reused across scrapes).
-    metrics_buf: String,
+    pub(crate) metrics_buf: String,
     /// Selects the body buffer when writing the response.
-    body_kind: BodyKind,
+    pub(crate) body_kind: BodyKind,
+    /// `Some(secs)` when the last routed request was shed by admission
+    /// control; selects the `Retry-After` response framing.
+    pub(crate) retry_after: Option<u64>,
 }
 
 impl ConnScratch {
-    fn new() -> ConnScratch {
+    pub(crate) fn new() -> ConnScratch {
         ConnScratch {
             writer: JsonWriter::with_capacity(256),
             head: Vec::with_capacity(128),
@@ -103,6 +130,7 @@ impl ConnScratch {
             yhat: Vec::new(),
             metrics_buf: String::new(),
             body_kind: BodyKind::Json,
+            retry_after: None,
         }
     }
 }
@@ -139,12 +167,14 @@ impl Server {
                 workers,
                 max_batch: cfg.serve.max_batch,
                 max_wait_us: cfg.serve.max_wait_us,
+                queue_depth_max: cfg.serve.queue_depth_max,
                 kernel: cfg.sampler.kernel,
                 train: cfg.train.clone(),
             },
             Arc::clone(&registry),
             Arc::clone(&stats),
         );
+        let ms = |v: u64| (v > 0).then(|| Duration::from_millis(v));
         let state = Arc::new(State {
             registry,
             batcher,
@@ -154,6 +184,10 @@ impl Server {
             workers,
             tok_cfg: TokenizerConfig::default(),
             latency_hist: cfg.obs.latency_histograms,
+            max_conns: cfg.serve.max_conns,
+            idle_timeout: ms(cfg.serve.idle_timeout_ms),
+            read_timeout: ms(cfg.serve.read_timeout_ms),
+            draining: AtomicBool::new(false),
         });
 
         let listener = TcpListener::bind(&cfg.serve.addr)
@@ -164,7 +198,16 @@ impl Server {
         let accept = {
             let state = Arc::clone(&state);
             let shutdown = Arc::clone(&shutdown);
-            std::thread::spawn(move || accept_loop(listener, state, shutdown))
+            match cfg.serve.backend {
+                ServeBackend::Threads => {
+                    std::thread::spawn(move || accept_loop(listener, state, shutdown))
+                }
+                ServeBackend::Epoll => std::thread::spawn(move || {
+                    if let Err(e) = crate::serve::reactor::run(listener, state, shutdown) {
+                        log::error!("epoll reactor exited: {e:#}");
+                    }
+                }),
+            }
         };
         Ok(Server { addr, shutdown, accept: Some(accept), state })
     }
@@ -184,6 +227,13 @@ impl Server {
         Arc::clone(&self.state.stats)
     }
 
+    /// Graceful-shutdown step 1: flip `/healthz` to `"draining"` so load
+    /// balancers stop routing here while existing connections keep being
+    /// served. [`Server::stop`] calls this first.
+    pub fn begin_drain(&self) {
+        self.state.draining.store(true, Ordering::SeqCst);
+    }
+
     /// Stop accepting and join the accept loop. Existing keep-alive
     /// connections drop at their next poll tick.
     pub fn stop(mut self) {
@@ -191,6 +241,7 @@ impl Server {
     }
 
     fn shutdown_inner(&mut self) {
+        self.begin_drain();
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(j) = self.accept.take() {
             let _ = j.join();
@@ -204,13 +255,58 @@ impl Drop for Server {
     }
 }
 
+/// RAII decrement for `cfslda_open_connections`; one per live connection
+/// in either backend.
+pub(crate) struct OpenConnGuard(Arc<ServeMetrics>);
+
+impl OpenConnGuard {
+    pub(crate) fn new(stats: &Arc<ServeMetrics>) -> OpenConnGuard {
+        stats.open_connections.add(1);
+        OpenConnGuard(Arc::clone(stats))
+    }
+}
+
+impl Drop for OpenConnGuard {
+    fn drop(&mut self) {
+        self.0.open_connections.sub(1);
+    }
+}
+
+/// Shed a connection at the accept gate: best-effort `503 Retry-After`
+/// so the client learns to back off, then close. Shared by both backends.
+pub(crate) fn write_shed_response<W: Write>(w: &mut W, scratch: &mut ConnScratch) {
+    let e = overloaded();
+    protocol::error_response_into(&mut scratch.writer, &e.msg);
+    let _ = http::write_response_retry_after(
+        w,
+        &mut scratch.head,
+        e.status,
+        scratch.writer.as_str().as_bytes(),
+        false,
+        RETRY_AFTER_SECS,
+    );
+}
+
 fn accept_loop(listener: TcpListener, state: Arc<State>, shutdown: Arc<AtomicBool>) {
+    // Scratch for shed responses written inline on the accept thread.
+    let mut shed_out = ConnScratch::new();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok((mut stream, _peer)) => {
+                state.stats.accepted.inc();
+                // Admission gate: past `max_conns` open connections, shed
+                // instead of spawning an unbounded number of handler
+                // threads (the whole point of the limit).
+                if state.max_conns > 0
+                    && state.stats.open_connections.get() >= state.max_conns as u64
+                {
+                    state.stats.shed.inc();
+                    write_shed_response(&mut stream, &mut shed_out);
+                    continue;
+                }
                 let state = Arc::clone(&state);
                 let shutdown = Arc::clone(&shutdown);
                 std::thread::spawn(move || handle_conn(stream, state, shutdown));
@@ -226,7 +322,56 @@ fn accept_loop(listener: TcpListener, state: Arc<State>, shutdown: Arc<AtomicBoo
     }
 }
 
+/// `BufRead` adapter enforcing a *total* per-request deadline on top of
+/// the socket's short poll timeout. The socket timeout alone cannot stop
+/// a slow-loris client that trickles one byte per 200ms — every syscall
+/// succeeds in time while the request never completes. Here each
+/// `fill_buf` retries through poll timeouts until the deadline, then
+/// surfaces `TimedOut` (which the caller turns into 400 + close).
+struct TimedReader<'a> {
+    inner: &'a mut BufReader<TcpStream>,
+    deadline: Option<Instant>,
+}
+
+impl Read for TimedReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let available = self.fill_buf()?;
+        let n = available.len().min(buf.len());
+        buf[..n].copy_from_slice(&available[..n]);
+        self.consume(n);
+        Ok(n)
+    }
+}
+
+impl BufRead for TimedReader<'_> {
+    fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+        loop {
+            match self.inner.fill_buf() {
+                Ok(_) => break,
+                Err(e) if http::is_timeout_io(&e) => {
+                    if let Some(d) = self.deadline {
+                        if Instant::now() >= d {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::TimedOut,
+                                "request read deadline exceeded",
+                            ));
+                        }
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // The data (or hard error) is now buffered; re-borrow to return it.
+        self.inner.fill_buf()
+    }
+
+    fn consume(&mut self, amt: usize) {
+        self.inner.consume(amt);
+    }
+}
+
 fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) {
+    let _open = OpenConnGuard::new(&state.stats);
     // Short read timeout => idle keep-alive connections poll the shutdown
     // flag a few times per second instead of pinning a thread forever.
     stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
@@ -239,24 +384,36 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
     let mut reader = BufReader::new(stream);
     let mut req = RequestScratch::new();
     let mut out = ConnScratch::new();
+    let mut idle_since = Instant::now();
     loop {
         if shutdown.load(Ordering::SeqCst) {
             return;
         }
         // Idle wait happens *here*, on the buffered peek: a read timeout
-        // between requests just re-polls the shutdown flag. Once the first
-        // byte of a request has arrived, a timeout inside read_request_into
-        // is a protocol error (we never resync a half-read stream).
+        // between requests just re-polls the shutdown flag (and the idle
+        // reap deadline). Once the first byte of a request has arrived,
+        // the per-request read deadline below takes over — we never
+        // resync a half-read stream.
         {
-            use std::io::BufRead;
             match reader.fill_buf() {
                 Ok(buf) if buf.is_empty() => return, // peer closed
                 Ok(_) => {}
-                Err(e) if http::is_timeout_io(&e) => continue,
+                Err(e) if http::is_timeout_io(&e) => {
+                    if let Some(limit) = state.idle_timeout {
+                        if idle_since.elapsed() >= limit {
+                            return; // idle keep-alive reaped
+                        }
+                    }
+                    continue;
+                }
                 Err(_) => return,
             }
         }
-        match http::read_request_into(&mut reader, &mut req) {
+        let mut timed = TimedReader {
+            inner: &mut reader,
+            deadline: state.read_timeout.map(|t| Instant::now() + t),
+        };
+        match http::read_request_into(&mut timed, &mut req) {
             Ok(false) => return, // peer closed
             Ok(true) => {
                 state.stats.requests.inc();
@@ -273,20 +430,31 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
                     BodyKind::Json => (out.writer.as_str().as_bytes(), http::CT_JSON),
                     BodyKind::Metrics => (out.metrics_buf.as_bytes(), http::CT_PROMETHEUS),
                 };
-                let write_ok = http::write_response_typed(
-                    &mut writer,
-                    &mut out.head,
-                    status,
-                    ctype,
-                    body,
-                    keep_alive,
-                );
+                let write_ok = match out.retry_after {
+                    Some(secs) => http::write_response_retry_after(
+                        &mut writer,
+                        &mut out.head,
+                        status,
+                        body,
+                        keep_alive,
+                        secs,
+                    ),
+                    None => http::write_response_typed(
+                        &mut writer,
+                        &mut out.head,
+                        status,
+                        ctype,
+                        body,
+                        keep_alive,
+                    ),
+                };
                 if state.latency_hist {
                     state.stats.latency_for(ep).observe(t0.elapsed().as_micros() as u64);
                 }
                 if write_ok.is_err() || !keep_alive {
                     return;
                 }
+                idle_since = Instant::now();
             }
             Err(e) => {
                 state.stats.errors.inc();
@@ -306,9 +474,11 @@ fn handle_conn(stream: TcpStream, state: Arc<State>, shutdown: Arc<AtomicBool>) 
 
 /// Dispatch one parsed request. The response body is left in the scratch
 /// buffer selected by `out.body_kind`; the returned status selects the
-/// head line.
-fn route(state: &State, req: &RequestScratch, out: &mut ConnScratch) -> u16 {
+/// head line. `out.retry_after` is set iff admission control shed the
+/// request.
+pub(crate) fn route(state: &State, req: &RequestScratch, out: &mut ConnScratch) -> u16 {
     out.body_kind = BodyKind::Json;
+    out.retry_after = None;
     let res = match (req.method(), req.path()) {
         ("GET", "/healthz") => handle_healthz(state, &mut out.writer),
         ("GET", "/stats") => handle_stats(state, &mut out.writer),
@@ -316,37 +486,60 @@ fn route(state: &State, req: &RequestScratch, out: &mut ConnScratch) -> u16 {
         ("POST", "/predict") => handle_predict(state, req, out),
         ("POST", "/predict/text") => handle_predict_text(state, req, out),
         ("POST", "/reload") => handle_reload(state, req, &mut out.writer),
-        ("GET", _) | ("POST", _) => {
-            Err(HttpError { status: 404, msg: "no such endpoint".into() })
-        }
-        _ => Err(HttpError { status: 405, msg: "method not allowed".into() }),
+        ("GET", _) | ("POST", _) => Err(HttpError {
+            status: 404,
+            msg: "no such endpoint".into(),
+            retry_after: None,
+        }),
+        _ => Err(HttpError { status: 405, msg: "method not allowed".into(), retry_after: None }),
     };
     match res {
         Ok(()) => 200,
         Err(e) => {
             out.body_kind = BodyKind::Json;
+            out.retry_after = e.retry_after;
             protocol::error_response_into(&mut out.writer, &e.msg);
             e.status
         }
     }
 }
 
-/// Handler error carrying the HTTP status to respond with.
-struct HttpError {
-    status: u16,
-    msg: String,
+/// Whether a request rides the micro-batcher (and must therefore never be
+/// handled inline on the epoll reactor thread).
+pub(crate) fn is_batched(method: &str, path: &str) -> bool {
+    matches!((method, path), ("POST", "/predict") | ("POST", "/predict/text"))
 }
 
-fn bad_request(e: impl std::fmt::Display) -> HttpError {
-    HttpError { status: 400, msg: format!("{e}") }
+/// Handler error carrying the HTTP status to respond with.
+pub(crate) struct HttpError {
+    pub(crate) status: u16,
+    pub(crate) msg: String,
+    /// `Some(secs)` on admission-control sheds (adds `Retry-After`).
+    pub(crate) retry_after: Option<u64>,
+}
+
+pub(crate) fn bad_request(e: impl std::fmt::Display) -> HttpError {
+    HttpError { status: 400, msg: format!("{e}"), retry_after: None }
 }
 
 fn server_error(e: impl std::fmt::Display) -> HttpError {
-    HttpError { status: 500, msg: format!("{e}") }
+    HttpError { status: 500, msg: format!("{e}"), retry_after: None }
 }
 
-fn raced() -> HttpError {
-    HttpError { status: 503, msg: "model reloads raced this request; retry".into() }
+pub(crate) fn raced() -> HttpError {
+    HttpError {
+        status: 503,
+        msg: "model reloads raced this request; retry".into(),
+        retry_after: None,
+    }
+}
+
+pub(crate) fn overloaded() -> HttpError {
+    HttpError {
+        status: 503,
+        msg: "server overloaded; prediction queue is full".into(),
+        retry_after: Some(RETRY_AFTER_SECS),
+    }
 }
 
 // Response keys are emitted in sorted order on purpose: the tree codec
@@ -362,7 +555,7 @@ fn handle_healthz(state: &State, w: &mut JsonWriter) -> Result<(), HttpError> {
     w.key("model_version");
     w.number_f64(entry.version as f64);
     w.key("status");
-    w.string("ok");
+    w.string(if state.draining.load(Ordering::SeqCst) { "draining" } else { "ok" });
     w.key("topics");
     w.number_f64(entry.model.t as f64);
     w.key("vocab");
@@ -438,14 +631,11 @@ fn handle_metrics(state: &State, out: &mut ConnScratch) -> Result<(), HttpError>
 /// Attempts per request when a hot-swap races the batcher: predictions
 /// are deterministic and cached, so a retry is cheap and converges as
 /// soon as one full pass runs against a single model version.
-const SWAP_RACE_RETRIES: usize = 3;
+pub(crate) const SWAP_RACE_RETRIES: usize = 3;
 
-/// Submit an arena through the connection's pooled completion and render
-/// a response into `out.writer` **if** every document resolved under the
-/// same model version (`want` additionally pins which one, for the text
-/// path whose token ids are only meaningful under the vocabulary they
-/// were encoded with). `Ok(false)` = a hot swap landed mid-request; the
-/// caller re-submits.
+/// Submit an arena through the connection's pooled completion (shedding
+/// with 503 `Retry-After` when the batcher queue is at its bound) and
+/// render the response via [`render_uniform`].
 fn submit_uniform(
     state: &State,
     arena: &Arc<TokenArena>,
@@ -453,7 +643,28 @@ fn submit_uniform(
     want: Option<u64>,
     out: &mut ConnScratch,
 ) -> Result<bool, HttpError> {
-    state.batcher.submit_streamed_into(Arc::clone(arena), seed, &out.comp, &mut out.results);
+    if !state.batcher.try_submit_streamed_into(
+        Arc::clone(arena),
+        seed,
+        &out.comp,
+        &mut out.results,
+    ) {
+        state.stats.shed.inc();
+        return Err(overloaded());
+    }
+    render_uniform(want, out)
+}
+
+/// Render a predict response from `out.results` (drained) **if** every
+/// document resolved under the same model version; `want` additionally
+/// pins which one (the text path's token ids are only meaningful under
+/// the vocabulary they were encoded with). `Ok(false)` = a hot swap
+/// landed mid-request; the caller re-submits. Shared with the epoll
+/// backend, which fills `out.results` via `Completion::try_take_into`.
+pub(crate) fn render_uniform(
+    want: Option<u64>,
+    out: &mut ConnScratch,
+) -> Result<bool, HttpError> {
     out.yhat.clear();
     let mut version: Option<u64> = None;
     let mut cached = 0usize;
@@ -510,6 +721,42 @@ fn handle_predict(
     }
 }
 
+/// Tokenize `out.texts` into the connection's arena builder against the
+/// *current* registry entry; returns the model version the ids were
+/// encoded under (each `/predict/text` attempt must run under exactly
+/// that version). Shared with the epoll backend.
+pub(crate) fn encode_texts_against_current(
+    state: &State,
+    out: &mut ConnScratch,
+) -> Result<u64, HttpError> {
+    let entry = state.registry.current();
+    let vocab = entry.vocab.as_ref().ok_or_else(|| {
+        bad_request(
+            "model was saved without a vocabulary; re-train with `cfslda train` \
+             on a raw-text corpus (or pass --vocab) to enable /predict/text",
+        )
+    })?;
+    // Encode straight into the connection's arena builder — no
+    // per-document `Vec<Vec<u32>>` staging; out-of-vocabulary tokens
+    // drop exactly as `Vocab::encode` drops them.
+    out.builder.clear();
+    for (i, text) in out.texts.iter().enumerate() {
+        for tok in tokenize(text, &state.tok_cfg) {
+            if let Some(id) = vocab.id(&tok) {
+                out.builder.push_token(id);
+            }
+        }
+        if out.builder.cur_doc_len() == 0 {
+            out.builder.clear();
+            return Err(bad_request(format!(
+                "text {i} has no in-vocabulary tokens after tokenization"
+            )));
+        }
+        out.builder.end_doc().map_err(|e| bad_request(format!("{e:#}")))?;
+    }
+    Ok(entry.version)
+}
+
 fn handle_predict_text(
     state: &State,
     req: &RequestScratch,
@@ -522,31 +769,9 @@ fn handle_predict_text(
     // them, so each attempt re-encodes against the *current* entry and
     // requires the batch to run under exactly that version.
     for _ in 0..SWAP_RACE_RETRIES {
-        let entry = state.registry.current();
-        let vocab = entry.vocab.as_ref().ok_or_else(|| bad_request(
-            "model was saved without a vocabulary; re-train with `cfslda train` \
-             on a raw-text corpus (or pass --vocab) to enable /predict/text",
-        ))?;
-        // Encode straight into the connection's arena builder — no
-        // per-document `Vec<Vec<u32>>` staging; out-of-vocabulary tokens
-        // drop exactly as `Vocab::encode` drops them.
-        out.builder.clear();
-        for (i, text) in out.texts.iter().enumerate() {
-            for tok in tokenize(text, &state.tok_cfg) {
-                if let Some(id) = vocab.id(&tok) {
-                    out.builder.push_token(id);
-                }
-            }
-            if out.builder.cur_doc_len() == 0 {
-                out.builder.clear();
-                return Err(bad_request(format!(
-                    "text {i} has no in-vocabulary tokens after tokenization"
-                )));
-            }
-            out.builder.end_doc().map_err(|e| bad_request(format!("{e:#}")))?;
-        }
+        let version = encode_texts_against_current(state, out)?;
         let arena = Arc::new(out.builder.finish());
-        let done = submit_uniform(state, &arena, seed, Some(entry.version), out)?;
+        let done = submit_uniform(state, &arena, seed, Some(version), out)?;
         if let Ok(a) = Arc::try_unwrap(arena) {
             out.builder.reclaim(a);
         }
@@ -599,12 +824,13 @@ pub fn run_blocking(opts: RunOptions) -> anyhow::Result<()> {
     let server = Server::start(&opts.model_path, &opts.cfg)?;
     let entry = server.state.registry.current();
     println!(
-        "serving on http://{} (model v{} T={} W={} vocab_terms={} workers={} max_batch={} max_wait_us={})",
+        "serving on http://{} (model v{} T={} W={} vocab_terms={} backend={} workers={} max_batch={} max_wait_us={})",
         server.local_addr(),
         entry.version,
         entry.model.t,
         entry.model.w,
         entry.vocab.is_some(),
+        opts.cfg.serve.backend.name(),
         server.state.workers,
         opts.cfg.serve.max_batch,
         opts.cfg.serve.max_wait_us,

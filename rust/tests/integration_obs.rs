@@ -227,6 +227,55 @@ fn metrics_endpoint_uses_prometheus_content_type() {
     std::fs::remove_file(path).ok();
 }
 
+/// Connection-level telemetry on the epoll backend: an open keep-alive
+/// connection shows in the gauge, accepts/sheds count, and the event-loop
+/// iteration histogram observes real batches. Scraped over the event loop
+/// itself.
+#[test]
+fn epoll_scrape_reports_connection_and_event_loop_series() {
+    let path = trained_model("epollobs.bin", 14);
+    let mut cfg = quick_cfg();
+    cfg.serve.backend = cfslda::config::schema::ServeBackend::Epoll;
+    cfg.serve.max_conns = 2;
+    let server = Server::start(&path, &cfg).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let (s, b) = client.request("POST", "/predict", r#"{"docs": [[0, 1, 2]], "seed": 4}"#).unwrap();
+    assert_eq!(s, 200, "{b}");
+    // a second connection fills the admission limit; a third is shed
+    let mut c2 = Client::connect(&addr).unwrap();
+    assert_eq!(c2.request("GET", "/healthz", "").unwrap().0, 200);
+    {
+        let mut shed = std::net::TcpStream::connect(&addr).unwrap();
+        shed.set_read_timeout(Some(std::time::Duration::from_secs(20))).unwrap();
+        let mut raw = Vec::new();
+        shed.read_to_end(&mut raw).unwrap();
+        assert!(raw.starts_with(b"HTTP/1.1 503"), "{}", String::from_utf8_lossy(&raw));
+    }
+
+    let (s, scrape) = client.request("GET", "/metrics", "").unwrap();
+    assert_eq!(s, 200);
+    assert_valid_exposition(&scrape);
+    // this client + c2 are open right now; the shed one never registered
+    assert_eq!(sample(&scrape, "cfslda_open_connections"), 2.0);
+    assert!(sample(&scrape, "cfslda_accepted_total") >= 3.0);
+    assert_eq!(sample(&scrape, "cfslda_shed_total"), 1.0);
+    // the reactor observed at least the batches carrying this traffic
+    assert!(sample(&scrape, "cfslda_event_loop_iteration_seconds_count") >= 3.0);
+    assert!(sample(&scrape, "cfslda_event_loop_iteration_seconds_sum") >= 0.0);
+    assert_histogram_shape(&scrape, "cfslda_event_loop_iteration_seconds", "");
+    // request-path series move exactly as on the threads backend
+    assert!(sample(&scrape, "cfslda_http_requests_total") >= 3.0);
+    assert!(
+        sample(&scrape, "cfslda_request_duration_seconds_count{endpoint=\"predict\"}") >= 1.0
+    );
+
+    drop(c2);
+    server.stop();
+    std::fs::remove_file(path).ok();
+}
+
 #[test]
 fn latency_histograms_can_be_disabled() {
     let path = trained_model("nolat.bin", 13);

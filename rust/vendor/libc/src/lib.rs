@@ -1,12 +1,20 @@
-//! Minimal offline subset of `libc`: just the thread-CPU-clock surface
-//! `cfslda::util::timer` needs (`clock_gettime` + `CLOCK_THREAD_CPUTIME_ID`).
-//! Linux x86_64/aarch64 ABI.
+//! Minimal offline subset of `libc`: the thread-CPU-clock surface
+//! `cfslda::util::timer` needs (`clock_gettime` + `CLOCK_THREAD_CPUTIME_ID`)
+//! plus the readiness-loop surface `cfslda::serve::reactor` needs
+//! (`epoll_*`, `fcntl` O_NONBLOCK, `accept4`, `eventfd`, raw fd
+//! `read`/`write`/`close`). Linux x86_64/aarch64 ABI.
 
 #![allow(non_camel_case_types)]
 
 pub type c_int = i32;
+pub type c_uint = u32;
 pub type c_long = i64;
 pub type time_t = i64;
+pub type size_t = usize;
+pub type ssize_t = isize;
+pub type socklen_t = u32;
+
+pub use std::ffi::c_void;
 
 /// POSIX per-thread CPU-time clock id (Linux).
 pub const CLOCK_THREAD_CPUTIME_ID: c_int = 3;
@@ -18,8 +26,81 @@ pub struct timespec {
     pub tv_nsec: c_long,
 }
 
+// ---------------------------------------------------------------------------
+// epoll (Linux). The event struct is packed on x86_64 only — the kernel ABI
+// has no padding between the u32 mask and the u64 payload there, while
+// aarch64 uses the natural (aligned) layout.
+
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy, Debug)]
+pub struct epoll_event {
+    pub events: u32,
+    pub u64: u64,
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct epoll_event {
+    pub events: u32,
+    pub u64: u64,
+}
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+pub const EPOLL_CTL_ADD: c_int = 1;
+pub const EPOLL_CTL_DEL: c_int = 2;
+pub const EPOLL_CTL_MOD: c_int = 3;
+
+pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+// fcntl — only the non-blocking toggle is needed.
+pub const F_GETFL: c_int = 3;
+pub const F_SETFL: c_int = 4;
+pub const O_NONBLOCK: c_int = 0o4000;
+
+// accept4 flags (Linux: same values as O_NONBLOCK / O_CLOEXEC).
+pub const SOCK_NONBLOCK: c_int = 0o4000;
+pub const SOCK_CLOEXEC: c_int = 0o2000000;
+
+// eventfd flags.
+pub const EFD_NONBLOCK: c_int = 0o4000;
+pub const EFD_CLOEXEC: c_int = 0o2000000;
+
+/// Opaque-enough socket address for `accept4` when the peer address is
+/// discarded (we always pass null pointers, but the signature needs it).
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct sockaddr {
+    pub sa_family: u16,
+    pub sa_data: [u8; 14],
+}
+
 extern "C" {
     pub fn clock_gettime(clk_id: c_int, tp: *mut timespec) -> c_int;
+
+    pub fn epoll_create1(flags: c_int) -> c_int;
+    pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut epoll_event) -> c_int;
+    pub fn epoll_wait(epfd: c_int, events: *mut epoll_event, maxevents: c_int, timeout: c_int)
+        -> c_int;
+
+    pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+    pub fn accept4(
+        sockfd: c_int,
+        addr: *mut sockaddr,
+        addrlen: *mut socklen_t,
+        flags: c_int,
+    ) -> c_int;
+    pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+
+    pub fn read(fd: c_int, buf: *mut c_void, count: size_t) -> ssize_t;
+    pub fn write(fd: c_int, buf: *const c_void, count: size_t) -> ssize_t;
+    pub fn close(fd: c_int) -> c_int;
 }
 
 #[cfg(test)]
@@ -32,5 +113,59 @@ mod tests {
         let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
         assert_eq!(rc, 0);
         assert!(ts.tv_sec >= 0 && ts.tv_nsec >= 0);
+    }
+
+    #[test]
+    fn epoll_and_eventfd_round_trip() {
+        unsafe {
+            let ep = epoll_create1(EPOLL_CLOEXEC);
+            assert!(ep >= 0);
+            let ev = eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC);
+            assert!(ev >= 0);
+
+            let mut reg = epoll_event {
+                events: EPOLLIN,
+                u64: 42,
+            };
+            assert_eq!(epoll_ctl(ep, EPOLL_CTL_ADD, ev, &mut reg), 0);
+
+            // Nothing pending yet: zero-timeout wait returns no events.
+            let mut out = [epoll_event { events: 0, u64: 0 }; 4];
+            assert_eq!(epoll_wait(ep, out.as_mut_ptr(), 4, 0), 0);
+
+            // Signal the eventfd; the wait must report it with our cookie.
+            let one: u64 = 1;
+            let n = write(ev, &one as *const u64 as *const c_void, 8);
+            assert_eq!(n, 8);
+            let got = epoll_wait(ep, out.as_mut_ptr(), 4, 0);
+            assert_eq!(got, 1);
+            assert_eq!({ out[0].u64 }, 42);
+            assert_ne!({ out[0].events } & EPOLLIN, 0);
+
+            // Drain resets readiness.
+            let mut v: u64 = 0;
+            let n = read(ev, &mut v as *mut u64 as *mut c_void, 8);
+            assert_eq!(n, 8);
+            assert_eq!(v, 1);
+            assert_eq!(epoll_wait(ep, out.as_mut_ptr(), 4, 0), 0);
+
+            assert_eq!(epoll_ctl(ep, EPOLL_CTL_DEL, ev, std::ptr::null_mut()), 0);
+            assert_eq!(close(ev), 0);
+            assert_eq!(close(ep), 0);
+        }
+    }
+
+    #[test]
+    fn fcntl_toggles_nonblock() {
+        unsafe {
+            let ev = eventfd(0, 0);
+            assert!(ev >= 0);
+            let fl = fcntl(ev, F_GETFL);
+            assert!(fl >= 0);
+            assert_eq!(fl & O_NONBLOCK, 0);
+            assert_eq!(fcntl(ev, F_SETFL, fl | O_NONBLOCK), 0);
+            assert_ne!(fcntl(ev, F_GETFL) & O_NONBLOCK, 0);
+            assert_eq!(close(ev), 0);
+        }
     }
 }
