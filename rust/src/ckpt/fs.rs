@@ -1,0 +1,109 @@
+//! Filesystem seam for the checkpoint store.
+//!
+//! Everything the store touches on disk goes through [`CkptFs`], so the
+//! fault-injection harness (`crate::testkit::failfs::FailpointFs`) can
+//! interpose torn writes, failed fsyncs, and crashed renames at exact
+//! operation indices while [`StdFs`] serves production unchanged. The trait
+//! is deliberately tiny — just the operations the atomic-write protocol
+//! (DESIGN.md §Durability) needs — and returns `io::Result` so failure
+//! injection composes with real OS errors.
+
+use std::io;
+use std::path::Path;
+
+/// Filesystem operations used by [`crate::ckpt::Store`].
+pub trait CkptFs: Sync {
+    /// `mkdir -p`.
+    fn create_dir_all(&self, p: &Path) -> io::Result<()>;
+    /// Create/truncate `p` and write `bytes` in full (no durability implied;
+    /// pair with [`CkptFs::fsync`]).
+    fn write(&self, p: &Path, bytes: &[u8]) -> io::Result<()>;
+    /// Flush file (or directory) contents + metadata to stable storage.
+    fn fsync(&self, p: &Path) -> io::Result<()>;
+    /// Atomically replace `to` with `from` (POSIX `rename`).
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    /// Read the whole file.
+    fn read(&self, p: &Path) -> io::Result<Vec<u8>>;
+    /// File names (not paths) of the direct children of `p`.
+    fn list_dir(&self, p: &Path) -> io::Result<Vec<String>>;
+    /// `rm -rf` (used by generation retention).
+    fn remove_dir_all(&self, p: &Path) -> io::Result<()>;
+    /// Does the path exist?
+    fn exists(&self, p: &Path) -> bool;
+}
+
+/// Production [`CkptFs`]: thin passthrough to `std::fs`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StdFs;
+
+impl CkptFs for StdFs {
+    fn create_dir_all(&self, p: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(p)
+    }
+
+    fn write(&self, p: &Path, bytes: &[u8]) -> io::Result<()> {
+        std::fs::write(p, bytes)
+    }
+
+    fn fsync(&self, p: &Path) -> io::Result<()> {
+        // Opening read-only works for both regular files and directories
+        // (directory fsync is how the rename itself is made durable).
+        std::fs::File::open(p)?.sync_all()
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn read(&self, p: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(p)
+    }
+
+    fn list_dir(&self, p: &Path) -> io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(p)? {
+            names.push(entry?.file_name().to_string_lossy().into_owned());
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    fn remove_dir_all(&self, p: &Path) -> io::Result<()> {
+        std::fs::remove_dir_all(p)
+    }
+
+    fn exists(&self, p: &Path) -> bool {
+        p.exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_ckptfs_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn stdfs_roundtrip_and_listing() {
+        let dir = tmp("rt");
+        let fs = StdFs;
+        std::fs::remove_dir_all(&dir).ok();
+        fs.create_dir_all(&dir).unwrap();
+        let a = dir.join("a.bin");
+        let b = dir.join("b.bin");
+        fs.write(&a, b"hello").unwrap();
+        fs.fsync(&a).unwrap();
+        fs.rename(&a, &b).unwrap();
+        fs.fsync(&dir).unwrap();
+        assert!(!fs.exists(&a));
+        assert!(fs.exists(&b));
+        assert_eq!(fs.read(&b).unwrap(), b"hello");
+        assert_eq!(fs.list_dir(&dir).unwrap(), vec!["b.bin".to_string()]);
+        fs.remove_dir_all(&dir).unwrap();
+        assert!(!fs.exists(&dir));
+    }
+}

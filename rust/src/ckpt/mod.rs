@@ -1,0 +1,28 @@
+//! Crash-safe training durability (DESIGN.md §Durability).
+//!
+//! The paper's communication-free design makes the shard chain the natural
+//! unit of checkpointing: each worker snapshots its own chain with zero
+//! coordination beyond a last-writer-commits manifest. This module provides
+//! the pieces:
+//!
+//! * [`format`] — the `CFSCKPT1` shard snapshot and `CFSMANI1` manifest
+//!   codecs plus [`config_fingerprint`], all checksummed and hardened
+//!   against truncated/bit-flipped/hostile inputs.
+//! * [`fs`] — the [`CkptFs`] seam ([`StdFs`] in production, the testkit's
+//!   `FailpointFs` under fault injection).
+//! * [`store`] — atomic generation commits, retention, and newest-valid
+//!   recovery ([`Store`], [`GenCoordinator`]).
+//!
+//! The contract the rest of the system builds on: a run checkpointed at
+//! sweep k, killed, and resumed with `--resume` is **byte-identical** to
+//! the same run left uninterrupted (see `sampler::gibbs_train` for the
+//! kernel-epoch reset that makes the RNG/count state at a boundary a pure
+//! function of the snapshot).
+
+pub mod format;
+pub mod fs;
+pub mod store;
+
+pub use format::{config_fingerprint, Manifest, ManifestShard, ShardState};
+pub use fs::{CkptFs, StdFs};
+pub use store::{GenCoordinator, Resume, Store, RETAIN_GENERATIONS};

@@ -1,0 +1,564 @@
+//! Generation-oriented checkpoint store with atomic commits.
+//!
+//! Disk layout under the checkpoint directory:
+//!
+//! ```text
+//! DIR/gen-<N>/shard-<i>.ckpt   one CFSCKPT1 snapshot per shard chain
+//! DIR/gen-<N>/MANIFEST         CFSMANI1 commit record, written last
+//! ```
+//!
+//! `<N>` is the snapshot's `next_sweep` — strictly increasing across a run,
+//! so lexicographic-by-number ordering is recovery order. Every file lands
+//! via write-temp → fsync → rename → fsync(dir); the manifest rename is the
+//! generation's commit point, and an older committed generation is only
+//! deleted (retention keeps the newest two) after a newer manifest has
+//! landed. A crash at any instant therefore leaves either (a) the previous
+//! committed generation intact plus ignorable debris, or (b) the new
+//! generation committed — never a half-trusted state (DESIGN.md
+//! §Durability; the crash windows are enumerated in the `FailpointFs`
+//! tests).
+//!
+//! Recovery ([`Store::load_latest`]) scans generations newest-first. A
+//! generation that fails *integrity* (missing manifest, checksum mismatch,
+//! shard file absent or not matching its manifest entry) is logged and
+//! skipped — that is exactly the debris a crash is allowed to leave. A
+//! generation that is internally valid but carries the wrong config
+//! fingerprint is a hard error: resuming a different chain must never be
+//! silent.
+
+use super::format::{Manifest, ManifestShard, ShardState};
+use super::fs::CkptFs;
+use crate::model::persist::fnv1a;
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Committed generations kept on disk (newest two: the freshly committed
+/// one and its predecessor, so a torn newest still has a fallback).
+pub const RETAIN_GENERATIONS: usize = 2;
+
+/// A fully restored generation, ready to seed resumed chains.
+#[derive(Debug)]
+pub struct Resume {
+    pub generation: u64,
+    pub next_sweep: u64,
+    /// One state per shard, sorted by `shard_id`.
+    pub states: Vec<ShardState>,
+}
+
+pub struct Store<'f> {
+    fs: &'f dyn CkptFs,
+    dir: PathBuf,
+}
+
+impl<'f> Store<'f> {
+    pub fn new(fs: &'f dyn CkptFs, dir: impl Into<PathBuf>) -> Store<'f> {
+        Store { fs, dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn gen_dir(&self, generation: u64) -> PathBuf {
+        self.dir.join(format!("gen-{generation}"))
+    }
+
+    /// Write one shard's snapshot into `gen-<generation>` atomically.
+    /// Returns the manifest entry binding the file. No generation is
+    /// trusted until [`Store::commit_manifest`] lands.
+    pub fn write_shard(
+        &self,
+        generation: u64,
+        state: &ShardState,
+    ) -> anyhow::Result<ManifestShard> {
+        let gdir = self.gen_dir(generation);
+        self.fs
+            .create_dir_all(&gdir)
+            .with_context(|| format!("creating checkpoint dir {gdir:?}"))?;
+        let bytes = state.encode();
+        let name = format!("shard-{}.ckpt", state.shard_id);
+        let tmp = gdir.join(format!("{name}.tmp"));
+        let fin = gdir.join(&name);
+        self.fs.write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        self.fs.fsync(&tmp).with_context(|| format!("fsync {tmp:?}"))?;
+        self.fs.rename(&tmp, &fin).with_context(|| format!("renaming {tmp:?} -> {fin:?}"))?;
+        self.fs.fsync(&gdir).with_context(|| format!("fsync dir {gdir:?}"))?;
+        crate::obs::registry().training.ckpt_writes.inc();
+        Ok(ManifestShard {
+            shard_id: state.shard_id,
+            bytes: bytes.len() as u64,
+            file_fnv: fnv1a(&bytes),
+        })
+    }
+
+    /// Commit a generation: land its manifest atomically, update telemetry,
+    /// and prune generations older than [`RETAIN_GENERATIONS`].
+    pub fn commit_manifest(
+        &self,
+        generation: u64,
+        manifest: &Manifest,
+        write_us: u64,
+    ) -> anyhow::Result<()> {
+        let gdir = self.gen_dir(generation);
+        let bytes = manifest.encode();
+        let tmp = gdir.join("MANIFEST.tmp");
+        let fin = gdir.join("MANIFEST");
+        self.fs.write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        self.fs.fsync(&tmp).with_context(|| format!("fsync {tmp:?}"))?;
+        self.fs.rename(&tmp, &fin).with_context(|| format!("renaming {tmp:?} -> {fin:?}"))?;
+        self.fs.fsync(&gdir).with_context(|| format!("fsync dir {gdir:?}"))?;
+        // Make the gen-<N> directory entry itself durable.
+        self.fs.fsync(&self.dir).with_context(|| format!("fsync dir {:?}", self.dir))?;
+
+        let tr = &crate::obs::registry().training;
+        tr.ckpt_generations.inc();
+        tr.ckpt_last_sweep.set(manifest.next_sweep);
+        tr.ckpt_last_bytes
+            .set(manifest.shards.iter().map(|s| s.bytes).sum::<u64>() + bytes.len() as u64);
+        tr.ckpt_last_write_us.set(write_us);
+        if let Ok(now) = std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+            tr.ckpt_last_unix_secs.set(now.as_secs());
+        }
+
+        // Retention: only after the new commit point exists. Failure to
+        // prune is not a checkpoint failure — just disk debris.
+        if let Err(e) = self.retain(RETAIN_GENERATIONS) {
+            log::warn!("checkpoint retention in {:?}: {e:#}", self.dir);
+        }
+        Ok(())
+    }
+
+    /// Generation numbers present under the store directory, ascending.
+    /// Non-generation entries are ignored.
+    pub fn list_generations(&self) -> anyhow::Result<Vec<u64>> {
+        if !self.fs.exists(&self.dir) {
+            return Ok(Vec::new());
+        }
+        let names = self
+            .fs
+            .list_dir(&self.dir)
+            .with_context(|| format!("listing checkpoint dir {:?}", self.dir))?;
+        let mut gens: Vec<u64> = names
+            .iter()
+            .filter_map(|n| n.strip_prefix("gen-").and_then(|s| s.parse().ok()))
+            .collect();
+        gens.sort_unstable();
+        gens.dedup();
+        Ok(gens)
+    }
+
+    /// Is there at least one generation with a landed commit record? A
+    /// cheap existence probe (no integrity verification): pre-commit crash
+    /// debris — generation directories without a `MANIFEST` — does not
+    /// count.
+    pub fn has_committed_generation(&self) -> anyhow::Result<bool> {
+        Ok(self
+            .list_generations()?
+            .iter()
+            .any(|&g| self.fs.exists(&self.gen_dir(g).join("MANIFEST"))))
+    }
+
+    /// Delete all but the newest `keep` generations.
+    pub fn retain(&self, keep: usize) -> anyhow::Result<()> {
+        let gens = self.list_generations()?;
+        for &g in gens.iter().rev().skip(keep) {
+            let gdir = self.gen_dir(g);
+            self.fs.remove_dir_all(&gdir).with_context(|| format!("removing {gdir:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Load one generation in full, verifying the manifest, every shard
+    /// file's size and checksum against its manifest entry, and internal
+    /// consistency. Does not check the fingerprint (the caller decides how
+    /// a mismatch is handled).
+    fn load_generation(&self, generation: u64) -> anyhow::Result<(Manifest, Vec<ShardState>)> {
+        let gdir = self.gen_dir(generation);
+        let mpath = gdir.join("MANIFEST");
+        let mbytes = self.fs.read(&mpath).with_context(|| format!("reading {mpath:?}"))?;
+        let manifest = Manifest::decode(&mbytes).with_context(|| format!("in {mpath:?}"))?;
+        if manifest.next_sweep != generation {
+            bail!(
+                "manifest in {gdir:?} records next_sweep {} (want {generation})",
+                manifest.next_sweep
+            );
+        }
+        let mut states = Vec::with_capacity(manifest.shards.len());
+        for entry in &manifest.shards {
+            let spath = gdir.join(format!("shard-{}.ckpt", entry.shard_id));
+            let sbytes = self.fs.read(&spath).with_context(|| format!("reading {spath:?}"))?;
+            if sbytes.len() as u64 != entry.bytes || fnv1a(&sbytes) != entry.file_fnv {
+                bail!(
+                    "{spath:?} does not match its manifest entry \
+                     ({} bytes on disk, {} expected)",
+                    sbytes.len(),
+                    entry.bytes
+                );
+            }
+            let state = ShardState::decode(&sbytes).with_context(|| format!("in {spath:?}"))?;
+            if state.shard_id != entry.shard_id || state.next_sweep != generation {
+                bail!(
+                    "{spath:?} identifies as shard {} at sweep {} \
+                     (manifest says shard {} at sweep {generation})",
+                    state.shard_id,
+                    state.next_sweep,
+                    entry.shard_id
+                );
+            }
+            states.push(state);
+        }
+        Ok((manifest, states))
+    }
+
+    /// Restore the newest *valid* generation. Integrity failures fall back
+    /// to older generations with a warning; a valid generation whose
+    /// fingerprint differs from `expect_fingerprint` is a hard error; no
+    /// valid generation at all is a hard error.
+    pub fn load_latest(&self, expect_fingerprint: u64) -> anyhow::Result<Resume> {
+        let gens = self.list_generations()?;
+        if gens.is_empty() {
+            bail!("no checkpoint generations found in {:?}", self.dir);
+        }
+        let mut last_err = None;
+        for &g in gens.iter().rev() {
+            match self.load_generation(g) {
+                Ok((manifest, states)) => {
+                    if manifest.fingerprint != expect_fingerprint {
+                        bail!(
+                            "checkpoint generation {g} in {:?} was written by a different \
+                             run configuration (fingerprint {:#018x}, live config is \
+                             {expect_fingerprint:#018x}); refusing to resume a different \
+                             chain — pass the original config/seed/corpus or choose a \
+                             fresh checkpoint directory",
+                            self.dir,
+                            manifest.fingerprint
+                        );
+                    }
+                    crate::obs::registry()
+                        .training
+                        .ckpt_restores
+                        .add(states.len() as u64);
+                    return Ok(Resume { generation: g, next_sweep: manifest.next_sweep, states });
+                }
+                Err(e) => {
+                    log::warn!(
+                        "checkpoint generation {g} in {:?} is unusable (likely an \
+                         interrupted write): {e:#}; trying an older generation",
+                        self.dir
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap()).with_context(|| {
+            format!("no valid checkpoint generation in {:?} (all candidates corrupt)", self.dir)
+        })
+    }
+}
+
+/// Cross-thread completion tracker for one run's generations: each worker
+/// reports its shard write, and the last one to land a given generation
+/// gets the assembled manifest back to commit. Workers drift through
+/// boundaries at their own pace, so multiple generations can be pending.
+pub struct GenCoordinator {
+    shards: usize,
+    fingerprint: u64,
+    inner: Mutex<HashMap<u64, Pending>>,
+}
+
+struct Pending {
+    entries: Vec<ManifestShard>,
+    write_us: u64,
+}
+
+impl GenCoordinator {
+    pub fn new(shards: usize, fingerprint: u64) -> GenCoordinator {
+        GenCoordinator { shards, fingerprint, inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Record one shard's landed snapshot for `generation`. Returns the
+    /// complete manifest (shards sorted) plus the summed per-shard write
+    /// time exactly once — to the caller that completes the set.
+    pub fn shard_done(
+        &self,
+        generation: u64,
+        entry: ManifestShard,
+        write_us: u64,
+    ) -> Option<(Manifest, u64)> {
+        let mut map = self.inner.lock().unwrap();
+        let pending = map
+            .entry(generation)
+            .or_insert_with(|| Pending { entries: Vec::new(), write_us: 0 });
+        pending.entries.push(entry);
+        pending.write_us += write_us;
+        if pending.entries.len() < self.shards {
+            return None;
+        }
+        let mut done = map.remove(&generation).unwrap();
+        done.entries.sort_by_key(|e| e.shard_id);
+        Some((
+            Manifest {
+                fingerprint: self.fingerprint,
+                next_sweep: generation,
+                shards: done.entries,
+            },
+            done.write_us,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::format::config_fingerprint;
+    use crate::ckpt::fs::StdFs;
+    use crate::config::schema::ExperimentConfig;
+    use crate::util::rng::Pcg64;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_store_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        p
+    }
+
+    fn state(shard_id: u32, next_sweep: u64, seed: u64) -> ShardState {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let (t, w, d) = (3usize, 5usize, 2usize);
+        ShardState {
+            shard_id,
+            next_sweep,
+            t: t as u32,
+            w: w as u32,
+            d: d as u32,
+            rho: 1.0,
+            eta_active: false,
+            tokens_sampled: 10,
+            resp_proposed: 0,
+            resp_accepted: 0,
+            alias_rebuilds: 0,
+            rng_state: rng.next_u64() as u128,
+            rng_inc: (rng.next_u64() as u128) | 1,
+            eta: vec![0.0; t],
+            z: (0..8).map(|_| rng.gen_range(t) as u16).collect(),
+            ndt: vec![1; d * t],
+            nd: vec![3; d],
+            ntw: vec![1; w * t],
+            nt: vec![2; t],
+            history: vec![],
+        }
+    }
+
+    fn commit_gen(store: &Store, fp: u64, sweep: u64, shards: u32) {
+        let coord = GenCoordinator::new(shards as usize, fp);
+        for i in 0..shards {
+            let entry = store.write_shard(sweep, &state(i, sweep, sweep * 10 + i as u64)).unwrap();
+            if let Some((m, us)) = coord.shard_done(sweep, entry, 5) {
+                assert_eq!(us, 5 * shards as u64);
+                store.commit_manifest(sweep, &m, us).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn write_commit_load_roundtrip() {
+        let dir = tmpdir("rt");
+        let fs = StdFs;
+        let store = Store::new(&fs, &dir);
+        let fp = config_fingerprint(&ExperimentConfig::quick(), 2, 8, 5, "non-parallel", 2);
+        commit_gen(&store, fp, 10, 2);
+        let r = store.load_latest(fp).unwrap();
+        assert_eq!(r.generation, 10);
+        assert_eq!(r.next_sweep, 10);
+        assert_eq!(r.states.len(), 2);
+        assert_eq!(r.states[0], state(0, 10, 100));
+        assert_eq!(r.states[1], state(1, 10, 101));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_keeps_newest_two() {
+        let dir = tmpdir("retain");
+        let fs = StdFs;
+        let store = Store::new(&fs, &dir);
+        for sweep in [10u64, 20, 30] {
+            commit_gen(&store, 7, sweep, 1);
+        }
+        assert_eq!(store.list_generations().unwrap(), vec![20, 30]);
+        let r = store.load_latest(7).unwrap();
+        assert_eq!(r.generation, 30);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn uncommitted_generation_falls_back_to_previous() {
+        let dir = tmpdir("fallback");
+        let fs = StdFs;
+        let store = Store::new(&fs, &dir);
+        commit_gen(&store, 7, 10, 2);
+        // newer generation with shards but no manifest: the pre-commit
+        // crash window
+        store.write_shard(20, &state(0, 20, 1)).unwrap();
+        store.write_shard(20, &state(1, 20, 2)).unwrap();
+        let r = store.load_latest(7).unwrap();
+        assert_eq!(r.generation, 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_missing_shard_and_bitflip() {
+        let dir = tmpdir("corrupt");
+        let fs = StdFs;
+        let store = Store::new(&fs, &dir);
+        commit_gen(&store, 7, 10, 2);
+        commit_gen(&store, 7, 20, 2);
+        // bit-flip one shard of the newest committed generation
+        let victim = dir.join("gen-20").join("shard-1.ckpt");
+        let mut b = std::fs::read(&victim).unwrap();
+        let mid = b.len() / 2;
+        b[mid] ^= 0x40;
+        std::fs::write(&victim, &b).unwrap();
+        let r = store.load_latest(7).unwrap();
+        assert_eq!(r.generation, 10, "bit-flipped gen must be skipped");
+        // now remove a shard file entirely
+        std::fs::remove_file(&victim).unwrap();
+        let r = store.load_latest(7).unwrap();
+        assert_eq!(r.generation, 10, "missing-shard gen must be skipped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_a_hard_error() {
+        let dir = tmpdir("fp");
+        let fs = StdFs;
+        let store = Store::new(&fs, &dir);
+        commit_gen(&store, 7, 10, 1);
+        let err = store.load_latest(8).unwrap_err().to_string();
+        assert!(err.contains("different"), "{err}");
+        assert!(err.contains("fingerprint"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_or_all_corrupt_dir_is_an_error_not_a_panic() {
+        let dir = tmpdir("empty");
+        let fs = StdFs;
+        let store = Store::new(&fs, &dir);
+        let err = store.load_latest(7).unwrap_err().to_string();
+        assert!(err.contains("no checkpoint generations"), "{err}");
+        // a generation dir with garbage manifest only
+        std::fs::create_dir_all(dir.join("gen-5")).unwrap();
+        std::fs::write(dir.join("gen-5").join("MANIFEST"), b"garbage").unwrap();
+        let err = store.load_latest(7).unwrap_err().to_string();
+        assert!(err.contains("no valid checkpoint generation"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn committed_generation_probe_ignores_debris() {
+        let dir = tmpdir("probe");
+        let fs = StdFs;
+        let store = Store::new(&fs, &dir);
+        assert!(!store.has_committed_generation().unwrap());
+        // pre-commit debris: a shard file but no manifest
+        store.write_shard(5, &state(0, 5, 1)).unwrap();
+        assert!(!store.has_committed_generation().unwrap());
+        commit_gen(&store, 7, 10, 1);
+        assert!(store.has_committed_generation().unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The crash-window enumeration (DESIGN.md §Durability): a hard kill at
+    /// *every* mutating operation of a generation's write sequence must
+    /// leave recovery on a committed, fully-valid generation — the previous
+    /// one before the manifest rename lands, the new one after.
+    #[test]
+    fn kill_at_every_crash_window_recovers_to_a_committed_generation() {
+        use crate::testkit::failfs::{FailKind, FailpointFs};
+        // One 1-shard generation = 9 counted ops: write_shard is
+        // {write tmp, fsync tmp, rename, fsync gen-dir}, commit_manifest is
+        // {write tmp, fsync tmp, rename, fsync gen-dir, fsync store-dir}.
+        // Each slot's FailKind matches the op type at that index.
+        let kinds = [
+            FailKind::TornWrite { keep: 3 }, // shard tmp write
+            FailKind::ErrFsync,              // shard tmp fsync
+            FailKind::ErrRename,             // shard rename
+            FailKind::ErrFsync,              // gen-dir fsync
+            FailKind::TornWrite { keep: 3 }, // manifest tmp write
+            FailKind::ErrFsync,              // manifest tmp fsync
+            FailKind::ErrRename,             // manifest rename = commit point
+            FailKind::ErrFsync,              // gen-dir fsync
+            FailKind::ErrFsync,              // store-dir fsync
+        ];
+        const COMMIT_RENAME: usize = 6;
+        let fp = 99;
+        for (kill_at, kind) in kinds.iter().enumerate() {
+            let dir = tmpdir(&format!("kill{kill_at}"));
+            let fs = FailpointFs::new();
+            let store = Store::new(&fs, &dir);
+            // Generation 5 lands cleanly, then the process dies somewhere
+            // in generation 10's write sequence.
+            commit_gen(&store, fp, 5, 1);
+            fs.arm(fs.ops() + kill_at as u64, *kind, true);
+            let attempt = (|| -> anyhow::Result<()> {
+                let coord = GenCoordinator::new(1, fp);
+                let entry = store.write_shard(10, &state(0, 10, 77))?;
+                if let Some((m, us)) = coord.shard_done(10, entry, 5) {
+                    store.commit_manifest(10, &m, us)?;
+                }
+                Ok(())
+            })();
+            assert!(attempt.is_err(), "armed op {kill_at} must surface an Err");
+            assert!(fs.is_dead());
+            // Recovery runs in the "next process": reads still work.
+            let r = store
+                .load_latest(fp)
+                .unwrap_or_else(|e| panic!("kill at op {kill_at}: {e:#}"));
+            if kill_at > COMMIT_RENAME {
+                assert_eq!(r.generation, 10, "op {kill_at}: manifest already renamed");
+                assert_eq!(r.states[0], state(0, 10, 77));
+            } else {
+                assert_eq!(r.generation, 5, "op {kill_at}: must fall back to gen 5");
+                assert_eq!(r.states[0], state(0, 5, 50));
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn kill_between_shards_leaves_previous_generation_authoritative() {
+        use crate::testkit::failfs::{FailKind, FailpointFs};
+        let dir = tmpdir("killshard");
+        let fs = FailpointFs::new();
+        let store = Store::new(&fs, &dir);
+        let fp = 7;
+        commit_gen(&store, fp, 5, 2);
+        // Shard 0 of gen 10 lands (4 ops), then the process dies on shard
+        // 1's very first write — no manifest ever commits.
+        fs.arm(fs.ops() + 4, FailKind::TornWrite { keep: 0 }, true);
+        store.write_shard(10, &state(0, 10, 1)).unwrap();
+        assert!(store.write_shard(10, &state(1, 10, 2)).is_err());
+        let r = store.load_latest(fp).unwrap();
+        assert_eq!(r.generation, 5);
+        assert_eq!(r.states.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn coordinator_completes_each_generation_once() {
+        let coord = GenCoordinator::new(3, 42);
+        let e = |id| ManifestShard { shard_id: id, bytes: 10, file_fnv: 1 };
+        assert!(coord.shard_done(30, e(2), 1).is_none());
+        assert!(coord.shard_done(30, e(0), 2).is_none());
+        // a second generation can be pending concurrently
+        assert!(coord.shard_done(60, e(1), 9).is_none());
+        let (m, us) = coord.shard_done(30, e(1), 3).expect("third shard completes gen 30");
+        assert_eq!(us, 6);
+        assert_eq!(m.fingerprint, 42);
+        assert_eq!(m.next_sweep, 30);
+        let ids: Vec<u32> = m.shards.iter().map(|s| s.shard_id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "entries sorted regardless of completion order");
+    }
+}

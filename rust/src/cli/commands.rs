@@ -1,6 +1,7 @@
 //! CLI subcommands. Each returns the process exit code.
 
 use super::args::Args;
+use crate::ckpt::{config_fingerprint, GenCoordinator, ShardState, StdFs, Store};
 use crate::config::json::{self, Value};
 use crate::config::schema::{
     EngineKind, ExperimentConfig, KernelKind, RespMode, ResponseKind, ServeBackend,
@@ -13,13 +14,16 @@ use crate::data::tokenizer::TokenizerConfig;
 use crate::data::vocab::Vocab;
 use crate::experiments::{fig123, fig5, runner};
 use crate::model::persist::{load_model, load_model_full, save_model_with_vocab};
-use crate::sampler::{gibbs_predict, gibbs_train};
-use crate::parallel::leader::{run_with_engine, Algorithm};
+use crate::parallel::leader::{run_with_engine_ckpt, Algorithm, CkptPlan, RunOutcome};
 use crate::runtime::EngineHandle;
+use crate::sampler::{gibbs_predict, gibbs_train};
 use crate::serve::bench::{run_bench, BenchOptions};
 use crate::serve::server::{run_blocking, RunOptions};
 use crate::util::rng::Pcg64;
+use crate::util::signal;
+use crate::util::timer::Stopwatch;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
 
 pub const HELP: &str = "\
 cfslda — communication-free parallel supervised topic models
@@ -37,11 +41,24 @@ COMMANDS:
               [--train N] [--config CFG.json] [--engine auto|xla|native]
               [--kernel dense|sparse|alias|auto] [--alias-staleness N]
               [--resp-mode exact|mh|auto] [--seed S] [--json OUT.json]
+              [--checkpoint-every N] [--checkpoint-dir D] [--resume D]
   train       Train a single sLDA model and save it
               --data FILE.bow|FILE.jsonl --out MODEL.bin [--config CFG.json]
               [--seed S] [--kernel dense|sparse|alias|auto] [--alias-staleness N]
               [--resp-mode exact|mh|auto] [--vocab TERMS.txt]
               [--min-df F] [--max-df F]
+              [--checkpoint-every N] [--checkpoint-dir D] [--resume D]
+              Crash safety (DESIGN.md §Durability): --checkpoint-every N
+              snapshots the full sampler state (per-shard z, counts, eta,
+              RNG) into --checkpoint-dir D every N sweeps, written
+              atomically (temp + fsync + rename; the two newest
+              generations are retained). SIGINT/SIGTERM exit cleanly at
+              the next boundary after a final snapshot. --resume D
+              restores the newest valid generation and continues: the
+              finished model is byte-identical to the same run left
+              uninterrupted. The cadence is part of the chain — pass the
+              same --checkpoint-every (and config/seed/corpus) when
+              resuming; a mismatch is rejected via a config fingerprint.
               --resp-mode picks the supervised (eta-active) sweep: exact =
               dense O(T)/token Gaussian conditional on every kernel; mh =
               the kernel's own sparse/alias proposals with an O(1)
@@ -101,6 +118,10 @@ COMMANDS:
               --fig 6|7 [--scale F] [--runs N] [--engine E]
               [--kernel dense|sparse|alias|auto] [--resp-mode exact|mh|auto]
               [--heartbeat-secs F] [--check]
+              [--checkpoint-every N] [--checkpoint-dir D] [--resume D]
+              Each (algorithm, run) leg checkpoints independently;
+              --resume continues an interrupted comparison, fast-replaying
+              the legs already finished.
   figs        Reproduce illustration figures: --fig 1|2|3|5
   help        This text
 
@@ -144,6 +165,49 @@ fn apply_kernel_flag(a: &Args, cfg: &mut ExperimentConfig) -> anyhow::Result<()>
     Ok(())
 }
 
+/// Apply the shared crash-safety flags (`--checkpoint-every N`,
+/// `--checkpoint-dir D`, `--resume D`) to a config. Returns whether the run
+/// should restore the newest valid checkpoint. `--resume` implies the
+/// checkpoint directory; the cadence must still match the interrupted run
+/// (it is part of the chain and of the config fingerprint).
+fn apply_ckpt_flags(a: &Args, cfg: &mut ExperimentConfig) -> anyhow::Result<bool> {
+    cfg.train.checkpoint_every = a.get_usize("checkpoint-every", cfg.train.checkpoint_every)?;
+    if let Some(d) = a.get("checkpoint-dir") {
+        cfg.train.checkpoint_dir = d.to_string();
+    }
+    let Some(dir) = a.get("resume") else { return Ok(false) };
+    if let Some(explicit) = a.get("checkpoint-dir") {
+        anyhow::ensure!(
+            explicit == dir,
+            "--resume {dir} conflicts with --checkpoint-dir {explicit}; pass one"
+        );
+    }
+    cfg.train.checkpoint_dir = dir.to_string();
+    anyhow::ensure!(
+        cfg.train.checkpoint_every > 0,
+        "--resume needs the original run's cadence: pass --checkpoint-every N \
+         (or set train.checkpoint_every) to the value the interrupted run used"
+    );
+    Ok(true)
+}
+
+fn ckpt_enabled(cfg: &ExperimentConfig) -> bool {
+    cfg.train.checkpoint_every > 0 && !cfg.train.checkpoint_dir.is_empty()
+}
+
+/// Resolve the stop flag for a checkpoint-enabled run: tests inject their
+/// own [`AtomicBool`]; the real CLI installs the SIGINT/SIGTERM handler and
+/// polls the process-global shutdown flag.
+fn stop_flag<'s>(stop_override: Option<&'s AtomicBool>) -> anyhow::Result<&'s AtomicBool> {
+    match stop_override {
+        Some(flag) => Ok(flag),
+        None => {
+            signal::install_shutdown_handler()?;
+            Ok(signal::shutdown_flag())
+        }
+    }
+}
+
 fn engine_from_args(a: &Args) -> anyhow::Result<EngineHandle> {
     let kind = EngineKind::parse(a.get_or("engine", "auto"))?;
     let dir = std::env::var("CFSLDA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
@@ -179,6 +243,12 @@ pub fn cmd_inspect(a: &Args) -> anyhow::Result<i32> {
 }
 
 pub fn cmd_run(a: &Args) -> anyhow::Result<i32> {
+    cmd_run_with_stop(a, None)
+}
+
+/// [`cmd_run`] with an injectable stop flag, so tests can interrupt runs
+/// deterministically without touching the process-global signal state.
+fn cmd_run_with_stop(a: &Args, stop_override: Option<&AtomicBool>) -> anyhow::Result<i32> {
     let data = a.get("data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
     let algo = Algorithm::parse(a.get_or("algorithm", "simple-average"))?;
     let corpus = loader::load_bow(Path::new(data))?;
@@ -191,11 +261,34 @@ pub fn cmd_run(a: &Args) -> anyhow::Result<i32> {
     }
     apply_kernel_flag(a, &mut cfg)?;
     cfg.seed = a.get_u64("seed", cfg.seed)?;
+    let resume = apply_ckpt_flags(a, &mut cfg)?;
     let n_train = a.get_usize("train", corpus.num_docs() * 3 / 4)?;
     let mut rng = Pcg64::seed_from_u64(cfg.seed ^ 0x5911_7001);
     let ds = train_test_split(&corpus, n_train, &mut rng);
     let engine = engine_from_args(a)?;
-    let (out, _) = run_with_engine(algo, &ds, &cfg, &engine, false)?;
+    let plan = if ckpt_enabled(&cfg) {
+        Some(CkptPlan { resume, stop: Some(stop_flag(stop_override)?) })
+    } else {
+        None
+    };
+    let (out, _) = match run_with_engine_ckpt(algo, &ds, &cfg, &engine, false, plan)? {
+        RunOutcome::Done(both) => *both,
+        RunOutcome::Interrupted { next_sweep } => {
+            println!(
+                "interrupted cleanly at checkpoint boundary (sweep {next_sweep} of {}); \
+                 state saved under {}",
+                cfg.train.sweeps, cfg.train.checkpoint_dir
+            );
+            println!(
+                "resume with: cfslda run --data {data} --algorithm {} \
+                 --checkpoint-every {} --resume {}",
+                algo.name(),
+                cfg.train.checkpoint_every,
+                cfg.train.checkpoint_dir
+            );
+            return Ok(0);
+        }
+    };
     let binary = cfg.response == ResponseKind::Binary;
     println!(
         "{}: wall={:.2}s {} comm[{}]",
@@ -239,13 +332,30 @@ pub fn cmd_experiment(a: &Args) -> anyhow::Result<i32> {
         c.cfg.train.sweeps = s.parse()?;
     }
     apply_kernel_flag(a, &mut c.cfg)?;
+    let resume = apply_ckpt_flags(a, &mut c.cfg)?;
     // Training progress heartbeat (structured JSON info line every F
     // seconds; 0 = off) — see DESIGN.md §Observability.
     c.cfg.obs.heartbeat_secs = a.get_f64("heartbeat-secs", c.cfg.obs.heartbeat_secs)?;
     crate::config::validate::validate(&c.cfg)?;
     let engine = engine_from_args(a)?;
     let binary = fig == 7;
-    let (series, _) = runner::run_comparison(&c, &engine)?;
+    let ckpt = if ckpt_enabled(&c.cfg) {
+        Some(runner::ComparisonCkpt { resume, stop: Some(stop_flag(None)?) })
+    } else {
+        None
+    };
+    let (series, _) = match runner::run_comparison_ckpt(&c, &engine, ckpt)? {
+        runner::ComparisonRun::Done(both) => *both,
+        runner::ComparisonRun::Interrupted { algorithm, run, next_sweep } => {
+            println!(
+                "interrupted cleanly at checkpoint boundary ({} run {run}, sweep {next_sweep}); \
+                 rerun the same command with --resume {} to continue",
+                algorithm.name(),
+                c.cfg.train.checkpoint_dir
+            );
+            return Ok(0);
+        }
+    };
     let title = if binary {
         format!("Fig 7: reviews -> sentiment (docs={} runs={})", c.spec.docs, runs)
     } else {
@@ -340,6 +450,11 @@ fn load_train_corpus(
 }
 
 pub fn cmd_train(a: &Args) -> anyhow::Result<i32> {
+    cmd_train_with_stop(a, None)
+}
+
+/// [`cmd_train`] with an injectable stop flag (see [`cmd_run_with_stop`]).
+fn cmd_train_with_stop(a: &Args, stop_override: Option<&AtomicBool>) -> anyhow::Result<i32> {
     let data = a.get("data").ok_or_else(|| anyhow::anyhow!("--data is required"))?;
     let out = a.get("out").ok_or_else(|| anyhow::anyhow!("--out is required"))?;
     let (corpus, vocab) = load_train_corpus(a, data)?;
@@ -352,10 +467,81 @@ pub fn cmd_train(a: &Args) -> anyhow::Result<i32> {
         cfg.engine = EngineKind::parse(e)?;
     }
     apply_kernel_flag(a, &mut cfg)?;
+    let resume = apply_ckpt_flags(a, &mut cfg)?;
     crate::config::validate::validate(&cfg)?;
     let engine = engine_from_args(a)?;
     let mut rng = Pcg64::seed_from_u64(cfg.seed);
-    let trained = gibbs_train::train(&corpus, &cfg, &engine, &mut rng)?;
+    let trained = if ckpt_enabled(&cfg) {
+        let stop = stop_flag(stop_override)?;
+        let fs = StdFs;
+        // `cfslda train` is one full-corpus chain: algorithm "train",
+        // one shard.
+        let fingerprint = config_fingerprint(
+            &cfg,
+            corpus.num_docs(),
+            corpus.num_tokens(),
+            corpus.vocab_size,
+            "train",
+            1,
+        );
+        let dir = Path::new(&cfg.train.checkpoint_dir).join(format!("train-seed{}", cfg.seed));
+        let store = Store::new(&fs, dir);
+        let coord = GenCoordinator::new(1, fingerprint);
+        let resume_state = if resume {
+            let mut r = store.load_latest(fingerprint)?;
+            anyhow::ensure!(
+                r.states.len() == 1,
+                "checkpoint in {} holds {} shard states; `cfslda train` is single-chain",
+                store.dir().display(),
+                r.states.len()
+            );
+            println!(
+                "resuming from checkpoint generation {} (sweep {} of {}) in {}",
+                r.generation,
+                r.next_sweep,
+                cfg.train.sweeps,
+                store.dir().display()
+            );
+            Some(r.states.remove(0))
+        } else {
+            None
+        };
+        let sink = |state: ShardState| -> anyhow::Result<()> {
+            let sw = Stopwatch::new();
+            let generation = state.next_sweep;
+            let entry = store.write_shard(generation, &state)?;
+            let write_us = (sw.elapsed_secs() * 1e6) as u64;
+            if let Some((manifest, total_us)) = coord.shard_done(generation, entry, write_us) {
+                store.commit_manifest(generation, &manifest, total_us)?;
+            }
+            Ok(())
+        };
+        let hook = gibbs_train::CkptHook {
+            shard_id: 0,
+            resume: resume_state,
+            sink: Some(&sink),
+            stop: Some(stop),
+        };
+        match gibbs_train::train_ckpt(&corpus, &cfg, &engine, &mut rng, Some(hook))? {
+            gibbs_train::TrainRun::Done(done) => *done,
+            gibbs_train::TrainRun::Interrupted { next_sweep } => {
+                println!(
+                    "interrupted cleanly at checkpoint boundary (sweep {next_sweep} of {}); \
+                     state saved in {}",
+                    cfg.train.sweeps,
+                    store.dir().display()
+                );
+                println!(
+                    "resume with: cfslda train --data {data} --out {out} \
+                     --checkpoint-every {} --resume {}",
+                    cfg.train.checkpoint_every, cfg.train.checkpoint_dir
+                );
+                return Ok(0);
+            }
+        }
+    } else {
+        gibbs_train::train(&corpus, &cfg, &engine, &mut rng)?
+    };
     save_model_with_vocab(&trained.model, vocab.as_ref(), Path::new(out))?;
     println!(
         "trained T={} on {} docs ({} tokens, {} sweeps): in-sample mse={:.4} acc={:.4}",
@@ -678,6 +864,163 @@ mod tests {
         assert_eq!(v1.get("yhat"), v3.get("yhat"));
         for f in [bow, model, p1, p3] {
             std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn train_checkpoint_interrupt_resume_byte_identical() {
+        use std::sync::atomic::AtomicBool;
+        let bow = tmp("ck.bow");
+        let ref_model = tmp("ck_ref.model");
+        let res_model = tmp("ck_res.model");
+        let dir_a = tmp("ck_ref_dir");
+        let dir_b = tmp("ck_res_dir");
+        for d in [&dir_a, &dir_b] {
+            std::fs::remove_dir_all(d).ok();
+        }
+        cmd_gen_data(&parse(&format!(
+            "gen-data --out {bow} --preset small --docs 130 --seed 12"
+        )))
+        .unwrap();
+        // A local stop flag for every leg: the process-global SIGTERM flag
+        // is exercised by util::signal's own test and must not be shared.
+        let go = AtomicBool::new(false);
+        // Reference: same flags (the cadence is chain-defining), never
+        // interrupted.
+        let rc = cmd_train_with_stop(
+            &parse(&format!(
+                "train --data {bow} --out {ref_model} --engine native --seed 12 \
+                 --checkpoint-every 40 --checkpoint-dir {dir_a}"
+            )),
+            Some(&go),
+        )
+        .unwrap();
+        assert_eq!(rc, 0);
+        // Interrupted: stop flag raised before the run starts, so it exits
+        // cleanly at the first boundary with a committed generation.
+        let stop = AtomicBool::new(true);
+        let rc = cmd_train_with_stop(
+            &parse(&format!(
+                "train --data {bow} --out {res_model} --engine native --seed 12 \
+                 --checkpoint-every 40 --checkpoint-dir {dir_b}"
+            )),
+            Some(&stop),
+        )
+        .unwrap();
+        assert_eq!(rc, 0);
+        assert!(
+            !Path::new(&res_model).exists(),
+            "an interrupted run must not write a model"
+        );
+        // Resume to completion: the saved model must be byte-identical.
+        let rc = cmd_train_with_stop(
+            &parse(&format!(
+                "train --data {bow} --out {res_model} --engine native --seed 12 \
+                 --checkpoint-every 40 --resume {dir_b}"
+            )),
+            Some(&go),
+        )
+        .unwrap();
+        assert_eq!(rc, 0);
+        assert_eq!(
+            std::fs::read(&ref_model).unwrap(),
+            std::fs::read(&res_model).unwrap(),
+            "resumed model must be byte-identical to the uninterrupted one"
+        );
+        // Flag validation: conflicting directories, missing cadence, and a
+        // chain-config mismatch (different cadence -> fingerprint error).
+        let err = cmd_train(&parse(&format!(
+            "train --data {bow} --out {res_model} --engine native --seed 12 \
+             --checkpoint-every 40 --checkpoint-dir {dir_a} --resume {dir_b}"
+        )))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("conflicts"), "{err}");
+        let err = cmd_train(&parse(&format!(
+            "train --data {bow} --out {res_model} --engine native --seed 12 \
+             --resume {dir_b}"
+        )))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--checkpoint-every"), "{err}");
+        let err = cmd_train(&parse(&format!(
+            "train --data {bow} --out {res_model} --engine native --seed 12 \
+             --checkpoint-every 25 --resume {dir_b}"
+        )))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+        for f in [bow, ref_model, res_model] {
+            std::fs::remove_file(f).ok();
+        }
+        for d in [dir_a, dir_b] {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn run_checkpoint_interrupt_resume_matches_uninterrupted() {
+        use std::sync::atomic::AtomicBool;
+        let bow = tmp("rck.bow");
+        let cfgf = tmp("rck_cfg.json");
+        let j_ref = tmp("rck_ref.json");
+        let j_res = tmp("rck_res.json");
+        let dir_ref = tmp("rck_ref_dir");
+        let dir = tmp("rck_dir");
+        for d in [&dir_ref, &dir] {
+            std::fs::remove_dir_all(d).ok();
+        }
+        cmd_gen_data(&parse(&format!(
+            "gen-data --out {bow} --preset small --docs 140 --seed 13"
+        )))
+        .unwrap();
+        // Cadence via the config file (the `[train] checkpoint_every`
+        // knob); boundaries at sweeps 5 and 10 of 12.
+        std::fs::write(
+            &cfgf,
+            r#"{"train": {"sweeps": 12, "burnin": 3, "eta_every": 3, "checkpoint_every": 5}}"#,
+        )
+        .unwrap();
+        let flags = format!(
+            "--data {bow} --algorithm simple --train 100 --engine native --seed 13 \
+             --config {cfgf}"
+        );
+        // Local stop flags only: the process-global SIGTERM flag belongs to
+        // util::signal's test.
+        let go = AtomicBool::new(false);
+        cmd_run_with_stop(
+            &parse(&format!(
+                "run {flags} --checkpoint-dir {dir_ref} --json {j_ref}"
+            )),
+            Some(&go),
+        )
+        .unwrap();
+        let stop = AtomicBool::new(true);
+        let rc = cmd_run_with_stop(
+            &parse(&format!("run {flags} --checkpoint-dir {dir}")),
+            Some(&stop),
+        )
+        .unwrap();
+        assert_eq!(rc, 0);
+        cmd_run_with_stop(
+            &parse(&format!("run {flags} --resume {dir} --json {j_res}")),
+            Some(&go),
+        )
+        .unwrap();
+        let vr = json::parse(&std::fs::read_to_string(&j_ref).unwrap()).unwrap();
+        let vs = json::parse(&std::fs::read_to_string(&j_res).unwrap()).unwrap();
+        for k in ["mse", "acc", "r2"] {
+            assert_eq!(
+                vr.get(k).unwrap().as_f64().unwrap().to_bits(),
+                vs.get(k).unwrap().as_f64().unwrap().to_bits(),
+                "{k} must match the uninterrupted run bit-for-bit"
+            );
+        }
+        for f in [bow, cfgf, j_ref, j_res] {
+            std::fs::remove_file(f).ok();
+        }
+        for d in [dir_ref, dir] {
+            std::fs::remove_dir_all(d).ok();
         }
     }
 

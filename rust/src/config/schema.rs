@@ -279,11 +279,30 @@ pub struct TrainConfig {
     /// Prediction burn-in sweeps (samples before this are discarded when
     /// averaging the empirical topic distribution — Nguyen et al. 2014).
     pub predict_burnin: usize,
+    /// Durability cadence: write a crash-recovery checkpoint every this many
+    /// sweeps (0 = off). The value is **chain-defining** (DESIGN.md
+    /// §Durability): each checkpoint boundary deterministically re-derives
+    /// the kernel state from the counts, so a resumed run and an
+    /// uninterrupted run with the same `checkpoint_every` are byte-identical
+    /// — but a run with a different cadence is a different (equally valid)
+    /// chain. Part of the checkpoint config fingerprint.
+    pub checkpoint_every: usize,
+    /// Checkpoint directory ("" = none). Not part of the config fingerprint
+    /// — moving a checkpoint directory does not invalidate it.
+    pub checkpoint_dir: String,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { sweeps: 100, burnin: 10, eta_every: 5, predict_sweeps: 20, predict_burnin: 5 }
+        TrainConfig {
+            sweeps: 100,
+            burnin: 10,
+            eta_every: 5,
+            predict_sweeps: 20,
+            predict_burnin: 5,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
+        }
     }
 }
 
@@ -448,6 +467,7 @@ impl ExperimentConfig {
             eta_every: 5,
             predict_sweeps: 10,
             predict_burnin: 3,
+            ..TrainConfig::default()
         };
         c
     }
@@ -463,6 +483,7 @@ impl ExperimentConfig {
             eta_every: 5,
             predict_sweeps: 20,
             predict_burnin: 5,
+            ..TrainConfig::default()
         };
         c
     }
@@ -493,6 +514,8 @@ impl ExperimentConfig {
                 ("eta_every", Value::Number(self.train.eta_every as f64)),
                 ("predict_sweeps", Value::Number(self.train.predict_sweeps as f64)),
                 ("predict_burnin", Value::Number(self.train.predict_burnin as f64)),
+                ("checkpoint_every", Value::Number(self.train.checkpoint_every as f64)),
+                ("checkpoint_dir", Value::String(self.train.checkpoint_dir.clone())),
             ])),
             ("sampler", Value::object(vec![
                 ("kernel", Value::String(self.sampler.kernel.name().to_string())),
@@ -543,6 +566,11 @@ impl ExperimentConfig {
             read_usize(t, "eta_every", &mut c.train.eta_every)?;
             read_usize(t, "predict_sweeps", &mut c.train.predict_sweeps)?;
             read_usize(t, "predict_burnin", &mut c.train.predict_burnin)?;
+            read_usize(t, "checkpoint_every", &mut c.train.checkpoint_every)?;
+            if let Some(d) = t.get("checkpoint_dir") {
+                c.train.checkpoint_dir =
+                    d.as_str().context("train.checkpoint_dir must be a string")?.to_string();
+            }
         }
         if let Some(s) = v.get("sampler") {
             if let Some(k) = s.get("kernel") {
@@ -646,6 +674,8 @@ mod tests {
         c.model.topics = 24;
         c.seed = 99;
         c.engine = EngineKind::Native;
+        c.train.checkpoint_every = 10;
+        c.train.checkpoint_dir = "/tmp/ckpt".to_string();
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
     }
@@ -656,6 +686,26 @@ mod tests {
         assert_eq!(c.model.topics, 5);
         assert_eq!(c.model.alpha, ModelConfig::default().alpha);
         assert_eq!(c.parallel.shards, 4);
+        assert_eq!(c.train.checkpoint_every, 0);
+        assert!(c.train.checkpoint_dir.is_empty());
+    }
+
+    #[test]
+    fn checkpoint_knobs_roundtrip_and_validate_types() {
+        let c = ExperimentConfig::from_json(
+            r#"{"train": {"checkpoint_every": 25, "checkpoint_dir": "ckpts"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.train.checkpoint_every, 25);
+        assert_eq!(c.train.checkpoint_dir, "ckpts");
+        assert!(ExperimentConfig::from_json(
+            r#"{"train": {"checkpoint_every": -1}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_json(
+            r#"{"train": {"checkpoint_dir": 5}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -60,6 +60,20 @@ pub fn validate(c: &ExperimentConfig) -> anyhow::Result<()> {
             t.predict_burnin, t.predict_sweeps
         );
     }
+    if t.checkpoint_every > 1 << 20 {
+        bail!(
+            "train.checkpoint_every must be <= {} (0 = off), got {}",
+            1usize << 20,
+            t.checkpoint_every
+        );
+    }
+    if t.checkpoint_every > 0 && t.checkpoint_dir.is_empty() {
+        bail!(
+            "train.checkpoint_every = {} but train.checkpoint_dir is empty; \
+             set a checkpoint directory (or pass --checkpoint-dir)",
+            t.checkpoint_every
+        );
+    }
     let sp = &c.sampler;
     if sp.alias_staleness > 0
         && matches!(sp.kernel, KernelKind::Dense | KernelKind::Sparse)
@@ -207,6 +221,28 @@ mod tests {
         let mut c = ExperimentConfig::quick();
         c.train.predict_burnin = c.train.predict_sweeps;
         assert!(validate(&c).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_checkpoint_settings() {
+        // cadence without a directory is a misconfiguration
+        let mut c = ExperimentConfig::quick();
+        c.train.checkpoint_every = 10;
+        let err = validate(&c).unwrap_err().to_string();
+        assert!(err.contains("checkpoint_dir"), "{err}");
+        // absurd cadence rejected
+        let mut c = ExperimentConfig::quick();
+        c.train.checkpoint_every = (1 << 20) + 1;
+        c.train.checkpoint_dir = "ckpts".to_string();
+        assert!(validate(&c).is_err());
+        // cadence + directory is valid; directory alone (cadence 0) is too
+        let mut c = ExperimentConfig::quick();
+        c.train.checkpoint_every = 10;
+        c.train.checkpoint_dir = "ckpts".to_string();
+        validate(&c).unwrap();
+        let mut c = ExperimentConfig::quick();
+        c.train.checkpoint_dir = "ckpts".to_string();
+        validate(&c).unwrap();
     }
 
     #[test]

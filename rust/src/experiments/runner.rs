@@ -15,7 +15,9 @@ use crate::data::corpus::Dataset;
 use crate::data::partition::train_test_split;
 use crate::data::synthetic::{generate_corpus, SyntheticSpec};
 use crate::parallel::comm::CommStats;
-use crate::parallel::leader::{run_with_engine, Algorithm};
+use crate::parallel::leader::{
+    has_checkpoint, run_with_engine_ckpt, Algorithm, CkptPlan, RunOutcome,
+};
 use crate::runtime::EngineHandle;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Summary;
@@ -76,12 +78,48 @@ pub struct AlgoSeries {
     pub comm: CommStats,
 }
 
+/// Checkpoint/resume controls for [`run_comparison_ckpt`], applied to each
+/// (algorithm, run) leg. Every leg checkpoints under its own
+/// `<algorithm>-seed<seed>` store, so an interrupted comparison resumes the
+/// in-flight leg from its newest committed generation while legs that never
+/// persisted state start fresh.
+pub struct ComparisonCkpt<'p> {
+    pub resume: bool,
+    pub stop: Option<&'p std::sync::atomic::AtomicBool>,
+}
+
+/// Result of a checkpoint-aware comparison.
+pub enum ComparisonRun {
+    Done(Box<(Vec<AlgoSeries>, Dataset)>),
+    /// Stopped cleanly at a checkpoint boundary inside one leg. Rerunning
+    /// the same command with `--resume` replays completed legs from their
+    /// retained final checkpoints (byte-identical, near-free) and continues
+    /// this one where it stopped.
+    Interrupted { algorithm: Algorithm, run: usize, next_sweep: u64 },
+}
+
 /// Run the full comparison. Returns one series per algorithm, in input
 /// order, plus the dataset actually used (for downstream diagnostics).
 pub fn run_comparison(
     c: &Comparison,
     engine: &EngineHandle,
 ) -> anyhow::Result<(Vec<AlgoSeries>, Dataset)> {
+    match run_comparison_ckpt(c, engine, None)? {
+        ComparisonRun::Done(both) => Ok(*both),
+        // unreachable: without a plan there is no stop flag to interrupt on
+        ComparisonRun::Interrupted { .. } => {
+            anyhow::bail!("comparison interrupted without a checkpoint plan")
+        }
+    }
+}
+
+/// [`run_comparison`] with checkpoint/resume plumbing (see
+/// [`ComparisonCkpt`]).
+pub fn run_comparison_ckpt(
+    c: &Comparison,
+    engine: &EngineHandle,
+    ckpt: Option<ComparisonCkpt<'_>>,
+) -> anyhow::Result<ComparisonRun> {
     let mut corpus_rng = Pcg64::seed_from_u64(c.cfg.seed ^ 0xC0FFEE);
     let corpus = generate_corpus(&c.spec, &mut corpus_rng);
     let ds = train_test_split(&corpus, c.n_train, &mut corpus_rng);
@@ -98,7 +136,16 @@ pub fn run_comparison(
         for run in 0..c.runs {
             let mut cfg = c.cfg.clone();
             cfg.seed = c.cfg.seed.wrapping_add(run as u64 * 7919);
-            let (out, _) = run_with_engine(algo, &ds, &cfg, engine, false)?;
+            let plan = ckpt.as_ref().map(|p| CkptPlan {
+                resume: p.resume && has_checkpoint(&cfg, algo),
+                stop: p.stop,
+            });
+            let (out, _) = match run_with_engine_ckpt(algo, &ds, &cfg, engine, false, plan)? {
+                RunOutcome::Done(both) => *both,
+                RunOutcome::Interrupted { next_sweep } => {
+                    return Ok(ComparisonRun::Interrupted { algorithm: algo, run, next_sweep });
+                }
+            };
             wall.push(out.wall_secs);
             sim_wall.push(out.sim_wall_secs);
             mse.push(out.test_metrics.mse);
@@ -116,7 +163,7 @@ pub fn run_comparison(
         }
         series.push(AlgoSeries { algorithm: algo, wall, sim_wall, mse, acc, r2, timings, comm });
     }
-    Ok((series, ds))
+    Ok(ComparisonRun::Done(Box::new((series, ds))))
 }
 
 /// Render the figure table. `binary` selects accuracy (Fig 7) vs MSE (Fig 6).

@@ -48,6 +48,7 @@
 static ALLOC_COUNTER: util::alloc_count::CountingAlloc = util::alloc_count::CountingAlloc;
 
 pub mod bench_harness;
+pub mod ckpt;
 pub mod cli;
 pub mod combine;
 pub mod config;

@@ -250,6 +250,31 @@ impl CountMatrices {
         (counts, z)
     }
 
+    /// Rebuild count matrices from checkpointed raw vectors. The optional
+    /// structures (`nz`, `alias_rev`) come back `None` — restorers re-enable
+    /// them exactly as a fresh training run would, so the rebuilt state is
+    /// indistinguishable from one that never crashed. Lengths and the count
+    /// invariants are validated so a corrupt-but-checksum-valid snapshot
+    /// (or a snapshot forged against the wrong corpus) is rejected with an
+    /// `Err` rather than producing a silently-wrong chain.
+    pub fn from_parts(
+        t: usize,
+        w: usize,
+        d: usize,
+        ndt: Vec<u32>,
+        nd: Vec<u32>,
+        ntw: Vec<u32>,
+        nt: Vec<u32>,
+    ) -> anyhow::Result<CountMatrices> {
+        anyhow::ensure!(ndt.len() == d * t, "ndt length {} != d*t = {}", ndt.len(), d * t);
+        anyhow::ensure!(nd.len() == d, "nd length {} != d = {d}", nd.len());
+        anyhow::ensure!(ntw.len() == w * t, "ntw length {} != w*t = {}", ntw.len(), w * t);
+        anyhow::ensure!(nt.len() == t, "nt length {} != t = {t}", nt.len());
+        let c = CountMatrices { t, w, d, ndt, nd, ntw, nt, nz: None, alias_rev: None };
+        c.check_invariants()?;
+        Ok(c)
+    }
+
     /// Pool another chain's word-topic statistics into this one — the Naive
     /// Combination step 3 ("treat the combination of sub-sample topics as if
     /// they were directly sampled for the whole training sample"). Document
@@ -532,6 +557,49 @@ mod tests {
         // empty document: empty list either way
         let c2 = CountMatrices::new(1, 3, 2);
         assert!(c2.doc_nonzeros(0, &mut scratch).is_empty());
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_validates() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let (d, t, w) = (4, 5, 8);
+        let mut c = CountMatrices::new(d, t, w);
+        for doc in 0..d {
+            for _ in 0..12 {
+                c.inc(doc, rng.gen_range(w) as u32, rng.gen_range(t));
+            }
+        }
+        let r = CountMatrices::from_parts(
+            t,
+            w,
+            d,
+            c.ndt.clone(),
+            c.nd.clone(),
+            c.ntw.clone(),
+            c.nt.clone(),
+        )
+        .unwrap();
+        assert_eq!(r.ndt, c.ndt);
+        assert_eq!(r.ntw, c.ntw);
+        assert!(r.nz.is_none() && r.alias_rev.is_none());
+
+        // wrong lengths rejected
+        let bad_len = CountMatrices::from_parts(
+            t,
+            w,
+            d,
+            vec![0; 3],
+            c.nd.clone(),
+            c.ntw.clone(),
+            c.nt.clone(),
+        );
+        assert!(bad_len.is_err());
+        // invariant-breaking payload rejected (nd disagrees with ndt)
+        let mut bad_nd = c.nd.clone();
+        bad_nd[0] += 1;
+        let bad_sum =
+            CountMatrices::from_parts(t, w, d, c.ndt.clone(), bad_nd, c.ntw.clone(), c.nt.clone());
+        assert!(bad_sum.is_err());
     }
 
     #[test]

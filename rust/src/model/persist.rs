@@ -31,7 +31,9 @@ const MAGIC_V2: &[u8; 8] = b"CFSLDA2\0";
 /// is a corrupted length field, not a phrase.
 const MAX_TERM_BYTES: usize = 1 << 16;
 
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a 64-bit. Shared with the checkpoint format (`crate::ckpt`), which
+/// uses the same magic + LE body + trailing-checksum file layout.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -139,10 +141,13 @@ pub fn load_model_full(path: &Path) -> anyhow::Result<(SldaModel, Option<Vocab>)
         bail!("model checksum mismatch — corrupted file");
     }
 
+    // Cursor with offset-bearing errors: a malformed (but checksum-valid,
+    // e.g. restamped) file names exactly where the structure broke.
     let mut off = 0usize;
     let mut take = |n: usize| -> anyhow::Result<&[u8]> {
-        if off + n > body.len() {
-            bail!("truncated model body");
+        let avail = body.len() - off;
+        if n > avail {
+            bail!("truncated model body at offset {off}: need {n} bytes, {avail} available");
         }
         let s = &body[off..off + n];
         off += n;
@@ -157,6 +162,22 @@ pub fn load_model_full(path: &Path) -> anyhow::Result<(SldaModel, Option<Vocab>)
     let alpha = f64::from_le_bytes(take(8)?.try_into().unwrap());
     let train_mse = f64::from_le_bytes(take(8)?.try_into().unwrap());
     let train_acc = f64::from_le_bytes(take(8)?.try_into().unwrap());
+    // The dims are attacker-controlled until proven backed by bytes: check
+    // the full eta+phi extent (checked arithmetic — w*t*4 can reach 2^46)
+    // BEFORE allocating, so a hostile header can't request a huge buffer.
+    let eta_bytes = t * 8; // t <= 2^16
+    let phi_bytes = w
+        .checked_mul(t)
+        .and_then(|wt| wt.checked_mul(4))
+        .ok_or_else(|| anyhow::anyhow!("model dims t={t} w={w} overflow"))?;
+    let avail = body.len() - off;
+    if eta_bytes + phi_bytes > avail {
+        bail!(
+            "truncated model body at offset {off}: eta+phi for t={t} w={w} need {} bytes, \
+             {avail} available",
+            eta_bytes + phi_bytes
+        );
+    }
     let mut eta = Vec::with_capacity(t);
     for _ in 0..t {
         eta.push(f64::from_le_bytes(take(8)?.try_into().unwrap()));
@@ -173,11 +194,22 @@ pub fn load_model_full(path: &Path) -> anyhow::Result<(SldaModel, Option<Vocab>)
             if vlen != w {
                 bail!("vocabulary has {vlen} terms but model vocab size is {w}");
             }
+            // Every term carries at least a 4-byte length prefix; reject a
+            // vlen the remaining bytes cannot possibly back before
+            // reserving term storage for it.
+            if vlen * 4 > body.len() - off {
+                bail!(
+                    "truncated model body at offset {off}: {vlen} vocabulary terms need \
+                     at least {} bytes, {} available",
+                    vlen * 4,
+                    body.len() - off
+                );
+            }
             let mut terms = Vec::with_capacity(vlen);
             for _ in 0..vlen {
                 let blen = u32::from_le_bytes(take(4)?.try_into().unwrap()) as usize;
                 if blen > MAX_TERM_BYTES {
-                    bail!("implausible vocabulary term length {blen}");
+                    bail!("implausible vocabulary term length {blen} at offset {off}");
                 }
                 let s = std::str::from_utf8(take(blen)?)
                     .context("vocabulary term is not valid utf-8")?;
@@ -325,6 +357,108 @@ mod tests {
         std::fs::write(&p, b"NOTAMODL").unwrap();
         assert!(load_model(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    /// Restamp a mangled body with a fresh valid checksum so the structural
+    /// parser (not the checksum gate) is what gets exercised.
+    fn restamp(magic: &[u8], body: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(magic.len() + body.len() + 8);
+        out.extend_from_slice(magic);
+        out.extend_from_slice(body);
+        out.extend_from_slice(&fnv1a(body).to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn hostile_dims_rejected_before_allocation() {
+        // A tiny file claiming t=2^16, w=2^28 would ask the old loader for a
+        // multi-terabyte phi buffer; the hardened loader must refuse from
+        // the byte-availability check alone.
+        let mut body = Vec::new();
+        body.extend_from_slice(&(1u32 << 16).to_le_bytes()); // t (max allowed)
+        body.extend_from_slice(&(1u32 << 28).to_le_bytes()); // w (max allowed)
+        body.extend_from_slice(&[0u8; 32]); // rho/alpha/mse/acc
+        let p = tmp("hostile.bin");
+        std::fs::write(&p, restamp(MAGIC_V2, &body)).unwrap();
+        let err = load_model(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated model body"), "{err}");
+        assert!(err.contains("offset"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn hostile_vocab_len_rejected_before_allocation() {
+        // Valid model section, then a vlen matching w but with no bytes
+        // behind it: must fail on the availability precheck.
+        let m = random_model(2, 1000, 12);
+        let mut body = core_body(&m);
+        body.extend_from_slice(&1000u32.to_le_bytes()); // vlen == w, zero term bytes
+        let p = tmp("hostile_vocab.bin");
+        std::fs::write(&p, restamp(MAGIC_V2, &body)).unwrap();
+        let err = load_model_full(&p).unwrap_err().to_string();
+        assert!(err.contains("vocabulary terms need"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn mangled_file_corpus_never_panics() {
+        // Fault-injection corpus over both format versions: random bit
+        // flips, truncations, and restamped truncations/flips. Every
+        // mutation must yield Err or a loadable model — never a panic, and
+        // never an OOM-scale allocation (the case would time out).
+        use crate::testkit::{forall, usize_in};
+        let m = random_model(5, 24, 33);
+        let v2 = {
+            let p = tmp("mangle_src2.bin");
+            save_model_with_vocab(&m, Some(&vocab_of(24)), &p).unwrap();
+            let b = std::fs::read(&p).unwrap();
+            std::fs::remove_file(p).ok();
+            b
+        };
+        let v1 = {
+            let p = tmp("mangle_src1.bin");
+            save_model_v1(&m, &p).unwrap();
+            let b = std::fs::read(&p).unwrap();
+            std::fs::remove_file(p).ok();
+            b
+        };
+        forall(
+            "persist-mangled-files",
+            60,
+            |rng| {
+                let src = if rng.gen_range(2) == 0 { &v1 } else { &v2 };
+                let mode = rng.gen_range(3);
+                match mode {
+                    0 => {
+                        // bit flip (checksum gate catches it)
+                        let mut b = src.clone();
+                        let i = rng.gen_range(b.len());
+                        b[i] ^= 1 << rng.gen_range(8);
+                        b
+                    }
+                    1 => {
+                        // raw truncation
+                        let n = usize_in(rng, 0, src.len().saturating_sub(1));
+                        src[..n].to_vec()
+                    }
+                    _ => {
+                        // truncate the body, restamp a valid checksum: the
+                        // structural parser must catch it
+                        let body = &src[8..src.len() - 8];
+                        let n = usize_in(rng, 0, body.len().saturating_sub(1));
+                        restamp(&src[..8], &body[..n])
+                    }
+                }
+            },
+            |bytes| {
+                let p = tmp("mangle_case.bin");
+                std::fs::write(&p, bytes).unwrap();
+                // Err is expected; Ok is tolerated for no-op mutations.
+                // A panic fails the property with the replayable case seed.
+                let _ = load_model_full(&p);
+                std::fs::remove_file(p).ok();
+            },
+        );
     }
 
     #[test]

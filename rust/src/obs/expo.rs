@@ -159,6 +159,24 @@ pub struct TrainingMetrics {
     pub comm_corpus_bytes: Gauge,
     pub comm_model_bytes: Gauge,
     pub comm_predictions_bytes: Gauge,
+    /// Shard snapshot files committed (renamed into place).
+    pub ckpt_writes: Counter,
+    /// Checkpoint generations committed (manifest landed).
+    pub ckpt_generations: Counter,
+    /// Checkpoint write attempts that failed (training continues).
+    pub ckpt_failures: Counter,
+    /// Shard states restored on `--resume`.
+    pub ckpt_restores: Counter,
+    /// Sweep index captured by the last committed generation.
+    pub ckpt_last_sweep: Gauge,
+    /// Total serialized bytes of the last committed generation.
+    pub ckpt_last_bytes: Gauge,
+    /// Wall time spent writing the last committed generation, microseconds.
+    pub ckpt_last_write_us: Gauge,
+    /// Unix timestamp of the last committed generation (0 = none yet);
+    /// checkpoint age is `time() - this` in PromQL. Kept as a timestamp
+    /// rather than an age so exposition stays byte-stable for fixed state.
+    pub ckpt_last_unix_secs: Gauge,
 }
 
 impl Default for TrainingMetrics {
@@ -186,6 +204,14 @@ impl TrainingMetrics {
             comm_corpus_bytes: Gauge::new(),
             comm_model_bytes: Gauge::new(),
             comm_predictions_bytes: Gauge::new(),
+            ckpt_writes: Counter::new(),
+            ckpt_generations: Counter::new(),
+            ckpt_failures: Counter::new(),
+            ckpt_restores: Counter::new(),
+            ckpt_last_sweep: Gauge::new(),
+            ckpt_last_bytes: Gauge::new(),
+            ckpt_last_write_us: Gauge::new(),
+            ckpt_last_unix_secs: Gauge::new(),
         }
     }
 }
@@ -285,6 +311,21 @@ pub fn render_parts(
     series_u64(buf, "cfslda_comm_bytes", "phase", "model", train.comm_model_bytes.get());
     series_u64(buf, "cfslda_comm_bytes", "phase", "predictions", train.comm_predictions_bytes.get());
     series_u64(buf, "cfslda_comm_bytes", "phase", "setup", train.comm_setup_bytes.get());
+    counter(buf, "cfslda_ckpt_writes_total", "Shard snapshot files committed.", train.ckpt_writes.get());
+    counter(buf, "cfslda_ckpt_generations_total", "Checkpoint generations committed (manifest landed).", train.ckpt_generations.get());
+    counter(buf, "cfslda_ckpt_failures_total", "Checkpoint write attempts that failed.", train.ckpt_failures.get());
+    counter(buf, "cfslda_ckpt_restores_total", "Shard states restored on resume.", train.ckpt_restores.get());
+    gauge(buf, "cfslda_ckpt_last_sweep", "Sweep captured by the last committed generation.", train.ckpt_last_sweep.get());
+    gauge(buf, "cfslda_ckpt_last_bytes", "Serialized bytes of the last committed generation.", train.ckpt_last_bytes.get());
+    let last_us = train.ckpt_last_write_us.get();
+    header(buf, "cfslda_ckpt_last_write_seconds", "Wall time writing the last committed generation.", "gauge");
+    let _ = writeln!(buf, "cfslda_ckpt_last_write_seconds {}", last_us as f64 * US_TO_SECS);
+    gauge(
+        buf,
+        "cfslda_ckpt_last_timestamp_seconds",
+        "Unix time of the last committed generation (0 = none); age = time() - this.",
+        train.ckpt_last_unix_secs.get(),
+    );
 }
 
 fn header(buf: &mut String, name: &str, help: &str, kind: &str) {
@@ -402,6 +443,11 @@ mod tests {
         assert!(out.contains("cfslda_request_duration_seconds_sum{endpoint=\"predict\"} 0.1001\n"));
         assert!(out.contains("cfslda_log_messages_total{level=\"warn\"} 0\n"));
         assert!(out.contains("cfslda_comm_bytes{phase=\"setup\"} 0\n"));
+        assert!(out.contains("# TYPE cfslda_ckpt_writes_total counter\ncfslda_ckpt_writes_total 0\n"));
+        assert!(out.contains("# TYPE cfslda_ckpt_failures_total counter\ncfslda_ckpt_failures_total 0\n"));
+        assert!(out.contains("# TYPE cfslda_ckpt_last_sweep gauge\ncfslda_ckpt_last_sweep 0\n"));
+        assert!(out.contains("cfslda_ckpt_last_write_seconds 0\n"));
+        assert!(out.contains("cfslda_ckpt_last_timestamp_seconds 0\n"));
         // No shard gauges when shards_total is 0.
         assert!(!out.contains("cfslda_train_shard_tokens{"));
 

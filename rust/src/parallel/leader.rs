@@ -13,6 +13,7 @@
 //!   *whole training set* to derive inverse-MSE / accuracy weights
 //!   (eqs. 8-9), the step that makes it slower than NonParallel.
 
+use crate::ckpt::{config_fingerprint, GenCoordinator, ShardState, StdFs, Store};
 use crate::combine::rules::combine_median;
 use crate::combine::{combine_predictions, weights, CombineRule, WeightScheme};
 use crate::config::schema::{ExperimentConfig, ResponseKind};
@@ -25,13 +26,15 @@ use crate::model::slda::SldaModel;
 use crate::parallel::comm::{
     model_bytes, predictions_bytes, CommLedger, CommStats,
 };
-use crate::parallel::worker::{run_worker, WorkerPlan, WorkerOutput};
+use crate::parallel::worker::{run_worker_ckpt, WorkerPlan, WorkerOutput, WorkerRun};
 use crate::runtime::EngineHandle;
+use crate::sampler::gibbs_train::CkptHook;
 use crate::sampler::{gibbs_predict, gibbs_train};
 use crate::util::pool::scoped_map;
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CpuStopwatch, PhaseTimings, Stopwatch};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
 use std::sync::{Arc, Condvar, Mutex};
 
 /// The four algorithms compared in the paper's Figures 6 and 7.
@@ -129,6 +132,95 @@ pub struct RunOutput {
 /// Trained models kept for diagnostics (`keep_models = true`).
 pub type ShardModels = Vec<SldaModel>;
 
+/// Checkpoint/resume controls for [`run_with_engine_ckpt`]. Checkpointing
+/// itself is enabled by the config (`train.checkpoint_every > 0` plus a
+/// `train.checkpoint_dir`); this plan only adds the run-level choices.
+pub struct CkptPlan<'p> {
+    /// Restore the newest valid generation and continue from it instead of
+    /// starting fresh. Errors if no valid generation exists or the live
+    /// config fingerprint differs from the checkpoint's.
+    pub resume: bool,
+    /// Cooperative stop flag, polled at checkpoint boundaries right after
+    /// the snapshot lands (the CLI wires the SIGINT/SIGTERM flag here).
+    pub stop: Option<&'p AtomicBool>,
+}
+
+/// Result of a checkpoint-aware run.
+pub enum RunOutcome {
+    Done(Box<(RunOutput, ShardModels)>),
+    /// Stopped cleanly at a checkpoint boundary: every shard has persisted
+    /// sweep `next_sweep` or later, so the newest *committed* generation —
+    /// what `--resume` restores — is at most `next_sweep`.
+    Interrupted { next_sweep: u64 },
+}
+
+/// Leader-side checkpoint machinery shared by every worker of one run: the
+/// store (rooted at `dir/<algorithm>-seed<seed>`), the last-writer-commits
+/// manifest coordinator, and the restored per-shard states when resuming.
+struct CkptCtx<'c> {
+    store: Store<'c>,
+    coord: GenCoordinator,
+    resume_states: Option<Vec<ShardState>>,
+    stop: Option<&'c AtomicBool>,
+}
+
+impl CkptCtx<'_> {
+    /// The per-worker snapshot sink: write the shard file atomically,
+    /// report it to the coordinator, and commit the manifest if this write
+    /// completed the generation.
+    fn write(&self, state: ShardState) -> anyhow::Result<()> {
+        let sw = Stopwatch::new();
+        let generation = state.next_sweep;
+        let entry = self.store.write_shard(generation, &state)?;
+        let write_us = (sw.elapsed_secs() * 1e6) as u64;
+        if let Some((manifest, total_us)) = self.coord.shard_done(generation, entry, write_us) {
+            self.store.commit_manifest(generation, &manifest, total_us)?;
+        }
+        Ok(())
+    }
+
+    fn resume_state(&self, shard: usize) -> Option<ShardState> {
+        self.resume_states.as_ref().map(|s| s[shard].clone())
+    }
+
+    fn hook_for<'h>(
+        &self,
+        shard: usize,
+        sink: &'h (dyn Fn(ShardState) -> anyhow::Result<()> + Sync),
+    ) -> CkptHook<'h>
+    where
+        Self: 'h,
+    {
+        CkptHook {
+            shard_id: shard as u32,
+            resume: self.resume_state(shard),
+            sink: Some(sink),
+            stop: self.stop,
+        }
+    }
+}
+
+/// The checkpoint store directory for one (algorithm, seed) run under the
+/// configured checkpoint root. Seed is part of the path because it is part
+/// of the chain: two seeds are two different runs.
+pub fn checkpoint_store_dir(cfg: &ExperimentConfig, algo: Algorithm) -> PathBuf {
+    Path::new(&cfg.train.checkpoint_dir).join(format!("{}-seed{}", algo.name(), cfg.seed))
+}
+
+/// Does the configured checkpoint root hold a *committed* generation for
+/// this (algorithm, seed)? A cheap existence probe — no integrity or
+/// fingerprint verification (resume does that). Multi-run drivers (the
+/// `experiment` command) use it to resume only the legs that actually
+/// persisted state and start the rest fresh.
+pub fn has_checkpoint(cfg: &ExperimentConfig, algo: Algorithm) -> bool {
+    if cfg.train.checkpoint_every == 0 || cfg.train.checkpoint_dir.is_empty() {
+        return false;
+    }
+    let fs = StdFs;
+    let store = Store::new(&fs, checkpoint_store_dir(cfg, algo));
+    store.has_committed_generation().unwrap_or(false)
+}
+
 /// Convenience wrapper: build the engine from the config and run.
 /// The artifacts directory defaults to `./artifacts` (override with the
 /// `CFSLDA_ARTIFACTS` environment variable).
@@ -152,6 +244,30 @@ pub fn run_with_engine(
     engine: &EngineHandle,
     keep_models: bool,
 ) -> anyhow::Result<(RunOutput, ShardModels)> {
+    match run_with_engine_ckpt(algo, ds, cfg, engine, keep_models, None)? {
+        RunOutcome::Done(both) => Ok(*both),
+        // unreachable: without a plan there is no stop flag to interrupt on
+        RunOutcome::Interrupted { .. } => {
+            anyhow::bail!("run interrupted without a checkpoint plan")
+        }
+    }
+}
+
+/// [`run_with_engine`] with checkpoint/resume. When the config enables
+/// checkpointing, every shard chain snapshots into
+/// `<checkpoint_dir>/<algorithm>-seed<seed>/` on the configured cadence;
+/// `plan.resume` restores the newest committed generation (hard error on a
+/// config-fingerprint mismatch) and `plan.stop` turns the run into a clean
+/// [`RunOutcome::Interrupted`] at the next boundary. A resumed run is
+/// byte-identical to the same run left uninterrupted.
+pub fn run_with_engine_ckpt(
+    algo: Algorithm,
+    ds: &Dataset,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    keep_models: bool,
+    plan: Option<CkptPlan<'_>>,
+) -> anyhow::Result<RunOutcome> {
     validate(cfg)?;
     ds.train.validate()?;
     ds.test.validate()?;
@@ -159,6 +275,58 @@ pub fn run_with_engine(
         ds.train.vocab_size == ds.test.vocab_size,
         "train/test vocab mismatch"
     );
+    let fs = StdFs;
+    let enabled = cfg.train.checkpoint_every > 0 && !cfg.train.checkpoint_dir.is_empty();
+    let ckpt: Option<CkptCtx<'_>> = match &plan {
+        Some(p) if enabled => {
+            let shards =
+                if algo == Algorithm::NonParallel { 1 } else { cfg.parallel.shards };
+            let fingerprint = config_fingerprint(
+                cfg,
+                ds.train.num_docs(),
+                ds.train.num_tokens(),
+                ds.train.vocab_size,
+                algo.name(),
+                shards,
+            );
+            let store = Store::new(&fs, checkpoint_store_dir(cfg, algo));
+            let resume_states = if p.resume {
+                let r = store.load_latest(fingerprint)?;
+                anyhow::ensure!(
+                    r.states.len() == shards,
+                    "checkpoint generation {} holds {} shard states, run wants {shards}",
+                    r.generation,
+                    r.states.len()
+                );
+                log::info!(
+                    "{}: resuming from checkpoint generation {} (sweep {} of {})",
+                    algo.name(),
+                    r.generation,
+                    r.next_sweep,
+                    cfg.train.sweeps
+                );
+                Some(r.states)
+            } else {
+                None
+            };
+            Some(CkptCtx {
+                store,
+                coord: GenCoordinator::new(shards, fingerprint),
+                resume_states,
+                stop: p.stop,
+            })
+        }
+        Some(p) => {
+            anyhow::ensure!(
+                !p.resume,
+                "--resume requested but checkpointing is disabled \
+                 (set train.checkpoint_every and train.checkpoint_dir)"
+            );
+            None
+        }
+        None => None,
+    };
+    let ckpt = ckpt.as_ref();
     let total = Stopwatch::new();
     // Periodic structured progress line while the run is in flight
     // (`obs.heartbeat_secs > 0`); stops on drop at function exit.
@@ -166,11 +334,26 @@ pub fn run_with_engine(
     let mut rng = Pcg64::seed_from_u64(cfg.seed);
     let test_labels = ds.test.responses();
 
-    let (out, models) = match algo {
+    let outcome = match algo {
         Algorithm::NonParallel => {
             let mut timings = PhaseTimings::new();
             let sw = CpuStopwatch::new();
-            let train = gibbs_train::train(&ds.train, cfg, engine, &mut rng)?;
+            let train = {
+                let sink;
+                let hook = match ckpt {
+                    Some(c) => {
+                        sink = move |s: ShardState| c.write(s);
+                        Some(c.hook_for(0, &sink))
+                    }
+                    None => None,
+                };
+                match gibbs_train::train_ckpt(&ds.train, cfg, engine, &mut rng, hook)? {
+                    gibbs_train::TrainRun::Done(out) => *out,
+                    gibbs_train::TrainRun::Interrupted { next_sweep } => {
+                        return Ok(interrupted(algo, next_sweep));
+                    }
+                }
+            };
             timings.add("train", sw.elapsed_secs());
             let sw = CpuStopwatch::new();
             let (pred, _zbar) = gibbs_predict::predict_corpus_with_kernel(
@@ -189,7 +372,7 @@ pub fn run_with_engine(
                 eta: train.model.eta.clone(),
             }];
             let models = if keep_models { vec![train.model] } else { vec![] };
-            (
+            RunOutcome::Done(Box::new((
                 RunOutput {
                     algorithm: algo,
                     yhat: pred.yhat,
@@ -202,11 +385,11 @@ pub fn run_with_engine(
                     weights: None,
                 },
                 models,
-            )
+            )))
         }
-        Algorithm::NaiveCombination => run_naive(ds, cfg, engine, &mut rng, keep_models)?,
+        Algorithm::NaiveCombination => run_naive(ds, cfg, engine, &mut rng, keep_models, ckpt)?,
         Algorithm::SimpleAverage => run_prediction_combining(
-            ds, cfg, engine, &mut rng, CombineRule::Simple, keep_models,
+            ds, cfg, engine, &mut rng, CombineRule::Simple, keep_models, ckpt,
         )?,
         Algorithm::WeightedAverage => run_prediction_combining(
             ds,
@@ -215,23 +398,46 @@ pub fn run_with_engine(
             &mut rng,
             CombineRule::Weighted(WeightScheme::for_response(cfg.response)),
             keep_models,
+            ckpt,
         )?,
         Algorithm::MedianAverage => run_prediction_combining(
-            ds, cfg, engine, &mut rng, CombineRule::Median, keep_models,
+            ds, cfg, engine, &mut rng, CombineRule::Median, keep_models, ckpt,
         )?,
     };
 
-    let mut out = out;
-    out.wall_secs = total.elapsed_secs();
+    match outcome {
+        RunOutcome::Done(mut both) => {
+            both.0.wall_secs = total.elapsed_secs();
+            let out = &both.0;
+            log::info!(
+                "{}: wall={:.2}s sim_wall={:.2}s {} comm[{}]",
+                algo.name(),
+                out.wall_secs,
+                out.sim_wall_secs,
+                out.test_metrics.render(cfg.response == ResponseKind::Binary),
+                out.comm.render()
+            );
+            Ok(RunOutcome::Done(both))
+        }
+        RunOutcome::Interrupted { next_sweep } => Ok(interrupted(algo, next_sweep)),
+    }
+}
+
+/// Log + construct a clean boundary interruption.
+fn interrupted(algo: Algorithm, next_sweep: u64) -> RunOutcome {
     log::info!(
-        "{}: wall={:.2}s sim_wall={:.2}s {} comm[{}]",
-        algo.name(),
-        out.wall_secs,
-        out.sim_wall_secs,
-        out.test_metrics.render(cfg.response == ResponseKind::Binary),
-        out.comm.render()
+        "{}: stopped cleanly at checkpoint boundary (sweep {next_sweep}); \
+         rerun with --resume to continue",
+        algo.name()
     );
-    Ok((out, models))
+    RunOutcome::Interrupted { next_sweep }
+}
+
+/// [`parallel_train`]'s result: all workers done, or at least one stopped
+/// cleanly at a checkpoint boundary.
+enum ParallelRun {
+    Done(Vec<WorkerOutput>),
+    Interrupted { next_sweep: u64 },
 }
 
 /// Shared parallel training stage: partition, spawn workers, gather.
@@ -241,6 +447,10 @@ pub fn run_with_engine(
 /// test set, and (Weighted Average) the full training set. The only bytes
 /// physically duplicated per worker are the shard's doc-index list and the
 /// responses it materializes; the ledger records that split.
+///
+/// With a [`CkptCtx`], each worker checkpoints its own chain through the
+/// shared store (communication-free beyond the last-writer-commits
+/// manifest) and resumes from its restored state.
 fn parallel_train(
     ds: &Dataset,
     cfg: &ExperimentConfig,
@@ -248,7 +458,8 @@ fn parallel_train(
     rng: &mut Pcg64,
     plan: WorkerPlan,
     ledger: &CommLedger,
-) -> anyhow::Result<Vec<WorkerOutput>> {
+    ckpt: Option<&CkptCtx<'_>>,
+) -> anyhow::Result<ParallelRun> {
     let m = cfg.parallel.shards;
     // Shard-progress gauges (DESIGN.md §Observability): reset per run so a
     // scrape mid-training reads this run's fan-out, not a stale one.
@@ -287,10 +498,27 @@ fn parallel_train(
     }
 
     let results = scoped_map(&jobs, cfg.parallel.threads.max(1), |_, (i, v, worker_rng)| {
-        let out =
-            run_worker(*i, *v, test_view, full_train_view, plan, cfg, engine, worker_rng.clone());
+        let sink;
+        let hook = match ckpt {
+            Some(c) => {
+                sink = move |s: ShardState| c.write(s);
+                Some(c.hook_for(*i, &sink))
+            }
+            None => None,
+        };
+        let out = run_worker_ckpt(
+            *i,
+            *v,
+            test_view,
+            full_train_view,
+            plan,
+            cfg,
+            engine,
+            worker_rng.clone(),
+            hook,
+        );
         if telemetry {
-            if let Ok(o) = &out {
+            if let Ok(WorkerRun::Done(o)) = &out {
                 let tr = &crate::obs::registry().training;
                 tr.shards_done.add(1);
                 if *i < crate::obs::SHARD_SLOTS {
@@ -300,8 +528,28 @@ fn parallel_train(
         }
         out
     });
-    let outputs: anyhow::Result<Vec<WorkerOutput>> = results.into_iter().collect();
-    let outputs = outputs?;
+    let runs: anyhow::Result<Vec<WorkerRun>> = results.into_iter().collect();
+    let runs = runs?;
+    // Any shard stopped at a boundary ends the whole run cleanly; shards
+    // drift through boundaries independently, so report the earliest stop
+    // (the newest *committed* generation is at most that sweep).
+    let stopped = runs
+        .iter()
+        .filter_map(|r| match r {
+            WorkerRun::Interrupted { next_sweep, .. } => Some(*next_sweep),
+            WorkerRun::Done(_) => None,
+        })
+        .min();
+    if let Some(next_sweep) = stopped {
+        return Ok(ParallelRun::Interrupted { next_sweep });
+    }
+    let outputs: Vec<WorkerOutput> = runs
+        .into_iter()
+        .map(|r| match r {
+            WorkerRun::Done(o) => *o,
+            WorkerRun::Interrupted { .. } => unreachable!("handled above"),
+        })
+        .collect();
 
     let mut gathered_model_bytes = 0u64;
     let mut gathered_pred_bytes = 0u64;
@@ -327,7 +575,7 @@ fn parallel_train(
         tr.comm_model_bytes.set(gathered_model_bytes);
         tr.comm_predictions_bytes.set(gathered_pred_bytes);
     }
-    Ok(outputs)
+    Ok(ParallelRun::Done(outputs))
 }
 
 /// Background thread that logs one structured JSON progress line every
@@ -433,6 +681,7 @@ fn merged_timings(outputs: &[WorkerOutput]) -> PhaseTimings {
 }
 
 /// Simple/Weighted Average: combine local *predictions* (the paper's fix).
+#[allow(clippy::too_many_arguments)]
 fn run_prediction_combining(
     ds: &Dataset,
     cfg: &ExperimentConfig,
@@ -440,7 +689,8 @@ fn run_prediction_combining(
     rng: &mut Pcg64,
     rule: CombineRule,
     keep_models: bool,
-) -> anyhow::Result<(RunOutput, ShardModels)> {
+    ckpt: Option<&CkptCtx<'_>>,
+) -> anyhow::Result<RunOutcome> {
     let ledger = CommLedger::new();
     let plan = WorkerPlan {
         predict_test: true,
@@ -450,7 +700,12 @@ fn run_prediction_combining(
                 | CombineRule::Weighted(WeightScheme::Accuracy)
         ),
     };
-    let outputs = parallel_train(ds, cfg, engine, rng, plan, &ledger)?;
+    let outputs = match parallel_train(ds, cfg, engine, rng, plan, &ledger, ckpt)? {
+        ParallelRun::Done(outputs) => outputs,
+        ParallelRun::Interrupted { next_sweep } => {
+            return Ok(RunOutcome::Interrupted { next_sweep });
+        }
+    };
 
     let mut timings = merged_timings(&outputs);
     let sw = CpuStopwatch::new();
@@ -484,7 +739,7 @@ fn run_prediction_combining(
     } else {
         vec![]
     };
-    Ok((
+    Ok(RunOutcome::Done(Box::new((
         RunOutput {
             algorithm: algo,
             yhat,
@@ -497,7 +752,7 @@ fn run_prediction_combining(
             weights: Some(w),
         },
         models,
-    ))
+    ))))
 }
 
 /// Naive Combination: pool sampled topics, fit one model, predict once.
@@ -507,10 +762,16 @@ fn run_naive(
     engine: &EngineHandle,
     rng: &mut Pcg64,
     keep_models: bool,
-) -> anyhow::Result<(RunOutput, ShardModels)> {
+    ckpt: Option<&CkptCtx<'_>>,
+) -> anyhow::Result<RunOutcome> {
     let ledger = CommLedger::new();
     let plan = WorkerPlan { predict_test: false, predict_full_train: false };
-    let outputs = parallel_train(ds, cfg, engine, rng, plan, &ledger)?;
+    let outputs = match parallel_train(ds, cfg, engine, rng, plan, &ledger, ckpt)? {
+        ParallelRun::Done(outputs) => outputs,
+        ParallelRun::Interrupted { next_sweep } => {
+            return Ok(RunOutcome::Interrupted { next_sweep });
+        }
+    };
     let mut timings = merged_timings(&outputs);
 
     let sw = CpuStopwatch::new();
@@ -566,7 +827,7 @@ fn run_naive(
     } else {
         vec![]
     };
-    Ok((
+    Ok(RunOutcome::Done(Box::new((
         RunOutput {
             algorithm: Algorithm::NaiveCombination,
             yhat: pred.yhat,
@@ -579,7 +840,7 @@ fn run_naive(
             weights: None,
         },
         models,
-    ))
+    ))))
 }
 
 #[cfg(test)]
@@ -776,6 +1037,125 @@ mod tests {
         let mut quiet = cfg.clone();
         quiet.obs.train_telemetry = false;
         run_with_engine(Algorithm::NaiveCombination, &ds, &quiet, &engine, false).unwrap();
+    }
+
+    fn ckpt_fixture(name: &str) -> (Dataset, ExperimentConfig, std::path::PathBuf) {
+        let (ds, mut cfg) = fixture();
+        cfg.train.checkpoint_every = 5; // boundaries at sweeps 5, 10 (of 15)
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("cfslda_leader_ckpt_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.train.checkpoint_dir = dir.to_string_lossy().into_owned();
+        (ds, cfg, dir)
+    }
+
+    /// The full crash-safety contract at the leader level: interrupt a
+    /// 4-shard parallel run at a boundary, resume in a "new process", and
+    /// land byte-identical to the uninterrupted run.
+    #[test]
+    fn parallel_interrupt_and_resume_is_byte_identical() {
+        let (ds, cfg, dir) = ckpt_fixture("resume");
+        let engine = EngineHandle::native();
+
+        // Uninterrupted reference. No plan → no disk writes, but the same
+        // chain: the checkpoint cadence is chain-defining, hooks are not.
+        let reference =
+            run_with_engine(Algorithm::SimpleAverage, &ds, &cfg, &engine, false).unwrap().0;
+
+        // Interrupted run: flag raised from the start, so every worker
+        // snapshots sweep 5 and exits at its first boundary.
+        let stop = AtomicBool::new(true);
+        let plan = CkptPlan { resume: false, stop: Some(&stop) };
+        match run_with_engine_ckpt(Algorithm::SimpleAverage, &ds, &cfg, &engine, false, Some(plan))
+            .unwrap()
+        {
+            RunOutcome::Interrupted { next_sweep } => assert_eq!(next_sweep, 5),
+            RunOutcome::Done(_) => panic!("stop flag must interrupt the run"),
+        }
+        let gen5 = dir.join(format!("simple-average-seed{}", cfg.seed)).join("gen-5");
+        assert!(gen5.join("MANIFEST").exists(), "all shards landed → committed manifest");
+        for shard in 0..4 {
+            assert!(gen5.join(format!("shard-{shard}.ckpt")).exists());
+        }
+
+        // Resume and run to completion: bitwise-equal outputs.
+        let plan = CkptPlan { resume: true, stop: None };
+        let resumed = match run_with_engine_ckpt(
+            Algorithm::SimpleAverage,
+            &ds,
+            &cfg,
+            &engine,
+            false,
+            Some(plan),
+        )
+        .unwrap()
+        {
+            RunOutcome::Done(both) => both.0,
+            RunOutcome::Interrupted { .. } => panic!("no stop flag on the resume leg"),
+        };
+        assert_eq!(reference.yhat, resumed.yhat, "combined predictions must be identical");
+        assert_eq!(reference.test_metrics, resumed.test_metrics);
+        assert_eq!(reference.weights, resumed.weights);
+        for (a, b) in reference.shards.iter().zip(&resumed.shards) {
+            assert_eq!(a.shard_id, b.shard_id);
+            assert_eq!(a.eta, b.eta, "shard {} eta drifted across resume", a.shard_id);
+            assert_eq!(a.fit_mse.to_bits(), b.fit_mse.to_bits());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_wrong_config_missing_checkpoints_and_disabled_ckpt() {
+        let (ds, cfg, dir) = ckpt_fixture("reject");
+        let engine = EngineHandle::native();
+
+        // No checkpoints on disk yet.
+        let plan = CkptPlan { resume: true, stop: None };
+        let err =
+            run_with_engine_ckpt(Algorithm::NonParallel, &ds, &cfg, &engine, false, Some(plan))
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("no checkpoint generations"), "{err}");
+
+        // Interrupt once to create generation 5.
+        let stop = AtomicBool::new(true);
+        let plan = CkptPlan { resume: false, stop: Some(&stop) };
+        match run_with_engine_ckpt(Algorithm::NonParallel, &ds, &cfg, &engine, false, Some(plan))
+            .unwrap()
+        {
+            RunOutcome::Interrupted { next_sweep } => assert_eq!(next_sweep, 5),
+            RunOutcome::Done(_) => panic!("stop flag must interrupt the run"),
+        }
+
+        // A config change (sweep budget) fingerprints differently: hard
+        // error, never a silently different chain.
+        let mut other = cfg.clone();
+        other.train.sweeps += 5;
+        let plan = CkptPlan { resume: true, stop: None };
+        let err =
+            run_with_engine_ckpt(Algorithm::NonParallel, &ds, &other, &engine, false, Some(plan))
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("fingerprint"), "{err}");
+
+        // Resume with checkpointing disabled in the config is refused.
+        let mut off = cfg.clone();
+        off.train.checkpoint_every = 0;
+        off.train.checkpoint_dir.clear();
+        let plan = CkptPlan { resume: true, stop: None };
+        let err =
+            run_with_engine_ckpt(Algorithm::NonParallel, &ds, &off, &engine, false, Some(plan))
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("disabled"), "{err}");
+
+        // The unmodified config still resumes to completion.
+        let plan = CkptPlan { resume: true, stop: None };
+        let resumed =
+            run_with_engine_ckpt(Algorithm::NonParallel, &ds, &cfg, &engine, false, Some(plan))
+                .unwrap();
+        assert!(matches!(resumed, RunOutcome::Done(_)));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -36,6 +36,13 @@ pub struct WorkerOutput {
     pub timings: PhaseTimings,
 }
 
+/// [`run_worker_ckpt`]'s result: done, or cleanly stopped at a checkpoint
+/// boundary (the shard's state is already persisted via the hook's sink).
+pub enum WorkerRun {
+    Done(Box<WorkerOutput>),
+    Interrupted { shard_id: usize, next_sweep: u64 },
+}
+
 /// Run one shard: train on `shard_corpus`, then the planned predictions.
 /// `full_train` is the complete training corpus (all shards' documents).
 #[allow(clippy::too_many_arguments)]
@@ -47,12 +54,45 @@ pub fn run_worker(
     plan: WorkerPlan,
     cfg: &ExperimentConfig,
     engine: &EngineHandle,
-    mut rng: Pcg64,
+    rng: Pcg64,
 ) -> anyhow::Result<WorkerOutput> {
+    let run =
+        run_worker_ckpt(shard_id, shard_corpus, test, full_train, plan, cfg, engine, rng, None)?;
+    match run {
+        WorkerRun::Done(out) => Ok(*out),
+        WorkerRun::Interrupted { .. } => {
+            anyhow::bail!("worker interrupted without a checkpoint hook")
+        }
+    }
+}
+
+/// [`run_worker`] with checkpoint/resume plumbing: the hook's resume state
+/// seeds the chain, its sink receives boundary snapshots, and its stop flag
+/// turns the worker into a clean [`WorkerRun::Interrupted`] exit. The
+/// post-training predictions continue on the worker's RNG stream, so a
+/// resumed worker's predictions are byte-identical to an uninterrupted
+/// one's.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker_ckpt(
+    shard_id: usize,
+    shard_corpus: CorpusView<'_>,
+    test: CorpusView<'_>,
+    full_train: CorpusView<'_>,
+    plan: WorkerPlan,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    mut rng: Pcg64,
+    ckpt: Option<gibbs_train::CkptHook<'_>>,
+) -> anyhow::Result<WorkerRun> {
     let mut timings = PhaseTimings::new();
 
     let sw = CpuStopwatch::new();
-    let train = gibbs_train::train(shard_corpus, cfg, engine, &mut rng)?;
+    let train = match gibbs_train::train_ckpt(shard_corpus, cfg, engine, &mut rng, ckpt)? {
+        gibbs_train::TrainRun::Done(out) => *out,
+        gibbs_train::TrainRun::Interrupted { next_sweep } => {
+            return Ok(WorkerRun::Interrupted { shard_id, next_sweep });
+        }
+    };
     timings.add("train", sw.elapsed_secs());
 
     let test_pred = if plan.predict_test {
@@ -90,7 +130,13 @@ pub fn run_worker(
         None
     };
 
-    Ok(WorkerOutput { shard_id, train, test_pred, full_train_quality, timings })
+    Ok(WorkerRun::Done(Box::new(WorkerOutput {
+        shard_id,
+        train,
+        test_pred,
+        full_train_quality,
+        timings,
+    })))
 }
 
 #[cfg(test)]

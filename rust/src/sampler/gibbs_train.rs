@@ -29,6 +29,7 @@
 //! DESIGN.md §Memory layout). Per-document state (`z`, responses, zbar
 //! scratch) lives in flat buffers allocated once per `train` call.
 
+use crate::ckpt::ShardState;
 use crate::config::schema::{ExperimentConfig, KernelKind};
 use crate::data::corpus::CorpusView;
 use crate::model::counts::CountMatrices;
@@ -37,9 +38,10 @@ use crate::runtime::EngineHandle;
 use crate::sampler::kernel::{self, GaussScratch, RespState, TrainState};
 use crate::util::rng::Pcg64;
 use crate::util::timer::{CpuStopwatch, PhaseTimings};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Per-eta-step trace used for convergence reporting (DESIGN.md §5).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SweepStats {
     pub sweep: usize,
     pub train_mse: f64,
@@ -80,6 +82,33 @@ pub struct TrainOutput {
     pub timings: PhaseTimings,
 }
 
+/// Checkpoint/resume/interrupt plumbing for one training chain.
+///
+/// The hook only *moves data*; whether checkpoint boundaries exist at all
+/// is decided by `cfg.train.checkpoint_every` alone, so a hookless run
+/// under the same config walks the exact same chain (see the kernel-epoch
+/// reset note in [`train_ckpt`]).
+pub struct CkptHook<'h> {
+    pub shard_id: u32,
+    /// Snapshot to continue from instead of random initialization.
+    pub resume: Option<ShardState>,
+    /// Called with a full snapshot at every checkpoint boundary. A sink
+    /// error is logged and counted — training continues.
+    #[allow(clippy::type_complexity)]
+    pub sink: Option<&'h (dyn Fn(ShardState) -> anyhow::Result<()> + Sync)>,
+    /// Graceful-shutdown flag, checked only at checkpoint boundaries
+    /// (right after the snapshot is offered to the sink).
+    pub stop: Option<&'h AtomicBool>,
+}
+
+/// How a [`train_ckpt`] call ended.
+pub enum TrainRun {
+    Done(Box<TrainOutput>),
+    /// Stopped at a checkpoint boundary by the hook's stop flag; resume
+    /// from the checkpoint directory to continue at `next_sweep`.
+    Interrupted { next_sweep: u64 },
+}
+
 /// Train an sLDA model with collapsed Gibbs + stochastic EM. Accepts
 /// `&Corpus` or any [`CorpusView`] (e.g. a zero-copy shard window).
 pub fn train<'a>(
@@ -88,6 +117,37 @@ pub fn train<'a>(
     engine: &EngineHandle,
     rng: &mut Pcg64,
 ) -> anyhow::Result<TrainOutput> {
+    match train_ckpt(corpus, cfg, engine, rng, None)? {
+        TrainRun::Done(out) => Ok(*out),
+        // unreachable without a stop flag, which only a hook can carry
+        TrainRun::Interrupted { .. } => {
+            anyhow::bail!("training interrupted without a checkpoint hook")
+        }
+    }
+}
+
+/// [`train`] with durability: checkpoint at every `checkpoint_every`
+/// boundary, optionally start from a restored [`ShardState`], and honor a
+/// stop flag at boundaries.
+///
+/// **Byte-identical-resume contract** (DESIGN.md §Durability): at every
+/// boundary the chain's kernel state is torn down and re-derived from the
+/// count matrices — fresh kernel, re-enabled sparse index / alias reverse
+/// map, `1/(N_t + W·beta)` table recomputed from the counts rather than
+/// carried incrementally. That makes everything the next sweep reads a
+/// pure function of (counts, z, eta, rho, RNG state) = the snapshot, so a
+/// resumed chain and an uninterrupted one cannot diverge — not even in
+/// floating-point accumulation order. The reset happens whenever the
+/// config asks for checkpoints, hook or no hook, which is why
+/// `checkpoint_every` is chain-defining and part of the config
+/// fingerprint.
+pub fn train_ckpt<'a>(
+    corpus: impl Into<CorpusView<'a>>,
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    rng: &mut Pcg64,
+    hook: Option<CkptHook<'_>>,
+) -> anyhow::Result<TrainRun> {
     let corpus: CorpusView<'a> = corpus.into();
     let t = cfg.model.topics;
     let w = corpus.vocab_size();
@@ -102,9 +162,70 @@ pub fn train<'a>(
     let mut eta = vec![0.0f64; t];
     let mut eta_active = false; // all-zero eta => response term is constant
 
-    // Random initialization of topic assignments: flat z in arena order.
+    let (shard_id, resume, sink, stop) = match hook {
+        Some(h) => (h.shard_id, h.resume, h.sink, h.stop),
+        None => (0, None, None, None),
+    };
+
     let z_offsets = corpus.local_doc_offsets();
-    let (mut counts, mut z) = CountMatrices::init_random(corpus, t, rng);
+    let mut history = Vec::new();
+    let mut tokens_sampled: u64 = 0;
+    // Counter totals from kernel epochs already torn down at earlier
+    // checkpoint boundaries (each boundary resets the live kernel).
+    let (mut base_proposed, mut base_accepted, mut base_rebuilds) = (0u64, 0u64, 0u64);
+    let mut start_sweep = 0usize;
+
+    let (mut counts, mut z) = match resume {
+        None => {
+            // Random initialization of topic assignments: flat z in arena
+            // order.
+            CountMatrices::init_random(corpus, t, rng)
+        }
+        Some(s) => {
+            // Restore the chain exactly: the snapshot's RNG stream already
+            // reflects initialization and every sweep before `next_sweep`,
+            // so no draws happen here at all.
+            anyhow::ensure!(
+                s.t as usize == t && s.w as usize == w && s.d as usize == d,
+                "checkpoint dims t={} w={} d={} do not match run t={t} w={w} d={d}",
+                s.t,
+                s.w,
+                s.d
+            );
+            anyhow::ensure!(
+                s.z.len() == corpus.num_tokens(),
+                "checkpoint has {} token assignments, corpus has {}",
+                s.z.len(),
+                corpus.num_tokens()
+            );
+            anyhow::ensure!(
+                s.z.iter().all(|&zi| (zi as usize) < t),
+                "checkpoint token assignment out of range (t={t})"
+            );
+            anyhow::ensure!(
+                s.eta.len() == t,
+                "checkpoint eta has {} entries, want {t}",
+                s.eta.len()
+            );
+            anyhow::ensure!(
+                (s.next_sweep as usize) < cfg.train.sweeps,
+                "checkpoint next_sweep {} is past train.sweeps {}",
+                s.next_sweep,
+                cfg.train.sweeps
+            );
+            let counts = CountMatrices::from_parts(t, w, d, s.ndt, s.nd, s.ntw, s.nt)?;
+            *rng = Pcg64::from_raw(s.rng_state, s.rng_inc);
+            eta = s.eta;
+            eta_active = s.eta_active;
+            rho = s.rho;
+            history = s.history;
+            tokens_sampled = s.tokens_sampled;
+            (base_proposed, base_accepted, base_rebuilds) =
+                (s.resp_proposed, s.resp_accepted, s.alias_rebuilds);
+            start_sweep = s.next_sweep as usize;
+            (counts, s.z)
+        }
+    };
 
     // Responses materialized once for the whole run (the only per-document
     // data a shard worker copies out of the arena).
@@ -146,8 +267,6 @@ pub fn train<'a>(
     // into it (native consumes the counts directly); the final model-card
     // fit below reuses it too.
     let mut zbar_buf: Vec<f32> = Vec::new();
-    let mut history = Vec::new();
-    let mut tokens_sampled: u64 = 0;
     let mut timings = PhaseTimings::new();
 
     // Training telemetry (DESIGN.md §Observability): per-sweep counters and
@@ -155,7 +274,7 @@ pub fn train<'a>(
     // atomic op on a preregistered cell — nothing here allocates or locks.
     let telemetry = cfg.obs.train_telemetry;
 
-    for sweep in 0..cfg.train.sweeps {
+    for sweep in start_sweep..cfg.train.sweeps {
         let sw = CpuStopwatch::new();
         let tokens_before = tokens_sampled;
         for di in 0..d {
@@ -216,6 +335,79 @@ pub fn train<'a>(
                 eta_l2: eta.iter().map(|e| e * e).sum::<f64>().sqrt(),
             });
         }
+
+        // Checkpoint boundary: every `checkpoint_every` sweeps, except the
+        // final one (a finished run has nothing to resume). The boundary is
+        // a *kernel epoch* edge regardless of whether a hook is attached:
+        // kernel counters roll into the baselines, the snapshot (if a sink
+        // wants one) is taken, and then the whole kernel state is re-derived
+        // from the counts — the same derivation a resumed process performs —
+        // so the chain after the boundary is a pure function of the
+        // snapshot (see [`train_ckpt`] docs).
+        let every = cfg.train.checkpoint_every;
+        if every > 0 && (sweep + 1) % every == 0 && sweep + 1 < cfg.train.sweeps {
+            let sw = CpuStopwatch::new();
+            let (p, a) = kern.resp_mh_stats().unwrap_or((0, 0));
+            base_proposed += p;
+            base_accepted += a;
+            let (reb, _) = kern.alias_stats().unwrap_or((0, 0));
+            base_rebuilds += reb;
+            if let Some(sink) = sink {
+                let (rng_state, rng_inc) = rng.to_raw();
+                let state = ShardState {
+                    shard_id,
+                    next_sweep: (sweep + 1) as u64,
+                    t: t as u32,
+                    w: w as u32,
+                    d: d as u32,
+                    rho,
+                    eta_active,
+                    tokens_sampled,
+                    resp_proposed: base_proposed,
+                    resp_accepted: base_accepted,
+                    alias_rebuilds: base_rebuilds,
+                    rng_state,
+                    rng_inc,
+                    eta: eta.clone(),
+                    z: z.clone(),
+                    ndt: counts.ndt.clone(),
+                    nd: counts.nd.clone(),
+                    ntw: counts.ntw.clone(),
+                    nt: counts.nt.clone(),
+                    history: history.clone(),
+                };
+                if let Err(e) = sink(state) {
+                    // A failed checkpoint must not kill a healthy run: log,
+                    // count, continue — the previous generation still stands.
+                    log::warn!(
+                        "checkpoint at sweep {} failed: {e:#}; training continues",
+                        sweep + 1
+                    );
+                    crate::obs::registry().training.ckpt_failures.inc();
+                }
+            }
+            timings.add("checkpoint", sw.elapsed_secs());
+            if stop.is_some_and(|s| s.load(Ordering::SeqCst)) {
+                return Ok(TrainRun::Interrupted { next_sweep: (sweep + 1) as u64 });
+            }
+            // Kernel-epoch reset: re-derive everything the sampler reads
+            // from the count state, exactly as a resume would.
+            match resolved {
+                KernelKind::Sparse => counts.enable_sparse_index(),
+                KernelKind::Alias => counts.enable_alias_rev(),
+                _ => {}
+            }
+            kern = kernel::make_train_kernel(
+                resolved,
+                t,
+                cfg.sampler.alias_staleness,
+                cfg.sampler.resp_mode,
+            );
+            for (i, iv) in inv_nt.iter_mut().enumerate() {
+                *iv = 1.0 / (counts.nt[i] as f64 + wbeta);
+            }
+            ssum = inv_nt.iter().sum();
+        }
     }
 
     // Final in-sample metrics on the fitted zbar (model card data; the
@@ -236,8 +428,11 @@ pub fn train<'a>(
         train_mse: fit.mse,
         train_acc: fit.acc,
     };
-    let (resp_proposed, resp_accepted) = kern.resp_mh_stats().unwrap_or((0, 0));
-    let (alias_rebuilds, alias_staleness) = kern.alias_stats().unwrap_or((0, 0));
+    let (live_proposed, live_accepted) = kern.resp_mh_stats().unwrap_or((0, 0));
+    let (live_rebuilds, alias_staleness) = kern.alias_stats().unwrap_or((0, 0));
+    let resp_proposed = base_proposed + live_proposed;
+    let resp_accepted = base_accepted + live_accepted;
+    let alias_rebuilds = base_rebuilds + live_rebuilds;
     if telemetry {
         let tr = &crate::obs::registry().training;
         tr.resp_proposed.add(resp_proposed);
@@ -247,7 +442,7 @@ pub fn train<'a>(
             tr.alias_staleness.set(alias_staleness);
         }
     }
-    Ok(TrainOutput {
+    Ok(TrainRun::Done(Box::new(TrainOutput {
         model,
         counts,
         z,
@@ -259,7 +454,7 @@ pub fn train<'a>(
         resp_accepted,
         alias_rebuilds,
         timings,
-    })
+    })))
 }
 
 #[cfg(test)]
@@ -415,6 +610,187 @@ mod tests {
         let engine = EngineHandle::native();
         let mut rng = Pcg64::seed_from_u64(1);
         assert!(train(&corpus, &quick_cfg(), &engine, &mut rng).is_err());
+    }
+
+    #[test]
+    fn checkpoint_resume_is_byte_identical_across_kernels() {
+        use crate::config::schema::{KernelKind, RespMode};
+        use std::sync::Mutex;
+        let spec = SyntheticSpec::continuous_small();
+        let engine = EngineHandle::native();
+        for (kernel, mode) in [
+            (KernelKind::Dense, RespMode::Auto),
+            (KernelKind::Sparse, RespMode::Exact),
+            (KernelKind::Sparse, RespMode::Mh),
+            (KernelKind::Alias, RespMode::Exact),
+            (KernelKind::Alias, RespMode::Mh),
+        ] {
+            let mut cfg = quick_cfg();
+            cfg.train.checkpoint_every = 6; // boundaries at sweeps 6, 12, 18
+            cfg.sampler.kernel = kernel;
+            cfg.sampler.resp_mode = mode;
+
+            // Reference: a plain hookless run. `checkpoint_every` alone
+            // defines the chain, so every variant below must match it.
+            let mut rng = Pcg64::seed_from_u64(77);
+            let (corpus, _) = generate_with_truth(&spec, &mut rng);
+            let full = train(&corpus, &cfg, &engine, &mut rng).unwrap();
+            let rng_after = rng.to_raw();
+
+            // Hooked run capturing every boundary snapshot.
+            let captured: Mutex<Vec<ShardState>> = Mutex::new(Vec::new());
+            let sink = |s: ShardState| -> anyhow::Result<()> {
+                captured.lock().unwrap().push(s);
+                Ok(())
+            };
+            let mut rng2 = Pcg64::seed_from_u64(77);
+            let (corpus2, _) = generate_with_truth(&spec, &mut rng2);
+            let hook = CkptHook { shard_id: 3, resume: None, sink: Some(&sink), stop: None };
+            let hooked =
+                match train_ckpt(&corpus2, &cfg, &engine, &mut rng2, Some(hook)).unwrap() {
+                    TrainRun::Done(out) => *out,
+                    TrainRun::Interrupted { .. } => panic!("no stop flag was set"),
+                };
+            assert_eq!(full.z, hooked.z, "{kernel:?}/{mode:?}: hook must not change the chain");
+            assert_eq!(rng2.to_raw(), rng_after);
+            let snaps = std::mem::take(&mut *captured.lock().unwrap());
+            assert_eq!(
+                snaps.iter().map(|s| s.next_sweep).collect::<Vec<_>>(),
+                vec![6, 12, 18],
+                "{kernel:?}/{mode:?}"
+            );
+
+            // "Kill" at each boundary: resuming from any snapshot in a
+            // fresh "process" (fresh RNG, overwritten by the restore) must
+            // land bitwise-equal to the uninterrupted run.
+            for snap in snaps {
+                let from = snap.next_sweep;
+                assert_eq!(snap.shard_id, 3);
+                let mut rng3 = Pcg64::seed_from_u64(0xDEAD_BEEF);
+                let hook =
+                    CkptHook { shard_id: 3, resume: Some(snap), sink: None, stop: None };
+                let resumed =
+                    match train_ckpt(&corpus2, &cfg, &engine, &mut rng3, Some(hook)).unwrap() {
+                        TrainRun::Done(out) => *out,
+                        TrainRun::Interrupted { .. } => panic!("no stop flag was set"),
+                    };
+                let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+                let tag = format!("{kernel:?}/{mode:?} resumed from sweep {from}");
+                assert_eq!(full.z, resumed.z, "{tag}: z");
+                assert_eq!(full.counts.ndt, resumed.counts.ndt, "{tag}: ndt");
+                assert_eq!(full.counts.ntw, resumed.counts.ntw, "{tag}: ntw");
+                assert_eq!(bits(&full.model.eta), bits(&resumed.model.eta), "{tag}: eta");
+                assert_eq!(full.model.phi, resumed.model.phi, "{tag}: phi");
+                assert_eq!(
+                    full.model.train_mse.to_bits(),
+                    resumed.model.train_mse.to_bits(),
+                    "{tag}: mse"
+                );
+                assert_eq!(full.tokens_sampled, resumed.tokens_sampled, "{tag}");
+                assert_eq!(full.history, resumed.history, "{tag}: history");
+                assert_eq!(
+                    (full.resp_proposed, full.resp_accepted, full.alias_rebuilds),
+                    (resumed.resp_proposed, resumed.resp_accepted, resumed.alias_rebuilds),
+                    "{tag}: kernel counters"
+                );
+                assert_eq!(rng3.to_raw(), rng_after, "{tag}: RNG stream must continue");
+            }
+        }
+    }
+
+    #[test]
+    fn stop_flag_interrupts_at_the_boundary_after_snapshotting() {
+        use std::sync::Mutex;
+        let spec = SyntheticSpec::continuous_small();
+        let engine = EngineHandle::native();
+        let mut cfg = quick_cfg();
+        cfg.train.checkpoint_every = 6;
+        let mut rng = Pcg64::seed_from_u64(9);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let captured: Mutex<Vec<ShardState>> = Mutex::new(Vec::new());
+        let sink = |s: ShardState| -> anyhow::Result<()> {
+            captured.lock().unwrap().push(s);
+            Ok(())
+        };
+        let stop = AtomicBool::new(true); // raised before the first boundary
+        let hook = CkptHook { shard_id: 0, resume: None, sink: Some(&sink), stop: Some(&stop) };
+        match train_ckpt(&corpus, &cfg, &engine, &mut rng, Some(hook)).unwrap() {
+            TrainRun::Interrupted { next_sweep } => assert_eq!(next_sweep, 6),
+            TrainRun::Done(_) => panic!("stop flag must interrupt at the boundary"),
+        }
+        // the final snapshot was offered to the sink before stopping
+        let snaps = std::mem::take(&mut *captured.lock().unwrap());
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].next_sweep, 6);
+    }
+
+    #[test]
+    fn failing_sink_keeps_training_and_the_chain() {
+        let spec = SyntheticSpec::continuous_small();
+        let engine = EngineHandle::native();
+        let mut cfg = quick_cfg();
+        cfg.train.checkpoint_every = 6;
+        let mut rng = Pcg64::seed_from_u64(12);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let full = train(&corpus, &cfg, &engine, &mut rng).unwrap();
+
+        let sink =
+            |_: ShardState| -> anyhow::Result<()> { anyhow::bail!("disk on fire") };
+        let mut rng2 = Pcg64::seed_from_u64(12);
+        let (corpus2, _) = generate_with_truth(&spec, &mut rng2);
+        let hook = CkptHook { shard_id: 0, resume: None, sink: Some(&sink), stop: None };
+        let out = match train_ckpt(&corpus2, &cfg, &engine, &mut rng2, Some(hook)).unwrap() {
+            TrainRun::Done(out) => *out,
+            TrainRun::Interrupted { .. } => panic!("no stop flag"),
+        };
+        assert_eq!(full.z, out.z, "sink failures must not perturb the chain");
+        assert_eq!(full.model.eta, out.model.eta);
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_snapshots() {
+        let spec = SyntheticSpec::continuous_small();
+        let engine = EngineHandle::native();
+        let mut cfg = quick_cfg();
+        cfg.train.checkpoint_every = 6;
+        let mut rng = Pcg64::seed_from_u64(31);
+        let (corpus, _) = generate_with_truth(&spec, &mut rng);
+        let base = {
+            use std::sync::Mutex;
+            let captured: Mutex<Vec<ShardState>> = Mutex::new(Vec::new());
+            let sink = |s: ShardState| -> anyhow::Result<()> {
+                captured.lock().unwrap().push(s);
+                Ok(())
+            };
+            let stop = AtomicBool::new(true);
+            let hook =
+                CkptHook { shard_id: 0, resume: None, sink: Some(&sink), stop: Some(&stop) };
+            train_ckpt(&corpus, &cfg, &engine, &mut rng, Some(hook)).unwrap();
+            captured.into_inner().unwrap().remove(0)
+        };
+        let run = |snap: ShardState| {
+            let mut r = Pcg64::seed_from_u64(1);
+            let hook = CkptHook { shard_id: 0, resume: Some(snap), sink: None, stop: None };
+            train_ckpt(&corpus, &cfg, &engine, &mut r, Some(hook)).map(|_| ())
+        };
+        // wrong topic count
+        let mut bad = base.clone();
+        bad.t += 1;
+        assert!(run(bad).is_err());
+        // z length mismatch
+        let mut bad = base.clone();
+        bad.z.pop();
+        assert!(run(bad).is_err());
+        // out-of-range assignment
+        let mut bad = base.clone();
+        bad.z[0] = cfg.model.topics as u16;
+        assert!(run(bad).is_err());
+        // next_sweep past the end
+        let mut bad = base.clone();
+        bad.next_sweep = cfg.train.sweeps as u64;
+        assert!(run(bad).is_err());
+        // the unmodified snapshot still resumes fine
+        assert!(run(base).is_ok());
     }
 
     #[test]

@@ -56,6 +56,10 @@ pub struct BatcherConfig {
     pub queue_depth_max: usize,
     pub kernel: KernelKind,
     pub train: TrainConfig,
+    /// Test-only failpoint: a document containing this token id panics the
+    /// worker mid-dispatch, exercising the per-item panic isolation
+    /// (`worker_loop`'s `catch_unwind`). Always `None` in production.
+    pub panic_token: Option<u32>,
 }
 
 /// One document's prediction outcome.
@@ -537,16 +541,47 @@ fn worker_loop(
             scratch = Some(DocInfer::new(cfg.kernel, t));
             zrow = vec![0.0f32; t];
         }
-        let infer = scratch.as_mut().unwrap();
         stats.batches.inc();
         stats.predict_docs.add(batch.len() as u64);
         for mut item in batch {
-            // Per-doc failures surface as the request's 4xx and are
-            // counted once there (the HTTP layer), not per document.
-            let res = predict_one(&entry, infer, &mut zrow, cfg, registry, stats, &item);
+            // Per-doc *failures* (empty doc, out-of-vocab token) surface as
+            // the request's 4xx and are counted once there (the HTTP
+            // layer), not per document. Per-doc *panics* are isolated
+            // here: a poisoned document takes down its own slot (a 500 for
+            // that document), never the worker thread or the sibling
+            // documents parked on other completions.
+            let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let infer = scratch.as_mut().unwrap();
+                predict_one(&entry, infer, &mut zrow, cfg, registry, stats, &item)
+            }));
+            let res = match unwound {
+                Ok(res) => res,
+                Err(payload) => {
+                    // The scratch may hold arbitrary partial state after
+                    // an unwound kernel; rebuild it so the next document
+                    // starts clean.
+                    scratch = Some(DocInfer::new(cfg.kernel, t));
+                    zrow = vec![0.0f32; t];
+                    stats.errors.inc();
+                    Err(anyhow::anyhow!(
+                        "prediction panicked on this document: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                }
+            };
             item.complete(res);
         }
     }
+}
+
+/// Best-effort text of a caught panic payload (`&str` / `String` panics;
+/// anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+        .unwrap_or("<non-string panic payload>")
 }
 
 fn predict_one(
@@ -560,6 +595,11 @@ fn predict_one(
 ) -> anyhow::Result<DocOut> {
     let model = &entry.model;
     let tokens = item.tokens();
+    if let Some(poison) = cfg.panic_token {
+        // Stands in for a kernel panic on a pathological document; checked
+        // before validation so the poison token needn't be in-vocab.
+        assert!(!tokens.contains(&poison), "deliberate failpoint panic: poisoned document");
+    }
     anyhow::ensure!(!tokens.is_empty(), "empty document");
     if let Some(&w) = tokens.iter().find(|&&w| w as usize >= model.w) {
         anyhow::bail!("token id {w} >= model vocab size {}", model.w);
@@ -619,7 +659,14 @@ mod tests {
     }
 
     fn quick_train() -> TrainConfig {
-        TrainConfig { sweeps: 5, burnin: 1, eta_every: 1, predict_sweeps: 6, predict_burnin: 2 }
+        TrainConfig {
+            sweeps: 5,
+            burnin: 1,
+            eta_every: 1,
+            predict_sweeps: 6,
+            predict_burnin: 2,
+            ..TrainConfig::default()
+        }
     }
 
     fn start(
@@ -639,6 +686,7 @@ mod tests {
             queue_depth_max: 0,
             kernel: KernelKind::Auto,
             train: quick_train(),
+            panic_token: None,
         };
         let b = Batcher::start(cfg, Arc::clone(&registry), Arc::clone(&stats));
         (b, registry, stats, p)
@@ -811,6 +859,7 @@ mod tests {
             queue_depth_max: 4,
             kernel: KernelKind::Auto,
             train: quick_train(),
+            panic_token: None,
         };
         let b = Batcher::start(cfg, Arc::clone(&registry), Arc::clone(&stats));
         assert_eq!(b.queue_bound(), 4);
@@ -911,6 +960,50 @@ mod tests {
         // A drained completion reports not-ready until re-armed.
         assert!(!comp.try_take_into(&mut out));
         unsafe { libc::close(efd) };
+        drop(b);
+        std::fs::remove_file(p).ok();
+    }
+
+    /// A document that panics the worker mid-dispatch must fail only its
+    /// own slot; sibling documents, the worker threads, and later requests
+    /// all survive (serve-path panic isolation).
+    #[test]
+    fn panicking_document_fails_its_slot_not_the_server() {
+        let p = tmp("panic");
+        save_model_with_vocab(&tiny_model(5), None, &p).unwrap();
+        let registry = Arc::new(Registry::open(&p, 0, true).unwrap());
+        let stats = Arc::new(ServeMetrics::new());
+        const POISON: u32 = 31_337;
+        let cfg = BatcherConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait_us: 200,
+            queue_depth_max: 0,
+            kernel: KernelKind::Auto,
+            train: quick_train(),
+            panic_token: Some(POISON),
+        };
+        let b = Batcher::start(cfg, Arc::clone(&registry), Arc::clone(&stats));
+        let good = docs(4, 13);
+        let clean: Vec<f64> =
+            b.submit(&good, 5).into_iter().map(|r| r.unwrap().yhat).collect();
+
+        // Poisoned document sandwiched between healthy ones.
+        let mixed =
+            vec![good[0].clone(), vec![1, POISON, 2], good[1].clone(), good[2].clone()];
+        let res = b.submit(&mixed, 5);
+        assert_eq!(res[0].as_ref().unwrap().yhat, clean[0]);
+        let err = res[1].as_ref().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "got: {err}");
+        assert!(err.contains("poisoned document"), "panic payload lost: {err}");
+        assert_eq!(res[2].as_ref().unwrap().yhat, clean[1]);
+        assert_eq!(res[3].as_ref().unwrap().yhat, clean[2]);
+        assert_eq!(stats.errors.get(), 1, "each panic counts once into errors_total");
+
+        // The pool is still healthy and deterministic afterwards.
+        let again: Vec<f64> =
+            b.submit(&good, 5).into_iter().map(|r| r.unwrap().yhat).collect();
+        assert_eq!(again, clean, "post-panic predictions must not drift");
         drop(b);
         std::fs::remove_file(p).ok();
     }

@@ -205,6 +205,7 @@ fn pipeline_allocs_per_request(
             queue_depth_max: 0,
             kernel: cfg.sampler.kernel,
             train: cfg.train.clone(),
+            panic_token: None,
         },
         registry,
         stats,

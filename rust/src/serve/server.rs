@@ -170,6 +170,7 @@ impl Server {
                 queue_depth_max: cfg.serve.queue_depth_max,
                 kernel: cfg.sampler.kernel,
                 train: cfg.train.clone(),
+                panic_token: None,
             },
             Arc::clone(&registry),
             Arc::clone(&stats),

@@ -1,0 +1,269 @@
+//! Fault-injecting [`CkptFs`]: the checkpoint subsystem's crash simulator.
+//!
+//! `FailpointFs` wraps [`StdFs`] and counts every mutating operation
+//! (write / fsync / rename) in program order. A test arms a single failure
+//! at an exact operation index — the `FailKind` decides what the operation
+//! leaves on disk — and optionally marks the process "dead" from that point
+//! on, after which **every** subsequent operation fails. That models a hard
+//! crash (`kill -9`): the interrupted op's partial effects persist, and
+//! nothing else ever happens. Recovery code is then exercised against the
+//! exact on-disk state each crash window leaves behind (DESIGN.md
+//! §Durability, "Failpoint testing").
+//!
+//! Reads and directory listings are never failed: recovery runs on the
+//! *next* process, which sees a healthy filesystem containing whatever the
+//! crash left.
+
+use crate::ckpt::fs::{CkptFs, StdFs};
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What happens at the armed operation index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailKind {
+    /// `write` persists only a prefix of the payload, then errors — a torn
+    /// write (power loss mid-`write(2)`).
+    TornWrite { keep: usize },
+    /// `write` persists an arbitrary-length prefix (half the payload) and
+    /// *reports success* — a short write the caller never notices.
+    ShortWrite,
+    /// `write` persists the full payload with one bit flipped — media
+    /// corruption between write and read-back.
+    BitFlip { byte: usize, mask: u8 },
+    /// `fsync` fails (EIO); file contents may or may not be durable.
+    ErrFsync,
+    /// `rename` fails without renaming anything.
+    ErrRename,
+}
+
+struct Armed {
+    at: u64,
+    kind: FailKind,
+    /// After firing, treat the process as dead: all later mutating ops fail.
+    then_die: bool,
+}
+
+/// See module docs. Counted ops are write/fsync/rename, in call order.
+pub struct FailpointFs {
+    inner: StdFs,
+    ops: AtomicU64,
+    dead: AtomicBool,
+    armed: Mutex<Option<Armed>>,
+}
+
+impl Default for FailpointFs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FailpointFs {
+    pub fn new() -> FailpointFs {
+        FailpointFs {
+            inner: StdFs,
+            ops: AtomicU64::new(0),
+            dead: AtomicBool::new(false),
+            armed: Mutex::new(None),
+        }
+    }
+
+    /// Arm `kind` to fire at mutating-operation index `at` (0-based over
+    /// write/fsync/rename calls). With `then_die`, every operation after
+    /// the armed one also fails — a crash, not a transient error.
+    pub fn arm(&self, at: u64, kind: FailKind, then_die: bool) {
+        *self.armed.lock().unwrap() = Some(Armed { at, kind, then_die });
+    }
+
+    /// Mutating operations observed so far. Run the workload once against
+    /// a pristine `FailpointFs` to learn the op schedule, then arm replays
+    /// at each index.
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::SeqCst)
+    }
+
+    /// Has the armed failure fired (or was the fs killed)?
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    fn dead_err(&self) -> io::Error {
+        io::Error::other("failpoint: process dead")
+    }
+
+    /// Returns the armed kind if this op index is the trigger.
+    fn tick(&self) -> Result<Option<FailKind>, io::Error> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(self.dead_err());
+        }
+        let idx = self.ops.fetch_add(1, Ordering::SeqCst);
+        let mut armed = self.armed.lock().unwrap();
+        if let Some(a) = armed.as_ref() {
+            if a.at == idx {
+                let a = armed.take().unwrap();
+                if a.then_die {
+                    self.dead.store(true, Ordering::SeqCst);
+                }
+                return Ok(Some(a.kind));
+            }
+        }
+        Ok(None)
+    }
+}
+
+impl CkptFs for FailpointFs {
+    fn create_dir_all(&self, p: &Path) -> io::Result<()> {
+        // Not a counted op: directory creation is idempotent setup.
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(self.dead_err());
+        }
+        self.inner.create_dir_all(p)
+    }
+
+    fn write(&self, p: &Path, bytes: &[u8]) -> io::Result<()> {
+        match self.tick()? {
+            None => self.inner.write(p, bytes),
+            Some(FailKind::TornWrite { keep }) => {
+                let keep = keep.min(bytes.len());
+                self.inner.write(p, &bytes[..keep])?;
+                Err(io::Error::other("failpoint: torn write"))
+            }
+            Some(FailKind::ShortWrite) => self.inner.write(p, &bytes[..bytes.len() / 2]),
+            Some(FailKind::BitFlip { byte, mask }) => {
+                let mut copy = bytes.to_vec();
+                if !copy.is_empty() {
+                    let i = byte % copy.len();
+                    copy[i] ^= if mask == 0 { 1 } else { mask };
+                }
+                self.inner.write(p, &copy)
+            }
+            Some(FailKind::ErrFsync) | Some(FailKind::ErrRename) => {
+                // Armed for a different op kind than fired here: still fail
+                // loudly — an op-schedule drift should break the test, not
+                // silently pass.
+                Err(io::Error::other("failpoint: armed kind mismatches op"))
+            }
+        }
+    }
+
+    fn fsync(&self, p: &Path) -> io::Result<()> {
+        match self.tick()? {
+            None => self.inner.fsync(p),
+            Some(FailKind::ErrFsync) => Err(io::Error::other("failpoint: fsync EIO")),
+            Some(_) => Err(io::Error::other("failpoint: armed kind mismatches op")),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        match self.tick()? {
+            None => self.inner.rename(from, to),
+            Some(FailKind::ErrRename) => Err(io::Error::other("failpoint: rename EIO")),
+            Some(_) => Err(io::Error::other("failpoint: armed kind mismatches op")),
+        }
+    }
+
+    fn read(&self, p: &Path) -> io::Result<Vec<u8>> {
+        self.inner.read(p)
+    }
+
+    fn list_dir(&self, p: &Path) -> io::Result<Vec<String>> {
+        self.inner.list_dir(p)
+    }
+
+    fn remove_dir_all(&self, p: &Path) -> io::Result<()> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(self.dead_err());
+        }
+        self.inner.remove_dir_all(p)
+    }
+
+    fn exists(&self, p: &Path) -> bool {
+        self.inner.exists(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_failfs_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&p).ok();
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn clean_passthrough_counts_ops() {
+        let dir = tmpdir("count");
+        let fs = FailpointFs::new();
+        let a = dir.join("a");
+        let b = dir.join("b");
+        fs.write(&a, b"12345").unwrap(); // op 0
+        fs.fsync(&a).unwrap(); // op 1
+        fs.rename(&a, &b).unwrap(); // op 2
+        assert_eq!(fs.ops(), 3);
+        assert!(!fs.is_dead());
+        assert_eq!(fs.read(&b).unwrap(), b"12345");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_write_leaves_prefix_and_kills() {
+        let dir = tmpdir("torn");
+        let fs = FailpointFs::new();
+        let a = dir.join("a");
+        fs.arm(0, FailKind::TornWrite { keep: 3 }, true);
+        assert!(fs.write(&a, b"123456").is_err());
+        assert_eq!(std::fs::read(&a).unwrap(), b"123");
+        assert!(fs.is_dead());
+        // everything after the crash fails
+        assert!(fs.write(&dir.join("b"), b"x").is_err());
+        assert!(fs.fsync(&a).is_err());
+        assert!(fs.rename(&a, &dir.join("c")).is_err());
+        // but reads (the next process's recovery) still work
+        assert_eq!(fs.read(&a).unwrap(), b"123");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn short_write_reports_success_with_half_the_bytes() {
+        let dir = tmpdir("short");
+        let fs = FailpointFs::new();
+        let a = dir.join("a");
+        fs.arm(0, FailKind::ShortWrite, false);
+        fs.write(&a, b"12345678").unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), b"1234");
+        // not dead: later ops proceed
+        fs.write(&a, b"ok").unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), b"ok");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bitflip_corrupts_exactly_one_bit() {
+        let dir = tmpdir("flip");
+        let fs = FailpointFs::new();
+        let a = dir.join("a");
+        fs.arm(0, FailKind::BitFlip { byte: 2, mask: 0x08 }, false);
+        fs.write(&a, b"\x00\x00\x00\x00").unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), b"\x00\x00\x08\x00");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fsync_and_rename_failures_fire_at_index() {
+        let dir = tmpdir("errs");
+        let fs = FailpointFs::new();
+        let a = dir.join("a");
+        fs.write(&a, b"x").unwrap(); // op 0
+        fs.arm(1, FailKind::ErrFsync, false);
+        assert!(fs.fsync(&a).is_err()); // op 1 fires
+        fs.arm(2, FailKind::ErrRename, false);
+        assert!(fs.rename(&a, &dir.join("b")).is_err()); // op 2 fires
+        assert!(fs.exists(&a), "failed rename must not move the file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

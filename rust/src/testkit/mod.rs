@@ -4,6 +4,8 @@
 
 use crate::util::rng::Pcg64;
 
+pub mod failfs;
+
 /// Run `prop` for `cases` generated inputs. On panic, re-raises with the
 /// case seed in the message.
 pub fn forall<T: std::fmt::Debug>(

@@ -8,5 +8,6 @@ pub mod logging;
 pub mod math;
 pub mod pool;
 pub mod rng;
+pub mod signal;
 pub mod stats;
 pub mod timer;

@@ -81,6 +81,44 @@ pub struct sockaddr {
     pub sa_data: [u8; 14],
 }
 
+// ---------------------------------------------------------------------------
+// Signals — the graceful-shutdown surface `cfslda::util::signal` needs:
+// `sigaction` to install SIGINT/SIGTERM handlers, `raise` for tests.
+
+pub const SIGINT: c_int = 2;
+pub const SIGUSR1: c_int = 10;
+pub const SIGTERM: c_int = 15;
+
+/// Restart interrupted syscalls instead of surfacing EINTR everywhere.
+pub const SA_RESTART: c_int = 0x1000_0000;
+
+/// Kernel signal mask: 1024 bits on Linux, though glibc's `sigset_t` is
+/// what `sigaction(2)` takes — 128 bytes on x86_64/aarch64.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct sigset_t {
+    pub __val: [u64; 16],
+}
+
+impl sigset_t {
+    /// An empty mask (`sigemptyset`): block nothing extra in the handler.
+    pub const fn empty() -> sigset_t {
+        sigset_t { __val: [0; 16] }
+    }
+}
+
+/// glibc `struct sigaction` (Linux x86_64/aarch64 layout: handler first,
+/// then the 128-byte mask, flags, and the unused restorer slot).
+#[repr(C)]
+pub struct sigaction {
+    /// `sa_handler` / `sa_sigaction` union slot — an
+    /// `extern "C" fn(c_int)` pointer cast to usize when SA_SIGINFO is off.
+    pub sa_sigaction: usize,
+    pub sa_mask: sigset_t,
+    pub sa_flags: c_int,
+    pub sa_restorer: usize,
+}
+
 extern "C" {
     pub fn clock_gettime(clk_id: c_int, tp: *mut timespec) -> c_int;
 
@@ -101,6 +139,9 @@ extern "C" {
     pub fn read(fd: c_int, buf: *mut c_void, count: size_t) -> ssize_t;
     pub fn write(fd: c_int, buf: *const c_void, count: size_t) -> ssize_t;
     pub fn close(fd: c_int) -> c_int;
+
+    pub fn sigaction(signum: c_int, act: *const sigaction, oldact: *mut sigaction) -> c_int;
+    pub fn raise(signum: c_int) -> c_int;
 }
 
 #[cfg(test)]
@@ -152,6 +193,46 @@ mod tests {
             assert_eq!(epoll_ctl(ep, EPOLL_CTL_DEL, ev, std::ptr::null_mut()), 0);
             assert_eq!(close(ev), 0);
             assert_eq!(close(ep), 0);
+        }
+    }
+
+    #[test]
+    fn sigaction_installs_handler_and_raise_delivers() {
+        use std::sync::atomic::{AtomicI32, Ordering};
+        static SEEN: AtomicI32 = AtomicI32::new(0);
+        extern "C" fn on_signal(sig: c_int) {
+            SEEN.store(sig, Ordering::SeqCst);
+        }
+        unsafe {
+            // SIGUSR1, not SIGTERM: the default SIGTERM disposition kills
+            // the test process if the shim layout were wrong, and other
+            // tests install their own SIGTERM handlers.
+            let act = sigaction {
+                sa_sigaction: on_signal as usize,
+                sa_mask: sigset_t::empty(),
+                sa_flags: SA_RESTART,
+                sa_restorer: 0,
+            };
+            let mut old = sigaction {
+                sa_sigaction: 0,
+                sa_mask: sigset_t::empty(),
+                sa_flags: 0,
+                sa_restorer: 0,
+            };
+            assert_eq!(sigaction(SIGUSR1, &act, &mut old), 0);
+            assert_eq!(raise(SIGUSR1), 0);
+            assert_eq!(SEEN.load(Ordering::SeqCst), SIGUSR1);
+            // Round-trip: re-reading the disposition returns our handler.
+            let mut cur = sigaction {
+                sa_sigaction: 0,
+                sa_mask: sigset_t::empty(),
+                sa_flags: 0,
+                sa_restorer: 0,
+            };
+            assert_eq!(sigaction(SIGUSR1, std::ptr::null(), &mut cur), 0);
+            assert_eq!(cur.sa_sigaction, on_signal as usize);
+            // Restore whatever was installed before.
+            assert_eq!(sigaction(SIGUSR1, &old, std::ptr::null_mut()), 0);
         }
     }
 
