@@ -23,6 +23,11 @@
 //!   shards, **arena** (zero-copy `CorpusView`s) vs **baseline** (the
 //!   legacy deep-copy `select` path), with copied/referenced byte
 //!   accounting, plus end-to-end shard training tokens/s on each layout.
+//! * `arena-io`   — the out-of-core `CFSARENA1` path (DESIGN.md
+//!   §Out-of-core): streaming pack time, cold/warm `mmap` open+validate
+//!   time, and training tokens/s through the mapping vs the heap corpus
+//!   (the mmap-tax check: the two must be indistinguishable once pages
+//!   are resident).
 //!
 //! Emits `BENCH_gibbs_hotpath.json` at the repo root (tokens/sec per kernel
 //! per T ∈ {16, 64, 256, 1024}, kernel-over-kernel speedups, and the
@@ -31,6 +36,7 @@
 use cfslda::bench_harness::{bench, bench_throughput, quick_mode, render_table, BenchResult};
 use cfslda::config::json::{self, Value};
 use cfslda::config::schema::{EngineKind, ExperimentConfig, KernelKind};
+use cfslda::data::arena_file::{write_arena, ArenaMap};
 use cfslda::data::partition::{random_shards, shard_corpora, shard_views};
 use cfslda::data::synthetic::{generate_corpus, SyntheticSpec};
 use cfslda::parallel::comm::view_setup_bytes;
@@ -281,6 +287,76 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // === Arena I/O: pack + mmap open + train-through-the-mapping.
+    let mut arena_entries: Vec<Value> = Vec::new();
+    {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.engine = EngineKind::Native;
+        cfg.model.topics = 16;
+        cfg.train.sweeps = 2;
+        cfg.train.burnin = 2;
+        cfg.train.eta_every = 100;
+        let path = std::env::temp_dir().join(format!("cfslda_bench_{}.arena", std::process::id()));
+        let io_iters = if quick { 5 } else { 20 };
+
+        let r_pack = bench("arena-io/pack", 1, io_iters, || {
+            write_arena(&corpus, &path).unwrap();
+        });
+        let file_bytes = std::fs::metadata(&path)?.len();
+
+        // "Cold" = the first open after the pack above (the page cache is
+        // as unfriendly as a userspace bench can make it); "warm" = the
+        // steady state. Both include the full checksum validation pass —
+        // the dominant open cost by design (hostile-input contract).
+        let r_open_cold = bench("arena-io/open-cold", 0, 1, || {
+            black_box(ArenaMap::open(&path).unwrap().num_tokens());
+        });
+        let r_open_warm = bench("arena-io/open-warm", 1, io_iters, || {
+            black_box(ArenaMap::open(&path).unwrap().num_tokens());
+        });
+
+        let map = ArenaMap::open(&path)?;
+        let train_work = tokens * cfg.train.sweeps as f64;
+        let r_train_mmap = bench_throughput("arena-io/train mmap", 0, iters, train_work, || {
+            let mut r = Pcg64::seed_from_u64(4242);
+            train(map.view(), &cfg, &engine, &mut r).unwrap();
+        });
+        let r_train_heap = bench_throughput("arena-io/train heap", 0, iters, train_work, || {
+            let mut r = Pcg64::seed_from_u64(4242);
+            train(&corpus, &cfg, &engine, &mut r).unwrap();
+        });
+        arena_entries.push(Value::object(vec![
+            ("file_bytes", Value::Number(file_bytes as f64)),
+            ("pack_secs", Value::Number(r_pack.median())),
+            ("open_cold_secs", Value::Number(r_open_cold.median())),
+            ("open_warm_secs", Value::Number(r_open_warm.median())),
+            (
+                "train_mmap_tokens_per_sec",
+                Value::Number(r_train_mmap.throughput().unwrap_or(0.0)),
+            ),
+            (
+                "train_heap_tokens_per_sec",
+                Value::Number(r_train_heap.throughput().unwrap_or(0.0)),
+            ),
+        ]));
+        println!(
+            "arena-io: {file_bytes}B packed in {:.2}ms, open cold {:.2}ms / warm {:.2}ms, \
+             train mmap {:.0} tok/s vs heap {:.0} tok/s",
+            r_pack.median() * 1e3,
+            r_open_cold.median() * 1e3,
+            r_open_warm.median() * 1e3,
+            r_train_mmap.throughput().unwrap_or(0.0),
+            r_train_heap.throughput().unwrap_or(0.0),
+        );
+        results.push(r_pack);
+        results.push(r_open_cold);
+        results.push(r_open_warm);
+        results.push(r_train_mmap);
+        results.push(r_train_heap);
+        drop(map);
+        std::fs::remove_file(&path).ok();
+    }
+
     println!(
         "{}",
         render_table(
@@ -351,6 +427,7 @@ fn main() -> anyhow::Result<()> {
         ("results", Value::Array(entries)),
         ("speedups", Value::Array(speedups)),
         ("shard_setup", Value::Array(shard_entries)),
+        ("arena_io", Value::Array(arena_entries)),
     ]);
     // Repo root sits one level above the cargo package (rust/); fall back
     // to the working directory when run from the root itself.

@@ -1,5 +1,6 @@
-//! Tiny argument parser: one positional command, then `--key value` flags
-//! and bare `--switch`es.
+//! Tiny argument parser: a positional command, an optional positional
+//! subcommand (`cfslda arena pack …`), then `--key value` flags and bare
+//! `--switch`es.
 
 use std::collections::BTreeMap;
 
@@ -7,6 +8,7 @@ use std::collections::BTreeMap;
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: Option<String>,
+    pub subcommand: Option<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
 }
@@ -29,6 +31,8 @@ impl Args {
                 }
             } else if out.command.is_none() {
                 out.command = Some(a);
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
             } else {
                 anyhow::bail!("unexpected positional argument '{a}'");
             }
@@ -108,8 +112,19 @@ mod tests {
     }
 
     #[test]
+    fn subcommand_is_the_second_positional() {
+        let a = parse("arena pack --input x.bow --out x.arena");
+        assert_eq!(a.command.as_deref(), Some("arena"));
+        assert_eq!(a.subcommand.as_deref(), Some("pack"));
+        assert_eq!(a.get("input"), Some("x.bow"));
+        // One positional leaves the subcommand empty.
+        assert_eq!(parse("train").subcommand, None);
+    }
+
+    #[test]
     fn errors() {
-        assert!(Args::parse(vec!["a".into(), "b".into()]).is_err());
+        // Two positionals parse (command + subcommand); a third is an error.
+        assert!(Args::parse(vec!["a".into(), "b".into(), "c".into()]).is_err());
         assert!(Args::parse(vec!["--".into()]).is_err());
         assert!(parse("x --n seven").get_usize("n", 1).is_err());
     }

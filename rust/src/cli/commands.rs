@@ -2,10 +2,12 @@
 
 use super::args::Args;
 use crate::ckpt::{config_fingerprint, GenCoordinator, ShardState, StdFs, Store};
+use crate::combine::ShardArtifact;
 use crate::config::json::{self, Value};
 use crate::config::schema::{
     EngineKind, ExperimentConfig, KernelKind, RespMode, ResponseKind, ServeBackend,
 };
+use crate::data::arena_file::{pack_file, ArenaMap};
 use crate::data::loader;
 use crate::data::partition::train_test_split;
 use crate::data::stats::{corpus_stats, label_report};
@@ -15,6 +17,10 @@ use crate::data::vocab::Vocab;
 use crate::experiments::{fig123, fig5, runner};
 use crate::model::persist::{load_model, load_model_full, save_model_with_vocab};
 use crate::parallel::leader::{run_with_engine_ckpt, Algorithm, CkptPlan, RunOutcome};
+use crate::parallel::multiproc::{
+    combine_artifacts, load_artifact_dir, run_train_shard, ShardRunOutcome, ShardSpec,
+    TrainShardJob,
+};
 use crate::runtime::EngineHandle;
 use crate::sampler::{gibbs_predict, gibbs_train};
 use crate::serve::bench::{run_bench, BenchOptions};
@@ -114,6 +120,23 @@ COMMANDS:
               [--batch-list 1,8] [--kernel-list sparse,alias] [--clients N]
               [--requests N] [--conns-list 64,1024,4096]
               [--backend-list threads,epoll] [--json F]
+  arena pack  Pack a corpus into the mmap-ready CFSARENA1 token arena
+              (DESIGN.md §Out-of-core; streams the input, O(docs) RAM)
+              --input FILE.bow|FILE.jsonl --out FILE.arena
+  train-shard Train one shard of an M-process communication-free run over
+              an mmapped arena and persist its artifact
+              --arena FILE.arena --shard j/M
+              [--algorithm simple|weighted|median] [--train N]
+              [--out FILE.shrd | --out-dir DIR] [--config CFG.json]
+              [--engine E] [--kernel K] [--seed S] [--json OUT.json]
+              [--checkpoint-every N] [--checkpoint-dir D] [--resume D]
+              Every process replays the leader's RNG plan, so M such
+              processes + `combine` are byte-identical to `run` with the
+              same seed/--train and `[parallel] shards = M`. The shard
+              processes share the arena read-only through the page cache
+              and never talk: setup copies zero bytes.
+  combine     Combine M shard artifacts into the global prediction
+              --dir DIR [--engine E] [--json OUT.json]
   experiment  Four-algorithm comparison (paper Fig 6 / Fig 7)
               --fig 6|7 [--scale F] [--runs N] [--engine E]
               [--kernel dense|sparse|alias|auto] [--resp-mode exact|mh|auto]
@@ -306,6 +329,151 @@ fn cmd_run_with_stop(a: &Args, stop_override: Option<&AtomicBool>) -> anyhow::Re
             ("acc", Value::Number(out.test_metrics.acc)),
             ("r2", Value::Number(out.test_metrics.r2)),
             ("n_test", Value::Number(out.test_metrics.n as f64)),
+            ("yhat", Value::from_f64_slice(&out.yhat)),
+        ]);
+        std::fs::write(path, json::to_string_pretty(&v))?;
+        println!("metrics written to {path}");
+    }
+    Ok(0)
+}
+
+/// `cfslda arena <subcommand>`: out-of-core arena tooling. `pack` streams
+/// a corpus into the mmap-ready `CFSARENA1` format.
+pub fn cmd_arena(a: &Args) -> anyhow::Result<i32> {
+    match a.subcommand.as_deref() {
+        Some("pack") => {
+            let input = a.get("input").ok_or_else(|| anyhow::anyhow!("--input is required"))?;
+            let out = a.get("out").ok_or_else(|| anyhow::anyhow!("--out is required"))?;
+            let s = pack_file(Path::new(input), Path::new(out))?;
+            println!(
+                "packed {input} -> {out}: docs={} tokens={} vocab={} (skipped {} empty)",
+                s.docs, s.tokens, s.vocab, s.skipped_empty
+            );
+            Ok(0)
+        }
+        other => anyhow::bail!(
+            "usage: cfslda arena pack --input FILE --out FILE.arena (got subcommand '{}')",
+            other.unwrap_or("<none>")
+        ),
+    }
+}
+
+pub fn cmd_train_shard(a: &Args) -> anyhow::Result<i32> {
+    cmd_train_shard_with_stop(a, None)
+}
+
+/// [`cmd_train_shard`] with an injectable stop flag (see
+/// [`cmd_run_with_stop`]).
+fn cmd_train_shard_with_stop(
+    a: &Args,
+    stop_override: Option<&AtomicBool>,
+) -> anyhow::Result<i32> {
+    let arena_path = a.get("arena").ok_or_else(|| anyhow::anyhow!("--arena is required"))?;
+    let spec = ShardSpec::parse(
+        a.get("shard").ok_or_else(|| anyhow::anyhow!("--shard j/M is required"))?,
+    )?;
+    let algo = Algorithm::parse(a.get_or("algorithm", "simple-average"))?;
+    let mut cfg = match a.get("config") {
+        Some(p) => ExperimentConfig::load(p)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(e) = a.get("engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    apply_kernel_flag(a, &mut cfg)?;
+    cfg.seed = a.get_u64("seed", cfg.seed)?;
+    let resume = apply_ckpt_flags(a, &mut cfg)?;
+    let arena = ArenaMap::open(Path::new(arena_path))?;
+    let n_train = a.get_usize("train", arena.num_docs() * 3 / 4)?;
+    let out = match a.get("out") {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(a.get_or("out-dir", "."))
+            .join(ShardArtifact::file_name(spec.shard as u32, spec.m as u32)),
+    };
+    let engine = engine_from_args(a)?;
+    let stop = if ckpt_enabled(&cfg) { Some(stop_flag(stop_override)?) } else { None };
+    let outcome = run_train_shard(TrainShardJob {
+        arena: &arena,
+        cfg: &cfg,
+        engine: &engine,
+        algo,
+        spec,
+        n_train,
+        out: out.clone(),
+        resume,
+        stop,
+    })?;
+    let (artifact, comm) = match outcome {
+        ShardRunOutcome::Done { artifact, comm } => (artifact, comm),
+        ShardRunOutcome::Interrupted { next_sweep } => {
+            println!(
+                "interrupted cleanly at checkpoint boundary (sweep {next_sweep} of {}); \
+                 state saved under {}",
+                cfg.train.sweeps, cfg.train.checkpoint_dir
+            );
+            println!(
+                "resume with: cfslda train-shard --arena {arena_path} --shard {}/{} \
+                 --algorithm {} --checkpoint-every {} --resume {}",
+                spec.shard,
+                spec.m,
+                algo.name(),
+                cfg.train.checkpoint_every,
+                cfg.train.checkpoint_dir
+            );
+            return Ok(0);
+        }
+    };
+    println!(
+        "shard {}/{}: trained {} docs ({} tokens sampled), artifact {}",
+        spec.shard,
+        spec.m,
+        artifact.docs,
+        artifact.tokens_sampled,
+        out.display()
+    );
+    println!("comm[{}]", comm.render());
+    if let Some(path) = a.get("json") {
+        let v = Value::object(vec![
+            ("shard", Value::Number(spec.shard as f64)),
+            ("m", Value::Number(spec.m as f64)),
+            ("docs", Value::Number(artifact.docs as f64)),
+            ("tokens_sampled", Value::Number(artifact.tokens_sampled as f64)),
+            ("setup_copied_bytes", Value::Number(comm.setup_copied_bytes as f64)),
+            ("setup_referenced_bytes", Value::Number(comm.setup_referenced_bytes as f64)),
+            ("gather_bytes", Value::Number(comm.gather_bytes as f64)),
+            ("sampling_syncs", Value::Number(comm.sampling_syncs as f64)),
+            ("artifact", Value::String(out.display().to_string())),
+        ]);
+        std::fs::write(path, json::to_string_pretty(&v))?;
+    }
+    Ok(0)
+}
+
+pub fn cmd_combine(a: &Args) -> anyhow::Result<i32> {
+    let dir = a.get("dir").ok_or_else(|| anyhow::anyhow!("--dir is required"))?;
+    let artifacts = load_artifact_dir(Path::new(dir))?;
+    let engine = engine_from_args(a)?;
+    let out = combine_artifacts(&engine, &artifacts)?;
+    let binary = artifacts[0].response == ResponseKind::Binary;
+    println!(
+        "{} ({} shards): {} comm[{}]",
+        out.algorithm.name(),
+        artifacts.len(),
+        out.test_metrics.render(binary),
+        out.comm.render()
+    );
+    if let Some(path) = a.get("json") {
+        let v = Value::object(vec![
+            ("algorithm", Value::String(out.algorithm.name().into())),
+            ("shards", Value::Number(artifacts.len() as f64)),
+            ("mse", Value::Number(out.test_metrics.mse)),
+            ("acc", Value::Number(out.test_metrics.acc)),
+            ("r2", Value::Number(out.test_metrics.r2)),
+            ("n_test", Value::Number(out.test_metrics.n as f64)),
+            ("yhat", Value::from_f64_slice(&out.yhat)),
+            ("weights", Value::from_f64_slice(&out.weights)),
+            ("setup_copied_bytes", Value::Number(out.comm.setup_copied_bytes as f64)),
+            ("gather_bytes", Value::Number(out.comm.gather_bytes as f64)),
         ]);
         std::fs::write(path, json::to_string_pretty(&v))?;
         println!("metrics written to {path}");
@@ -732,6 +900,9 @@ pub fn dispatch(args: Args) -> anyhow::Result<i32> {
         Some("gen-data") => cmd_gen_data(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("run") => cmd_run(&args),
+        Some("arena") => cmd_arena(&args),
+        Some("train-shard") => cmd_train_shard(&args),
+        Some("combine") => cmd_combine(&args),
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
         Some("top-words") => cmd_top_words(&args),
@@ -1022,6 +1193,165 @@ mod tests {
         for d in [dir_ref, dir] {
             std::fs::remove_dir_all(d).ok();
         }
+    }
+
+    /// The tentpole's CLI acceptance path: `arena pack` + `train-shard`×M
+    /// (separate invocations, as separate OS processes would run them) +
+    /// `combine` must reproduce `cfslda run` bit-for-bit — same yhat bits,
+    /// same metrics — with zero setup bytes copied per shard.
+    #[test]
+    fn arena_pack_train_shard_combine_matches_run() {
+        let bow = tmp("mp.bow");
+        let arena = tmp("mp.arena");
+        let cfgf = tmp("mp_cfg.json");
+        let dir = tmp("mp_shards");
+        let j_run = tmp("mp_run.json");
+        let j_comb = tmp("mp_comb.json");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        cmd_gen_data(&parse(&format!(
+            "gen-data --out {bow} --preset small --docs 64 --seed 21"
+        )))
+        .unwrap();
+        // `run` partitions into [parallel] shards; train-shard's M must
+        // match it for byte identity.
+        std::fs::write(
+            &cfgf,
+            r#"{"train": {"sweeps": 10, "burnin": 2, "eta_every": 2},
+                "parallel": {"shards": 3, "threads": 2}}"#,
+        )
+        .unwrap();
+        cmd_run(&parse(&format!(
+            "run --data {bow} --algorithm weighted --train 48 --engine native \
+             --seed 21 --config {cfgf} --json {j_run}"
+        )))
+        .unwrap();
+        assert_eq!(
+            dispatch(parse(&format!("arena pack --input {bow} --out {arena}"))).unwrap(),
+            0
+        );
+        for j in 0..3 {
+            let j_shard = tmp(&format!("mp_shard{j}.json"));
+            let rc = cmd_train_shard(&parse(&format!(
+                "train-shard --arena {arena} --shard {j}/3 --algorithm weighted \
+                 --train 48 --engine native --seed 21 --config {cfgf} \
+                 --out-dir {dir} --json {j_shard}"
+            )))
+            .unwrap();
+            assert_eq!(rc, 0);
+            let v = json::parse(&std::fs::read_to_string(&j_shard).unwrap()).unwrap();
+            assert_eq!(v.get("setup_copied_bytes").unwrap().as_f64(), Some(0.0));
+            assert!(v.get("setup_referenced_bytes").unwrap().as_f64().unwrap() > 0.0);
+            assert_eq!(v.get("sampling_syncs").unwrap().as_f64(), Some(0.0));
+            std::fs::remove_file(j_shard).ok();
+        }
+        let rc = cmd_combine(&parse(&format!(
+            "combine --dir {dir} --engine native --json {j_comb}"
+        )))
+        .unwrap();
+        assert_eq!(rc, 0);
+        let vr = json::parse(&std::fs::read_to_string(&j_run).unwrap()).unwrap();
+        let vc = json::parse(&std::fs::read_to_string(&j_comb).unwrap()).unwrap();
+        assert_eq!(
+            vr.get("yhat"),
+            vc.get("yhat"),
+            "multi-process yhat must match the in-process run exactly"
+        );
+        for k in ["mse", "acc", "r2"] {
+            assert_eq!(vs_bits(&vr, k), vs_bits(&vc, k), "{k} must match bit-for-bit");
+        }
+        assert_eq!(vc.get("algorithm").unwrap().as_str(), Some("weighted-average"));
+        assert_eq!(vc.get("weights").unwrap().as_array().unwrap().len(), 3);
+        for f in [bow, arena, cfgf, j_run, j_comb] {
+            std::fs::remove_file(f).ok();
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    fn vs_bits(v: &Value, k: &str) -> u64 {
+        v.get(k).unwrap().as_f64().unwrap().to_bits()
+    }
+
+    /// A shard process interrupted at a checkpoint boundary and resumed
+    /// must persist a byte-identical artifact (the CLI leg of the
+    /// multi-process crash-recovery story; CI additionally kills a real
+    /// process with SIGKILL).
+    #[test]
+    fn train_shard_interrupt_resume_byte_identical() {
+        use std::sync::atomic::AtomicBool;
+        let bow = tmp("tsk.bow");
+        let arena = tmp("tsk.arena");
+        let cfgf = tmp("tsk_cfg.json");
+        let ref_art = tmp("tsk_ref.shrd");
+        let res_art = tmp("tsk_res.shrd");
+        let dir_a = tmp("tsk_ref_dir");
+        let dir_b = tmp("tsk_res_dir");
+        for d in [&dir_a, &dir_b] {
+            std::fs::remove_dir_all(d).ok();
+        }
+        cmd_gen_data(&parse(&format!(
+            "gen-data --out {bow} --preset small --docs 60 --seed 31"
+        )))
+        .unwrap();
+        std::fs::write(
+            &cfgf,
+            r#"{"train": {"sweeps": 10, "burnin": 2, "eta_every": 2},
+                "parallel": {"shards": 2, "threads": 1}}"#,
+        )
+        .unwrap();
+        let flags = format!(
+            "train-shard --arena {arena} --shard 1/2 --algorithm simple --train 44 \
+             --engine native --seed 31 --config {cfgf} --checkpoint-every 4"
+        );
+        assert_eq!(
+            dispatch(parse(&format!("arena pack --input {bow} --out {arena}"))).unwrap(),
+            0
+        );
+        // Reference: same cadence (it is chain-defining), never stopped.
+        let go = AtomicBool::new(false);
+        let rc = cmd_train_shard_with_stop(
+            &parse(&format!("{flags} --checkpoint-dir {dir_a} --out {ref_art}")),
+            Some(&go),
+        )
+        .unwrap();
+        assert_eq!(rc, 0);
+        // Interrupted at the first boundary: no artifact yet.
+        let stop = AtomicBool::new(true);
+        let rc = cmd_train_shard_with_stop(
+            &parse(&format!("{flags} --checkpoint-dir {dir_b} --out {res_art}")),
+            Some(&stop),
+        )
+        .unwrap();
+        assert_eq!(rc, 0);
+        assert!(
+            !Path::new(&res_art).exists(),
+            "an interrupted shard must not write its artifact"
+        );
+        // Resume to completion: artifact bytes must match the reference.
+        let rc = cmd_train_shard_with_stop(
+            &parse(&format!("{flags} --resume {dir_b} --out {res_art}")),
+            Some(&go),
+        )
+        .unwrap();
+        assert_eq!(rc, 0);
+        assert_eq!(
+            std::fs::read(&ref_art).unwrap(),
+            std::fs::read(&res_art).unwrap(),
+            "resumed shard artifact must be byte-identical"
+        );
+        for f in [bow, arena, cfgf, ref_art, res_art] {
+            std::fs::remove_file(f).ok();
+        }
+        for d in [dir_a, dir_b] {
+            std::fs::remove_dir_all(d).ok();
+        }
+    }
+
+    #[test]
+    fn arena_subcommand_validation() {
+        assert!(cmd_arena(&parse("arena")).is_err());
+        assert!(cmd_arena(&parse("arena unpack")).is_err());
+        assert!(cmd_arena(&parse("arena pack --out x")).is_err());
     }
 
     #[test]

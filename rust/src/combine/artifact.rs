@@ -1,0 +1,444 @@
+//! `CFSSHRD1` shard artifacts: the gather leg of multi-process training.
+//!
+//! `cfslda train-shard` persists one of these per worker process;
+//! `cfslda combine` loads all M and applies the paper's combination rules.
+//! The artifact carries exactly what [`run_prediction_combining`] consumes
+//! from an in-process [`WorkerOutput`] — the local model, the shard's test
+//! predictions, the test labels (so combining is standalone), and the
+//! full-train quality pair behind the weighted rules — plus the config
+//! fingerprint and `(shard_id, m)` coordinates so `combine` can refuse
+//! mixing artifacts from different runs.
+//!
+//! Framing and hostile-input contract are the `ckpt/format` ones: 8-byte
+//! magic | little-endian body | trailing FNV-1a-64, checksum verified
+//! before structure, every length proven byte-backed before allocation.
+//!
+//! [`run_prediction_combining`]: crate::parallel::leader
+//! [`WorkerOutput`]: crate::parallel::worker::WorkerOutput
+
+use crate::config::schema::ResponseKind;
+use crate::model::persist::fnv1a;
+use crate::model::slda::SldaModel;
+use anyhow::bail;
+
+pub const ARTIFACT_MAGIC: &[u8; 8] = b"CFSSHRD1";
+
+/// Plausibility ceilings (shared with the model loader / ckpt formats).
+const MAX_T: usize = 1 << 16;
+const MAX_W: usize = 1 << 28;
+const MAX_D: usize = 1 << 28;
+const MAX_SHARDS: usize = 1 << 10;
+const MAX_NAME: usize = 64;
+
+/// Everything one `train-shard` process hands to `combine`.
+#[derive(Clone, Debug)]
+pub struct ShardArtifact {
+    /// [`config_fingerprint`] of the producing run — `combine` requires all
+    /// M artifacts to agree.
+    ///
+    /// [`config_fingerprint`]: crate::ckpt::config_fingerprint
+    pub fingerprint: u64,
+    /// Combination algorithm name (`Algorithm::name()` of the run).
+    pub algorithm: String,
+    pub shard_id: u32,
+    /// Total shard count M of the run.
+    pub m: u32,
+    pub response: ResponseKind,
+    /// This shard's local model (eta, phi, rho, alpha, train quality).
+    pub model: SldaModel,
+    /// Local predictions on the shared test set.
+    pub test_yhat: Vec<f64>,
+    /// Test labels, in the same order (every artifact carries a copy;
+    /// `combine` cross-checks them bit-for-bit across shards).
+    pub test_labels: Vec<f64>,
+    /// Full-train quality `(mse, acc)` — present for the weighted rules.
+    pub full_train_quality: Option<(f64, f64)>,
+    pub tokens_sampled: u64,
+    /// Documents in this shard.
+    pub docs: u64,
+}
+
+fn frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + body.len() + 8);
+    out.extend_from_slice(ARTIFACT_MAGIC);
+    out.extend_from_slice(body);
+    out.extend_from_slice(&fnv1a(body).to_le_bytes());
+    out
+}
+
+fn unframe(bytes: &[u8]) -> anyhow::Result<&[u8]> {
+    if bytes.len() < 16 {
+        bail!("truncated shard artifact: {} bytes, need at least 16", bytes.len());
+    }
+    if &bytes[..8] != ARTIFACT_MAGIC {
+        bail!("not a shard artifact (bad magic {:02x?}, want \"CFSSHRD1\")", &bytes[..8]);
+    }
+    let (body, ck) = bytes[8..].split_at(bytes.len() - 16);
+    let want = u64::from_le_bytes(ck.try_into().unwrap());
+    if fnv1a(body) != want {
+        bail!("shard artifact checksum mismatch — corrupted file");
+    }
+    Ok(body)
+}
+
+/// Bounds-checked little-endian cursor (the `ckpt/format` idiom).
+struct Cur<'a> {
+    body: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let avail = self.body.len() - self.off;
+        if n > avail {
+            bail!(
+                "truncated shard artifact body at offset {}: need {n} bytes, {avail} available",
+                self.off
+            );
+        }
+        let s = &self.body[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn ensure_backed(&self, n: usize, elem_bytes: usize, field: &str) -> anyhow::Result<()> {
+        let need = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| anyhow::anyhow!("artifact length {n} for '{field}' overflows"))?;
+        let avail = self.body.len() - self.off;
+        if need > avail {
+            bail!(
+                "truncated shard artifact body at offset {}: '{field}' needs {need} bytes, \
+                 {avail} available",
+                self.off
+            );
+        }
+        Ok(())
+    }
+
+    fn vec_f32(&mut self, n: usize, field: &str) -> anyhow::Result<Vec<f32>> {
+        self.ensure_backed(n, 4, field)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn vec_f64(&mut self, n: usize, field: &str) -> anyhow::Result<Vec<f64>> {
+        self.ensure_backed(n, 8, field)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        if self.off != self.body.len() {
+            bail!(
+                "trailing bytes in shard artifact body: {} past offset {}",
+                self.body.len() - self.off,
+                self.off
+            );
+        }
+        Ok(())
+    }
+}
+
+impl ShardArtifact {
+    pub fn encode(&self) -> Vec<u8> {
+        let m = &self.model;
+        let mut b = Vec::with_capacity(
+            128 + m.eta.len() * 8 + m.phi.len() * 4 + self.test_yhat.len() * 16,
+        );
+        b.extend_from_slice(&self.fingerprint.to_le_bytes());
+        debug_assert!(self.algorithm.len() <= MAX_NAME);
+        b.push(self.algorithm.len() as u8);
+        b.extend_from_slice(self.algorithm.as_bytes());
+        b.extend_from_slice(&self.shard_id.to_le_bytes());
+        b.extend_from_slice(&self.m.to_le_bytes());
+        b.push(match self.response {
+            ResponseKind::Continuous => 0,
+            ResponseKind::Binary => 1,
+        });
+        b.extend_from_slice(&(m.t as u32).to_le_bytes());
+        b.extend_from_slice(&(m.w as u32).to_le_bytes());
+        b.extend_from_slice(&m.rho.to_le_bytes());
+        b.extend_from_slice(&m.alpha.to_le_bytes());
+        b.extend_from_slice(&m.train_mse.to_le_bytes());
+        b.extend_from_slice(&m.train_acc.to_le_bytes());
+        for &e in &m.eta {
+            b.extend_from_slice(&e.to_le_bytes());
+        }
+        for &p in &m.phi {
+            b.extend_from_slice(&p.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.test_yhat.len() as u64).to_le_bytes());
+        for &y in &self.test_yhat {
+            b.extend_from_slice(&y.to_le_bytes());
+        }
+        for &y in &self.test_labels {
+            b.extend_from_slice(&y.to_le_bytes());
+        }
+        match self.full_train_quality {
+            Some((mse, acc)) => {
+                b.push(1);
+                b.extend_from_slice(&mse.to_le_bytes());
+                b.extend_from_slice(&acc.to_le_bytes());
+            }
+            None => b.push(0),
+        }
+        b.extend_from_slice(&self.tokens_sampled.to_le_bytes());
+        b.extend_from_slice(&self.docs.to_le_bytes());
+        frame(&b)
+    }
+
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<ShardArtifact> {
+        let body = unframe(bytes)?;
+        let mut c = Cur { body, off: 0 };
+        let fingerprint = c.u64()?;
+        let name_len = c.u8()? as usize;
+        if name_len == 0 || name_len > MAX_NAME {
+            bail!("implausible algorithm name length {name_len}");
+        }
+        let algorithm = std::str::from_utf8(c.take(name_len)?)
+            .map_err(|_| anyhow::anyhow!("algorithm name is not UTF-8"))?
+            .to_string();
+        let shard_id = c.u32()?;
+        let m = c.u32()?;
+        if m == 0 || m as usize > MAX_SHARDS || shard_id >= m {
+            bail!("implausible shard coordinates {shard_id}/{m}");
+        }
+        let response = match c.u8()? {
+            0 => ResponseKind::Continuous,
+            1 => ResponseKind::Binary,
+            x => bail!("bad response kind byte {x}"),
+        };
+        let t = c.u32()? as usize;
+        let w = c.u32()? as usize;
+        if t < 2 || t > MAX_T || w == 0 || w > MAX_W {
+            bail!("implausible model dims t={t} w={w}");
+        }
+        let rho = c.f64()?;
+        let alpha = c.f64()?;
+        let train_mse = c.f64()?;
+        let train_acc = c.f64()?;
+        let eta = c.vec_f64(t, "eta")?;
+        let phi = c.vec_f32(w.checked_mul(t).unwrap_or(usize::MAX), "phi")?;
+        let n_test = c.u64()? as usize;
+        if n_test > MAX_D {
+            bail!("implausible test-set size {n_test}");
+        }
+        let test_yhat = c.vec_f64(n_test, "test_yhat")?;
+        let test_labels = c.vec_f64(n_test, "test_labels")?;
+        let full_train_quality = match c.u8()? {
+            0 => None,
+            1 => Some((c.f64()?, c.f64()?)),
+            x => bail!("bad full-train flag {x}"),
+        };
+        let tokens_sampled = c.u64()?;
+        let docs = c.u64()?;
+        c.done()?;
+        Ok(ShardArtifact {
+            fingerprint,
+            algorithm,
+            shard_id,
+            m,
+            response,
+            model: SldaModel { t, w, eta, phi, rho, alpha, train_mse, train_acc },
+            test_yhat,
+            test_labels,
+            full_train_quality,
+            tokens_sampled,
+            docs,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let bytes = self.encode();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ShardArtifact> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading shard artifact {path:?}: {e}"))?;
+        Self::decode(&bytes).map_err(|e| anyhow::anyhow!("decoding {path:?}: {e}"))
+    }
+
+    /// Conventional file name: `shard-<j>of<m>.shrd`.
+    pub fn file_name(shard_id: u32, m: u32) -> String {
+        format!("shard-{shard_id}of{m}.shrd")
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    pub(crate) fn sample(seed: u64, shard_id: u32, m: u32) -> ShardArtifact {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let (t, w, n_test) = (4usize, 7usize, 5usize);
+        ShardArtifact {
+            fingerprint: 0xFEED_F00D ^ seed,
+            algorithm: "weighted-average".to_string(),
+            shard_id,
+            m,
+            response: ResponseKind::Continuous,
+            model: SldaModel {
+                t,
+                w,
+                eta: (0..t).map(|_| rng.next_gaussian()).collect(),
+                phi: (0..w * t).map(|_| rng.next_f32()).collect(),
+                rho: 0.8,
+                alpha: 1.25,
+                train_mse: 0.4,
+                train_acc: 0.75,
+            },
+            test_yhat: (0..n_test).map(|_| rng.next_gaussian()).collect(),
+            test_labels: (0..n_test).map(|_| rng.next_gaussian()).collect(),
+            full_train_quality: Some((0.31, 0.8)),
+            tokens_sampled: 999,
+            docs: 12,
+        }
+    }
+
+    fn assert_artifact_eq(a: &ShardArtifact, b: &ShardArtifact) {
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.algorithm, b.algorithm);
+        assert_eq!(a.shard_id, b.shard_id);
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.response, b.response);
+        assert_eq!(a.model.t, b.model.t);
+        assert_eq!(a.model.w, b.model.w);
+        assert_eq!(a.model.eta, b.model.eta);
+        assert_eq!(a.model.phi, b.model.phi);
+        assert_eq!(a.model.rho, b.model.rho);
+        assert_eq!(a.model.alpha, b.model.alpha);
+        assert_eq!(a.model.train_mse, b.model.train_mse);
+        assert_eq!(a.model.train_acc, b.model.train_acc);
+        assert_eq!(a.test_yhat, b.test_yhat);
+        assert_eq!(a.test_labels, b.test_labels);
+        assert_eq!(a.full_train_quality, b.full_train_quality);
+        assert_eq!(a.tokens_sampled, b.tokens_sampled);
+        assert_eq!(a.docs, b.docs);
+    }
+
+    #[test]
+    fn artifact_roundtrips_exactly() {
+        let a = sample(1, 2, 4);
+        let back = ShardArtifact::decode(&a.encode()).unwrap();
+        assert_artifact_eq(&a, &back);
+        // no-full-train variant (simple / median rules)
+        let mut a = sample(2, 0, 1);
+        a.full_train_quality = None;
+        a.response = ResponseKind::Binary;
+        let back = ShardArtifact::decode(&a.encode()).unwrap();
+        assert_artifact_eq(&a, &back);
+    }
+
+    #[test]
+    fn save_load_roundtrips() {
+        let a = sample(3, 1, 2);
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_artifact_{}.shrd", std::process::id()));
+        a.save(&p).unwrap();
+        let back = ShardArtifact::load(&p).unwrap();
+        assert_artifact_eq(&a, &back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn hostile_coordinates_and_lengths_rejected() {
+        let bytes = sample(4, 0, 2).encode();
+        // bit flip → checksum error before any structure is trusted
+        let mut b = bytes.clone();
+        b[bytes.len() / 2] ^= 0x40;
+        assert!(ShardArtifact::decode(&b).unwrap_err().to_string().contains("checksum"));
+        // shard_id >= m (restamped)
+        let body_of = |b: &[u8]| b[8..b.len() - 8].to_vec();
+        let reframe = |body: &[u8]| {
+            let mut out = Vec::new();
+            out.extend_from_slice(ARTIFACT_MAGIC);
+            out.extend_from_slice(body);
+            out.extend_from_slice(&fnv1a(body).to_le_bytes());
+            out
+        };
+        let mut body = body_of(&bytes);
+        // shard_id sits after fingerprint (8) + name len (1) + name
+        let name_len = body[8] as usize;
+        let off = 9 + name_len;
+        body[off..off + 4].copy_from_slice(&9u32.to_le_bytes());
+        let err = ShardArtifact::decode(&reframe(&body)).unwrap_err().to_string();
+        assert!(err.contains("shard coordinates"), "{err}");
+        // hostile test count dies on byte-backing, not allocation
+        let a = sample(5, 0, 2);
+        let bytes = a.encode();
+        let mut body = body_of(&bytes);
+        let n_test_off = 8
+            + 1
+            + a.algorithm.len()
+            + 4
+            + 4
+            + 1
+            + 4
+            + 4
+            + 8 * 4
+            + a.model.eta.len() * 8
+            + a.model.phi.len() * 4;
+        body[n_test_off..n_test_off + 8].copy_from_slice(&(1u64 << 60).to_le_bytes());
+        let err = ShardArtifact::decode(&reframe(&body)).unwrap_err().to_string();
+        assert!(err.contains("implausible test-set size"), "{err}");
+    }
+
+    #[test]
+    fn mangled_artifact_never_panics() {
+        use crate::testkit::{forall, usize_in};
+        let base = sample(6, 1, 4).encode();
+        forall(
+            "mangled CFSSHRD1",
+            150,
+            |rng| {
+                let mut b = base.clone();
+                match rng.gen_range(3) {
+                    0 => {
+                        let i = rng.gen_range(b.len());
+                        b[i] ^= 1 << rng.gen_range(8);
+                        b
+                    }
+                    1 => {
+                        let n = usize_in(rng, 0, b.len() - 1);
+                        b.truncate(n);
+                        b
+                    }
+                    _ => {
+                        let body = &base[8..base.len() - 8];
+                        let n = usize_in(rng, 0, body.len() - 1);
+                        let mut out = Vec::new();
+                        out.extend_from_slice(ARTIFACT_MAGIC);
+                        out.extend_from_slice(&body[..n]);
+                        out.extend_from_slice(&fnv1a(&body[..n]).to_le_bytes());
+                        out
+                    }
+                }
+            },
+            |bytes| {
+                let _ = ShardArtifact::decode(bytes);
+            },
+        );
+    }
+}

@@ -10,6 +10,8 @@
 //! * Naive Combination is not a prediction combiner — it pools topic samples
 //!   before any prediction — and lives in `parallel::leader`.
 
+pub mod artifact;
 pub mod rules;
 
+pub use artifact::ShardArtifact;
 pub use rules::{combine_predictions, weights, CombineRule, WeightScheme};

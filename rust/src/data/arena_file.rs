@@ -1,0 +1,1010 @@
+//! Out-of-core token arena: the `CFSARENA1` on-disk format and its
+//! zero-copy mmap loader (DESIGN.md §Out-of-core).
+//!
+//! The file is the CSR corpus laid out verbatim, in the same
+//! magic | little-endian body | trailing FNV-1a-64 framing family as
+//! `model/persist` and `ckpt/format`:
+//!
+//! ```text
+//! offset  size                 field
+//! 0       16                   magic "CFSARENA1" + 7 NULs
+//! 16      48                   header: n_docs u64 | n_tokens u64 | vocab u64
+//!                              | off_doc_offsets u64 | off_tokens u64
+//!                              | off_responses u64
+//! 64      (n_docs+1)*4         doc_offsets  u32[]   (CSR prefix sums)
+//! align8  n_tokens*4           tokens       u32[]
+//! align8  n_docs*8             responses    f64[]
+//! end-8   8                    FNV-1a-64 over bytes[16 .. len-8]
+//! ```
+//!
+//! The section offsets are stored *and* recomputed: a file whose header
+//! offsets disagree with the canonical layout is rejected, so the offsets
+//! carry no authority an attacker could abuse — they exist to make the
+//! format self-describing for external tools.
+//!
+//! Every section sits on an 8-byte boundary (the magic is padded to 16
+//! bytes for the same reason), so a page-aligned mapping yields correctly
+//! aligned `&[u32]` / `&[f64]` slices and [`ArenaMap`] can hand out the
+//! ordinary [`CorpusView`] over mapped memory — no consumer downstream of
+//! the view knows whether tokens live on the heap or in the page cache.
+//!
+//! **Hostile-input contract** (same as `ckpt/format`): the checksum is
+//! verified *first*, then header plausibility ceilings, then section
+//! bounds with checked arithmetic — every length is proven byte-backed
+//! before any slice is taken, and [`parse`] never allocates. [`parse`]
+//! itself assumes nothing about the buffer's alignment (it walks
+//! `chunks_exact`), so in-memory property tests can mangle plain `Vec<u8>`
+//! buffers; only [`ArenaMap`] performs the aligned zero-copy casts, which
+//! its page-aligned mapping plus the 8-aligned section offsets make sound.
+
+use super::corpus::{Corpus, CorpusView};
+use anyhow::Context;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// 16-byte magic: the 9 format bytes padded with NULs to keep the header
+/// (and therefore every section) 8-aligned.
+pub const MAGIC: [u8; 16] = *b"CFSARENA1\0\0\0\0\0\0\0";
+
+const HEADER_BYTES: usize = 48;
+/// Smallest legal file: empty corpus (one doc_offset entry, no tokens,
+/// no responses) = 16 + 48 + align8(4) + 0 + 0 + 8.
+const MIN_LEN: usize = 16 + HEADER_BYTES + 8 + 8;
+
+/// Plausibility ceiling on document count (shared with `ckpt/format`).
+const MAX_D: u64 = 1 << 28;
+/// Plausibility ceiling on vocabulary size.
+const MAX_W: u64 = 1 << 28;
+
+/// Incremental FNV-1a-64 — identical constants to
+/// `crate::model::persist::fnv1a`, but streamable so the packer can hash a
+/// multi-gigabyte token section while copying it instead of holding it in
+/// RAM.
+#[derive(Clone, Copy)]
+pub(crate) struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub(crate) fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    pub(crate) fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        self.0 = h;
+    }
+
+    pub(crate) fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+#[inline]
+fn align8(x: u64) -> u64 {
+    (x + 7) & !7
+}
+
+/// Validated section geometry of one `CFSARENA1` buffer. Offsets/lengths
+/// are in bytes from the start of the buffer and are guaranteed in-bounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layout {
+    pub n_docs: usize,
+    pub n_tokens: usize,
+    pub vocab: usize,
+    pub off_doc_offsets: usize,
+    pub off_tokens: usize,
+    pub off_responses: usize,
+}
+
+fn le_u64(bytes: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap())
+}
+
+/// Validate a `CFSARENA1` buffer end to end and return its [`Layout`].
+///
+/// Checksum first (corruption anywhere surfaces as one uniform error
+/// before any structural field is trusted), then header plausibility,
+/// then canonical-offset and bounds checks with checked arithmetic, then
+/// the full [`Corpus::validate`] semantics (CSR monotonicity, no empty
+/// documents, token ids within vocab, finite responses) — the checksum
+/// already forces an O(N) scan, so full validation adds no asymptotic
+/// cost. Never allocates; makes no alignment assumptions.
+pub fn parse(bytes: &[u8]) -> anyhow::Result<Layout> {
+    let len = bytes.len();
+    anyhow::ensure!(len >= MIN_LEN, "arena file too short: {len} bytes < minimum {MIN_LEN}");
+    anyhow::ensure!(bytes[..16] == MAGIC, "bad magic: not a CFSARENA1 file");
+    let stored = le_u64(bytes, len - 8);
+    let mut h = Fnv1a::new();
+    h.update(&bytes[16..len - 8]);
+    let computed = h.finish();
+    anyhow::ensure!(
+        stored == computed,
+        "checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+    );
+
+    let n_docs = le_u64(bytes, 16);
+    let n_tokens = le_u64(bytes, 24);
+    let vocab = le_u64(bytes, 32);
+    let off_doc_offsets = le_u64(bytes, 40);
+    let off_tokens = le_u64(bytes, 48);
+    let off_responses = le_u64(bytes, 56);
+
+    anyhow::ensure!(n_docs <= MAX_D, "implausible document count {n_docs} (max {MAX_D})");
+    anyhow::ensure!(
+        n_tokens <= u32::MAX as u64,
+        "implausible token count {n_tokens} (u32 CSR offsets cap at {})",
+        u32::MAX
+    );
+    anyhow::ensure!(vocab <= MAX_W, "implausible vocab size {vocab} (max {MAX_W})");
+
+    // Canonical geometry, recomputed with checked arithmetic. n_docs and
+    // n_tokens are already ceiling-bounded, so none of these can overflow
+    // u64 — checked ops make that explicit rather than assumed.
+    let doc_off_bytes = (n_docs + 1).checked_mul(4).context("doc_offsets size overflow")?;
+    let want_off_tokens = align8(64u64.checked_add(doc_off_bytes).context("layout overflow")?);
+    let tok_bytes = n_tokens.checked_mul(4).context("tokens size overflow")?;
+    let want_off_responses =
+        align8(want_off_tokens.checked_add(tok_bytes).context("layout overflow")?);
+    let resp_bytes = n_docs.checked_mul(8).context("responses size overflow")?;
+    let want_len = want_off_responses
+        .checked_add(resp_bytes)
+        .and_then(|x| x.checked_add(8))
+        .context("layout overflow")?;
+    anyhow::ensure!(
+        off_doc_offsets == 64,
+        "doc_offsets section at byte {off_doc_offsets}, canonical layout requires 64"
+    );
+    anyhow::ensure!(
+        off_tokens == want_off_tokens,
+        "tokens section at byte {off_tokens}, canonical layout requires {want_off_tokens}"
+    );
+    anyhow::ensure!(
+        off_responses == want_off_responses,
+        "responses section at byte {off_responses}, canonical layout requires \
+         {want_off_responses}"
+    );
+    anyhow::ensure!(
+        want_len == len as u64,
+        "file is {len} bytes but the header describes {want_len}"
+    );
+
+    // Sections are now proven byte-backed; walk them without alignment
+    // assumptions.
+    let doc_off_sec = &bytes[64..64 + doc_off_bytes as usize];
+    let mut prev: u32 = 0;
+    for (d, ch) in doc_off_sec.chunks_exact(4).enumerate() {
+        let off = u32::from_le_bytes(ch.try_into().unwrap());
+        if d == 0 {
+            anyhow::ensure!(off == 0, "doc_offsets must start with 0, got {off}");
+        } else {
+            anyhow::ensure!(
+                off > prev,
+                "document {} is empty or doc_offsets decrease at entry {d}",
+                d - 1
+            );
+        }
+        prev = off;
+    }
+    anyhow::ensure!(
+        prev as u64 == n_tokens,
+        "last doc offset {prev} != token count {n_tokens}"
+    );
+
+    let tok_sec = &bytes[want_off_tokens as usize..(want_off_tokens + tok_bytes) as usize];
+    for (i, ch) in tok_sec.chunks_exact(4).enumerate() {
+        let w = u32::from_le_bytes(ch.try_into().unwrap());
+        anyhow::ensure!(
+            (w as u64) < vocab,
+            "token {i} has word id {w} >= vocab size {vocab}"
+        );
+    }
+
+    let resp_sec =
+        &bytes[want_off_responses as usize..(want_off_responses + resp_bytes) as usize];
+    for (d, ch) in resp_sec.chunks_exact(8).enumerate() {
+        let y = f64::from_le_bytes(ch.try_into().unwrap());
+        anyhow::ensure!(y.is_finite(), "document {d} has non-finite response {y}");
+    }
+
+    Ok(Layout {
+        n_docs: n_docs as usize,
+        n_tokens: n_tokens as usize,
+        vocab: vocab as usize,
+        off_doc_offsets: 64,
+        off_tokens: want_off_tokens as usize,
+        off_responses: want_off_responses as usize,
+    })
+}
+
+/// Serialize a corpus to an in-memory `CFSARENA1` image (the reference
+/// encoder; [`ArenaWriter`] streams the identical bytes without holding
+/// the corpus in RAM, and a test pins the two equal).
+pub fn encode(corpus: &Corpus) -> anyhow::Result<Vec<u8>> {
+    corpus.validate()?;
+    let n_docs = corpus.num_docs() as u64;
+    let n_tokens = corpus.num_tokens() as u64;
+    anyhow::ensure!(n_docs <= MAX_D, "corpus has {n_docs} docs, format cap is {MAX_D}");
+    anyhow::ensure!(
+        (corpus.vocab_size as u64) <= MAX_W,
+        "vocab size {} exceeds format cap {MAX_W}",
+        corpus.vocab_size
+    );
+    let off_tokens = align8(64 + (n_docs + 1) * 4);
+    let off_responses = align8(off_tokens + n_tokens * 4);
+    let total = (off_responses + n_docs * 8 + 8) as usize;
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&n_docs.to_le_bytes());
+    out.extend_from_slice(&n_tokens.to_le_bytes());
+    out.extend_from_slice(&(corpus.vocab_size as u64).to_le_bytes());
+    out.extend_from_slice(&64u64.to_le_bytes());
+    out.extend_from_slice(&off_tokens.to_le_bytes());
+    out.extend_from_slice(&off_responses.to_le_bytes());
+    for &o in &corpus.doc_offsets {
+        out.extend_from_slice(&o.to_le_bytes());
+    }
+    out.resize(off_tokens as usize, 0);
+    for &t in &corpus.tokens {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+    out.resize(off_responses as usize, 0);
+    for &y in &corpus.responses {
+        out.extend_from_slice(&y.to_le_bytes());
+    }
+    let mut h = Fnv1a::new();
+    h.update(&out[16..]);
+    out.extend_from_slice(&h.finish().to_le_bytes());
+    debug_assert_eq!(out.len(), total);
+    Ok(out)
+}
+
+/// Materialize a heap-owned [`Corpus`] from a `CFSARENA1` buffer (full
+/// validation via [`parse`]). The training path maps instead
+/// ([`ArenaMap`]); this is the copying fallback for tools and tests.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<Corpus> {
+    let l = parse(bytes)?;
+    let doc_offsets: Vec<u32> = bytes[l.off_doc_offsets..l.off_doc_offsets + (l.n_docs + 1) * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let tokens: Vec<u32> = bytes[l.off_tokens..l.off_tokens + l.n_tokens * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let responses: Vec<f64> = bytes[l.off_responses..l.off_responses + l.n_docs * 8]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Corpus::from_parts(tokens, doc_offsets, responses, l.vocab)
+}
+
+/// Streaming `CFSARENA1` writer: documents are pushed one at a time, token
+/// bytes spill to a side file as they arrive, and only the O(D)
+/// doc_offsets/responses stay in memory — so packing a corpus bigger than
+/// RAM works through constant memory. [`ArenaWriter::finish`] assembles
+/// the final file (magic, header, sections, checksum) into `<out>.tmp` and
+/// renames it into place atomically.
+pub struct ArenaWriter {
+    out: PathBuf,
+    spill_path: PathBuf,
+    spill: BufWriter<std::fs::File>,
+    doc_offsets: Vec<u32>,
+    responses: Vec<f64>,
+    max_token: Option<u32>,
+}
+
+impl ArenaWriter {
+    pub fn create(out: &Path) -> anyhow::Result<ArenaWriter> {
+        let spill_path = PathBuf::from(format!("{}.spill", out.display()));
+        let spill = BufWriter::new(
+            std::fs::File::create(&spill_path)
+                .with_context(|| format!("creating spill file {spill_path:?}"))?,
+        );
+        Ok(ArenaWriter {
+            out: out.to_path_buf(),
+            spill_path,
+            spill,
+            doc_offsets: vec![0],
+            responses: Vec::new(),
+            max_token: None,
+        })
+    }
+
+    /// Append one document. Empty documents are rejected (the format, like
+    /// [`Corpus::validate`], forbids them — callers skip empties the way
+    /// the JSONL/BoW loaders do); non-finite responses are rejected too.
+    pub fn push_doc(&mut self, tokens: &[u32], response: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(!tokens.is_empty(), "empty document");
+        anyhow::ensure!(response.is_finite(), "non-finite response {response}");
+        let end = self.doc_offsets.last().unwrap().checked_add(
+            u32::try_from(tokens.len()).map_err(|_| anyhow::anyhow!("document too large"))?,
+        );
+        let end = end.context("token arena exceeds u32::MAX tokens")?;
+        anyhow::ensure!(
+            (self.responses.len() as u64) < MAX_D,
+            "corpus exceeds {MAX_D} documents"
+        );
+        for &t in tokens {
+            self.spill.write_all(&t.to_le_bytes())?;
+        }
+        self.max_token = self.max_token.max(Some(tokens.iter().copied().max().unwrap()));
+        self.doc_offsets.push(end);
+        self.responses.push(response);
+        Ok(())
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.responses.len()
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        *self.doc_offsets.last().unwrap() as usize
+    }
+
+    /// Assemble and atomically publish the arena file. `vocab` must cover
+    /// every pushed token id (pass 1 + max id for self-described corpora).
+    pub fn finish(mut self, vocab: usize) -> anyhow::Result<()> {
+        self.spill.flush()?;
+        anyhow::ensure!((vocab as u64) <= MAX_W, "vocab size {vocab} exceeds cap {MAX_W}");
+        if let Some(mx) = self.max_token {
+            anyhow::ensure!(
+                (mx as usize) < vocab,
+                "vocab size {vocab} does not cover token id {mx}"
+            );
+        }
+        let n_docs = self.responses.len() as u64;
+        let n_tokens = *self.doc_offsets.last().unwrap() as u64;
+        let off_tokens = align8(64 + (n_docs + 1) * 4);
+        let off_responses = align8(off_tokens + n_tokens * 4);
+
+        let tmp = PathBuf::from(format!("{}.tmp", self.out.display()));
+        let mut f = BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+        );
+        let mut h = Fnv1a::new();
+        let mut write_hashed = |f: &mut BufWriter<std::fs::File>,
+                                h: &mut Fnv1a,
+                                bytes: &[u8]|
+         -> anyhow::Result<()> {
+            h.update(bytes);
+            f.write_all(bytes)?;
+            Ok(())
+        };
+
+        f.write_all(&MAGIC)?;
+        write_hashed(&mut f, &mut h, &n_docs.to_le_bytes())?;
+        write_hashed(&mut f, &mut h, &n_tokens.to_le_bytes())?;
+        write_hashed(&mut f, &mut h, &(vocab as u64).to_le_bytes())?;
+        write_hashed(&mut f, &mut h, &64u64.to_le_bytes())?;
+        write_hashed(&mut f, &mut h, &off_tokens.to_le_bytes())?;
+        write_hashed(&mut f, &mut h, &off_responses.to_le_bytes())?;
+        for &o in &self.doc_offsets {
+            write_hashed(&mut f, &mut h, &o.to_le_bytes())?;
+        }
+        let pad = [0u8; 8];
+        let doc_off_end = 64 + (n_docs + 1) * 4;
+        write_hashed(&mut f, &mut h, &pad[..(off_tokens - doc_off_end) as usize])?;
+
+        // Stream the spilled token section through the hasher while
+        // copying — the only pass over the O(N) payload.
+        let mut spill = BufReader::new(
+            std::fs::File::open(&self.spill_path)
+                .with_context(|| format!("reopening spill file {:?}", self.spill_path))?,
+        );
+        let mut buf = [0u8; 64 * 1024];
+        let mut copied = 0u64;
+        loop {
+            let n = spill.read(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            copied += n as u64;
+            write_hashed(&mut f, &mut h, &buf[..n])?;
+        }
+        anyhow::ensure!(
+            copied == n_tokens * 4,
+            "spill file holds {copied} bytes, expected {} ({} tokens)",
+            n_tokens * 4,
+            n_tokens
+        );
+        let tok_end = off_tokens + n_tokens * 4;
+        write_hashed(&mut f, &mut h, &pad[..(off_responses - tok_end) as usize])?;
+        for &y in &self.responses {
+            write_hashed(&mut f, &mut h, &y.to_le_bytes())?;
+        }
+        f.write_all(&h.finish().to_le_bytes())?;
+        f.flush()?;
+        drop(f);
+        std::fs::rename(&tmp, &self.out)
+            .with_context(|| format!("publishing {:?}", self.out))?;
+        std::fs::remove_file(&self.spill_path).ok();
+        Ok(())
+    }
+}
+
+/// Stream an in-memory corpus to `out` through the [`ArenaWriter`].
+pub fn write_arena(corpus: &Corpus, out: &Path) -> anyhow::Result<()> {
+    corpus.validate()?;
+    let mut w = ArenaWriter::create(out)?;
+    for (tokens, y) in corpus.view().iter_docs() {
+        w.push_doc(tokens, y)?;
+    }
+    w.finish(corpus.vocab_size)
+}
+
+/// Summary of one streaming pack run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackSummary {
+    pub docs: usize,
+    pub tokens: usize,
+    pub vocab: usize,
+    pub skipped_empty: usize,
+}
+
+/// Streaming converter: read a corpus file and write `out` without ever
+/// materializing the corpus in RAM. Two input formats, sniffed from the
+/// first line:
+///
+/// * **BoW** (`#cfslda-bow vocab=<V>` header, then `y w1 w2 ...` lines) —
+///   the vocab is known up front.
+/// * **Pre-encoded JSONL** (`{"tokens": [...], "response": y}` lines,
+///   optional `{"vocab_size": V}` prologue) — vocab is the running
+///   `max(declared, 1 + max token id)`.
+///
+/// Empty documents are skipped exactly as the heap loaders skip them.
+pub fn pack_file(input: &Path, out: &Path) -> anyhow::Result<PackSummary> {
+    let file = std::fs::File::open(input).with_context(|| format!("opening {input:?}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let first = match lines.next() {
+        Some(l) => l?,
+        None => anyhow::bail!("{input:?} is empty"),
+    };
+    let mut w = ArenaWriter::create(out)?;
+    let mut skipped = 0usize;
+    let vocab;
+    if let Some(rest) = first.strip_prefix("#cfslda-bow vocab=") {
+        let v: usize = rest.trim().parse().context("bad vocab size in bow header")?;
+        for (lineno, line) in lines.enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split_ascii_whitespace();
+            let y: f64 = parts
+                .next()
+                .context("empty bow line")?
+                .parse()
+                .with_context(|| format!("bad response at data line {}", lineno + 1))?;
+            let tokens: Result<Vec<u32>, _> = parts.map(|p| p.parse::<u32>()).collect();
+            let tokens =
+                tokens.with_context(|| format!("bad token at data line {}", lineno + 1))?;
+            if tokens.is_empty() {
+                skipped += 1;
+                continue;
+            }
+            w.push_doc(&tokens, y)?;
+        }
+        vocab = v;
+    } else {
+        let mut max_vocab = 0usize;
+        let mut handle = |line: &str, lineno: usize, w: &mut ArenaWriter| -> anyhow::Result<bool> {
+            if line.trim().is_empty() {
+                return Ok(false);
+            }
+            let v = crate::config::json::parse(line)
+                .with_context(|| format!("{input:?}:{} invalid json", lineno + 1))?;
+            if let Some(vs) = v.get("vocab_size").and_then(|x| x.as_usize()) {
+                max_vocab = max_vocab.max(vs);
+                return Ok(false);
+            }
+            let toks = v
+                .get("tokens")
+                .and_then(|t| t.as_array())
+                .with_context(|| format!("{input:?}:{} missing 'tokens'", lineno + 1))?;
+            let tokens: Option<Vec<u32>> =
+                toks.iter().map(|t| t.as_usize().map(|u| u as u32)).collect();
+            let tokens =
+                tokens.with_context(|| format!("{input:?}:{} bad token ids", lineno + 1))?;
+            let y = v
+                .get("response")
+                .and_then(|r| r.as_f64())
+                .with_context(|| format!("{input:?}:{} missing 'response'", lineno + 1))?;
+            if tokens.is_empty() {
+                return Ok(true);
+            }
+            for &t in &tokens {
+                max_vocab = max_vocab.max(t as usize + 1);
+            }
+            w.push_doc(&tokens, y)?;
+            Ok(false)
+        };
+        if handle(&first, 0, &mut w)? {
+            skipped += 1;
+        }
+        for (lineno, line) in lines.enumerate() {
+            let line = line?;
+            if handle(&line, lineno + 1, &mut w)? {
+                skipped += 1;
+            }
+        }
+        vocab = max_vocab;
+    }
+    let summary =
+        PackSummary { docs: w.num_docs(), tokens: w.num_tokens(), vocab, skipped_empty: skipped };
+    w.finish(vocab)?;
+    Ok(summary)
+}
+
+/// RAII read-only shared mapping of one file.
+struct Mapping {
+    ptr: *mut libc::c_void,
+    len: usize,
+}
+
+// The mapping is read-only (PROT_READ) and immutable for its lifetime, so
+// shared references into it are safe to send and share across the worker
+// fan-out.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    fn open(path: &Path) -> anyhow::Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        let len = f.metadata()?.len();
+        anyhow::ensure!(len > 0, "{path:?} is empty");
+        let len = usize::try_from(len).context("file larger than the address space")?;
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_SHARED,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        anyhow::ensure!(
+            ptr != libc::MAP_FAILED,
+            "mmap of {path:?} ({len} bytes) failed: {}",
+            std::io::Error::last_os_error()
+        );
+        // Paging policy: Gibbs sweeps walk the token section front to back
+        // every sweep, so prime readahead and ask for the whole file
+        // eagerly. Advice is best-effort — a refusal changes paging
+        // behavior, not correctness.
+        unsafe {
+            libc::madvise(ptr, len, libc::MADV_SEQUENTIAL);
+            libc::madvise(ptr, len, libc::MADV_WILLNEED);
+        }
+        // The fd can close now: the mapping keeps the file alive.
+        Ok(Mapping { ptr, len })
+    }
+
+    fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+/// A validated, read-only mmap of a `CFSARENA1` file: the out-of-core
+/// corpus. [`ArenaMap::view`] hands out the ordinary [`CorpusView`], so
+/// everything downstream (trainer, workers, predictor) is oblivious to
+/// the backing store; N independent processes mapping the same file share
+/// its pages through the page cache with zero copies.
+///
+/// **Safety / lifetime argument.** The mapping is `PROT_READ` +
+/// `MAP_SHARED` and lives exactly as long as this struct; views borrow
+/// `&self`, so the borrow checker pins the mapping open for as long as
+/// any view (or slice derived from one) exists. [`parse`] validates the
+/// checksum and full structure *through the mapping* before any typed
+/// slice is produced, and the 8-aligned section offsets on a page-aligned
+/// base make the `&[u32]` / `&[f64]` casts well-aligned. The one hazard
+/// mmap cannot close is an *external* truncation of the file while
+/// mapped, which raises SIGBUS on touch (documented in DESIGN.md
+/// §Out-of-core); treat published `.arena` files as immutable — the
+/// writer's tmp+rename publish guarantees readers never observe a partial
+/// file.
+pub struct ArenaMap {
+    map: Mapping,
+    layout: Layout,
+}
+
+impl ArenaMap {
+    /// Map `path` and validate it end to end (checksum first).
+    pub fn open(path: &Path) -> anyhow::Result<ArenaMap> {
+        let map = Mapping::open(path)?;
+        let layout = parse(map.bytes()).with_context(|| format!("validating {path:?}"))?;
+        Ok(ArenaMap { map, layout })
+    }
+
+    pub fn num_docs(&self) -> usize {
+        self.layout.n_docs
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.layout.n_tokens
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.layout.vocab
+    }
+
+    /// Total mapped bytes (the comm ledger books these as *referenced*
+    /// setup traffic for multi-process runs).
+    pub fn mapped_len(&self) -> usize {
+        self.map.len
+    }
+
+    fn doc_offsets(&self) -> &[u32] {
+        let b = self.map.bytes();
+        // Alignment: base is page-aligned, offset is 64.
+        unsafe {
+            std::slice::from_raw_parts(
+                b.as_ptr().add(self.layout.off_doc_offsets) as *const u32,
+                self.layout.n_docs + 1,
+            )
+        }
+    }
+
+    fn tokens(&self) -> &[u32] {
+        let b = self.map.bytes();
+        unsafe {
+            std::slice::from_raw_parts(
+                b.as_ptr().add(self.layout.off_tokens) as *const u32,
+                self.layout.n_tokens,
+            )
+        }
+    }
+
+    fn responses(&self) -> &[f64] {
+        let b = self.map.bytes();
+        unsafe {
+            std::slice::from_raw_parts(
+                b.as_ptr().add(self.layout.off_responses) as *const f64,
+                self.layout.n_docs,
+            )
+        }
+    }
+
+    /// Zero-copy view of the whole mapped corpus.
+    pub fn view(&self) -> CorpusView<'_> {
+        CorpusView::from_parts(
+            self.tokens(),
+            self.doc_offsets(),
+            self.responses(),
+            self.layout.vocab,
+            None,
+        )
+        .expect("parse() already proved the CSR invariants")
+    }
+
+    /// Zero-copy view of the documents named by `ids` (a shard of the
+    /// mapped corpus). Errors on out-of-range ids.
+    pub fn view_of<'a>(&'a self, ids: &'a [usize]) -> anyhow::Result<CorpusView<'a>> {
+        CorpusView::from_parts(
+            self.tokens(),
+            self.doc_offsets(),
+            self.responses(),
+            self.layout.vocab,
+            Some(ids),
+        )
+    }
+
+    /// Copy the mapped corpus onto the heap (tools/benches; the training
+    /// path stays on the mapping).
+    pub fn to_corpus(&self) -> Corpus {
+        self.view().to_corpus()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Document;
+    use crate::data::synthetic::{generate_split, SyntheticSpec};
+    use crate::testkit::{forall, usize_in};
+    use crate::util::rng::Pcg64;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_arena_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn mini() -> Corpus {
+        Corpus::new(
+            vec![
+                Document { tokens: vec![0, 1, 1, 2], response: 0.5 },
+                Document { tokens: vec![2, 2], response: -1.0 },
+                Document { tokens: vec![0], response: 2.0 },
+            ],
+            3,
+        )
+    }
+
+    fn sized(seed: u64, docs: usize) -> Corpus {
+        let spec = SyntheticSpec::continuous_small();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        generate_split(&spec, docs, &mut rng).train
+    }
+
+    #[test]
+    fn incremental_fnv_matches_oneshot() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 31 % 251) as u8).collect();
+        let mut h = Fnv1a::new();
+        // uneven chunking must not change the digest
+        for chunk in data.chunks(37) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finish(), crate::model::persist::fnv1a(&data));
+        assert_eq!(Fnv1a::new().finish(), crate::model::persist::fnv1a(&[]));
+    }
+
+    #[test]
+    fn encode_parse_decode_round_trip() {
+        for c in [mini(), sized(3, 60), Corpus::default()] {
+            let bytes = encode(&c).unwrap();
+            let l = parse(&bytes).unwrap();
+            assert_eq!(l.n_docs, c.num_docs());
+            assert_eq!(l.n_tokens, c.num_tokens());
+            assert_eq!(l.vocab, c.vocab_size);
+            assert_eq!(l.off_doc_offsets, 64);
+            assert_eq!(l.off_tokens % 8, 0);
+            assert_eq!(l.off_responses % 8, 0);
+            let back = decode(&bytes).unwrap();
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn streaming_writer_matches_encode_byte_for_byte() {
+        let c = sized(7, 45);
+        let p = tmp("writer.arena");
+        write_arena(&c, &p).unwrap();
+        let streamed = std::fs::read(&p).unwrap();
+        assert_eq!(streamed, encode(&c).unwrap());
+        // spill + tmp are cleaned up
+        assert!(!PathBuf::from(format!("{}.spill", p.display())).exists());
+        assert!(!PathBuf::from(format!("{}.tmp", p.display())).exists());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn writer_rejects_bad_docs_and_vocab() {
+        let p = tmp("reject.arena");
+        let mut w = ArenaWriter::create(&p).unwrap();
+        assert!(w.push_doc(&[], 1.0).is_err(), "empty doc");
+        assert!(w.push_doc(&[1], f64::NAN).is_err(), "NaN response");
+        w.push_doc(&[5, 2], 1.0).unwrap();
+        assert_eq!(w.num_docs(), 1);
+        assert_eq!(w.num_tokens(), 2);
+        // vocab must cover the max token id
+        assert!(w.finish(5).is_err());
+        std::fs::remove_file(PathBuf::from(format!("{}.spill", p.display()))).ok();
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn arena_map_views_match_heap_corpus() {
+        let c = sized(11, 40);
+        let p = tmp("map.arena");
+        write_arena(&c, &p).unwrap();
+        let map = ArenaMap::open(&p).unwrap();
+        assert_eq!(map.num_docs(), c.num_docs());
+        assert_eq!(map.num_tokens(), c.num_tokens());
+        assert_eq!(map.vocab_size(), c.vocab_size);
+        assert_eq!(map.mapped_len(), std::fs::metadata(&p).unwrap().len() as usize);
+        let v = map.view();
+        assert!(v.is_full());
+        v.validate().unwrap();
+        for i in 0..c.num_docs() {
+            assert_eq!(v.doc_tokens(i), c.doc_tokens(i));
+            assert_eq!(v.response(i), c.response(i));
+        }
+        assert_eq!(map.to_corpus(), c);
+        // shard views over the mapping
+        let ids: Vec<usize> = (0..c.num_docs()).step_by(3).collect();
+        let s = map.view_of(&ids).unwrap();
+        assert_eq!(s.num_docs(), ids.len());
+        assert_eq!(s.doc_tokens(1), c.doc_tokens(ids[1]));
+        let bad = vec![c.num_docs()];
+        assert!(map.view_of(&bad).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mapped_training_is_byte_identical_to_heap_training() {
+        use crate::config::schema::ExperimentConfig;
+        use crate::runtime::EngineHandle;
+        use crate::sampler::gibbs_train;
+        let c = sized(13, 50);
+        let p = tmp("train.arena");
+        write_arena(&c, &p).unwrap();
+        let map = ArenaMap::open(&p).unwrap();
+        let mut cfg = ExperimentConfig::quick();
+        cfg.train.sweeps = 8;
+        cfg.train.burnin = 2;
+        cfg.train.eta_every = 2;
+        let engine = EngineHandle::native();
+        let a = gibbs_train::train(&c, &cfg, &engine, &mut Pcg64::seed_from_u64(5)).unwrap();
+        let b =
+            gibbs_train::train(map.view(), &cfg, &engine, &mut Pcg64::seed_from_u64(5)).unwrap();
+        assert_eq!(a.z, b.z);
+        assert_eq!(a.model.eta, b.model.eta);
+        assert_eq!(a.model.phi, b.model.phi);
+        assert_eq!(a.responses, b.responses);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn pack_file_streams_bow_and_jsonl() {
+        let c = sized(17, 30);
+        // BoW path
+        let bow = tmp("pack.bow");
+        crate::data::loader::save_bow(&c, &bow).unwrap();
+        let out = tmp("pack_bow.arena");
+        let s = pack_file(&bow, &out).unwrap();
+        assert_eq!(s.docs, c.num_docs());
+        assert_eq!(s.tokens, c.num_tokens());
+        assert_eq!(s.vocab, c.vocab_size);
+        assert_eq!(ArenaMap::open(&out).unwrap().to_corpus(), c);
+        // JSONL path (with vocab_size prologue and an empty doc to skip)
+        let jl = tmp("pack.jsonl");
+        std::fs::write(
+            &jl,
+            "{\"vocab_size\": 9}\n{\"tokens\": [0, 3, 3], \"response\": 2.0}\n\
+             {\"tokens\": [], \"response\": 0.0}\n{\"tokens\": [8], \"response\": -1}\n",
+        )
+        .unwrap();
+        let out2 = tmp("pack_jsonl.arena");
+        let s = pack_file(&jl, &out2).unwrap();
+        assert_eq!(s.docs, 2);
+        assert_eq!(s.tokens, 4);
+        assert_eq!(s.vocab, 9);
+        assert_eq!(s.skipped_empty, 1);
+        let m = ArenaMap::open(&out2).unwrap();
+        assert_eq!(m.view().doc_tokens(0), &[0, 3, 3]);
+        assert_eq!(m.view().doc_tokens(1), &[8]);
+        assert_eq!(m.view().response(1), -1.0);
+        for p in [bow, out, jl, out2] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    /// Restamp helper: recompute the trailing checksum after structural
+    /// mangling, so tests reach the *structural* validation layers behind
+    /// the checksum gate (the `ckpt/format` technique).
+    fn restamp(bytes: &mut Vec<u8>) {
+        let len = bytes.len();
+        let mut h = Fnv1a::new();
+        h.update(&bytes[16..len - 8]);
+        let sum = h.finish().to_le_bytes();
+        bytes[len - 8..].copy_from_slice(&sum);
+    }
+
+    #[test]
+    fn checksum_is_checked_before_structure() {
+        let mut bytes = encode(&mini()).unwrap();
+        // poison the header with an absurd doc count *without* restamping:
+        // the checksum error must win, proving validation order
+        bytes[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = parse(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "got: {err}");
+        // restamped, the structural ceiling fires instead — before any
+        // allocation could be sized from the hostile count
+        restamp(&mut bytes);
+        let err = parse(&bytes).unwrap_err().to_string();
+        assert!(err.contains("implausible document count"), "got: {err}");
+    }
+
+    #[test]
+    fn hostile_headers_rejected_after_restamp() {
+        let base = encode(&sized(19, 20)).unwrap();
+        // token count beyond u32
+        let mut b = base.clone();
+        b[24..32].copy_from_slice(&(u32::MAX as u64 + 1).to_le_bytes());
+        restamp(&mut b);
+        assert!(parse(&b).unwrap_err().to_string().contains("implausible token count"));
+        // vocab beyond the ceiling
+        let mut b = base.clone();
+        b[32..40].copy_from_slice(&(MAX_W + 1).to_le_bytes());
+        restamp(&mut b);
+        assert!(parse(&b).unwrap_err().to_string().contains("implausible vocab size"));
+        // non-canonical section offsets
+        for off in [40usize, 48, 56] {
+            let mut b = base.clone();
+            b[off..off + 8].copy_from_slice(&u64::from(u32::MAX).to_le_bytes());
+            restamp(&mut b);
+            assert!(parse(&b).is_err(), "offset field at {off} must be pinned");
+        }
+        // counts that describe a different file length
+        let mut b = base.clone();
+        b[16..24].copy_from_slice(&1u64.to_le_bytes());
+        restamp(&mut b);
+        assert!(parse(&b).is_err());
+        // wrong magic
+        let mut b = base.clone();
+        b[0] = b'X';
+        assert!(parse(&b).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn semantic_corruption_rejected_after_restamp() {
+        let c = mini();
+        let bytes = encode(&c).unwrap();
+        let l = parse(&bytes).unwrap();
+        // out-of-vocab token id
+        let mut b = bytes.clone();
+        b[l.off_tokens..l.off_tokens + 4].copy_from_slice(&99u32.to_le_bytes());
+        restamp(&mut b);
+        assert!(parse(&b).unwrap_err().to_string().contains("word id"));
+        // empty document (offsets equal)
+        let mut b = bytes.clone();
+        let o0 = l.off_doc_offsets;
+        b[o0 + 4..o0 + 8].copy_from_slice(&0u32.to_le_bytes());
+        restamp(&mut b);
+        assert!(parse(&b).is_err());
+        // non-finite response
+        let mut b = bytes.clone();
+        b[l.off_responses..l.off_responses + 8]
+            .copy_from_slice(&f64::NAN.to_le_bytes());
+        restamp(&mut b);
+        assert!(parse(&b).unwrap_err().to_string().contains("non-finite response"));
+    }
+
+    /// The hostile-input property: arbitrary bit flips, truncations, and
+    /// truncate+restamp manglings never panic the parser, and a mangled
+    /// image never validates (any in-place bit flip lands in magic, body,
+    /// or checksum — all covered).
+    #[test]
+    fn mangled_arena_never_panics() {
+        let base = encode(&sized(23, 25)).unwrap();
+        forall(
+            "mangled CFSARENA1 image",
+            300,
+            |rng| {
+                let mode = usize_in(rng, 0, 2);
+                let mut b = base.clone();
+                match mode {
+                    0 => {
+                        let bit = usize_in(rng, 0, b.len() * 8 - 1);
+                        b[bit / 8] ^= 1 << (bit % 8);
+                    }
+                    1 => {
+                        let keep = usize_in(rng, 0, b.len() - 1);
+                        b.truncate(keep);
+                    }
+                    _ => {
+                        let keep = usize_in(rng, 24, b.len() - 1);
+                        b.truncate(keep);
+                        if b.len() >= MIN_LEN {
+                            restamp(&mut b);
+                        }
+                    }
+                }
+                (mode, b)
+            },
+            |(mode, b)| {
+                let res = parse(b);
+                match mode {
+                    0 | 1 => assert!(res.is_err(), "mangled image must not validate"),
+                    // a restamped truncation passes the checksum but must
+                    // still die on structure
+                    _ => assert!(res.is_err(), "truncated+restamped image must not validate"),
+                }
+            },
+        );
+    }
+}

@@ -160,14 +160,26 @@ impl Corpus {
 
     /// Zero-copy view of the whole corpus in document order.
     pub fn view(&self) -> CorpusView<'_> {
-        CorpusView { corpus: self, ids: None }
+        CorpusView {
+            tokens: &self.tokens,
+            doc_offsets: &self.doc_offsets,
+            resp: &self.responses,
+            vocab: self.vocab_size,
+            ids: None,
+        }
     }
 
     /// Zero-copy view of the documents named by `ids` (a shard): token and
     /// response data stay in this corpus's arena, only the index list is
     /// held by the view.
     pub fn view_of<'a>(&'a self, ids: &'a [usize]) -> CorpusView<'a> {
-        CorpusView { corpus: self, ids: Some(ids) }
+        CorpusView {
+            tokens: &self.tokens,
+            doc_offsets: &self.doc_offsets,
+            resp: &self.responses,
+            vocab: self.vocab_size,
+            ids: Some(ids),
+        }
     }
 
     /// Materialized sub-corpus by document indices (copies into a fresh
@@ -184,12 +196,24 @@ impl Corpus {
     }
 }
 
-/// Borrowed window into a [`Corpus`] arena: either the full corpus or a
-/// shard's document subset. `Copy` — passing one across the worker fan-out
-/// costs two pointers, never a token copy.
+/// Borrowed window into a token arena: either the full arena or a shard's
+/// document subset. `Copy` — passing one across the worker fan-out costs a
+/// few pointers, never a token copy.
+///
+/// Since the out-of-core refactor the view borrows the three CSR slices
+/// directly rather than a `&Corpus`, so the *same* type (and every consumer
+/// downstream of it — trainer, predictor, workers) runs equally over a
+/// heap-owned [`Corpus`] and over an mmapped `.arena` file
+/// ([`crate::data::arena_file::ArenaMap`]).
 #[derive(Clone, Copy, Debug)]
 pub struct CorpusView<'a> {
-    corpus: &'a Corpus,
+    /// Every document's tokens, concatenated.
+    tokens: &'a [u32],
+    /// CSR prefix sums: arena doc d is `tokens[off[d]..off[d+1]]`.
+    doc_offsets: &'a [u32],
+    /// Per-document responses, parallel to arena documents.
+    resp: &'a [f64],
+    vocab: usize,
     /// `None` = all documents in arena order; `Some` = shard doc indices.
     ids: Option<&'a [usize]>,
 }
@@ -201,22 +225,78 @@ impl<'a> From<&'a Corpus> for CorpusView<'a> {
 }
 
 impl<'a> CorpusView<'a> {
+    /// Build a view straight from borrowed CSR slices, checking the same
+    /// structural invariants as [`Corpus::from_parts`]. This is how an
+    /// mmapped arena hands out views without owning `Vec`s.
+    pub fn from_parts(
+        tokens: &'a [u32],
+        doc_offsets: &'a [u32],
+        responses: &'a [f64],
+        vocab: usize,
+        ids: Option<&'a [usize]>,
+    ) -> anyhow::Result<CorpusView<'a>> {
+        anyhow::ensure!(
+            !doc_offsets.is_empty() && doc_offsets[0] == 0,
+            "doc_offsets must start with 0"
+        );
+        anyhow::ensure!(
+            doc_offsets.len() == responses.len() + 1,
+            "doc_offsets length {} != responses length {} + 1",
+            doc_offsets.len(),
+            responses.len()
+        );
+        anyhow::ensure!(
+            *doc_offsets.last().unwrap() as usize == tokens.len(),
+            "last offset {} != token count {}",
+            doc_offsets.last().unwrap(),
+            tokens.len()
+        );
+        anyhow::ensure!(
+            doc_offsets.windows(2).all(|w| w[0] <= w[1]),
+            "doc_offsets must be non-decreasing"
+        );
+        if let Some(ids) = ids {
+            let n = doc_offsets.len() - 1;
+            if let Some(&bad) = ids.iter().find(|&&d| d >= n) {
+                anyhow::bail!("view references document {bad} >= corpus size {n}");
+            }
+        }
+        Ok(CorpusView { tokens, doc_offsets, resp: responses, vocab, ids })
+    }
+
+    /// Documents in the *underlying arena* (not the view's subset).
+    #[inline]
+    fn arena_num_docs(&self) -> usize {
+        self.doc_offsets.len() - 1
+    }
+
+    /// Arena document d's tokens.
+    #[inline]
+    fn arena_doc_tokens(&self, d: usize) -> &'a [u32] {
+        &self.tokens[self.doc_offsets[d] as usize..self.doc_offsets[d + 1] as usize]
+    }
+
+    #[inline]
+    fn arena_doc_len(&self, d: usize) -> usize {
+        (self.doc_offsets[d + 1] - self.doc_offsets[d]) as usize
+    }
+
     pub fn num_docs(&self) -> usize {
         match self.ids {
             Some(ids) => ids.len(),
-            None => self.corpus.num_docs(),
+            None => self.arena_num_docs(),
         }
     }
 
     pub fn num_tokens(&self) -> usize {
         match self.ids {
-            Some(ids) => ids.iter().map(|&d| self.corpus.doc_len(d)).sum(),
-            None => self.corpus.num_tokens(),
+            Some(ids) => ids.iter().map(|&d| self.arena_doc_len(d)).sum(),
+            None => self.tokens.len(),
         }
     }
 
     pub fn vocab_size(&self) -> usize {
-        self.corpus.vocab_size
+        self.vocab
     }
 
     /// True when this view covers the whole corpus (no index indirection —
@@ -237,17 +317,17 @@ impl<'a> CorpusView<'a> {
     /// The i-th document's tokens, borrowed straight from the arena.
     #[inline]
     pub fn doc_tokens(&self, i: usize) -> &'a [u32] {
-        self.corpus.doc_tokens(self.doc_id(i))
+        self.arena_doc_tokens(self.doc_id(i))
     }
 
     #[inline]
     pub fn doc_len(&self, i: usize) -> usize {
-        self.corpus.doc_len(self.doc_id(i))
+        self.arena_doc_len(self.doc_id(i))
     }
 
     #[inline]
     pub fn response(&self, i: usize) -> f64 {
-        self.corpus.responses[self.doc_id(i)]
+        self.resp[self.doc_id(i)]
     }
 
     /// Materialize the responses in view order (labels are the one thing a
@@ -289,10 +369,10 @@ impl<'a> CorpusView<'a> {
     pub fn validate(&self) -> anyhow::Result<()> {
         let vocab = self.vocab_size();
         if let Some(ids) = self.ids {
-            if let Some(&bad) = ids.iter().find(|&&d| d >= self.corpus.num_docs()) {
+            if let Some(&bad) = ids.iter().find(|&&d| d >= self.arena_num_docs()) {
                 anyhow::bail!(
                     "view references document {bad} >= corpus size {}",
-                    self.corpus.num_docs()
+                    self.arena_num_docs()
                 );
             }
         }
@@ -423,6 +503,39 @@ mod tests {
         assert!(
             Corpus::from_parts(vec![0, 1], vec![0, 2, 1, 2], vec![1.0, 2.0, 3.0], 3).is_err()
         );
+    }
+
+    #[test]
+    fn view_from_parts_checks_invariants_and_matches_corpus_view() {
+        let c = mini();
+        let v = CorpusView::from_parts(&c.tokens, &c.doc_offsets, &c.responses, 3, None)
+            .unwrap();
+        assert!(v.is_full());
+        assert_eq!(v.num_docs(), 3);
+        assert_eq!(v.num_tokens(), 7);
+        assert_eq!(v.doc_tokens(1), c.doc_tokens(1));
+        assert_eq!(v.responses(), c.responses());
+        v.validate().unwrap();
+        // shard ids work too, and out-of-range ids are rejected up front
+        let ids = vec![2usize, 0];
+        let s = CorpusView::from_parts(&c.tokens, &c.doc_offsets, &c.responses, 3, Some(&ids))
+            .unwrap();
+        assert_eq!(s.num_docs(), 2);
+        assert_eq!(s.doc_tokens(0), &[0]);
+        let bad = vec![9usize];
+        assert!(CorpusView::from_parts(
+            &c.tokens,
+            &c.doc_offsets,
+            &c.responses,
+            3,
+            Some(&bad)
+        )
+        .is_err());
+        // structural CSR failures mirror Corpus::from_parts
+        assert!(CorpusView::from_parts(&[0], &[1, 1], &[1.0], 3, None).is_err());
+        assert!(CorpusView::from_parts(&[0, 1], &[0, 1], &[1.0], 3, None).is_err());
+        assert!(CorpusView::from_parts(&[0, 1], &[0, 2, 1, 2], &[1.0, 2.0, 3.0], 3, None)
+            .is_err());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! DESIGN.md §3 for the substitution argument. The text path (`tokenizer` +
 //! `vocab` + `loader`) is fully functional for users with real corpora.
 
+pub mod arena_file;
 pub mod corpus;
 pub mod loader;
 pub mod partition;

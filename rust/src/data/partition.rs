@@ -9,13 +9,23 @@
 use super::corpus::{Corpus, CorpusView, Dataset};
 use crate::util::rng::Pcg64;
 
+/// The index permutation behind [`train_test_split`], exposed so the
+/// multi-process driver can replay the exact same split (identical RNG
+/// draws) against an mmapped arena without materializing sub-corpora:
+/// `(train_ids, test_ids)` in selection order.
+pub fn split_indices(n_docs: usize, n_train: usize, rng: &mut Pcg64) -> (Vec<usize>, Vec<usize>) {
+    assert!(n_train <= n_docs, "n_train {n_train} > docs {n_docs}");
+    let mut idx: Vec<usize> = (0..n_docs).collect();
+    rng.shuffle(&mut idx);
+    let test = idx.split_off(n_train);
+    (idx, test)
+}
+
 /// Random train/test split with exactly `n_train` training documents.
 pub fn train_test_split(corpus: &Corpus, n_train: usize, rng: &mut Pcg64) -> Dataset {
-    assert!(n_train <= corpus.num_docs(), "n_train {} > docs {}", n_train, corpus.num_docs());
-    let mut idx: Vec<usize> = (0..corpus.num_docs()).collect();
-    rng.shuffle(&mut idx);
-    let train = corpus.select(&idx[..n_train]);
-    let test = corpus.select(&idx[n_train..]);
+    let (train_ids, test_ids) = split_indices(corpus.num_docs(), n_train, rng);
+    let train = corpus.select(&train_ids);
+    let test = corpus.select(&test_ids);
     Dataset { train, test }
 }
 
@@ -80,6 +90,15 @@ mod tests {
             .collect();
         all.sort_unstable();
         assert_eq!(all, (0..100).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn split_indices_replays_train_test_split() {
+        let c = corpus(40);
+        let ds = train_test_split(&c, 29, &mut Pcg64::seed_from_u64(9));
+        let (train_ids, test_ids) = split_indices(40, 29, &mut Pcg64::seed_from_u64(9));
+        assert_eq!(c.select(&train_ids), ds.train);
+        assert_eq!(c.select(&test_ids), ds.test);
     }
 
     #[test]

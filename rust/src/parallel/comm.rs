@@ -103,6 +103,17 @@ pub fn view_setup_bytes(v: &CorpusView<'_>) -> (u64, u64) {
     (copied, referenced)
 }
 
+/// Setup cost of a multi-process worker mapping a `CFSARENA1` file
+/// (`cfslda train-shard`): `(copied, referenced)` bytes.
+///
+/// Nothing is copied at all — not even doc-index lists, which live in the
+/// worker's own address space and are derived, not shipped; the whole
+/// mapped file is shared by reference through the page cache. This is the
+/// out-of-core analogue of a full [`CorpusView`] handoff.
+pub fn mmap_setup_bytes(mapped_len: usize) -> (u64, u64) {
+    (0, mapped_len as u64)
+}
+
 /// Wire size of a trained local model summary: eta (f64 x T) + phi
 /// (f32 x W x T) + scalars.
 pub fn model_bytes(t: usize, w: usize) -> u64 {
@@ -202,6 +213,11 @@ mod tests {
     fn model_and_pred_bytes() {
         assert_eq!(model_bytes(8, 100), (8 * 8 + 100 * 8 * 4 + 32) as u64);
         assert_eq!(predictions_bytes(10), 80);
+    }
+
+    #[test]
+    fn mmap_setup_copies_nothing() {
+        assert_eq!(mmap_setup_bytes(1 << 20), (0, 1 << 20));
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //!   pool, runs the combination stage, and reports metrics + timings per
 //!   algorithm (NonParallel / NaiveCombination / SimpleAverage /
 //!   WeightedAverage).
+//! * [`multiproc`] — the same fan-out as separate OS processes over an
+//!   mmapped `CFSARENA1` arena (`train-shard` / `combine`), byte-identical
+//!   to the in-process run.
 
 pub mod comm;
 pub mod leader;
+pub mod multiproc;
 pub mod worker;

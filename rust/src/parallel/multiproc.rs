@@ -1,0 +1,589 @@
+//! Multi-process communication-free training over an mmapped arena
+//! (DESIGN.md §Out-of-core).
+//!
+//! `cfslda train-shard --arena corpus.arena --shard j/M` runs exactly one
+//! worker's chain in its own OS process and persists a
+//! [`ShardArtifact`]; `cfslda combine` loads the M artifacts and applies
+//! the paper's combination rules. Because the processes share the arena
+//! file read-only through the page cache and never talk to each other,
+//! this is the paper's communication-free claim taken literally: the only
+//! bytes that move are the final model shards.
+//!
+//! **Determinism.** A multi-process run is byte-identical to the
+//! in-process `run_with_engine` for the same config: [`plan_run`] replays
+//! the exact leader RNG draws — the `seed ^ 0x5911_7001` train/test
+//! shuffle the CLI performs, then `random_shards` and the per-shard
+//! `split(i)` derivations on the `seed` stream, in order (each `split`
+//! consumes leader state, so all M are replayed even though a process
+//! keeps only its own). Shard j's documents are the same documents in the
+//! same order — views over the mapped arena compose the train/test
+//! selection with the shard partition — so every Gibbs chain sees
+//! identical bytes and makes identical draws. A leader-level test pins
+//! `train-shard`×M + `combine` bit-for-bit against the in-process run.
+//!
+//! [`ShardArtifact`]: crate::combine::artifact::ShardArtifact
+
+use crate::ckpt::{config_fingerprint, GenCoordinator, ShardState, StdFs, Store};
+use crate::combine::artifact::ShardArtifact;
+use crate::combine::rules::combine_median;
+use crate::combine::{combine_predictions, weights, CombineRule, WeightScheme};
+use crate::config::schema::ExperimentConfig;
+use crate::config::validate::validate;
+use crate::data::arena_file::ArenaMap;
+use crate::data::partition::{random_shards, split_indices};
+use crate::eval::metrics::{compute, Metrics};
+use crate::parallel::comm::{
+    mmap_setup_bytes, model_bytes, predictions_bytes, CommLedger, CommStats,
+};
+use crate::parallel::leader::Algorithm;
+use crate::parallel::worker::{run_worker_ckpt, WorkerPlan, WorkerRun};
+use crate::runtime::EngineHandle;
+use crate::sampler::gibbs_train::CkptHook;
+use crate::util::rng::Pcg64;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+
+/// `--shard j/M`: which worker this process is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub shard: usize,
+    pub m: usize,
+}
+
+impl ShardSpec {
+    /// Parse `"j/M"` (0-based shard index, total count).
+    pub fn parse(s: &str) -> anyhow::Result<ShardSpec> {
+        let (a, b) = s
+            .split_once('/')
+            .ok_or_else(|| anyhow::anyhow!("--shard wants 'j/M' (e.g. 0/4), got '{s}'"))?;
+        let shard: usize = a.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad shard index '{a}' in --shard '{s}'")
+        })?;
+        let m: usize = b.trim().parse().map_err(|_| {
+            anyhow::anyhow!("bad shard count '{b}' in --shard '{s}'")
+        })?;
+        anyhow::ensure!(m > 0, "--shard count must be positive, got {m}");
+        anyhow::ensure!(shard < m, "--shard index {shard} out of range 0..{m}");
+        Ok(ShardSpec { shard, m })
+    }
+}
+
+/// The replayed leader plan: what the in-process leader would have drawn.
+/// `shards[j]` holds *positions into `train_ids`* (the in-process shard
+/// partition is over the selected training corpus); compose with
+/// `train_ids` via [`MultiprocPlan::shard_arena_ids`] to get arena doc ids.
+#[derive(Clone, Debug)]
+pub struct MultiprocPlan {
+    /// Arena doc ids of the training documents, selection order.
+    pub train_ids: Vec<usize>,
+    /// Arena doc ids of the test documents, selection order.
+    pub test_ids: Vec<usize>,
+    pub shards: Vec<Vec<usize>>,
+    /// Per-shard RNG streams, exactly the leader's `rng.split(i)` results.
+    pub worker_rngs: Vec<Pcg64>,
+}
+
+impl MultiprocPlan {
+    /// Arena doc ids of shard `j`'s documents, in chain order.
+    pub fn shard_arena_ids(&self, j: usize) -> Vec<usize> {
+        self.shards[j].iter().map(|&k| self.train_ids[k]).collect()
+    }
+}
+
+/// Replay the in-process leader's RNG draws for a corpus of `n_docs`
+/// documents split into `n_train` training docs and `m` shards.
+///
+/// Draw-for-draw mirror of the single-process path: `cmd_run`'s
+/// `seed ^ 0x5911_7001` stream shuffles the train/test permutation, then
+/// `run_with_engine`'s `seed` stream feeds `random_shards` and the
+/// per-shard `Pcg64::split(i)` calls for i = 0..M **in order** — `split`
+/// advances the parent stream, so skipping earlier shards would derange
+/// every later one.
+pub fn plan_run(cfg: &ExperimentConfig, n_docs: usize, n_train: usize, m: usize) -> MultiprocPlan {
+    let mut split_rng = Pcg64::seed_from_u64(cfg.seed ^ 0x5911_7001);
+    let (train_ids, test_ids) = split_indices(n_docs, n_train, &mut split_rng);
+    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let shards = random_shards(train_ids.len(), m, &mut rng);
+    let worker_rngs = (0..m).map(|i| rng.split(i as u64)).collect();
+    MultiprocPlan { train_ids, test_ids, shards, worker_rngs }
+}
+
+/// The combination rule a prediction-combining algorithm runs under
+/// (train-shard / combine support exactly these three).
+fn rule_for(algo: Algorithm, cfg: &ExperimentConfig) -> anyhow::Result<CombineRule> {
+    Ok(match algo {
+        Algorithm::SimpleAverage => CombineRule::Simple,
+        Algorithm::WeightedAverage => {
+            CombineRule::Weighted(WeightScheme::for_response(cfg.response))
+        }
+        Algorithm::MedianAverage => CombineRule::Median,
+        Algorithm::NonParallel | Algorithm::NaiveCombination => anyhow::bail!(
+            "train-shard/combine supports the prediction-combining algorithms \
+             (simple/weighted/median); '{}' needs the in-process runner",
+            algo.name()
+        ),
+    })
+}
+
+/// Everything one `train-shard` process needs.
+pub struct TrainShardJob<'a> {
+    pub arena: &'a ArenaMap,
+    pub cfg: &'a ExperimentConfig,
+    pub engine: &'a EngineHandle,
+    pub algo: Algorithm,
+    pub spec: ShardSpec,
+    /// Training-set size (the CLI defaults it to `3/4 · docs` exactly like
+    /// `cfslda run`).
+    pub n_train: usize,
+    /// Artifact output path.
+    pub out: PathBuf,
+    pub resume: bool,
+    pub stop: Option<&'a AtomicBool>,
+}
+
+/// Result of one shard process.
+pub enum ShardRunOutcome {
+    Done { artifact: Box<ShardArtifact>, comm: CommStats },
+    /// Stopped cleanly at a checkpoint boundary (`--resume` continues it).
+    Interrupted { next_sweep: u64 },
+}
+
+/// Checkpoint store directory for one shard process:
+/// `<checkpoint_dir>/<algorithm>-seed<seed>-shard<j>of<m>`. Each process
+/// owns its directory outright — crash recovery needs no cross-process
+/// manifest coordination, each shard commits generations alone.
+pub fn shard_store_dir(cfg: &ExperimentConfig, algo: Algorithm, spec: ShardSpec) -> PathBuf {
+    Path::new(&cfg.train.checkpoint_dir).join(format!(
+        "{}-seed{}-shard{}of{}",
+        algo.name(),
+        cfg.seed,
+        spec.shard,
+        spec.m
+    ))
+}
+
+/// Run shard `spec.shard` of an M-process run against the mapped arena and
+/// persist its artifact. Byte-identical to worker `spec.shard` of the
+/// in-process `run_with_engine` with `cfg.parallel.shards = spec.m`.
+pub fn run_train_shard(job: TrainShardJob<'_>) -> anyhow::Result<ShardRunOutcome> {
+    let TrainShardJob { arena, cfg, engine, algo, spec, n_train, out, resume, stop } = job;
+    validate(cfg)?;
+    let rule = rule_for(algo, cfg)?;
+    anyhow::ensure!(
+        n_train <= arena.num_docs(),
+        "n_train {n_train} > arena docs {}",
+        arena.num_docs()
+    );
+
+    let plan = plan_run(cfg, arena.num_docs(), n_train, spec.m);
+    let shard_ids = plan.shard_arena_ids(spec.shard);
+    let shard_view = arena.view_of(&shard_ids)?;
+    let test_view = arena.view_of(&plan.test_ids)?;
+    let full_train_view = arena.view_of(&plan.train_ids)?;
+
+    // Out-of-core accounting: the whole mapped file is referenced, nothing
+    // is copied — doc-id lists are derived in-process, not shipped.
+    let ledger = CommLedger::new();
+    let (copied, referenced) = mmap_setup_bytes(arena.mapped_len());
+    ledger.add_setup_copied(copied);
+    ledger.add_setup_referenced(referenced);
+
+    let wplan = WorkerPlan {
+        predict_test: true,
+        predict_full_train: matches!(
+            rule,
+            CombineRule::Weighted(WeightScheme::InverseMse)
+                | CombineRule::Weighted(WeightScheme::Accuracy)
+        ),
+    };
+
+    // The fingerprint matches the in-process run's (train dims + algorithm
+    // + shard count M), so artifacts and checkpoints from different
+    // configurations can never be combined or resumed across.
+    let fingerprint = config_fingerprint(
+        cfg,
+        full_train_view.num_docs(),
+        full_train_view.num_tokens(),
+        arena.vocab_size(),
+        algo.name(),
+        spec.m,
+    );
+
+    let fs = StdFs;
+    let enabled = cfg.train.checkpoint_every > 0 && !cfg.train.checkpoint_dir.is_empty();
+    anyhow::ensure!(
+        !resume || enabled,
+        "--resume requested but checkpointing is disabled \
+         (set train.checkpoint_every and train.checkpoint_dir)"
+    );
+    let store = enabled.then(|| Store::new(&fs, shard_store_dir(cfg, algo, spec)));
+    let coord = GenCoordinator::new(1, fingerprint);
+    let resume_state = match (&store, resume) {
+        (Some(store), true) => {
+            let r = store.load_latest(fingerprint)?;
+            anyhow::ensure!(
+                r.states.len() == 1,
+                "shard checkpoint holds {} states, want exactly 1",
+                r.states.len()
+            );
+            log::info!(
+                "train-shard {}/{}: resuming from generation {} (sweep {} of {})",
+                spec.shard,
+                spec.m,
+                r.generation,
+                r.next_sweep,
+                cfg.train.sweeps
+            );
+            Some(r.states.into_iter().next().unwrap())
+        }
+        _ => None,
+    };
+
+    let sink = |state: ShardState| -> anyhow::Result<()> {
+        let store = store.as_ref().expect("sink only wired when the store exists");
+        let generation = state.next_sweep;
+        let entry = store.write_shard(generation, &state)?;
+        if let Some((manifest, total_us)) = coord.shard_done(generation, entry, 0) {
+            store.commit_manifest(generation, &manifest, total_us)?;
+        }
+        Ok(())
+    };
+    let hook = store.is_some().then(|| CkptHook {
+        shard_id: spec.shard as u32,
+        resume: resume_state,
+        sink: Some(&sink),
+        stop,
+    });
+
+    let run = run_worker_ckpt(
+        spec.shard,
+        shard_view,
+        test_view,
+        full_train_view,
+        wplan,
+        cfg,
+        engine,
+        plan.worker_rngs[spec.shard].clone(),
+        hook,
+    )?;
+    let output = match run {
+        WorkerRun::Done(o) => o,
+        WorkerRun::Interrupted { next_sweep, .. } => {
+            return Ok(ShardRunOutcome::Interrupted { next_sweep });
+        }
+    };
+
+    // Gather leg: exactly what the in-process leader prices per worker.
+    let mut gather = model_bytes(output.train.model.t, output.train.model.w);
+    if output.test_pred.is_some() {
+        gather += predictions_bytes(test_view.num_docs());
+    }
+    if output.full_train_quality.is_some() {
+        gather += 16; // (mse, acc) pair
+    }
+    ledger.add_gather(gather);
+
+    let test_pred = output.test_pred.as_ref().expect("planned test prediction");
+    let artifact = ShardArtifact {
+        fingerprint,
+        algorithm: algo.name().to_string(),
+        shard_id: spec.shard as u32,
+        m: spec.m as u32,
+        response: cfg.response,
+        model: output.train.model.clone(),
+        test_yhat: test_pred.yhat.clone(),
+        // Labels ride along so `combine` is standalone; they come from the
+        // shared arena, not from another worker — the chains themselves
+        // never see them (workers predict unlabeled).
+        test_labels: test_view.responses(),
+        full_train_quality: output.full_train_quality,
+        tokens_sampled: output.train.tokens_sampled,
+        docs: shard_ids.len() as u64,
+    };
+    artifact.save(&out)?;
+    Ok(ShardRunOutcome::Done { artifact: Box::new(artifact), comm: ledger.snapshot() })
+}
+
+/// `cfslda combine`'s result.
+#[derive(Clone, Debug)]
+pub struct CombineOutput {
+    pub algorithm: Algorithm,
+    pub yhat: Vec<f64>,
+    pub test_metrics: Metrics,
+    pub weights: Vec<f64>,
+    /// Gather-side ledger: model shards + local predictions, nothing else.
+    pub comm: CommStats,
+    pub fingerprint: u64,
+    pub tokens_sampled: u64,
+}
+
+/// Combine M shard artifacts into the global prediction — the exact
+/// combination stage of the in-process `run_prediction_combining`,
+/// operating on persisted artifacts instead of in-memory worker outputs.
+/// Refuses mixed fingerprints, inconsistent coordinates, incomplete shard
+/// sets, and disagreeing test labels.
+pub fn combine_artifacts(
+    engine: &EngineHandle,
+    artifacts: &[ShardArtifact],
+) -> anyhow::Result<CombineOutput> {
+    anyhow::ensure!(!artifacts.is_empty(), "no shard artifacts to combine");
+    let mut arts: Vec<&ShardArtifact> = artifacts.iter().collect();
+    arts.sort_by_key(|a| a.shard_id);
+    let first = arts[0];
+    let m = first.m as usize;
+    anyhow::ensure!(
+        arts.len() == m,
+        "run has M={m} shards but {} artifacts were given",
+        arts.len()
+    );
+    for (j, a) in arts.iter().enumerate() {
+        anyhow::ensure!(
+            a.shard_id as usize == j,
+            "shard set incomplete: expected shard {j}, found {}",
+            a.shard_id
+        );
+        anyhow::ensure!(
+            a.fingerprint == first.fingerprint,
+            "shard {} was produced by a different run \
+             (fingerprint {:#018x}, shard 0 has {:#018x})",
+            a.shard_id,
+            a.fingerprint,
+            first.fingerprint
+        );
+        anyhow::ensure!(
+            a.m == first.m && a.algorithm == first.algorithm && a.response == first.response,
+            "shard {} disagrees on run coordinates (m/algorithm/response)",
+            a.shard_id
+        );
+        anyhow::ensure!(
+            a.test_yhat.len() == first.test_yhat.len(),
+            "shard {} predicted {} test docs, shard 0 predicted {}",
+            a.shard_id,
+            a.test_yhat.len(),
+            first.test_yhat.len()
+        );
+        let labels_match = a.test_labels.len() == first.test_labels.len()
+            && a
+                .test_labels
+                .iter()
+                .zip(&first.test_labels)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+        anyhow::ensure!(labels_match, "shard {} carries different test labels", a.shard_id);
+    }
+    let algo = Algorithm::parse(&first.algorithm)?;
+    let rule = match algo {
+        Algorithm::SimpleAverage => CombineRule::Simple,
+        Algorithm::WeightedAverage => {
+            CombineRule::Weighted(WeightScheme::for_response(first.response))
+        }
+        Algorithm::MedianAverage => CombineRule::Median,
+        other => anyhow::bail!("artifacts name non-combinable algorithm '{}'", other.name()),
+    };
+
+    // Gather pricing: identical to the in-process leader's per-worker sum.
+    let ledger = CommLedger::new();
+    for a in &arts {
+        let mut gather = model_bytes(a.model.t, a.model.w);
+        gather += predictions_bytes(a.test_yhat.len());
+        if a.full_train_quality.is_some() {
+            gather += 16;
+        }
+        ledger.add_gather(gather);
+    }
+
+    let local_preds: Vec<Vec<f64>> = arts.iter().map(|a| a.test_yhat.clone()).collect();
+    let (train_mses, train_accs): (Vec<f64>, Vec<f64>) =
+        arts.iter().map(|a| a.full_train_quality.unwrap_or((0.0, 0.0))).unzip();
+    let w = weights(rule, &train_mses, &train_accs)?;
+    let yhat = if rule == CombineRule::Median {
+        combine_median(&local_preds)?
+    } else {
+        combine_predictions(engine, &local_preds, &w)?
+    };
+    let metrics = compute(&yhat, &first.test_labels);
+    Ok(CombineOutput {
+        algorithm: algo,
+        yhat,
+        test_metrics: metrics,
+        weights: w,
+        comm: ledger.snapshot(),
+        fingerprint: first.fingerprint,
+        tokens_sampled: arts.iter().map(|a| a.tokens_sampled).sum(),
+    })
+}
+
+/// Load every `*.shrd` file in `dir`, sorted by file name.
+pub fn load_artifact_dir(dir: &Path) -> anyhow::Result<Vec<ShardArtifact>> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading artifact dir {dir:?}: {e}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "shrd"))
+        .collect();
+    paths.sort();
+    anyhow::ensure!(!paths.is_empty(), "no .shrd artifacts in {dir:?}");
+    paths.iter().map(|p| ShardArtifact::load(p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::arena_file::write_arena;
+    use crate::data::partition::train_test_split;
+    use crate::data::synthetic::{generate_corpus, SyntheticSpec};
+    use crate::parallel::leader::run_with_engine;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_mp_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn shard_spec_parses() {
+        assert_eq!(ShardSpec::parse("0/4").unwrap(), ShardSpec { shard: 0, m: 4 });
+        assert_eq!(ShardSpec::parse("3/4").unwrap(), ShardSpec { shard: 3, m: 4 });
+        assert!(ShardSpec::parse("4/4").is_err());
+        assert!(ShardSpec::parse("1/0").is_err());
+        assert!(ShardSpec::parse("nope").is_err());
+        assert!(ShardSpec::parse("1-4").is_err());
+    }
+
+    #[test]
+    fn plan_matches_in_process_partition() {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.seed = 77;
+        let (n_docs, n_train, m) = (40usize, 30usize, 3usize);
+        let plan = plan_run(&cfg, n_docs, n_train, m);
+        assert_eq!(plan.train_ids.len(), n_train);
+        assert_eq!(plan.test_ids.len(), n_docs - n_train);
+        assert_eq!(plan.shards.len(), m);
+        assert_eq!(plan.worker_rngs.len(), m);
+        // replay the in-process draws by hand and compare
+        let mut split_rng = Pcg64::seed_from_u64(cfg.seed ^ 0x5911_7001);
+        let (want_train, want_test) = split_indices(n_docs, n_train, &mut split_rng);
+        assert_eq!(plan.train_ids, want_train);
+        assert_eq!(plan.test_ids, want_test);
+        let mut rng = Pcg64::seed_from_u64(cfg.seed);
+        let want_shards = random_shards(n_train, m, &mut rng);
+        assert_eq!(plan.shards, want_shards);
+        // shard_arena_ids composes partition positions with the selection
+        let ids = plan.shard_arena_ids(1);
+        assert_eq!(ids.len(), plan.shards[1].len());
+        for (k, &id) in ids.iter().enumerate() {
+            assert_eq!(id, plan.train_ids[plan.shards[1][k]]);
+        }
+    }
+
+    /// The tentpole's acceptance test: `train-shard`×M through persisted
+    /// artifacts + `combine` must be byte-identical to the in-process
+    /// `run_with_engine` — same yhat bits, same weights — and the ledger
+    /// must show zero setup bytes copied with the mapped file as the only
+    /// referenced traffic.
+    #[test]
+    fn multiproc_is_byte_identical_to_in_process() {
+        let mut spec = SyntheticSpec::continuous_small();
+        spec.docs = 48;
+        let mut cfg = ExperimentConfig::quick();
+        cfg.seed = 4242;
+        cfg.parallel.shards = 3;
+        cfg.parallel.threads = 2;
+        let m = cfg.parallel.shards;
+        let corpus = generate_corpus(&spec, &mut Pcg64::seed_from_u64(cfg.seed));
+        let n_train = corpus.num_docs() * 3 / 4;
+        let engine = EngineHandle::native();
+
+        // in-process reference, replaying exactly what `cfslda run` does
+        let mut split_rng = Pcg64::seed_from_u64(cfg.seed ^ 0x5911_7001);
+        let ds = train_test_split(&corpus, n_train, &mut split_rng);
+
+        for algo in [Algorithm::WeightedAverage, Algorithm::MedianAverage] {
+            let (want, _) = run_with_engine(algo, &ds, &cfg, &engine, false).unwrap();
+
+            let arena_path = tmp(&format!("ident_{}.arena", algo.name()));
+            write_arena(&corpus, &arena_path).unwrap();
+            let arena = ArenaMap::open(&arena_path).unwrap();
+
+            let mut artifacts = Vec::new();
+            for j in 0..m {
+                let out = tmp(&ShardArtifact::file_name(j as u32, m as u32));
+                let outcome = run_train_shard(TrainShardJob {
+                    arena: &arena,
+                    cfg: &cfg,
+                    engine: &engine,
+                    algo,
+                    spec: ShardSpec { shard: j, m },
+                    n_train,
+                    out: out.clone(),
+                    resume: false,
+                    stop: None,
+                })
+                .unwrap();
+                let comm = match outcome {
+                    ShardRunOutcome::Done { comm, .. } => comm,
+                    ShardRunOutcome::Interrupted { .. } => panic!("no stop flag set"),
+                };
+                // out-of-core setup: zero copied, the mapping referenced
+                assert_eq!(comm.setup_copied_bytes, 0);
+                assert_eq!(comm.setup_referenced_bytes, arena.mapped_len() as u64);
+                assert_eq!(comm.sampling_syncs, 0);
+                // reload through disk — the artifact codec is in the loop
+                artifacts.push(ShardArtifact::load(&out).unwrap());
+                std::fs::remove_file(&out).ok();
+            }
+
+            let got = combine_artifacts(&engine, &artifacts).unwrap();
+            assert_eq!(got.algorithm, algo);
+            assert_eq!(got.yhat.len(), want.yhat.len());
+            let bits_equal = got
+                .yhat
+                .iter()
+                .zip(&want.yhat)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(bits_equal, "{}: multiproc yhat differs from in-process", algo.name());
+            assert_eq!(got.weights, want.weights.clone().unwrap());
+            assert_eq!(got.test_metrics.mse, want.test_metrics.mse);
+            // gather = model shards + local predictions (+ quality pairs)
+            let extra = if algo == Algorithm::WeightedAverage { 16 } else { 0 };
+            let per_worker = model_bytes(cfg.model.topics, corpus.vocab_size)
+                + predictions_bytes(ds.test.num_docs())
+                + extra;
+            assert_eq!(got.comm.gather_bytes, per_worker * m as u64);
+            assert_eq!(got.comm.setup_copied_bytes, 0);
+
+            drop(arena);
+            std::fs::remove_file(&arena_path).ok();
+        }
+    }
+
+    #[test]
+    fn combine_refuses_inconsistent_artifact_sets() {
+        use crate::combine::artifact::tests::sample;
+        let engine = EngineHandle::native();
+        // incomplete set
+        let err = combine_artifacts(&engine, &[sample(1, 0, 2)]).unwrap_err().to_string();
+        assert!(err.contains("M=2"), "{err}");
+        // mixed fingerprints
+        let a = sample(1, 0, 2);
+        let b = sample(2, 1, 2); // different seed → different fingerprint
+        let err = combine_artifacts(&engine, &[a.clone(), b]).unwrap_err().to_string();
+        assert!(err.contains("different run"), "{err}");
+        // duplicate shard ids
+        let err =
+            combine_artifacts(&engine, &[a.clone(), a.clone()]).unwrap_err().to_string();
+        assert!(err.contains("incomplete"), "{err}");
+        // disagreeing labels
+        let mut c = sample(1, 1, 2);
+        c.test_labels[0] += 1.0;
+        let err = combine_artifacts(&engine, &[a, c]).unwrap_err().to_string();
+        assert!(err.contains("labels"), "{err}");
+    }
+
+    #[test]
+    fn train_shard_rejects_non_combinable_algorithms() {
+        let cfg = ExperimentConfig::quick();
+        assert!(rule_for(Algorithm::NonParallel, &cfg).is_err());
+        assert!(rule_for(Algorithm::NaiveCombination, &cfg).is_err());
+        assert!(rule_for(Algorithm::SimpleAverage, &cfg).is_ok());
+    }
+}

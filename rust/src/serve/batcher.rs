@@ -86,10 +86,55 @@ pub struct Completion {
 struct CompletionInner {
     slots: Vec<Option<anyhow::Result<DocOut>>>,
     remaining: usize,
-    /// Event-loop rendezvous: when armed with a notify fd, the last fill
-    /// also writes 1 to this eventfd so the epoll reactor wakes without
-    /// any thread parked on the condvar.
-    notify_fd: Option<i32>,
+    /// Event-loop rendezvous: when armed with a [`Waker`], the last fill
+    /// also signals the reactor's (coalesced) eventfd so the epoll loop
+    /// wakes without any thread parked on the condvar.
+    notify: Option<Arc<Waker>>,
+}
+
+/// Coalesced eventfd wakeup shared between batcher workers and the epoll
+/// reactor. Under load many completions resolve between two reactor
+/// iterations; without coalescing each one pays a `write(2)` on the
+/// eventfd. The `pending` flag collapses such bursts: only the first
+/// [`Waker::signal`] since the last [`Waker::clear_pending`] performs the
+/// syscall, every later one is a lone atomic swap.
+///
+/// The fd is borrowed, not owned (the reactor closes its eventfd itself);
+/// a signal after close is a harmless failed write.
+pub struct Waker {
+    fd: i32,
+    pending: AtomicBool,
+}
+
+impl Waker {
+    pub fn new(fd: i32) -> Waker {
+        Waker { fd, pending: AtomicBool::new(false) }
+    }
+
+    /// Worker side: request a reactor wakeup. Best-effort — a failed
+    /// write is ignored, because the reactor also sweeps completions on
+    /// its timeout tick, so a lost wakeup degrades latency, not
+    /// correctness.
+    pub fn signal(&self) {
+        if !self.pending.swap(true, Ordering::AcqRel) {
+            let one: u64 = 1;
+            unsafe {
+                libc::write(self.fd, &one as *const u64 as *const libc::c_void, 8);
+            }
+        }
+    }
+
+    /// Reactor side: re-open the coalescing window. Must be called
+    /// *after* draining the eventfd and *before* sweeping completions.
+    /// Clearing before the drain could leave the flag sticky-true with
+    /// the counter already empty (a concurrent signal sets the flag and
+    /// writes, the drain then swallows that write), suppressing every
+    /// future wakeup; clearing after the drain only risks one spurious
+    /// extra write, and any signal coalesced away between drain and clear
+    /// had already published its completion, which the sweep collects.
+    pub fn clear_pending(&self) {
+        self.pending.store(false, Ordering::Release);
+    }
 }
 
 impl Completion {
@@ -103,18 +148,18 @@ impl Completion {
         inner.slots.clear();
         inner.slots.resize_with(n, || None);
         inner.remaining = n;
-        inner.notify_fd = None;
+        inner.notify = None;
     }
 
-    /// [`Completion::arm`] for the event-loop path: the last fill writes
-    /// 1 to `notify_fd` (an eventfd) instead of relying on a parked
-    /// submitter thread.
-    fn arm_notify(&self, n: usize, notify_fd: i32) {
+    /// [`Completion::arm`] for the event-loop path: the last fill signals
+    /// the reactor's [`Waker`] instead of relying on a parked submitter
+    /// thread.
+    fn arm_notify(&self, n: usize, waker: &Arc<Waker>) {
         let mut inner = self.inner.lock().unwrap();
         inner.slots.clear();
         inner.slots.resize_with(n, || None);
         inner.remaining = n;
-        inner.notify_fd = Some(notify_fd);
+        inner.notify = Some(Arc::clone(waker));
     }
 
     /// Deliver one document's result. First write wins; the last write
@@ -128,8 +173,8 @@ impl Completion {
                 inner.remaining -= 1;
                 if inner.remaining == 0 {
                     self.cv.notify_all();
-                    if let Some(fd) = inner.notify_fd {
-                        signal_eventfd(fd);
+                    if let Some(w) = &inner.notify {
+                        w.signal();
                     }
                 }
             }
@@ -166,17 +211,6 @@ impl Completion {
             o.unwrap_or_else(|| Err(anyhow::anyhow!("server shutting down")))
         }));
         true
-    }
-}
-
-/// Best-effort eventfd signal: adds 1 to the counter, waking an epoll
-/// waiter. Failure is ignored — the reactor also sweeps in-flight
-/// completions on its timeout tick, so a lost wakeup degrades latency,
-/// not correctness.
-fn signal_eventfd(fd: i32) {
-    let one: u64 = 1;
-    unsafe {
-        libc::write(fd, &one as *const u64 as *const libc::c_void, 8);
     }
 }
 
@@ -396,17 +430,17 @@ impl Batcher {
     }
 
     /// Non-blocking, admission-controlled submit for the epoll reactor:
-    /// arms `comp` so the *last* worker fill writes 1 to `notify_fd` (an
-    /// eventfd registered with the event loop), enqueues, and returns
-    /// immediately. Returns `false` (nothing enqueued) when the queue
-    /// bound would be exceeded — the caller sheds the request. Collect
-    /// results later with [`Completion::try_take_into`].
+    /// arms `comp` so the *last* worker fill signals `waker` (the
+    /// reactor's coalesced eventfd), enqueues, and returns immediately.
+    /// Returns `false` (nothing enqueued) when the queue bound would be
+    /// exceeded — the caller sheds the request. Collect results later
+    /// with [`Completion::try_take_into`].
     pub fn submit_streamed_notify(
         &self,
         arena: Arc<TokenArena>,
         seed: u64,
         comp: &Arc<Completion>,
-        notify_fd: i32,
+        waker: &Arc<Waker>,
     ) -> bool {
         let n = arena.num_docs();
         if n == 0 {
@@ -415,7 +449,7 @@ impl Batcher {
             comp.arm(0);
             return true;
         }
-        comp.arm_notify(n, notify_fd);
+        comp.arm_notify(n, waker);
         self.enqueue_bounded(&arena, seed, comp, n)
     }
 
@@ -867,9 +901,10 @@ mod tests {
 
         // 5 docs > bound 4: shed even into an empty queue, nothing
         // enqueued, the completion never resolves.
+        let idle_waker = Arc::new(Waker::new(-1));
         let five = Arc::new(TokenArena::from_docs(&docs(5, 9)));
         let shed_comp = Arc::new(Completion::new());
-        assert!(!b.submit_streamed_notify(Arc::clone(&five), 1, &shed_comp, -1));
+        assert!(!b.submit_streamed_notify(Arc::clone(&five), 1, &shed_comp, &idle_waker));
         assert!(!shed_comp.try_take_into(&mut out));
         // ... and the blocking admission wrapper sheds identically.
         assert!(!b.try_submit_streamed_into(Arc::clone(&five), 1, &shed_comp, &mut out));
@@ -878,7 +913,7 @@ mod tests {
         // Exactly the bound (0 + 4 = 4): admitted and resolved.
         let four = Arc::new(TokenArena::from_docs(&docs(4, 9)));
         let comp = Arc::new(Completion::new());
-        assert!(b.submit_streamed_notify(Arc::clone(&four), 1, &comp, -1));
+        assert!(b.submit_streamed_notify(Arc::clone(&four), 1, &comp, &idle_waker));
         let deadline = Instant::now() + Duration::from_secs(30);
         while !comp.try_take_into(&mut out) {
             assert!(Instant::now() < deadline, "admitted request never resolved");
@@ -935,7 +970,8 @@ mod tests {
         let d = docs(5, 21);
         let arena = Arc::new(TokenArena::from_docs(&d));
         let comp = Arc::new(Completion::new());
-        assert!(b.submit_streamed_notify(Arc::clone(&arena), 6, &comp, efd));
+        let waker = Arc::new(Waker::new(efd));
+        assert!(b.submit_streamed_notify(Arc::clone(&arena), 6, &comp, &waker));
         // Wait for the eventfd to fire (the last fill writes 1).
         let mut val: u64 = 0;
         let deadline = Instant::now() + Duration::from_secs(10);
@@ -962,6 +998,41 @@ mod tests {
         unsafe { libc::close(efd) };
         drop(b);
         std::fs::remove_file(p).ok();
+    }
+
+    /// The waker's coalescing protocol: a burst of signals performs one
+    /// eventfd write; the window stays closed (no further writes) until
+    /// the reactor drains the counter *and then* clears the flag, after
+    /// which the next signal writes again.
+    #[test]
+    fn waker_coalesces_signal_bursts_until_cleared() {
+        let efd = unsafe { libc::eventfd(0, libc::EFD_NONBLOCK | libc::EFD_CLOEXEC) };
+        assert!(efd >= 0);
+        // Drains the counter; -1 = nothing to read (EAGAIN).
+        let drain = |efd: i32| -> i64 {
+            let mut v: u64 = 0;
+            let n = unsafe { libc::read(efd, &mut v as *mut u64 as *mut libc::c_void, 8) };
+            if n == 8 {
+                v as i64
+            } else {
+                -1
+            }
+        };
+        let w = Waker::new(efd);
+        w.signal();
+        w.signal();
+        w.signal();
+        assert_eq!(drain(efd), 1, "a signal burst must collapse to one write");
+        // Drained but not yet cleared: signals stay coalesced.
+        w.signal();
+        assert_eq!(drain(efd), -1, "pre-clear signal must not write");
+        // Reactor protocol: drain (above), clear, sweep — after which the
+        // next burst opens with exactly one fresh write.
+        w.clear_pending();
+        w.signal();
+        w.signal();
+        assert_eq!(drain(efd), 1, "post-clear signal must write once");
+        unsafe { libc::close(efd) };
     }
 
     /// A document that panics the worker mid-dispatch must fail only its

@@ -33,6 +33,7 @@
 
 use crate::data::corpus::TokenArena;
 use crate::obs::Endpoint;
+use crate::serve::batcher::Waker;
 use crate::serve::http::{self, RequestScratch};
 use crate::serve::protocol;
 use crate::serve::server::{self, BodyKind, ConnScratch, HttpError, OpenConnGuard, State};
@@ -158,7 +159,7 @@ impl Conn {
     }
 
     /// EPOLLIN: drain the socket into `inbuf`, then pump the state machine.
-    pub(crate) fn handle_readable(&mut self, state: &State, notify_fd: i32) -> Step {
+    pub(crate) fn handle_readable(&mut self, state: &State, waker: &Arc<Waker>) -> Step {
         let mut chunk = [0u8; 16 * 1024];
         loop {
             match self.stream.read(&mut chunk) {
@@ -177,18 +178,18 @@ impl Conn {
                 Err(_) => return Step::Close,
             }
         }
-        self.advance(state, notify_fd)
+        self.advance(state, waker)
     }
 
     /// EPOLLOUT: flush pending response bytes, then pump the state machine
     /// (a finished response may unblock a pipelined request in `inbuf`).
-    pub(crate) fn handle_writable(&mut self, state: &State, notify_fd: i32) -> Step {
-        self.advance(state, notify_fd)
+    pub(crate) fn handle_writable(&mut self, state: &State, waker: &Arc<Waker>) -> Step {
+        self.advance(state, waker)
     }
 
     /// Eventfd/tick sweep: collect a ready batcher completion, render the
     /// response (or re-dispatch on a hot-swap race), and pump.
-    pub(crate) fn poll_completion(&mut self, state: &State, notify_fd: i32) -> Step {
+    pub(crate) fn poll_completion(&mut self, state: &State, waker: &Arc<Waker>) -> Step {
         if !matches!(self.state, ConnState::Dispatched) {
             return Step::Continue;
         }
@@ -196,13 +197,13 @@ impl Conn {
             return Step::Continue; // spurious wake; results still pending
         }
         let d = self.dispatch.take().expect("dispatched conn has dispatch state");
-        self.resolve(state, notify_fd, d);
-        self.advance(state, notify_fd)
+        self.resolve(state, waker, d);
+        self.advance(state, waker)
     }
 
     /// The state-machine pump: loops until no further progress is possible
     /// without new readiness (or a batcher completion).
-    fn advance(&mut self, state: &State, notify_fd: i32) -> Step {
+    fn advance(&mut self, state: &State, waker: &Arc<Waker>) -> Step {
         loop {
             match self.state {
                 ConnState::ReadHead => match http::parse_head(&self.inbuf, &mut self.req) {
@@ -243,7 +244,7 @@ impl Conn {
                     self.req.set_body(&self.inbuf[head_len..total]);
                     self.inbuf.drain(..total);
                     self.read_deadline = None;
-                    self.begin_request(state, notify_fd);
+                    self.begin_request(state, waker);
                 }
                 ConnState::Dispatched => return Step::Continue,
                 ConnState::WriteResponse => match self.flush_out() {
@@ -266,7 +267,7 @@ impl Conn {
 
     /// One fully-framed request is in `self.req`; answer it inline or
     /// dispatch it to the batcher.
-    fn begin_request(&mut self, state: &State, notify_fd: i32) {
+    fn begin_request(&mut self, state: &State, waker: &Arc<Waker>) {
         state.stats.requests.inc();
         self.t0 = Instant::now();
         self.ep = Endpoint::classify(self.req.method(), self.req.path());
@@ -296,12 +297,12 @@ impl Conn {
         };
         self.dispatch =
             Some(Dispatch { seed, is_text, attempts: 0, want: None, arena: None });
-        self.try_dispatch(state, notify_fd);
+        self.try_dispatch(state, waker);
     }
 
     /// One submission attempt for the current [`Dispatch`]. Text requests
     /// (re-)encode against the current vocabulary first.
-    fn try_dispatch(&mut self, state: &State, notify_fd: i32) {
+    fn try_dispatch(&mut self, state: &State, waker: &Arc<Waker>) {
         let mut d = self.dispatch.take().expect("try_dispatch without dispatch state");
         if d.is_text {
             match server::encode_texts_against_current(state, &mut self.out) {
@@ -320,10 +321,10 @@ impl Conn {
             // Same outcome as the threads backend: nothing to enqueue, the
             // (empty) result set renders immediately.
             self.out.results.clear();
-            self.resolve(state, notify_fd, d);
+            self.resolve(state, waker, d);
             return;
         }
-        if !state.batcher.submit_streamed_notify(arena, d.seed, &self.out.comp, notify_fd) {
+        if !state.batcher.submit_streamed_notify(arena, d.seed, &self.out.comp, waker) {
             state.stats.shed.inc();
             self.reclaim(d.arena.take());
             self.queue_http_error(state, server::overloaded());
@@ -336,7 +337,7 @@ impl Conn {
     /// Results for one attempt are in `out.results`: render the response,
     /// or retry on a hot-swap race (same policy/limit as the threads
     /// backend's `SWAP_RACE_RETRIES` loop).
-    fn resolve(&mut self, state: &State, notify_fd: i32, mut d: Dispatch) {
+    fn resolve(&mut self, state: &State, waker: &Arc<Waker>, mut d: Dispatch) {
         match server::render_uniform(d.want, &mut self.out) {
             Ok(true) => {
                 self.reclaim(d.arena.take());
@@ -355,7 +356,7 @@ impl Conn {
                     self.reclaim(d.arena.take());
                 }
                 self.dispatch = Some(d);
-                self.try_dispatch(state, notify_fd);
+                self.try_dispatch(state, waker);
             }
             Err(e) => {
                 self.reclaim(d.arena.take());

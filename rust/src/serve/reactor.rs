@@ -9,12 +9,16 @@
 //!   loop (`SOCK_NONBLOCK | SOCK_CLOEXEC`, one syscall per connection)
 //!   behind the `max_conns` admission gate (`503 Retry-After` + close
 //!   past it).
-//! * cookie `1` — an `eventfd`. Batcher workers signal it when the last
-//!   document of a dispatched predict request resolves
-//!   ([`Completion`]'s notify arm), replacing the blocking condvar
-//!   rendezvous of the threads backend: the reactor wakes, drains the
-//!   counter, and sweeps dispatched connections with the non-blocking
-//!   [`Conn::poll_completion`].
+//! * cookie `1` — an `eventfd`. Batcher workers signal it through a
+//!   coalescing [`Waker`] when the last document of a dispatched predict
+//!   request resolves ([`Completion`]'s notify arm), replacing the
+//!   blocking condvar rendezvous of the threads backend: the reactor
+//!   wakes, drains the counter, re-opens the waker's coalescing window
+//!   (drain first, *then* clear — see [`Waker::clear_pending`]), and
+//!   sweeps dispatched connections with the non-blocking
+//!   [`Conn::poll_completion`]. Coalescing means a burst of completions
+//!   between two reactor iterations costs one `write(2)` syscall total,
+//!   not one per completion.
 //! * cookie `slot + 2` — connections, stored in a slab (`Vec<Option>` +
 //!   free list) so cookies stay dense and stable. Write interest
 //!   (`EPOLLOUT`) is toggled with `EPOLL_CTL_MOD` only while a response
@@ -30,6 +34,7 @@
 //! [`Completion`]: crate::serve::batcher::Completion
 //! [`Conn::poll_completion`]: crate::serve::conn::Conn::poll_completion
 
+use crate::serve::batcher::Waker;
 use crate::serve::conn::{Conn, Step};
 use crate::serve::server::{self, ConnScratch, OpenConnGuard, State};
 use std::net::{TcpListener, TcpStream};
@@ -74,6 +79,10 @@ struct Reactor {
     epfd: i32,
     /// Completion-notify eventfd, shared with batcher workers.
     efd: i32,
+    /// Coalescing wrapper around `efd`, handed to every dispatch so
+    /// worker signal bursts collapse to one eventfd write per reactor
+    /// iteration.
+    waker: Arc<Waker>,
     listener: TcpListener,
     state: Arc<State>,
     shutdown: Arc<AtomicBool>,
@@ -109,6 +118,7 @@ impl Reactor {
         let r = Reactor {
             epfd,
             efd,
+            waker: Arc::new(Waker::new(efd)),
             listener,
             state,
             shutdown,
@@ -150,7 +160,12 @@ impl Reactor {
                 match cookie {
                     LISTENER_COOKIE => self.accept_ready(),
                     EVENTFD_COOKIE => {
+                        // Drain first, then clear: clearing before the
+                        // drain could swallow a concurrent signal's write
+                        // and leave the flag sticky-true, suppressing
+                        // every future wakeup (50ms-tick latency forever).
                         self.drain_eventfd();
+                        self.waker.clear_pending();
                         sweep = true;
                     }
                     c => self.conn_ready((c - CONN_BASE) as usize, mask),
@@ -241,10 +256,10 @@ impl Reactor {
                 // lets a final buffered request be answered first.
                 let mut step = Step::Continue;
                 if mask & (libc::EPOLLIN | libc::EPOLLRDHUP | libc::EPOLLHUP) != 0 {
-                    step = conn.handle_readable(&self.state, self.efd);
+                    step = conn.handle_readable(&self.state, &self.waker);
                 }
                 if step == Step::Continue && mask & libc::EPOLLOUT != 0 {
-                    step = conn.handle_writable(&self.state, self.efd);
+                    step = conn.handle_writable(&self.state, &self.waker);
                 }
                 step
             }
@@ -263,7 +278,7 @@ impl Reactor {
             let step = self.conns[slot]
                 .as_mut()
                 .unwrap()
-                .poll_completion(&self.state, self.efd);
+                .poll_completion(&self.state, &self.waker);
             self.finish_step(slot, step);
         }
     }

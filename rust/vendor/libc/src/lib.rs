@@ -2,7 +2,9 @@
 //! `cfslda::util::timer` needs (`clock_gettime` + `CLOCK_THREAD_CPUTIME_ID`)
 //! plus the readiness-loop surface `cfslda::serve::reactor` needs
 //! (`epoll_*`, `fcntl` O_NONBLOCK, `accept4`, `eventfd`, raw fd
-//! `read`/`write`/`close`). Linux x86_64/aarch64 ABI.
+//! `read`/`write`/`close`) plus the out-of-core arena surface
+//! `cfslda::data::arena_file` needs (`mmap`/`munmap`/`madvise`).
+//! Linux x86_64/aarch64 ABI.
 
 #![allow(non_camel_case_types)]
 
@@ -13,6 +15,7 @@ pub type time_t = i64;
 pub type size_t = usize;
 pub type ssize_t = isize;
 pub type socklen_t = u32;
+pub type off_t = i64;
 
 pub use std::ffi::c_void;
 
@@ -71,6 +74,25 @@ pub const SOCK_CLOEXEC: c_int = 0o2000000;
 // eventfd flags.
 pub const EFD_NONBLOCK: c_int = 0o4000;
 pub const EFD_CLOEXEC: c_int = 0o2000000;
+
+// ---------------------------------------------------------------------------
+// mmap (Linux x86_64/aarch64) — the out-of-core arena surface
+// `cfslda::data::arena_file` needs: read-only shared file mappings plus
+// paging advice.
+
+pub const PROT_READ: c_int = 1;
+pub const PROT_WRITE: c_int = 2;
+
+pub const MAP_SHARED: c_int = 0x01;
+pub const MAP_PRIVATE: c_int = 0x02;
+
+/// `mmap`'s error return: `(void *)-1`, not null.
+pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+pub const MADV_NORMAL: c_int = 0;
+pub const MADV_RANDOM: c_int = 1;
+pub const MADV_SEQUENTIAL: c_int = 2;
+pub const MADV_WILLNEED: c_int = 3;
 
 /// Opaque-enough socket address for `accept4` when the peer address is
 /// discarded (we always pass null pointers, but the signature needs it).
@@ -139,6 +161,17 @@ extern "C" {
     pub fn read(fd: c_int, buf: *mut c_void, count: size_t) -> ssize_t;
     pub fn write(fd: c_int, buf: *const c_void, count: size_t) -> ssize_t;
     pub fn close(fd: c_int) -> c_int;
+
+    pub fn mmap(
+        addr: *mut c_void,
+        length: size_t,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: off_t,
+    ) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, length: size_t) -> c_int;
+    pub fn madvise(addr: *mut c_void, length: size_t, advice: c_int) -> c_int;
 
     pub fn sigaction(signum: c_int, act: *const sigaction, oldact: *mut sigaction) -> c_int;
     pub fn raise(signum: c_int) -> c_int;
@@ -233,6 +266,51 @@ mod tests {
             assert_eq!(cur.sa_sigaction, on_signal as usize);
             // Restore whatever was installed before.
             assert_eq!(sigaction(SIGUSR1, &old, std::ptr::null_mut()), 0);
+        }
+    }
+
+    #[test]
+    fn mmap_round_trips_a_file() {
+        // Write a file, map it shared read-only, read the bytes back
+        // through the mapping, advise the kernel, unmap.
+        use std::io::Write;
+        let mut p = std::env::temp_dir();
+        p.push(format!("cfslda_libc_mmap_{}", std::process::id()));
+        let payload: Vec<u8> = (0..8192u32).map(|i| (i % 251) as u8).collect();
+        {
+            let mut f = std::fs::File::create(&p).unwrap();
+            f.write_all(&payload).unwrap();
+        }
+        let f = std::fs::File::open(&p).unwrap();
+        let fd = std::os::unix::io::AsRawFd::as_raw_fd(&f);
+        unsafe {
+            let ptr = mmap(
+                std::ptr::null_mut(),
+                payload.len(),
+                PROT_READ,
+                MAP_SHARED,
+                fd,
+                0,
+            );
+            assert_ne!(ptr, MAP_FAILED);
+            assert_eq!(madvise(ptr, payload.len(), MADV_SEQUENTIAL), 0);
+            assert_eq!(madvise(ptr, payload.len(), MADV_WILLNEED), 0);
+            let mapped = std::slice::from_raw_parts(ptr as *const u8, payload.len());
+            assert_eq!(mapped, &payload[..]);
+            // Page-aligned as the zero-copy slice casts in `data::arena_file`
+            // require.
+            assert_eq!(ptr as usize % 4096, 0);
+            assert_eq!(munmap(ptr, payload.len()), 0);
+        }
+        drop(f);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn mmap_rejects_bad_fd() {
+        unsafe {
+            let ptr = mmap(std::ptr::null_mut(), 4096, PROT_READ, MAP_SHARED, -1, 0);
+            assert_eq!(ptr, MAP_FAILED);
         }
     }
 
